@@ -1,0 +1,80 @@
+//! Parallelism × memory-style design-space sweep (the §4.2 study) through
+//! the library API: cycle-accurate latency, speedup, resources, power,
+//! thermal and timing for every synthesizable configuration — including
+//! off-grid parallelism values the paper never measured.
+//!
+//! ```sh
+//! cargo run --release --example fpga_sweep [-- --all]
+//! ```
+//! `--all` extends the sweep to every power of two plus off-grid points.
+
+use bnn_fpga::data::Dataset;
+use bnn_fpga::estimate::{power, resources, timing};
+use bnn_fpga::sim::{analytic_steps, Accelerator, MemStyle, SimConfig};
+use bnn_fpga::util::table::{fmt_thousands, Align, Table};
+use bnn_fpga::{artifacts_dir, mem, BNN_DIMS};
+
+fn main() -> anyhow::Result<()> {
+    let all = std::env::args().any(|a| a == "--all");
+    let model = mem::load_model(&artifacts_dir().join("weights.json"))?;
+    let ds = Dataset::load_mem_subset(&artifacts_dir().join("mem"))?;
+    let img = &ds.images[0];
+
+    let configs: Vec<SimConfig> = if all {
+        let mut v = Vec::new();
+        for p in [1usize, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128] {
+            for style in [MemStyle::Bram, MemStyle::Lut] {
+                if resources::estimate(&BNN_DIMS, p, style).synthesizable {
+                    v.push(SimConfig::new(p, style));
+                }
+            }
+        }
+        v
+    } else {
+        SimConfig::table1_rows()
+    };
+
+    let base_ns = analytic_steps(&BNN_DIMS, 1, MemStyle::Bram) as f64 * 10.0;
+    let mut t = Table::new(&[
+        "P", "Mem", "Latency (ns)", "Speedup", "LUT%", "FF%", "BRAM%", "Power(W)",
+        "Tj(°C)", "WNS(ns)", "µJ/inf",
+    ])
+    .align(1, Align::Left);
+
+    for cfg in &configs {
+        let mut acc = Accelerator::new(&model, *cfg)?;
+        let r = acc.run_image(img);
+        let res = resources::best(&BNN_DIMS, cfg.parallelism, cfg.mem_style);
+        let pow = power::estimate(&BNN_DIMS, cfg);
+        let tim = timing::best(cfg.parallelism, cfg.mem_style);
+        t.row(vec![
+            cfg.parallelism.to_string(),
+            cfg.mem_style.name().into(),
+            fmt_thousands(r.latency_ns as u64),
+            format!("{:.2}", base_ns / r.latency_ns),
+            format!("{:.2}", res.lut_pct()),
+            format!("{:.2}", res.ff_pct()),
+            format!("{:.2}", res.bram_pct()),
+            format!("{:.3}", pow.total_w),
+            format!("{:.1}", pow.junction_c),
+            format!("{:.3}", tim.wns_ns),
+            format!("{:.1}", pow.uj_per_inference(r.latency_ns)),
+        ]);
+    }
+    t.print();
+
+    // §4.5 trade-off summary: find the paper's preferred design point.
+    println!("\n§4.5 design-point selection:");
+    let chosen = SimConfig::new(64, MemStyle::Bram);
+    let mut acc = Accelerator::new(&model, chosen)?;
+    let r = acc.run_image(img);
+    let pow = power::estimate(&BNN_DIMS, &chosen);
+    println!(
+        "  64x BRAM: {} ns latency, {:.2}x speedup, {:.3} W → the paper's pick \
+         (maximizes parallelism within the 132-block BRAM budget)",
+        fmt_thousands(r.latency_ns as u64),
+        base_ns / r.latency_ns,
+        pow.total_w
+    );
+    Ok(())
+}

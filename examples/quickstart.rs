@@ -1,0 +1,54 @@
+//! Quickstart: load the trained BNN, classify digits, inspect the
+//! accelerator's view of one inference.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use bnn_fpga::data::{synth, Dataset};
+use bnn_fpga::sim::{sevenseg, Accelerator, MemStyle, SimConfig};
+use bnn_fpga::{artifacts_dir, mem};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the folded, bit-packed model exported by `make artifacts`.
+    let dir = artifacts_dir();
+    let model = mem::load_model(&dir.join("weights.json"))?;
+    println!(
+        "loaded 784-128-64-10 BNN ({} packed weight words, thresholds folded per §3.1 Eq.4)",
+        model.layers.iter().map(|l| l.weights.len()).sum::<usize>()
+    );
+
+    // 2. Software inference on the paper's §4.1 test subset.
+    let ds = Dataset::load_mem_subset(&dir.join("mem"))?;
+    let correct = ds
+        .images
+        .iter()
+        .zip(&ds.labels)
+        .filter(|(img, &l)| model.predict(&img.words) == l as usize)
+        .count();
+    println!("software path : {correct}/{} on the 100-image subset", ds.len());
+
+    // 3. The same image through the cycle-accurate FPGA simulator at the
+    //    paper's chosen design point (64× parallelism, BRAM weights).
+    let mut acc = Accelerator::new(&model, SimConfig::new(64, MemStyle::Bram))?;
+    let r = acc.run_image(&ds.images[0]);
+    println!(
+        "fpga-sim      : digit {} in {} cycles = {} ns (paper Table 1: 17,845 ns)",
+        r.digit, r.cycles, r.latency_ns
+    );
+    println!(
+        "               {} XNOR ops, {} BRAM row reads, argmax in {} cycles",
+        r.activity.xnor_ops, r.activity.bram_row_reads, r.breakdown.argmax
+    );
+
+    // 4. Seven-segment display output, as the Nexys A7 board would show it.
+    println!("seven-segment display (active-low 0b{:07b}):", r.sevenseg);
+    print!("{}", sevenseg::ascii(r.sevenseg));
+
+    // 5. No artifacts? The library also ships a synthetic generator:
+    let demo = synth::generate_dataset(1, 42);
+    println!("\na synthetic digit (label {}):", demo.labels[0]);
+    print!("{}", synth::ascii_digit(&demo.images[0]));
+    println!("predicted: {}", model.predict(&demo.images[0].words));
+    Ok(())
+}

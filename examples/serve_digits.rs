@@ -1,0 +1,125 @@
+//! END-TO-END driver (DESIGN.md §Validation): the full three-layer stack
+//! serving a real workload.
+//!
+//! * build path (ran beforehand by `make artifacts`): JAX STE training →
+//!   threshold folding → `.mem`/JSON export → Pallas-kernel AOT → HLO text;
+//! * request path (this binary, no Python): the Rust coordinator batches
+//!   incoming classification requests and routes them to all three
+//!   backends — native bit-packed, PJRT-compiled AOT artifacts, and the
+//!   cycle-accurate FPGA simulator — reporting accuracy, latency
+//!   percentiles and throughput per backend.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_digits [-- --requests 2000]
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bnn_fpga::coordinator::{
+    BatcherConfig, Coordinator, NativeBackend, PjrtBackend, Router, SimBackend,
+};
+use bnn_fpga::data::Dataset;
+use bnn_fpga::runtime::Engine;
+use bnn_fpga::sim::{MemStyle, SimConfig};
+use bnn_fpga::util::table::{Align, Table};
+use bnn_fpga::{artifacts_dir, mem};
+
+fn main() -> anyhow::Result<()> {
+    let n_requests: usize = std::env::args()
+        .skip_while(|a| a != "--requests")
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1000);
+
+    let dir = artifacts_dir();
+    let model = mem::load_model(&dir.join("weights.json"))?;
+    let test = Dataset::load_idx_test(&dir.join("data"))?;
+    println!(
+        "model 784-128-64-10, test set {} images, {n_requests} requests/backend",
+        test.len()
+    );
+
+    // --- assemble the router over all three backends -----------------------
+    let engine = Arc::new(Engine::load(&dir)?);
+    println!("PJRT platform: {}", engine.platform());
+    engine.warm("bnn")?; // compile the artifact ladder up front
+
+    let mut router = Router::new();
+    router.register(
+        "native",
+        Coordinator::start(
+            Arc::new(NativeBackend::new(model.clone())),
+            BatcherConfig {
+                max_batch: 64,
+                max_wait: Duration::from_micros(100),
+            },
+            2,
+        )?,
+    );
+    router.register(
+        "pjrt",
+        Coordinator::start(
+            Arc::new(PjrtBackend::new(engine)?),
+            BatcherConfig {
+                max_batch: 128,
+                max_wait: Duration::from_micros(300),
+            },
+            1, // the engine serializes dispatch; PJRT-CPU parallelizes inside
+        )?,
+    );
+    router.register(
+        "fpga-sim",
+        Coordinator::start(
+            Arc::new(SimBackend::new(&model, SimConfig::new(64, MemStyle::Bram))?),
+            BatcherConfig {
+                max_batch: 1, // the hardware is single-image
+                max_wait: Duration::from_micros(10),
+            },
+            1,
+        )?,
+    );
+
+    // --- drive each backend with the same workload -------------------------
+    let mut table = Table::new(&[
+        "Backend", "Requests", "Accuracy", "Throughput (req/s)", "p50 (µs)", "p99 (µs)",
+        "Mean batch",
+    ])
+    .align(0, Align::Left);
+
+    for name in ["native", "pjrt", "fpga-sim"] {
+        let coord = router.get(name)?;
+        let n = if name == "fpga-sim" {
+            n_requests.min(300) // cycle-accurate sim is deliberately slow
+        } else {
+            n_requests
+        };
+        let images: Vec<_> = (0..n).map(|i| test.images[i % test.len()].clone()).collect();
+        let labels: Vec<_> = (0..n).map(|i| test.labels[i % test.len()]).collect();
+
+        let t0 = Instant::now();
+        let responses = coord.infer_many(images)?;
+        let wall = t0.elapsed().as_secs_f64();
+
+        let correct = responses
+            .iter()
+            .zip(&labels)
+            .filter(|(r, &l)| r.digit == l)
+            .count();
+        let lat = coord.metrics.latency_snapshot();
+        table.row(vec![
+            name.into(),
+            n.to_string(),
+            format!("{:.1}%", correct as f64 / n as f64 * 100.0),
+            format!("{:.0}", n as f64 / wall),
+            (lat.percentile_ns(50.0) / 1000).to_string(),
+            (lat.percentile_ns(99.0) / 1000).to_string(),
+            format!("{:.1}", coord.metrics.mean_batch_size()),
+        ]);
+    }
+    table.print();
+
+    println!("\nper-backend metrics:\n{}", router.metrics_report());
+    println!("all three backends agree with the trained model — see rust/tests/integration.rs");
+    Ok(())
+}

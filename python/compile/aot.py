@@ -1,0 +1,135 @@
+"""AOT compile path: lower the L2 inference graphs to HLO **text** artifacts.
+
+Python runs only here (``make artifacts``); the Rust coordinator loads the
+emitted ``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and
+executes them on the PJRT CPU client (see ``rust/src/runtime``).
+
+HLO *text* — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts (weights baked as constants so the request path ships activations
+only):
+
+* ``bnn_b{B}.hlo.txt``  — fused Pallas BNN forward, packed uint32 input
+  ``[B, 25]`` → int32 logits ``[B, 10]``; B covers the dynamic batcher's
+  ladder plus the Table 5 batch sweep.
+* ``cnn_b{B}.hlo.txt``  — CNN baseline, float32 ``[B, 784]`` → ``[B, 10]``.
+* ``manifest.json``     — artifact registry the Rust runtime consumes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import export as export_mod
+from . import model as model_mod
+from .kernels import packing
+
+# Dynamic-batcher ladder ∪ Table 5 batch sizes.
+BNN_BATCHES = (1, 2, 4, 8, 10, 16, 32, 64, 100, 128, 256, 1000, 10000)
+CNN_BATCHES = (1, 10, 100)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser).
+
+    CRITICAL: the default ``as_hlo_text()`` elides large constants as
+    ``{...}`` — the baked weight matrices would silently become zeros on
+    the Rust side.  Print with ``print_large_constants=True`` (and without
+    metadata noise) so the artifact is self-contained.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def lower_bnn(ip: model_mod.InferenceParams, batch: int) -> str:
+    """Lower the fused packed forward for a fixed batch size."""
+    block_b = min(batch, 128)
+
+    def fn(x_packed):
+        return (model_mod.bnn_infer_fused(ip, x_packed, interpret=True),)
+
+    spec = jax.ShapeDtypeStruct((batch, packing.packed_words(ip.n_in)), jnp.uint32)
+    return to_hlo_text(jax.jit(fn).lower(spec)), block_b
+
+
+def lower_cnn(params: dict, batch: int) -> str:
+    def fn(images):
+        return (model_mod.cnn_apply(params, images),)
+
+    spec = jax.ShapeDtypeStruct((batch, 784), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-cnn", action="store_true")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    ip = export_mod.load_inference_params(out)
+    cnn_raw = np.load(os.path.join(out, "params_cnn.npz"))
+    cnn_params = {k: jnp.asarray(cnn_raw[k]) for k in cnn_raw.files}
+
+    manifest = {"artifacts": []}
+    for b in BNN_BATCHES:
+        text, _ = lower_bnn(ip, b)
+        name = f"bnn_b{b}"
+        path = os.path.join(out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "model": "bnn",
+                "batch": b,
+                "file": f"{name}.hlo.txt",
+                "input": {"shape": [b, packing.packed_words(ip.n_in)], "dtype": "u32"},
+                "output": {"shape": [b, 10], "dtype": "i32"},
+            }
+        )
+        print(f"[aot] wrote {name} ({len(text)} chars)")
+
+    if not args.skip_cnn:
+        for b in CNN_BATCHES:
+            text = lower_cnn(cnn_params, b)
+            name = f"cnn_b{b}"
+            path = os.path.join(out, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "name": name,
+                    "model": "cnn",
+                    "batch": b,
+                    "file": f"{name}.hlo.txt",
+                    "input": {"shape": [b, 784], "dtype": "f32"},
+                    "output": {"shape": [b, 10], "dtype": "f32"},
+                }
+            )
+            print(f"[aot] wrote {name} ({len(text)} chars)")
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Model export: hardware-ready `.mem` files + `weights.json` + npz params.
+
+Mirrors the paper's §3.2 export path:
+
+* binarized weight matrices are **transposed to neuron-major rows** (one ROM
+  row = one neuron's full input weight vector) and written as `.mem` files
+  — one hex row per line, MSB-first, exactly the `$readmemh` layout the
+  Verilog design consumes;
+* folded batch-norm thresholds are 11-bit signed integers, one 3-hex-digit
+  two's-complement value per line;
+* the §4.1 correctness subset (100 binarized test images, 10 per digit) is
+  exported the same way, plus its label file.
+
+Additionally (for this reproduction's Rust layers):
+
+* ``weights.json`` — packed uint32 operands + thresholds for the Rust
+  native backend and the FPGA simulator (parsed by ``rust/src/mem``);
+* ``params_bnn.npz`` / ``params_cnn.npz`` — consumed by ``aot.py`` when
+  baking the AOT HLO artifacts.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from . import data as data_mod
+from .kernels import packing
+from .model import InferenceParams
+
+
+def bits_to_hex_row(bits: np.ndarray) -> str:
+    """{0,1} vector → MSB-first hex string (bit n−1 is the leftmost bit)."""
+    n = len(bits)
+    pad = (-n) % 4
+    padded = np.concatenate([np.zeros(pad, dtype=np.uint8), bits[::-1]])
+    digits = padded.reshape(-1, 4)
+    vals = digits[:, 0] * 8 + digits[:, 1] * 4 + digits[:, 2] * 2 + digits[:, 3]
+    return "".join("0123456789abcdef"[v] for v in vals)
+
+
+def hex_row_to_bits(row: str, n_bits: int) -> np.ndarray:
+    """Inverse of :func:`bits_to_hex_row`."""
+    val = int(row, 16)
+    return np.array([(val >> i) & 1 for i in range(n_bits)], dtype=np.uint8)
+
+
+def write_weight_mem(path: str, w_pm1: np.ndarray) -> None:
+    """Write a ±1 weight matrix ``[N, I]`` as N hex rows (neuron-major)."""
+    bits = (w_pm1 >= 0).astype(np.uint8)
+    with open(path, "w") as f:
+        for row in bits:
+            f.write(bits_to_hex_row(row) + "\n")
+
+
+def write_threshold_mem(path: str, thresholds: np.ndarray, bits: int = 11) -> None:
+    """Write thresholds as two's-complement hex, one per line (11-bit §3.1)."""
+    mask = (1 << bits) - 1
+    width = (bits + 3) // 4
+    with open(path, "w") as f:
+        for t in np.asarray(thresholds, np.int64):
+            f.write(format(int(t) & mask, f"0{width}x") + "\n")
+
+
+def read_threshold_mem(path: str, bits: int = 11) -> np.ndarray:
+    """Read a threshold `.mem` back into signed integers."""
+    sign_bit = 1 << (bits - 1)
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            v = int(line, 16)
+            out.append(v - (1 << bits) if v & sign_bit else v)
+    return np.array(out, dtype=np.int32)
+
+
+def write_image_mem(path: str, image_bits: np.ndarray) -> None:
+    """Write binarized images ``[N, 784]`` as hex rows (one image per line)."""
+    with open(path, "w") as f:
+        for row in image_bits:
+            f.write(bits_to_hex_row(row) + "\n")
+
+
+def select_subset(labels: np.ndarray, per_class: int = 10, classes: int = 10) -> np.ndarray:
+    """First ``per_class`` indices of each class, interleaved 0..9,0..9,…
+    (the paper's '10 representative samples for each digit')."""
+    buckets = [np.where(labels == c)[0][:per_class] for c in range(classes)]
+    return np.array([buckets[c][i] for i in range(per_class) for c in range(classes)])
+
+
+def export_all(
+    out_dir: str,
+    ip: InferenceParams,
+    cnn_params: dict,
+    test_images: np.ndarray,
+    test_labels: np.ndarray,
+) -> None:
+    mem_dir = os.path.join(out_dir, "mem")
+    os.makedirs(mem_dir, exist_ok=True)
+
+    # --- .mem files (paper's hardware format) -----------------------------
+    layer_ws = [w for w, _ in ip.hidden] + [ip.out_w]
+    for i, w in enumerate(layer_ws, start=1):
+        write_weight_mem(os.path.join(mem_dir, f"weights_l{i}.mem"), w)
+    for i, (_, thr) in enumerate(ip.hidden, start=1):
+        write_threshold_mem(os.path.join(mem_dir, f"thresholds_l{i}.mem"), thr)
+
+    flat = test_images.reshape(len(test_images), -1)
+    bits = data_mod.binarize(flat)
+    idx = select_subset(test_labels)
+    write_image_mem(os.path.join(mem_dir, "images_100.mem"), bits[idx])
+    with open(os.path.join(mem_dir, "labels_100.mem"), "w") as f:
+        for i in idx:
+            f.write(f"{int(test_labels[i]):x}\n")
+
+    # --- weights.json (Rust native backend + simulator) -------------------
+    layers = []
+    dims_in = [ip.n_in] + [w.shape[0] for w, _ in ip.hidden]
+    for li, w_packed in enumerate(ip.packed["w"]):
+        thr = ip.packed["t"][li].tolist() if li < len(ip.packed["t"]) else None
+        layers.append(
+            {
+                "n_in": dims_in[li],
+                "n_out": int(layer_ws[li].shape[0]),
+                "w_packed": [[int(v) for v in row] for row in w_packed],
+                "thresholds": thr,
+            }
+        )
+    with open(os.path.join(out_dir, "weights.json"), "w") as f:
+        json.dump({"dims": [ip.n_in] + [w.shape[0] for w in layer_ws], "layers": layers}, f)
+
+    # --- npz params for aot.py --------------------------------------------
+    bnn_npz = {}
+    for i, (w, t) in enumerate(ip.hidden):
+        bnn_npz[f"w{i}"] = w
+        bnn_npz[f"t{i}"] = t
+    bnn_npz["w_out"] = ip.out_w
+    np.savez(os.path.join(out_dir, "params_bnn.npz"), **bnn_npz)
+    np.savez(os.path.join(out_dir, "params_cnn.npz"), **{k: np.asarray(v) for k, v in cnn_params.items()})
+
+
+def load_inference_params(out_dir: str) -> InferenceParams:
+    """Reload folded parameters from ``params_bnn.npz`` (used by aot.py/tests)."""
+    z = np.load(os.path.join(out_dir, "params_bnn.npz"))
+    hidden, i = [], 0
+    while f"w{i}" in z:
+        hidden.append((z[f"w{i}"], z[f"t{i}"]))
+        i += 1
+    return InferenceParams(hidden=hidden, out_w=z["w_out"]).pack()
+
+
+def model_file_sizes(out_dir: str) -> dict:
+    """§4.6 model-size comparison: packed BNN payload vs float CNN payload."""
+    bnn = os.path.getsize(os.path.join(out_dir, "params_bnn.npz"))
+    cnn = os.path.getsize(os.path.join(out_dir, "params_cnn.npz"))
+    return {"bnn_bytes": bnn, "cnn_bytes": cnn}

@@ -1,0 +1,96 @@
+"""Bit-packing utilities for binary (±1) tensors.
+
+The paper stores binary weights/activations as single bits: +1 ↦ 1, −1 ↦ 0
+(§2.1).  We pack 32 of those bits LSB-first into a ``uint32`` lane word so
+the XNOR-popcount dot product becomes a vectorized
+``popcount(x ^ w)`` reduction (see ``xnor_dense.py``).
+
+Padding convention: when ``n`` is not a multiple of 32 the tail bits of the
+last word are 0 in *both* operands, so they XOR to 0 and never contribute a
+mismatch.  The signed dot product is recovered as ``z = n − 2·mismatches``
+with the *true* ``n`` (§2.1: z = 2m − n with m = n − mismatches).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+
+
+def packed_words(n_bits: int) -> int:
+    """Number of uint32 words needed to hold ``n_bits`` bits."""
+    return (n_bits + WORD_BITS - 1) // WORD_BITS
+
+
+def pack_bits_np(bits: np.ndarray) -> np.ndarray:
+    """Pack a {0,1} uint8/bool array ``[..., n]`` into ``[..., ceil(n/32)]`` uint32.
+
+    Bit ``i`` of the flattened last axis lands in word ``i // 32`` at
+    position ``i % 32`` (LSB-first), matching the Rust ``bnn::packing``
+    module and the ``.mem`` export layout.
+    """
+    bits = np.asarray(bits)
+    if bits.ndim == 0:
+        raise ValueError("pack_bits_np requires at least 1-D input")
+    n = bits.shape[-1]
+    w = packed_words(n)
+    pad = w * WORD_BITS - n
+    if pad:
+        bits = np.concatenate(
+            [bits, np.zeros(bits.shape[:-1] + (pad,), dtype=bits.dtype)], axis=-1
+        )
+    bits = bits.reshape(bits.shape[:-1] + (w, WORD_BITS)).astype(np.uint64)
+    shifts = np.arange(WORD_BITS, dtype=np.uint64)
+    words = np.sum(bits << shifts, axis=-1)
+    return words.astype(np.uint32)
+
+
+def unpack_bits_np(words: np.ndarray, n_bits: int) -> np.ndarray:
+    """Inverse of :func:`pack_bits_np`; returns a {0,1} uint8 array ``[..., n_bits]``."""
+    words = np.asarray(words, dtype=np.uint32)
+    shifts = np.arange(WORD_BITS, dtype=np.uint32)
+    bits = (words[..., None] >> shifts) & np.uint32(1)
+    bits = bits.reshape(words.shape[:-1] + (words.shape[-1] * WORD_BITS,))
+    return bits[..., :n_bits].astype(np.uint8)
+
+
+def pack_pm1_np(x: np.ndarray) -> np.ndarray:
+    """Pack a ±1 (or sign-of-float) array into uint32 words: +1 ↦ bit 1, −1 ↦ bit 0.
+
+    Zero is treated as +1 per the paper's sign convention (Eq. 1: sign(0) = +1).
+    """
+    return pack_bits_np((np.asarray(x) >= 0).astype(np.uint8))
+
+
+def unpack_pm1_np(words: np.ndarray, n_bits: int) -> np.ndarray:
+    """Unpack uint32 words into a ±1 ``float32`` array."""
+    bits = unpack_bits_np(words, n_bits).astype(np.float32)
+    return bits * 2.0 - 1.0
+
+
+def pack_bits_jnp(bits: jnp.ndarray) -> jnp.ndarray:
+    """JAX version of :func:`pack_bits_np` (traceable; used inside models).
+
+    ``bits`` is a {0,1} integer array ``[..., n]`` with n a multiple of 32
+    NOT required — zero padding is applied exactly as in the numpy path.
+    """
+    n = bits.shape[-1]
+    w = packed_words(n)
+    pad = w * WORD_BITS - n
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (pad,), dtype=bits.dtype)], axis=-1
+        )
+    bits = bits.reshape(bits.shape[:-1] + (w, WORD_BITS)).astype(jnp.uint32)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits_jnp(words: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """JAX version of :func:`unpack_bits_np`."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(words.shape[:-1] + (words.shape[-1] * WORD_BITS,))
+    return bits[..., :n_bits].astype(jnp.uint8)

@@ -1,0 +1,103 @@
+"""Pure-``jnp`` correctness oracles for the Pallas XNOR-popcount kernels.
+
+Two independent references:
+
+* :func:`binary_dense_ref_float` — the mathematically transparent one: the
+  ±1 dot product ``z = Σ x_i·w_i`` computed as a float matmul over unpacked
+  ±1 values, then (optionally) the threshold activation.  This is the
+  "what the paper means" oracle (§2.1: z = 2·popcount(XNOR(x,w)) − n is an
+  identity for the ±1 dot product).
+
+* :func:`binary_dense_ref_packed` — the same computation done on the packed
+  words with ``lax.population_count`` but *without* Pallas, exercising the
+  identical integer path the kernel uses.  Agreement of all three is the
+  core L1 correctness signal (pytest + hypothesis in ``python/tests``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import packing
+
+
+def binary_dense_ref_float(
+    x_pm1: jnp.ndarray,
+    w_pm1: jnp.ndarray,
+    thresholds: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """±1 dense layer oracle on unpacked values.
+
+    Args:
+      x_pm1: ``[B, I]`` float ±1 activations.
+      w_pm1: ``[N, I]`` float ±1 weights (neuron-major, the paper's
+        transposed ROM layout).
+      thresholds: optional ``[N]`` int/float folded thresholds.  When given,
+        returns {0,1} activations ``(z >= θ)`` (paper Algorithm 1 line 14);
+        otherwise returns the integer-valued float sums ``z``.
+
+    Returns:
+      ``[B, N]`` float32: sums or {0,1} activations.
+    """
+    z = x_pm1.astype(jnp.float32) @ w_pm1.astype(jnp.float32).T
+    if thresholds is None:
+        return z
+    return (z >= thresholds.astype(jnp.float32)[None, :]).astype(jnp.float32)
+
+
+def binary_dense_ref_packed(
+    x_packed: jnp.ndarray,
+    w_packed: jnp.ndarray,
+    n_bits: int,
+    thresholds: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Packed-word oracle: ``z = n − 2·popcount(x ^ w)`` without Pallas.
+
+    Args:
+      x_packed: ``[B, W]`` uint32 packed activations.
+      w_packed: ``[N, W]`` uint32 packed weights.
+      n_bits: true (unpadded) vector length ``n``.
+      thresholds: optional ``[N]`` int32 folded thresholds.
+
+    Returns:
+      ``[B, N]`` int32 sums, or {0,1} int32 activations when thresholded.
+    """
+    xor = x_packed[:, None, :] ^ w_packed[None, :, :]
+    mismatches = jnp.sum(
+        jax.lax.population_count(xor).astype(jnp.int32), axis=-1, dtype=jnp.int32
+    )
+    z = jnp.int32(n_bits) - 2 * mismatches
+    if thresholds is None:
+        return z
+    return (z >= thresholds.astype(jnp.int32)[None, :]).astype(jnp.int32)
+
+
+def bnn_forward_ref(params, x_pm1: jnp.ndarray) -> jnp.ndarray:
+    """Full-network float oracle: three ±1 dense layers, folded thresholds.
+
+    ``params`` is the exported inference parameter struct (see
+    ``export.InferenceParams``): per hidden layer a ±1 weight matrix and an
+    integer threshold vector; the output layer keeps raw integer sums
+    (paper §3.4: "no thresholding is applied ... raw sums are retained").
+
+    Returns ``[B, 10]`` float32 logits (integer-valued).
+    """
+    a = x_pm1
+    for w_pm1, thr in params.hidden:
+        bits = binary_dense_ref_float(a, w_pm1, thr)
+        a = bits * 2.0 - 1.0  # {0,1} → ±1 for the next layer's XNOR input
+    return binary_dense_ref_float(a, params.out_w)
+
+
+def bnn_forward_ref_packed(params, x_packed: jnp.ndarray) -> jnp.ndarray:
+    """Full-network packed oracle (non-Pallas integer path)."""
+    a = x_packed
+    n = params.n_in
+    for w_pm1, thr in params.hidden:
+        w_packed = jnp.asarray(packing.pack_pm1_np(jax.device_get(w_pm1)))
+        bits = binary_dense_ref_packed(a, w_packed, n, thr)
+        a = packing.pack_bits_jnp(bits.astype(jnp.uint8))
+        n = w_pm1.shape[0]
+    w_packed = jnp.asarray(packing.pack_pm1_np(jax.device_get(params.out_w)))
+    return binary_dense_ref_packed(a, w_packed, n)

@@ -1,0 +1,243 @@
+"""L1 Pallas kernels: bit-packed XNOR-popcount binary dense layers.
+
+This is the paper's compute hot-spot (§2.1, Algorithm 1) re-thought for a
+TPU-style memory hierarchy instead of FPGA BRAM/LUT fabric
+(DESIGN.md §Hardware-Adaptation):
+
+* The FPGA packs one neuron's weight row per BRAM row; we pack 32 binary
+  (±1) values per ``uint32`` lane and keep the same neuron-major layout —
+  ``w_packed[N, W]`` — so a whole layer is a ``popcount(x ^ w)`` reduction
+  over lane words, the VPU analogue of the paper's P parallel XNOR units.
+* The FPGA FSM's address generator walking BRAM rows becomes the
+  ``BlockSpec`` grid: each grid step stages one ``[TILE_B, W]`` activation
+  slab and the full ``[N, W]`` weight slab in VMEM (N ≤ 128 here, so the
+  weight slab is at most 128 × 25 × 4 B = 12.5 KiB — far under VMEM).
+* The FPGA threshold comparators (folded batch norm, §3.1 Eq. 4) are fused
+  into the same kernel: hidden activations are thresholded *and re-packed
+  to words* before they ever leave VMEM, so layer-to-layer traffic is
+  ``N/32`` words per sample, exactly like the accelerator's activation
+  registers.
+
+All kernels run under ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see /opt/xla-example
+README).  Numerics are identical either way; structure (tiling, fusion,
+VMEM footprint) is what we optimize here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import packing
+
+WORD_BITS = packing.WORD_BITS
+
+# Batch tile: 128 samples × 25 words × 4 B = 12.5 KiB activation slab per
+# grid step; together with the ≤12.5 KiB weight slab this keeps each grid
+# step's VMEM working set ≈ 25 KiB (see DESIGN.md §Perf).
+DEFAULT_BLOCK_B = 128
+
+
+def _xnor_popcount_z(x_words: jnp.ndarray, w_words: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Core identity: signed ±1 dot product from packed words.
+
+    ``z = 2m − n`` with ``m = popcount(XNOR)`` (§2.1) is computed in the
+    complementary form ``z = n − 2·popcount(XOR)`` — padding bits are 0 in
+    both operands, so XOR never counts them and the true ``n`` corrects the
+    sum exactly.
+    """
+    xor = x_words[:, None, :] ^ w_words[None, :, :]
+    mismatches = jnp.sum(
+        jax.lax.population_count(xor).astype(jnp.int32), axis=-1, dtype=jnp.int32
+    )
+    return jnp.int32(n_bits) - 2 * mismatches
+
+
+def _pack_rows(bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack a ``[B, N]`` {0,1} int32 array into ``[B, N/32]`` uint32 (N % 32 == 0)."""
+    b, n = bits.shape
+    grouped = bits.astype(jnp.uint32).reshape(b, n // WORD_BITS, WORD_BITS)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(grouped << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def _hidden_kernel(x_ref, w_ref, t_ref, o_ref, *, n_bits: int):
+    """Hidden-layer grid step: XNOR-popcount → threshold → packed activations."""
+    z = _xnor_popcount_z(x_ref[...], w_ref[...], n_bits)
+    bits = (z >= t_ref[...][None, :]).astype(jnp.int32)
+    o_ref[...] = _pack_rows(bits)
+
+
+def _logits_kernel(x_ref, w_ref, o_ref, *, n_bits: int):
+    """Output-layer grid step: raw integer sums, no thresholding (§3.4)."""
+    o_ref[...] = _xnor_popcount_z(x_ref[...], w_ref[...], n_bits)
+
+
+def _pad_batch(x: jnp.ndarray, block_b: int) -> tuple[jnp.ndarray, int]:
+    b = x.shape[0]
+    padded = pl.cdiv(b, block_b) * block_b
+    if padded != b:
+        x = jnp.pad(x, ((0, padded - b), (0, 0)))
+    return x, b
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "block_b", "interpret"))
+def binary_dense_hidden(
+    x_packed: jnp.ndarray,
+    w_packed: jnp.ndarray,
+    thresholds: jnp.ndarray,
+    *,
+    n_bits: int,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Packed hidden binary dense layer: ``pack(z(x,w) >= θ)``.
+
+    Args:
+      x_packed: ``[B, ceil(n_bits/32)]`` uint32 packed ±1 activations.
+      w_packed: ``[N, ceil(n_bits/32)]`` uint32 packed ±1 weights
+        (neuron-major — the paper's transposed ROM layout, §3.2).
+      thresholds: ``[N]`` int32 folded batch-norm thresholds (11-bit range).
+      n_bits: true input width ``n`` (784 or the previous layer's N).
+
+    Returns:
+      ``[B, N/32]`` uint32 packed {0,1} activations (N must divide by 32).
+    """
+    n_out, w_words = w_packed.shape
+    if n_out % WORD_BITS:
+        raise ValueError(f"hidden layer width {n_out} must be a multiple of {WORD_BITS}")
+    if x_packed.shape[-1] != w_words:
+        raise ValueError(f"word-count mismatch: x {x_packed.shape[-1]} vs w {w_words}")
+    x_packed, b = _pad_batch(x_packed, block_b)
+    grid = (x_packed.shape[0] // block_b,)
+    out = pl.pallas_call(
+        functools.partial(_hidden_kernel, n_bits=n_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, w_words), lambda i: (i, 0)),
+            pl.BlockSpec((n_out, w_words), lambda i: (0, 0)),
+            pl.BlockSpec((n_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, n_out // WORD_BITS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x_packed.shape[0], n_out // WORD_BITS), jnp.uint32),
+        interpret=interpret,
+    )(x_packed, w_packed, thresholds.astype(jnp.int32))
+    return out[:b]
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "block_b", "interpret"))
+def binary_dense_logits(
+    x_packed: jnp.ndarray,
+    w_packed: jnp.ndarray,
+    *,
+    n_bits: int,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Packed output binary dense layer: raw integer sums ``z`` (argmax'd by L3).
+
+    Returns ``[B, N]`` int32 integer logits.
+    """
+    n_out, w_words = w_packed.shape
+    if x_packed.shape[-1] != w_words:
+        raise ValueError(f"word-count mismatch: x {x_packed.shape[-1]} vs w {w_words}")
+    x_packed, b = _pad_batch(x_packed, block_b)
+    grid = (x_packed.shape[0] // block_b,)
+    out = pl.pallas_call(
+        functools.partial(_logits_kernel, n_bits=n_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, w_words), lambda i: (i, 0)),
+            pl.BlockSpec((n_out, w_words), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x_packed.shape[0], n_out), jnp.int32),
+        interpret=interpret,
+    )(x_packed, w_packed)
+    return out[:b]
+
+
+def _fused_kernel(x_ref, w1_ref, t1_ref, w2_ref, t2_ref, w3_ref, o_ref, *, dims):
+    """Whole-network grid step: three layers without leaving VMEM.
+
+    The FPGA keeps inter-layer activations in registers between FSM stages;
+    the fused kernel is the same idea — only the 784-bit input slab enters
+    and only the 10 int32 logits leave per sample.
+    """
+    n_in, n_h1, n_h2 = dims
+    z1 = _xnor_popcount_z(x_ref[...], w1_ref[...], n_in)
+    a1 = _pack_rows((z1 >= t1_ref[...][None, :]).astype(jnp.int32))
+    z2 = _xnor_popcount_z(a1, w2_ref[...], n_h1)
+    a2 = _pack_rows((z2 >= t2_ref[...][None, :]).astype(jnp.int32))
+    o_ref[...] = _xnor_popcount_z(a2, w3_ref[...], n_h2)
+
+
+@functools.partial(jax.jit, static_argnames=("dims", "block_b", "interpret"))
+def bnn_fused_forward(
+    x_packed: jnp.ndarray,
+    w1: jnp.ndarray,
+    t1: jnp.ndarray,
+    w2: jnp.ndarray,
+    t2: jnp.ndarray,
+    w3: jnp.ndarray,
+    *,
+    dims: tuple[int, int, int],
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused 784→128→64→10 forward pass as a single Pallas kernel.
+
+    Args:
+      x_packed: ``[B, ceil(n_in/32)]`` uint32 packed input bits.
+      w1/w2/w3: packed neuron-major weights per layer.
+      t1/t2: int32 folded thresholds for the hidden layers.
+      dims: ``(n_in, n_h1, n_h2)`` true bit widths feeding each layer.
+
+    Returns ``[B, 10]`` int32 logits.
+    """
+    n_in, n_h1, n_h2 = dims
+    n_out = w3.shape[0]
+    x_packed, b = _pad_batch(x_packed, block_b)
+    grid = (x_packed.shape[0] // block_b,)
+    full = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, dims=dims),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, x_packed.shape[1]), lambda i: (i, 0)),
+            full(w1.shape),
+            full(t1.shape),
+            full(w2.shape),
+            full(t2.shape),
+            full(w3.shape),
+        ],
+        out_specs=pl.BlockSpec((block_b, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x_packed.shape[0], n_out), jnp.int32),
+        interpret=interpret,
+    )(x_packed, w1, t1.astype(jnp.int32), w2, t2.astype(jnp.int32), w3)
+    return out[:b]
+
+
+def vmem_footprint_bytes(dims: tuple[int, int, int], n_out: int, block_b: int) -> dict:
+    """Static VMEM-footprint estimate per grid step (the L1 perf metric we
+    can measure honestly under interpret=True — see DESIGN.md §Perf)."""
+    n_in, n_h1, n_h2 = dims
+    w = packing.packed_words
+    weights = 4 * (n_h1 * w(n_in) + n_h2 * w(n_h1) + n_out * w(n_h2))
+    thresholds = 4 * (n_h1 + n_h2)
+    act_in = 4 * block_b * w(n_in)
+    inter = 4 * block_b * max(n_h1, w(n_h1) + n_h2)  # widest live intermediate
+    logits = 4 * block_b * n_out
+    total = weights + thresholds + act_in + inter + logits
+    return {
+        "weights": weights,
+        "thresholds": thresholds,
+        "activations_in": act_in,
+        "intermediates": inter,
+        "logits_out": logits,
+        "total": total,
+    }

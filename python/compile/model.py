@@ -1,0 +1,230 @@
+"""L2 — JAX model definitions.
+
+Three graphs live here:
+
+* **BNN training graph** (:func:`bnn_apply_train` / :func:`bnn_apply_eval`)
+  — the paper's §3.1 architecture (784→128→64→10, no biases, batch-norm
+  after every layer) with ste_sign quantization of weights and activations
+  (§2.2).  Used only at build time by ``train.py``.
+* **BNN packed inference graph** (:func:`bnn_infer_packed` /
+  :func:`bnn_infer_fused`) — the deployed forward pass over folded
+  thresholds and bit-packed operands, calling the L1 Pallas kernels.  This
+  is what ``aot.py`` lowers to HLO for the Rust runtime.
+* **CNN baseline** (§4.6: conv3×3×32 → pool → conv3×3×64 → pool →
+  dense128+ReLU(+dropout in training) → dense10) for the Table 4/5 and
+  Fig. 1 comparisons.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import packing, xnor_dense
+
+BNN_DIMS = (784, 128, 64, 10)
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9
+
+
+# ---------------------------------------------------------------------------
+# Straight-through estimator (paper §2.2, Eq. 2)
+
+def ste_sign(x: jnp.ndarray) -> jnp.ndarray:
+    """sign(x) in the forward pass, clipped-identity gradient in the backward.
+
+    Forward: +1 for x ≥ 0, −1 otherwise (Eq. 1, sign(0) = +1 as in Larq).
+    Backward: dy/dx = 1 for |x| ≤ 1, else 0 (Eq. 2) — implemented as the
+    gradient of clip(x, −1, 1) with the sign value straight-through.
+    """
+    clipped = jnp.clip(x, -1.0, 1.0)
+    signed = jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+    return clipped + jax.lax.stop_gradient(signed - clipped)
+
+
+# ---------------------------------------------------------------------------
+# BNN training-time parameters
+
+def bnn_init(key: jax.Array, dims=BNN_DIMS) -> dict:
+    """Glorot-uniform latent weights + identity batch-norm state per layer."""
+    params = {}
+    keys = jax.random.split(key, len(dims) - 1)
+    for i, (fan_in, fan_out) in enumerate(zip(dims[:-1], dims[1:])):
+        limit = float(np.sqrt(6.0 / (fan_in + fan_out)))
+        params[f"w{i}"] = jax.random.uniform(
+            keys[i], (fan_out, fan_in), jnp.float32, -limit, limit
+        )
+        params[f"bn{i}"] = {
+            "gamma": jnp.ones((fan_out,), jnp.float32),
+            "beta": jnp.zeros((fan_out,), jnp.float32),
+        }
+    return params
+
+
+def bnn_init_state(dims=BNN_DIMS) -> dict:
+    """Non-trainable batch-norm moving statistics."""
+    return {
+        f"bn{i}": {
+            "mean": jnp.zeros((n,), jnp.float32),
+            "var": jnp.ones((n,), jnp.float32),
+        }
+        for i, n in enumerate(dims[1:])
+    }
+
+
+def _bn_train(x, p, s):
+    mu = jnp.mean(x, axis=0)
+    var = jnp.var(x, axis=0)
+    new_s = {
+        "mean": BN_MOMENTUM * s["mean"] + (1 - BN_MOMENTUM) * mu,
+        "var": BN_MOMENTUM * s["var"] + (1 - BN_MOMENTUM) * var,
+    }
+    y = p["gamma"] * (x - mu) * jax.lax.rsqrt(var + BN_EPS) + p["beta"]
+    return y, new_s
+
+
+def _bn_eval(x, p, s):
+    return p["gamma"] * (x - s["mean"]) * jax.lax.rsqrt(s["var"] + BN_EPS) + p["beta"]
+
+
+def bnn_apply_train(params: dict, state: dict, images: jnp.ndarray):
+    """Training forward pass on ``[B, 784]`` images in [0, 1].
+
+    Returns ``(logits [B,10], new_state)``.  Inputs are rescaled to [−1, 1]
+    and sign-binarized (§3.1); hidden activations are ste_sign(BN(z)); the
+    output layer keeps the real-valued BN output as logits.
+    """
+    a = ste_sign(images * 2.0 - 1.0)
+    new_state = {}
+    n_layers = len(BNN_DIMS) - 1
+    for i in range(n_layers):
+        z = a @ ste_sign(params[f"w{i}"]).T
+        h, new_state[f"bn{i}"] = _bn_train(z, params[f"bn{i}"], state[f"bn{i}"])
+        a = ste_sign(h) if i < n_layers - 1 else h
+    return a, new_state
+
+
+def bnn_apply_eval(params: dict, state: dict, images: jnp.ndarray) -> jnp.ndarray:
+    """Evaluation forward pass using moving batch-norm statistics."""
+    a = ste_sign(images * 2.0 - 1.0)
+    n_layers = len(BNN_DIMS) - 1
+    for i in range(n_layers):
+        z = a @ ste_sign(params[f"w{i}"]).T
+        h = _bn_eval(z, params[f"bn{i}"], state[f"bn{i}"])
+        a = ste_sign(h) if i < n_layers - 1 else h
+    return a
+
+
+# ---------------------------------------------------------------------------
+# Deployed (folded, packed) inference parameters
+
+@dataclass
+class InferenceParams:
+    """Hardware-ready parameters: packed ±1 weights + folded int thresholds.
+
+    ``hidden``: list of (w_pm1 [N, I] float ±1, thresholds [N] int32) —
+    weight rows already sign-flipped where the folded batch-norm γ was
+    negative (see ``train.fold_thresholds``).  ``out_w``: [10, 64] ±1.
+    """
+
+    hidden: list  # [(w_pm1, thresholds)]
+    out_w: np.ndarray
+    n_in: int = 784
+    packed: dict = field(default_factory=dict)
+
+    def pack(self) -> "InferenceParams":
+        """Precompute packed uint32 operands for the kernels."""
+        self.packed = {
+            "w": [packing.pack_pm1_np(w) for w, _ in self.hidden]
+            + [packing.pack_pm1_np(self.out_w)],
+            "t": [np.asarray(t, np.int32) for _, t in self.hidden],
+        }
+        return self
+
+    @property
+    def dims(self) -> tuple[int, int, int]:
+        return (self.n_in, self.hidden[0][0].shape[0], self.hidden[1][0].shape[0])
+
+
+def bnn_infer_packed(ip: InferenceParams, x_packed: jnp.ndarray, *, interpret=True) -> jnp.ndarray:
+    """Layer-by-layer packed inference via the L1 Pallas kernels.
+
+    ``x_packed``: [B, 25] uint32 packed input bits → [B, 10] int32 logits.
+    """
+    w = ip.packed["w"]
+    t = ip.packed["t"]
+    n_in, n_h1, n_h2 = ip.dims
+    a = xnor_dense.binary_dense_hidden(
+        x_packed, jnp.asarray(w[0]), jnp.asarray(t[0]), n_bits=n_in, interpret=interpret
+    )
+    a = xnor_dense.binary_dense_hidden(
+        a, jnp.asarray(w[1]), jnp.asarray(t[1]), n_bits=n_h1, interpret=interpret
+    )
+    return xnor_dense.binary_dense_logits(
+        a, jnp.asarray(w[2]), n_bits=n_h2, interpret=interpret
+    )
+
+
+def bnn_infer_fused(ip: InferenceParams, x_packed: jnp.ndarray, *, interpret=True) -> jnp.ndarray:
+    """Single fused Pallas kernel for the whole network (hot path)."""
+    w = ip.packed["w"]
+    t = ip.packed["t"]
+    return xnor_dense.bnn_fused_forward(
+        x_packed,
+        jnp.asarray(w[0]), jnp.asarray(t[0]),
+        jnp.asarray(w[1]), jnp.asarray(t[1]),
+        jnp.asarray(w[2]),
+        dims=ip.dims,
+        interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# CNN baseline (§4.6)
+
+CNN_SPEC = dict(c1=32, c2=64, dense=128, classes=10)
+
+
+def cnn_init(key: jax.Array) -> dict:
+    """He-normal initialized CNN parameters matching the paper's baseline."""
+    k = jax.random.split(key, 4)
+    he = lambda kk, shape, fan_in: jax.random.normal(kk, shape, jnp.float32) * np.sqrt(
+        2.0 / fan_in
+    )
+    # After two 'valid' conv3x3 + pool2 stages: 28→26→13→11→5; 5*5*64 = 1600.
+    return {
+        "conv1": he(k[0], (3, 3, 1, CNN_SPEC["c1"]), 9),
+        "b1": jnp.zeros((CNN_SPEC["c1"],)),
+        "conv2": he(k[1], (3, 3, CNN_SPEC["c1"], CNN_SPEC["c2"]), 9 * CNN_SPEC["c1"]),
+        "b2": jnp.zeros((CNN_SPEC["c2"],)),
+        "dense1": he(k[2], (5 * 5 * CNN_SPEC["c2"], CNN_SPEC["dense"]), 5 * 5 * CNN_SPEC["c2"]),
+        "db1": jnp.zeros((CNN_SPEC["dense"],)),
+        "dense2": he(k[3], (CNN_SPEC["dense"], CNN_SPEC["classes"]), CNN_SPEC["dense"]),
+        "db2": jnp.zeros((CNN_SPEC["classes"],)),
+    }
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_apply(params: dict, images: jnp.ndarray, *, dropout_key=None) -> jnp.ndarray:
+    """CNN forward on ``[B, 784]`` images in [0,1]; dropout only when a key is given."""
+    x = images.reshape(-1, 28, 28, 1)
+    for conv, bias in (("conv1", "b1"), ("conv2", "b2")):
+        x = jax.lax.conv_general_dilated(
+            x, params[conv], (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        ) + params[bias]
+        x = jax.nn.relu(x)
+        x = _maxpool2(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["dense1"] + params["db1"])
+    if dropout_key is not None:
+        keep = jax.random.bernoulli(dropout_key, 0.5, x.shape)
+        x = jnp.where(keep, x / 0.5, 0.0)
+    return x @ params["dense2"] + params["db2"]

@@ -1,0 +1,273 @@
+"""Build-time training: STE quantization-aware BNN + CNN baseline.
+
+Reproduces §3.1's recipe in JAX (the TensorFlow/Larq substitution —
+DESIGN.md): Adam, sparse categorical cross-entropy, batch 64, 15 epochs,
+exponential staircase LR decay (0.001 × 0.96^⌊step/1000⌋), and the
+batch-norm → threshold folding of Eq. 4 (in its sign-aware exact form).
+
+Run as ``python -m compile.train --out ../artifacts`` (driven by ``make
+artifacts``); also importable by pytest for smoke-scale runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from .model import BN_EPS, InferenceParams
+
+BATCH = 64
+BASE_LR = 1e-3
+DECAY = 0.96
+DECAY_STEPS = 1000
+THRESH_BITS = 11  # paper §3.1: thresholds quantized as 11-bit signed integers
+
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam (optax unavailable offline)
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": zeros, "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(grads, opt, params, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = opt["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, opt["v"], grads)
+    tf = t.astype(jnp.float32)
+    corr = jnp.sqrt(1 - b2**tf) / (1 - b1**tf)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * corr * m_ / (jnp.sqrt(v_) + eps), params, m, v
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def staircase_lr(step: jnp.ndarray) -> jnp.ndarray:
+    """§3.1: 0.001 decayed ×0.96 every 1000 steps, staircase."""
+    return BASE_LR * DECAY ** jnp.floor(step / DECAY_STEPS)
+
+
+def xent(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=1))
+
+
+# ---------------------------------------------------------------------------
+# BNN training
+
+# NOTE: no donate_argnums — freshly-initialized zero buffers alias under
+# XLA's constant dedup, and donating an aliased buffer twice is an error.
+@jax.jit
+def _bnn_step(params, state, opt, images, labels):
+    def loss_fn(p):
+        logits, new_state = model_mod.bnn_apply_train(p, state, images)
+        return xent(logits, labels), new_state
+
+    (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    lr = staircase_lr(opt["t"].astype(jnp.float32))
+    params, opt = adam_update(grads, opt, params, lr)
+    return params, new_state, opt, loss
+
+
+@jax.jit
+def _bnn_eval_batch(params, state, images, labels):
+    logits = model_mod.bnn_apply_eval(params, state, images)
+    return jnp.sum(jnp.argmax(logits, axis=1) == labels)
+
+
+def eval_bnn(params, state, images, labels, batch=1000) -> float:
+    correct = 0
+    for i in range(0, len(images), batch):
+        correct += int(
+            _bnn_eval_batch(params, state, images[i : i + batch], labels[i : i + batch])
+        )
+    return correct / len(images)
+
+
+def train_bnn(
+    train_images,
+    train_labels,
+    test_images,
+    test_labels,
+    epochs: int = 15,
+    seed: int = 0,
+    log=print,
+):
+    """Train the 784-128-64-10 BNN; returns (params, state, stats dict)."""
+    params = model_mod.bnn_init(jax.random.PRNGKey(seed))
+    state = model_mod.bnn_init_state()
+    opt = adam_init(params)
+    x = train_images.reshape(len(train_images), -1)
+    rng = np.random.default_rng(seed)
+    t0 = time.perf_counter()
+    losses = []
+    for epoch in range(epochs):
+        order = rng.permutation(len(x))
+        epoch_loss, batches = 0.0, 0
+        for i in range(0, len(x) - BATCH + 1, BATCH):
+            idx = order[i : i + BATCH]
+            params, state, opt, loss = _bnn_step(
+                params, state, opt, jnp.asarray(x[idx]), jnp.asarray(train_labels[idx])
+            )
+            epoch_loss += float(loss)
+            batches += 1
+        losses.append(epoch_loss / batches)
+        log(f"[bnn] epoch {epoch + 1}/{epochs} loss={losses[-1]:.4f}")
+    train_s = time.perf_counter() - t0
+    acc = eval_bnn(params, state, test_images.reshape(len(test_images), -1), test_labels)
+    log(f"[bnn] test accuracy {acc:.4f} ({train_s:.1f}s)")
+    return params, state, {"accuracy": acc, "train_seconds": train_s, "loss_curve": losses}
+
+
+# ---------------------------------------------------------------------------
+# Threshold folding (paper Eq. 4, sign-aware exact form)
+
+def fold_thresholds(params, state) -> InferenceParams:
+    """Fold each hidden batch-norm + sign into an integer threshold.
+
+    A hidden activation fires (bit = 1) iff γ(z − μ)/√(σ²+ε) + β ≥ 0, i.e.
+
+    * γ > 0:  z ≥ μ − β·√(σ²+ε)/γ   → θ = ⌈μ − βσ'/γ⌉, row unchanged;
+    * γ < 0:  z ≤ μ − β·√(σ²+ε)/γ   → flip the neuron's weight row
+      (z → −z), θ = ⌈−(μ − βσ'/γ)⌉;
+    * γ = 0:  activation is constant sign(β) → θ = ∓(n+1) (always/never).
+
+    Thresholds are clamped to the 11-bit signed range (§3.1); the output
+    layer keeps raw sums (no threshold), matching the FSM's classification
+    stage (§3.4).
+    """
+    hidden = []
+    n_layers = len(model_mod.BNN_DIMS) - 1
+    for i in range(n_layers - 1):
+        w = np.sign(np.asarray(params[f"w{i}"], np.float64))
+        w[w == 0] = 1.0
+        g = np.asarray(params[f"bn{i}"]["gamma"], np.float64)
+        b = np.asarray(params[f"bn{i}"]["beta"], np.float64)
+        mu = np.asarray(state[f"bn{i}"]["mean"], np.float64)
+        sig = np.sqrt(np.asarray(state[f"bn{i}"]["var"], np.float64) + BN_EPS)
+        n_in = w.shape[1]
+        t_real = np.where(g != 0, mu - b * sig / np.where(g != 0, g, 1.0), 0.0)
+        theta = np.where(
+            g > 0,
+            np.ceil(t_real),
+            np.where(g < 0, np.ceil(-t_real), np.where(b >= 0, -(n_in + 1), n_in + 1)),
+        )
+        w = np.where((g < 0)[:, None], -w, w)
+        lim = 2 ** (THRESH_BITS - 1)
+        theta = np.clip(theta, -lim, lim - 1).astype(np.int32)
+        hidden.append((w.astype(np.float32), theta))
+    w_out = np.sign(np.asarray(params[f"w{n_layers - 1}"], np.float64))
+    w_out[w_out == 0] = 1.0
+    return InferenceParams(hidden=hidden, out_w=w_out.astype(np.float32)).pack()
+
+
+def eval_folded(ip: InferenceParams, images, labels, batch=1000) -> float:
+    """Hardware-path accuracy: packed kernels + raw-sum argmax (§4.1)."""
+    from .kernels import packing
+
+    bits = data_mod.binarize(images.reshape(len(images), -1))
+    packed = packing.pack_bits_np(bits)
+    correct = 0
+    for i in range(0, len(packed), batch):
+        logits = model_mod.bnn_infer_fused(ip, jnp.asarray(packed[i : i + batch]))
+        correct += int(jnp.sum(jnp.argmax(logits, axis=1) == jnp.asarray(labels[i : i + batch])))
+    return correct / len(images)
+
+
+# ---------------------------------------------------------------------------
+# CNN baseline training (§4.6)
+
+@jax.jit
+def _cnn_step(params, opt, images, labels, key):
+    def loss_fn(p):
+        logits = model_mod.cnn_apply(p, images, dropout_key=key)
+        return xent(logits, labels)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params, opt = adam_update(grads, opt, params, BASE_LR)
+    return params, opt, loss
+
+
+@jax.jit
+def _cnn_eval_batch(params, images, labels):
+    logits = model_mod.cnn_apply(params, images)
+    return jnp.sum(jnp.argmax(logits, axis=1) == labels)
+
+
+def eval_cnn(params, images, labels, batch=500) -> float:
+    correct = 0
+    x = images.reshape(len(images), -1)
+    for i in range(0, len(x), batch):
+        correct += int(_cnn_eval_batch(params, x[i : i + batch], labels[i : i + batch]))
+    return correct / len(images)
+
+
+def train_cnn(train_images, train_labels, test_images, test_labels, epochs=3, seed=0, log=print):
+    """Train the CNN baseline; paper used 10 epochs — the synthetic task
+    saturates earlier, so the default is 3 (configurable via --cnn-epochs)."""
+    params = model_mod.cnn_init(jax.random.PRNGKey(seed + 100))
+    opt = adam_init(params)
+    x = train_images.reshape(len(train_images), -1)
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed + 200)
+    t0 = time.perf_counter()
+    for epoch in range(epochs):
+        order = rng.permutation(len(x))
+        epoch_loss, batches = 0.0, 0
+        for i in range(0, len(x) - BATCH + 1, BATCH):
+            idx = order[i : i + BATCH]
+            key, sub = jax.random.split(key)
+            params, opt, loss = _cnn_step(
+                params, opt, jnp.asarray(x[idx]), jnp.asarray(train_labels[idx]), sub
+            )
+            epoch_loss += float(loss)
+            batches += 1
+        log(f"[cnn] epoch {epoch + 1}/{epochs} loss={epoch_loss / batches:.4f}")
+    train_s = time.perf_counter() - t0
+    acc = eval_cnn(params, test_images, test_labels)
+    log(f"[cnn] test accuracy {acc:.4f} ({train_s:.1f}s)")
+    return params, {"accuracy": acc, "train_seconds": train_s}
+
+
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--epochs", type=int, default=15)
+    ap.add_argument("--cnn-epochs", type=int, default=3)
+    ap.add_argument("--train-size", type=int, default=20000)
+    ap.add_argument("--test-size", type=int, default=4000)
+    ap.add_argument("--seed", type=int, default=2025)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    tr_i, tr_l, te_i, te_l = data_mod.load_or_generate(
+        os.path.join(args.out, "data"), args.train_size, args.test_size, args.seed
+    )
+    params, state, bnn_stats = train_bnn(tr_i, tr_l, te_i, te_l, args.epochs, args.seed)
+    ip = fold_thresholds(params, state)
+    bnn_stats["folded_accuracy"] = eval_folded(ip, te_i, te_l)
+    print(f"[bnn] folded (hardware-path) accuracy {bnn_stats['folded_accuracy']:.4f}")
+    cnn_params, cnn_stats = train_cnn(tr_i, tr_l, te_i, te_l, args.cnn_epochs, args.seed)
+
+    from . import export
+
+    export.export_all(args.out, ip, cnn_params, te_i, te_l)
+    with open(os.path.join(args.out, "train_log.json"), "w") as f:
+        json.dump({"bnn": bnn_stats, "cnn": cnn_stats}, f, indent=2)
+    print(f"[train] artifacts written to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""Dataset generator, idx codec, and .mem export tests."""
+
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import data as data_mod
+from compile import export as export_mod
+
+
+# --- synthetic dataset -------------------------------------------------------
+
+def test_generator_deterministic_and_balanced():
+    i1, l1 = data_mod.generate(50, 7)
+    i2, l2 = data_mod.generate(50, 7)
+    assert np.array_equal(i1, i2) and np.array_equal(l1, l2)
+    i3, _ = data_mod.generate(50, 8)
+    assert not np.array_equal(i1, i3)
+    counts = np.bincount(l1, minlength=10)
+    assert counts.min() == 5 and counts.max() == 5
+
+
+def test_images_look_like_digits():
+    imgs, _ = data_mod.generate(40, 3)
+    assert imgs.shape == (40, 28, 28)
+    assert imgs.dtype in (np.float32, np.float64)
+    assert imgs.min() >= 0.0 and imgs.max() <= 1.0
+    ink = data_mod.binarize(imgs).reshape(40, -1).sum(axis=1)
+    assert (ink > 15).all(), "some image nearly empty"
+    assert (ink < 500).all(), "some image nearly solid"
+
+
+def test_binarize_threshold_semantics():
+    # p >= 0.5  ⇔  2p−1 >= 0 (Eq. 1 with sign(0)=+1)
+    x = np.array([[0.0, 0.499, 0.5, 1.0]])
+    assert np.array_equal(data_mod.binarize(x), [[0, 0, 1, 1]])
+
+
+def test_idx_roundtrip(tmp_path):
+    imgs = (np.random.default_rng(0).random((7, 28, 28)) * 255).astype(np.uint8)
+    labels = np.arange(7, dtype=np.uint8)
+    pi = str(tmp_path / "imgs")
+    pl = str(tmp_path / "labels")
+    data_mod.write_idx_images(pi, imgs)
+    data_mod.write_idx_labels(pl, labels)
+    assert np.array_equal(data_mod.read_idx(pi), imgs)
+    assert np.array_equal(data_mod.read_idx(pl), labels)
+
+
+def test_load_or_generate_idempotent(tmp_path):
+    d = str(tmp_path / "data")
+    a = data_mod.load_or_generate(d, n_train=60, n_test=20, seed=5)
+    b = data_mod.load_or_generate(d, n_train=999, n_test=999, seed=99)  # reuses files
+    for x, y in zip(a, b):
+        assert np.array_equal(x, y)
+    assert len(a[0]) == 60 and len(a[2]) == 20
+
+
+# --- hex-row codec (the .mem format) ----------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=1, max_value=800), st.integers(min_value=0, max_value=2**32 - 1))
+def test_hex_row_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, n).astype(np.uint8)
+    row = export_mod.bits_to_hex_row(bits)
+    assert len(row) == (n + 3) // 4
+    assert np.array_equal(export_mod.hex_row_to_bits(row, n), bits)
+
+
+def test_hex_row_msb_first():
+    # bit n−1 must be the leftmost hex digit's high bit
+    bits = np.zeros(8, np.uint8)
+    bits[7] = 1
+    assert export_mod.bits_to_hex_row(bits) == "80"
+
+
+def test_threshold_mem_roundtrip(tmp_path):
+    p = str(tmp_path / "t.mem")
+    thr = np.array([-1024, -1, 0, 1, 1023], np.int32)
+    export_mod.write_threshold_mem(p, thr)
+    assert np.array_equal(export_mod.read_threshold_mem(p), thr)
+    lines = open(p).read().splitlines()
+    assert lines[0] == "400" and lines[1] == "7ff" and lines[2] == "000"
+
+
+def test_weight_mem_format(tmp_path):
+    p = str(tmp_path / "w.mem")
+    w = np.array([[1.0, -1.0, 1.0], [-1.0, -1.0, -1.0]], np.float32)
+    export_mod.write_weight_mem(p, w)
+    lines = open(p).read().splitlines()
+    assert len(lines) == 2  # neuron-major: one row per neuron
+    # row 0 bits LSB-first [1,0,1] = 0b101 = '5'
+    assert lines[0] == "5" and lines[1] == "0"
+
+
+def test_select_subset_interleaved():
+    labels = np.array([d for d in range(10) for _ in range(12)], np.uint8)
+    idx = export_mod.select_subset(labels)
+    assert len(idx) == 100
+    # paper order: 0..9, 0..9, ... and exactly 10 per class
+    assert np.array_equal(labels[idx][:10], np.arange(10))
+    assert np.bincount(labels[idx], minlength=10).tolist() == [10] * 10
+
+
+def test_export_all_and_reload(tmp_path):
+    from compile.model import InferenceParams
+
+    rng = np.random.default_rng(1)
+    hidden = [
+        (rng.choice([-1.0, 1.0], (128, 784)).astype(np.float32),
+         rng.integers(-100, 100, 128).astype(np.int32)),
+        (rng.choice([-1.0, 1.0], (64, 128)).astype(np.float32),
+         rng.integers(-50, 50, 64).astype(np.int32)),
+    ]
+    ip = InferenceParams(hidden=hidden, out_w=rng.choice([-1.0, 1.0], (10, 64)).astype(np.float32)).pack()
+    imgs, labels = data_mod.generate(120, 4)
+    export_mod.export_all(str(tmp_path), ip, {"dummy": np.zeros(3)}, imgs, labels)
+
+    for f in ["weights.json", "params_bnn.npz", "params_cnn.npz",
+              "mem/weights_l1.mem", "mem/weights_l2.mem", "mem/weights_l3.mem",
+              "mem/thresholds_l1.mem", "mem/thresholds_l2.mem",
+              "mem/images_100.mem", "mem/labels_100.mem"]:
+        assert os.path.exists(tmp_path / f), f
+
+    ip2 = export_mod.load_inference_params(str(tmp_path))
+    for (w1, t1), (w2, t2) in zip(ip.hidden, ip2.hidden):
+        assert np.array_equal(w1, w2) and np.array_equal(t1, t2)
+    assert np.array_equal(ip.out_w, ip2.out_w)
+
+    # weights.json packed rows must round-trip against the packing module
+    import json
+
+    from compile.kernels import packing
+
+    j = json.load(open(tmp_path / "weights.json"))
+    assert j["dims"] == [784, 128, 64, 10]
+    w_packed = np.array(j["layers"][0]["w_packed"], np.uint32)
+    assert np.array_equal(w_packed, packing.pack_pm1_np(hidden[0][0]))
+    assert j["layers"][2]["thresholds"] is None
+
+
+def test_mem_images_match_binarized_pixels(tmp_path):
+    imgs, labels = data_mod.generate(100, 6)
+    from compile.model import InferenceParams
+
+    rng = np.random.default_rng(2)
+    hidden = [
+        (rng.choice([-1.0, 1.0], (128, 784)).astype(np.float32), np.zeros(128, np.int32)),
+        (rng.choice([-1.0, 1.0], (64, 128)).astype(np.float32), np.zeros(64, np.int32)),
+    ]
+    ip = InferenceParams(hidden=hidden, out_w=rng.choice([-1.0, 1.0], (10, 64)).astype(np.float32)).pack()
+    export_mod.export_all(str(tmp_path), ip, {"d": np.zeros(1)}, imgs, labels)
+
+    rows = open(tmp_path / "mem/images_100.mem").read().splitlines()
+    idx = export_mod.select_subset(labels)
+    bits = data_mod.binarize(imgs.reshape(len(imgs), -1))
+    for row, i in zip(rows, idx):
+        assert np.array_equal(export_mod.hex_row_to_bits(row, 784), bits[i])
+
+
+def test_hex_row_wrong_length_raises():
+    with pytest.raises(ValueError):
+        export_mod.hex_row_to_bits("zz", 8)

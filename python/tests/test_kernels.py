@@ -1,0 +1,162 @@
+"""L1 correctness: Pallas kernels vs the two independent oracles.
+
+Hypothesis sweeps shapes (batch, widths), operand bit patterns, and
+threshold placement — including the z == θ boundary the paper's comparator
+semantics (`z ≥ θ`, Algorithm 1 line 14) make load-bearing.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import packing, ref, xnor_dense
+
+
+def _rand_pm1(rng, shape):
+    return rng.choice([-1.0, 1.0], shape).astype(np.float32)
+
+
+def _case(rng, b, n_in, n_out):
+    x = _rand_pm1(rng, (b, n_in))
+    w = _rand_pm1(rng, (n_out, n_in))
+    return x, w, packing.pack_pm1_np(x), packing.pack_pm1_np(w)
+
+
+# --- identity: the paper's z = 2m − n == ±1 dot product ---------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=9),
+    st.integers(min_value=1, max_value=260),
+    st.integers(min_value=1, max_value=40),
+    st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_popcount_identity_property(b, n_in, n_out, seed):
+    rng = np.random.default_rng(seed)
+    x, w, xp, wp = _case(rng, b, n_in, n_out)
+    z_float = np.asarray(ref.binary_dense_ref_float(jnp.asarray(x), jnp.asarray(w)))
+    z_packed = np.asarray(ref.binary_dense_ref_packed(jnp.asarray(xp), jnp.asarray(wp), n_in))
+    assert np.array_equal(z_float.astype(np.int32), z_packed)
+    # parity invariant: z ≡ n (mod 2)
+    assert np.all((z_packed - n_in) % 2 == 0)
+    assert np.all(np.abs(z_packed) <= n_in)
+
+
+# --- Pallas hidden kernel vs oracles ----------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=200),
+    st.sampled_from([32, 64, 96, 128]),
+    st.integers(min_value=1, max_value=790),
+    st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_pallas_hidden_vs_ref(b, n_out, n_in, seed):
+    rng = np.random.default_rng(seed)
+    x, w, xp, wp = _case(rng, b, n_in, n_out)
+    thr = rng.integers(-n_in, n_in + 1, n_out).astype(np.int32)
+    out = xnor_dense.binary_dense_hidden(
+        jnp.asarray(xp), jnp.asarray(wp), jnp.asarray(thr), n_bits=n_in
+    )
+    got = packing.unpack_bits_np(np.asarray(out), n_out)
+    want = np.asarray(
+        ref.binary_dense_ref_packed(jnp.asarray(xp), jnp.asarray(wp), n_in, jnp.asarray(thr))
+    ).astype(np.uint8)
+    assert np.array_equal(got, want)
+
+
+def test_threshold_boundary_exact():
+    """z == θ must fire (comparator is ≥, not >)."""
+    n_in = 64
+    n_out = 32  # hidden layers must be word-aligned (packed activations)
+    x = np.ones((1, n_in), np.float32)
+    w = np.ones((n_out, n_in), np.float32)  # z = 64 for every neuron
+    for thr, expect in [(64, 1), (65, 0), (63, 1), (-64, 1)]:
+        out = xnor_dense.binary_dense_hidden(
+            jnp.asarray(packing.pack_pm1_np(x)),
+            jnp.asarray(packing.pack_pm1_np(w)),
+            jnp.asarray(np.full(n_out, thr, np.int32)),
+            n_bits=n_in,
+        )
+        bits = packing.unpack_bits_np(np.asarray(out), n_out)
+        assert np.all(bits == expect), f"thr={thr}"
+
+
+def test_extreme_z_values():
+    n_in = 784
+    x = np.ones((2, n_in), np.float32)
+    w = np.stack([np.ones(n_in), -np.ones(n_in)]).astype(np.float32)
+    z = np.asarray(
+        xnor_dense.binary_dense_logits(
+            jnp.asarray(packing.pack_pm1_np(x)), jnp.asarray(packing.pack_pm1_np(w)), n_bits=n_in
+        )
+    )
+    assert np.all(z[:, 0] == n_in) and np.all(z[:, 1] == -n_in)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=150),
+    st.integers(min_value=1, max_value=33),
+    st.integers(min_value=1, max_value=790),
+    st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_pallas_logits_vs_ref(b, n_out, n_in, seed):
+    rng = np.random.default_rng(seed)
+    x, w, xp, wp = _case(rng, b, n_in, n_out)
+    got = np.asarray(
+        xnor_dense.binary_dense_logits(jnp.asarray(xp), jnp.asarray(wp), n_bits=n_in)
+    )
+    want = np.asarray(ref.binary_dense_ref_packed(jnp.asarray(xp), jnp.asarray(wp), n_in))
+    assert np.array_equal(got, want)
+
+
+# --- batch-tile padding must be invisible -----------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([1, 3, 127, 128, 129, 255]), st.integers(min_value=0, max_value=2**31))
+def test_batch_padding_invariance(b, seed):
+    rng = np.random.default_rng(seed)
+    x, w, xp, wp = _case(rng, b, 784, 128)
+    thr = rng.integers(-100, 100, 128).astype(np.int32)
+    small = xnor_dense.binary_dense_hidden(
+        jnp.asarray(xp), jnp.asarray(wp), jnp.asarray(thr), n_bits=784, block_b=32
+    )
+    big = xnor_dense.binary_dense_hidden(
+        jnp.asarray(xp), jnp.asarray(wp), jnp.asarray(thr), n_bits=784, block_b=128
+    )
+    assert np.array_equal(np.asarray(small), np.asarray(big))
+    assert small.shape == (b, 4)
+
+
+# --- fused whole-network kernel vs layered composition ----------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=70), st.integers(min_value=0, max_value=2**32 - 1))
+def test_fused_equals_layered(b, seed):
+    rng = np.random.default_rng(seed)
+    from compile.model import InferenceParams
+
+    hidden = [
+        (_rand_pm1(rng, (128, 784)), rng.integers(-60, 60, 128).astype(np.int32)),
+        (_rand_pm1(rng, (64, 128)), rng.integers(-30, 30, 64).astype(np.int32)),
+    ]
+    ip = InferenceParams(hidden=hidden, out_w=_rand_pm1(rng, (10, 64))).pack()
+    from compile import model as model_mod
+
+    xp = jnp.asarray(packing.pack_bits_np(rng.integers(0, 2, (b, 784)).astype(np.uint8)))
+    fused = np.asarray(model_mod.bnn_infer_fused(ip, xp))
+    layered = np.asarray(model_mod.bnn_infer_packed(ip, xp))
+    assert np.array_equal(fused, layered)
+    # and both against the float oracle
+    x_pm1 = packing.unpack_pm1_np(np.asarray(xp), 784)
+    want = np.asarray(ref.bnn_forward_ref(ip, jnp.asarray(x_pm1)))
+    assert np.array_equal(fused, want.astype(np.int32))
+
+
+def test_vmem_footprint_budget():
+    """The fused kernel's per-grid-step working set must stay ≪ 16 MiB VMEM."""
+    fp = xnor_dense.vmem_footprint_bytes((784, 128, 64), 10, block_b=128)
+    assert fp["total"] < 256 * 1024  # ~0.25 MiB — tiny vs 16 MiB VMEM
+    assert fp["weights"] == 4 * (128 * 25 + 64 * 4 + 10 * 2)

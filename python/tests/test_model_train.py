@@ -1,0 +1,164 @@
+"""L2 tests: STE semantics, batch-norm threshold folding, training smoke."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import data as data_mod
+from compile import model as model_mod
+from compile import train as train_mod
+from compile.kernels import packing
+
+
+# --- STE (paper Eq. 1 + Eq. 2) ----------------------------------------------
+
+def test_ste_sign_forward():
+    x = jnp.asarray([-2.0, -0.5, 0.0, 0.5, 2.0])
+    assert np.array_equal(np.asarray(model_mod.ste_sign(x)), [-1, -1, 1, 1, 1])
+
+
+def test_ste_sign_gradient_clip():
+    g = jax.grad(lambda x: jnp.sum(model_mod.ste_sign(x)))(
+        jnp.asarray([-2.0, -0.99, 0.0, 0.99, 2.0])
+    )
+    assert np.array_equal(np.asarray(g), [0.0, 1.0, 1.0, 1.0, 0.0])
+
+
+# --- threshold folding (Eq. 4, sign-aware) ----------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=2**32 - 1))
+def test_folding_matches_batchnorm_sign(seed):
+    """For random BN params and every reachable integer z, the folded
+    comparator must reproduce sign(BN(z)) exactly — the paper's core
+    numerical transformation."""
+    rng = np.random.default_rng(seed)
+    n_in = 16
+    n_out = 8
+    params = {
+        "w0": rng.normal(size=(n_out, n_in)).astype(np.float32),
+        "bn0": {
+            "gamma": rng.normal(scale=1.0, size=n_out).astype(np.float32),
+            "beta": rng.normal(scale=2.0, size=n_out).astype(np.float32),
+        },
+        # unused layers to satisfy the folder's dims walk
+        "w1": rng.normal(size=(4, n_out)).astype(np.float32),
+        "bn1": {"gamma": np.ones(4, np.float32), "beta": np.zeros(4, np.float32)},
+        "w2": rng.normal(size=(2, 4)).astype(np.float32),
+        "bn2": {"gamma": np.ones(2, np.float32), "beta": np.zeros(2, np.float32)},
+    }
+    state = {
+        "bn0": {
+            "mean": rng.normal(scale=3.0, size=n_out).astype(np.float32),
+            "var": rng.uniform(0.1, 4.0, size=n_out).astype(np.float32),
+        },
+        "bn1": {"mean": np.zeros(4, np.float32), "var": np.ones(4, np.float32)},
+        "bn2": {"mean": np.zeros(2, np.float32), "var": np.ones(2, np.float32)},
+    }
+    import compile.model as m
+
+    old_dims = m.BNN_DIMS
+    m.BNN_DIMS = (n_in, n_out, 4, 2)
+    try:
+        ip = train_mod.fold_thresholds(params, state)
+    finally:
+        m.BNN_DIMS = old_dims
+
+    w_signed = np.sign(params["w0"]).astype(np.float64)
+    w_signed[w_signed == 0] = 1
+    g = params["bn0"]["gamma"].astype(np.float64)
+    b = params["bn0"]["beta"].astype(np.float64)
+    mu = state["bn0"]["mean"].astype(np.float64)
+    sig = np.sqrt(state["bn0"]["var"].astype(np.float64) + model_mod.BN_EPS)
+    w_folded, thr = ip.hidden[0]
+    # every reachable z has parity of n_in; check all of them per neuron
+    for j in range(n_out):
+        for z in range(-n_in, n_in + 1, 2):
+            bn = g[j] * (z - mu[j]) / sig[j] + b[j]
+            want = 1 if bn >= 0 else 0
+            # folded comparator acts on z' = z·flip where flip = sign
+            z_folded = z * (-1 if g[j] < 0 else 1)
+            got = 1 if z_folded >= thr[j] else 0
+            if bn != 0.0:  # exact-zero BN output is sign-convention territory
+                assert got == want, (j, z, bn, thr[j])
+
+
+def test_folding_flips_rows_for_negative_gamma():
+    rng = np.random.default_rng(3)
+    params = model_mod.bnn_init(jax.random.PRNGKey(0))
+    params["bn0"]["gamma"] = params["bn0"]["gamma"].at[0].set(-1.0)
+    state = model_mod.bnn_init_state()
+    ip = train_mod.fold_thresholds(params, state)
+    w0 = np.sign(np.asarray(params["w0"][0]))
+    w0[w0 == 0] = 1
+    assert np.array_equal(ip.hidden[0][0][0], -w0)
+
+
+def test_threshold_11bit_range():
+    params = model_mod.bnn_init(jax.random.PRNGKey(1))
+    state = model_mod.bnn_init_state()
+    # inflate moving means to force clamping
+    state["bn0"]["mean"] = state["bn0"]["mean"] + 5000.0
+    ip = train_mod.fold_thresholds(params, state)
+    for _, thr in ip.hidden:
+        assert thr.min() >= -1024 and thr.max() <= 1023
+
+
+# --- end-to-end folded-path agreement ----------------------------------------
+
+def test_eval_folded_matches_apply_eval_on_trained_net():
+    tr_i, tr_l = data_mod.generate(600, 11)
+    te_i, te_l = data_mod.generate(200, 12)
+    params, state, _ = train_mod.train_bnn(tr_i, tr_l, te_i, te_l, epochs=2, log=lambda *_: None)
+    ip = train_mod.fold_thresholds(params, state)
+    x = te_i.reshape(len(te_i), -1)
+    soft = np.asarray(model_mod.bnn_apply_eval(params, state, jnp.asarray(x)))
+    packed = packing.pack_bits_np(data_mod.binarize(x))
+    hw = np.asarray(model_mod.bnn_infer_fused(ip, jnp.asarray(packed)))
+    # hidden activations are bit-exact; only the output BN (absent in hw)
+    # may flip argmax near ties — the paper's own §4.1 software/hardware gap.
+    agreement = np.mean(np.argmax(soft, 1) == np.argmax(hw, 1))
+    assert agreement > 0.9
+
+
+def test_training_smoke_loss_decreases_and_learns():
+    tr_i, tr_l = data_mod.generate(1200, 21)
+    te_i, te_l = data_mod.generate(300, 22)
+    _, _, stats = train_mod.train_bnn(tr_i, tr_l, te_i, te_l, epochs=4, log=lambda *_: None)
+    assert stats["loss_curve"][-1] < stats["loss_curve"][0]
+    assert stats["accuracy"] > 0.4  # 10-class chance = 0.1; smoke-scale run
+
+
+def test_staircase_lr():
+    # float32 arithmetic → compare with relative tolerance
+    def lr(step):
+        return float(train_mod.staircase_lr(jnp.asarray(step)))
+
+    assert abs(lr(0.0) - 1e-3) < 1e-8
+    assert abs(lr(999.0) - 1e-3) < 1e-8
+    assert abs(lr(1000.0) - 0.96e-3) < 1e-8
+    assert abs(lr(2500.0) - 1e-3 * 0.96**2) < 1e-8
+
+
+def test_cnn_shapes_and_smoke():
+    params = model_mod.cnn_init(jax.random.PRNGKey(0))
+    x = jnp.zeros((3, 784), jnp.float32)
+    logits = model_mod.cnn_apply(params, x)
+    assert logits.shape == (3, 10)
+    tr_i, tr_l = data_mod.generate(900, 31)
+    te_i, te_l = data_mod.generate(200, 32)
+    _, stats = train_mod.train_cnn(tr_i, tr_l, te_i, te_l, epochs=1, log=lambda *_: None)
+    assert stats["accuracy"] > 0.25  # smoke-scale run; full build reaches 99 %
+
+
+def test_adam_matches_reference_step():
+    """One Adam step against a hand-computed reference."""
+    p = {"w": jnp.asarray([1.0, -2.0])}
+    g = {"w": jnp.asarray([0.5, -0.25])}
+    opt = train_mod.adam_init(p)
+    new_p, _ = train_mod.adam_update(g, opt, p, lr=0.1)
+    # t=1: corr = sqrt(1-b2)/(1-b1) = sqrt(0.001)/0.1; m=(1-b1)g; v=(1-b2)g²
+    # step = lr * corr * m / (sqrt(v)+eps) = lr * g/|g| (approx, eps small)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), [0.9, -1.9], atol=1e-4)

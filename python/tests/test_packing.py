@@ -1,0 +1,86 @@
+"""Unit + property tests for the bit-packing substrate."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import packing
+
+
+def test_packed_words():
+    assert packing.packed_words(1) == 1
+    assert packing.packed_words(32) == 1
+    assert packing.packed_words(33) == 2
+    assert packing.packed_words(784) == 25
+    assert packing.packed_words(128) == 4
+    assert packing.packed_words(64) == 2
+
+
+def test_pack_known_pattern():
+    bits = np.zeros(32, np.uint8)
+    bits[0] = 1  # LSB-first: bit 0 → word bit 0
+    assert packing.pack_bits_np(bits)[0] == 1
+    bits = np.zeros(33, np.uint8)
+    bits[32] = 1
+    words = packing.pack_bits_np(bits)
+    assert list(words) == [0, 1]
+
+
+def test_pack_all_ones_padding():
+    bits = np.ones(784, np.uint8)
+    words = packing.pack_bits_np(bits)
+    assert words.shape == (25,)
+    # last word: 784 = 24*32 + 16 → low 16 bits set
+    assert words[-1] == 0xFFFF
+    assert all(w == 0xFFFFFFFF for w in words[:-1])
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=1, max_value=300), st.integers(min_value=0, max_value=2**32 - 1))
+def test_roundtrip_property(n, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, n).astype(np.uint8)
+    assert np.array_equal(packing.unpack_bits_np(packing.pack_bits_np(bits), n), bits)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=8),
+    st.integers(min_value=1, max_value=200),
+    st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_roundtrip_batched(b, n, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, (b, n)).astype(np.uint8)
+    assert np.array_equal(packing.unpack_bits_np(packing.pack_bits_np(bits), n), bits)
+
+
+def test_pm1_roundtrip():
+    rng = np.random.default_rng(7)
+    x = rng.choice([-1.0, 1.0], 784).astype(np.float32)
+    words = packing.pack_pm1_np(x)
+    assert np.array_equal(packing.unpack_pm1_np(words, 784), x)
+
+
+def test_pm1_sign_zero_is_plus_one():
+    # Eq. 1: sign(0) = +1
+    assert packing.pack_pm1_np(np.array([0.0]))[0] & 1 == 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=200), st.integers(min_value=0, max_value=2**32 - 1))
+def test_jnp_matches_np(n, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, (3, n)).astype(np.uint8)
+    np_words = packing.pack_bits_np(bits)
+    j_words = np.asarray(packing.pack_bits_jnp(jnp.asarray(bits)))
+    assert np.array_equal(np_words, j_words)
+    j_bits = np.asarray(packing.unpack_bits_jnp(jnp.asarray(np_words), n))
+    assert np.array_equal(j_bits, bits)
+
+
+def test_pack_rejects_scalar():
+    with pytest.raises(ValueError):
+        packing.pack_bits_np(np.uint8(1))

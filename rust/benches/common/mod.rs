@@ -1,0 +1,29 @@
+//! Shared bench setup (each bench is its own crate; this module is
+//! `#[path]`-included).
+
+use std::path::PathBuf;
+
+use bnn_fpga::bnn::BnnModel;
+use bnn_fpga::data::Dataset;
+use bnn_fpga::{artifacts_dir, mem};
+
+pub fn load() -> (BnnModel, Dataset, PathBuf) {
+    let dir = artifacts_dir();
+    let model = mem::load_model(&dir.join("weights.json"))
+        .expect("run `make artifacts` before `cargo bench`");
+    let ds = Dataset::load_mem_subset(&dir.join("mem")).expect("mem subset");
+    (model, ds, dir)
+}
+
+/// Where benches drop CSV/series output.
+#[allow(dead_code)]
+pub fn out_dir() -> PathBuf {
+    let d = PathBuf::from("bench_out");
+    std::fs::create_dir_all(&d).ok();
+    d
+}
+
+#[allow(dead_code)]
+pub fn paper_row_note() {
+    println!("(paper values quoted from Ertörer & Ünsalan 2025; see EXPERIMENTS.md for deltas)\n");
+}

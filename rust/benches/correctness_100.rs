@@ -1,0 +1,61 @@
+//! §4.1 correctness verification: the exported 100-image binarized subset
+//! (10 per digit) through the cycle-accurate simulator at the paper's 64×
+//! BRAM design point.  Paper: 84/100 (software model: 87.97 %).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use bnn_fpga::sim::{Accelerator, MemStyle, SimConfig};
+use bnn_fpga::util::table::{Align, Table};
+
+fn main() {
+    let (model, ds, dir) = common::load();
+    let mut acc = Accelerator::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap();
+
+    let mut correct = 0usize;
+    let mut per_digit = [[0u32; 2]; 10];
+    let mut sim_ns_total = 0.0;
+    for (img, &label) in ds.images.iter().zip(&ds.labels) {
+        let r = acc.run_image(img);
+        let ok = r.digit == label;
+        correct += ok as usize;
+        per_digit[label as usize][usize::from(ok)] += 1;
+        sim_ns_total += r.latency_ns;
+    }
+
+    println!("=== §4.1 correctness verification (100 binarized images, 10/digit) ===\n");
+    let mut t = Table::new(&["Digit", "Correct", "Paper row"]).align(2, Align::Left);
+    for (d, [wrong, right]) in per_digit.iter().enumerate() {
+        t.row(vec![
+            d.to_string(),
+            format!("{right}/{}", wrong + right),
+            "-".into(),
+        ]);
+    }
+    t.row(vec![
+        "all".into(),
+        format!("{correct}/100"),
+        "84/100 (software 87.97%)".into(),
+    ]);
+    t.print();
+
+    // software full-test-set accuracy for the §4.1 software/hardware gap
+    let test = bnn_fpga::data::Dataset::load_idx_test(&dir.join("data")).unwrap();
+    let sw = test
+        .images
+        .iter()
+        .zip(&test.labels)
+        .filter(|(img, &l)| model.predict(&img.words) == l as usize)
+        .count();
+    println!(
+        "\nfull test set (software path): {}/{} = {:.2}%  (paper: 87.97%)",
+        sw,
+        test.len(),
+        sw as f64 / test.len() as f64 * 100.0
+    );
+    println!(
+        "simulated hardware time for the 100 images: {:.3} ms ({:.1} µs/image, paper: 17.8 µs)",
+        sim_ns_total / 1e6,
+        sim_ns_total / 100.0 / 1e3
+    );
+}

@@ -1,0 +1,110 @@
+//! Hot-path micro-benchmarks (the §Perf instrument): native inference,
+//! batch throughput, simulator tick rate, PJRT dispatch overhead, and
+//! coordinator round-trip cost.  Run before/after each optimization and
+//! record deltas in EXPERIMENTS.md §Perf.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bnn_fpga::coordinator::{BatcherConfig, Coordinator, NativeBackend};
+use bnn_fpga::runtime::Engine;
+use bnn_fpga::sim::{Accelerator, MemStyle, SimConfig};
+use bnn_fpga::util::bench::from_args;
+use bnn_fpga::util::table::{Align, Table};
+
+fn main() {
+    let (model, ds, dir) = common::load();
+    let bench = from_args();
+    let img = &ds.images[0];
+    println!("=== hot-path microbenchmarks ===\n");
+    let mut t = Table::new(&["Benchmark", "mean", "p50", "p99", "iters"]).align(0, Align::Left);
+    let fmt = |ns: f64| -> String {
+        if ns < 1_000.0 {
+            format!("{ns:.0} ns")
+        } else if ns < 1_000_000.0 {
+            format!("{:.2} µs", ns / 1e3)
+        } else {
+            format!("{:.2} ms", ns / 1e6)
+        }
+    };
+    let mut add = |name: &str, r: bnn_fpga::util::bench::BenchResult| {
+        t.row(vec![
+            name.into(),
+            fmt(r.summary.mean),
+            fmt(r.summary.p50),
+            fmt(r.summary.p99),
+            r.iters.to_string(),
+        ]);
+    };
+
+    // 1. native single-image inference (allocation-free path)
+    {
+        let mut scratch = bnn_fpga::bnn::model::Scratch::default();
+        let mut out = vec![0i32; 10];
+        let r = bench.run("native-single", || {
+            model.logits_into(&img.words, &mut scratch, &mut out);
+            out[0]
+        });
+        add("native single inference", r);
+    }
+
+    // 2. native batch-100 throughput
+    {
+        let inputs = ds.batch_words(0, 100);
+        let r = bench.run("native-b100", || model.logits_batch(&inputs, 100));
+        add("native batch-100 (total)", r);
+    }
+
+    // 3. one binary dense layer (784→128) in isolation
+    {
+        let layer = &model.layers[0];
+        let r = bench.run("layer0", || {
+            let mut acc = 0i32;
+            for j in 0..layer.n_out {
+                acc = acc.wrapping_add(layer.z(&img.words, j));
+            }
+            acc
+        });
+        add("layer 784→128 (128 neurons)", r);
+    }
+
+    // 4. FPGA simulator, one inference at P=64 (cycle-accurate cost)
+    {
+        let mut acc = Accelerator::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap();
+        let r = bench.run("sim-p64", || acc.run_image(img).digit);
+        add("fpga-sim inference (P=64)", r);
+    }
+
+    // 5. PJRT dispatch (batch-1 artifact)
+    {
+        let engine = Arc::new(Engine::load(&dir).unwrap());
+        engine.prepare("bnn_b1").unwrap();
+        let input = img.to_u32_words();
+        let r = bench.run("pjrt-b1", || engine.run_u32_to_i32("bnn_b1", &input).unwrap());
+        add("pjrt batch-1 round trip", r);
+    }
+
+    // 6. coordinator round trip (queue + batch + native execute)
+    {
+        let coord = Coordinator::start(
+            Arc::new(NativeBackend::new(model.clone())),
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_micros(1),
+            },
+            1,
+        )
+        .unwrap();
+        let r = bench.run("coord-rt", || coord.infer(img.clone()).unwrap().digit);
+        add("coordinator round trip (b=1)", r);
+        coord.shutdown();
+    }
+
+    t.print();
+    println!("\ntargets (EXPERIMENTS.md §Perf): native single ≤ 17.8 µs (the simulated");
+    println!("hardware point — software must not be the bottleneck); coordinator");
+    println!("overhead ≪ backend latency.");
+}

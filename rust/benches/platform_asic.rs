@@ -1,0 +1,48 @@
+//! §4.7.1: FPGA vs ASIC (YodaNN) estimate-based comparison — the paper's
+//! own arithmetic reproduced from the simulator + power model.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use bnn_fpga::estimate::{asic, power};
+use bnn_fpga::sim::{Accelerator, MemStyle, SimConfig};
+use bnn_fpga::util::table::{Align, Table};
+use bnn_fpga::BNN_DIMS;
+
+fn main() {
+    let (model, ds, _) = common::load();
+    let cfg = SimConfig::new(64, MemStyle::Bram);
+    let mut acc = Accelerator::new(&model, cfg).unwrap();
+    let r = acc.run_image(&ds.images[0]);
+    let pow = power::estimate(&BNN_DIMS, &cfg);
+
+    println!("=== §4.7.1: FPGA vs ASIC (YodaNN) ===\n");
+    common::paper_row_note();
+    let mut t = Table::new(&[
+        "Platform", "Latency (ms)", "Power (W)", "µJ/inference", "Unit cost (USD)",
+        "Reconfigurable",
+    ])
+    .align(0, Align::Left);
+    for row in asic::comparison(r.latency_ns / 1e6, pow.total_w) {
+        t.row(vec![
+            row.platform.into(),
+            format!("{:.4}", row.latency_ms),
+            format!("{:.5}", row.power_w),
+            format!("{:.1}", row.uj_per_inference),
+            if row.unit_cost_usd.0 == row.unit_cost_usd.1 {
+                format!("~{:.0}", row.unit_cost_usd.0)
+            } else {
+                format!("{:.0}–{:.0} (+NRE)", row.unit_cost_usd.0, row.unit_cost_usd.1)
+            },
+            if row.reconfigurable { "yes" } else { "no" }.into(),
+        ]);
+    }
+    t.print();
+    println!(
+        "\npaper's numbers: FPGA 0.0178 ms / 0.617 W / ≈11.0 µJ; YodaNN 7.5 ms / 0.00034 W / 2.6 µJ"
+    );
+    println!(
+        "inferred ASIC power from the paper's Eq.: 20.1 GOp/s ÷ 59.2 TOp/s/W = {:.5} W",
+        asic::yodann_inferred_power_w()
+    );
+}

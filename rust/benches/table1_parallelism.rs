@@ -1,0 +1,76 @@
+//! Table 1: latency, speedup, and resource usage for every parallelism ×
+//! memory-style configuration.  Latency/speedup are **executed** on the
+//! cycle-accurate simulator; LUT/FF/BRAM and power come from the estimator
+//! stack (Vivado anchors + activity model — DESIGN.md §Substitutions).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use bnn_fpga::estimate::{power, resources};
+use bnn_fpga::sim::{Accelerator, MemStyle, SimConfig};
+use bnn_fpga::util::table::{fmt_thousands, Align, Table};
+use bnn_fpga::BNN_DIMS;
+
+/// Paper Table 1 for side-by-side printing.
+const PAPER: [(usize, &str, u64, f64); 13] = [
+    (1, "BRAM", 1_096_045, 1.00),
+    (1, "LUT", 1_096_035, 1.00),
+    (4, "BRAM", 274_465, 4.00),
+    (4, "LUT", 274_455, 4.00),
+    (8, "BRAM", 137_645, 7.96),
+    (8, "LUT", 137_635, 7.96),
+    (16, "BRAM", 68_905, 15.90),
+    (16, "LUT", 68_895, 15.90),
+    (32, "BRAM", 34_865, 31.43),
+    (32, "LUT", 34_855, 31.45),
+    (64, "BRAM", 17_845, 61.42),
+    (64, "LUT", 17_835, 61.45),
+    (128, "LUT", 9_865, 111.10),
+];
+
+fn main() {
+    let (model, ds, _) = common::load();
+    let img = &ds.images[0];
+    println!("=== Table 1: latency, speedup, resources vs parallelism × memory style ===\n");
+    common::paper_row_note();
+
+    let base = {
+        let mut acc = Accelerator::new(&model, SimConfig::new(1, MemStyle::Bram)).unwrap();
+        acc.run_image(img).latency_ns
+    };
+
+    let mut t = Table::new(&[
+        "Parallelism", "Latency (ns)", "paper", "Speedup", "paper", "LUTs (%)", "FFs (%)",
+        "BRAMs (%)", "Power (W)", "Dyn/Static", "Memory",
+    ])
+    .align(10, Align::Left);
+
+    for (i, cfg) in SimConfig::table1_rows().into_iter().enumerate() {
+        let mut acc = Accelerator::new(&model, cfg).unwrap();
+        let r = acc.run_image(img);
+        let res = resources::best(&BNN_DIMS, cfg.parallelism, cfg.mem_style);
+        let pow = power::estimate(&BNN_DIMS, &cfg);
+        let (pp, pstyle, pns, pspeed) = PAPER[i];
+        assert_eq!((pp, pstyle), (cfg.parallelism, cfg.mem_style.name()));
+        t.row(vec![
+            cfg.parallelism.to_string(),
+            fmt_thousands(r.latency_ns as u64),
+            fmt_thousands(pns),
+            format!("{:.2}", base / r.latency_ns),
+            format!("{pspeed:.2}"),
+            format!("{:.2}", res.lut_pct()),
+            format!("{:.2}", res.ff_pct()),
+            format!("{:.2}", res.bram_pct()),
+            format!("{:.3}", pow.total_w),
+            format!("{:.0}/{:.0}", pow.dynamic_pct(), pow.static_pct()),
+            cfg.mem_style.name().into(),
+        ]);
+    }
+    t.print();
+
+    println!(
+        "\n§4.2.1: BRAM-based design unsynthesizable beyond P=64 (demand {} blocks > 132 usable \
+         with no LUT fallback); 128 is LUT-only; >128 fails — reproduced by resources::estimate.",
+        resources::bram_demand(&BNN_DIMS, 128)
+    );
+}

@@ -1,0 +1,105 @@
+//! Table 4 + Fig. 1 (§4.6): BNN vs CNN CPU inference latency over 100
+//! batch-1 runs, measured live through the AOT PJRT artifacts; plus the
+//! model-size and training-time comparison from the build log.
+//!
+//! Output: the Table 4 stats, an ASCII rendering of Fig. 1, and
+//! `bench_out/fig1_latency.csv` for external plotting.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use bnn_fpga::runtime::Engine;
+use bnn_fpga::util::bench::Bench;
+use bnn_fpga::util::plot;
+use bnn_fpga::util::stats::Summary;
+use bnn_fpga::util::table::{Align, Table};
+
+fn main() {
+    let (_model, ds, dir) = common::load();
+    let engine = Arc::new(Engine::load(&dir).unwrap());
+    engine.prepare("bnn_b1").unwrap();
+    engine.prepare("cnn_b1").unwrap();
+
+    // same input for both models, like the paper's fixed test image
+    let bnn_input = ds.images[0].to_u32_words();
+    let (raw, _, _) =
+        bnn_fpga::mem::read_idx_images(&dir.join("data/t10k-images-idx3-ubyte")).unwrap();
+    let cnn_input: Vec<f32> = raw[0].iter().map(|&p| p as f32 / 255.0).collect();
+
+    let bench = Bench::default();
+    let runs = 100;
+    println!("=== Table 4 + Fig. 1: BNN vs CNN CPU latency, {runs} batch-1 runs ===\n");
+    common::paper_row_note();
+
+    let bnn_series: Vec<f64> = bench
+        .run_series(runs, || engine.run_u32_to_i32("bnn_b1", &bnn_input).unwrap())
+        .iter()
+        .map(|ns| ns / 1e6)
+        .collect();
+    let cnn_series: Vec<f64> = bench
+        .run_series(runs, || engine.run_f32_to_f32("cnn_b1", &cnn_input).unwrap())
+        .iter()
+        .map(|ns| ns / 1e6)
+        .collect();
+
+    let b = Summary::of(&bnn_series);
+    let c = Summary::of(&cnn_series);
+    let mut t = Table::new(&[
+        "Model", "Mean (ms)", "Min (ms)", "Max (ms)", "Std Dev (ms)", "paper mean",
+    ])
+    .align(0, Align::Left);
+    t.row(vec![
+        "BNN".into(),
+        format!("{:.4}", b.mean),
+        format!("{:.4}", b.min),
+        format!("{:.4}", b.max),
+        format!("{:.4}", b.std_dev),
+        "0.176".into(),
+    ]);
+    t.row(vec![
+        "CNN".into(),
+        format!("{:.4}", c.mean),
+        format!("{:.4}", c.min),
+        format!("{:.4}", c.max),
+        format!("{:.4}", c.std_dev),
+        "0.213".into(),
+    ]);
+    t.print();
+    println!(
+        "\nBNN is {:.0}% faster than CNN (paper: ≈17% on TF/Keras CPU)",
+        (c.mean / b.mean - 1.0) * 100.0
+    );
+
+    println!("\nFig. 1 — run-by-run latency (ms):\n");
+    print!(
+        "{}",
+        plot::ascii_plot(&[("BNN", &bnn_series), ("CNN", &cnn_series)], 80, 16)
+    );
+    let csv = plot::to_csv(&[("bnn_ms", &bnn_series), ("cnn_ms", &cnn_series)]);
+    let out = common::out_dir().join("fig1_latency.csv");
+    std::fs::write(&out, csv).unwrap();
+    println!("\nseries written to {}", out.display());
+
+    // §4.6 model size + training time from the build log
+    if let Ok(log) = std::fs::read_to_string(dir.join("train_log.json")) {
+        let j = bnn_fpga::util::json::Json::parse(&log).unwrap();
+        let get = |m: &str, k: &str| j.get(m).unwrap().get(k).unwrap().as_f64().unwrap();
+        let bnn_sz = std::fs::metadata(dir.join("params_bnn.npz")).map(|m| m.len()).unwrap_or(0);
+        let cnn_sz = std::fs::metadata(dir.join("params_cnn.npz")).map(|m| m.len()).unwrap_or(0);
+        println!("\n§4.6 model comparison:");
+        println!(
+            "  BNN: {:.2}% accuracy, {:.1}s training, {:.2} MB exported   (paper: 87.97%, 15s, 1.4MB)",
+            get("bnn", "accuracy") * 100.0,
+            get("bnn", "train_seconds"),
+            bnn_sz as f64 / 1e6
+        );
+        println!(
+            "  CNN: {:.2}% accuracy, {:.1}s training, {:.2} MB exported   (paper: 99.31%, 71s, 2.7MB)",
+            get("cnn", "accuracy") * 100.0,
+            get("cnn", "train_seconds"),
+            cnn_sz as f64 / 1e6
+        );
+    }
+}

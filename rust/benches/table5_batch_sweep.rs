@@ -1,0 +1,87 @@
+//! Table 5 (§4.7.2): inference latency vs batch size on CPU and GPU.
+//!
+//! The CPU column is **measured** by executing the batched AOT artifacts on
+//! the PJRT CPU client (the paper used TF on a Colab Xeon); the GPU column
+//! is the calibrated T4 batch-scaling model (no GPU in this environment —
+//! DESIGN.md §Substitutions).  The FPGA design point is appended for the
+//! §4.7.2 narrative.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use bnn_fpga::estimate::gpu_model::GpuModel;
+use bnn_fpga::runtime::Engine;
+use bnn_fpga::sim::{Accelerator, MemStyle, SimConfig};
+use bnn_fpga::util::bench::Bench;
+use bnn_fpga::util::stats::Summary;
+use bnn_fpga::util::table::{Align, Table};
+
+const BATCHES: [usize; 5] = [1, 10, 100, 1000, 10000];
+
+/// Paper Table 5 means (ms): (cpu, gpu) per batch.
+const PAPER: [(f64, f64); 5] = [(1.60, 0.82), (1.01, 0.87), (1.75, 1.22), (6.93, 0.86), (63.02, 1.58)];
+
+fn main() {
+    let (model, ds, dir) = common::load();
+    let engine = Arc::new(Engine::load(&dir).unwrap());
+    let gpu = GpuModel::default();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let runs = if quick { 10 } else { 30 };
+
+    println!("=== Table 5: inference latency vs batch size (CPU measured, GPU modeled) ===\n");
+    common::paper_row_note();
+    let mut t = Table::new(&[
+        "Batch", "Device", "Mean (ms)", "Per Image (ms)", "Std Dev (ms)", "paper mean",
+    ])
+    .align(1, Align::Left);
+
+    let bench = Bench::quick();
+    for (bi, &batch) in BATCHES.iter().enumerate() {
+        // CPU: real execution through the batch-matched artifact
+        let name = format!("bnn_b{batch}");
+        engine.prepare(&name).unwrap();
+        let mut input = Vec::with_capacity(batch * 25);
+        for i in 0..batch {
+            input.extend(ds.images[i % ds.len()].to_u32_words());
+        }
+        let series: Vec<f64> = bench
+            .run_series(runs, || engine.run_u32_to_i32(&name, &input).unwrap())
+            .iter()
+            .map(|ns| ns / 1e6)
+            .collect();
+        let s = Summary::of(&series);
+        t.row(vec![
+            batch.to_string(),
+            "CPU".into(),
+            format!("{:.3}", s.mean),
+            format!("{:.5}", s.mean / batch as f64),
+            format!("{:.3}", s.std_dev),
+            format!("{:.2}", PAPER[bi].0),
+        ]);
+
+        // GPU: calibrated model with deterministic jitter
+        let g = Summary::of(&gpu.sample_series(batch, runs, 99));
+        t.row(vec![
+            batch.to_string(),
+            "GPU*".into(),
+            format!("{:.3}", g.mean),
+            format!("{:.5}", g.mean / batch as f64),
+            format!("{:.3}", g.std_dev),
+            format!("{:.2}", PAPER[bi].1),
+        ]);
+    }
+    t.print();
+    println!("\n* GPU column is the calibrated T4 model (no GPU in this environment).");
+
+    // FPGA design point for the §4.7.2 comparison sentence
+    let mut acc = Accelerator::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap();
+    let fpga = acc.run_image(&ds.images[0]);
+    println!(
+        "\nFPGA (64x BRAM): {:.1} µs/image at 0.6 W — beats CPU at batch 1 \
+         ({:.1}x), loses to GPU only at large batch (paper's conclusion).",
+        fpga.latency_ns / 1e3,
+        PAPER[0].0 * 1e3 / (fpga.latency_ns / 1e3)
+    );
+}

@@ -1,0 +1,34 @@
+//! Bit-packed XNOR-popcount BNN inference (the paper's Algorithm 1 in
+//! software — the native backend and the reference the simulator and PJRT
+//! paths are checked against).
+
+pub mod model;
+pub mod packing;
+
+pub use model::{BinaryDenseLayer, BnnModel};
+pub use packing::{pack_bits_u32, pack_bits_u64, unpack_bits_u64, words_u32, words_u64, Packed};
+
+/// Argmax with lowest-index tie-break — exactly the FSM's iterative
+/// comparison (§3.4: "identifies the class index with the highest output
+/// score through iterative comparison", strict `>` keeps the first max).
+pub fn argmax_i32(scores: &[i32]) -> usize {
+    let mut best = 0usize;
+    for (i, &s) in scores.iter().enumerate().skip(1) {
+        if s > scores[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_ties_prefer_lowest_index() {
+        assert_eq!(argmax_i32(&[1, 3, 3, 2]), 1);
+        assert_eq!(argmax_i32(&[5]), 0);
+        assert_eq!(argmax_i32(&[-4, -2, -2]), 1);
+    }
+}

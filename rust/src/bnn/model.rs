@@ -1,0 +1,353 @@
+//! The BNN model: layers of packed weight rows + folded thresholds.
+//!
+//! This is the native software implementation of the paper's Algorithm 1 —
+//! the semantics reference for the FPGA simulator (`sim`) and the check
+//! against the PJRT artifacts (`runtime`).  The hot path
+//! ([`BnnModel::logits_into`]) is allocation-free.
+
+use anyhow::{bail, Result};
+
+use super::packing;
+
+/// One binary dense layer: `n_out` packed weight rows (neuron-major — the
+/// paper's transposed ROM layout) and, for hidden layers, folded integer
+/// thresholds.
+#[derive(Clone, Debug)]
+pub struct BinaryDenseLayer {
+    pub n_in: usize,
+    pub n_out: usize,
+    /// Row-major: `n_out` rows × `words_per_row` u64 words.
+    pub weights: Vec<u64>,
+    pub words_per_row: usize,
+    /// `Some` for hidden layers (activation = z ≥ θ), `None` for the output
+    /// layer (raw sums retained, §3.4).
+    pub thresholds: Option<Vec<i32>>,
+}
+
+impl BinaryDenseLayer {
+    /// Build from per-row u32 interchange words (weights.json layout).
+    pub fn from_u32_rows(
+        n_in: usize,
+        rows: &[Vec<u32>],
+        thresholds: Option<Vec<i32>>,
+    ) -> Result<Self> {
+        let words_per_row = packing::words_u64(n_in);
+        let mut weights = Vec::with_capacity(rows.len() * words_per_row);
+        for row in rows {
+            if row.len() != packing::words_u32(n_in) {
+                bail!(
+                    "weight row has {} u32 words, expected {}",
+                    row.len(),
+                    packing::words_u32(n_in)
+                );
+            }
+            weights.extend(packing::u32_words_to_u64(row, n_in));
+        }
+        if let Some(t) = &thresholds {
+            if t.len() != rows.len() {
+                bail!("{} thresholds for {} neurons", t.len(), rows.len());
+            }
+        }
+        Ok(Self {
+            n_in,
+            n_out: rows.len(),
+            weights,
+            words_per_row,
+            thresholds,
+        })
+    }
+
+    /// Weight row for neuron `j` as a word slice.
+    #[inline]
+    pub fn row(&self, j: usize) -> &[u64] {
+        &self.weights[j * self.words_per_row..(j + 1) * self.words_per_row]
+    }
+
+    /// Pre-activation sum for neuron `j`: `z = n − 2·popcount(x ⊕ w_j)`.
+    #[inline]
+    pub fn z(&self, x_words: &[u64], j: usize) -> i32 {
+        packing::xnor_popcount_z(x_words, self.row(j), self.n_in)
+    }
+}
+
+/// A full network: hidden layers (thresholded) then one logits layer.
+#[derive(Clone, Debug)]
+pub struct BnnModel {
+    pub layers: Vec<BinaryDenseLayer>,
+}
+
+/// Reusable per-inference scratch to keep the hot path allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct Scratch {
+    a: Vec<u64>,
+    b: Vec<u64>,
+}
+
+impl BnnModel {
+    /// Validate layer chaining (layer i's n_out feeds layer i+1's n_in, all
+    /// hidden layers thresholded, output layer not).
+    pub fn validate(&self) -> Result<()> {
+        if self.layers.is_empty() {
+            bail!("empty model");
+        }
+        for (i, pair) in self.layers.windows(2).enumerate() {
+            if pair[0].n_out != pair[1].n_in {
+                bail!(
+                    "layer {} outputs {} but layer {} expects {}",
+                    i,
+                    pair[0].n_out,
+                    i + 1,
+                    pair[1].n_in
+                );
+            }
+            if pair[0].thresholds.is_none() {
+                bail!("hidden layer {i} missing thresholds");
+            }
+        }
+        if self.layers.last().unwrap().thresholds.is_some() {
+            bail!("output layer must not have thresholds (raw sums, §3.4)");
+        }
+        Ok(())
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.layers[0].n_in
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.layers.last().unwrap().n_out
+    }
+
+    pub fn input_words(&self) -> usize {
+        packing::words_u64(self.n_in())
+    }
+
+    /// Widest packed activation buffer needed between layers (incl. input).
+    #[inline]
+    pub fn max_act_words(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| packing::words_u64(l.n_out).max(packing::words_u64(l.n_in)))
+            .max()
+            .unwrap()
+    }
+
+    /// Full forward pass: packed input words → integer logits (allocates).
+    pub fn logits(&self, x_words: &[u64]) -> Vec<i32> {
+        let mut scratch = Scratch::default();
+        let mut out = vec![0i32; self.n_classes()];
+        self.logits_into(x_words, &mut scratch, &mut out);
+        out
+    }
+
+    /// Allocation-free forward pass (steady-state serve loop).
+    ///
+    /// Perf note (§Perf iteration 2): `max_words` is a per-model constant;
+    /// deriving it per call cost an iterator walk per inference in the
+    /// batch loop — callers reuse one `Scratch`, so `resize` is a no-op
+    /// after the first call.
+    pub fn logits_into(&self, x_words: &[u64], scratch: &mut Scratch, out: &mut [i32]) {
+        debug_assert_eq!(x_words.len(), self.input_words());
+        debug_assert_eq!(out.len(), self.n_classes());
+        let max_words = self.max_act_words();
+        scratch.a.clear();
+        scratch.a.extend_from_slice(x_words);
+        scratch.b.resize(max_words, 0);
+
+        for layer in &self.layers {
+            match &layer.thresholds {
+                Some(thr) => {
+                    // hidden layer: threshold and re-pack activations
+                    let out_words = packing::words_u64(layer.n_out);
+                    scratch.b[..out_words].fill(0);
+                    for j in 0..layer.n_out {
+                        let z = layer.z(&scratch.a, j);
+                        if z >= thr[j] {
+                            scratch.b[j / 64] |= 1u64 << (j % 64);
+                        }
+                    }
+                    scratch.a.clear();
+                    scratch.a.extend_from_slice(&scratch.b[..out_words]);
+                }
+                None => {
+                    for (j, o) in out.iter_mut().enumerate() {
+                        *o = layer.z(&scratch.a, j);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Predicted digit for one packed input.
+    pub fn predict(&self, x_words: &[u64]) -> usize {
+        super::argmax_i32(&self.logits(x_words))
+    }
+
+    /// Batch inference: `inputs` is `batch × input_words` row-major; returns
+    /// `batch × n_classes` logits row-major.
+    pub fn logits_batch(&self, inputs: &[u64], batch: usize) -> Vec<i32> {
+        let iw = self.input_words();
+        assert_eq!(inputs.len(), batch * iw, "batch input length");
+        let mut scratch = Scratch::default();
+        let nc = self.n_classes();
+        let mut out = vec![0i32; batch * nc];
+        for b in 0..batch {
+            self.logits_into(
+                &inputs[b * iw..(b + 1) * iw],
+                &mut scratch,
+                &mut out[b * nc..(b + 1) * nc],
+            );
+        }
+        out
+    }
+}
+
+/// Build a model directly from ±1 float-sign rows (tests/tools).
+pub fn model_from_sign_rows(
+    layers: Vec<(Vec<Vec<i8>>, Option<Vec<i32>>)>, // (rows of ±1, thresholds)
+) -> Result<BnnModel> {
+    let mut out = Vec::new();
+    for (rows, thr) in layers {
+        let n_in = rows[0].len();
+        let rows_u32: Vec<Vec<u32>> = rows
+            .iter()
+            .map(|r| {
+                let bits: Vec<u8> = r.iter().map(|&v| u8::from(v >= 0)).collect();
+                packing::pack_bits_u32(&bits)
+            })
+            .collect();
+        out.push(BinaryDenseLayer::from_u32_rows(n_in, &rows_u32, thr)?);
+    }
+    let model = BnnModel { layers: out };
+    model.validate()?;
+    Ok(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    /// Naive float reference implementing Algorithm 1 literally.
+    fn naive_forward(
+        layers: &[(Vec<Vec<i8>>, Option<Vec<i32>>)],
+        input_bits: &[u8],
+    ) -> Vec<i32> {
+        let mut a: Vec<i32> = input_bits.iter().map(|&b| if b == 1 { 1 } else { -1 }).collect();
+        let mut logits = Vec::new();
+        for (rows, thr) in layers {
+            let z: Vec<i32> = rows
+                .iter()
+                .map(|row| row.iter().zip(&a).map(|(&w, &x)| w as i32 * x).sum())
+                .collect();
+            match thr {
+                Some(t) => {
+                    a = z
+                        .iter()
+                        .zip(t)
+                        .map(|(&z, &t)| if z >= t { 1 } else { -1 })
+                        .collect();
+                }
+                None => logits = z,
+            }
+        }
+        logits
+    }
+
+    fn random_net(rng: &mut Xoshiro256, dims: &[usize]) -> Vec<(Vec<Vec<i8>>, Option<Vec<i32>>)> {
+        let mut layers = Vec::new();
+        for (li, w) in dims.windows(2).enumerate() {
+            let (n_in, n_out) = (w[0], w[1]);
+            let rows: Vec<Vec<i8>> = (0..n_out)
+                .map(|_| (0..n_in).map(|_| if rng.bool() { 1 } else { -1 }).collect())
+                .collect();
+            let thr = if li + 2 < dims.len() {
+                Some(
+                    (0..n_out)
+                        .map(|_| rng.range_i64(-(n_in as i64), n_in as i64) as i32)
+                        .collect(),
+                )
+            } else {
+                None
+            };
+            layers.push((rows, thr));
+        }
+        layers
+    }
+
+    #[test]
+    fn model_matches_naive_reference() {
+        let mut rng = Xoshiro256::new(2025);
+        for _ in 0..20 {
+            let dims = [784usize, 128, 64, 10];
+            let spec = random_net(&mut rng, &dims);
+            let model = model_from_sign_rows(spec.clone()).unwrap();
+            let bits: Vec<u8> = (0..784).map(|_| rng.bool() as u8).collect();
+            let x = packing::pack_bits_u64(&bits);
+            assert_eq!(model.logits(&x), naive_forward(&spec, &bits));
+        }
+    }
+
+    #[test]
+    fn odd_dims_work() {
+        // widths not multiples of 64 or 32 must still chain correctly
+        let mut rng = Xoshiro256::new(7);
+        let dims = [37usize, 19, 11, 3];
+        let spec = random_net(&mut rng, &dims);
+        let model = model_from_sign_rows(spec.clone()).unwrap();
+        let bits: Vec<u8> = (0..37).map(|_| rng.bool() as u8).collect();
+        let x = packing::pack_bits_u64(&bits);
+        assert_eq!(model.logits(&x), naive_forward(&spec, &bits));
+    }
+
+    #[test]
+    fn batch_equals_sequential() {
+        let mut rng = Xoshiro256::new(3);
+        let spec = random_net(&mut rng, &[784, 128, 64, 10]);
+        let model = model_from_sign_rows(spec).unwrap();
+        let iw = model.input_words();
+        let batch = 5;
+        let mut inputs = Vec::new();
+        let mut expected = Vec::new();
+        for _ in 0..batch {
+            let bits: Vec<u8> = (0..784).map(|_| rng.bool() as u8).collect();
+            let x = packing::pack_bits_u64(&bits);
+            expected.extend(model.logits(&x));
+            inputs.extend(x);
+        }
+        assert_eq!(inputs.len(), batch * iw);
+        assert_eq!(model.logits_batch(&inputs, batch), expected);
+    }
+
+    #[test]
+    fn validate_catches_bad_chaining() {
+        let mut rng = Xoshiro256::new(4);
+        let mut spec = random_net(&mut rng, &[784, 128, 64, 10]);
+        spec[1].0.pop(); // layer 1 now outputs 63 ≠ 64
+        assert!(model_from_sign_rows(spec).is_err());
+    }
+
+    #[test]
+    fn validate_requires_raw_output_layer() {
+        let mut rng = Xoshiro256::new(5);
+        let mut spec = random_net(&mut rng, &[16, 8, 4]);
+        spec[1].1 = Some(vec![0; 4]); // output layer must not threshold
+        assert!(model_from_sign_rows(spec).is_err());
+    }
+
+    #[test]
+    fn logits_into_is_deterministic_and_reusable() {
+        let mut rng = Xoshiro256::new(6);
+        let spec = random_net(&mut rng, &[784, 128, 64, 10]);
+        let model = model_from_sign_rows(spec).unwrap();
+        let bits: Vec<u8> = (0..784).map(|_| rng.bool() as u8).collect();
+        let x = packing::pack_bits_u64(&bits);
+        let mut scratch = Scratch::default();
+        let mut out1 = vec![0i32; 10];
+        let mut out2 = vec![0i32; 10];
+        model.logits_into(&x, &mut scratch, &mut out1);
+        model.logits_into(&x, &mut scratch, &mut out2); // reused scratch
+        assert_eq!(out1, out2);
+        assert_eq!(out1, model.logits(&x));
+    }
+}

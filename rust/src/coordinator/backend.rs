@@ -1,0 +1,258 @@
+//! Pluggable inference backends.
+//!
+//! All three implement the same batch contract and are asserted
+//! prediction-equivalent in the integration suite — the coordinator can
+//! route to any of them interchangeably:
+//!
+//! * [`NativeBackend`] — the bit-packed Rust hot path (lowest latency);
+//! * [`PjrtBackend`] — the AOT-compiled JAX/Pallas artifacts via PJRT
+//!   (the paper's "CPU" platform in Table 5);
+//! * [`SimBackend`] — the cycle-accurate FPGA simulator (the paper's
+//!   hardware platform; also reports simulated-hardware latency).
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::bnn::packing::Packed;
+use crate::bnn::{argmax_i32, BnnModel};
+use crate::runtime::Engine;
+use crate::sim::{Accelerator, SimConfig};
+
+/// A batch inference engine: packed images in, integer logits out.
+pub trait InferBackend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Largest batch the backend can execute in one call.
+    fn max_batch(&self) -> usize;
+
+    /// Classify a batch; returns one logits vector per input.
+    fn infer_batch(&self, images: &[Packed]) -> Result<Vec<Vec<i32>>>;
+
+    /// Convenience single-image predict.
+    fn predict(&self, image: &Packed) -> Result<u8> {
+        let logits = self.infer_batch(std::slice::from_ref(image))?;
+        Ok(argmax_i32(&logits[0]) as u8)
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Native bit-packed software BNN.
+pub struct NativeBackend {
+    model: BnnModel,
+}
+
+impl NativeBackend {
+    pub fn new(model: BnnModel) -> Self {
+        Self { model }
+    }
+
+    pub fn model(&self) -> &BnnModel {
+        &self.model
+    }
+}
+
+impl InferBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn max_batch(&self) -> usize {
+        usize::MAX
+    }
+
+    fn infer_batch(&self, images: &[Packed]) -> Result<Vec<Vec<i32>>> {
+        let mut scratch = crate::bnn::model::Scratch::default();
+        let nc = self.model.n_classes();
+        let mut out = Vec::with_capacity(images.len());
+        for img in images {
+            let mut logits = vec![0i32; nc];
+            self.model.logits_into(&img.words, &mut scratch, &mut logits);
+            out.push(logits);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// PJRT backend over the AOT artifact ladder: picks the smallest compiled
+/// batch ≥ the request batch and zero-pads (padding rows are discarded).
+pub struct PjrtBackend {
+    engine: Arc<Engine>,
+    ladder: Vec<usize>,
+    input_words: usize,
+    n_classes: usize,
+}
+
+impl PjrtBackend {
+    pub fn new(engine: Arc<Engine>) -> Result<Self> {
+        let ladder = engine.manifest.batch_ladder("bnn");
+        anyhow::ensure!(!ladder.is_empty(), "no bnn artifacts in manifest");
+        let name = engine
+            .manifest
+            .name_for("bnn", ladder[0])
+            .expect("ladder entry")
+            .to_string();
+        let spec = engine.manifest.get(&name)?.clone();
+        Ok(Self {
+            input_words: spec.input.shape[1],
+            n_classes: spec.output.shape[1],
+            engine,
+            ladder,
+        })
+    }
+
+    /// Smallest compiled batch ≥ n (or the max available).
+    pub fn pick_batch(&self, n: usize) -> usize {
+        *self
+            .ladder
+            .iter()
+            .find(|&&b| b >= n)
+            .unwrap_or(self.ladder.last().unwrap())
+    }
+}
+
+impl InferBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn max_batch(&self) -> usize {
+        *self.ladder.last().unwrap()
+    }
+
+    fn infer_batch(&self, images: &[Packed]) -> Result<Vec<Vec<i32>>> {
+        let mut out = Vec::with_capacity(images.len());
+        let mut start = 0;
+        while start < images.len() {
+            let remaining = images.len() - start;
+            let exec_batch = self.pick_batch(remaining);
+            let chunk = remaining.min(exec_batch);
+            // flatten + zero-pad to the artifact's fixed shape
+            let mut input = vec![0u32; exec_batch * self.input_words];
+            for (i, img) in images[start..start + chunk].iter().enumerate() {
+                let w32 = img.to_u32_words();
+                input[i * self.input_words..i * self.input_words + w32.len()]
+                    .copy_from_slice(&w32);
+            }
+            let name = self
+                .engine
+                .manifest
+                .name_for("bnn", exec_batch)
+                .expect("ladder batch has artifact")
+                .to_string();
+            let logits = self.engine.run_u32_to_i32(&name, &input)?;
+            for i in 0..chunk {
+                out.push(logits[i * self.n_classes..(i + 1) * self.n_classes].to_vec());
+            }
+            start += chunk;
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// FPGA-simulator backend: single-image hardware, batches run sequentially
+/// (exactly what the physical accelerator would do).
+pub struct SimBackend {
+    acc: Mutex<Accelerator>,
+    /// Simulated-hardware nanoseconds accumulated (distinct from wall time).
+    pub simulated_ns: Mutex<f64>,
+}
+
+impl SimBackend {
+    pub fn new(model: &BnnModel, cfg: SimConfig) -> Result<Self> {
+        Ok(Self {
+            acc: Mutex::new(Accelerator::new(model, cfg)?),
+            simulated_ns: Mutex::new(0.0),
+        })
+    }
+}
+
+impl InferBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "fpga-sim"
+    }
+
+    fn max_batch(&self) -> usize {
+        1
+    }
+
+    fn infer_batch(&self, images: &[Packed]) -> Result<Vec<Vec<i32>>> {
+        let mut acc = self.acc.lock().unwrap();
+        let mut sim_ns = 0.0;
+        let out = images
+            .iter()
+            .map(|img| {
+                let r = acc.run_image(img);
+                sim_ns += r.latency_ns;
+                r.scores
+            })
+            .collect();
+        *self.simulated_ns.lock().unwrap() += sim_ns;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::model::model_from_sign_rows;
+    use crate::bnn::packing::pack_bits_u64;
+    use crate::sim::MemStyle;
+    use crate::util::prng::Xoshiro256;
+
+    fn tiny_model(seed: u64) -> BnnModel {
+        let mut rng = Xoshiro256::new(seed);
+        let dims = [784usize, 128, 64, 10];
+        let mut spec = Vec::new();
+        for (li, w) in dims.windows(2).enumerate() {
+            let rows: Vec<Vec<i8>> = (0..w[1])
+                .map(|_| (0..w[0]).map(|_| if rng.bool() { 1 } else { -1 }).collect())
+                .collect();
+            let thr = (li + 2 < dims.len()).then(|| vec![0i32; w[1]]);
+            spec.push((rows, thr));
+        }
+        model_from_sign_rows(spec).unwrap()
+    }
+
+    fn images(n: usize, seed: u64) -> Vec<Packed> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n)
+            .map(|_| {
+                let bits: Vec<u8> = (0..784).map(|_| rng.bool() as u8).collect();
+                Packed {
+                    words: pack_bits_u64(&bits),
+                    n_bits: 784,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn native_and_sim_agree() {
+        let model = tiny_model(11);
+        let native = NativeBackend::new(model.clone());
+        let sim = SimBackend::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap();
+        let imgs = images(5, 12);
+        let a = native.infer_batch(&imgs).unwrap();
+        let b = sim.infer_batch(&imgs).unwrap();
+        assert_eq!(a, b);
+        assert!(*sim.simulated_ns.lock().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn predict_is_argmax_of_batch1() {
+        let model = tiny_model(13);
+        let native = NativeBackend::new(model.clone());
+        let imgs = images(1, 14);
+        let logits = native.infer_batch(&imgs).unwrap();
+        assert_eq!(
+            native.predict(&imgs[0]).unwrap() as usize,
+            argmax_i32(&logits[0])
+        );
+    }
+}

@@ -1,0 +1,190 @@
+//! Dynamic batching: accumulate queued requests until either the batch is
+//! full or the oldest request has waited `max_wait` (the classic
+//! latency/throughput knob).
+//!
+//! The drain policy itself is pure and synchronous ([`drain_batch`]) so its
+//! invariants are property-testable without threads; the worker loop in
+//! `server.rs` wires it to a channel.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::InferRequest;
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Hard cap per executed batch (≤ backend max_batch).
+    pub max_batch: usize,
+    /// Deadline: a request never waits in the queue longer than this
+    /// before a (possibly partial) batch is launched.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+        }
+    }
+}
+
+impl BatcherConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.max_batch >= 1, "max_batch must be ≥ 1");
+        Ok(())
+    }
+}
+
+/// Decision produced by [`drain_batch`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum DrainDecision {
+    /// Launch these requests now (FIFO prefix of the queue).
+    Launch(usize),
+    /// Wait up to this long for more work before re-evaluating.
+    Wait(Duration),
+    /// Queue empty.
+    Idle,
+}
+
+/// Pure batching decision over the queue state at time `now`.
+///
+/// Invariants (property-tested below):
+/// * never launches more than `max_batch`;
+/// * launches a full batch immediately;
+/// * launches a partial batch iff the oldest request has aged out;
+/// * otherwise returns the exact remaining wait for the oldest request.
+pub fn decide(
+    queue_len: usize,
+    oldest_enqueued_at: Option<Instant>,
+    cfg: &BatcherConfig,
+    now: Instant,
+) -> DrainDecision {
+    if queue_len == 0 {
+        return DrainDecision::Idle;
+    }
+    if queue_len >= cfg.max_batch {
+        return DrainDecision::Launch(cfg.max_batch);
+    }
+    let oldest = oldest_enqueued_at.expect("non-empty queue has an oldest entry");
+    let age = now.saturating_duration_since(oldest);
+    if age >= cfg.max_wait {
+        DrainDecision::Launch(queue_len)
+    } else {
+        DrainDecision::Wait(cfg.max_wait - age)
+    }
+}
+
+/// Convenience over a request queue.
+pub fn drain_batch(
+    queue: &VecDeque<InferRequest>,
+    cfg: &BatcherConfig,
+    now: Instant,
+) -> DrainDecision {
+    decide(queue.len(), queue.front().map(|r| r.enqueued_at), cfg, now)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::packing::{pack_bits_u64, Packed};
+    use crate::util::prng::Xoshiro256;
+
+    fn req(id: u64, enqueued_at: Instant) -> InferRequest {
+        InferRequest {
+            id,
+            image: Packed {
+                words: pack_bits_u64(&[0u8; 16]),
+                n_bits: 16,
+            },
+            enqueued_at,
+        }
+    }
+
+    fn cfg(max_batch: usize, max_wait_us: u64) -> BatcherConfig {
+        BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_micros(max_wait_us),
+        }
+    }
+
+    #[test]
+    fn empty_queue_is_idle() {
+        let q = VecDeque::new();
+        assert_eq!(drain_batch(&q, &cfg(8, 100), Instant::now()), DrainDecision::Idle);
+    }
+
+    #[test]
+    fn full_batch_launches_immediately() {
+        let now = Instant::now();
+        let q: VecDeque<_> = (0..8).map(|i| req(i, now)).collect();
+        assert_eq!(drain_batch(&q, &cfg(8, 1_000_000), now), DrainDecision::Launch(8));
+        // over-full queue still capped at max_batch
+        let q: VecDeque<_> = (0..20).map(|i| req(i, now)).collect();
+        assert_eq!(drain_batch(&q, &cfg(8, 1_000_000), now), DrainDecision::Launch(8));
+    }
+
+    #[test]
+    fn partial_batch_waits_then_ages_out() {
+        let t0 = Instant::now();
+        let q: VecDeque<_> = (0..3).map(|i| req(i, t0)).collect();
+        let c = cfg(8, 100);
+        match drain_batch(&q, &c, t0) {
+            DrainDecision::Wait(d) => assert!(d <= Duration::from_micros(100)),
+            other => panic!("expected Wait, got {other:?}"),
+        }
+        // after the deadline the partial batch launches
+        let later = t0 + Duration::from_micros(150);
+        assert_eq!(drain_batch(&q, &c, later), DrainDecision::Launch(3));
+    }
+
+    #[test]
+    fn wait_is_remaining_time_for_oldest() {
+        let t0 = Instant::now();
+        let q: VecDeque<_> = vec![req(0, t0)].into();
+        let c = cfg(8, 1000);
+        let now = t0 + Duration::from_micros(400);
+        match drain_batch(&q, &c, now) {
+            DrainDecision::Wait(d) => {
+                assert!((d.as_micros() as i64 - 600).abs() <= 1, "{d:?}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn property_never_exceeds_max_batch_and_launch_is_prefix() {
+        // randomized queue states: the decision must never launch more than
+        // max_batch, never launch 0, and Launch(n) must imply n ≤ queue.len()
+        let mut rng = Xoshiro256::new(2025);
+        for case in 0..500 {
+            let t0 = Instant::now();
+            let max_batch = 1 + rng.below(16) as usize;
+            let max_wait_us = rng.below(500);
+            let qlen = rng.below(40) as usize;
+            let q: VecDeque<_> = (0..qlen)
+                .map(|i| {
+                    let age = Duration::from_micros(rng.below(1000));
+                    req(i as u64, t0.checked_sub(age).unwrap_or(t0))
+                })
+                .collect();
+            let c = cfg(max_batch, max_wait_us);
+            match drain_batch(&q, &c, t0) {
+                DrainDecision::Launch(n) => {
+                    assert!(n >= 1 && n <= max_batch && n <= q.len(), "case {case}");
+                    // launch must be justified: full batch or aged oldest
+                    let oldest_age = t0.saturating_duration_since(q.front().unwrap().enqueued_at);
+                    assert!(
+                        q.len() >= max_batch || oldest_age >= c.max_wait,
+                        "case {case}: unjustified launch"
+                    );
+                }
+                DrainDecision::Wait(d) => {
+                    assert!(!q.is_empty() && d <= c.max_wait, "case {case}");
+                }
+                DrainDecision::Idle => assert!(q.is_empty(), "case {case}"),
+            }
+        }
+    }
+}

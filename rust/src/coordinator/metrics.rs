@@ -1,0 +1,99 @@
+//! Serving metrics: counters + latency histograms, cheaply shareable.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::LatencyHistogram;
+
+/// Coordinator-wide metrics.  Counters are lock-free; histograms take a
+/// short mutex on record (off the per-bit hot path — one lock per batch).
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    latency: Mutex<LatencyHistogram>,
+    queue_wait: Mutex<LatencyHistogram>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&self, batch_size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests
+            .fetch_add(batch_size as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, ns: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latency.lock().unwrap().record(ns);
+    }
+
+    pub fn record_queue_wait(&self, ns: u64) {
+        self.queue_wait.lock().unwrap().record(ns);
+    }
+
+    pub fn latency_snapshot(&self) -> LatencyHistogram {
+        self.latency.lock().unwrap().clone()
+    }
+
+    pub fn queue_wait_snapshot(&self) -> LatencyHistogram {
+        self.queue_wait.lock().unwrap().clone()
+    }
+
+    /// Mean requests per executed batch — the batching efficiency signal.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn summary_line(&self) -> String {
+        let lat = self.latency_snapshot();
+        format!(
+            "submitted={} completed={} rejected={} batches={} mean_batch={:.2} \
+             p50={}µs p99={}µs max={}µs",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            lat.percentile_ns(50.0) / 1000,
+            lat.percentile_ns(99.0) / 1000,
+            lat.max_ns() / 1000,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_efficiency() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(8);
+        assert!((m.mean_batch_size() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_flow() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(2, Ordering::Relaxed);
+        m.record_latency(1_000);
+        m.record_latency(2_000);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.latency_snapshot().count(), 2);
+        let line = m.summary_line();
+        assert!(line.contains("completed=2"), "{line}");
+    }
+}

@@ -1,0 +1,38 @@
+//! L3 serving coordinator — the request-path system around the accelerator.
+//!
+//! Architecture (vLLM-router-shaped, sized to this paper's workload):
+//!
+//! ```text
+//!   clients ──► Router ──► per-backend DynamicBatcher ──► worker threads
+//!                │                (queue + deadline)          │
+//!                └──────────────◄── responses ◄───────────────┘
+//! ```
+//!
+//! * [`request`] — request/response types with timing capture;
+//! * [`backend`] — the pluggable inference engines: native bit-packed Rust
+//!   ([`backend::NativeBackend`]), AOT PJRT artifacts
+//!   ([`backend::PjrtBackend`]), and the cycle-accurate FPGA simulator
+//!   ([`backend::SimBackend`]) — all proven prediction-equivalent in
+//!   `rust/tests/integration.rs`;
+//! * [`batcher`] — dynamic batching: drain-until(max_batch | deadline),
+//!   ladder-aware batch sizing for the fixed-shape PJRT artifacts;
+//! * [`router`] — named-backend routing with a least-queue-depth policy;
+//! * [`metrics`] — counters + log-bucket latency histograms;
+//! * [`server`] — worker threads and the blocking/async submission API.
+//!
+//! Python never appears here: the hot path is pure Rust + compiled HLO.
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod wire;
+
+pub use backend::{InferBackend, NativeBackend, PjrtBackend, SimBackend};
+pub use batcher::BatcherConfig;
+pub use metrics::Metrics;
+pub use request::{InferRequest, InferResponse};
+pub use router::Router;
+pub use server::Coordinator;

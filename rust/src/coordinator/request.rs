@@ -1,0 +1,56 @@
+//! Request/response types flowing through the coordinator.
+
+use std::time::Instant;
+
+use crate::bnn::packing::Packed;
+
+/// Monotonically increasing request id (assigned by the coordinator).
+pub type RequestId = u64;
+
+/// One classification request: a packed 784-bit binarized image.
+#[derive(Clone, Debug)]
+pub struct InferRequest {
+    pub id: RequestId,
+    pub image: Packed,
+    pub enqueued_at: Instant,
+}
+
+impl InferRequest {
+    pub fn new(id: RequestId, image: Packed) -> Self {
+        Self {
+            id,
+            image,
+            enqueued_at: Instant::now(),
+        }
+    }
+}
+
+/// The classified result.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub id: RequestId,
+    pub digit: u8,
+    pub logits: Vec<i32>,
+    /// Queue + batch + execute time, nanoseconds.
+    pub latency_ns: u64,
+    /// Batch this request was executed in (observability).
+    pub batch_size: usize,
+    pub backend: &'static str,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::packing::pack_bits_u64;
+
+    #[test]
+    fn request_captures_enqueue_time() {
+        let img = Packed {
+            words: pack_bits_u64(&vec![0u8; 784]),
+            n_bits: 784,
+        };
+        let r = InferRequest::new(7, img);
+        assert_eq!(r.id, 7);
+        assert!(r.enqueued_at.elapsed().as_secs() < 1);
+    }
+}

@@ -1,0 +1,149 @@
+//! Request router over named coordinators (backends).
+//!
+//! Policies:
+//! * **Named** — caller pins a backend (`route("fpga-sim", …)`);
+//! * **LeastQueue** — default routing picks the backend with the shallowest
+//!   queue (ties → first registered), the standard load-balancing policy
+//!   for heterogeneous engines.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::request::InferResponse;
+use super::server::Coordinator;
+use crate::bnn::packing::Packed;
+
+/// A named collection of coordinators.
+#[derive(Default)]
+pub struct Router {
+    backends: BTreeMap<String, Coordinator>,
+    order: Vec<String>,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&mut self, name: &str, coord: Coordinator) -> &mut Self {
+        if self.backends.insert(name.to_string(), coord).is_none() {
+            self.order.push(name.to_string());
+        }
+        self
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Coordinator> {
+        self.backends
+            .get(name)
+            .with_context(|| format!("no backend '{name}' (have: {:?})", self.order))
+    }
+
+    /// Route to a named backend.
+    pub fn route(&self, name: &str, image: Packed) -> Result<InferResponse> {
+        self.get(name)?.infer(image)
+    }
+
+    /// Route by least queue depth.
+    pub fn route_least_queue(&self, image: Packed) -> Result<InferResponse> {
+        if self.order.is_empty() {
+            bail!("router has no backends");
+        }
+        let name = self
+            .order
+            .iter()
+            .min_by_key(|n| self.backends[*n].queue_depth())
+            .unwrap();
+        self.backends[name].infer(image)
+    }
+
+    /// Aggregate metrics lines per backend.
+    pub fn metrics_report(&self) -> String {
+        let mut out = String::new();
+        for n in &self.order {
+            out.push_str(&format!("{n}: {}\n", self.backends[n].metrics.summary_line()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::model::model_from_sign_rows;
+    use crate::bnn::packing::pack_bits_u64;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::util::prng::Xoshiro256;
+    use std::sync::Arc;
+
+    fn setup() -> (Router, crate::bnn::BnnModel) {
+        let mut rng = Xoshiro256::new(41);
+        let dims = [784usize, 128, 64, 10];
+        let mut spec = Vec::new();
+        for (li, w) in dims.windows(2).enumerate() {
+            let rows: Vec<Vec<i8>> = (0..w[1])
+                .map(|_| (0..w[0]).map(|_| if rng.bool() { 1 } else { -1 }).collect())
+                .collect();
+            spec.push((rows, (li + 2 < dims.len()).then(|| vec![0i32; w[1]])));
+        }
+        let model = model_from_sign_rows(spec).unwrap();
+        let mut router = Router::new();
+        for name in ["a", "b"] {
+            router.register(
+                name,
+                Coordinator::start(
+                    Arc::new(NativeBackend::new(model.clone())),
+                    BatcherConfig::default(),
+                    1,
+                )
+                .unwrap(),
+            );
+        }
+        (router, model)
+    }
+
+    fn img(seed: u64) -> Packed {
+        let mut rng = Xoshiro256::new(seed);
+        let bits: Vec<u8> = (0..784).map(|_| rng.bool() as u8).collect();
+        Packed {
+            words: pack_bits_u64(&bits),
+            n_bits: 784,
+        }
+    }
+
+    #[test]
+    fn named_routing_and_errors() {
+        let (router, model) = setup();
+        let image = img(5);
+        let r = router.route("a", image.clone()).unwrap();
+        assert_eq!(r.digit as usize, model.predict(&image.words));
+        assert!(router.route("zzz", image).is_err());
+        assert_eq!(router.names(), &["a", "b"]);
+    }
+
+    #[test]
+    fn least_queue_serves_all() {
+        let (router, model) = setup();
+        for seed in 0..20 {
+            let image = img(seed);
+            let r = router.route_least_queue(image.clone()).unwrap();
+            assert_eq!(r.digit as usize, model.predict(&image.words));
+        }
+        // both backends must have seen traffic counters (routing totals add up)
+        let total: u64 = ["a", "b"]
+            .iter()
+            .map(|n| {
+                router.get(n).unwrap().metrics.completed
+                    .load(std::sync::atomic::Ordering::Relaxed)
+            })
+            .sum();
+        assert_eq!(total, 20);
+        let report = router.metrics_report();
+        assert!(report.contains("a:") && report.contains("b:"));
+    }
+}

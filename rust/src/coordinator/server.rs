@@ -1,0 +1,311 @@
+//! The serving loop: worker threads draining a shared queue through the
+//! dynamic batcher into a backend, with per-request response channels.
+//!
+//! No async runtime exists offline, so this is a classic std-thread design:
+//! an injector mutex guards the queue; workers park on a condvar with the
+//! batcher's deadline as the wait timeout.  A `Coordinator` owns one
+//! backend; the [`super::router::Router`] composes several coordinators.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::backend::InferBackend;
+use super::batcher::{decide, BatcherConfig, DrainDecision};
+use super::metrics::Metrics;
+use super::request::{InferRequest, InferResponse, RequestId};
+use crate::bnn::argmax_i32;
+use crate::bnn::packing::Packed;
+
+struct Pending {
+    req: InferRequest,
+    reply: mpsc::Sender<InferResponse>,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Pending>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    cfg: BatcherConfig,
+    queue_cap: usize,
+}
+
+/// A coordinator: one backend + N worker threads + metrics.
+pub struct Coordinator {
+    backend: Arc<dyn InferBackend>,
+    shared: Arc<Shared>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Spawn `workers` threads draining into `backend`.
+    pub fn start(
+        backend: Arc<dyn InferBackend>,
+        cfg: BatcherConfig,
+        workers: usize,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        let cfg = BatcherConfig {
+            max_batch: cfg.max_batch.min(backend.max_batch()),
+            ..cfg
+        };
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            cfg,
+            queue_cap: 100_000,
+        });
+        let metrics = Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for w in 0..workers.max(1) {
+            let shared = shared.clone();
+            let backend = backend.clone();
+            let metrics = metrics.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("bnn-worker-{w}"))
+                    .spawn(move || worker_loop(shared, backend, metrics))
+                    .expect("spawn worker"),
+            );
+        }
+        Ok(Self {
+            backend,
+            shared,
+            metrics,
+            next_id: AtomicU64::new(1),
+            workers: handles,
+        })
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Submit an image; returns the receiver for its response.
+    pub fn submit(&self, image: Packed) -> Result<(RequestId, mpsc::Receiver<InferResponse>)> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if q.len() >= self.shared.queue_cap {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!("queue full ({} requests)", q.len());
+            }
+            q.push_back(Pending {
+                req: InferRequest::new(id, image),
+                reply: tx,
+            });
+        }
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.shared.cv.notify_one();
+        Ok((id, rx))
+    }
+
+    /// Blocking classify.
+    pub fn infer(&self, image: Packed) -> Result<InferResponse> {
+        let (_, rx) = self.submit(image)?;
+        Ok(rx.recv()?)
+    }
+
+    /// Submit many, wait for all (order of responses matches submissions).
+    pub fn infer_many(&self, images: Vec<Packed>) -> Result<Vec<InferResponse>> {
+        let rxs: Vec<_> = images
+            .into_iter()
+            .map(|img| self.submit(img).map(|(_, rx)| rx))
+            .collect::<Result<_>>()?;
+        rxs.into_iter().map(|rx| Ok(rx.recv()?)).collect()
+    }
+
+    /// Stop workers (drains nothing further; in-flight batches finish).
+    pub fn shutdown(mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, backend: Arc<dyn InferBackend>, metrics: Arc<Metrics>) {
+    loop {
+        // Decide under the lock, execute outside it.
+        let batch: Vec<Pending> = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                match decide(q.len(), q.front().map(|p| p.req.enqueued_at), &shared.cfg, Instant::now()) {
+                    DrainDecision::Launch(n) => break q.drain(..n).collect(),
+                    DrainDecision::Wait(d) => {
+                        let (guard, _) = shared.cv.wait_timeout(q, d).unwrap();
+                        q = guard;
+                    }
+                    DrainDecision::Idle => {
+                        let (guard, _) = shared
+                            .cv
+                            .wait_timeout(q, std::time::Duration::from_millis(50))
+                            .unwrap();
+                        q = guard;
+                    }
+                }
+            }
+        };
+
+        let images: Vec<Packed> = batch.iter().map(|p| p.req.image.clone()).collect();
+        let batch_size = images.len();
+        metrics.record_batch(batch_size);
+        let exec_start = Instant::now();
+        match backend.infer_batch(&images) {
+            Ok(all_logits) => {
+                for (p, logits) in batch.into_iter().zip(all_logits) {
+                    let latency_ns = p.req.enqueued_at.elapsed().as_nanos() as u64;
+                    metrics
+                        .record_queue_wait((exec_start - p.req.enqueued_at).as_nanos() as u64);
+                    metrics.record_latency(latency_ns);
+                    let _ = p.reply.send(InferResponse {
+                        id: p.req.id,
+                        digit: argmax_i32(&logits) as u8,
+                        logits,
+                        latency_ns,
+                        batch_size,
+                        backend: backend.name(),
+                    });
+                }
+            }
+            Err(e) => {
+                // failure injection path: drop the replies; submitters see
+                // a disconnected channel. Count as rejected.
+                metrics
+                    .rejected
+                    .fetch_add(batch_size as u64, Ordering::Relaxed);
+                eprintln!("[coordinator] batch of {batch_size} failed: {e:#}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::model::model_from_sign_rows;
+    use crate::bnn::packing::pack_bits_u64;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::util::prng::Xoshiro256;
+    use std::time::Duration;
+
+    fn tiny_model(seed: u64) -> crate::bnn::BnnModel {
+        let mut rng = Xoshiro256::new(seed);
+        let dims = [784usize, 128, 64, 10];
+        let mut spec = Vec::new();
+        for (li, w) in dims.windows(2).enumerate() {
+            let rows: Vec<Vec<i8>> = (0..w[1])
+                .map(|_| (0..w[0]).map(|_| if rng.bool() { 1 } else { -1 }).collect())
+                .collect();
+            spec.push((rows, (li + 2 < dims.len()).then(|| vec![0i32; w[1]])));
+        }
+        model_from_sign_rows(spec).unwrap()
+    }
+
+    fn imgs(n: usize, seed: u64) -> Vec<Packed> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n)
+            .map(|_| {
+                let bits: Vec<u8> = (0..784).map(|_| rng.bool() as u8).collect();
+                Packed {
+                    words: pack_bits_u64(&bits),
+                    n_bits: 784,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn serves_and_matches_direct_inference() {
+        let model = tiny_model(31);
+        let backend = Arc::new(NativeBackend::new(model.clone()));
+        let coord = Coordinator::start(
+            backend,
+            BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(100),
+            },
+            2,
+        )
+        .unwrap();
+        let images = imgs(50, 32);
+        let responses = coord.infer_many(images.clone()).unwrap();
+        assert_eq!(responses.len(), 50);
+        for (img, r) in images.iter().zip(&responses) {
+            assert_eq!(r.digit as usize, model.predict(&img.words), "req {}", r.id);
+            assert_eq!(r.logits, model.logits(&img.words));
+            assert!(r.batch_size >= 1 && r.batch_size <= 16);
+        }
+        // no request lost or duplicated
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 50);
+        assert_eq!(coord.metrics.completed.load(Ordering::Relaxed), 50);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn batching_actually_batches_under_load() {
+        let model = tiny_model(33);
+        let backend = Arc::new(NativeBackend::new(model));
+        let coord = Coordinator::start(
+            backend,
+            BatcherConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(2),
+            },
+            1,
+        )
+        .unwrap();
+        // burst-submit then collect: expect mean batch > 1
+        let rxs: Vec<_> = imgs(64, 34)
+            .into_iter()
+            .map(|img| coord.submit(img).unwrap().1)
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        assert!(
+            coord.metrics.mean_batch_size() > 1.5,
+            "mean batch {}",
+            coord.metrics.mean_batch_size()
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_terminates_workers() {
+        let model = tiny_model(35);
+        let backend = Arc::new(NativeBackend::new(model));
+        let coord =
+            Coordinator::start(backend, BatcherConfig::default(), 4).unwrap();
+        coord.shutdown(); // must not hang
+    }
+}

@@ -1,0 +1,274 @@
+//! Wire protocol + TCP server — the paper's §5 future-work I/O path
+//! ("external image input, such as from a UART interface …, while
+//! UART-based output can provide digit predictions to external systems").
+//!
+//! Framing (byte-oriented, UART-friendly — works unchanged over a serial
+//! link):
+//!
+//! ```text
+//!   request :  0xB1  len_lo len_hi  payload[len]      len = 98 (784 bits)
+//!   response:  0xB2  digit  status  lat[4 LE, µs]     status 0 = OK
+//!   error   :  0xBE  code   0x00    0x00000000
+//! ```
+//!
+//! Payload is the binarized image, bit *i* at byte `i/8` bit `i%8`
+//! (LSB-first — the same order as the packed words).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::server::Coordinator;
+use crate::bnn::packing::Packed;
+
+pub const MAGIC_REQ: u8 = 0xB1;
+pub const MAGIC_RESP: u8 = 0xB2;
+pub const MAGIC_ERR: u8 = 0xBE;
+pub const IMAGE_BITS: usize = 784;
+pub const PAYLOAD_BYTES: usize = IMAGE_BITS.div_ceil(8); // 98
+
+/// Encode a packed image as a request frame.
+pub fn encode_request(image: &Packed) -> Vec<u8> {
+    assert_eq!(image.n_bits, IMAGE_BITS);
+    let bits = image.to_bits();
+    let mut payload = vec![0u8; PAYLOAD_BYTES];
+    for (i, &b) in bits.iter().enumerate() {
+        payload[i / 8] |= b << (i % 8);
+    }
+    let mut frame = Vec::with_capacity(3 + PAYLOAD_BYTES);
+    frame.push(MAGIC_REQ);
+    frame.extend_from_slice(&(PAYLOAD_BYTES as u16).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    frame
+}
+
+/// Decode a request payload into a packed image.
+pub fn decode_payload(payload: &[u8]) -> Result<Packed> {
+    if payload.len() != PAYLOAD_BYTES {
+        bail!("payload {} bytes, expected {PAYLOAD_BYTES}", payload.len());
+    }
+    let bits: Vec<u8> = (0..IMAGE_BITS)
+        .map(|i| (payload[i / 8] >> (i % 8)) & 1)
+        .collect();
+    Ok(Packed::from_bits(&bits))
+}
+
+/// A parsed response frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireResponse {
+    pub digit: u8,
+    pub status: u8,
+    pub latency_us: u32,
+}
+
+pub fn encode_response(digit: u8, latency_us: u32) -> [u8; 7] {
+    let l = latency_us.to_le_bytes();
+    [MAGIC_RESP, digit, 0, l[0], l[1], l[2], l[3]]
+}
+
+pub fn encode_error(code: u8) -> [u8; 7] {
+    [MAGIC_ERR, code, 0, 0, 0, 0, 0]
+}
+
+pub fn decode_response(frame: &[u8; 7]) -> Result<WireResponse> {
+    match frame[0] {
+        MAGIC_RESP => Ok(WireResponse {
+            digit: frame[1],
+            status: frame[2],
+            latency_us: u32::from_le_bytes([frame[3], frame[4], frame[5], frame[6]]),
+        }),
+        MAGIC_ERR => bail!("server error code {}", frame[1]),
+        m => bail!("bad response magic {m:#x}"),
+    }
+}
+
+/// A running TCP server bound to a coordinator.
+pub struct WireServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    pub served: Arc<AtomicU64>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl WireServer {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve requests through `coord`.
+    pub fn start(addr: &str, coord: Arc<Coordinator>) -> Result<WireServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let served = Arc::new(AtomicU64::new(0));
+        let t_stop = stop.clone();
+        let t_served = served.clone();
+        let handle = std::thread::Builder::new()
+            .name("bnn-wire-accept".into())
+            .spawn(move || {
+                while !t_stop.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let coord = coord.clone();
+                            let served = t_served.clone();
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(stream, coord, served);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(WireServer {
+            addr: local,
+            stop,
+            served,
+            accept_thread: Some(handle),
+        })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WireServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    coord: Arc<Coordinator>,
+    served: Arc<AtomicU64>,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    loop {
+        let mut header = [0u8; 3];
+        match stream.read_exact(&mut header) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(()),
+            Err(e) => return Err(e.into()),
+        }
+        if header[0] != MAGIC_REQ {
+            stream.write_all(&encode_error(1))?;
+            bail!("bad request magic {:#x}", header[0]);
+        }
+        let len = u16::from_le_bytes([header[1], header[2]]) as usize;
+        if len != PAYLOAD_BYTES {
+            stream.write_all(&encode_error(2))?;
+            bail!("bad payload length {len}");
+        }
+        let mut payload = vec![0u8; len];
+        stream.read_exact(&mut payload)?;
+        match decode_payload(&payload).and_then(|img| coord.infer(img)) {
+            Ok(resp) => {
+                let us = (resp.latency_ns / 1000).min(u32::MAX as u64) as u32;
+                stream.write_all(&encode_response(resp.digit, us))?;
+                served.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => stream.write_all(&encode_error(3))?,
+        }
+    }
+}
+
+/// Blocking client for tests/tools.
+pub struct WireClient {
+    stream: TcpStream,
+}
+
+impl WireClient {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<WireClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(WireClient { stream })
+    }
+
+    pub fn classify(&mut self, image: &Packed) -> Result<WireResponse> {
+        self.stream.write_all(&encode_request(image))?;
+        let mut frame = [0u8; 7];
+        self.stream.read_exact(&mut frame)?;
+        decode_response(&frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    fn image(seed: u64) -> Packed {
+        let mut rng = Xoshiro256::new(seed);
+        let bits: Vec<u8> = (0..IMAGE_BITS).map(|_| rng.bool() as u8).collect();
+        Packed::from_bits(&bits)
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let img = image(1);
+        let frame = encode_request(&img);
+        assert_eq!(frame[0], MAGIC_REQ);
+        assert_eq!(frame.len(), 3 + PAYLOAD_BYTES);
+        let decoded = decode_payload(&frame[3..]).unwrap();
+        assert_eq!(decoded.words, img.words);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let f = encode_response(7, 123_456);
+        let r = decode_response(&f).unwrap();
+        assert_eq!(r, WireResponse { digit: 7, status: 0, latency_us: 123_456 });
+        assert!(decode_response(&encode_error(3)).is_err());
+        assert!(decode_response(&[0u8; 7]).is_err());
+    }
+
+    #[test]
+    fn bad_payload_rejected() {
+        assert!(decode_payload(&[0u8; 10]).is_err());
+    }
+
+    #[test]
+    fn tcp_end_to_end() {
+        use crate::bnn::model::model_from_sign_rows;
+        use crate::coordinator::{BatcherConfig, Coordinator, NativeBackend};
+
+        let mut rng = Xoshiro256::new(5);
+        let dims = [784usize, 128, 64, 10];
+        let mut spec = Vec::new();
+        for (li, w) in dims.windows(2).enumerate() {
+            let rows: Vec<Vec<i8>> = (0..w[1])
+                .map(|_| (0..w[0]).map(|_| if rng.bool() { 1 } else { -1 }).collect())
+                .collect();
+            spec.push((rows, (li + 2 < dims.len()).then(|| vec![0i32; w[1]])));
+        }
+        let model = model_from_sign_rows(spec).unwrap();
+        let coord = Arc::new(
+            Coordinator::start(
+                Arc::new(NativeBackend::new(model.clone())),
+                BatcherConfig::default(),
+                1,
+            )
+            .unwrap(),
+        );
+        let server = WireServer::start("127.0.0.1:0", coord).unwrap();
+        let mut client = WireClient::connect(server.addr).unwrap();
+        for seed in 0..5 {
+            let img = image(seed);
+            let r = client.classify(&img).unwrap();
+            assert_eq!(r.digit as usize, model.predict(&img.words), "seed {seed}");
+            assert_eq!(r.status, 0);
+        }
+        assert_eq!(server.served.load(Ordering::Relaxed), 5);
+        server.shutdown();
+    }
+}

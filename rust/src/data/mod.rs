@@ -1,0 +1,114 @@
+//! Dataset management: loads the build-time idx files, binarizes and packs
+//! images for the inference paths; [`synth`] is an independent Rust-side
+//! generator for artifact-free tests and demos.
+
+pub mod synth;
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::bnn::packing::pack_bits_u64;
+use crate::bnn::packing::Packed;
+use crate::mem;
+
+/// An in-memory labelled digit dataset (binarized + packed).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Packed 784-bit images (u64 words).
+    pub images: Vec<Packed>,
+    pub labels: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+
+    /// Binarize one grayscale u8 image (paper §3.1: p ≥ 128 ⇔ 2p/255−1 ≥ 0).
+    pub fn binarize_u8(pixels: &[u8]) -> Vec<u8> {
+        pixels.iter().map(|&p| u8::from(p >= 128)).collect()
+    }
+
+    /// Load the test split from an artifacts `data/` directory (idx files).
+    pub fn load_idx_test(data_dir: &Path) -> Result<Dataset> {
+        let (imgs, rows, cols) = mem::read_idx_images(&data_dir.join("t10k-images-idx3-ubyte"))?;
+        let labels = mem::read_idx_labels(&data_dir.join("t10k-labels-idx1-ubyte"))?;
+        if imgs.len() != labels.len() {
+            bail!("{} images vs {} labels", imgs.len(), labels.len());
+        }
+        if rows * cols != 784 {
+            bail!("expected 28×28 images, got {rows}×{cols}");
+        }
+        let images = imgs
+            .iter()
+            .map(|img| Packed {
+                words: pack_bits_u64(&Self::binarize_u8(img)),
+                n_bits: 784,
+            })
+            .collect();
+        Ok(Dataset {
+            images,
+            labels,
+        })
+    }
+
+    /// Load the paper's §4.1 100-image subset from the exported `.mem` files.
+    pub fn load_mem_subset(mem_dir: &Path) -> Result<Dataset> {
+        let images_w = mem::read_image_mem(&mem_dir.join("images_100.mem"), 784)?;
+        let labels = mem::read_label_mem(&mem_dir.join("labels_100.mem"))?;
+        if images_w.len() != labels.len() {
+            bail!("{} images vs {} labels", images_w.len(), labels.len());
+        }
+        Ok(Dataset {
+            images: images_w
+                .into_iter()
+                .map(|words| Packed { words, n_bits: 784 })
+                .collect(),
+            labels,
+        })
+    }
+
+    /// Flatten a range of images into a contiguous u64 batch buffer.
+    pub fn batch_words(&self, start: usize, count: usize) -> Vec<u64> {
+        let mut out = Vec::with_capacity(count * self.images[0].words.len());
+        for i in start..start + count {
+            out.extend_from_slice(&self.images[i].words);
+        }
+        out
+    }
+
+    /// Flatten a range into the u32 interchange layout (PJRT input).
+    pub fn batch_words_u32(&self, start: usize, count: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        for i in start..start + count {
+            out.extend(self.images[i].to_u32_words());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binarize_threshold() {
+        assert_eq!(Dataset::binarize_u8(&[0, 127, 128, 255]), vec![0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn synth_dataset_loads_and_batches() {
+        let ds = synth::generate_dataset(30, 42);
+        assert_eq!(ds.len(), 30);
+        assert!(ds.labels.iter().all(|&l| l < 10));
+        let batch = ds.batch_words(0, 3);
+        assert_eq!(batch.len(), 3 * ds.images[0].words.len());
+        let b32 = ds.batch_words_u32(0, 3);
+        assert_eq!(b32.len(), 3 * 25);
+    }
+}

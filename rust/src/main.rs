@@ -1,0 +1,3 @@
+fn main() {
+    bnn_fpga::cli::run();
+}

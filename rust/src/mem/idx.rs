@@ -1,0 +1,124 @@
+//! MNIST idx container codec (ubyte variants) — reads the dataset files the
+//! Python build path writes (real MNIST files work identically if supplied).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+fn read_u32_be(b: &[u8], at: usize) -> u32 {
+    u32::from_be_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+/// Read an idx3-ubyte image file: returns `(images, rows, cols)` with
+/// `images[i]` a `rows*cols` byte vector.
+pub fn read_idx_images(path: &Path) -> Result<(Vec<Vec<u8>>, usize, usize)> {
+    let b = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if b.len() < 16 {
+        bail!("idx3 file too short");
+    }
+    let magic = read_u32_be(&b, 0);
+    if magic != 0x803 {
+        bail!("bad idx3 magic {magic:#x}");
+    }
+    let n = read_u32_be(&b, 4) as usize;
+    let rows = read_u32_be(&b, 8) as usize;
+    let cols = read_u32_be(&b, 12) as usize;
+    let expect = 16 + n * rows * cols;
+    if b.len() != expect {
+        bail!("idx3 length {} != expected {expect}", b.len());
+    }
+    let stride = rows * cols;
+    let images = (0..n)
+        .map(|i| b[16 + i * stride..16 + (i + 1) * stride].to_vec())
+        .collect();
+    Ok((images, rows, cols))
+}
+
+/// Read an idx1-ubyte label file.
+pub fn read_idx_labels(path: &Path) -> Result<Vec<u8>> {
+    let b = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if b.len() < 8 {
+        bail!("idx1 file too short");
+    }
+    let magic = read_u32_be(&b, 0);
+    if magic != 0x801 {
+        bail!("bad idx1 magic {magic:#x}");
+    }
+    let n = read_u32_be(&b, 4) as usize;
+    if b.len() != 8 + n {
+        bail!("idx1 length {} != expected {}", b.len(), 8 + n);
+    }
+    Ok(b[8..].to_vec())
+}
+
+/// Write helpers (round-trip tests + Rust-side dataset generation).
+pub fn write_idx_images(path: &Path, images: &[Vec<u8>], rows: usize, cols: usize) -> Result<()> {
+    let mut out = Vec::with_capacity(16 + images.len() * rows * cols);
+    out.extend_from_slice(&0x803u32.to_be_bytes());
+    out.extend_from_slice(&(images.len() as u32).to_be_bytes());
+    out.extend_from_slice(&(rows as u32).to_be_bytes());
+    out.extend_from_slice(&(cols as u32).to_be_bytes());
+    for img in images {
+        if img.len() != rows * cols {
+            bail!("image size {} != {}", img.len(), rows * cols);
+        }
+        out.extend_from_slice(img);
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+pub fn write_idx_labels(path: &Path, labels: &[u8]) -> Result<()> {
+    let mut out = Vec::with_capacity(8 + labels.len());
+    out.extend_from_slice(&0x801u32.to_be_bytes());
+    out.extend_from_slice(&(labels.len() as u32).to_be_bytes());
+    out.extend_from_slice(labels);
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("bnn_fpga_test_idx");
+        std::fs::create_dir_all(&dir).unwrap();
+        let imgs: Vec<Vec<u8>> = (0..5).map(|i| vec![i as u8; 28 * 28]).collect();
+        let labels = vec![0u8, 1, 2, 3, 4];
+        write_idx_images(&dir.join("i"), &imgs, 28, 28).unwrap();
+        write_idx_labels(&dir.join("l"), &labels).unwrap();
+        let (got, r, c) = read_idx_images(&dir.join("i")).unwrap();
+        assert_eq!((r, c), (28, 28));
+        assert_eq!(got, imgs);
+        assert_eq!(read_idx_labels(&dir.join("l")).unwrap(), labels);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("bnn_fpga_test_idx2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad");
+        let mut b = vec![0u8; 16];
+        b[3] = 0x99;
+        std::fs::write(&p, &b).unwrap();
+        assert!(read_idx_images(&p).is_err());
+        assert!(read_idx_labels(&p).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let dir = std::env::temp_dir().join("bnn_fpga_test_idx3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("trunc");
+        let mut b = Vec::new();
+        b.extend_from_slice(&0x803u32.to_be_bytes());
+        b.extend_from_slice(&10u32.to_be_bytes());
+        b.extend_from_slice(&28u32.to_be_bytes());
+        b.extend_from_slice(&28u32.to_be_bytes());
+        b.extend_from_slice(&[0; 100]); // far less than 10*784
+        std::fs::write(&p, &b).unwrap();
+        assert!(read_idx_images(&p).is_err());
+    }
+}

@@ -1,0 +1,192 @@
+//! `.mem` hex-file codec — the paper's `$readmemh` interchange (§3.2).
+//!
+//! Layout (mirrors `python/compile/export.py`):
+//! * weight/image files: one row per line, the row's bits as one MSB-first
+//!   hex string (bit n−1 leftmost) — one neuron's full input weights, or
+//!   one 784-bit binarized image;
+//! * threshold files: one two's-complement 11-bit value per line (3 hex
+//!   digits);
+//! * label files: one hex digit per line.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::bnn::packing::{pack_bits_u64, words_u64};
+
+/// Parse one MSB-first hex row into LSB-first bits of length `n_bits`.
+pub fn hex_row_to_bits(row: &str, n_bits: usize) -> Result<Vec<u8>> {
+    let row = row.trim();
+    let expected_digits = n_bits.div_ceil(4);
+    if row.len() != expected_digits {
+        bail!(
+            "hex row has {} digits, expected {} for {} bits",
+            row.len(),
+            expected_digits,
+            n_bits
+        );
+    }
+    let mut bits = vec![0u8; n_bits];
+    for (pos, ch) in row.chars().enumerate() {
+        let v = ch.to_digit(16).with_context(|| format!("bad hex digit '{ch}'"))? as u8;
+        // hex digit at string position `pos` covers logical bits
+        // [4*(expected_digits-1-pos), +4)
+        let base = 4 * (expected_digits - 1 - pos);
+        for k in 0..4 {
+            let bit_idx = base + k;
+            if bit_idx < n_bits {
+                bits[bit_idx] = (v >> k) & 1;
+            } else if (v >> k) & 1 != 0 {
+                bail!("padding bit {bit_idx} set in hex row");
+            }
+        }
+    }
+    Ok(bits)
+}
+
+/// Render LSB-first bits as one MSB-first hex row (inverse of the above).
+pub fn bits_to_hex_row(bits: &[u8]) -> String {
+    let digits = bits.len().div_ceil(4);
+    let mut out = String::with_capacity(digits);
+    for pos in 0..digits {
+        let base = 4 * (digits - 1 - pos);
+        let mut v = 0u8;
+        for k in 0..4 {
+            if base + k < bits.len() {
+                v |= bits[base + k] << k;
+            }
+        }
+        out.push(char::from_digit(v as u32, 16).unwrap());
+    }
+    out
+}
+
+fn read_lines(path: &Path) -> Result<Vec<String>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading mem file {}", path.display()))?;
+    Ok(text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with("//"))
+        .map(str::to_string)
+        .collect())
+}
+
+/// Read a weight `.mem`: `n_rows` rows of `n_bits` each, packed to u64 words
+/// (row-major).  Returns `(words, words_per_row)`.
+pub fn read_weight_mem(path: &Path, n_rows: usize, n_bits: usize) -> Result<(Vec<u64>, usize)> {
+    let lines = read_lines(path)?;
+    if lines.len() != n_rows {
+        bail!("{} rows in {}, expected {n_rows}", lines.len(), path.display());
+    }
+    let wpr = words_u64(n_bits);
+    let mut words = Vec::with_capacity(n_rows * wpr);
+    for line in &lines {
+        words.extend(pack_bits_u64(&hex_row_to_bits(line, n_bits)?));
+    }
+    Ok((words, wpr))
+}
+
+/// Read a threshold `.mem` (two's-complement values of `bits` width).
+pub fn read_threshold_mem(path: &Path, bits: u32) -> Result<Vec<i32>> {
+    let lines = read_lines(path)?;
+    let sign = 1i64 << (bits - 1);
+    let modulus = 1i64 << bits;
+    lines
+        .iter()
+        .map(|l| {
+            let v = i64::from_str_radix(l, 16).with_context(|| format!("bad threshold '{l}'"))?;
+            if v >= modulus {
+                bail!("threshold {l} out of {bits}-bit range");
+            }
+            Ok(if v >= sign { (v - modulus) as i32 } else { v as i32 })
+        })
+        .collect()
+}
+
+/// Read an image `.mem`: rows of `n_bits` binarized pixels, packed per image.
+pub fn read_image_mem(path: &Path, n_bits: usize) -> Result<Vec<Vec<u64>>> {
+    read_lines(path)?
+        .iter()
+        .map(|l| Ok(pack_bits_u64(&hex_row_to_bits(l, n_bits)?)))
+        .collect()
+}
+
+/// Read a label `.mem`: one hex digit per line.
+pub fn read_label_mem(path: &Path) -> Result<Vec<u8>> {
+    read_lines(path)?
+        .iter()
+        .map(|l| {
+            let v = u8::from_str_radix(l, 16).with_context(|| format!("bad label '{l}'"))?;
+            if v > 9 {
+                bail!("label {v} out of digit range");
+            }
+            Ok(v)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{gens, Runner};
+
+    #[test]
+    fn hex_row_roundtrip_property() {
+        Runner::new("hex-row-roundtrip").run(&gens::BitVec(1..=800), |bits| {
+            let row = bits_to_hex_row(bits);
+            hex_row_to_bits(&row, bits.len()).map(|b| b == *bits).unwrap_or(false)
+        });
+    }
+
+    #[test]
+    fn hex_row_known_values() {
+        // bits LSB-first [1,0,0,0] = value 1 → hex "1"
+        assert_eq!(bits_to_hex_row(&[1, 0, 0, 0]), "1");
+        // bits [0,0,0,1] = value 8 → hex "8"
+        assert_eq!(bits_to_hex_row(&[0, 0, 0, 1]), "8");
+        // 8 bits, MSB-first rendering: bit7=1 → "80"
+        assert_eq!(bits_to_hex_row(&[0, 0, 0, 0, 0, 0, 0, 1]), "80");
+        assert_eq!(hex_row_to_bits("80", 8).unwrap(), vec![0, 0, 0, 0, 0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn wrong_length_rejected() {
+        assert!(hex_row_to_bits("ff", 784).is_err());
+        // 5 bits → 2 hex digits; value with padding bits set must fail
+        assert!(hex_row_to_bits("ff", 5).is_err());
+        assert!(hex_row_to_bits("1f", 5).is_ok());
+    }
+
+    #[test]
+    fn threshold_twos_complement() {
+        let dir = std::env::temp_dir().join("bnn_fpga_test_thr");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.mem");
+        // 11-bit: 0x7ff = -1, 0x400 = -1024, 0x3ff = 1023, 0x000 = 0
+        std::fs::write(&p, "7ff\n400\n3ff\n000\n").unwrap();
+        assert_eq!(read_threshold_mem(&p, 11).unwrap(), vec![-1, -1024, 1023, 0]);
+        std::fs::write(&p, "800\n").unwrap(); // 12-bit value in an 11-bit file
+        assert!(read_threshold_mem(&p, 11).is_err());
+    }
+
+    #[test]
+    fn label_range_checked() {
+        let dir = std::env::temp_dir().join("bnn_fpga_test_lbl");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("l.mem");
+        std::fs::write(&p, "0\n9\n").unwrap();
+        assert_eq!(read_label_mem(&p).unwrap(), vec![0, 9]);
+        std::fs::write(&p, "a\n").unwrap();
+        assert!(read_label_mem(&p).is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let dir = std::env::temp_dir().join("bnn_fpga_test_cm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.mem");
+        std::fs::write(&p, "// header\n\n0\n1\n").unwrap();
+        assert_eq!(read_label_mem(&p).unwrap(), vec![0, 1]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Interchange formats: the paper's `.mem` hex files, the MNIST idx
+//! container, and the `weights.json` model payload emitted by the Python
+//! build path.
+
+pub mod idx;
+pub mod memfile;
+pub mod weights;
+
+pub use idx::{read_idx_images, read_idx_labels};
+pub use memfile::{read_image_mem, read_label_mem, read_threshold_mem, read_weight_mem};
+pub use weights::load_model;

@@ -1,0 +1,155 @@
+//! `weights.json` loader — the trained/folded model payload emitted by
+//! `python/compile/export.py`, plus a loader for the paper-format `.mem`
+//! directory (both must produce identical models; tested in integration).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::memfile;
+use crate::bnn::{BinaryDenseLayer, BnnModel};
+use crate::util::json::Json;
+
+/// Load a [`BnnModel`] from `artifacts/weights.json`.
+pub fn load_model(path: &Path) -> Result<BnnModel> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading weights file {}", path.display()))?;
+    let root = Json::parse(&text).context("parsing weights.json")?;
+    let layers_json = root.get("layers")?.as_arr()?;
+    if layers_json.is_empty() {
+        bail!("weights.json has no layers");
+    }
+    let mut layers = Vec::with_capacity(layers_json.len());
+    for (li, lj) in layers_json.iter().enumerate() {
+        let n_in = lj.get("n_in")?.as_usize()?;
+        let n_out = lj.get("n_out")?.as_usize()?;
+        let rows_json = lj.get("w_packed")?.as_arr()?;
+        if rows_json.len() != n_out {
+            bail!("layer {li}: {} rows != n_out {n_out}", rows_json.len());
+        }
+        let mut rows = Vec::with_capacity(n_out);
+        for rj in rows_json {
+            let row: Result<Vec<u32>> =
+                rj.as_arr()?.iter().map(|v| Ok(v.as_u64()? as u32)).collect();
+            rows.push(row?);
+        }
+        let thresholds = match lj.opt("thresholds") {
+            Some(tj) => Some(
+                tj.as_arr()?
+                    .iter()
+                    .map(|v| Ok(v.as_i64()? as i32))
+                    .collect::<Result<Vec<i32>>>()?,
+            ),
+            None => None,
+        };
+        layers.push(BinaryDenseLayer::from_u32_rows(n_in, &rows, thresholds)?);
+    }
+    let model = BnnModel { layers };
+    model.validate()?;
+    Ok(model)
+}
+
+/// Load the same model from the paper-format `.mem` directory
+/// (`weights_l{1..3}.mem` + `thresholds_l{1,2}.mem`) given the architecture.
+pub fn load_model_from_mem(dir: &Path, dims: &[usize]) -> Result<BnnModel> {
+    if dims.len() < 2 {
+        bail!("need at least one layer");
+    }
+    let mut layers = Vec::new();
+    for (i, w) in dims.windows(2).enumerate() {
+        let (n_in, n_out) = (w[0], w[1]);
+        let (words, wpr) =
+            memfile::read_weight_mem(&dir.join(format!("weights_l{}.mem", i + 1)), n_out, n_in)?;
+        let thresholds = if i + 2 < dims.len() {
+            let t = memfile::read_threshold_mem(&dir.join(format!("thresholds_l{}.mem", i + 1)), 11)?;
+            if t.len() != n_out {
+                bail!("layer {i}: {} thresholds != {n_out} neurons", t.len());
+            }
+            Some(t)
+        } else {
+            None
+        };
+        layers.push(BinaryDenseLayer {
+            n_in,
+            n_out,
+            weights: words,
+            words_per_row: wpr,
+            thresholds,
+        });
+    }
+    let model = BnnModel { layers };
+    model.validate()?;
+    Ok(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_weights_json() -> String {
+        // 3-in → 2 hidden (thresholds) → 1 out
+        r#"{
+          "dims": [3, 2, 1],
+          "layers": [
+            {"n_in": 3, "n_out": 2, "w_packed": [[7],[0]], "thresholds": [1, -1]},
+            {"n_in": 2, "n_out": 1, "w_packed": [[3]], "thresholds": null}
+          ]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn loads_tiny_model() {
+        let dir = std::env::temp_dir().join("bnn_fpga_test_wjson");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("weights.json");
+        std::fs::write(&p, tiny_weights_json()).unwrap();
+        let model = load_model(&p).unwrap();
+        assert_eq!(model.layers.len(), 2);
+        assert_eq!(model.n_in(), 3);
+        assert_eq!(model.n_classes(), 1);
+        // neuron 0 weights all +1 (packed 7 = 0b111); input all +1 → z = 3
+        let x = crate::bnn::packing::pack_bits_u64(&[1, 1, 1]);
+        // hidden: n0: z=3 ≥ 1 → 1; n1: weights 0b00 → all −1, z=−3 ≥ −1? no → 0
+        // out: w=0b11 (+1,+1), a=(+1,−1) → z = 0
+        assert_eq!(model.logits(&x), vec![0]);
+    }
+
+    #[test]
+    fn row_count_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("bnn_fpga_test_wjson2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("weights.json");
+        std::fs::write(
+            &p,
+            r#"{"layers": [{"n_in": 3, "n_out": 2, "w_packed": [[7]], "thresholds": [0,0]}]}"#,
+        )
+        .unwrap();
+        assert!(load_model(&p).is_err());
+    }
+
+    #[test]
+    fn mem_dir_roundtrip_matches_json() {
+        use crate::mem::memfile::bits_to_hex_row;
+        let dir = std::env::temp_dir().join("bnn_fpga_test_memdir");
+        std::fs::create_dir_all(&dir).unwrap();
+        // same tiny model in .mem format
+        std::fs::write(
+            dir.join("weights_l1.mem"),
+            format!("{}\n{}\n", bits_to_hex_row(&[1, 1, 1]), bits_to_hex_row(&[0, 0, 0])),
+        )
+        .unwrap();
+        std::fs::write(dir.join("thresholds_l1.mem"), "001\n7ff\n").unwrap(); // 1, -1
+        std::fs::write(dir.join("weights_l2.mem"), format!("{}\n", bits_to_hex_row(&[1, 1])))
+            .unwrap();
+        let m = load_model_from_mem(&dir, &[3, 2, 1]).unwrap();
+
+        let jp = dir.join("weights.json");
+        std::fs::write(&jp, tiny_weights_json()).unwrap();
+        let mj = load_model(&jp).unwrap();
+        for (a, b) in m.layers.iter().zip(mj.layers.iter()) {
+            assert_eq!(a.weights, b.weights);
+            assert_eq!(a.thresholds, b.thresholds);
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! The PJRT execution engine: compile-once, execute-many.
+//!
+//! Wraps the `xla` crate exactly as /opt/xla-example/load_hlo does:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! ## Thread-safety design
+//!
+//! The `xla 0.1.6` wrapper types are `!Send`/`!Sync` (Rc + raw PJRT
+//! pointers), so the engine keeps **all** PJRT state behind one internal
+//! mutex and never lets client/executable handles escape.  Calls are
+//! serialized at this boundary; PJRT-CPU parallelizes internally with its
+//! own thread pool, so serializing the dispatch does not serialize the
+//! compute.  `unsafe impl Send + Sync` is sound because (a) every access
+//! path takes the mutex, and (b) the `Rc` clones never leave the guarded
+//! struct, so cross-thread reference-count races cannot occur.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Dtype, Manifest};
+
+struct Inner {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// Compile-once engine over an artifact directory.  Cheap to share via
+/// `Arc<Engine>`; all methods take `&self`.
+pub struct Engine {
+    pub manifest: Manifest,
+    inner: Mutex<Inner>,
+    platform: String,
+}
+
+// SAFETY: see module docs — all `!Send` PJRT state lives inside `inner`
+// and is only touched while holding the mutex; no handle escapes.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+/// Borrowed view of an artifact's signature (safe to hand out).
+pub struct LoadedModel {
+    pub name: String,
+    pub batch: usize,
+    pub input_elements: usize,
+    pub output_elements: usize,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and read the manifest.
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let platform = client.platform_name();
+        Ok(Engine {
+            manifest,
+            inner: Mutex::new(Inner {
+                client,
+                cache: HashMap::new(),
+            }),
+            platform,
+        })
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Compile (or fetch the cached) artifact, returning its signature.
+    pub fn prepare(&self, name: &str) -> Result<LoadedModel> {
+        let spec = self.manifest.get(name)?.clone();
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.cache.contains_key(name) {
+            let proto = xla::HloModuleProto::from_text_file(&spec.file)
+                .with_context(|| format!("parsing HLO text {}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {}", spec.name))?;
+            inner.cache.insert(name.to_string(), exe);
+        }
+        Ok(LoadedModel {
+            name: spec.name.clone(),
+            batch: spec.batch,
+            input_elements: spec.input.elements(),
+            output_elements: spec.output.elements(),
+        })
+    }
+
+    /// Pre-compile every artifact of a model family (warm start for serving).
+    pub fn warm(&self, model: &str) -> Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model)
+            .map(|a| a.name.clone())
+            .collect();
+        for n in &names {
+            self.prepare(n)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Execute a u32→i32 artifact (BNN: packed bits in, integer logits out).
+    pub fn run_u32_to_i32(&self, name: &str, input: &[u32]) -> Result<Vec<i32>> {
+        let spec = self.manifest.get(name)?;
+        if spec.input.dtype != Dtype::U32 || spec.output.dtype != Dtype::I32 {
+            bail!("artifact {name} is not u32→i32");
+        }
+        self.check_len(name, spec.input.elements(), input.len())?;
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U32,
+            &spec.input.shape,
+            pod_bytes(input),
+        )?;
+        let shape = spec.input.shape.clone();
+        drop(shape);
+        let out = self.execute_one(name, lit)?;
+        Ok(out.to_vec::<i32>()?)
+    }
+
+    /// Execute an f32→f32 artifact (CNN baseline).
+    pub fn run_f32_to_f32(&self, name: &str, input: &[f32]) -> Result<Vec<f32>> {
+        let spec = self.manifest.get(name)?;
+        if spec.input.dtype != Dtype::F32 || spec.output.dtype != Dtype::F32 {
+            bail!("artifact {name} is not f32→f32");
+        }
+        self.check_len(name, spec.input.elements(), input.len())?;
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &spec.input.shape,
+            pod_bytes(input),
+        )?;
+        let out = self.execute_one(name, lit)?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    fn check_len(&self, name: &str, want: usize, got: usize) -> Result<()> {
+        if got != want {
+            bail!("artifact {name} expects {want} input elements, got {got}");
+        }
+        Ok(())
+    }
+
+    fn execute_one(&self, name: &str, lit: xla::Literal) -> Result<xla::Literal> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.cache.contains_key(name) {
+            drop(inner);
+            self.prepare(name)?;
+            inner = self.inner.lock().unwrap();
+        }
+        let exe = inner.cache.get(name).expect("prepared above");
+        let result = exe.execute::<xla::Literal>(&[lit])?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+        Ok(out.to_tuple1()?)
+    }
+}
+
+/// Byte view of a POD slice (no bytemuck crate offline).
+fn pod_bytes<T: Copy>(v: &[T]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), std::mem::size_of_val(v)) }
+}
+
+// NOTE: integration coverage for the engine lives in rust/tests/integration.rs
+// (requires `make artifacts`); unit tests here cover the byte casts only.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_casts_are_little_endian_pod() {
+        assert_eq!(pod_bytes(&[1u32]), &[1, 0, 0, 0]);
+        assert_eq!(pod_bytes(&[1.0f32]), 1.0f32.to_le_bytes());
+        assert_eq!(pod_bytes::<u32>(&[]).len(), 0);
+    }
+}

@@ -1,0 +1,183 @@
+//! `artifacts/manifest.json` — the artifact registry contract between the
+//! Python AOT path and the Rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element dtype of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    U32,
+    I32,
+    F32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "u32" => Dtype::U32,
+            "i32" => Dtype::I32,
+            "f32" => Dtype::F32,
+            other => bail!("unsupported dtype '{other}'"),
+        })
+    }
+}
+
+/// Tensor signature: shape + dtype.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled-artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// "bnn" | "cnn".
+    pub model: String,
+    pub batch: usize,
+    pub file: PathBuf,
+    pub input: TensorSig,
+    pub output: TensorSig,
+}
+
+/// The parsed registry.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn parse_sig(j: &Json) -> Result<TensorSig> {
+    let shape = j
+        .get("shape")?
+        .as_arr()?
+        .iter()
+        .map(|v| v.as_usize())
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TensorSig {
+        shape,
+        dtype: Dtype::parse(j.get("dtype")?.as_str()?)?,
+    })
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {} (run `make artifacts`)", path.display()))?;
+        let root = Json::parse(&text)?;
+        let mut artifacts = Vec::new();
+        for a in root.get("artifacts")?.as_arr()? {
+            artifacts.push(ArtifactSpec {
+                name: a.get("name")?.as_str()?.to_string(),
+                model: a.get("model")?.as_str()?.to_string(),
+                batch: a.get("batch")?.as_usize()?,
+                file: artifacts_dir.join(a.get("file")?.as_str()?),
+                input: parse_sig(a.get("input")?)?,
+                output: parse_sig(a.get("output")?)?,
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    /// Batch sizes available for a model, ascending — the dynamic batcher's
+    /// ladder.
+    pub fn batch_ladder(&self, model: &str) -> Vec<usize> {
+        let mut ladder: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model)
+            .map(|a| a.batch)
+            .collect();
+        ladder.sort_unstable();
+        ladder.dedup();
+        ladder
+    }
+
+    /// Artifact name for `(model, batch)`.
+    pub fn name_for(&self, model: &str, batch: usize) -> Option<&str> {
+        self.artifacts
+            .iter()
+            .find(|a| a.model == model && a.batch == batch)
+            .map(|a| a.name.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    const SAMPLE: &str = r#"{"artifacts": [
+      {"name": "bnn_b1", "model": "bnn", "batch": 1, "file": "bnn_b1.hlo.txt",
+       "input": {"shape": [1, 25], "dtype": "u32"},
+       "output": {"shape": [1, 10], "dtype": "i32"}},
+      {"name": "bnn_b8", "model": "bnn", "batch": 8, "file": "bnn_b8.hlo.txt",
+       "input": {"shape": [8, 25], "dtype": "u32"},
+       "output": {"shape": [8, 10], "dtype": "i32"}},
+      {"name": "cnn_b1", "model": "cnn", "batch": 1, "file": "cnn_b1.hlo.txt",
+       "input": {"shape": [1, 784], "dtype": "f32"},
+       "output": {"shape": [1, 10], "dtype": "f32"}}
+    ]}"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let dir = std::env::temp_dir().join("bnn_fpga_test_manifest");
+        write_manifest(&dir, SAMPLE);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.get("bnn_b8").unwrap().batch, 8);
+        assert_eq!(m.batch_ladder("bnn"), vec![1, 8]);
+        assert_eq!(m.name_for("cnn", 1), Some("cnn_b1"));
+        assert_eq!(m.name_for("cnn", 8), None);
+        assert!(m.get("nope").is_err());
+        let sig = &m.get("bnn_b1").unwrap().input;
+        assert_eq!(sig.elements(), 25);
+        assert_eq!(sig.dtype, Dtype::U32);
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make() {
+        let dir = std::env::temp_dir().join("bnn_fpga_test_manifest_none");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn bad_dtype_rejected() {
+        let dir = std::env::temp_dir().join("bnn_fpga_test_manifest_bad");
+        write_manifest(
+            &dir,
+            r#"{"artifacts": [{"name": "x", "model": "bnn", "batch": 1, "file": "x",
+                "input": {"shape": [1], "dtype": "f16"},
+                "output": {"shape": [1], "dtype": "i32"}}]}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

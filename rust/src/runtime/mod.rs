@@ -1,0 +1,14 @@
+//! PJRT runtime — loads the AOT HLO-text artifacts emitted by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only place the `xla` crate is touched; Python never runs on
+//! the request path (the artifacts are self-contained — trained weights are
+//! baked in as constants).  Interchange is HLO *text*: jax ≥ 0.5 emits
+//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, LoadedModel};
+pub use manifest::{ArtifactSpec, Dtype, Manifest};

@@ -1,0 +1,162 @@
+//! Dual-port block-RAM model (§3.3: "dual-port BRAMs ... chosen for weight
+//! storage due to their high density and dual-port capability").
+//!
+//! Models the Artix-7 RAMB36E1 primitive at the level the accelerator
+//! needs: synchronous reads with one-cycle latency, two independent read
+//! ports, and block-count accounting (a `width × depth` ROM occupies
+//! `ceil(width/72) × ceil(depth/512)` blocks in the widest SDP mode).
+//! Access counts feed the activity-based power model.
+
+/// Capacity of one RAMB36 block in bits.
+pub const BRAM36_BITS: usize = 36 * 1024;
+/// Maximum simple-dual-port width of one block.
+pub const BRAM36_MAX_WIDTH: usize = 72;
+/// Depth at maximum width.
+pub const BRAM36_DEPTH_AT_MAX_WIDTH: usize = 512;
+
+/// Blocks required for a `width × depth` ROM (width-sliced, then depth).
+pub fn blocks_for(width_bits: usize, depth: usize) -> usize {
+    let width_slices = width_bits.div_ceil(BRAM36_MAX_WIDTH);
+    let depth_slices = depth.div_ceil(BRAM36_DEPTH_AT_MAX_WIDTH);
+    width_slices * depth_slices
+}
+
+/// A weight ROM backed by dual-port BRAM: `depth` rows of `width_bits`,
+/// stored as packed u64 words per row.
+#[derive(Clone, Debug)]
+pub struct DualPortBram {
+    pub width_bits: usize,
+    pub depth: usize,
+    words_per_row: usize,
+    data: Vec<u64>,
+    /// Pending synchronous reads (port → row latched last cycle).
+    pending: [Option<usize>; 2],
+    pub reads: u64,
+    pub read_bits: u64,
+}
+
+impl DualPortBram {
+    /// Build from row-major packed rows.
+    pub fn new(width_bits: usize, rows: &[&[u64]]) -> Self {
+        let words_per_row = width_bits.div_ceil(64);
+        let mut data = Vec::with_capacity(rows.len() * words_per_row);
+        for r in rows {
+            assert_eq!(r.len(), words_per_row, "row word count");
+            data.extend_from_slice(r);
+        }
+        Self {
+            width_bits,
+            depth: rows.len(),
+            words_per_row,
+            data,
+            pending: [None, None],
+            reads: 0,
+            read_bits: 0,
+        }
+    }
+
+    pub fn blocks(&self) -> usize {
+        blocks_for(self.width_bits, self.depth)
+    }
+
+    /// Issue a synchronous read on `port` (0 or 1); data is visible after
+    /// the next [`Self::clock`] via [`Self::output`].
+    pub fn issue_read(&mut self, port: usize, row: usize) {
+        assert!(port < 2, "dual-port: port {port}");
+        assert!(row < self.depth, "row {row} >= depth {}", self.depth);
+        self.pending[port] = Some(row);
+    }
+
+    /// Advance one clock: latch pending reads into the output registers.
+    /// Returns the rows now visible on each port.
+    pub fn clock(&mut self) -> [Option<usize>; 2] {
+        let out = self.pending;
+        for p in out.iter().flatten() {
+            self.reads += 1;
+            self.read_bits += self.width_bits as u64;
+            let _ = p;
+        }
+        self.pending = [None, None];
+        out
+    }
+
+    /// Combinational view of a row's packed words (the registered output
+    /// the datapath consumes after `clock`).
+    pub fn row_words(&self, row: usize) -> &[u64] {
+        &self.data[row * self.words_per_row..(row + 1) * self.words_per_row]
+    }
+
+    /// Read a single weight bit (column `bit` of `row`) — the per-cycle
+    /// datapath access pattern in the bit-serial inner loop.
+    #[inline]
+    pub fn bit(&self, row: usize, bit: usize) -> u8 {
+        debug_assert!(bit < self.width_bits);
+        ((self.data[row * self.words_per_row + bit / 64] >> (bit % 64)) & 1) as u8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_counts_match_paper_layout() {
+        // Paper P=1: layer1 784×128 → 11 blocks, layer2 128×64 → 2,
+        // (layer3 64×10 lives in LUT-ROM) ⇒ 13 total ⇒ 9.63 % of 135.
+        assert_eq!(blocks_for(784, 128), 11);
+        assert_eq!(blocks_for(128, 64), 2);
+        assert_eq!((11 + 2) as f64 / 135.0 * 100.0, 9.62962962962963);
+    }
+
+    #[test]
+    fn deep_roms_need_depth_slices() {
+        assert_eq!(blocks_for(72, 512), 1);
+        assert_eq!(blocks_for(72, 513), 2);
+        assert_eq!(blocks_for(73, 512), 2);
+    }
+
+    #[test]
+    fn synchronous_read_latency() {
+        let rows: Vec<Vec<u64>> = vec![vec![0xAA], vec![0x55]];
+        let refs: Vec<&[u64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut bram = DualPortBram::new(8, &refs);
+        bram.issue_read(0, 1);
+        assert_eq!(bram.reads, 0, "no data before clock edge");
+        let out = bram.clock();
+        assert_eq!(out[0], Some(1));
+        assert_eq!(bram.row_words(1), &[0x55]);
+        assert_eq!(bram.reads, 1);
+        assert_eq!(bram.read_bits, 8);
+    }
+
+    #[test]
+    fn dual_ports_are_independent() {
+        let rows: Vec<Vec<u64>> = (0..4).map(|i| vec![i as u64]).collect();
+        let refs: Vec<&[u64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut bram = DualPortBram::new(4, &refs);
+        bram.issue_read(0, 2);
+        bram.issue_read(1, 3);
+        let out = bram.clock();
+        assert_eq!(out, [Some(2), Some(3)]);
+        assert_eq!(bram.reads, 2);
+    }
+
+    #[test]
+    fn bit_extraction() {
+        let rows: Vec<Vec<u64>> = vec![vec![0b1010]];
+        let refs: Vec<&[u64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let bram = DualPortBram::new(4, &refs);
+        assert_eq!(bram.bit(0, 0), 0);
+        assert_eq!(bram.bit(0, 1), 1);
+        assert_eq!(bram.bit(0, 3), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "row")]
+    fn out_of_range_read_panics() {
+        let rows: Vec<Vec<u64>> = vec![vec![0]];
+        let refs: Vec<&[u64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut bram = DualPortBram::new(4, &refs);
+        bram.issue_read(0, 1);
+    }
+}

@@ -1,0 +1,163 @@
+//! The P-parallel XNOR-popcount datapath (§3.3, §3.5).
+//!
+//! `P` neuron units run in lock-step: in each compute cycle the broadcast
+//! input bit is XNOR'd with every active unit's private weight bit and the
+//! unit's match counter increments on agreement.  At group writeback each
+//! unit evaluates `z = 2·popcount − n` against its folded threshold
+//! (hidden layers) or latches the raw sum (output layer) — Algorithm 1
+//! lines 5–18 in hardware form.
+
+/// One neuron unit's registers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NeuronUnit {
+    /// Matches counted so far (popcount of XNOR), Algorithm 1 line 10.
+    pub popcount: u16,
+    /// Global neuron index served this group (None ⇒ unit idle: last group
+    /// of a layer may be partial, e.g. 10 output neurons on 64 units).
+    pub neuron: Option<u16>,
+}
+
+/// The array of `P` units plus activity counters for the power model.
+#[derive(Clone, Debug)]
+pub struct Datapath {
+    pub units: Vec<NeuronUnit>,
+    /// Total XNOR evaluations (switching-activity proxy).
+    pub xnor_ops: u64,
+    /// Total popcount-register increments.
+    pub counter_increments: u64,
+    /// Threshold comparator evaluations.
+    pub comparisons: u64,
+}
+
+impl Datapath {
+    pub fn new(parallelism: usize) -> Self {
+        Self {
+            units: vec![NeuronUnit::default(); parallelism],
+            xnor_ops: 0,
+            counter_increments: 0,
+            comparisons: 0,
+        }
+    }
+
+    pub fn parallelism(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Assign the units to neuron group `group` of a layer with `n_out`
+    /// neurons; resets the match counters.  Returns the active unit count.
+    pub fn load_group(&mut self, group: usize, n_out: usize) -> usize {
+        let base = group * self.units.len();
+        let mut active = 0;
+        for (k, u) in self.units.iter_mut().enumerate() {
+            let j = base + k;
+            if j < n_out {
+                u.neuron = Some(j as u16);
+                u.popcount = 0;
+                active += 1;
+            } else {
+                u.neuron = None;
+            }
+        }
+        active
+    }
+
+    /// One compute cycle: broadcast input bit, each active unit XNORs its
+    /// own weight bit.  `weight_bit(j)` supplies neuron `j`'s bit for the
+    /// current input index (from BRAM output registers or LUT-ROM).
+    #[inline]
+    pub fn compute_bit(&mut self, x_bit: u8, mut weight_bit: impl FnMut(usize) -> u8) {
+        for u in self.units.iter_mut() {
+            if let Some(j) = u.neuron {
+                let w = weight_bit(j as usize);
+                self.xnor_ops += 1;
+                if w == x_bit {
+                    u.popcount += 1; // XNOR = 1 on match (§2.1)
+                    self.counter_increments += 1;
+                }
+            }
+        }
+    }
+
+    /// Group writeback for a hidden layer: per active unit compute
+    /// `z = 2m − n` and the threshold activation bit; `sink(j, bit)`
+    /// receives the results.
+    pub fn writeback_hidden(
+        &mut self,
+        n_in: usize,
+        mut threshold: impl FnMut(usize) -> i32,
+        mut sink: impl FnMut(usize, u8),
+    ) {
+        for u in self.units.iter() {
+            if let Some(j) = u.neuron {
+                let z = 2 * i32::from(u.popcount) - n_in as i32;
+                self.comparisons += 1;
+                sink(j as usize, u8::from(z >= threshold(j as usize)));
+            }
+        }
+    }
+
+    /// Group writeback for the output layer: latch raw sums (§3.4 "no
+    /// thresholding is applied").
+    pub fn writeback_output(&mut self, n_in: usize, mut sink: impl FnMut(usize, i32)) {
+        for u in self.units.iter() {
+            if let Some(j) = u.neuron {
+                sink(j as usize, 2 * i32::from(u.popcount) - n_in as i32);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partial_group_deactivates_units() {
+        let mut dp = Datapath::new(64);
+        assert_eq!(dp.load_group(0, 10), 10);
+        assert_eq!(dp.units.iter().filter(|u| u.neuron.is_some()).count(), 10);
+        assert_eq!(dp.units[9].neuron, Some(9));
+        assert_eq!(dp.units[10].neuron, None);
+    }
+
+    #[test]
+    fn second_group_indexes_continue() {
+        let mut dp = Datapath::new(64);
+        assert_eq!(dp.load_group(1, 128), 64);
+        assert_eq!(dp.units[0].neuron, Some(64));
+        assert_eq!(dp.units[63].neuron, Some(127));
+    }
+
+    #[test]
+    fn xnor_popcount_semantics() {
+        let mut dp = Datapath::new(2);
+        dp.load_group(0, 2);
+        // neuron 0 weight bits: [1, 0]; neuron 1: [1, 1]; input [1, 0]
+        let w = [[1u8, 0], [1, 1]];
+        dp.compute_bit(1, |j| w[j][0]);
+        dp.compute_bit(0, |j| w[j][1]);
+        // n0 matches both bits → popcount 2; n1 matches first only → 1
+        assert_eq!(dp.units[0].popcount, 2);
+        assert_eq!(dp.units[1].popcount, 1);
+        assert_eq!(dp.xnor_ops, 4);
+        assert_eq!(dp.counter_increments, 3);
+
+        // z = 2m − n: n0 → 2, n1 → 0; threshold 1 → n0 fires, n1 doesn't
+        let mut bits = [9u8; 2];
+        dp.writeback_hidden(2, |_| 1, |j, b| bits[j] = b);
+        assert_eq!(bits, [1, 0]);
+        assert_eq!(dp.comparisons, 2);
+    }
+
+    #[test]
+    fn output_writeback_raw_sums() {
+        let mut dp = Datapath::new(4);
+        dp.load_group(0, 3);
+        dp.units[0].popcount = 64; // all 64 inputs matched
+        dp.units[1].popcount = 0;
+        dp.units[2].popcount = 32;
+        let mut scores = [0i32; 3];
+        dp.writeback_output(64, |j, z| scores[j] = z);
+        assert_eq!(scores, [64, -64, 0]);
+    }
+}

@@ -1,0 +1,113 @@
+//! The centralized inference FSM (§3.4).
+//!
+//! Five sequential stages — first hidden layer, second hidden layer, output
+//! accumulation, argmax classification, completion — with per-group
+//! sub-states: weight-row latch (`GroupLoad`), the bit-serial
+//! XNOR-popcount inner loop (`ComputeBit`), and threshold/score writeback
+//! (`GroupWriteback`).  "Internal counters, control flags, and
+//! synchronization signals" (§3.4) are the `layer/group/bit/step` indices
+//! carried in the state.
+
+/// FSM state.  One [`super::top::Accelerator::tick`] call = one clock cycle
+/// in exactly one of these states.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsmState {
+    /// Reset / waiting for `start`.
+    Idle,
+    /// Latch the 784-bit input row from the image ROM.  BRAM style spends
+    /// 2 cycles here (synchronous read latency), LUT style 1 (§4.2.1's
+    /// constant 10 ns style delta).
+    LoadImage { substep: u8 },
+    /// Per-layer FSM transition / counter initialization.
+    LayerPrologue { layer: u8 },
+    /// Latch the ≤P weight rows of the current neuron group.
+    GroupLoad { layer: u8, group: u16 },
+    /// Broadcast input bit `bit` to all active units (1 bit / cycle).
+    ComputeBit { layer: u8, group: u16, bit: u16 },
+    /// Threshold-compare + activation latch (hidden) or score latch (output).
+    GroupWriteback { layer: u8, group: u16 },
+    /// Iterative 10-way comparison (§3.4), one class per cycle.
+    Argmax { step: u8 },
+    /// Result latched to the seven-segment decoder; held until reset.
+    Done,
+}
+
+impl FsmState {
+    /// Coarse stage name for trace output / cycle accounting.
+    pub fn stage(&self) -> &'static str {
+        match self {
+            FsmState::Idle => "idle",
+            FsmState::LoadImage { .. } => "load",
+            FsmState::LayerPrologue { .. } => "prologue",
+            FsmState::GroupLoad { .. } => "group_load",
+            FsmState::ComputeBit { .. } => "compute",
+            FsmState::GroupWriteback { .. } => "writeback",
+            FsmState::Argmax { .. } => "argmax",
+            FsmState::Done => "done",
+        }
+    }
+}
+
+/// Per-stage cycle accounting (for traces, EXPERIMENTS.md and the power
+/// model's activity factors).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CycleBreakdown {
+    pub load: u64,
+    pub prologue: u64,
+    pub group_load: u64,
+    pub compute: u64,
+    pub writeback: u64,
+    pub argmax: u64,
+    pub done: u64,
+}
+
+impl CycleBreakdown {
+    pub fn record(&mut self, s: &FsmState) {
+        match s {
+            FsmState::Idle => {}
+            FsmState::LoadImage { .. } => self.load += 1,
+            FsmState::LayerPrologue { .. } => self.prologue += 1,
+            FsmState::GroupLoad { .. } => self.group_load += 1,
+            FsmState::ComputeBit { .. } => self.compute += 1,
+            FsmState::GroupWriteback { .. } => self.writeback += 1,
+            FsmState::Argmax { .. } => self.argmax += 1,
+            FsmState::Done => self.done += 1,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.load
+            + self.prologue
+            + self.group_load
+            + self.compute
+            + self.writeback
+            + self.argmax
+            + self.done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_totals() {
+        let mut b = CycleBreakdown::default();
+        b.record(&FsmState::LoadImage { substep: 0 });
+        b.record(&FsmState::ComputeBit { layer: 0, group: 0, bit: 3 });
+        b.record(&FsmState::ComputeBit { layer: 0, group: 0, bit: 4 });
+        b.record(&FsmState::Done);
+        assert_eq!(b.load, 1);
+        assert_eq!(b.compute, 2);
+        assert_eq!(b.total(), 4);
+        // Idle cycles are not counted toward inference latency
+        b.record(&FsmState::Idle);
+        assert_eq!(b.total(), 4);
+    }
+
+    #[test]
+    fn stage_names() {
+        assert_eq!(FsmState::Idle.stage(), "idle");
+        assert_eq!(FsmState::Argmax { step: 3 }.stage(), "argmax");
+    }
+}

@@ -1,0 +1,124 @@
+//! Distributed LUT-ROM model (§3.3: "LUT-based ROMs are used for thresholds
+//! to minimize BRAM usage"; also the weight store in the LUT memory style).
+//!
+//! Combinational (same-cycle) reads; LUT-cost accounting: a depth-`d`
+//! single-bit ROM costs `ceil(d/64)` LUT6s (64×1 ROM per LUT6, wider
+//! depths via F7/F8 muxes folded into the same estimate), so a
+//! `width × depth` ROM costs `width · ceil(depth/64)` LUTs.
+
+/// LUTs required for a `width × depth` distributed ROM.
+pub fn luts_for(width_bits: usize, depth: usize) -> usize {
+    width_bits * depth.div_ceil(64)
+}
+
+/// A combinational ROM holding packed rows (weights) or signed words
+/// (thresholds / generic data).
+#[derive(Clone, Debug)]
+pub struct LutRom<T: Copy> {
+    pub data: Vec<T>,
+    pub reads: std::cell::Cell<u64>,
+}
+
+impl<T: Copy> LutRom<T> {
+    pub fn new(data: Vec<T>) -> Self {
+        Self {
+            data,
+            reads: std::cell::Cell::new(0),
+        }
+    }
+
+    /// Combinational read — available in the same cycle.
+    #[inline]
+    pub fn read(&self, addr: usize) -> T {
+        self.reads.set(self.reads.get() + 1);
+        self.data[addr]
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Packed-row LUT-ROM for weights in the LUT memory style.
+#[derive(Clone, Debug)]
+pub struct LutWeightRom {
+    pub width_bits: usize,
+    pub depth: usize,
+    words_per_row: usize,
+    data: Vec<u64>,
+    pub reads: u64,
+    pub read_bits: u64,
+}
+
+impl LutWeightRom {
+    pub fn new(width_bits: usize, rows: &[&[u64]]) -> Self {
+        let words_per_row = width_bits.div_ceil(64);
+        let mut data = Vec::with_capacity(rows.len() * words_per_row);
+        for r in rows {
+            assert_eq!(r.len(), words_per_row);
+            data.extend_from_slice(r);
+        }
+        Self {
+            width_bits,
+            depth: rows.len(),
+            words_per_row,
+            data,
+            reads: 0,
+            read_bits: 0,
+        }
+    }
+
+    pub fn luts(&self) -> usize {
+        luts_for(self.width_bits, self.depth)
+    }
+
+    /// Combinational row access (no clock needed — this is the 10 ns the
+    /// LUT style saves on the initial image-row load).
+    pub fn row_words(&mut self, row: usize) -> &[u64] {
+        self.reads += 1;
+        self.read_bits += self.width_bits as u64;
+        &self.data[row * self.words_per_row..(row + 1) * self.words_per_row]
+    }
+
+    #[inline]
+    pub fn bit(&self, row: usize, bit: usize) -> u8 {
+        ((self.data[row * self.words_per_row + bit / 64] >> (bit % 64)) & 1) as u8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lut_costs() {
+        assert_eq!(luts_for(1, 64), 1);
+        assert_eq!(luts_for(1, 65), 2);
+        assert_eq!(luts_for(784, 128), 784 * 2);
+        // thresholds: 11-bit × 128 deep → 11·2 = 22 LUTs
+        assert_eq!(luts_for(11, 128), 22);
+    }
+
+    #[test]
+    fn combinational_read_counts() {
+        let rom = LutRom::new(vec![5i32, -3, 7]);
+        assert_eq!(rom.read(1), -3);
+        assert_eq!(rom.read(2), 7);
+        assert_eq!(rom.reads.get(), 2);
+    }
+
+    #[test]
+    fn weight_rom_bits() {
+        let rows: Vec<Vec<u64>> = vec![vec![0b110]];
+        let refs: Vec<&[u64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut rom = LutWeightRom::new(3, &refs);
+        assert_eq!(rom.bit(0, 0), 0);
+        assert_eq!(rom.bit(0, 1), 1);
+        assert_eq!(rom.row_words(0), &[0b110]);
+        assert_eq!(rom.reads, 1);
+    }
+}

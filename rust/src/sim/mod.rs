@@ -1,0 +1,173 @@
+//! Cycle-accurate simulator of the paper's Verilog accelerator.
+//!
+//! The design under simulation (paper §3.3–§3.5): a centralized FSM drives
+//! `P` parallel XNOR-popcount neuron units through the three fully-connected
+//! layers; binary weights live in dual-port BRAM (or LUT-ROM), folded
+//! batch-norm thresholds in LUT-ROM; the output layer keeps raw sums and an
+//! iterative comparator picks the argmax, latched to a seven-segment
+//! decoder.
+//!
+//! ## Microarchitecture (reverse-engineered from Table 1)
+//!
+//! The paper does not publish its RTL inner loop, but its latency table
+//! pins it down: with `S(P) = Σ_l ⌈N_l/P⌉·I_l` (input bits streamed per
+//! neuron group) and `G(P) = Σ_l ⌈N_l/P⌉` (groups), every BRAM row of
+//! Table 1 satisfies
+//!
+//! ```text
+//!   latency_ns = 10·S(P) + 20·G(P) + 165   (±5 ns)
+//! ```
+//!
+//! and every LUT row is exactly 10 ns less (one fewer read-latency cycle).
+//! This simulator therefore executes: 1 cycle per broadcast input bit per
+//! group (each of the ≤P units XNORs its private weight bit and bumps its
+//! popcount), 2 cycles per group (weight-row latch + threshold/writeback),
+//! 1 cycle per layer prologue, 10 argmax cycles, load + done — totalling
+//! `S + 2G + 15 (+1 BRAM read-latency)` cycles, reproducing the table.
+//!
+//! **Clock note**: the per-step time implied by the paper's own numbers is
+//! 10 ns, although §3.5 states an 80 MHz (12.5 ns) clock — the published
+//! latencies are internally consistent only at 10 ns/step.  We default to
+//! the table-calibrated 10 ns step ([`SimConfig::step_ns`]) and expose the
+//! strict 12.5 ns mode; EXPERIMENTS.md discusses the discrepancy.
+
+pub mod bram;
+pub mod datapath;
+pub mod fsm;
+pub mod lutrom;
+pub mod sevenseg;
+pub mod top;
+pub mod trace;
+
+pub use fsm::FsmState;
+pub use top::{Accelerator, InferenceResult};
+
+/// Weight-memory style of Table 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemStyle {
+    /// Dual-port block RAM rows (one neuron's weights per row).
+    Bram,
+    /// Distributed LUT-ROM synthesized into the fabric.
+    Lut,
+}
+
+impl MemStyle {
+    pub fn name(self) -> &'static str {
+        match self {
+            MemStyle::Bram => "BRAM",
+            MemStyle::Lut => "LUT",
+        }
+    }
+}
+
+/// Simulator configuration (the paper's two sweep axes + clock model).
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    /// Neurons processed in parallel (paper sweeps 1..=128).
+    pub parallelism: usize,
+    pub mem_style: MemStyle,
+    /// Nanoseconds per FSM step.  Default 10.0 — the value the paper's own
+    /// Table 1 implies (see module docs); 12.5 is the strict-80 MHz mode.
+    pub step_ns: f64,
+}
+
+impl SimConfig {
+    pub fn new(parallelism: usize, mem_style: MemStyle) -> Self {
+        assert!(
+            (1..=128).contains(&parallelism),
+            "parallelism {parallelism} outside the paper's 1..=128 range"
+        );
+        Self {
+            parallelism,
+            mem_style,
+            step_ns: 10.0,
+        }
+    }
+
+    pub fn strict_80mhz(mut self) -> Self {
+        self.step_ns = 12.5;
+        self
+    }
+
+    /// The 13 (parallelism, style) rows of Table 1, in paper order.
+    pub fn table1_rows() -> Vec<SimConfig> {
+        let mut rows = Vec::new();
+        for p in [1usize, 4, 8, 16, 32, 64] {
+            rows.push(SimConfig::new(p, MemStyle::Bram));
+            rows.push(SimConfig::new(p, MemStyle::Lut));
+        }
+        // §4.2.1: BRAM fails to synthesize beyond 64; 128 is LUT-only.
+        rows.push(SimConfig::new(128, MemStyle::Lut));
+        rows
+    }
+}
+
+/// Closed-form step count — the analytical counterpart the cycle loop is
+/// asserted against in tests (`top::tests::formula_matches_execution`).
+pub fn analytic_steps(dims: &[usize], parallelism: usize, mem_style: MemStyle) -> u64 {
+    let mut s = 0u64; // bit-broadcast steps
+    let mut g = 0u64; // neuron groups
+    for w in dims.windows(2) {
+        let groups = w[1].div_ceil(parallelism) as u64;
+        g += groups;
+        s += groups * w[0] as u64;
+    }
+    let layers = (dims.len() - 1) as u64;
+    let argmax = *dims.last().unwrap() as u64;
+    let load = match mem_style {
+        MemStyle::Bram => 2, // input row read latency
+        MemStyle::Lut => 1,
+    };
+    s + 2 * g + layers + argmax + load + 1 /* done */
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_steps_match_paper_table1() {
+        // Paper Table 1 latencies (ns) vs the model at 10 ns/step.
+        let cases = [
+            (1, MemStyle::Bram, 1_096_045.0),
+            (1, MemStyle::Lut, 1_096_035.0),
+            (4, MemStyle::Bram, 274_465.0),
+            (4, MemStyle::Lut, 274_455.0),
+            (8, MemStyle::Bram, 137_645.0),
+            (8, MemStyle::Lut, 137_635.0),
+            (16, MemStyle::Bram, 68_905.0),
+            (16, MemStyle::Lut, 68_895.0),
+            (32, MemStyle::Bram, 34_865.0),
+            (32, MemStyle::Lut, 34_855.0),
+            (64, MemStyle::Bram, 17_845.0),
+            (64, MemStyle::Lut, 17_835.0),
+            (128, MemStyle::Lut, 9_865.0),
+        ];
+        for (p, style, paper_ns) in cases {
+            let steps = analytic_steps(&[784, 128, 64, 10], p, style);
+            let ns = steps as f64 * 10.0;
+            let err = (ns - paper_ns).abs() / paper_ns;
+            // ≤0.1% everywhere except the paper's own P=128 outlier (≤1.2%)
+            let tol = if p == 128 { 0.012 } else { 0.001 };
+            assert!(
+                err <= tol,
+                "P={p} {style:?}: model {ns} vs paper {paper_ns} ({:.3}%)",
+                err * 100.0
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "outside")]
+    fn parallelism_range_checked() {
+        SimConfig::new(0, MemStyle::Bram);
+    }
+
+    #[test]
+    fn table1_rows_enumeration() {
+        let rows = SimConfig::table1_rows();
+        assert_eq!(rows.len(), 13);
+        assert_eq!(rows.last().unwrap().parallelism, 128);
+        assert_eq!(rows.last().unwrap().mem_style, MemStyle::Lut);
+    }
+}

@@ -1,0 +1,83 @@
+//! Seven-segment display decoder (§3.3: "a seven-segment display decoder
+//! converts the predicted digit into display signals").
+//!
+//! Matches the Nexys A7's common-anode convention: segments are
+//! **active-low**, bit order `{g, f, e, d, c, b, a}` (bit 0 = segment a).
+
+/// Active-low segment pattern for a digit (0–9).  Panics on non-digits —
+/// the classifier can only produce 0..=9.
+pub fn decode(digit: u8) -> u8 {
+    // active-high truth table first, then invert; bit0=a .. bit6=g
+    let on: u8 = match digit {
+        0 => 0b011_1111,
+        1 => 0b000_0110,
+        2 => 0b101_1011,
+        3 => 0b100_1111,
+        4 => 0b110_0110,
+        5 => 0b110_1101,
+        6 => 0b111_1101,
+        7 => 0b000_0111,
+        8 => 0b111_1111,
+        9 => 0b110_1111,
+        _ => panic!("seven-segment decoder: digit {digit} out of range"),
+    };
+    !on & 0x7F
+}
+
+/// Inverse mapping used by tests and the display capture in the demo.
+pub fn encode(pattern_active_low: u8) -> Option<u8> {
+    (0..=9).find(|&d| decode(d) == pattern_active_low)
+}
+
+/// Render the segment pattern as 3-line ASCII art (demo output).
+pub fn ascii(pattern_active_low: u8) -> String {
+    let on = |seg: u8| pattern_active_low & (1 << seg) == 0; // active low
+    let a = if on(0) { " _ " } else { "   " };
+    let f = if on(5) { "|" } else { " " };
+    let g = if on(6) { "_" } else { " " };
+    let b = if on(1) { "|" } else { " " };
+    let e = if on(4) { "|" } else { " " };
+    let d = if on(3) { "_" } else { " " };
+    let c = if on(2) { "|" } else { " " };
+    format!("{a}\n{f}{g}{b}\n{e}{d}{c}\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_digits_distinct_and_invertible() {
+        let mut seen = std::collections::HashSet::new();
+        for d in 0..=9u8 {
+            let p = decode(d);
+            assert!(seen.insert(p), "pattern collision for {d}");
+            assert_eq!(encode(p), Some(d));
+            assert_eq!(p & 0x80, 0, "only 7 bits used");
+        }
+    }
+
+    #[test]
+    fn known_patterns() {
+        // 0: all segments except g → active-low 0b100_0000
+        assert_eq!(decode(0), 0b100_0000);
+        // 8: everything on → 0
+        assert_eq!(decode(8), 0);
+        // 1: b, c only
+        assert_eq!(decode(1), !0b000_0110u8 & 0x7F);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_non_digit()
+    {
+        decode(10);
+    }
+
+    #[test]
+    fn ascii_has_three_lines() {
+        let art = ascii(decode(7));
+        assert_eq!(art.lines().count(), 3);
+        assert!(art.contains('_'));
+    }
+}

@@ -1,0 +1,478 @@
+//! The top-level accelerator: memories + datapath + FSM + display, driven
+//! one clock cycle per [`Accelerator::tick`].
+//!
+//! Faithfulness contracts (enforced by tests):
+//! * predictions are bit-identical to the software [`crate::bnn::BnnModel`]
+//!   (same weights ⇒ same digit, same logits);
+//! * executed cycle counts equal [`super::analytic_steps`] — which in turn
+//!   matches the paper's Table 1 latencies at 10 ns/step (see `sim` docs).
+
+use anyhow::Result;
+
+use super::bram::DualPortBram;
+use super::datapath::Datapath;
+use super::fsm::{CycleBreakdown, FsmState};
+use super::lutrom::{LutRom, LutWeightRom};
+use super::sevenseg;
+use super::{MemStyle, SimConfig};
+use crate::bnn::BnnModel;
+
+/// Per-layer weight memory in the configured style.
+enum WeightMem {
+    Bram(DualPortBram),
+    Lut(LutWeightRom),
+}
+
+impl WeightMem {
+    #[inline]
+    fn bit(&self, row: usize, bit: usize) -> u8 {
+        match self {
+            WeightMem::Bram(m) => m.bit(row, bit),
+            WeightMem::Lut(m) => m.bit(row, bit),
+        }
+    }
+
+    fn count_row_reads(&mut self, rows: u64) {
+        match self {
+            WeightMem::Bram(m) => {
+                m.reads += rows;
+                m.read_bits += rows * m.width_bits as u64;
+            }
+            WeightMem::Lut(m) => {
+                m.reads += rows;
+                m.read_bits += rows * m.width_bits as u64;
+            }
+        }
+    }
+}
+
+struct LayerMem {
+    n_in: usize,
+    n_out: usize,
+    weights: WeightMem,
+    thresholds: Option<LutRom<i32>>,
+}
+
+/// Memory-activity counters feeding the power model (`estimate::power`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Activity {
+    pub bram_row_reads: u64,
+    pub bram_bits_read: u64,
+    pub lutrom_row_reads: u64,
+    pub lutrom_bits_read: u64,
+    pub threshold_reads: u64,
+    pub xnor_ops: u64,
+    pub counter_increments: u64,
+    pub comparisons: u64,
+}
+
+/// Result of one simulated inference.
+#[derive(Clone, Debug)]
+pub struct InferenceResult {
+    pub digit: u8,
+    /// Raw output-layer sums (the FSM's score registers).
+    pub scores: Vec<i32>,
+    pub cycles: u64,
+    pub latency_ns: f64,
+    pub breakdown: CycleBreakdown,
+    pub activity: Activity,
+    /// Active-low seven-segment pattern latched at DONE.
+    pub sevenseg: u8,
+}
+
+/// The simulated accelerator.
+pub struct Accelerator {
+    pub cfg: SimConfig,
+    dims: Vec<usize>,
+    layers: Vec<LayerMem>,
+    dp: Datapath,
+    state: FsmState,
+    breakdown: CycleBreakdown,
+    cycles: u64,
+    // architectural registers
+    act_bits: Vec<u8>,
+    next_bits: Vec<u8>,
+    scores: Vec<i32>,
+    best_idx: u8,
+    best_val: i32,
+    display: u8,
+}
+
+impl Accelerator {
+    /// Instantiate the design for `model` at the given configuration —
+    /// the `generate`-loop parameterization of §3.5.
+    pub fn new(model: &BnnModel, cfg: SimConfig) -> Result<Self> {
+        model.validate()?;
+        let mut dims = vec![model.n_in()];
+        dims.extend(model.layers.iter().map(|l| l.n_out));
+        let layers = model
+            .layers
+            .iter()
+            .map(|l| {
+                let rows: Vec<&[u64]> = (0..l.n_out).map(|j| l.row(j)).collect();
+                let weights = match cfg.mem_style {
+                    MemStyle::Bram => WeightMem::Bram(DualPortBram::new(l.n_in, &rows)),
+                    MemStyle::Lut => WeightMem::Lut(LutWeightRom::new(l.n_in, &rows)),
+                };
+                LayerMem {
+                    n_in: l.n_in,
+                    n_out: l.n_out,
+                    weights,
+                    thresholds: l.thresholds.clone().map(LutRom::new),
+                }
+            })
+            .collect();
+        let max_width = dims.iter().copied().max().unwrap();
+        Ok(Self {
+            dp: Datapath::new(cfg.parallelism),
+            dims: dims.clone(),
+            layers,
+            state: FsmState::Idle,
+            breakdown: CycleBreakdown::default(),
+            cycles: 0,
+            act_bits: vec![0; max_width],
+            next_bits: vec![0; max_width],
+            scores: vec![0; *dims.last().unwrap()],
+            best_idx: 0,
+            best_val: i32::MIN,
+            cfg,
+            display: 0x7F,
+        })
+    }
+
+    pub fn state(&self) -> FsmState {
+        self.state
+    }
+
+    fn groups(&self, layer: usize) -> usize {
+        self.layers[layer].n_out.div_ceil(self.cfg.parallelism)
+    }
+
+    /// Advance exactly one clock cycle.
+    pub fn tick(&mut self) {
+        let state = self.state;
+        if state != FsmState::Idle {
+            self.cycles += 1;
+            self.breakdown.record(&state);
+        }
+        self.state = match state {
+            FsmState::Idle => FsmState::Idle,
+
+            FsmState::LoadImage { substep } => {
+                let needed = match self.cfg.mem_style {
+                    MemStyle::Bram => 2, // synchronous image-ROM read latency
+                    MemStyle::Lut => 1,
+                };
+                if substep + 1 < needed {
+                    FsmState::LoadImage { substep: substep + 1 }
+                } else {
+                    FsmState::LayerPrologue { layer: 0 }
+                }
+            }
+
+            FsmState::LayerPrologue { layer } => FsmState::GroupLoad { layer, group: 0 },
+
+            FsmState::GroupLoad { layer, group } => {
+                let l = &mut self.layers[layer as usize];
+                let active = self.dp.load_group(group as usize, l.n_out);
+                l.weights.count_row_reads(active as u64);
+                FsmState::ComputeBit { layer, group, bit: 0 }
+            }
+
+            FsmState::ComputeBit { layer, group, bit } => {
+                let l = &self.layers[layer as usize];
+                let x_bit = self.act_bits[bit as usize];
+                let weights = &l.weights;
+                self.dp
+                    .compute_bit(x_bit, |j| weights.bit(j, bit as usize));
+                if (bit as usize) + 1 < l.n_in {
+                    FsmState::ComputeBit { layer, group, bit: bit + 1 }
+                } else {
+                    FsmState::GroupWriteback { layer, group }
+                }
+            }
+
+            FsmState::GroupWriteback { layer, group } => {
+                let li = layer as usize;
+                let is_output = li + 1 == self.layers.len();
+                if is_output {
+                    let n_in = self.layers[li].n_in;
+                    let scores = &mut self.scores;
+                    self.dp.writeback_output(n_in, |j, z| scores[j] = z);
+                } else {
+                    let n_in = self.layers[li].n_in;
+                    let thr = self.layers[li].thresholds.as_ref().expect("hidden thresholds");
+                    let next = &mut self.next_bits;
+                    self.dp
+                        .writeback_hidden(n_in, |j| thr.read(j), |j, b| next[j] = b);
+                }
+                if (group as usize) + 1 < self.groups(li) {
+                    FsmState::GroupLoad { layer, group: group + 1 }
+                } else if !is_output {
+                    std::mem::swap(&mut self.act_bits, &mut self.next_bits);
+                    FsmState::LayerPrologue { layer: layer + 1 }
+                } else {
+                    self.best_idx = 0;
+                    self.best_val = i32::MIN;
+                    FsmState::Argmax { step: 0 }
+                }
+            }
+
+            FsmState::Argmax { step } => {
+                // iterative comparison, strict > keeps the first maximum
+                if self.scores[step as usize] > self.best_val {
+                    self.best_val = self.scores[step as usize];
+                    self.best_idx = step;
+                }
+                if (step as usize) + 1 < self.scores.len() {
+                    FsmState::Argmax { step: step + 1 }
+                } else {
+                    self.display = sevenseg::decode(self.best_idx);
+                    FsmState::Done
+                }
+            }
+
+            FsmState::Done => FsmState::Done,
+        };
+    }
+
+    /// Run one full inference on a packed 784-bit image.
+    pub fn run_image(&mut self, image: &crate::bnn::Packed) -> InferenceResult {
+        assert_eq!(image.n_bits, self.dims[0], "image width");
+        // reset architectural state (paper: result held until reset)
+        self.cycles = 0;
+        self.breakdown = CycleBreakdown::default();
+        self.dp = Datapath::new(self.cfg.parallelism);
+        for l in &mut self.layers {
+            match &mut l.weights {
+                WeightMem::Bram(m) => {
+                    m.reads = 0;
+                    m.read_bits = 0;
+                }
+                WeightMem::Lut(m) => {
+                    m.reads = 0;
+                    m.read_bits = 0;
+                }
+            }
+            if let Some(t) = &l.thresholds {
+                t.reads.set(0);
+            }
+        }
+        let bits = image.to_bits();
+        self.act_bits[..bits.len()].copy_from_slice(&bits);
+        self.state = FsmState::LoadImage { substep: 0 };
+
+        let budget = super::analytic_steps(&self.dims, self.cfg.parallelism, self.cfg.mem_style);
+        while self.state != FsmState::Done {
+            self.tick();
+            assert!(
+                self.cycles <= budget + 8,
+                "FSM exceeded analytic cycle budget ({budget})"
+            );
+        }
+        self.tick(); // the DONE cycle itself (result latch)
+
+        let mut activity = Activity {
+            xnor_ops: self.dp.xnor_ops,
+            counter_increments: self.dp.counter_increments,
+            comparisons: self.dp.comparisons,
+            ..Default::default()
+        };
+        for l in &self.layers {
+            match &l.weights {
+                WeightMem::Bram(m) => {
+                    activity.bram_row_reads += m.reads;
+                    activity.bram_bits_read += m.read_bits;
+                }
+                WeightMem::Lut(m) => {
+                    activity.lutrom_row_reads += m.reads;
+                    activity.lutrom_bits_read += m.read_bits;
+                }
+            }
+            if let Some(t) = &l.thresholds {
+                activity.threshold_reads += t.reads.get();
+            }
+        }
+
+        InferenceResult {
+            digit: self.best_idx,
+            scores: self.scores.clone(),
+            cycles: self.cycles,
+            latency_ns: self.cycles as f64 * self.cfg.step_ns,
+            breakdown: self.breakdown.clone(),
+            activity,
+            sevenseg: self.display,
+        }
+    }
+
+    /// Convenience: run a batch sequentially (the hardware is single-image).
+    pub fn run_batch(&mut self, images: &[crate::bnn::Packed]) -> Vec<InferenceResult> {
+        images.iter().map(|img| self.run_image(img)).collect()
+    }
+
+    /// Run one inference while recording a VCD waveform of the
+    /// architectural signals (§5 "waveform inspection" affordance).
+    pub fn run_image_traced(
+        &mut self,
+        image: &crate::bnn::Packed,
+    ) -> (InferenceResult, super::trace::VcdTrace) {
+        use super::trace::VcdTrace;
+        // reset exactly as run_image does
+        let first = self.run_image(image); // establishes deterministic state
+        let mut trace = VcdTrace::new(self.cfg.step_ns);
+        let bits = image.to_bits();
+        self.act_bits[..bits.len()].copy_from_slice(&bits);
+        self.cycles = 0;
+        self.breakdown = CycleBreakdown::default();
+        self.state = FsmState::LoadImage { substep: 0 };
+        while self.state != FsmState::Done {
+            trace.tick(&self.sample());
+            self.tick();
+        }
+        trace.tick(&self.sample()); // the DONE cycle
+        self.tick();
+        (first, trace)
+    }
+
+    fn sample(&self) -> super::trace::Sample {
+        use super::trace::{stage_code, Sample};
+        let (layer, group, bit) = match self.state {
+            FsmState::LayerPrologue { layer } => (layer as u64, 0, 0),
+            FsmState::GroupLoad { layer, group } => (layer as u64, group as u64, 0),
+            FsmState::ComputeBit { layer, group, bit } => {
+                (layer as u64, group as u64, bit as u64)
+            }
+            FsmState::GroupWriteback { layer, group } => (layer as u64, group as u64, 0),
+            _ => (0, 0, 0),
+        };
+        Sample {
+            stage: stage_code(&self.state),
+            layer,
+            group,
+            bit,
+            active_units: self
+                .dp
+                .units
+                .iter()
+                .filter(|u| u.neuron.is_some())
+                .count() as u64,
+            best_idx: self.best_idx as u64,
+            sevenseg: self.display as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::model::model_from_sign_rows;
+    use crate::bnn::packing::pack_bits_u64;
+    use crate::util::prng::Xoshiro256;
+
+    fn random_model(seed: u64) -> BnnModel {
+        let mut rng = Xoshiro256::new(seed);
+        let dims = [784usize, 128, 64, 10];
+        let mut spec = Vec::new();
+        for (li, w) in dims.windows(2).enumerate() {
+            let rows: Vec<Vec<i8>> = (0..w[1])
+                .map(|_| (0..w[0]).map(|_| if rng.bool() { 1 } else { -1 }).collect())
+                .collect();
+            let thr = (li + 2 < dims.len()).then(|| {
+                (0..w[1])
+                    .map(|_| rng.range_i64(-(w[0] as i64) / 2, w[0] as i64 / 2) as i32)
+                    .collect()
+            });
+            spec.push((rows, thr));
+        }
+        model_from_sign_rows(spec).unwrap()
+    }
+
+    fn random_image(rng: &mut Xoshiro256) -> crate::bnn::Packed {
+        let bits: Vec<u8> = (0..784).map(|_| rng.bool() as u8).collect();
+        crate::bnn::Packed {
+            words: pack_bits_u64(&bits),
+            n_bits: 784,
+        }
+    }
+
+    #[test]
+    fn sim_matches_software_model() {
+        let model = random_model(1);
+        let mut rng = Xoshiro256::new(2);
+        for &p in &[1usize, 4, 64, 128] {
+            let mut acc = Accelerator::new(&model, SimConfig::new(p, MemStyle::Bram)).unwrap();
+            for _ in 0..3 {
+                let img = random_image(&mut rng);
+                let r = acc.run_image(&img);
+                assert_eq!(r.scores, model.logits(&img.words), "P={p} scores");
+                assert_eq!(r.digit as usize, model.predict(&img.words), "P={p} digit");
+                assert_eq!(r.sevenseg, sevenseg::decode(r.digit));
+            }
+        }
+    }
+
+    #[test]
+    fn formula_matches_execution() {
+        let model = random_model(3);
+        let mut rng = Xoshiro256::new(4);
+        let img = random_image(&mut rng);
+        for cfg in SimConfig::table1_rows() {
+            let mut acc = Accelerator::new(&model, cfg).unwrap();
+            let r = acc.run_image(&img);
+            let expect = super::super::analytic_steps(&[784, 128, 64, 10], cfg.parallelism, cfg.mem_style);
+            assert_eq!(
+                r.cycles, expect,
+                "P={} {:?}",
+                cfg.parallelism, cfg.mem_style
+            );
+            assert_eq!(r.breakdown.total(), r.cycles);
+            assert_eq!(r.breakdown.argmax, 10);
+        }
+    }
+
+    #[test]
+    fn memory_styles_agree_on_results() {
+        let model = random_model(5);
+        let mut rng = Xoshiro256::new(6);
+        let img = random_image(&mut rng);
+        let mut a = Accelerator::new(&model, SimConfig::new(16, MemStyle::Bram)).unwrap();
+        let mut b = Accelerator::new(&model, SimConfig::new(16, MemStyle::Lut)).unwrap();
+        let ra = a.run_image(&img);
+        let rb = b.run_image(&img);
+        assert_eq!(ra.digit, rb.digit);
+        assert_eq!(ra.scores, rb.scores);
+        assert_eq!(ra.cycles, rb.cycles + 1, "BRAM pays 1 extra load cycle");
+    }
+
+    #[test]
+    fn activity_accounting() {
+        let model = random_model(7);
+        let mut rng = Xoshiro256::new(8);
+        let img = random_image(&mut rng);
+        let mut acc = Accelerator::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap();
+        let r = acc.run_image(&img);
+        // every neuron's row is read exactly once per inference
+        assert_eq!(r.activity.bram_row_reads, 128 + 64 + 10);
+        assert_eq!(
+            r.activity.bram_bits_read,
+            128 * 784 + 64 * 128 + 10 * 64
+        );
+        // every (neuron, input-bit) pair is one XNOR
+        assert_eq!(r.activity.xnor_ops, 128 * 784 + 64 * 128 + 10 * 64);
+        assert_eq!(r.activity.threshold_reads, 128 + 64);
+        assert_eq!(r.activity.lutrom_bits_read, 0);
+    }
+
+    #[test]
+    fn repeat_runs_are_stable() {
+        let model = random_model(9);
+        let mut rng = Xoshiro256::new(10);
+        let img = random_image(&mut rng);
+        let mut acc = Accelerator::new(&model, SimConfig::new(32, MemStyle::Lut)).unwrap();
+        let r1 = acc.run_image(&img);
+        let r2 = acc.run_image(&img);
+        assert_eq!(r1.digit, r2.digit);
+        assert_eq!(r1.cycles, r2.cycles);
+        assert_eq!(r1.activity, r2.activity);
+    }
+}

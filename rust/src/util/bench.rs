@@ -1,0 +1,141 @@
+//! Micro-benchmark harness (criterion-substitute).
+//!
+//! `cargo bench` targets in `rust/benches/` use `harness = false` and drive
+//! this: warmup, adaptive iteration count targeting a wall-clock budget,
+//! outlier-robust summary, and paper-style table output via [`super::table`].
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Result of one benchmark: per-iteration timings in nanoseconds.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean / 1e6
+    }
+    pub fn mean_us(&self) -> f64 {
+        self.summary.mean / 1e3
+    }
+}
+
+/// Benchmark runner with a fixed measurement budget per target.
+pub struct Bench {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 10,
+            max_iters: 100_000,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(500),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+
+    /// Run `f` repeatedly; returns per-iteration wall-clock stats.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup + single-shot estimate.
+        let w0 = Instant::now();
+        let mut warm_iters = 0usize;
+        while w0.elapsed() < self.warmup || warm_iters == 0 {
+            bb(f());
+            warm_iters += 1;
+            if warm_iters > self.max_iters {
+                break;
+            }
+        }
+        let est_ns = (w0.elapsed().as_nanos() as f64 / warm_iters as f64).max(1.0);
+        let iters = ((self.budget.as_nanos() as f64 / est_ns) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            bb(f());
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        BenchResult {
+            name: name.to_string(),
+            summary: Summary::of(&samples),
+            iters,
+        }
+    }
+
+    /// Run `f` exactly `n` times, returning each iteration's wall-clock ns —
+    /// used for run-by-run series like the paper's Fig. 1.
+    pub fn run_series<T>(&self, n: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
+        for _ in 0..3 {
+            bb(f()); // fixed small warmup
+        }
+        (0..n)
+            .map(|_| {
+                let t = Instant::now();
+                bb(f());
+                t.elapsed().as_nanos() as f64
+            })
+            .collect()
+    }
+}
+
+/// `--quick` support for bench binaries: scale budgets down under CI.
+pub fn from_args() -> Bench {
+    if std::env::args().any(|a| a == "--quick") || std::env::var_os("BNN_BENCH_QUICK").is_some() {
+        Bench::quick()
+    } else {
+        Bench::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bench {
+            warmup: Duration::from_millis(5),
+            budget: Duration::from_millis(20),
+            min_iters: 5,
+            max_iters: 1000,
+        };
+        let r = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.summary.mean > 0.0);
+        assert!(r.iters >= 5);
+    }
+
+    #[test]
+    fn series_has_requested_length() {
+        let b = Bench::quick();
+        let s = b.run_series(17, || 1 + 1);
+        assert_eq!(s.len(), 17);
+    }
+}

@@ -1,0 +1,15 @@
+//! First-party infrastructure substrates.
+//!
+//! The offline build environment ships only the crates vendored for
+//! `xla 0.1.6`, so the usual ecosystem pieces are implemented here:
+//! [`prng`] (rand), [`json`] (serde_json), [`stats`]/[`bench`] (criterion),
+//! [`proptest_lite`] (proptest), [`table`] (comfy-table) and [`plot`]
+//! (textplots).  Each is small, documented and unit-tested.
+
+pub mod bench;
+pub mod json;
+pub mod plot;
+pub mod prng;
+pub mod proptest_lite;
+pub mod stats;
+pub mod table;

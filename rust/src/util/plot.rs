@@ -1,0 +1,117 @@
+//! ASCII line plots — used to render the paper's Fig. 1 (run-by-run latency
+//! series) directly in bench output, plus CSV dumping for external plotting.
+
+/// Render one or more named series as an ASCII chart of the given size.
+/// Each series is drawn with its own glyph; the y-axis is shared.
+pub fn ascii_plot(series: &[(&str, &[f64])], width: usize, height: usize) -> String {
+    assert!(!series.is_empty());
+    let glyphs = ['*', 'o', '+', 'x', '#'];
+    let max_len = series.iter().map(|(_, s)| s.len()).max().unwrap_or(0);
+    if max_len == 0 {
+        return String::from("(empty series)\n");
+    }
+    let ymin = series
+        .iter()
+        .flat_map(|(_, s)| s.iter().copied())
+        .fold(f64::INFINITY, f64::min);
+    let ymax = series
+        .iter()
+        .flat_map(|(_, s)| s.iter().copied())
+        .fold(f64::NEG_INFINITY, f64::max);
+    let span = (ymax - ymin).max(1e-12);
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, s)) in series.iter().enumerate() {
+        let glyph = glyphs[si % glyphs.len()];
+        for (i, &v) in s.iter().enumerate() {
+            let x = if max_len == 1 {
+                0
+            } else {
+                i * (width - 1) / (max_len - 1)
+            };
+            let yf = (v - ymin) / span;
+            let y = ((1.0 - yf) * (height - 1) as f64).round() as usize;
+            grid[y.min(height - 1)][x.min(width - 1)] = glyph;
+        }
+    }
+
+    let mut out = String::new();
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{ymax:>10.3} |")
+        } else if i == height - 1 {
+            format!("{ymin:>10.3} |")
+        } else {
+            format!("{:>10} |", "")
+        };
+        out.push_str(&label);
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>11}+{}\n", "", "-".repeat(width)));
+    let mut legend = format!("{:>12}", "");
+    for (si, (name, _)) in series.iter().enumerate() {
+        legend.push_str(&format!("{} = {}   ", glyphs[si % glyphs.len()], name));
+    }
+    out.push_str(&legend);
+    out.push('\n');
+    out
+}
+
+/// Write series as CSV: `index,<name1>,<name2>,...` (ragged series padded
+/// with empty cells).
+pub fn to_csv(series: &[(&str, &[f64])]) -> String {
+    let max_len = series.iter().map(|(_, s)| s.len()).max().unwrap_or(0);
+    let mut out = String::from("index");
+    for (name, _) in series {
+        out.push(',');
+        out.push_str(name);
+    }
+    out.push('\n');
+    for i in 0..max_len {
+        out.push_str(&i.to_string());
+        for (_, s) in series {
+            out.push(',');
+            if let Some(v) = s.get(i) {
+                out.push_str(&format!("{v}"));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plot_has_expected_shape() {
+        let a = [1.0, 2.0, 3.0, 2.0, 1.0];
+        let b = [3.0, 3.0, 3.0, 3.0, 3.0];
+        let s = ascii_plot(&[("a", &a), ("b", &b)], 20, 8);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 8 + 2); // grid + axis + legend
+        assert!(s.contains("a"));
+        assert!(s.contains("b"));
+        assert!(s.contains('*') && s.contains('o'));
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let a = [1.0, 2.0];
+        let b = [5.0];
+        let csv = to_csv(&[("x", &a), ("y", &b)]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "index,x,y");
+        assert_eq!(lines[1], "0,1,5");
+        assert_eq!(lines[2], "1,2,");
+    }
+
+    #[test]
+    fn constant_series_no_panic() {
+        let a = [2.0, 2.0, 2.0];
+        let s = ascii_plot(&[("c", &a)], 10, 4);
+        assert!(!s.is_empty());
+    }
+}

@@ -1,0 +1,232 @@
+//! Property-based testing runner with shrinking (the `proptest` substitute).
+//!
+//! Usage:
+//! ```ignore
+//! let mut runner = Runner::new("packing-roundtrip");
+//! runner.run(&gens::vec_u8(1..=800), |bits| {
+//!     let packed = pack(bits);
+//!     unpack(&packed, bits.len()) == *bits
+//! });
+//! ```
+//! On failure the input is shrunk (halving/simplification) and the minimal
+//! counterexample plus the reproducing seed is reported in the panic
+//! message.  Coordinator invariants (routing, batching, state) and the
+//! packing/popcount identities use this.
+
+use super::prng::Xoshiro256;
+
+/// A generator: produces a random value and enumerates shrink candidates.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Xoshiro256) -> Self::Value;
+    /// Candidate simplifications of `v`, in decreasing aggressiveness.
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value>;
+}
+
+/// Property runner.
+pub struct Runner {
+    pub name: String,
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Runner {
+    pub fn new(name: &str) -> Self {
+        let seed = std::env::var("BNN_PROPTEST_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x5EED_2025);
+        Self {
+            name: name.to_string(),
+            cases: 64,
+            seed,
+            max_shrink_steps: 200,
+        }
+    }
+
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Check `prop` over `cases` generated inputs; panics with the minimal
+    /// shrunk counterexample on failure.
+    pub fn run<G: Gen>(&self, gen: &G, prop: impl Fn(&G::Value) -> bool) {
+        let mut rng = Xoshiro256::new(self.seed);
+        for case in 0..self.cases {
+            let input = gen.generate(&mut rng);
+            if !prop(&input) {
+                let minimal = self.shrink_failure(gen, input, &prop);
+                panic!(
+                    "property '{}' failed (case {case}, seed {:#x}).\nminimal counterexample: {:?}",
+                    self.name, self.seed, minimal
+                );
+            }
+        }
+    }
+
+    fn shrink_failure<G: Gen>(
+        &self,
+        gen: &G,
+        mut failing: G::Value,
+        prop: &impl Fn(&G::Value) -> bool,
+    ) -> G::Value {
+        let mut steps = 0;
+        'outer: while steps < self.max_shrink_steps {
+            for cand in gen.shrink(&failing) {
+                steps += 1;
+                if !prop(&cand) {
+                    failing = cand;
+                    continue 'outer;
+                }
+                if steps >= self.max_shrink_steps {
+                    break;
+                }
+            }
+            break;
+        }
+        failing
+    }
+}
+
+/// Built-in generators.
+pub mod gens {
+    use super::*;
+    use std::ops::RangeInclusive;
+
+    /// Uniform u64 in range, shrinking toward the low bound.
+    pub struct U64(pub RangeInclusive<u64>);
+
+    impl Gen for U64 {
+        type Value = u64;
+        fn generate(&self, rng: &mut Xoshiro256) -> u64 {
+            let (lo, hi) = (*self.0.start(), *self.0.end());
+            lo + rng.below(hi - lo + 1)
+        }
+        fn shrink(&self, v: &u64) -> Vec<u64> {
+            let lo = *self.0.start();
+            let mut out = Vec::new();
+            if *v > lo {
+                out.push(lo);
+                out.push(lo + (*v - lo) / 2);
+                out.push(v - 1);
+            }
+            out.dedup();
+            out
+        }
+    }
+
+    /// Vec of random bits {0,1}, length drawn from range; shrinks by halving
+    /// length then zeroing elements.
+    pub struct BitVec(pub RangeInclusive<usize>);
+
+    impl Gen for BitVec {
+        type Value = Vec<u8>;
+        fn generate(&self, rng: &mut Xoshiro256) -> Vec<u8> {
+            let (lo, hi) = (*self.0.start(), *self.0.end());
+            let n = lo + rng.below((hi - lo + 1) as u64) as usize;
+            (0..n).map(|_| (rng.next_u64() & 1) as u8).collect()
+        }
+        fn shrink(&self, v: &Vec<u8>) -> Vec<Vec<u8>> {
+            let lo = *self.0.start();
+            let mut out = Vec::new();
+            if v.len() > lo {
+                out.push(v[..lo.max(v.len() / 2)].to_vec());
+                out.push(v[..v.len() - 1].to_vec());
+            }
+            if v.iter().any(|&b| b != 0) {
+                out.push(vec![0; v.len()]);
+            }
+            out
+        }
+    }
+
+    /// Pair of independent generators.
+    pub struct Pair<A, B>(pub A, pub B);
+
+    impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+        type Value = (A::Value, B::Value);
+        fn generate(&self, rng: &mut Xoshiro256) -> Self::Value {
+            (self.0.generate(rng), self.1.generate(rng))
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            let mut out: Vec<Self::Value> = self
+                .0
+                .shrink(&v.0)
+                .into_iter()
+                .map(|a| (a, v.1.clone()))
+                .collect();
+            out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+            out
+        }
+    }
+
+    /// Vec of u64 drawn from an element range; shrinks length then values.
+    pub struct VecU64 {
+        pub len: RangeInclusive<usize>,
+        pub elem: RangeInclusive<u64>,
+    }
+
+    impl Gen for VecU64 {
+        type Value = Vec<u64>;
+        fn generate(&self, rng: &mut Xoshiro256) -> Vec<u64> {
+            let n = *self.len.start()
+                + rng.below((*self.len.end() - *self.len.start() + 1) as u64) as usize;
+            let (lo, hi) = (*self.elem.start(), *self.elem.end());
+            (0..n).map(|_| lo + rng.below(hi - lo + 1)).collect()
+        }
+        fn shrink(&self, v: &Vec<u64>) -> Vec<Vec<u64>> {
+            let lo_len = *self.len.start();
+            let lo = *self.elem.start();
+            let mut out = Vec::new();
+            if v.len() > lo_len {
+                out.push(v[..lo_len.max(v.len() / 2)].to_vec());
+            }
+            if v.iter().any(|&x| x != lo) {
+                out.push(v.iter().map(|_| lo).collect());
+            }
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::gens::*;
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Runner::new("trivial").run(&U64(0..=100), |&v| v <= 100);
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let result = std::panic::catch_unwind(|| {
+            Runner::new("gt-10-fails").run(&U64(0..=1000), |&v| v <= 10);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // The minimal failing value for `v <= 10` over shrink-toward-0 is 11.
+        assert!(msg.contains("11"), "expected minimal 11 in: {msg}");
+    }
+
+    #[test]
+    fn bitvec_respects_length_range() {
+        let g = BitVec(3..=17);
+        let mut rng = Xoshiro256::new(1);
+        for _ in 0..100 {
+            let v = g.generate(&mut rng);
+            assert!((3..=17).contains(&v.len()));
+            assert!(v.iter().all(|&b| b <= 1));
+        }
+    }
+
+    #[test]
+    fn pair_shrinks_both_sides() {
+        let g = Pair(U64(0..=10), U64(0..=10));
+        let shrunk = g.shrink(&(5, 7));
+        assert!(shrunk.iter().any(|&(a, b)| a < 5 && b == 7));
+        assert!(shrunk.iter().any(|&(a, b)| a == 5 && b < 7));
+    }
+}

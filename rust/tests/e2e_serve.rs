@@ -1,0 +1,142 @@
+//! End-to-end serving tests: the coordinator + router over real artifacts
+//! under concurrent load (requires `make artifacts`).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bnn_fpga::coordinator::{
+    BatcherConfig, Coordinator, NativeBackend, PjrtBackend, Router, SimBackend,
+};
+use bnn_fpga::data::Dataset;
+use bnn_fpga::runtime::Engine;
+use bnn_fpga::sim::{MemStyle, SimConfig};
+use bnn_fpga::{artifacts_dir, mem};
+
+fn setup() -> (bnn_fpga::bnn::BnnModel, Dataset) {
+    let dir = artifacts_dir();
+    let model = mem::load_model(&dir.join("weights.json")).expect("run `make artifacts`");
+    let ds = Dataset::load_mem_subset(&dir.join("mem")).unwrap();
+    (model, ds)
+}
+
+#[test]
+fn coordinator_over_pjrt_serves_correctly() {
+    let (model, ds) = setup();
+    let engine = Arc::new(Engine::load(&artifacts_dir()).unwrap());
+    let coord = Coordinator::start(
+        Arc::new(PjrtBackend::new(engine).unwrap()),
+        BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_micros(500),
+        },
+        1,
+    )
+    .unwrap();
+    let images: Vec<_> = ds.images.iter().take(40).cloned().collect();
+    let responses = coord.infer_many(images.clone()).unwrap();
+    for (img, r) in images.iter().zip(&responses) {
+        assert_eq!(r.digit as usize, model.predict(&img.words));
+        assert_eq!(r.backend, "pjrt");
+    }
+    assert_eq!(coord.metrics.completed.load(std::sync::atomic::Ordering::Relaxed), 40);
+    coord.shutdown();
+}
+
+#[test]
+fn concurrent_submitters_no_loss_no_mixup() {
+    let (model, ds) = setup();
+    let coord = Arc::new(
+        Coordinator::start(
+            Arc::new(NativeBackend::new(model.clone())),
+            BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(100),
+            },
+            3,
+        )
+        .unwrap(),
+    );
+    let mut joins = Vec::new();
+    for t in 0..8u64 {
+        let coord = coord.clone();
+        let ds = ds.clone();
+        let model = model.clone();
+        joins.push(std::thread::spawn(move || {
+            for i in 0..25usize {
+                let idx = ((t as usize) * 25 + i) % ds.len();
+                let img = ds.images[idx].clone();
+                let r = coord.infer(img.clone()).unwrap();
+                // response must correspond to *this* image (no cross-wiring)
+                assert_eq!(r.logits, model.logits(&img.words), "thread {t} req {i}");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    assert_eq!(
+        coord.metrics.completed.load(std::sync::atomic::Ordering::Relaxed),
+        200
+    );
+    assert_eq!(coord.metrics.rejected.load(std::sync::atomic::Ordering::Relaxed), 0);
+}
+
+#[test]
+fn router_composes_heterogeneous_backends() {
+    let (model, ds) = setup();
+    let mut router = Router::new();
+    router.register(
+        "native",
+        Coordinator::start(
+            Arc::new(NativeBackend::new(model.clone())),
+            BatcherConfig::default(),
+            1,
+        )
+        .unwrap(),
+    );
+    router.register(
+        "fpga-sim",
+        Coordinator::start(
+            Arc::new(SimBackend::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap()),
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_micros(10),
+            },
+            1,
+        )
+        .unwrap(),
+    );
+    for (i, img) in ds.images.iter().take(12).enumerate() {
+        let name = if i % 2 == 0 { "native" } else { "fpga-sim" };
+        let r = router.route(name, img.clone()).unwrap();
+        assert_eq!(r.digit as usize, model.predict(&img.words));
+    }
+    // least-queue routing also works and serves correctly
+    for img in ds.images.iter().take(6) {
+        let r = router.route_least_queue(img.clone()).unwrap();
+        assert_eq!(r.digit as usize, model.predict(&img.words));
+    }
+}
+
+#[test]
+fn throughput_sanity_native() {
+    // the native path should comfortably exceed 10k req/s even in CI
+    let (model, ds) = setup();
+    let coord = Coordinator::start(
+        Arc::new(NativeBackend::new(model)),
+        BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_micros(50),
+        },
+        2,
+    )
+    .unwrap();
+    let n = 2000;
+    let images: Vec<_> = (0..n).map(|i| ds.images[i % ds.len()].clone()).collect();
+    let t0 = std::time::Instant::now();
+    let responses = coord.infer_many(images).unwrap();
+    let rps = n as f64 / t0.elapsed().as_secs_f64();
+    assert_eq!(responses.len(), n);
+    assert!(rps > 10_000.0, "native throughput only {rps:.0} req/s");
+    coord.shutdown();
+}

@@ -1,0 +1,193 @@
+//! Cross-layer integration tests (require `make artifacts`).
+//!
+//! The central faithfulness claim: the three inference paths — native
+//! bit-packed Rust, the cycle-accurate FPGA simulator, and the
+//! PJRT-compiled Pallas/JAX artifacts — produce **identical logits** on
+//! the trained model, and the `.mem` hardware export is equivalent to the
+//! JSON export.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use bnn_fpga::coordinator::{InferBackend, NativeBackend, PjrtBackend, SimBackend};
+use bnn_fpga::data::Dataset;
+use bnn_fpga::runtime::Engine;
+use bnn_fpga::sim::{Accelerator, MemStyle, SimConfig};
+use bnn_fpga::{artifacts_dir, mem};
+
+fn require_artifacts() -> PathBuf {
+    let dir = artifacts_dir();
+    assert!(
+        dir.join("weights.json").exists(),
+        "run `make artifacts` before `cargo test` (missing {})",
+        dir.join("weights.json").display()
+    );
+    dir
+}
+
+#[test]
+fn mem_export_equals_json_export() {
+    let dir = require_artifacts();
+    let from_json = mem::load_model(&dir.join("weights.json")).unwrap();
+    let from_mem =
+        mem::weights::load_model_from_mem(&dir.join("mem"), &bnn_fpga::BNN_DIMS).unwrap();
+    assert_eq!(from_json.layers.len(), from_mem.layers.len());
+    for (a, b) in from_json.layers.iter().zip(from_mem.layers.iter()) {
+        assert_eq!(a.weights, b.weights, "packed weights differ");
+        assert_eq!(a.thresholds, b.thresholds, "thresholds differ");
+    }
+}
+
+#[test]
+fn sim_equals_native_on_full_subset() {
+    let dir = require_artifacts();
+    let model = mem::load_model(&dir.join("weights.json")).unwrap();
+    let ds = Dataset::load_mem_subset(&dir.join("mem")).unwrap();
+    for &p in &[1usize, 16, 64] {
+        let mut acc = Accelerator::new(&model, SimConfig::new(p, MemStyle::Bram)).unwrap();
+        for (i, img) in ds.images.iter().enumerate() {
+            let r = acc.run_image(img);
+            assert_eq!(r.scores, model.logits(&img.words), "P={p} image {i}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_equals_native_on_subset() {
+    let dir = require_artifacts();
+    let model = mem::load_model(&dir.join("weights.json")).unwrap();
+    let ds = Dataset::load_mem_subset(&dir.join("mem")).unwrap();
+    let engine = Arc::new(Engine::load(&dir).unwrap());
+    // batch-1 artifact
+    for (i, img) in ds.images.iter().take(25).enumerate() {
+        let pjrt = engine
+            .run_u32_to_i32("bnn_b1", &img.to_u32_words())
+            .unwrap();
+        assert_eq!(pjrt, model.logits(&img.words), "image {i}");
+    }
+    // batched artifact: 16 at once
+    let mut input = Vec::new();
+    for img in ds.images.iter().take(16) {
+        input.extend(img.to_u32_words());
+    }
+    let out = engine.run_u32_to_i32("bnn_b16", &input).unwrap();
+    for (i, img) in ds.images.iter().take(16).enumerate() {
+        assert_eq!(&out[i * 10..(i + 1) * 10], model.logits(&img.words), "row {i}");
+    }
+}
+
+#[test]
+fn pjrt_backend_ladder_padding_is_invisible() {
+    let dir = require_artifacts();
+    let model = mem::load_model(&dir.join("weights.json")).unwrap();
+    let ds = Dataset::load_mem_subset(&dir.join("mem")).unwrap();
+    let backend = PjrtBackend::new(Arc::new(Engine::load(&dir).unwrap())).unwrap();
+    // 13 is not in the ladder → padded to 16; results must match native
+    let images: Vec<_> = ds.images.iter().take(13).cloned().collect();
+    let out = backend.infer_batch(&images).unwrap();
+    assert_eq!(out.len(), 13);
+    for (i, img) in images.iter().enumerate() {
+        assert_eq!(out[i], model.logits(&img.words), "padded row {i}");
+    }
+}
+
+#[test]
+fn subset_accuracy_in_paper_band() {
+    // §4.1: the paper reports 84/100; our synthetic-task model lands in the
+    // high-80s/low-90s (EXPERIMENTS.md) — accept the band [0.75, 1.0].
+    let dir = require_artifacts();
+    let model = mem::load_model(&dir.join("weights.json")).unwrap();
+    let ds = Dataset::load_mem_subset(&dir.join("mem")).unwrap();
+    let correct = ds
+        .images
+        .iter()
+        .zip(&ds.labels)
+        .filter(|(img, &l)| model.predict(&img.words) == l as usize)
+        .count();
+    assert!(
+        (75..=100).contains(&correct),
+        "{correct}/100 outside the expected band"
+    );
+}
+
+#[test]
+fn full_test_set_accuracy_matches_train_log() {
+    let dir = require_artifacts();
+    let model = mem::load_model(&dir.join("weights.json")).unwrap();
+    let test = Dataset::load_idx_test(&dir.join("data")).unwrap();
+    let correct = test
+        .images
+        .iter()
+        .zip(&test.labels)
+        .filter(|(img, &l)| model.predict(&img.words) == l as usize)
+        .count();
+    let acc = correct as f64 / test.len() as f64;
+    // train_log.json's folded accuracy was measured through the Pallas
+    // path in Python — the Rust path must agree within 1 %.
+    let log = std::fs::read_to_string(dir.join("train_log.json")).unwrap();
+    let parsed = bnn_fpga::util::json::Json::parse(&log).unwrap();
+    let folded = parsed
+        .get("bnn")
+        .unwrap()
+        .get("folded_accuracy")
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    assert!(
+        (acc - folded).abs() < 0.01,
+        "rust {acc:.4} vs python folded {folded:.4}"
+    );
+}
+
+#[test]
+fn engine_rejects_malformed_inputs() {
+    let dir = require_artifacts();
+    let engine = Engine::load(&dir).unwrap();
+    // wrong length
+    assert!(engine.run_u32_to_i32("bnn_b1", &[0u32; 7]).is_err());
+    // wrong dtype pairing
+    assert!(engine.run_f32_to_f32("bnn_b1", &[0f32; 25]).is_err());
+    // unknown artifact
+    assert!(engine.run_u32_to_i32("bnn_b3", &[0u32; 75]).is_err());
+}
+
+#[test]
+fn cnn_artifact_runs_and_is_confident() {
+    let dir = require_artifacts();
+    let engine = Engine::load(&dir).unwrap();
+    let test = Dataset::load_idx_test(&dir.join("data")).unwrap();
+    // CNN takes float pixels; reconstruct them from the idx file
+    let (imgs, _, _) = mem::read_idx_images(&dir.join("data/t10k-images-idx3-ubyte")).unwrap();
+    let mut correct = 0;
+    let n = 50;
+    for i in 0..n {
+        let pixels: Vec<f32> = imgs[i].iter().map(|&p| p as f32 / 255.0).collect();
+        let logits = engine.run_f32_to_f32("cnn_b1", &pixels).unwrap();
+        let pred = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        correct += (pred == test.labels[i] as usize) as usize;
+    }
+    assert!(correct >= 45, "CNN only {correct}/{n} — §4.6 expects ≈99 %");
+}
+
+#[test]
+fn all_three_backends_agree_as_backends() {
+    let dir = require_artifacts();
+    let model = mem::load_model(&dir.join("weights.json")).unwrap();
+    let ds = Dataset::load_mem_subset(&dir.join("mem")).unwrap();
+    let images: Vec<_> = ds.images.iter().take(10).cloned().collect();
+
+    let native = NativeBackend::new(model.clone());
+    let sim = SimBackend::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap();
+    let pjrt = PjrtBackend::new(Arc::new(Engine::load(&dir).unwrap())).unwrap();
+
+    let a = native.infer_batch(&images).unwrap();
+    let b = sim.infer_batch(&images).unwrap();
+    let c = pjrt.infer_batch(&images).unwrap();
+    assert_eq!(a, b, "native vs fpga-sim");
+    assert_eq!(a, c, "native vs pjrt");
+}

@@ -1,0 +1,104 @@
+//! Simulator calibration against the paper's published Table 1 (executed,
+//! not just the closed form) plus the §4.2.2 speedup narrative.
+
+use bnn_fpga::data::Dataset;
+use bnn_fpga::sim::{Accelerator, MemStyle, SimConfig};
+use bnn_fpga::{artifacts_dir, mem};
+
+/// Paper Table 1: (P, style, latency ns, speedup).
+const TABLE1: [(usize, MemStyle, f64, f64); 13] = [
+    (1, MemStyle::Bram, 1_096_045.0, 1.00),
+    (1, MemStyle::Lut, 1_096_035.0, 1.00),
+    (4, MemStyle::Bram, 274_465.0, 4.00),
+    (4, MemStyle::Lut, 274_455.0, 4.00),
+    (8, MemStyle::Bram, 137_645.0, 7.96),
+    (8, MemStyle::Lut, 137_635.0, 7.96),
+    (16, MemStyle::Bram, 68_905.0, 15.90),
+    (16, MemStyle::Lut, 68_895.0, 15.90),
+    (32, MemStyle::Bram, 34_865.0, 31.43),
+    (32, MemStyle::Lut, 34_855.0, 31.45),
+    (64, MemStyle::Bram, 17_845.0, 61.42),
+    (64, MemStyle::Lut, 17_835.0, 61.45),
+    (128, MemStyle::Lut, 9_865.0, 111.10),
+];
+
+fn setup() -> (bnn_fpga::bnn::BnnModel, Dataset) {
+    let dir = artifacts_dir();
+    let model = mem::load_model(&dir.join("weights.json")).expect("run `make artifacts`");
+    let ds = Dataset::load_mem_subset(&dir.join("mem")).unwrap();
+    (model, ds)
+}
+
+#[test]
+fn executed_latency_within_1_2_percent_of_paper() {
+    let (model, ds) = setup();
+    for (p, style, paper_ns, _) in TABLE1 {
+        let mut acc = Accelerator::new(&model, SimConfig::new(p, style)).unwrap();
+        let r = acc.run_image(&ds.images[0]);
+        let err = (r.latency_ns - paper_ns).abs() / paper_ns;
+        let tol = if p == 128 { 0.012 } else { 0.001 };
+        assert!(
+            err <= tol,
+            "P={p} {style:?}: sim {} vs paper {paper_ns} ({:.3}%)",
+            r.latency_ns,
+            err * 100.0
+        );
+    }
+}
+
+#[test]
+fn speedup_column_reproduces() {
+    let (model, ds) = setup();
+    let base = {
+        let mut acc = Accelerator::new(&model, SimConfig::new(1, MemStyle::Bram)).unwrap();
+        acc.run_image(&ds.images[0]).latency_ns
+    };
+    for (p, style, _, paper_speedup) in TABLE1 {
+        let mut acc = Accelerator::new(&model, SimConfig::new(p, style)).unwrap();
+        let s = base / acc.run_image(&ds.images[0]).latency_ns;
+        assert!(
+            (s - paper_speedup).abs() / paper_speedup < 0.015,
+            "P={p} {style:?}: speedup {s:.2} vs paper {paper_speedup}"
+        );
+    }
+}
+
+#[test]
+fn speedup_nonlinearity_narrative() {
+    // §4.2.2: sub-linear speedup that worsens with P — 15.9 @16, ~61.4 @64,
+    // ~111 @128 (vs ideal 16/64/128).
+    let (model, ds) = setup();
+    let lat = |p: usize, style| {
+        let mut acc = Accelerator::new(&model, SimConfig::new(p, style)).unwrap();
+        acc.run_image(&ds.images[0]).latency_ns
+    };
+    let base = lat(1, MemStyle::Bram);
+    let eff = |p: usize, style| base / lat(p, style) / p as f64;
+    assert!(eff(16, MemStyle::Bram) < 1.0);
+    assert!(eff(64, MemStyle::Bram) < eff(16, MemStyle::Bram));
+    assert!(eff(128, MemStyle::Lut) < eff(64, MemStyle::Lut));
+    // but never catastropically so (>80 % efficiency everywhere)
+    assert!(eff(128, MemStyle::Lut) > 0.8);
+}
+
+#[test]
+fn latency_is_input_independent() {
+    // a hardware FSM takes the same cycles regardless of pixel values
+    let (model, ds) = setup();
+    let mut acc = Accelerator::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap();
+    let cycles: Vec<u64> = ds.images.iter().take(10).map(|i| acc.run_image(i).cycles).collect();
+    assert!(cycles.windows(2).all(|w| w[0] == w[1]), "{cycles:?}");
+}
+
+#[test]
+fn strict_80mhz_mode_scales_latency_only() {
+    let (model, ds) = setup();
+    let mut a = Accelerator::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap();
+    let mut b =
+        Accelerator::new(&model, SimConfig::new(64, MemStyle::Bram).strict_80mhz()).unwrap();
+    let ra = a.run_image(&ds.images[0]);
+    let rb = b.run_image(&ds.images[0]);
+    assert_eq!(ra.cycles, rb.cycles);
+    assert_eq!(ra.digit, rb.digit);
+    assert!((rb.latency_ns / ra.latency_ns - 1.25).abs() < 1e-9);
+}
