@@ -1,0 +1,27 @@
+# Build-path driver. The Rust request path never needs Python at runtime;
+# `make artifacts` runs the L1 pipeline once (requires JAX) and everything
+# else picks the artifacts up from ./artifacts (see DESIGN.md).
+
+ARTIFACTS ?= artifacts
+
+.PHONY: artifacts build test bench doc clean
+
+artifacts:
+	cd python && python3 -m compile.train --out ../$(ARTIFACTS)
+	cd python && python3 -m compile.aot --out ../$(ARTIFACTS)
+
+build:
+	cargo build --release
+
+test:
+	cargo build --release && cargo test -q
+
+bench:
+	cargo bench --bench hotpath -- --quick
+
+doc:
+	cargo doc --no-deps
+
+clean:
+	cargo clean
+	rm -rf $(ARTIFACTS)

@@ -7,9 +7,7 @@
 //! cargo run --release --example accelerator_debug [-- --parallelism 4]
 //! ```
 
-use bnn_fpga::data::Dataset;
 use bnn_fpga::sim::{sevenseg, Accelerator, FsmState, MemStyle, SimConfig};
-use bnn_fpga::{artifacts_dir, mem};
 
 fn main() -> anyhow::Result<()> {
     let parallelism: usize = std::env::args()
@@ -18,8 +16,7 @@ fn main() -> anyhow::Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or(64);
 
-    let model = mem::load_model(&artifacts_dir().join("weights.json"))?;
-    let ds = Dataset::load_mem_subset(&artifacts_dir().join("mem"))?;
+    let (model, ds, _trained) = bnn_fpga::load_model_or_synth(10);
     let cfg = SimConfig::new(parallelism, MemStyle::Bram);
     let mut acc = Accelerator::new(&model, cfg)?;
 

@@ -8,16 +8,16 @@
 //! ```
 //! `--all` extends the sweep to every power of two plus off-grid points.
 
-use bnn_fpga::data::Dataset;
 use bnn_fpga::estimate::{power, resources, timing};
 use bnn_fpga::sim::{analytic_steps, Accelerator, MemStyle, SimConfig};
 use bnn_fpga::util::table::{fmt_thousands, Align, Table};
-use bnn_fpga::{artifacts_dir, mem, BNN_DIMS};
+use bnn_fpga::BNN_DIMS;
 
 fn main() -> anyhow::Result<()> {
     let all = std::env::args().any(|a| a == "--all");
-    let model = mem::load_model(&artifacts_dir().join("weights.json"))?;
-    let ds = Dataset::load_mem_subset(&artifacts_dir().join("mem"))?;
+    // Cycle counts are weight/input-independent, so the synthetic fallback
+    // sweeps identically to the trained model.
+    let (model, ds, _trained) = bnn_fpga::load_model_or_synth(10);
     let img = &ds.images[0];
 
     let configs: Vec<SimConfig> = if all {

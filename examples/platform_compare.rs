@@ -13,18 +13,16 @@
 
 use std::sync::Arc;
 
-use bnn_fpga::data::Dataset;
 use bnn_fpga::estimate::{asic, gpu_model::GpuModel, power};
 use bnn_fpga::runtime::Engine;
 use bnn_fpga::sim::{Accelerator, MemStyle, SimConfig};
 use bnn_fpga::util::bench::Bench;
 use bnn_fpga::util::table::{Align, Table};
-use bnn_fpga::{artifacts_dir, mem, BNN_DIMS};
+use bnn_fpga::{artifacts_dir, BNN_DIMS};
 
 fn main() -> anyhow::Result<()> {
     let dir = artifacts_dir();
-    let model = mem::load_model(&dir.join("weights.json"))?;
-    let ds = Dataset::load_mem_subset(&dir.join("mem"))?;
+    let (model, ds, _trained) = bnn_fpga::load_model_or_synth(10);
     let img = &ds.images[0];
 
     // FPGA design point (§4.5: 64× BRAM).
@@ -34,13 +32,30 @@ fn main() -> anyhow::Result<()> {
     let fpga_pow = power::estimate(&BNN_DIMS, &cfg);
     let fpga_ms = fpga.latency_ns / 1e6;
 
-    // CPU batch-1 latency, measured through the AOT artifact.
-    let engine = Arc::new(Engine::load(&dir)?);
-    engine.prepare("bnn_b1")?;
-    let input = img.to_u32_words();
+    // CPU batch-1 latency, measured through the AOT artifact; falls back to
+    // the native blocked kernel when the PJRT runtime/artifacts are absent.
     let bench = Bench::quick();
-    let cpu = bench.run("cpu-b1", || engine.run_u32_to_i32("bnn_b1", &input).unwrap());
-    let cpu_ms = cpu.summary.mean / 1e6;
+    let (cpu_label, cpu_ms) = match Engine::load(&dir) {
+        Ok(engine) => {
+            let engine = Arc::new(engine);
+            engine.prepare("bnn_b1")?;
+            let input = img.to_u32_words();
+            let cpu = bench.run("cpu-b1", || engine.run_u32_to_i32("bnn_b1", &input).unwrap());
+            ("CPU (PJRT, measured)", cpu.summary.mean / 1e6)
+        }
+        Err(e) => {
+            println!("(PJRT unavailable — CPU row measured via the native blocked kernel: {e})");
+            let block = bnn_fpga::bnn::DEFAULT_BLOCK_ROWS;
+            // allocation-free hot path, as the serving loop runs it
+            let mut scratch = bnn_fpga::bnn::model::Scratch::default();
+            let mut out = vec![0i32; 10];
+            let cpu = bench.run("cpu-native-b1", || {
+                model.logits_into_blocked(&img.words, &mut scratch, &mut out, block);
+                out[0]
+            });
+            ("CPU (native, measured)", cpu.summary.mean / 1e6)
+        }
+    };
 
     // GPU + ASIC models.
     let gpu = GpuModel::default();
@@ -60,7 +75,7 @@ fn main() -> anyhow::Result<()> {
         "yes".into(),
     ]);
     t.row(vec![
-        "CPU (PJRT, measured)".into(),
+        cpu_label.into(),
         format!("{cpu_ms:.4}"),
         "~15 (host share)".into(),
         format!("{:.1}", 15.0 * cpu_ms * 1e3),

@@ -1,32 +1,46 @@
-//! Quickstart: load the trained BNN, classify digits, inspect the
-//! accelerator's view of one inference.
+//! Quickstart: load the BNN, classify digits, inspect the accelerator's
+//! view of one inference.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
+//!
+//! Runs out of the box: with `make artifacts` it uses the trained model and
+//! the paper's §4.1 subset; without artifacts it falls back to a
+//! deterministic synthetic model + dataset (accuracy is chance, but every
+//! mechanism — packing, kernels, simulator, display — behaves identically).
 
-use bnn_fpga::data::{synth, Dataset};
+use bnn_fpga::data::synth;
 use bnn_fpga::sim::{sevenseg, Accelerator, MemStyle, SimConfig};
-use bnn_fpga::{artifacts_dir, mem};
 
 fn main() -> anyhow::Result<()> {
-    // 1. Load the folded, bit-packed model exported by `make artifacts`.
-    let dir = artifacts_dir();
-    let model = mem::load_model(&dir.join("weights.json"))?;
+    // 1. Trained artifacts when present, synthetic stand-ins otherwise.
+    let (model, ds, trained) = bnn_fpga::load_model_or_synth(100);
     println!(
-        "loaded 784-128-64-10 BNN ({} packed weight words, thresholds folded per §3.1 Eq.4)",
-        model.layers.iter().map(|l| l.weights.len()).sum::<usize>()
+        "loaded 784-128-64-10 BNN ({} packed weight words{})",
+        model.layers.iter().map(|l| l.weights.len()).sum::<usize>(),
+        if trained {
+            ", thresholds folded per §3.1 Eq.4"
+        } else {
+            " — UNTRAINED synthetic fallback; run `make artifacts` for the real model"
+        }
     );
 
-    // 2. Software inference on the paper's §4.1 test subset.
-    let ds = Dataset::load_mem_subset(&dir.join("mem"))?;
+    // 2. Software inference, scalar vs blocked kernel (bit-identical).
     let correct = ds
         .images
         .iter()
         .zip(&ds.labels)
         .filter(|(img, &l)| model.predict(&img.words) == l as usize)
         .count();
-    println!("software path : {correct}/{} on the 100-image subset", ds.len());
+    println!("software path : {correct}/{} on the test subset", ds.len());
+    let x = &ds.images[0];
+    assert_eq!(
+        model.logits_blocked(&x.words, bnn_fpga::bnn::DEFAULT_BLOCK_ROWS),
+        model.logits(&x.words)
+    );
+    println!("blocked kernel: bit-identical to the scalar path (block_rows = {})",
+        bnn_fpga::bnn::DEFAULT_BLOCK_ROWS);
 
     // 3. The same image through the cycle-accurate FPGA simulator at the
     //    paper's chosen design point (64× parallelism, BRAM weights).
@@ -45,7 +59,7 @@ fn main() -> anyhow::Result<()> {
     println!("seven-segment display (active-low 0b{:07b}):", r.sevenseg);
     print!("{}", sevenseg::ascii(r.sevenseg));
 
-    // 5. No artifacts? The library also ships a synthetic generator:
+    // 5. The synthetic generator also renders demo digits directly:
     let demo = synth::generate_dataset(1, 42);
     println!("\na synthetic digit (label {}):", demo.labels[0]);
     print!("{}", synth::ascii_digit(&demo.images[0]));

@@ -1,125 +1,203 @@
 //! END-TO-END driver (DESIGN.md §Validation): the full three-layer stack
-//! serving a real workload.
+//! serving a real workload, including the 1-vs-N worker-pool comparison.
 //!
-//! * build path (ran beforehand by `make artifacts`): JAX STE training →
-//!   threshold folding → `.mem`/JSON export → Pallas-kernel AOT → HLO text;
-//! * request path (this binary, no Python): the Rust coordinator batches
-//!   incoming classification requests and routes them to all three
-//!   backends — native bit-packed, PJRT-compiled AOT artifacts, and the
-//!   cycle-accurate FPGA simulator — reporting accuracy, latency
-//!   percentiles and throughput per backend.
+//! * build path (optional, ran beforehand by `make artifacts`): JAX STE
+//!   training → threshold folding → `.mem`/JSON export → Pallas-kernel AOT
+//!   → HLO text; without it a deterministic synthetic model/dataset is
+//!   substituted (mechanics and throughput identical, accuracy ≈ chance);
+//! * request path (this binary, no Python): classification requests are
+//!   batched and served by
+//!   - a single-worker scalar-kernel coordinator (the baseline),
+//!   - the sharded multi-worker pool with the blocked kernel,
+//!   - the PJRT backend (when the runtime + artifacts are available),
+//!   - a pool of cycle-accurate FPGA simulator replicas,
+//!   reporting accuracy, latency percentiles and throughput per backend.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example serve_digits [-- --requests 2000]
+//! cargo run --release --example serve_digits -- --requests 2000 --workers 4 --block-rows 16
 //! ```
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use bnn_fpga::cli::args::Args;
 use bnn_fpga::coordinator::{
-    BatcherConfig, Coordinator, NativeBackend, PjrtBackend, Router, SimBackend,
+    BatcherConfig, Coordinator, InferService, NativeBackend, PjrtBackend, WorkerPool,
 };
-use bnn_fpga::data::Dataset;
+use bnn_fpga::data::{synth, Dataset};
 use bnn_fpga::runtime::Engine;
 use bnn_fpga::sim::{MemStyle, SimConfig};
+use bnn_fpga::util::stats::LatencyHistogram;
 use bnn_fpga::util::table::{Align, Table};
-use bnn_fpga::{artifacts_dir, mem};
+use bnn_fpga::{artifacts_dir, bnn};
 
 fn main() -> anyhow::Result<()> {
-    let n_requests: usize = std::env::args()
-        .skip_while(|a| a != "--requests")
-        .nth(1)
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(1000);
+    let args = Args::parse_from(std::env::args().skip(1))?;
+    let n_requests = args.usize_or("requests", 1000)?;
+    let workers = args.usize_or("workers", 4)?;
+    let block_rows = args.usize_or("block-rows", bnn::DEFAULT_BLOCK_ROWS)?;
+    anyhow::ensure!(workers >= 1, "--workers must be ≥ 1");
+    anyhow::ensure!(block_rows >= 1, "--block-rows must be ≥ 1");
 
     let dir = artifacts_dir();
-    let model = mem::load_model(&dir.join("weights.json"))?;
-    let test = Dataset::load_idx_test(&dir.join("data"))?;
+    let (model, subset, trained) = bnn_fpga::load_model_or_synth(100);
+    let test = match Dataset::load_idx_test(&dir.join("data")) {
+        Ok(t) => t,
+        Err(_) => {
+            if trained {
+                subset
+            } else {
+                synth::generate_dataset(200, 7)
+            }
+        }
+    };
     println!(
-        "model 784-128-64-10, test set {} images, {n_requests} requests/backend",
+        "model 784-128-64-10{}, test set {} images, {n_requests} requests/backend, \
+         {workers} workers, block_rows {block_rows}",
+        if trained { "" } else { " (untrained synthetic fallback)" },
         test.len()
     );
 
-    // --- assemble the router over all three backends -----------------------
-    let engine = Arc::new(Engine::load(&dir)?);
-    println!("PJRT platform: {}", engine.platform());
-    engine.warm("bnn")?; // compile the artifact ladder up front
-
-    let mut router = Router::new();
-    router.register(
-        "native",
-        Coordinator::start(
-            Arc::new(NativeBackend::new(model.clone())),
-            BatcherConfig {
-                max_batch: 64,
-                max_wait: Duration::from_micros(100),
-            },
-            2,
-        )?,
-    );
-    router.register(
-        "pjrt",
-        Coordinator::start(
-            Arc::new(PjrtBackend::new(engine)?),
-            BatcherConfig {
-                max_batch: 128,
-                max_wait: Duration::from_micros(300),
-            },
-            1, // the engine serializes dispatch; PJRT-CPU parallelizes inside
-        )?,
-    );
-    router.register(
-        "fpga-sim",
-        Coordinator::start(
-            Arc::new(SimBackend::new(&model, SimConfig::new(64, MemStyle::Bram))?),
-            BatcherConfig {
-                max_batch: 1, // the hardware is single-image
-                max_wait: Duration::from_micros(10),
-            },
-            1,
-        )?,
-    );
-
-    // --- drive each backend with the same workload -------------------------
     let mut table = Table::new(&[
-        "Backend", "Requests", "Accuracy", "Throughput (req/s)", "p50 (µs)", "p99 (µs)",
-        "Mean batch",
+        "Backend", "Workers", "Requests", "Accuracy", "Throughput (req/s)", "p50 (µs)",
+        "p99 (µs)", "Mean batch",
     ])
     .align(0, Align::Left);
 
-    for name in ["native", "pjrt", "fpga-sim"] {
-        let coord = router.get(name)?;
-        let n = if name == "fpga-sim" {
-            n_requests.min(300) // cycle-accurate sim is deliberately slow
-        } else {
-            n_requests
-        };
+    // Serve `n` requests through `service`; returns (correct, wall_seconds).
+    let run_load = |n: usize, service: &dyn InferService| -> anyhow::Result<(usize, f64)> {
         let images: Vec<_> = (0..n).map(|i| test.images[i % test.len()].clone()).collect();
         let labels: Vec<_> = (0..n).map(|i| test.labels[i % test.len()]).collect();
-
         let t0 = Instant::now();
-        let responses = coord.infer_many(images)?;
+        let responses = service.infer_many(images)?;
         let wall = t0.elapsed().as_secs_f64();
-
         let correct = responses
             .iter()
             .zip(&labels)
             .filter(|(r, &l)| r.digit == l)
             .count();
-        let lat = coord.metrics.latency_snapshot();
+        Ok((correct, wall))
+    };
+    let mut add_row = |name: &str,
+                       svc_workers: usize,
+                       n: usize,
+                       correct: usize,
+                       wall: f64,
+                       lat: LatencyHistogram,
+                       mean_batch: f64| {
         table.row(vec![
             name.into(),
+            svc_workers.to_string(),
             n.to_string(),
             format!("{:.1}%", correct as f64 / n as f64 * 100.0),
             format!("{:.0}", n as f64 / wall),
             (lat.percentile_ns(50.0) / 1000).to_string(),
             (lat.percentile_ns(99.0) / 1000).to_string(),
-            format!("{:.1}", coord.metrics.mean_batch_size()),
+            format!("{mean_batch:.1}"),
         ]);
-    }
-    table.print();
+    };
 
-    println!("\nper-backend metrics:\n{}", router.metrics_report());
-    println!("all three backends agree with the trained model — see rust/tests/integration.rs");
+    let batcher = BatcherConfig {
+        max_batch: 64,
+        max_wait: Duration::from_micros(100),
+    };
+
+    // 1. Baseline: one worker, one shared queue, scalar kernel.
+    {
+        let coord = Coordinator::start(
+            Arc::new(NativeBackend::new(model.clone())),
+            batcher,
+            1,
+        )?;
+        let (correct, wall) = run_load(n_requests, &coord)?;
+        add_row(
+            "native scalar",
+            1,
+            n_requests,
+            correct,
+            wall,
+            coord.metrics.latency_snapshot(),
+            coord.metrics.mean_batch_size(),
+        );
+        coord.shutdown();
+    }
+
+    // 2. The sharded worker pool with the blocked kernel — the scaling path.
+    let per_worker_report = {
+        let pool = WorkerPool::native(&model, workers, Some(block_rows), batcher)?;
+        let (correct, wall) = run_load(n_requests, &pool)?;
+        add_row(
+            &format!("native blocked x{workers}"),
+            workers,
+            n_requests,
+            correct,
+            wall,
+            pool.latency_snapshot(),
+            pool.metrics.mean_batch_size(),
+        );
+        let report = pool.per_worker_report();
+        pool.shutdown();
+        report
+    };
+
+    // 3. PJRT over the AOT artifact ladder, when runtime + artifacts exist.
+    match Engine::load(&dir) {
+        Ok(engine) => {
+            let engine = Arc::new(engine);
+            println!("PJRT platform: {}", engine.platform());
+            engine.warm("bnn")?; // compile the artifact ladder up front
+            let coord = Coordinator::start(
+                Arc::new(PjrtBackend::new(engine)?),
+                BatcherConfig {
+                    max_batch: 128,
+                    max_wait: Duration::from_micros(300),
+                },
+                1, // the engine serializes dispatch; PJRT-CPU parallelizes inside
+            )?;
+            let (correct, wall) = run_load(n_requests, &coord)?;
+            add_row(
+                "pjrt",
+                1,
+                n_requests,
+                correct,
+                wall,
+                coord.metrics.latency_snapshot(),
+                coord.metrics.mean_batch_size(),
+            );
+            coord.shutdown();
+        }
+        Err(e) => println!("pjrt backend skipped: {e:#}"),
+    }
+
+    // 4. A pool of cycle-accurate simulator replicas (deliberately slow —
+    //    each request pays the full simulated hardware latency).
+    {
+        let sim_workers = workers.min(2);
+        let pool = WorkerPool::fpga_sim(
+            &model,
+            sim_workers,
+            SimConfig::new(64, MemStyle::Bram),
+            BatcherConfig {
+                max_batch: 1, // the hardware is single-image
+                max_wait: Duration::from_micros(10),
+            },
+        )?;
+        let n = n_requests.min(300);
+        let (correct, wall) = run_load(n, &pool)?;
+        add_row(
+            &format!("fpga-sim x{sim_workers}"),
+            sim_workers,
+            n,
+            correct,
+            wall,
+            pool.latency_snapshot(),
+            pool.metrics.mean_batch_size(),
+        );
+        pool.shutdown();
+    }
+
+    table.print();
+    println!("\nper-worker metrics (native blocked pool):\n{per_worker_report}");
+    println!("all paths produce identical logits — see rust/tests/integration.rs");
     Ok(())
 }

@@ -5,13 +5,22 @@ use std::path::PathBuf;
 
 use bnn_fpga::bnn::BnnModel;
 use bnn_fpga::data::Dataset;
-use bnn_fpga::{artifacts_dir, mem};
+use bnn_fpga::artifacts_dir;
 
+/// Trained model + §4.1 subset when `make artifacts` has run, otherwise the
+/// deterministic synthetic fallback.  Latency/throughput numbers are valid
+/// either way (the kernels are data-oblivious); accuracy columns are only
+/// meaningful on the trained model.
+#[allow(dead_code)] // table2/table3 include this module for the note only
 pub fn load() -> (BnnModel, Dataset, PathBuf) {
     let dir = artifacts_dir();
-    let model = mem::load_model(&dir.join("weights.json"))
-        .expect("run `make artifacts` before `cargo bench`");
-    let ds = Dataset::load_mem_subset(&dir.join("mem")).expect("mem subset");
+    let (model, ds, trained) = bnn_fpga::load_model_or_synth(100);
+    if !trained {
+        println!(
+            "(no artifacts — deterministic synthetic model/dataset; timing stands, \
+             accuracy ≈ chance. run `make artifacts` for the trained model)\n"
+        );
+    }
     (model, ds, dir)
 }
 

@@ -1,8 +1,11 @@
-//! Table 5 (§4.7.2): inference latency vs batch size on CPU and GPU.
+//! Table 5 (§4.7.2): inference latency vs batch size on CPU and GPU — plus
+//! the native-engine extension: scalar vs blocked kernel and 1-vs-N worker
+//! pools over the same batch ladder.
 //!
 //! The CPU column is **measured** by executing the batched AOT artifacts on
-//! the PJRT CPU client (the paper used TF on a Colab Xeon); the GPU column
-//! is the calibrated T4 batch-scaling model (no GPU in this environment —
+//! the PJRT CPU client (the paper used TF on a Colab Xeon) when the runtime
+//! and artifacts are available, and skipped otherwise; the GPU column is
+//! the calibrated T4 batch-scaling model (no GPU in this environment —
 //! DESIGN.md §Substitutions).  The FPGA design point is appended for the
 //! §4.7.2 narrative.
 
@@ -10,7 +13,10 @@
 mod common;
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
+use bnn_fpga::bnn::DEFAULT_BLOCK_ROWS;
+use bnn_fpga::coordinator::{BatcherConfig, WorkerPool};
 use bnn_fpga::estimate::gpu_model::GpuModel;
 use bnn_fpga::runtime::Engine;
 use bnn_fpga::sim::{Accelerator, MemStyle, SimConfig};
@@ -25,7 +31,6 @@ const PAPER: [(f64, f64); 5] = [(1.60, 0.82), (1.01, 0.87), (1.75, 1.22), (6.93,
 
 fn main() {
     let (model, ds, dir) = common::load();
-    let engine = Arc::new(Engine::load(&dir).unwrap());
     let gpu = GpuModel::default();
     let quick = std::env::args().any(|a| a == "--quick");
     let runs = if quick { 10 } else { 30 };
@@ -37,29 +42,67 @@ fn main() {
     ])
     .align(1, Align::Left);
 
+    let engine = match Engine::load(&dir) {
+        Ok(e) => Some(Arc::new(e)),
+        Err(e) => {
+            println!("CPU (PJRT) column skipped: {e:#}\n");
+            None
+        }
+    };
+
     let bench = Bench::quick();
     for (bi, &batch) in BATCHES.iter().enumerate() {
         // CPU: real execution through the batch-matched artifact
-        let name = format!("bnn_b{batch}");
-        engine.prepare(&name).unwrap();
-        let mut input = Vec::with_capacity(batch * 25);
-        for i in 0..batch {
-            input.extend(ds.images[i % ds.len()].to_u32_words());
+        if let Some(engine) = &engine {
+            let name = format!("bnn_b{batch}");
+            engine.prepare(&name).unwrap();
+            let mut input = Vec::with_capacity(batch * 25);
+            for i in 0..batch {
+                input.extend(ds.images[i % ds.len()].to_u32_words());
+            }
+            let series: Vec<f64> = bench
+                .run_series(runs, || engine.run_u32_to_i32(&name, &input).unwrap())
+                .iter()
+                .map(|ns| ns / 1e6)
+                .collect();
+            let s = Summary::of(&series);
+            t.row(vec![
+                batch.to_string(),
+                "CPU".into(),
+                format!("{:.3}", s.mean),
+                format!("{:.5}", s.mean / batch as f64),
+                format!("{:.3}", s.std_dev),
+                format!("{:.2}", PAPER[bi].0),
+            ]);
         }
-        let series: Vec<f64> = bench
-            .run_series(runs, || engine.run_u32_to_i32(&name, &input).unwrap())
-            .iter()
-            .map(|ns| ns / 1e6)
-            .collect();
-        let s = Summary::of(&series);
-        t.row(vec![
-            batch.to_string(),
-            "CPU".into(),
-            format!("{:.3}", s.mean),
-            format!("{:.5}", s.mean / batch as f64),
-            format!("{:.3}", s.std_dev),
-            format!("{:.2}", PAPER[bi].0),
-        ]);
+
+        // Native engine: scalar vs blocked kernel over the same batch
+        let batch_inputs = {
+            let mut v = Vec::new();
+            for i in 0..batch {
+                v.extend_from_slice(&ds.images[i % ds.len()].words);
+            }
+            v
+        };
+        for (label, block) in [("native scalar", None), ("native blocked", Some(DEFAULT_BLOCK_ROWS))] {
+            let series: Vec<f64> = bench
+                .run_series(runs.min(15), || match block {
+                    Some(b) => model.logits_batch_blocked(&batch_inputs, batch, b),
+                    None => model.logits_batch(&batch_inputs, batch),
+                })
+                .iter()
+                .map(|ns| ns / 1e6)
+                .collect();
+            let s = Summary::of(&series);
+            t.row(vec![
+                batch.to_string(),
+                label.into(),
+                format!("{:.3}", s.mean),
+                format!("{:.5}", s.mean / batch as f64),
+                format!("{:.3}", s.std_dev),
+                "-".into(),
+            ]);
+        }
 
         // GPU: calibrated model with deterministic jitter
         let g = Summary::of(&gpu.sample_series(batch, runs, 99));
@@ -74,6 +117,45 @@ fn main() {
     }
     t.print();
     println!("\n* GPU column is the calibrated T4 model (no GPU in this environment).");
+
+    // 1-vs-N worker pools over the request path (queue + batcher included),
+    // blocked kernel, offered load = the Table 5 batch ladder.
+    println!("\n=== worker-pool batch sweep (blocked kernel, end-to-end request path) ===\n");
+    let mut pt = Table::new(&["Requests", "Workers", "Wall (ms)", "Throughput (req/s)", "Speedup"]);
+    for &n in &[1000usize, 10000] {
+        let n = if quick { n / 10 } else { n };
+        let images: Vec<_> = (0..n).map(|i| ds.images[i % ds.len()].clone()).collect();
+        let mut base = 0.0f64;
+        for workers in [1usize, 2, 4] {
+            let pool = WorkerPool::native(
+                &model,
+                workers,
+                Some(DEFAULT_BLOCK_ROWS),
+                BatcherConfig {
+                    max_batch: 64,
+                    max_wait: Duration::from_micros(100),
+                },
+            )
+            .unwrap();
+            let input = images.clone(); // clone outside the timed window
+            let t0 = Instant::now();
+            pool.infer_many(input).unwrap();
+            let wall = t0.elapsed().as_secs_f64();
+            pool.shutdown();
+            let rps = n as f64 / wall;
+            if workers == 1 {
+                base = rps;
+            }
+            pt.row(vec![
+                n.to_string(),
+                workers.to_string(),
+                format!("{:.1}", wall * 1e3),
+                format!("{rps:.0}"),
+                format!("{:.2}x", rps / base),
+            ]);
+        }
+    }
+    pt.print();
 
     // FPGA design point for the §4.7.2 comparison sentence
     let mut acc = Accelerator::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap();

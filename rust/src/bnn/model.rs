@@ -8,6 +8,14 @@
 use anyhow::{bail, Result};
 
 use super::packing;
+use crate::util::prng::Xoshiro256;
+
+/// Default row-block size for the blocked kernel path — chosen from the
+/// `hotpath` bench sweep (register-tile multiples; 16 rows keeps the tile
+/// loop hot without spilling) and mirroring the paper's mid-range
+/// parallelism sweet spot.  Override per deployment via `--block-rows` /
+/// `[coordinator] block_rows`.
+pub const DEFAULT_BLOCK_ROWS: usize = 16;
 
 /// One binary dense layer: `n_out` packed weight rows (neuron-major — the
 /// paper's transposed ROM layout) and, for hidden layers, folded integer
@@ -68,6 +76,17 @@ impl BinaryDenseLayer {
     pub fn z(&self, x_words: &[u64], j: usize) -> i32 {
         packing::xnor_popcount_z(x_words, self.row(j), self.n_in)
     }
+
+    /// Pre-activation sums for the `out.len()` neurons starting at `first`,
+    /// in one blocked pass over the input
+    /// ([`packing::xnor_popcount_z_block`]).  Bit-identical to calling
+    /// [`Self::z`] per neuron.
+    #[inline]
+    pub fn z_block(&self, x_words: &[u64], first: usize, out: &mut [i32]) {
+        let rows =
+            &self.weights[first * self.words_per_row..(first + out.len()) * self.words_per_row];
+        packing::xnor_popcount_z_block(x_words, rows, self.words_per_row, self.n_in, out);
+    }
 }
 
 /// A full network: hidden layers (thresholded) then one logits layer.
@@ -81,6 +100,8 @@ pub struct BnnModel {
 pub struct Scratch {
     a: Vec<u64>,
     b: Vec<u64>,
+    /// Per-block pre-activation sums (blocked path only).
+    z: Vec<i32>,
 }
 
 impl BnnModel {
@@ -146,6 +167,22 @@ impl BnnModel {
     /// deriving it per call cost an iterator walk per inference in the
     /// batch loop — callers reuse one `Scratch`, so `resize` is a no-op
     /// after the first call.
+    ///
+    /// This is the scalar (one neuron per pass) semantics reference; the
+    /// serving hot path uses [`Self::logits_into_blocked`], which is
+    /// asserted bit-identical.
+    ///
+    /// ```
+    /// use bnn_fpga::bnn::model::{random_model, Scratch};
+    /// use bnn_fpga::bnn::packing::pack_bits_u64;
+    ///
+    /// let model = random_model(&[16, 8, 4], 1);
+    /// let x = pack_bits_u64(&[1u8; 16]);
+    /// let mut scratch = Scratch::default(); // reuse across calls
+    /// let mut logits = vec![0i32; 4];
+    /// model.logits_into(&x, &mut scratch, &mut logits);
+    /// assert_eq!(logits, model.logits(&x));
+    /// ```
     pub fn logits_into(&self, x_words: &[u64], scratch: &mut Scratch, out: &mut [i32]) {
         debug_assert_eq!(x_words.len(), self.input_words());
         debug_assert_eq!(out.len(), self.n_classes());
@@ -178,6 +215,79 @@ impl BnnModel {
         }
     }
 
+    /// Blocked forward pass: computes `block_rows` output neurons per pass
+    /// over the packed activations — the software analogue of the FPGA's
+    /// parallelism parameter `P` (§3.3), via
+    /// [`packing::xnor_popcount_z_block`].  Bit-identical to
+    /// [`Self::logits_into`]; `block_rows` only changes the compute
+    /// schedule, never the result.
+    ///
+    /// ```
+    /// use bnn_fpga::bnn::model::{random_model, Scratch};
+    /// use bnn_fpga::bnn::packing::pack_bits_u64;
+    ///
+    /// let model = random_model(&[784, 128, 64, 10], 7);
+    /// let x = pack_bits_u64(&vec![1u8; 784]);
+    /// let mut scratch = Scratch::default();
+    /// let mut fast = vec![0i32; 10];
+    /// model.logits_into_blocked(&x, &mut scratch, &mut fast, 16);
+    /// assert_eq!(fast, model.logits(&x)); // bit-identical to the scalar path
+    /// ```
+    pub fn logits_into_blocked(
+        &self,
+        x_words: &[u64],
+        scratch: &mut Scratch,
+        out: &mut [i32],
+        block_rows: usize,
+    ) {
+        assert!(block_rows >= 1, "block_rows must be ≥ 1");
+        debug_assert_eq!(x_words.len(), self.input_words());
+        debug_assert_eq!(out.len(), self.n_classes());
+        let max_words = self.max_act_words();
+        scratch.a.clear();
+        scratch.a.extend_from_slice(x_words);
+        scratch.b.resize(max_words, 0);
+        scratch.z.resize(block_rows, 0);
+
+        for layer in &self.layers {
+            match &layer.thresholds {
+                Some(thr) => {
+                    let out_words = packing::words_u64(layer.n_out);
+                    scratch.b[..out_words].fill(0);
+                    let mut j = 0;
+                    while j < layer.n_out {
+                        let b = block_rows.min(layer.n_out - j);
+                        layer.z_block(&scratch.a, j, &mut scratch.z[..b]);
+                        for (k, &z) in scratch.z[..b].iter().enumerate() {
+                            if z >= thr[j + k] {
+                                scratch.b[(j + k) / 64] |= 1u64 << ((j + k) % 64);
+                            }
+                        }
+                        j += b;
+                    }
+                    scratch.a.clear();
+                    scratch.a.extend_from_slice(&scratch.b[..out_words]);
+                }
+                None => {
+                    let mut j = 0;
+                    while j < layer.n_out {
+                        let b = block_rows.min(layer.n_out - j);
+                        layer.z_block(&scratch.a, j, &mut out[j..j + b]);
+                        j += b;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Blocked forward pass, allocating convenience (tests/tools).
+    pub fn logits_blocked(&self, x_words: &[u64], block_rows: usize) -> Vec<i32> {
+        let mut scratch = Scratch::default();
+        let mut out = vec![0i32; self.n_classes()];
+        self.logits_into_blocked(x_words, &mut scratch, &mut out, block_rows);
+        out
+    }
+
     /// Predicted digit for one packed input.
     pub fn predict(&self, x_words: &[u64]) -> usize {
         super::argmax_i32(&self.logits(x_words))
@@ -200,6 +310,43 @@ impl BnnModel {
         }
         out
     }
+
+    /// Batch inference through the blocked kernel (layout as
+    /// [`Self::logits_batch`]).
+    pub fn logits_batch_blocked(&self, inputs: &[u64], batch: usize, block_rows: usize) -> Vec<i32> {
+        let iw = self.input_words();
+        assert_eq!(inputs.len(), batch * iw, "batch input length");
+        let mut scratch = Scratch::default();
+        let nc = self.n_classes();
+        let mut out = vec![0i32; batch * nc];
+        for b in 0..batch {
+            self.logits_into_blocked(
+                &inputs[b * iw..(b + 1) * iw],
+                &mut scratch,
+                &mut out[b * nc..(b + 1) * nc],
+                block_rows,
+            );
+        }
+        out
+    }
+}
+
+/// Deterministic random ±1 model with zero thresholds — the artifact-free
+/// stand-in used by tests, benches and examples when `make artifacts` has
+/// not run.  Kernel equivalence, cycle counts and serving mechanics only
+/// depend on the layer dimensions, not on trained weights.
+pub fn random_model(dims: &[usize], seed: u64) -> BnnModel {
+    assert!(dims.len() >= 2, "need at least one layer");
+    let mut rng = Xoshiro256::new(seed);
+    let mut spec = Vec::new();
+    for (li, w) in dims.windows(2).enumerate() {
+        let rows: Vec<Vec<i8>> = (0..w[1])
+            .map(|_| (0..w[0]).map(|_| if rng.bool() { 1 } else { -1 }).collect())
+            .collect();
+        let thr = (li + 2 < dims.len()).then(|| vec![0i32; w[1]]);
+        spec.push((rows, thr));
+    }
+    model_from_sign_rows(spec).expect("random spec is well-formed")
 }
 
 /// Build a model directly from ±1 float-sign rows (tests/tools).
@@ -333,6 +480,70 @@ mod tests {
         let mut spec = random_net(&mut rng, &[16, 8, 4]);
         spec[1].1 = Some(vec![0; 4]); // output layer must not threshold
         assert!(model_from_sign_rows(spec).is_err());
+    }
+
+    #[test]
+    fn blocked_equals_scalar_for_all_block_sizes() {
+        // Every block size — unaligned, tile-sized, layer-sized, oversized —
+        // must be bit-identical to the scalar reference on the paper dims.
+        let mut rng = Xoshiro256::new(77);
+        let spec = random_net(&mut rng, &[784, 128, 64, 10]);
+        let model = model_from_sign_rows(spec).unwrap();
+        for trial in 0..5 {
+            let bits: Vec<u8> = (0..784).map(|_| rng.bool() as u8).collect();
+            let x = packing::pack_bits_u64(&bits);
+            let scalar = model.logits(&x);
+            for block in [1, 2, 3, 4, 5, 7, 8, 16, 64, 128, 200] {
+                assert_eq!(
+                    model.logits_blocked(&x, block),
+                    scalar,
+                    "trial {trial}, block {block}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_equals_scalar_on_odd_dims() {
+        // widths that straddle both the u64 word and the 4-row tile
+        let mut rng = Xoshiro256::new(78);
+        for dims in [[37usize, 19, 11, 3], [65, 63, 5, 1], [130, 129, 67, 9]] {
+            let spec = random_net(&mut rng, &dims);
+            let model = model_from_sign_rows(spec).unwrap();
+            let bits: Vec<u8> = (0..dims[0]).map(|_| rng.bool() as u8).collect();
+            let x = packing::pack_bits_u64(&bits);
+            let scalar = model.logits(&x);
+            for block in [1, 3, 4, 6, 33] {
+                assert_eq!(model.logits_blocked(&x, block), scalar, "{dims:?} block {block}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_batch_matches_scalar_batch() {
+        let mut rng = Xoshiro256::new(79);
+        let spec = random_net(&mut rng, &[784, 128, 64, 10]);
+        let model = model_from_sign_rows(spec).unwrap();
+        let batch = 7;
+        let mut inputs = Vec::new();
+        for _ in 0..batch {
+            let bits: Vec<u8> = (0..784).map(|_| rng.bool() as u8).collect();
+            inputs.extend(packing::pack_bits_u64(&bits));
+        }
+        assert_eq!(
+            model.logits_batch_blocked(&inputs, batch, DEFAULT_BLOCK_ROWS),
+            model.logits_batch(&inputs, batch)
+        );
+    }
+
+    #[test]
+    fn random_model_is_deterministic_and_valid() {
+        let a = random_model(&[784, 128, 64, 10], 1);
+        let b = random_model(&[784, 128, 64, 10], 1);
+        assert!(a.validate().is_ok());
+        assert_eq!(a.layers[0].weights, b.layers[0].weights);
+        let c = random_model(&[784, 128, 64, 10], 2);
+        assert_ne!(a.layers[0].weights, c.layers[0].weights);
     }
 
     #[test]

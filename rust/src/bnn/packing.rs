@@ -120,6 +120,73 @@ pub fn xnor_popcount_z(a: &[u64], b: &[u64], n_bits: usize) -> i32 {
     n_bits as i32 - 2 * mismatches as i32
 }
 
+/// Blocked multi-row kernel: pre-activation sums for `out.len()` consecutive
+/// weight rows against one packed input, in a single pass over `x`.
+///
+/// This is the software mirror of the FPGA's parallelism parameter `P`
+/// (§3.3: `P` neuron units consume each broadcast input bit at once): rows
+/// are processed in register tiles of four, so every input word loaded from
+/// cache is XORed against four weight rows before the next load, amortizing
+/// input traffic that the scalar path ([`xnor_popcount_z`]) re-pays per
+/// neuron.  `rows` is `out.len() × words_per_row` words, row-major — exactly
+/// the [`super::model::BinaryDenseLayer::weights`] layout, so layers can
+/// hand in weight sub-slices with no copying.
+///
+/// Padding-bit contract: as everywhere in this module, bits ≥ `n_bits` must
+/// be 0 in *every* operand so XOR never counts them (property-tested below).
+///
+/// Bit-identical to the scalar path by construction — both compute
+/// `z = n − 2·popcount(x ⊕ w)` exactly; see `blocked_equals_scalar_*` tests.
+///
+/// ```
+/// use bnn_fpga::bnn::packing::{pack_bits_u64, words_u64, xnor_popcount_z_block};
+/// let x = pack_bits_u64(&[1, 0, 1]);
+/// let rows = [pack_bits_u64(&[1, 1, 1]), pack_bits_u64(&[0, 0, 0])].concat();
+/// let mut z = [0i32; 2];
+/// xnor_popcount_z_block(&x, &rows, words_u64(3), 3, &mut z);
+/// assert_eq!(z, [1, -1]); // (+1·+1 −1·+1 +1·+1), (+1·−1 −1·−1 +1·−1)
+/// ```
+pub fn xnor_popcount_z_block(
+    x: &[u64],
+    rows: &[u64],
+    words_per_row: usize,
+    n_bits: usize,
+    out: &mut [i32],
+) {
+    if out.is_empty() {
+        return;
+    }
+    debug_assert!(words_per_row >= 1);
+    debug_assert_eq!(x.len(), words_per_row);
+    debug_assert_eq!(rows.len(), out.len() * words_per_row);
+    let n = n_bits as i32;
+    let mut quads = rows.chunks_exact(4 * words_per_row);
+    let mut outs = out.chunks_exact_mut(4);
+    for (quad, o) in (&mut quads).zip(&mut outs) {
+        let (r0, rest) = quad.split_at(words_per_row);
+        let (r1, rest) = rest.split_at(words_per_row);
+        let (r2, r3) = rest.split_at(words_per_row);
+        let (mut c0, mut c1, mut c2, mut c3) = (0u32, 0u32, 0u32, 0u32);
+        for ((((xw, w0), w1), w2), w3) in x.iter().zip(r0).zip(r1).zip(r2).zip(r3) {
+            c0 += (xw ^ w0).count_ones();
+            c1 += (xw ^ w1).count_ones();
+            c2 += (xw ^ w2).count_ones();
+            c3 += (xw ^ w3).count_ones();
+        }
+        o[0] = n - 2 * c0 as i32;
+        o[1] = n - 2 * c1 as i32;
+        o[2] = n - 2 * c2 as i32;
+        o[3] = n - 2 * c3 as i32;
+    }
+    for (row, o) in quads
+        .remainder()
+        .chunks_exact(words_per_row)
+        .zip(outs.into_remainder())
+    {
+        *o = xnor_popcount_z(x, row, n_bits);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,5 +264,118 @@ mod tests {
         let a = Packed::from_bits(&vec![1u8; 65]);
         let b = Packed::from_bits(&vec![0u8; 65]);
         assert_eq!(a.dot(&b), -65);
+    }
+
+    /// The widths the stack actually meets (layer widths 784/128/64/10) plus
+    /// the word-boundary edge cases (1, 63, 65) for both physical widths.
+    const EDGE_WIDTHS: [usize; 5] = [784, 10, 1, 63, 65];
+
+    fn random_bits(rng: &mut Xoshiro256, n: usize) -> Vec<u8> {
+        (0..n).map(|_| rng.bool() as u8).collect()
+    }
+
+    #[test]
+    fn roundtrip_u32_u64_at_edge_widths() {
+        let mut rng = Xoshiro256::new(2026);
+        for &n in &EDGE_WIDTHS {
+            for _ in 0..10 {
+                let bits = random_bits(&mut rng, n);
+                let w32 = pack_bits_u32(&bits);
+                let w64 = pack_bits_u64(&bits);
+                assert_eq!(w32.len(), words_u32(n));
+                assert_eq!(w64.len(), words_u64(n));
+                // bits → u32 → u64 → u32 → bits is the identity at every width
+                assert_eq!(u32_words_to_u64(&w32, n), w64, "width {n}");
+                assert_eq!(u64_words_to_u32(&w64, n), w32, "width {n}");
+                assert_eq!(unpack_bits_u64(&w64, n), bits, "width {n}");
+                let back = Packed::from_u32_words(&w32, n);
+                assert_eq!(back.to_bits(), bits, "width {n}");
+                assert_eq!(back.to_u32_words(), w32, "width {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn padding_bits_are_zero_at_edge_widths() {
+        // The invariant the blocked kernel leans on: every packer leaves
+        // bits ≥ n zero, in both word widths.
+        let mut rng = Xoshiro256::new(2027);
+        for &n in &EDGE_WIDTHS {
+            let bits = vec![1u8; n]; // worst case: all ones up to the boundary
+            let w64 = pack_bits_u64(&bits);
+            let w32 = pack_bits_u32(&bits);
+            let pad64 = words_u64(n) * 64 - n;
+            let pad32 = words_u32(n) * 32 - n;
+            if pad64 > 0 {
+                assert_eq!(w64.last().unwrap() >> (64 - pad64), 0, "u64 padding, width {n}");
+            }
+            if pad32 > 0 {
+                assert_eq!(w32.last().unwrap() >> (32 - pad32), 0, "u32 padding, width {n}");
+            }
+            // and the u32→u64 conversion cannot invent padding bits either
+            let conv = u32_words_to_u64(&w32, n);
+            if pad64 > 0 {
+                assert_eq!(conv.last().unwrap() >> (64 - pad64), 0, "converted padding, width {n}");
+            }
+            // total popcount is preserved exactly (no bit lost, none invented)
+            let pop: u32 = w64.iter().map(|w| w.count_ones()).sum();
+            assert_eq!(pop as usize, n);
+            let _ = random_bits(&mut rng, n); // keep the stream moving per width
+        }
+    }
+
+    #[test]
+    fn blocked_equals_scalar_at_edge_widths() {
+        // The blocked kernel must be bit-identical to the scalar path for
+        // every row count around its 4-row register tile (0..=9 rows) and
+        // every edge width, including the sub-word and straddling ones.
+        let mut rng = Xoshiro256::new(2028);
+        for &n in &EDGE_WIDTHS {
+            let wpr = words_u64(n);
+            for n_rows in 0..=9usize {
+                let x = pack_bits_u64(&random_bits(&mut rng, n));
+                let mut rows = Vec::with_capacity(n_rows * wpr);
+                for _ in 0..n_rows {
+                    rows.extend(pack_bits_u64(&random_bits(&mut rng, n)));
+                }
+                let mut blocked = vec![0i32; n_rows];
+                xnor_popcount_z_block(&x, &rows, wpr, n, &mut blocked);
+                let scalar: Vec<i32> = (0..n_rows)
+                    .map(|r| xnor_popcount_z(&x, &rows[r * wpr..(r + 1) * wpr], n))
+                    .collect();
+                assert_eq!(blocked, scalar, "width {n}, {n_rows} rows");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_kernel_ignores_padding_property() {
+        // Property: for random widths and row counts, blocked == scalar ==
+        // the ±1 definition, so padding can never leak into any row's sum.
+        Runner::new("blocked-vs-naive").cases(48).run(
+            &gens::Pair(gens::BitVec(1..=200), gens::U64(1..=12)),
+            |(bits, n_rows)| {
+                let n = bits.len();
+                let wpr = words_u64(n);
+                let n_rows = *n_rows as usize;
+                let mut rng = Xoshiro256::new(n as u64 * 131 + n_rows as u64);
+                let x = pack_bits_u64(bits);
+                let mut rows = Vec::new();
+                let mut naive = Vec::new();
+                for _ in 0..n_rows {
+                    let w: Vec<u8> = (0..n).map(|_| rng.bool() as u8).collect();
+                    naive.push(
+                        w.iter()
+                            .zip(bits)
+                            .map(|(&a, &b)| if a == b { 1i32 } else { -1 })
+                            .sum::<i32>(),
+                    );
+                    rows.extend(pack_bits_u64(&w));
+                }
+                let mut blocked = vec![0i32; n_rows];
+                xnor_popcount_z_block(&x, &rows, wpr, n, &mut blocked);
+                blocked == naive
+            },
+        );
     }
 }

@@ -17,7 +17,9 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::{BatcherConfig, Coordinator, NativeBackend, PjrtBackend, SimBackend};
+use crate::coordinator::{
+    BatcherConfig, Coordinator, NativeBackend, PjrtBackend, SimBackend, WorkerPool,
+};
 use crate::data::Dataset;
 use crate::estimate::{power, resources, timing};
 use crate::sim::{analytic_steps, Accelerator, MemStyle, SimConfig};
@@ -36,8 +38,8 @@ SUBCOMMANDS
   verify     [--parallelism P] [--mem bram|lut]        §4.1 100-image check
   sweep      [--strict-clock]                          Table 1 sweep
   report     --parallelism P [--mem bram|lut]          §3.6-style report
-  serve-demo [--backend ...] [--requests N] [--workers W] [--max-batch B]
-  serve      [--addr HOST:PORT] [--backend ...]     TCP wire-protocol server
+  serve-demo [--backend ...] [--requests N] [--workers W] [--block-rows B] [--max-batch B] [--config FILE]
+  serve      [--addr HOST:PORT] [--backend ...] [--workers W] [--block-rows B] [--config FILE]
   trace      [--image N] [--parallelism P] [--out trace.vcd]  VCD waveform
 
 Set BNN_FPGA_ARTIFACTS to override the artifacts directory (default ./artifacts).
@@ -48,6 +50,23 @@ fn mem_style(args: &Args) -> Result<MemStyle> {
         "bram" => Ok(MemStyle::Bram),
         "lut" => Ok(MemStyle::Lut),
         other => bail!("--mem must be bram|lut, got '{other}'"),
+    }
+}
+
+fn block_rows_arg(args: &Args, default: usize) -> Result<usize> {
+    let b = args.usize_or("block-rows", default)?;
+    if b < 1 {
+        bail!("--block-rows must be ≥ 1");
+    }
+    Ok(b)
+}
+
+/// `--config FILE` → [`crate::config::ServeConfig`]; defaults otherwise.
+/// CLI flags override whatever the file says.
+fn serve_config(args: &Args) -> Result<crate::config::ServeConfig> {
+    match args.opt("config") {
+        Some(p) => crate::config::ServeConfig::load(std::path::Path::new(p)),
+        None => Ok(crate::config::ServeConfig::default()),
     }
 }
 
@@ -255,32 +274,62 @@ fn cmd_report(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve_demo(args: &Args) -> Result<()> {
-    let model = load_model()?;
+    let (model, ds, trained) = crate::load_model_or_synth(100);
+    if !trained {
+        println!("(artifacts missing — untrained synthetic model, accuracy ≈ chance)");
+    }
     let dir = artifacts_dir();
+    let file_cfg = serve_config(args)?;
     let n = args.usize_or("requests", 1000)?;
-    let workers = args.usize_or("workers", 2)?;
+    let workers = args.usize_or("workers", file_cfg.workers)?;
+    let block_rows = block_rows_arg(args, file_cfg.block_rows)?;
     let cfg = BatcherConfig {
-        max_batch: args.usize_or("max-batch", 64)?,
-        max_wait: std::time::Duration::from_micros(args.u64_or("max-wait-us", 200)?),
+        max_batch: args.usize_or("max-batch", file_cfg.batcher.max_batch)?,
+        max_wait: std::time::Duration::from_micros(
+            args.u64_or("max-wait-us", file_cfg.batcher.max_wait.as_micros() as u64)?,
+        ),
     };
-    let backend: Arc<dyn crate::coordinator::InferBackend> =
-        match args.opt_or("backend", "native").as_str() {
-            "native" => Arc::new(NativeBackend::new(model.clone())),
-            "pjrt" => Arc::new(PjrtBackend::new(Arc::new(crate::runtime::Engine::load(&dir)?))?),
-            "fpga-sim" => Arc::new(SimBackend::new(
-                &model,
-                SimConfig::new(args.usize_or("parallelism", 64)?, mem_style(args)?),
-            )?),
-            other => bail!("unknown backend '{other}'"),
-        };
-    let coord = Coordinator::start(backend, cfg, workers)?;
-    let ds = Dataset::load_mem_subset(&dir.join("mem"))?;
 
-    let t0 = std::time::Instant::now();
     let images: Vec<_> = (0..n).map(|i| ds.images[i % ds.len()].clone()).collect();
     let labels: Vec<_> = (0..n).map(|i| ds.labels[i % ds.len()]).collect();
-    let responses = coord.infer_many(images)?;
-    let wall = t0.elapsed();
+
+    // native and fpga-sim scale via per-worker replicas (WorkerPool); pjrt
+    // keeps the single-queue coordinator — the engine serializes dispatch
+    // and PJRT-CPU parallelizes internally.  Only the serving window is
+    // timed: construction and shutdown stay outside t0..wall.
+    let (responses, wall, summary, per_worker) = match args.opt_or("backend", "native").as_str() {
+        "native" => {
+            let pool = WorkerPool::native(&model, workers, Some(block_rows), cfg)?;
+            let t0 = std::time::Instant::now();
+            let r = pool.infer_many(images)?;
+            let wall = t0.elapsed();
+            let out = (r, wall, pool.summary_line(), Some(pool.per_worker_report()));
+            pool.shutdown();
+            out
+        }
+        "fpga-sim" => {
+            let sim_cfg = SimConfig::new(args.usize_or("parallelism", 64)?, mem_style(args)?);
+            let pool = WorkerPool::fpga_sim(&model, workers, sim_cfg, cfg)?;
+            let t0 = std::time::Instant::now();
+            let r = pool.infer_many(images)?;
+            let wall = t0.elapsed();
+            let out = (r, wall, pool.summary_line(), Some(pool.per_worker_report()));
+            pool.shutdown();
+            out
+        }
+        "pjrt" => {
+            let backend: Arc<dyn crate::coordinator::InferBackend> =
+                Arc::new(PjrtBackend::new(Arc::new(crate::runtime::Engine::load(&dir)?))?);
+            let coord = Coordinator::start(backend, cfg, workers)?;
+            let t0 = std::time::Instant::now();
+            let r = coord.infer_many(images)?;
+            let wall = t0.elapsed();
+            let out = (r, wall, coord.metrics.summary_line(), None);
+            coord.shutdown();
+            out
+        }
+        other => bail!("unknown backend '{other}'"),
+    };
 
     let correct = responses
         .iter()
@@ -290,8 +339,10 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     println!("served {n} requests in {:.1} ms", wall.as_secs_f64() * 1e3);
     println!("throughput : {:.0} req/s", n as f64 / wall.as_secs_f64());
     println!("accuracy   : {:.1}%", correct as f64 / n as f64 * 100.0);
-    println!("metrics    : {}", coord.metrics.summary_line());
-    coord.shutdown();
+    println!("metrics    : {summary}");
+    if let Some(pw) = per_worker {
+        print!("{pw}");
+    }
     Ok(())
 }
 
@@ -314,26 +365,52 @@ fn cmd_trace(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     use crate::coordinator::wire::WireServer;
-    let model = load_model()?;
+    let (model, _, trained) = crate::load_model_or_synth(1);
+    if !trained {
+        println!("(artifacts missing — serving an untrained synthetic model)");
+    }
+    let file_cfg = serve_config(args)?;
     let addr = args.opt_or("addr", "127.0.0.1:7840");
-    let backend: Arc<dyn crate::coordinator::InferBackend> =
-        match args.opt_or("backend", "native").as_str() {
-            "native" => Arc::new(NativeBackend::new(model)),
-            "pjrt" => Arc::new(PjrtBackend::new(Arc::new(crate::runtime::Engine::load(
-                &artifacts_dir(),
-            )?))?),
-            "fpga-sim" => Arc::new(SimBackend::new(
+    let workers = args.usize_or("workers", file_cfg.workers)?;
+    let block_rows = block_rows_arg(args, file_cfg.block_rows)?;
+    let backend_default = file_cfg
+        .backends
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "native".to_string());
+    let server = match args.opt_or("backend", &backend_default).as_str() {
+        "native" => {
+            let pool = Arc::new(WorkerPool::native(
                 &model,
-                SimConfig::new(args.usize_or("parallelism", 64)?, mem_style(args)?),
-            )?),
-            other => bail!("unknown backend '{other}'"),
-        };
-    let coord = Arc::new(Coordinator::start(
-        backend,
-        BatcherConfig::default(),
-        args.usize_or("workers", 2)?,
-    )?);
-    let server = WireServer::start(&addr, coord)?;
+                workers,
+                Some(block_rows),
+                file_cfg.batcher,
+            )?);
+            WireServer::start(&addr, pool)?
+        }
+        "fpga-sim" => {
+            let sim_cfg =
+                SimConfig::new(args.usize_or("parallelism", file_cfg.parallelism)?, mem_style(args)?);
+            let pool = Arc::new(WorkerPool::fpga_sim(
+                &model,
+                workers,
+                sim_cfg,
+                BatcherConfig {
+                    max_batch: 1, // the simulated hardware is single-image
+                    max_wait: std::time::Duration::from_micros(10),
+                },
+            )?);
+            WireServer::start(&addr, pool)?
+        }
+        "pjrt" => {
+            let backend: Arc<dyn crate::coordinator::InferBackend> = Arc::new(PjrtBackend::new(
+                Arc::new(crate::runtime::Engine::load(&artifacts_dir())?),
+            )?);
+            let coord = Arc::new(Coordinator::start(backend, file_cfg.batcher, workers)?);
+            WireServer::start(&addr, coord)?
+        }
+        other => bail!("unknown backend '{other}'"),
+    };
     println!("wire-protocol server listening on {} (Ctrl-C to stop)", server.addr);
     println!("frame: 0xB1 len16 payload[98] -> 0xB2 digit status latency_us32");
     loop {

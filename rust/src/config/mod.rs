@@ -106,7 +106,12 @@ pub struct ServeConfig {
     pub artifacts_dir: std::path::PathBuf,
     /// Backends to register: any of "native", "pjrt", "fpga-sim".
     pub backends: Vec<String>,
+    /// Worker threads; for native backends each worker owns a model replica
+    /// (`coordinator::WorkerPool`).
     pub workers: usize,
+    /// Rows per pass of the blocked XNOR kernel (≥ 1); the software
+    /// counterpart of the FPGA parallelism knob.
+    pub block_rows: usize,
     pub batcher: BatcherConfig,
     /// FPGA-sim backend parameters.
     pub parallelism: usize,
@@ -119,6 +124,7 @@ impl Default for ServeConfig {
             artifacts_dir: std::path::PathBuf::from("artifacts"),
             backends: vec!["native".into()],
             workers: 2,
+            block_rows: crate::bnn::DEFAULT_BLOCK_ROWS,
             batcher: BatcherConfig::default(),
             parallelism: 64,
             mem_style: MemStyle::Bram,
@@ -149,10 +155,19 @@ impl ServeConfig {
         if !(1..=128).contains(&parallelism) {
             bail!("parallelism must be in 1..=128");
         }
+        let workers = doc.int_or("coordinator", "workers", d.workers as i64)? as usize;
+        if workers < 1 {
+            bail!("workers must be ≥ 1");
+        }
+        let block_rows = doc.int_or("coordinator", "block_rows", d.block_rows as i64)? as usize;
+        if block_rows < 1 {
+            bail!("block_rows must be ≥ 1");
+        }
         Ok(ServeConfig {
             artifacts_dir: doc.str_or("coordinator", "artifacts_dir", "artifacts")?.into(),
             backends,
-            workers: doc.int_or("coordinator", "workers", d.workers as i64)? as usize,
+            workers,
+            block_rows,
             batcher: BatcherConfig {
                 max_batch: doc.int_or("batcher", "max_batch", d.batcher.max_batch as i64)?
                     as usize,
@@ -183,6 +198,7 @@ mod tests {
 [coordinator]
 backends = "native, fpga-sim"
 workers = 4
+block_rows = 32
 artifacts_dir = "artifacts"
 
 [batcher]
@@ -199,6 +215,7 @@ mem_style = "bram"
         let cfg = ServeConfig::from_toml(&Toml::parse(SAMPLE).unwrap()).unwrap();
         assert_eq!(cfg.backends, vec!["native", "fpga-sim"]);
         assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.block_rows, 32);
         assert_eq!(cfg.batcher.max_batch, 32);
         assert_eq!(cfg.batcher.max_wait, Duration::from_micros(150));
         assert_eq!(cfg.parallelism, 64);
@@ -210,6 +227,7 @@ mem_style = "bram"
         let cfg = ServeConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
         assert_eq!(cfg.backends, vec!["native"]);
         assert_eq!(cfg.workers, 2);
+        assert_eq!(cfg.block_rows, crate::bnn::DEFAULT_BLOCK_ROWS);
     }
 
     #[test]
@@ -224,6 +242,14 @@ mem_style = "bram"
         .is_err());
         assert!(ServeConfig::from_toml(
             &Toml::parse("[fpga]\nmem_style = \"dram\"").unwrap()
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml(
+            &Toml::parse("[coordinator]\nblock_rows = 0").unwrap()
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml(
+            &Toml::parse("[coordinator]\nworkers = 0").unwrap()
         )
         .is_err());
     }

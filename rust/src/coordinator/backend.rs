@@ -39,17 +39,45 @@ pub trait InferBackend: Send + Sync {
 // ---------------------------------------------------------------------------
 
 /// Native bit-packed software BNN.
+///
+/// Two kernel schedules, both bit-identical (asserted in `bnn::model`
+/// tests and `rust/tests/integration.rs`):
+/// * scalar — one neuron per pass over the input ([`BnnModel::logits_into`]),
+///   the semantics reference;
+/// * blocked — `block_rows` neurons per pass
+///   ([`BnnModel::logits_into_blocked`]), the serving default.
 pub struct NativeBackend {
     model: BnnModel,
+    /// `Some(b)` → blocked kernel with `b` rows per pass; `None` → scalar.
+    block_rows: Option<usize>,
 }
 
 impl NativeBackend {
+    /// Scalar-kernel backend (the semantics reference).
     pub fn new(model: BnnModel) -> Self {
-        Self { model }
+        Self {
+            model,
+            block_rows: None,
+        }
+    }
+
+    /// Blocked-kernel backend; `block_rows` ≥ 1
+    /// (see [`crate::bnn::DEFAULT_BLOCK_ROWS`]).
+    pub fn with_block_rows(model: BnnModel, block_rows: usize) -> Self {
+        assert!(block_rows >= 1, "block_rows must be ≥ 1");
+        Self {
+            model,
+            block_rows: Some(block_rows),
+        }
     }
 
     pub fn model(&self) -> &BnnModel {
         &self.model
+    }
+
+    /// The configured block size (`None` = scalar path).
+    pub fn block_rows(&self) -> Option<usize> {
+        self.block_rows
     }
 }
 
@@ -68,7 +96,12 @@ impl InferBackend for NativeBackend {
         let mut out = Vec::with_capacity(images.len());
         for img in images {
             let mut logits = vec![0i32; nc];
-            self.model.logits_into(&img.words, &mut scratch, &mut logits);
+            match self.block_rows {
+                Some(b) => self
+                    .model
+                    .logits_into_blocked(&img.words, &mut scratch, &mut logits, b),
+                None => self.model.logits_into(&img.words, &mut scratch, &mut logits),
+            }
             out.push(logits);
         }
         Ok(out)

@@ -57,7 +57,13 @@ impl Metrics {
     }
 
     pub fn summary_line(&self) -> String {
-        let lat = self.latency_snapshot();
+        self.summary_line_with(&self.latency_snapshot())
+    }
+
+    /// Summary with an externally-supplied latency histogram — the worker
+    /// pool merges per-worker histograms instead of locking a shared one on
+    /// the hot path.
+    pub fn summary_line_with(&self, lat: &LatencyHistogram) -> String {
         format!(
             "submitted={} completed={} rejected={} batches={} mean_batch={:.2} \
              p50={}µs p99={}µs max={}µs",

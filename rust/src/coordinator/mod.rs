@@ -18,13 +18,19 @@
 //!   ladder-aware batch sizing for the fixed-shape PJRT artifacts;
 //! * [`router`] — named-backend routing with a least-queue-depth policy;
 //! * [`metrics`] — counters + log-bucket latency histograms;
-//! * [`server`] — worker threads and the blocking/async submission API.
+//! * [`server`] — the single-queue [`Coordinator`]: N worker threads
+//!   draining one shared queue into one backend;
+//! * [`pool`] — the sharded [`WorkerPool`]: one queue shard + one backend
+//!   **replica** + per-worker metrics per worker thread (DESIGN.md
+//!   §Worker pool), the scaling path;
+//! * [`wire`] — byte-framed TCP server, generic over [`InferService`].
 //!
 //! Python never appears here: the hot path is pure Rust + compiled HLO.
 
 pub mod backend;
 pub mod batcher;
 pub mod metrics;
+pub mod pool;
 pub mod request;
 pub mod router;
 pub mod server;
@@ -33,6 +39,53 @@ pub mod wire;
 pub use backend::{InferBackend, NativeBackend, PjrtBackend, SimBackend};
 pub use batcher::BatcherConfig;
 pub use metrics::Metrics;
+pub use pool::WorkerPool;
 pub use request::{InferRequest, InferResponse};
 pub use router::Router;
 pub use server::Coordinator;
+
+use crate::bnn::packing::Packed;
+
+/// A serving frontend: anything requests can be submitted to.  Implemented
+/// by the single-queue [`Coordinator`] and the sharded [`WorkerPool`];
+/// the wire server and load drivers are generic over it.
+pub trait InferService: Send + Sync {
+    /// Enqueue one image; returns the receiver for its response.
+    fn submit(
+        &self,
+        image: Packed,
+    ) -> anyhow::Result<(request::RequestId, std::sync::mpsc::Receiver<InferResponse>)>;
+
+    /// Blocking classify.
+    fn infer(&self, image: Packed) -> anyhow::Result<InferResponse> {
+        let (_, rx) = self.submit(image)?;
+        Ok(rx.recv()?)
+    }
+
+    /// Submit many, wait for all (responses in submission order).
+    fn infer_many(&self, images: Vec<Packed>) -> anyhow::Result<Vec<InferResponse>> {
+        let rxs: Vec<_> = images
+            .into_iter()
+            .map(|img| self.submit(img).map(|(_, rx)| rx))
+            .collect::<anyhow::Result<_>>()?;
+        rxs.into_iter().map(|rx| Ok(rx.recv()?)).collect()
+    }
+}
+
+impl InferService for Coordinator {
+    fn submit(
+        &self,
+        image: Packed,
+    ) -> anyhow::Result<(request::RequestId, std::sync::mpsc::Receiver<InferResponse>)> {
+        Coordinator::submit(self, image)
+    }
+}
+
+impl InferService for WorkerPool {
+    fn submit(
+        &self,
+        image: Packed,
+    ) -> anyhow::Result<(request::RequestId, std::sync::mpsc::Receiver<InferResponse>)> {
+        WorkerPool::submit(self, image)
+    }
+}

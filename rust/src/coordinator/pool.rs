@@ -1,0 +1,515 @@
+//! Sharded worker pool — the multi-worker inference engine.
+//!
+//! Where [`super::server::Coordinator`] runs N workers draining **one**
+//! shared queue into **one** backend, the pool gives every worker its own
+//! queue shard *and its own backend replica*:
+//!
+//! ```text
+//!   submit ──► pick_shard (round-robin + power-of-two-choices)
+//!                │
+//!                ├─► shard 0 ──► worker 0 ──► replica 0 (native/sim/…)
+//!                ├─► shard 1 ──► worker 1 ──► replica 1
+//!                └─► shard … ──► worker … ──► replica …
+//! ```
+//!
+//! This mirrors the FPGA's neuron-level parallelism one level up — FINN and
+//! Fraser et al. (PAPERS.md) show BNN throughput scales near-linearly when
+//! compute is partitioned across independent processing elements, and the
+//! same holds in software once workers stop contending on a single queue
+//! mutex and a shared model.  Native replicas clone the (small, read-only)
+//! packed weights so each worker's hot loop touches only core-local state.
+//!
+//! Dispatch is round-robin refined by power-of-two-choices: each submit
+//! compares the round-robin shard with its neighbour and takes the
+//! shallower queue, which keeps shards balanced under skewed drain rates at
+//! the cost of two cheap depth probes (no global lock).  Each worker runs
+//! the same drain policy as the single-queue coordinator
+//! ([`super::batcher::decide`]), so batching semantics are identical.
+//!
+//! Metrics: lock-free counters (submitted/completed/rejected/batches) are
+//! recorded into both the pool-wide aggregate and the owning worker's
+//! [`Metrics`]; the mutex-guarded latency histograms are recorded **per
+//! worker only** — a shared aggregate histogram would re-serialize the
+//! workers on one lock — and merged on read
+//! ([`WorkerPool::latency_snapshot`], `per_worker_report`).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::backend::{InferBackend, NativeBackend};
+use super::batcher::{decide, BatcherConfig, DrainDecision};
+use super::metrics::Metrics;
+use super::request::{InferRequest, InferResponse, RequestId};
+use crate::bnn::packing::Packed;
+use crate::bnn::{argmax_i32, BnnModel};
+use crate::sim::SimConfig;
+
+/// A queued request plus its reply channel (shared by the pool and the
+/// single-queue coordinator in `server.rs`).
+pub(crate) struct Pending {
+    pub(crate) req: InferRequest,
+    pub(crate) reply: mpsc::Sender<InferResponse>,
+}
+
+/// Execute one drained batch on `backend`, record into `mine` (the owning
+/// worker's metrics — counters and histograms) and, when present, into the
+/// pool aggregate `agg` (lock-free counters only; see the module doc), then
+/// answer each reply channel.  On backend failure the replies are dropped
+/// (submitters observe a disconnected channel) and the batch counts as
+/// rejected.
+pub(crate) fn execute_batch(
+    backend: &dyn InferBackend,
+    agg: Option<&Metrics>,
+    mine: &Metrics,
+    batch: Vec<Pending>,
+) {
+    let images: Vec<Packed> = batch.iter().map(|p| p.req.image.clone()).collect();
+    let batch_size = images.len();
+    mine.record_batch(batch_size);
+    if let Some(a) = agg {
+        a.record_batch(batch_size);
+    }
+    let exec_start = Instant::now();
+    match backend.infer_batch(&images) {
+        Ok(all_logits) => {
+            for (p, logits) in batch.into_iter().zip(all_logits) {
+                let latency_ns = p.req.enqueued_at.elapsed().as_nanos() as u64;
+                let wait_ns = (exec_start - p.req.enqueued_at).as_nanos() as u64;
+                mine.record_queue_wait(wait_ns);
+                mine.record_latency(latency_ns);
+                if let Some(a) = agg {
+                    a.completed.fetch_add(1, Ordering::Relaxed);
+                }
+                let _ = p.reply.send(InferResponse {
+                    id: p.req.id,
+                    digit: argmax_i32(&logits) as u8,
+                    logits,
+                    latency_ns,
+                    batch_size,
+                    backend: backend.name(),
+                });
+            }
+        }
+        Err(e) => {
+            mine.rejected.fetch_add(batch_size as u64, Ordering::Relaxed);
+            if let Some(a) = agg {
+                a.rejected.fetch_add(batch_size as u64, Ordering::Relaxed);
+            }
+            eprintln!("[coordinator] batch of {batch_size} failed: {e:#}");
+        }
+    }
+}
+
+struct Shard {
+    queue: Mutex<VecDeque<Pending>>,
+    cv: Condvar,
+}
+
+struct PoolShared {
+    shards: Vec<Shard>,
+    shutdown: AtomicBool,
+    cfg: BatcherConfig,
+    /// Backpressure bound per shard (submit fails beyond it).
+    shard_cap: usize,
+}
+
+/// Multi-worker sharded inference engine: one queue shard + one backend
+/// replica + one metrics instance per worker, plus a pool-wide aggregate.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    /// Pool-wide aggregate metrics.
+    pub metrics: Arc<Metrics>,
+    /// Per-worker metrics, index-aligned with the replicas.
+    pub worker_metrics: Vec<Arc<Metrics>>,
+    next_id: AtomicU64,
+    rr: AtomicUsize,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    backend_name: &'static str,
+}
+
+impl WorkerPool {
+    /// Spawn one worker thread per replica, each draining its own shard.
+    ///
+    /// `cfg.max_batch` is clamped to the smallest replica `max_batch` so a
+    /// drained batch always fits whichever worker drains it.
+    pub fn start(replicas: Vec<Arc<dyn InferBackend>>, cfg: BatcherConfig) -> Result<WorkerPool> {
+        anyhow::ensure!(!replicas.is_empty(), "worker pool needs ≥ 1 replica");
+        cfg.validate()?;
+        let min_max_batch = replicas.iter().map(|r| r.max_batch()).min().unwrap();
+        let cfg = BatcherConfig {
+            max_batch: cfg.max_batch.min(min_max_batch),
+            ..cfg
+        };
+        let backend_name = replicas[0].name();
+        let shared = Arc::new(PoolShared {
+            shards: (0..replicas.len())
+                .map(|_| Shard {
+                    queue: Mutex::new(VecDeque::new()),
+                    cv: Condvar::new(),
+                })
+                .collect(),
+            shutdown: AtomicBool::new(false),
+            cfg,
+            shard_cap: 100_000,
+        });
+        let metrics = Arc::new(Metrics::new());
+        let worker_metrics: Vec<Arc<Metrics>> =
+            (0..shared.shards.len()).map(|_| Arc::new(Metrics::new())).collect();
+        let mut workers = Vec::new();
+        for (w, replica) in replicas.into_iter().enumerate() {
+            let shared = shared.clone();
+            let agg = metrics.clone();
+            let mine = worker_metrics[w].clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("bnn-pool-{w}"))
+                    .spawn(move || shard_worker_loop(shared, w, replica, agg, mine))
+                    .expect("spawn pool worker"),
+            );
+        }
+        Ok(WorkerPool {
+            shared,
+            metrics,
+            worker_metrics,
+            next_id: AtomicU64::new(1),
+            rr: AtomicUsize::new(0),
+            workers,
+            backend_name,
+        })
+    }
+
+    /// Pool of `workers` native replicas, each owning its own copy of the
+    /// packed model.  `block_rows = Some(b)` selects the blocked kernel
+    /// ([`crate::bnn::BnnModel::logits_into_blocked`]), `None` the scalar
+    /// reference path.
+    pub fn native(
+        model: &BnnModel,
+        workers: usize,
+        block_rows: Option<usize>,
+        cfg: BatcherConfig,
+    ) -> Result<WorkerPool> {
+        let replicas: Vec<Arc<dyn InferBackend>> = (0..workers.max(1))
+            .map(|_| -> Arc<dyn InferBackend> {
+                match block_rows {
+                    Some(b) => Arc::new(NativeBackend::with_block_rows(model.clone(), b)),
+                    None => Arc::new(NativeBackend::new(model.clone())),
+                }
+            })
+            .collect();
+        Self::start(replicas, cfg)
+    }
+
+    /// Pool of `workers` independent cycle-accurate simulator replicas —
+    /// software's version of deploying several accelerator boards.
+    pub fn fpga_sim(
+        model: &BnnModel,
+        workers: usize,
+        sim_cfg: SimConfig,
+        cfg: BatcherConfig,
+    ) -> Result<WorkerPool> {
+        let mut replicas: Vec<Arc<dyn InferBackend>> = Vec::new();
+        for _ in 0..workers.max(1) {
+            replicas.push(Arc::new(super::backend::SimBackend::new(model, sim_cfg)?));
+        }
+        Self::start(replicas, cfg)
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend_name
+    }
+
+    /// Number of workers (= shards = replicas).
+    pub fn workers(&self) -> usize {
+        self.shared.shards.len()
+    }
+
+    /// Current depth of every shard (observability / tests).
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.shared
+            .shards
+            .iter()
+            .map(|s| s.queue.lock().unwrap().len())
+            .collect()
+    }
+
+    /// Total queued requests across shards.
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depths().iter().sum()
+    }
+
+    /// Round-robin refined by power-of-two-choices: compare the round-robin
+    /// shard with its neighbour, take the shallower queue.
+    fn pick_shard(&self) -> usize {
+        let n = self.shared.shards.len();
+        if n == 1 {
+            return 0;
+        }
+        let i = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let j = (i + 1) % n;
+        let di = self.shared.shards[i].queue.lock().unwrap().len();
+        let dj = self.shared.shards[j].queue.lock().unwrap().len();
+        if dj < di {
+            j
+        } else {
+            i
+        }
+    }
+
+    /// Enqueue one image on the least-loaded candidate shard.
+    pub fn submit(&self, image: Packed) -> Result<(RequestId, mpsc::Receiver<InferResponse>)> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let s = self.pick_shard();
+        let shard = &self.shared.shards[s];
+        {
+            let mut q = shard.queue.lock().unwrap();
+            if q.len() >= self.shared.shard_cap {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                self.worker_metrics[s].rejected.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!("shard {s} full ({} requests)", q.len());
+            }
+            q.push_back(Pending {
+                req: InferRequest::new(id, image),
+                reply: tx,
+            });
+        }
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.worker_metrics[s].submitted.fetch_add(1, Ordering::Relaxed);
+        shard.cv.notify_one();
+        Ok((id, rx))
+    }
+
+    /// Blocking classify (the [`super::InferService`] default, kept as an
+    /// inherent method so callers don't need the trait in scope).
+    pub fn infer(&self, image: Packed) -> Result<InferResponse> {
+        super::InferService::infer(self, image)
+    }
+
+    /// Submit many, wait for all (responses in submission order).
+    pub fn infer_many(&self, images: Vec<Packed>) -> Result<Vec<InferResponse>> {
+        super::InferService::infer_many(self, images)
+    }
+
+    /// Latency histogram merged across workers (the aggregate [`Metrics`]
+    /// carries counters only — no shared histogram lock on the hot path).
+    pub fn latency_snapshot(&self) -> crate::util::stats::LatencyHistogram {
+        let mut h = crate::util::stats::LatencyHistogram::new();
+        for m in &self.worker_metrics {
+            h.merge(&m.latency_snapshot());
+        }
+        h
+    }
+
+    /// Pool-wide summary (aggregate counters + merged latency histogram).
+    pub fn summary_line(&self) -> String {
+        self.metrics.summary_line_with(&self.latency_snapshot())
+    }
+
+    /// One metrics line per worker (queue skew / stragglers at a glance).
+    pub fn per_worker_report(&self) -> String {
+        let mut out = String::new();
+        for (w, m) in self.worker_metrics.iter().enumerate() {
+            out.push_str(&format!("worker {w}: {}\n", m.summary_line()));
+        }
+        out
+    }
+
+    /// Stop workers; in-flight batches finish, queued work is abandoned.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        for s in &self.shared.shards {
+            s.cv.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn shard_worker_loop(
+    shared: Arc<PoolShared>,
+    idx: usize,
+    backend: Arc<dyn InferBackend>,
+    agg: Arc<Metrics>,
+    mine: Arc<Metrics>,
+) {
+    let shard = &shared.shards[idx];
+    loop {
+        // Decide under the shard lock, execute outside it.
+        let batch: Vec<Pending> = {
+            let mut q = shard.queue.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                match decide(
+                    q.len(),
+                    q.front().map(|p| p.req.enqueued_at),
+                    &shared.cfg,
+                    Instant::now(),
+                ) {
+                    DrainDecision::Launch(n) => break q.drain(..n).collect(),
+                    DrainDecision::Wait(d) => {
+                        let (guard, _) = shard.cv.wait_timeout(q, d).unwrap();
+                        q = guard;
+                    }
+                    DrainDecision::Idle => {
+                        let (guard, _) = shard
+                            .cv
+                            .wait_timeout(q, std::time::Duration::from_millis(50))
+                            .unwrap();
+                        q = guard;
+                    }
+                }
+            }
+        };
+        execute_batch(backend.as_ref(), Some(agg.as_ref()), mine.as_ref(), batch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::model::random_model;
+    use crate::bnn::packing::pack_bits_u64;
+    use crate::bnn::DEFAULT_BLOCK_ROWS;
+    use crate::util::prng::Xoshiro256;
+    use std::time::Duration;
+
+    fn imgs(n: usize, seed: u64) -> Vec<Packed> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n)
+            .map(|_| {
+                let bits: Vec<u8> = (0..784).map(|_| rng.bool() as u8).collect();
+                Packed {
+                    words: pack_bits_u64(&bits),
+                    n_bits: 784,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pool_serves_and_matches_direct_inference() {
+        let model = random_model(&[784, 128, 64, 10], 51);
+        let pool = WorkerPool::native(
+            &model,
+            4,
+            Some(DEFAULT_BLOCK_ROWS),
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(100),
+            },
+        )
+        .unwrap();
+        assert_eq!(pool.workers(), 4);
+        let images = imgs(120, 52);
+        let responses = pool.infer_many(images.clone()).unwrap();
+        assert_eq!(responses.len(), 120);
+        for (img, r) in images.iter().zip(&responses) {
+            assert_eq!(r.logits, model.logits(&img.words), "req {}", r.id);
+            assert_eq!(r.digit as usize, model.predict(&img.words));
+            assert_eq!(r.backend, "native");
+        }
+        // no request lost or duplicated
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 120);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn per_worker_metrics_sum_to_aggregate() {
+        let model = random_model(&[784, 128, 64, 10], 53);
+        let pool = WorkerPool::native(
+            &model,
+            3,
+            Some(DEFAULT_BLOCK_ROWS),
+            BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(50),
+            },
+        )
+        .unwrap();
+        let n = 90;
+        pool.infer_many(imgs(n, 54)).unwrap();
+        let agg = pool.metrics.completed.load(Ordering::Relaxed);
+        let per: u64 = pool
+            .worker_metrics
+            .iter()
+            .map(|m| m.completed.load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(agg, n as u64);
+        assert_eq!(per, agg, "per-worker completions must sum to the aggregate");
+        // merged latency histogram sees every request; the aggregate
+        // Metrics records counters only (no shared histogram lock)
+        assert_eq!(pool.latency_snapshot().count(), n as u64);
+        assert_eq!(pool.metrics.latency_snapshot().count(), 0);
+        assert!(pool.summary_line().contains("completed=90"), "{}", pool.summary_line());
+        // dispatch actually spreads load: more than one worker saw traffic
+        let busy = pool
+            .worker_metrics
+            .iter()
+            .filter(|m| m.completed.load(Ordering::Relaxed) > 0)
+            .count();
+        assert!(busy >= 2, "only {busy}/3 workers saw traffic");
+        let report = pool.per_worker_report();
+        assert!(report.contains("worker 0:") && report.contains("worker 2:"), "{report}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn blocked_pool_equals_scalar_pool() {
+        let model = random_model(&[784, 128, 64, 10], 55);
+        let cfg = BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(50),
+        };
+        let blocked = WorkerPool::native(&model, 2, Some(32), cfg).unwrap();
+        let scalar = WorkerPool::native(&model, 2, None, cfg).unwrap();
+        let images = imgs(30, 56);
+        let a = blocked.infer_many(images.clone()).unwrap();
+        let b = scalar.infer_many(images).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.logits, y.logits);
+            assert_eq!(x.digit, y.digit);
+        }
+        blocked.shutdown();
+        scalar.shutdown();
+    }
+
+    #[test]
+    fn single_worker_pool_degenerates_to_coordinator_semantics() {
+        let model = random_model(&[784, 128, 64, 10], 57);
+        let pool =
+            WorkerPool::native(&model, 1, Some(DEFAULT_BLOCK_ROWS), BatcherConfig::default())
+                .unwrap();
+        assert_eq!(pool.workers(), 1);
+        let r = pool.infer(imgs(1, 58).pop().unwrap()).unwrap();
+        assert_eq!(r.batch_size, 1);
+        assert_eq!(pool.queue_depth(), 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shutdown_terminates_workers() {
+        let model = random_model(&[784, 128, 64, 10], 59);
+        let pool = WorkerPool::native(&model, 4, None, BatcherConfig::default()).unwrap();
+        pool.shutdown(); // must not hang
+    }
+}

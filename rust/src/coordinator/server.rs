@@ -17,14 +17,9 @@ use anyhow::Result;
 use super::backend::InferBackend;
 use super::batcher::{decide, BatcherConfig, DrainDecision};
 use super::metrics::Metrics;
+use super::pool::{execute_batch, Pending};
 use super::request::{InferRequest, InferResponse, RequestId};
-use crate::bnn::argmax_i32;
 use crate::bnn::packing::Packed;
-
-struct Pending {
-    req: InferRequest,
-    reply: mpsc::Sender<InferResponse>,
-}
 
 struct Shared {
     queue: Mutex<VecDeque<Pending>>,
@@ -173,36 +168,7 @@ fn worker_loop(shared: Arc<Shared>, backend: Arc<dyn InferBackend>, metrics: Arc
             }
         };
 
-        let images: Vec<Packed> = batch.iter().map(|p| p.req.image.clone()).collect();
-        let batch_size = images.len();
-        metrics.record_batch(batch_size);
-        let exec_start = Instant::now();
-        match backend.infer_batch(&images) {
-            Ok(all_logits) => {
-                for (p, logits) in batch.into_iter().zip(all_logits) {
-                    let latency_ns = p.req.enqueued_at.elapsed().as_nanos() as u64;
-                    metrics
-                        .record_queue_wait((exec_start - p.req.enqueued_at).as_nanos() as u64);
-                    metrics.record_latency(latency_ns);
-                    let _ = p.reply.send(InferResponse {
-                        id: p.req.id,
-                        digit: argmax_i32(&logits) as u8,
-                        logits,
-                        latency_ns,
-                        batch_size,
-                        backend: backend.name(),
-                    });
-                }
-            }
-            Err(e) => {
-                // failure injection path: drop the replies; submitters see
-                // a disconnected channel. Count as rejected.
-                metrics
-                    .rejected
-                    .fetch_add(batch_size as u64, Ordering::Relaxed);
-                eprintln!("[coordinator] batch of {batch_size} failed: {e:#}");
-            }
-        }
+        execute_batch(backend.as_ref(), None, metrics.as_ref(), batch);
     }
 }
 

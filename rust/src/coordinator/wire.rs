@@ -21,7 +21,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use super::server::Coordinator;
+use super::InferService;
 use crate::bnn::packing::Packed;
 
 pub const MAGIC_REQ: u8 = 0xB1;
@@ -94,8 +94,11 @@ pub struct WireServer {
 }
 
 impl WireServer {
-    /// Bind `addr` (e.g. "127.0.0.1:0") and serve requests through `coord`.
-    pub fn start(addr: &str, coord: Arc<Coordinator>) -> Result<WireServer> {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve requests through any
+    /// [`InferService`] (single-queue [`super::Coordinator`] or sharded
+    /// [`super::WorkerPool`]).
+    pub fn start<S: InferService + 'static>(addr: &str, service: Arc<S>) -> Result<WireServer> {
+        let service: Arc<dyn InferService> = service;
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -109,10 +112,10 @@ impl WireServer {
                 while !t_stop.load(Ordering::SeqCst) {
                     match listener.accept() {
                         Ok((stream, _)) => {
-                            let coord = coord.clone();
+                            let service = service.clone();
                             let served = t_served.clone();
                             std::thread::spawn(move || {
-                                let _ = handle_conn(stream, coord, served);
+                                let _ = handle_conn(stream, service, served);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -149,7 +152,7 @@ impl Drop for WireServer {
 
 fn handle_conn(
     mut stream: TcpStream,
-    coord: Arc<Coordinator>,
+    coord: Arc<dyn InferService>,
     served: Arc<AtomicU64>,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
@@ -269,6 +272,29 @@ mod tests {
             assert_eq!(r.status, 0);
         }
         assert_eq!(server.served.load(Ordering::Relaxed), 5);
+        server.shutdown();
+    }
+
+    #[test]
+    fn tcp_end_to_end_over_worker_pool() {
+        use crate::bnn::model::random_model;
+        use crate::bnn::DEFAULT_BLOCK_ROWS;
+        use crate::coordinator::{BatcherConfig, WorkerPool};
+
+        let model = random_model(&[784, 128, 64, 10], 6);
+        let pool = Arc::new(
+            WorkerPool::native(&model, 2, Some(DEFAULT_BLOCK_ROWS), BatcherConfig::default())
+                .unwrap(),
+        );
+        let server = WireServer::start("127.0.0.1:0", pool.clone()).unwrap();
+        let mut client = WireClient::connect(server.addr).unwrap();
+        for seed in 10..14 {
+            let img = image(seed);
+            let r = client.classify(&img).unwrap();
+            assert_eq!(r.digit as usize, model.predict(&img.words), "seed {seed}");
+            assert_eq!(r.status, 0);
+        }
+        assert_eq!(server.served.load(Ordering::Relaxed), 4);
         server.shutdown();
     }
 }

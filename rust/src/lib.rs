@@ -5,7 +5,9 @@
 //! three-layer Rust + JAX + Pallas stack (see `DESIGN.md`):
 //!
 //! * [`bnn`] — bit-packed XNOR-popcount inference library (the paper's
-//!   Algorithm 1 in software, `z = n − 2·popcount(x ⊕ w)`).
+//!   Algorithm 1 in software, `z = n − 2·popcount(x ⊕ w)`), with a scalar
+//!   reference kernel and a blocked multi-row kernel (the software mirror
+//!   of the FPGA's parallelism parameter).
 //! * [`sim`] — cycle-accurate simulator of the paper's Verilog design:
 //!   FSM-controlled datapath, dual-port BRAM / LUT-ROM memories, argmax,
 //!   seven-segment output, parameterized parallelism (1..128).
@@ -15,8 +17,10 @@
 //!   Python build path emits (`make artifacts`); Python never runs on the
 //!   request path.
 //! * [`coordinator`] — serving layer: request router + dynamic batcher over
-//!   interchangeable backends (native / PJRT / FPGA-sim), worker threads,
-//!   metrics.
+//!   interchangeable backends (native / PJRT / FPGA-sim), the single-queue
+//!   [`coordinator::Coordinator`] and the sharded multi-worker
+//!   [`coordinator::WorkerPool`] (one backend replica + metrics per
+//!   worker).
 //! * [`mem`], [`data`] — the paper's `.mem`/idx interchange formats and the
 //!   synthetic-MNIST dataset substrate.
 //! * [`util`], [`config`], [`cli`] — first-party infrastructure (PRNG,
@@ -48,4 +52,27 @@ pub fn artifacts_dir() -> std::path::PathBuf {
     std::env::var_os("BNN_FPGA_ARTIFACTS")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}
+
+/// Load the trained model and the paper's §4.1 subset from
+/// [`artifacts_dir`], falling back to a deterministic random model plus
+/// `n_synth` synthetic digits when `make artifacts` has not run.
+///
+/// Returns `(model, dataset, trained)`.  With `trained == false` the
+/// predictions are chance-level, but kernel equivalence, cycle counts,
+/// serving mechanics and every throughput number are unaffected — which is
+/// what lets the examples, benches and most tests run artifact-free.
+pub fn load_model_or_synth(n_synth: usize) -> (bnn::BnnModel, data::Dataset, bool) {
+    let dir = artifacts_dir();
+    if let (Ok(model), Ok(ds)) = (
+        mem::load_model(&dir.join("weights.json")),
+        data::Dataset::load_mem_subset(&dir.join("mem")),
+    ) {
+        return (model, ds, true);
+    }
+    (
+        bnn::model::random_model(&BNN_DIMS, 0xB17),
+        data::synth::generate_dataset(n_synth.max(1), 0xDA7A),
+        false,
+    )
 }

@@ -1,3 +1,5 @@
+//! `bnn-fpga` binary entrypoint — all behavior lives in [`bnn_fpga::cli`].
+
 fn main() {
     bnn_fpga::cli::run();
 }

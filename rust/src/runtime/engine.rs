@@ -118,8 +118,6 @@ impl Engine {
             &spec.input.shape,
             pod_bytes(input),
         )?;
-        let shape = spec.input.shape.clone();
-        drop(shape);
         let out = self.execute_one(name, lit)?;
         Ok(out.to_vec::<i32>()?)
     }

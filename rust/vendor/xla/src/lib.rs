@@ -1,0 +1,146 @@
+//! API stub for the `xla 0.1.6` PJRT wrapper crate.
+//!
+//! The offline build environment ships neither crates.io nor the
+//! `xla_extension` native library, so this vendored stand-in mirrors the
+//! exact API surface `runtime/engine.rs` uses and fails **at runtime**, not
+//! compile time: [`PjRtClient::cpu`] returns an error explaining that the
+//! PJRT runtime is unavailable.  Every downstream consumer (`Engine::load`,
+//! the PJRT backend, benches, tests) already treats engine construction as
+//! fallible, so the whole PJRT path degrades gracefully to "unavailable"
+//! while the native and fpga-sim backends keep working.
+//!
+//! To run the real thing, point the `xla` dependency in `rust/Cargo.toml`
+//! at the actual wrapper crate; `runtime/engine.rs` compiles unchanged.
+
+use std::fmt;
+use std::path::Path;
+
+const UNAVAILABLE: &str = "PJRT runtime unavailable: this build uses the vendored `xla` API stub \
+     (no xla_extension in the offline environment). Swap the `xla` path \
+     dependency in rust/Cargo.toml for the real wrapper crate to enable \
+     PJRT execution";
+
+/// Error type matching the wrapper crate's (implements `std::error::Error`,
+/// so `?` converts into `anyhow::Error`).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(UNAVAILABLE.to_string()))
+}
+
+/// Element dtypes used by the artifact signatures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    U32,
+    I32,
+    F32,
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (stub: parsing always fails).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Host literal (stub: all accessors fail).
+pub struct Literal;
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        // Construction is pure host-side bookkeeping in the real crate; the
+        // stub still fails here so no caller can get past input staging.
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("PJRT runtime unavailable"));
+    }
+
+    #[test]
+    fn full_surface_is_callable() {
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let comp = XlaComputation::from_proto(&HloModuleProto);
+        let _ = comp; // constructible without a client
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::U32, &[1, 25], &[0; 100])
+            .is_err());
+        assert!(PjRtLoadedExecutable.execute::<Literal>(&[]).is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+    }
+}
