@@ -41,6 +41,22 @@ fn main() -> anyhow::Result<()> {
     );
     println!("blocked kernel: bit-identical to the scalar path (block_rows = {})",
         bnn_fpga::bnn::DEFAULT_BLOCK_ROWS);
+    // ...and so is the weight-stationary batch-tiled kernel, over a batch.
+    let batch = 5.min(ds.len());
+    let inputs = ds.batch_words(0, batch);
+    assert_eq!(
+        model.logits_batch_tiled(
+            &inputs,
+            batch,
+            bnn_fpga::bnn::DEFAULT_BLOCK_ROWS,
+            bnn_fpga::bnn::DEFAULT_TILE_IMGS
+        ),
+        model.logits_batch(&inputs, batch)
+    );
+    println!(
+        "tiled kernel  : bit-identical over a {batch}-image batch (tile_imgs = {})",
+        bnn_fpga::bnn::DEFAULT_TILE_IMGS
+    );
 
     // 3. The same image through the cycle-accurate FPGA simulator at the
     //    paper's chosen design point (64× parallelism, BRAM weights).

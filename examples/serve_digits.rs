@@ -8,13 +8,15 @@
 //! * request path (this binary, no Python): classification requests are
 //!   batched and served by
 //!   - a single-worker scalar-kernel coordinator (the baseline),
-//!   - the sharded multi-worker pool with the blocked kernel,
+//!   - the sharded multi-worker pool with the per-image blocked kernel,
+//!   - the same pool on the weight-stationary batch-tiled kernel,
 //!   - the PJRT backend (when the runtime + artifacts are available),
 //!   - a pool of cycle-accurate FPGA simulator replicas,
 //!   reporting accuracy, latency percentiles and throughput per backend.
 //!
 //! ```sh
-//! cargo run --release --example serve_digits -- --requests 2000 --workers 4 --block-rows 16
+//! cargo run --release --example serve_digits -- --requests 2000 --workers 4 \
+//!     --block-rows 16 --tile-imgs 8
 //! ```
 
 use std::sync::Arc;
@@ -22,7 +24,7 @@ use std::time::{Duration, Instant};
 
 use bnn_fpga::cli::args::Args;
 use bnn_fpga::coordinator::{
-    BatcherConfig, Coordinator, InferService, NativeBackend, PjrtBackend, WorkerPool,
+    BatcherConfig, Coordinator, InferService, Kernel, NativeBackend, PjrtBackend, WorkerPool,
 };
 use bnn_fpga::data::{synth, Dataset};
 use bnn_fpga::runtime::Engine;
@@ -36,8 +38,10 @@ fn main() -> anyhow::Result<()> {
     let n_requests = args.usize_or("requests", 1000)?;
     let workers = args.usize_or("workers", 4)?;
     let block_rows = args.usize_or("block-rows", bnn::DEFAULT_BLOCK_ROWS)?;
+    let tile_imgs = args.usize_or("tile-imgs", bnn::DEFAULT_TILE_IMGS)?;
     anyhow::ensure!(workers >= 1, "--workers must be ≥ 1");
     anyhow::ensure!(block_rows >= 1, "--block-rows must be ≥ 1");
+    anyhow::ensure!(tile_imgs >= 1, "--tile-imgs must be ≥ 1");
 
     let dir = artifacts_dir();
     let (model, subset, trained) = bnn_fpga::load_model_or_synth(100);
@@ -53,7 +57,7 @@ fn main() -> anyhow::Result<()> {
     };
     println!(
         "model 784-128-64-10{}, test set {} images, {n_requests} requests/backend, \
-         {workers} workers, block_rows {block_rows}",
+         {workers} workers, block_rows {block_rows}, tile_imgs {tile_imgs}",
         if trained { "" } else { " (untrained synthetic fallback)" },
         test.len()
     );
@@ -122,12 +126,42 @@ fn main() -> anyhow::Result<()> {
         coord.shutdown();
     }
 
-    // 2. The sharded worker pool with the blocked kernel — the scaling path.
-    let per_worker_report = {
-        let pool = WorkerPool::native(&model, workers, Some(block_rows), batcher)?;
+    // 2. The sharded worker pool with the per-image blocked kernel.
+    {
+        let pool = WorkerPool::native(
+            &model,
+            workers,
+            Kernel::Blocked { block_rows },
+            batcher,
+        )?;
         let (correct, wall) = run_load(n_requests, &pool)?;
         add_row(
             &format!("native blocked x{workers}"),
+            workers,
+            n_requests,
+            correct,
+            wall,
+            pool.latency_snapshot(),
+            pool.metrics.mean_batch_size(),
+        );
+        pool.shutdown();
+    }
+
+    // 3. The weight-stationary batch-tiled kernel — the serving hot path:
+    //    each weight-row block is loaded once per tile of images.
+    let per_worker_report = {
+        let pool = WorkerPool::native(
+            &model,
+            workers,
+            Kernel::Tiled {
+                block_rows,
+                tile_imgs,
+            },
+            batcher,
+        )?;
+        let (correct, wall) = run_load(n_requests, &pool)?;
+        add_row(
+            &format!("native tiled x{workers}"),
             workers,
             n_requests,
             correct,
@@ -140,7 +174,7 @@ fn main() -> anyhow::Result<()> {
         report
     };
 
-    // 3. PJRT over the AOT artifact ladder, when runtime + artifacts exist.
+    // 4. PJRT over the AOT artifact ladder, when runtime + artifacts exist.
     match Engine::load(&dir) {
         Ok(engine) => {
             let engine = Arc::new(engine);
@@ -169,7 +203,7 @@ fn main() -> anyhow::Result<()> {
         Err(e) => println!("pjrt backend skipped: {e:#}"),
     }
 
-    // 4. A pool of cycle-accurate simulator replicas (deliberately slow —
+    // 5. A pool of cycle-accurate simulator replicas (deliberately slow —
     //    each request pays the full simulated hardware latency).
     {
         let sim_workers = workers.min(2);
@@ -197,7 +231,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     table.print();
-    println!("\nper-worker metrics (native blocked pool):\n{per_worker_report}");
+    println!("\nper-worker metrics (native tiled pool):\n{per_worker_report}");
     println!("all paths produce identical logits — see rust/tests/integration.rs");
     Ok(())
 }

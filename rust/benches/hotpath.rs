@@ -1,8 +1,13 @@
 //! Hot-path micro-benchmarks (the §Perf instrument): native inference
-//! (scalar vs blocked kernel, with a block-size sweep), batch throughput,
-//! the 1-vs-N worker-pool scaling sweep, simulator tick rate, PJRT dispatch
-//! overhead, and coordinator round-trip cost.  Run before/after each
-//! optimization and record deltas in EXPERIMENTS.md §Perf.
+//! (scalar vs blocked vs weight-stationary tiled kernel, with block-size
+//! and tile-width sweeps), batch throughput, the 1-vs-N worker-pool
+//! scaling sweep, simulator tick rate, PJRT dispatch overhead, and
+//! coordinator round-trip cost.  Run before/after each optimization and
+//! record deltas in EXPERIMENTS.md §Perf.
+//!
+//! Besides the human-readable tables, the kernel-variant results are
+//! written to `BENCH_hotpath.json` (kernel → ns/image, images/sec) so the
+//! perf trajectory is tracked across PRs instead of only printed.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -10,12 +15,29 @@ mod common;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use bnn_fpga::bnn::DEFAULT_BLOCK_ROWS;
-use bnn_fpga::coordinator::{BatcherConfig, Coordinator, NativeBackend, WorkerPool};
+use std::collections::BTreeMap;
+
+use bnn_fpga::bnn::{DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS};
+use bnn_fpga::coordinator::{BatcherConfig, Coordinator, Kernel, NativeBackend, WorkerPool};
 use bnn_fpga::runtime::Engine;
 use bnn_fpga::sim::{Accelerator, MemStyle, SimConfig};
-use bnn_fpga::util::bench::from_args;
+use bnn_fpga::util::bench::{from_args, BenchResult};
+use bnn_fpga::util::json::{obj, Json};
 use bnn_fpga::util::table::{Align, Table};
+
+/// Record one kernel variant's batch result as `{ns_per_image, images_per_sec}`.
+fn record_kernel(map: &mut BTreeMap<String, Json>, key: &str, batch: usize, r: &BenchResult) {
+    map.insert(
+        key.to_string(),
+        obj(vec![
+            ("ns_per_image", Json::from(r.summary.mean / batch as f64)),
+            (
+                "images_per_sec",
+                Json::from(batch as f64 * 1e9 / r.summary.mean),
+            ),
+        ]),
+    );
+}
 
 fn main() {
     let (model, ds, dir) = common::load();
@@ -65,16 +87,34 @@ fn main() {
         add(&format!("native single, blocked B={block}"), r);
     }
 
-    // 3. native batch-100 throughput, scalar vs blocked
+    // 3. native batch-100 throughput: scalar vs blocked vs the
+    //    weight-stationary tiled kernel, with a tile-width sweep — the
+    //    variants recorded to BENCH_hotpath.json
+    let mut kernel_json = BTreeMap::new();
+    let batch_n = ds.len().min(100);
     {
-        let inputs = ds.batch_words(0, ds.len().min(100));
-        let n = ds.len().min(100);
+        let inputs = ds.batch_words(0, batch_n);
+        let n = batch_n;
         let r = bench.run("native-b100", || model.logits_batch(&inputs, n));
+        record_kernel(&mut kernel_json, "scalar", n, &r);
         add("native batch-100, scalar (total)", r);
         let r = bench.run("native-b100-blocked", || {
             model.logits_batch_blocked(&inputs, n, DEFAULT_BLOCK_ROWS)
         });
+        record_kernel(&mut kernel_json, &format!("blocked_b{DEFAULT_BLOCK_ROWS}"), n, &r);
         add("native batch-100, blocked (total)", r);
+        for tile in [2usize, 4, 8, 16] {
+            let r = bench.run(&format!("native-b100-tiled-t{tile}"), || {
+                model.logits_batch_tiled(&inputs, n, DEFAULT_BLOCK_ROWS, tile)
+            });
+            record_kernel(
+                &mut kernel_json,
+                &format!("tiled_b{DEFAULT_BLOCK_ROWS}_t{tile}"),
+                n,
+                &r,
+            );
+            add(&format!("native batch-100, tiled T={tile} (total)"), r);
+        }
     }
 
     // 4. one binary dense layer (784→128) in isolation, scalar vs blocked
@@ -134,9 +174,22 @@ fn main() {
 
     t.print();
 
+    // machine-readable perf trajectory: kernel variant -> ns/image +
+    // images/sec at the batch-100 point, tracked across PRs
+    let doc = obj(vec![
+        ("bench", Json::from("hotpath")),
+        ("batch", Json::from(batch_n as u64)),
+        ("block_rows", Json::from(DEFAULT_BLOCK_ROWS as u64)),
+        ("kernels", Json::Obj(kernel_json)),
+    ]);
+    match std::fs::write("BENCH_hotpath.json", doc.to_string()) {
+        Ok(()) => println!("\nwrote kernel-variant results to BENCH_hotpath.json"),
+        Err(e) => println!("\ncould not write BENCH_hotpath.json: {e}"),
+    }
+
     // 8. worker-pool scaling sweep: same workload, 1..N workers, scalar vs
-    //    blocked — the speedup is measured, not asserted.
-    println!("\n=== worker-pool scaling (blocked kernel vs scalar, offered load fixed) ===\n");
+    //    blocked vs tiled — the speedup is measured, not asserted.
+    println!("\n=== worker-pool scaling (kernel schedules, offered load fixed) ===\n");
     let mut pt = Table::new(&[
         "Workers", "Kernel", "Requests", "Wall (ms)", "Throughput (req/s)", "Speedup",
     ])
@@ -146,11 +199,26 @@ fn main() {
     let images: Vec<_> = (0..n_req).map(|i| ds.images[i % ds.len()].clone()).collect();
     let mut baseline_rps = 0.0f64;
     for workers in [1usize, 2, 4, 8] {
-        for (kernel, block) in [("scalar", None), ("blocked", Some(DEFAULT_BLOCK_ROWS))] {
+        for (label, kernel) in [
+            ("scalar", Kernel::Scalar),
+            (
+                "blocked",
+                Kernel::Blocked {
+                    block_rows: DEFAULT_BLOCK_ROWS,
+                },
+            ),
+            (
+                "tiled",
+                Kernel::Tiled {
+                    block_rows: DEFAULT_BLOCK_ROWS,
+                    tile_imgs: DEFAULT_TILE_IMGS,
+                },
+            ),
+        ] {
             let pool = WorkerPool::native(
                 &model,
                 workers,
-                block,
+                kernel,
                 BatcherConfig {
                     max_batch: 64,
                     max_wait: Duration::from_micros(100),
@@ -163,12 +231,12 @@ fn main() {
             let wall = t0.elapsed().as_secs_f64();
             pool.shutdown();
             let rps = n_req as f64 / wall;
-            if workers == 1 && block.is_none() {
+            if workers == 1 && kernel == Kernel::Scalar {
                 baseline_rps = rps;
             }
             pt.row(vec![
                 workers.to_string(),
-                kernel.into(),
+                label.into(),
                 n_req.to_string(),
                 format!("{:.1}", wall * 1e3),
                 format!("{rps:.0}"),

@@ -1,6 +1,8 @@
 //! Table 5 (§4.7.2): inference latency vs batch size on CPU and GPU — plus
-//! the native-engine extension: scalar vs blocked kernel and 1-vs-N worker
-//! pools over the same batch ladder.
+//! the native-engine extension: scalar vs blocked vs weight-stationary
+//! tiled kernel and 1-vs-N worker pools over the same batch ladder.  The
+//! tiled path is asserted bit-identical to the scalar reference and the
+//! cycle-accurate simulator before any timing is reported.
 //!
 //! The CPU column is **measured** by executing the batched AOT artifacts on
 //! the PJRT CPU client (the paper used TF on a Colab Xeon) when the runtime
@@ -15,8 +17,8 @@ mod common;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use bnn_fpga::bnn::DEFAULT_BLOCK_ROWS;
-use bnn_fpga::coordinator::{BatcherConfig, WorkerPool};
+use bnn_fpga::bnn::{DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS};
+use bnn_fpga::coordinator::{BatcherConfig, Kernel, WorkerPool};
 use bnn_fpga::estimate::gpu_model::GpuModel;
 use bnn_fpga::runtime::Engine;
 use bnn_fpga::sim::{Accelerator, MemStyle, SimConfig};
@@ -34,6 +36,31 @@ fn main() {
     let gpu = GpuModel::default();
     let quick = std::env::args().any(|a| a == "--quick");
     let runs = if quick { 10 } else { 30 };
+
+    // Correctness gate before any timing: the tiled kernel must be
+    // bit-identical to the per-image scalar reference AND the
+    // cycle-accurate simulator on this model.
+    {
+        let check_n = 16usize;
+        let mut inputs = Vec::new();
+        for i in 0..check_n {
+            inputs.extend_from_slice(&ds.images[i % ds.len()].words);
+        }
+        let scalar = model.logits_batch(&inputs, check_n);
+        let tiled =
+            model.logits_batch_tiled(&inputs, check_n, DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS);
+        assert_eq!(tiled, scalar, "tiled kernel diverged from the scalar reference");
+        let mut acc = Accelerator::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap();
+        for i in 0..check_n {
+            let r = acc.run_image(&ds.images[i % ds.len()]);
+            assert_eq!(
+                r.scores,
+                &scalar[i * 10..(i + 1) * 10],
+                "simulator diverged from the scalar reference at image {i}"
+            );
+        }
+        println!("tiled kernel verified bit-identical to scalar reference and FPGA simulator\n");
+    }
 
     println!("=== Table 5: inference latency vs batch size (CPU measured, GPU modeled) ===\n");
     common::paper_row_note();
@@ -76,7 +103,7 @@ fn main() {
             ]);
         }
 
-        // Native engine: scalar vs blocked kernel over the same batch
+        // Native engine: scalar vs blocked vs tiled kernel over the same batch
         let batch_inputs = {
             let mut v = Vec::new();
             for i in 0..batch {
@@ -84,11 +111,32 @@ fn main() {
             }
             v
         };
-        for (label, block) in [("native scalar", None), ("native blocked", Some(DEFAULT_BLOCK_ROWS))] {
+        for (label, kernel) in [
+            ("native scalar", Kernel::Scalar),
+            (
+                "native blocked",
+                Kernel::Blocked {
+                    block_rows: DEFAULT_BLOCK_ROWS,
+                },
+            ),
+            (
+                "native tiled",
+                Kernel::Tiled {
+                    block_rows: DEFAULT_BLOCK_ROWS,
+                    tile_imgs: DEFAULT_TILE_IMGS,
+                },
+            ),
+        ] {
             let series: Vec<f64> = bench
-                .run_series(runs.min(15), || match block {
-                    Some(b) => model.logits_batch_blocked(&batch_inputs, batch, b),
-                    None => model.logits_batch(&batch_inputs, batch),
+                .run_series(runs.min(15), || match kernel {
+                    Kernel::Scalar => model.logits_batch(&batch_inputs, batch),
+                    Kernel::Blocked { block_rows } => {
+                        model.logits_batch_blocked(&batch_inputs, batch, block_rows)
+                    }
+                    Kernel::Tiled {
+                        block_rows,
+                        tile_imgs,
+                    } => model.logits_batch_tiled(&batch_inputs, batch, block_rows, tile_imgs),
                 })
                 .iter()
                 .map(|ns| ns / 1e6)
@@ -119,8 +167,8 @@ fn main() {
     println!("\n* GPU column is the calibrated T4 model (no GPU in this environment).");
 
     // 1-vs-N worker pools over the request path (queue + batcher included),
-    // blocked kernel, offered load = the Table 5 batch ladder.
-    println!("\n=== worker-pool batch sweep (blocked kernel, end-to-end request path) ===\n");
+    // tiled kernel, offered load = the Table 5 batch ladder.
+    println!("\n=== worker-pool batch sweep (tiled kernel, end-to-end request path) ===\n");
     let mut pt = Table::new(&["Requests", "Workers", "Wall (ms)", "Throughput (req/s)", "Speedup"]);
     for &n in &[1000usize, 10000] {
         let n = if quick { n / 10 } else { n };
@@ -130,7 +178,7 @@ fn main() {
             let pool = WorkerPool::native(
                 &model,
                 workers,
-                Some(DEFAULT_BLOCK_ROWS),
+                Kernel::default(),
                 BatcherConfig {
                     max_batch: 64,
                     max_wait: Duration::from_micros(100),

@@ -5,7 +5,9 @@
 pub mod model;
 pub mod packing;
 
-pub use model::{random_model, BinaryDenseLayer, BnnModel, Scratch, DEFAULT_BLOCK_ROWS};
+pub use model::{
+    random_model, BinaryDenseLayer, BnnModel, Scratch, DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS,
+};
 pub use packing::{pack_bits_u32, pack_bits_u64, unpack_bits_u64, words_u32, words_u64, Packed};
 
 /// Argmax with lowest-index tie-break — exactly the FSM's iterative

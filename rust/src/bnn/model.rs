@@ -17,6 +17,14 @@ use crate::util::prng::Xoshiro256;
 /// `[coordinator] block_rows`.
 pub const DEFAULT_BLOCK_ROWS: usize = 16;
 
+/// Default image-tile width for the weight-stationary batch kernel path
+/// ([`BnnModel::logits_batch_into_tiled`]): how many images stream past
+/// each weight-row block per pass.  8 keeps a full dynamic batch inside
+/// one or two tiles at typical serve batch sizes while the per-tile
+/// activation arena (`8 × max_act_words` words) stays L1-resident.
+/// Override per deployment via `--tile-imgs` / `[coordinator] tile_imgs`.
+pub const DEFAULT_TILE_IMGS: usize = 8;
+
 /// One binary dense layer: `n_out` packed weight rows (neuron-major — the
 /// paper's transposed ROM layout) and, for hidden layers, folded integer
 /// thresholds.
@@ -96,12 +104,27 @@ pub struct BnnModel {
 }
 
 /// Reusable per-inference scratch to keep the hot path allocation-free.
+///
+/// One instance serves every kernel schedule: the single-image paths use
+/// the `a`/`b` ping-pong buffers, the batch-tiled path
+/// ([`BnnModel::logits_batch_into_tiled`]) uses the flat activation arenas
+/// `ta`/`tb` (`tile_imgs` images × per-layer word stride, swapped by
+/// pointer between layers) plus the `zt` pre-activation tile.  All buffers
+/// grow to their steady-state size on first use and are reused thereafter,
+/// so a worker that owns one `Scratch` performs zero forward-pass
+/// allocations after warmup.
 #[derive(Clone, Debug, Default)]
 pub struct Scratch {
     a: Vec<u64>,
     b: Vec<u64>,
     /// Per-block pre-activation sums (blocked path only).
     z: Vec<i32>,
+    /// Tiled path: flat packed-activation arena, `tile_imgs × words` row-major.
+    ta: Vec<u64>,
+    /// Tiled path: the other half of the layer ping-pong.
+    tb: Vec<u64>,
+    /// Tiled path: `tile_imgs × block_rows` pre-activation sums.
+    zt: Vec<i32>,
 }
 
 impl BnnModel {
@@ -329,6 +352,136 @@ impl BnnModel {
         }
         out
     }
+
+    /// Weight-stationary batch-tiled forward pass — the serving hot path.
+    ///
+    /// Where [`Self::logits_batch`] re-walks the entire packed weight
+    /// matrix once per image, this pass streams the batch through the
+    /// weights in `tile_imgs`-image tiles: per layer, each `block_rows`
+    /// weight-row block is loaded once per **tile** and XNOR'd against
+    /// every image in it ([`packing::xnor_popcount_z_tile`]), cutting
+    /// weight-matrix traversals by `tile_imgs×` (DESIGN.md §Batch tiling).
+    ///
+    /// Layout: `inputs` is `batch × input_words` row-major (as
+    /// [`Self::logits_batch`]); `out` is `batch × n_classes` row-major.
+    /// All intermediate state lives in `scratch`'s flat activation arenas,
+    /// so the call performs **zero allocations** once `scratch` has warmed
+    /// up.  Bit-identical to the scalar reference for every batch size and
+    /// tile shape — `block_rows`/`tile_imgs` only change the compute
+    /// schedule, never the result (property-tested below and asserted
+    /// against the cycle-accurate simulator in
+    /// `rust/tests/integration.rs`).
+    ///
+    /// ```
+    /// use bnn_fpga::bnn::model::{random_model, Scratch};
+    /// use bnn_fpga::bnn::packing::pack_bits_u64;
+    ///
+    /// let model = random_model(&[784, 128, 64, 10], 7);
+    /// let mut inputs = Vec::new();
+    /// for seed in 0..3u8 {
+    ///     inputs.extend(pack_bits_u64(&vec![seed & 1; 784]));
+    /// }
+    /// let mut scratch = Scratch::default(); // reuse across batches
+    /// let mut tiled = vec![0i32; 3 * 10];
+    /// model.logits_batch_into_tiled(&inputs, 3, &mut scratch, &mut tiled, 16, 8);
+    /// assert_eq!(tiled, model.logits_batch(&inputs, 3)); // bit-identical
+    /// ```
+    pub fn logits_batch_into_tiled(
+        &self,
+        inputs: &[u64],
+        batch: usize,
+        scratch: &mut Scratch,
+        out: &mut [i32],
+        block_rows: usize,
+        tile_imgs: usize,
+    ) {
+        assert!(block_rows >= 1, "block_rows must be ≥ 1");
+        assert!(tile_imgs >= 1, "tile_imgs must be ≥ 1");
+        let iw = self.input_words();
+        assert_eq!(inputs.len(), batch * iw, "batch input length");
+        let nc = self.n_classes();
+        assert_eq!(out.len(), batch * nc, "batch output length");
+        let maxw = self.max_act_words();
+        scratch.ta.resize(tile_imgs * maxw, 0);
+        scratch.tb.resize(tile_imgs * maxw, 0);
+        scratch.zt.resize(tile_imgs * block_rows, 0);
+
+        let mut i0 = 0;
+        while i0 < batch {
+            let t = tile_imgs.min(batch - i0);
+            scratch.ta[..t * iw].copy_from_slice(&inputs[i0 * iw..(i0 + t) * iw]);
+            let out_tile = &mut out[i0 * nc..(i0 + t) * nc];
+            for layer in &self.layers {
+                let wpr = layer.words_per_row;
+                match &layer.thresholds {
+                    Some(thr) => {
+                        // hidden layer: tile of sums, threshold, re-pack
+                        // into the other arena with the next layer's stride
+                        let ow = packing::words_u64(layer.n_out);
+                        scratch.tb[..t * ow].fill(0);
+                        let mut j = 0;
+                        while j < layer.n_out {
+                            let b = block_rows.min(layer.n_out - j);
+                            let rows = &layer.weights[j * wpr..(j + b) * wpr];
+                            packing::xnor_popcount_z_tile(
+                                &scratch.ta[..t * wpr],
+                                t,
+                                rows,
+                                wpr,
+                                layer.n_in,
+                                &mut scratch.zt[..t * b],
+                                b,
+                            );
+                            for i in 0..t {
+                                for (k, &z) in scratch.zt[i * b..(i + 1) * b].iter().enumerate() {
+                                    if z >= thr[j + k] {
+                                        scratch.tb[i * ow + (j + k) / 64] |=
+                                            1u64 << ((j + k) % 64);
+                                    }
+                                }
+                            }
+                            j += b;
+                        }
+                        std::mem::swap(&mut scratch.ta, &mut scratch.tb);
+                    }
+                    None => {
+                        // output layer: row blocks land directly in the
+                        // caller's flat logits rows (stride = n_classes)
+                        let mut j = 0;
+                        while j < layer.n_out {
+                            let b = block_rows.min(layer.n_out - j);
+                            let rows = &layer.weights[j * wpr..(j + b) * wpr];
+                            packing::xnor_popcount_z_tile(
+                                &scratch.ta[..t * wpr],
+                                t,
+                                rows,
+                                wpr,
+                                layer.n_in,
+                                &mut out_tile[j..],
+                                nc,
+                            );
+                            j += b;
+                        }
+                    }
+                }
+            }
+            i0 += t;
+        }
+    }
+
+    /// Tiled batch inference, allocating convenience (tests/benches).
+    pub fn logits_batch_tiled(
+        &self,
+        inputs: &[u64],
+        batch: usize,
+        block_rows: usize,
+        tile_imgs: usize,
+    ) -> Vec<i32> {
+        let mut scratch = Scratch::default();
+        let mut out = vec![0i32; batch * self.n_classes()];
+        self.logits_batch_into_tiled(inputs, batch, &mut scratch, &mut out, block_rows, tile_imgs);
+        out
+    }
 }
 
 /// Deterministic random ±1 model with zero thresholds — the artifact-free
@@ -534,6 +687,134 @@ mod tests {
             model.logits_batch_blocked(&inputs, batch, DEFAULT_BLOCK_ROWS),
             model.logits_batch(&inputs, batch)
         );
+    }
+
+    #[test]
+    fn tiled_batch_equals_scalar_for_all_tile_shapes() {
+        // Every (block_rows, tile_imgs) shape — unaligned, tile-sized,
+        // layer-sized, oversized — must be bit-identical to the per-image
+        // scalar reference on the paper dims.
+        let mut rng = Xoshiro256::new(80);
+        let spec = random_net(&mut rng, &[784, 128, 64, 10]);
+        let model = model_from_sign_rows(spec).unwrap();
+        for batch in [1usize, 3, 8, 17] {
+            let mut inputs = Vec::new();
+            for _ in 0..batch {
+                let bits: Vec<u8> = (0..784).map(|_| rng.bool() as u8).collect();
+                inputs.extend(packing::pack_bits_u64(&bits));
+            }
+            let scalar = model.logits_batch(&inputs, batch);
+            for block in [1usize, 3, 16, 128, 200] {
+                for tile in [1usize, 2, 5, 8, 32] {
+                    assert_eq!(
+                        model.logits_batch_tiled(&inputs, batch, block, tile),
+                        scalar,
+                        "batch {batch}, block {block}, tile {tile}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_batch_equals_scalar_on_odd_dims() {
+        // widths that straddle the u64 word, the 4-row quad and the
+        // 2-image pair all at once
+        let mut rng = Xoshiro256::new(81);
+        for dims in [[37usize, 19, 11, 3], [65, 63, 5, 1], [130, 129, 67, 9]] {
+            let spec = random_net(&mut rng, &dims);
+            let model = model_from_sign_rows(spec).unwrap();
+            let batch = 7;
+            let mut inputs = Vec::new();
+            for _ in 0..batch {
+                let bits: Vec<u8> = (0..dims[0]).map(|_| rng.bool() as u8).collect();
+                inputs.extend(packing::pack_bits_u64(&bits));
+            }
+            let scalar = model.logits_batch(&inputs, batch);
+            for (block, tile) in [(1usize, 1usize), (4, 2), (6, 3), (33, 8)] {
+                assert_eq!(
+                    model.logits_batch_tiled(&inputs, batch, block, tile),
+                    scalar,
+                    "{dims:?} block {block} tile {tile}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_batch_equals_per_image_property() {
+        // The acceptance property: `logits_batch_into_tiled` is
+        // bit-identical to per-image `logits_into` across batch sizes
+        // {1, 2, 7, 64}, random tile shapes, and edge input widths
+        // (including non-multiples of 64).
+        use crate::util::proptest_lite::{gens, Runner};
+        let mut rng = Xoshiro256::new(82);
+        let models: Vec<BnnModel> = [
+            vec![784usize, 128, 64, 10],
+            vec![65, 63, 5, 3], // word-straddling widths
+        ]
+        .iter()
+        .map(|dims| model_from_sign_rows(random_net(&mut rng, dims)).unwrap())
+        .collect();
+        Runner::new("tiled-batch-vs-per-image").cases(10).run(
+            &gens::Pair(gens::U64(1..=40), gens::U64(1..=12)),
+            |(block, tile)| {
+                let (block, tile) = (*block as usize, *tile as usize);
+                models.iter().all(|model| {
+                    [1usize, 2, 7, 64].iter().all(|&batch| {
+                        let n_in = model.n_in();
+                        let mut case_rng =
+                            Xoshiro256::new((block * 1009 + tile * 31 + batch) as u64);
+                        let mut inputs = Vec::new();
+                        for _ in 0..batch {
+                            let bits: Vec<u8> =
+                                (0..n_in).map(|_| case_rng.bool() as u8).collect();
+                            inputs.extend(packing::pack_bits_u64(&bits));
+                        }
+                        let tiled = model.logits_batch_tiled(&inputs, batch, block, tile);
+                        let iw = model.input_words();
+                        let nc = model.n_classes();
+                        let mut scratch = Scratch::default();
+                        let mut want = vec![0i32; nc];
+                        (0..batch).all(|b| {
+                            model.logits_into(
+                                &inputs[b * iw..(b + 1) * iw],
+                                &mut scratch,
+                                &mut want,
+                            );
+                            tiled[b * nc..(b + 1) * nc] == want[..]
+                        })
+                    })
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn tiled_scratch_is_reusable_across_batch_sizes() {
+        // One Scratch must serve growing and shrinking batches (the worker
+        // arena pattern) without residue from earlier batches.
+        let mut rng = Xoshiro256::new(83);
+        let spec = random_net(&mut rng, &[784, 128, 64, 10]);
+        let model = model_from_sign_rows(spec).unwrap();
+        let mut scratch = Scratch::default();
+        for &batch in &[5usize, 1, 8, 3] {
+            let mut inputs = Vec::new();
+            for _ in 0..batch {
+                let bits: Vec<u8> = (0..784).map(|_| rng.bool() as u8).collect();
+                inputs.extend(packing::pack_bits_u64(&bits));
+            }
+            let mut out = vec![0i32; batch * 10];
+            model.logits_batch_into_tiled(
+                &inputs,
+                batch,
+                &mut scratch,
+                &mut out,
+                DEFAULT_BLOCK_ROWS,
+                DEFAULT_TILE_IMGS,
+            );
+            assert_eq!(out, model.logits_batch(&inputs, batch), "batch {batch}");
+        }
     }
 
     #[test]

@@ -59,9 +59,28 @@ pub fn u32_words_to_u64(words32: &[u32], n_bits: usize) -> Vec<u64> {
 
 /// Convert u64 hot-path words into u32 interchange words.
 pub fn u64_words_to_u32(words64: &[u64], n_bits: usize) -> Vec<u32> {
-    (0..words_u32(n_bits))
-        .map(|i| (words64[i / 2] >> (32 * (i % 2))) as u32)
-        .collect()
+    let mut out = vec![0u32; words_u32(n_bits)];
+    u64_words_to_u32_into(words64, n_bits, &mut out);
+    out
+}
+
+/// Allocation-free variant of [`u64_words_to_u32`]: write the first
+/// `words_u32(n_bits)` interchange words of `words64` into `out` (staging
+/// buffers on the serve hot path reuse one arena across batches).
+///
+/// Panics when `out` cannot hold them — a short destination would
+/// otherwise silently truncate the vector (per-image cold path, so the
+/// hard check costs nothing measurable).
+pub fn u64_words_to_u32_into(words64: &[u64], n_bits: usize, out: &mut [u32]) {
+    assert!(
+        out.len() >= words_u32(n_bits),
+        "{} u32 words needed, destination holds {}",
+        words_u32(n_bits),
+        out.len()
+    );
+    for (i, o) in out.iter_mut().enumerate().take(words_u32(n_bits)) {
+        *o = (words64[i / 2] >> (32 * (i % 2))) as u32;
+    }
 }
 
 /// A packed binary vector with its logical bit length.
@@ -184,6 +203,121 @@ pub fn xnor_popcount_z_block(
         .zip(outs.into_remainder())
     {
         *o = xnor_popcount_z(x, row, n_bits);
+    }
+}
+
+/// Weight-stationary batch-tile kernel: pre-activation sums for every
+/// (image, weight-row) pair of an `n_imgs × n_rows` tile, with each weight
+/// row walked **once per image pair** instead of once per image.
+///
+/// This is the software mirror of the FPGA datapath's weight reuse (§3.3:
+/// each ROM row is read once and broadcast while the image stream flows
+/// past it) and of FINN-style matrix–vector folding across a batch
+/// (PAPERS.md, Umuroglu et al. / Fraser et al.): the per-image blocked
+/// kernel ([`xnor_popcount_z_block`]) re-traverses the packed weight
+/// matrix for every image, while this kernel holds a 4-row weight quad in
+/// registers and streams two images through it — 8 independent popcount
+/// chains per inner iteration, 6 loads per 8 XNOR-popcounts instead of 5
+/// per 4.
+///
+/// Layout contracts (all row-major, no copies needed by callers):
+/// * `imgs` — `n_imgs × words_per_row` packed input words (the flat
+///   activation arena of [`super::model::Scratch`]);
+/// * `rows` — `n_rows × words_per_row` packed weight rows, exactly the
+///   [`super::model::BinaryDenseLayer::weights`] sub-slice layout;
+/// * `out[i * out_stride + j] = z(img_i, row_j)` with `out_stride ≥ n_rows`
+///   (a stride larger than `n_rows` lets layers write row blocks straight
+///   into a `batch × n_classes` logits buffer).
+///
+/// Padding-bit contract: as everywhere in this module, bits ≥ `n_bits`
+/// must be 0 in *every* operand.  Bit-identical to [`xnor_popcount_z`] by
+/// construction — both compute `z = n − 2·popcount(x ⊕ w)` exactly; the
+/// remainder rows/images fall back to the blocked/scalar kernels
+/// (property-tested below).
+///
+/// ```
+/// use bnn_fpga::bnn::packing::{pack_bits_u64, words_u64, xnor_popcount_z_tile};
+/// let imgs = [pack_bits_u64(&[1, 0, 1]), pack_bits_u64(&[0, 0, 0])].concat();
+/// let rows = [pack_bits_u64(&[1, 1, 1]), pack_bits_u64(&[0, 0, 0])].concat();
+/// let mut z = [0i32; 4];
+/// xnor_popcount_z_tile(&imgs, 2, &rows, words_u64(3), 3, &mut z, 2);
+/// assert_eq!(z, [1, -1, -3, 3]); // [img0·row0, img0·row1, img1·row0, img1·row1]
+/// ```
+#[allow(clippy::too_many_arguments)]
+pub fn xnor_popcount_z_tile(
+    imgs: &[u64],
+    n_imgs: usize,
+    rows: &[u64],
+    words_per_row: usize,
+    n_bits: usize,
+    out: &mut [i32],
+    out_stride: usize,
+) {
+    debug_assert!(words_per_row >= 1);
+    debug_assert_eq!(imgs.len(), n_imgs * words_per_row);
+    debug_assert_eq!(rows.len() % words_per_row, 0);
+    let n_rows = rows.len() / words_per_row;
+    if n_rows == 0 || n_imgs == 0 {
+        return;
+    }
+    debug_assert!(out_stride >= n_rows);
+    debug_assert!(out.len() >= (n_imgs - 1) * out_stride + n_rows);
+    let n = n_bits as i32;
+
+    // 4-row × 2-image register tiles; each weight quad stays resident
+    // while the tile's images stream through it.
+    let mut q = 0;
+    while q + 4 <= n_rows {
+        let r0 = &rows[q * words_per_row..(q + 1) * words_per_row];
+        let r1 = &rows[(q + 1) * words_per_row..(q + 2) * words_per_row];
+        let r2 = &rows[(q + 2) * words_per_row..(q + 3) * words_per_row];
+        let r3 = &rows[(q + 3) * words_per_row..(q + 4) * words_per_row];
+        let mut i = 0;
+        while i + 2 <= n_imgs {
+            let xa = &imgs[i * words_per_row..(i + 1) * words_per_row];
+            let xb = &imgs[(i + 1) * words_per_row..(i + 2) * words_per_row];
+            let (mut a0, mut a1, mut a2, mut a3) = (0u32, 0u32, 0u32, 0u32);
+            let (mut b0, mut b1, mut b2, mut b3) = (0u32, 0u32, 0u32, 0u32);
+            for (((((x0, x1), w0), w1), w2), w3) in
+                xa.iter().zip(xb).zip(r0).zip(r1).zip(r2).zip(r3)
+            {
+                a0 += (x0 ^ w0).count_ones();
+                a1 += (x0 ^ w1).count_ones();
+                a2 += (x0 ^ w2).count_ones();
+                a3 += (x0 ^ w3).count_ones();
+                b0 += (x1 ^ w0).count_ones();
+                b1 += (x1 ^ w1).count_ones();
+                b2 += (x1 ^ w2).count_ones();
+                b3 += (x1 ^ w3).count_ones();
+            }
+            let oa = i * out_stride + q;
+            out[oa] = n - 2 * a0 as i32;
+            out[oa + 1] = n - 2 * a1 as i32;
+            out[oa + 2] = n - 2 * a2 as i32;
+            out[oa + 3] = n - 2 * a3 as i32;
+            let ob = (i + 1) * out_stride + q;
+            out[ob] = n - 2 * b0 as i32;
+            out[ob + 1] = n - 2 * b1 as i32;
+            out[ob + 2] = n - 2 * b2 as i32;
+            out[ob + 3] = n - 2 * b3 as i32;
+            i += 2;
+        }
+        if i < n_imgs {
+            // odd trailing image: one blocked pass over the same quad
+            let x = &imgs[i * words_per_row..(i + 1) * words_per_row];
+            let quad = &rows[q * words_per_row..(q + 4) * words_per_row];
+            let o = i * out_stride + q;
+            xnor_popcount_z_block(x, quad, words_per_row, n_bits, &mut out[o..o + 4]);
+        }
+        q += 4;
+    }
+    // remaining rows (< 4): scalar per (image, row)
+    for r in q..n_rows {
+        let row = &rows[r * words_per_row..(r + 1) * words_per_row];
+        for i in 0..n_imgs {
+            let x = &imgs[i * words_per_row..(i + 1) * words_per_row];
+            out[i * out_stride + r] = xnor_popcount_z(x, row, n_bits);
+        }
     }
 }
 
@@ -346,6 +480,117 @@ mod tests {
                 assert_eq!(blocked, scalar, "width {n}, {n_rows} rows");
             }
         }
+    }
+
+    #[test]
+    fn tile_equals_scalar_at_edge_widths() {
+        // The tile kernel must be bit-identical to the scalar path for
+        // every (image count, row count) around its 2-image × 4-row
+        // register tile, at every edge width.
+        let mut rng = Xoshiro256::new(2029);
+        for &n in &EDGE_WIDTHS {
+            let wpr = words_u64(n);
+            for n_imgs in 0..=5usize {
+                for n_rows in 0..=9usize {
+                    let mut imgs = Vec::with_capacity(n_imgs * wpr);
+                    for _ in 0..n_imgs {
+                        imgs.extend(pack_bits_u64(&random_bits(&mut rng, n)));
+                    }
+                    let mut rows = Vec::with_capacity(n_rows * wpr);
+                    for _ in 0..n_rows {
+                        rows.extend(pack_bits_u64(&random_bits(&mut rng, n)));
+                    }
+                    let mut tiled = vec![0i32; n_imgs * n_rows.max(1)];
+                    xnor_popcount_z_tile(&imgs, n_imgs, &rows, wpr, n, &mut tiled, n_rows.max(1));
+                    for i in 0..n_imgs {
+                        for r in 0..n_rows {
+                            let want = xnor_popcount_z(
+                                &imgs[i * wpr..(i + 1) * wpr],
+                                &rows[r * wpr..(r + 1) * wpr],
+                                n,
+                            );
+                            assert_eq!(
+                                tiled[i * n_rows.max(1) + r],
+                                want,
+                                "width {n}, {n_imgs} imgs, {n_rows} rows, ({i},{r})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_respects_wide_out_stride() {
+        // out_stride > n_rows writes a row block into a wider logits
+        // buffer without touching the columns beyond the block.
+        let mut rng = Xoshiro256::new(2030);
+        let n = 65;
+        let wpr = words_u64(n);
+        let (n_imgs, n_rows, stride) = (3usize, 5usize, 9usize);
+        let mut imgs = Vec::new();
+        for _ in 0..n_imgs {
+            imgs.extend(pack_bits_u64(&random_bits(&mut rng, n)));
+        }
+        let mut rows = Vec::new();
+        for _ in 0..n_rows {
+            rows.extend(pack_bits_u64(&random_bits(&mut rng, n)));
+        }
+        let mut out = vec![i32::MIN; n_imgs * stride];
+        xnor_popcount_z_tile(&imgs, n_imgs, &rows, wpr, n, &mut out, stride);
+        for i in 0..n_imgs {
+            for c in 0..stride {
+                let got = out[i * stride + c];
+                if c < n_rows {
+                    let want = xnor_popcount_z(
+                        &imgs[i * wpr..(i + 1) * wpr],
+                        &rows[c * wpr..(c + 1) * wpr],
+                        n,
+                    );
+                    assert_eq!(got, want, "img {i} row {c}");
+                } else {
+                    assert_eq!(got, i32::MIN, "img {i} col {c} clobbered");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_kernel_matches_naive_property() {
+        // Property: for random widths, image counts and row counts, the
+        // tile kernel equals the ±1 definition (so padding never leaks).
+        Runner::new("tile-vs-naive").cases(32).run(
+            &gens::Pair(gens::BitVec(1..=200), gens::Pair(gens::U64(1..=5), gens::U64(1..=10))),
+            |(bits, (n_imgs, n_rows))| {
+                let n = bits.len();
+                let wpr = words_u64(n);
+                let (n_imgs, n_rows) = (*n_imgs as usize, *n_rows as usize);
+                let mut rng = Xoshiro256::new(n as u64 * 37 + n_imgs as u64 * 7 + n_rows as u64);
+                let mut img_bits = vec![bits.clone()];
+                for _ in 1..n_imgs {
+                    img_bits.push((0..n).map(|_| rng.bool() as u8).collect());
+                }
+                let mut row_bits = Vec::new();
+                for _ in 0..n_rows {
+                    row_bits.push((0..n).map(|_| rng.bool() as u8).collect::<Vec<u8>>());
+                }
+                let imgs: Vec<u64> = img_bits.iter().flat_map(|b| pack_bits_u64(b)).collect();
+                let rows: Vec<u64> = row_bits.iter().flat_map(|b| pack_bits_u64(b)).collect();
+                let mut tiled = vec![0i32; n_imgs * n_rows];
+                xnor_popcount_z_tile(&imgs, n_imgs, &rows, wpr, n, &mut tiled, n_rows);
+                img_bits.iter().enumerate().all(|(i, xb)| {
+                    row_bits.iter().enumerate().all(|(r, wb)| {
+                        let naive: i32 = xb
+                            .iter()
+                            .zip(wb)
+                            .map(|(&a, &b)| if a == b { 1i32 } else { -1 })
+                            .sum();
+                        tiled[i * n_rows + r] == naive
+                    })
+                })
+            },
+        );
     }
 
     #[test]

@@ -38,8 +38,10 @@ SUBCOMMANDS
   verify     [--parallelism P] [--mem bram|lut]        §4.1 100-image check
   sweep      [--strict-clock]                          Table 1 sweep
   report     --parallelism P [--mem bram|lut]          §3.6-style report
-  serve-demo [--backend ...] [--requests N] [--workers W] [--block-rows B] [--max-batch B] [--config FILE]
-  serve      [--addr HOST:PORT] [--backend ...] [--workers W] [--block-rows B] [--config FILE]
+  serve-demo [--backend ...] [--requests N] [--workers W] [--kernel scalar|blocked|tiled]
+             [--block-rows B] [--tile-imgs T] [--max-batch B] [--config FILE]
+  serve      [--addr HOST:PORT] [--backend ...] [--workers W] [--kernel scalar|blocked|tiled]
+             [--block-rows B] [--tile-imgs T] [--config FILE]
   trace      [--image N] [--parallelism P] [--out trace.vcd]  VCD waveform
 
 Set BNN_FPGA_ARTIFACTS to override the artifacts directory (default ./artifacts).
@@ -59,6 +61,33 @@ fn block_rows_arg(args: &Args, default: usize) -> Result<usize> {
         bail!("--block-rows must be ≥ 1");
     }
     Ok(b)
+}
+
+fn tile_imgs_arg(args: &Args, default: usize) -> Result<usize> {
+    let t = args.usize_or("tile-imgs", default)?;
+    if t < 1 {
+        bail!("--tile-imgs must be ≥ 1");
+    }
+    Ok(t)
+}
+
+/// `--kernel scalar|blocked|tiled` (default tiled — the serving hot path),
+/// shaped by `--block-rows` / `--tile-imgs`.
+fn kernel_arg(
+    args: &Args,
+    block_rows: usize,
+    tile_imgs: usize,
+) -> Result<crate::coordinator::Kernel> {
+    use crate::coordinator::Kernel;
+    Ok(match args.opt_or("kernel", "tiled").as_str() {
+        "scalar" => Kernel::Scalar,
+        "blocked" => Kernel::Blocked { block_rows },
+        "tiled" => Kernel::Tiled {
+            block_rows,
+            tile_imgs,
+        },
+        other => bail!("--kernel must be scalar|blocked|tiled, got '{other}'"),
+    })
 }
 
 /// `--config FILE` → [`crate::config::ServeConfig`]; defaults otherwise.
@@ -283,6 +312,8 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     let n = args.usize_or("requests", 1000)?;
     let workers = args.usize_or("workers", file_cfg.workers)?;
     let block_rows = block_rows_arg(args, file_cfg.block_rows)?;
+    let tile_imgs = tile_imgs_arg(args, file_cfg.tile_imgs)?;
+    let kernel = kernel_arg(args, block_rows, tile_imgs)?;
     let cfg = BatcherConfig {
         max_batch: args.usize_or("max-batch", file_cfg.batcher.max_batch)?,
         max_wait: std::time::Duration::from_micros(
@@ -299,7 +330,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     // timed: construction and shutdown stay outside t0..wall.
     let (responses, wall, summary, per_worker) = match args.opt_or("backend", "native").as_str() {
         "native" => {
-            let pool = WorkerPool::native(&model, workers, Some(block_rows), cfg)?;
+            let pool = WorkerPool::native(&model, workers, kernel, cfg)?;
             let t0 = std::time::Instant::now();
             let r = pool.infer_many(images)?;
             let wall = t0.elapsed();
@@ -373,6 +404,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.opt_or("addr", "127.0.0.1:7840");
     let workers = args.usize_or("workers", file_cfg.workers)?;
     let block_rows = block_rows_arg(args, file_cfg.block_rows)?;
+    let tile_imgs = tile_imgs_arg(args, file_cfg.tile_imgs)?;
+    let kernel = kernel_arg(args, block_rows, tile_imgs)?;
     let backend_default = file_cfg
         .backends
         .first()
@@ -380,12 +413,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .unwrap_or_else(|| "native".to_string());
     let server = match args.opt_or("backend", &backend_default).as_str() {
         "native" => {
-            let pool = Arc::new(WorkerPool::native(
-                &model,
-                workers,
-                Some(block_rows),
-                file_cfg.batcher,
-            )?);
+            let pool = Arc::new(WorkerPool::native(&model, workers, kernel, file_cfg.batcher)?);
             WireServer::start(&addr, pool)?
         }
         "fpga-sim" => {

@@ -109,9 +109,12 @@ pub struct ServeConfig {
     /// Worker threads; for native backends each worker owns a model replica
     /// (`coordinator::WorkerPool`).
     pub workers: usize,
-    /// Rows per pass of the blocked XNOR kernel (≥ 1); the software
+    /// Rows per pass of the blocked/tiled XNOR kernel (≥ 1); the software
     /// counterpart of the FPGA parallelism knob.
     pub block_rows: usize,
+    /// Images per weight-stationary tile of the batch kernel (≥ 1) —
+    /// `[coordinator] tile_imgs` / `--tile-imgs`.
+    pub tile_imgs: usize,
     pub batcher: BatcherConfig,
     /// FPGA-sim backend parameters.
     pub parallelism: usize,
@@ -125,6 +128,7 @@ impl Default for ServeConfig {
             backends: vec!["native".into()],
             workers: 2,
             block_rows: crate::bnn::DEFAULT_BLOCK_ROWS,
+            tile_imgs: crate::bnn::DEFAULT_TILE_IMGS,
             batcher: BatcherConfig::default(),
             parallelism: 64,
             mem_style: MemStyle::Bram,
@@ -155,19 +159,29 @@ impl ServeConfig {
         if !(1..=128).contains(&parallelism) {
             bail!("parallelism must be in 1..=128");
         }
-        let workers = doc.int_or("coordinator", "workers", d.workers as i64)? as usize;
+        // validate on the signed value BEFORE the usize cast: a negative
+        // config entry must be rejected, not wrapped to a huge count
+        let workers = doc.int_or("coordinator", "workers", d.workers as i64)?;
         if workers < 1 {
             bail!("workers must be ≥ 1");
         }
-        let block_rows = doc.int_or("coordinator", "block_rows", d.block_rows as i64)? as usize;
+        let workers = workers as usize;
+        let block_rows = doc.int_or("coordinator", "block_rows", d.block_rows as i64)?;
         if block_rows < 1 {
             bail!("block_rows must be ≥ 1");
         }
+        let block_rows = block_rows as usize;
+        let tile_imgs = doc.int_or("coordinator", "tile_imgs", d.tile_imgs as i64)?;
+        if tile_imgs < 1 {
+            bail!("tile_imgs must be ≥ 1");
+        }
+        let tile_imgs = tile_imgs as usize;
         Ok(ServeConfig {
             artifacts_dir: doc.str_or("coordinator", "artifacts_dir", "artifacts")?.into(),
             backends,
             workers,
             block_rows,
+            tile_imgs,
             batcher: BatcherConfig {
                 max_batch: doc.int_or("batcher", "max_batch", d.batcher.max_batch as i64)?
                     as usize,
@@ -199,6 +213,7 @@ mod tests {
 backends = "native, fpga-sim"
 workers = 4
 block_rows = 32
+tile_imgs = 8
 artifacts_dir = "artifacts"
 
 [batcher]
@@ -216,6 +231,7 @@ mem_style = "bram"
         assert_eq!(cfg.backends, vec!["native", "fpga-sim"]);
         assert_eq!(cfg.workers, 4);
         assert_eq!(cfg.block_rows, 32);
+        assert_eq!(cfg.tile_imgs, 8);
         assert_eq!(cfg.batcher.max_batch, 32);
         assert_eq!(cfg.batcher.max_wait, Duration::from_micros(150));
         assert_eq!(cfg.parallelism, 64);
@@ -228,6 +244,7 @@ mem_style = "bram"
         assert_eq!(cfg.backends, vec!["native"]);
         assert_eq!(cfg.workers, 2);
         assert_eq!(cfg.block_rows, crate::bnn::DEFAULT_BLOCK_ROWS);
+        assert_eq!(cfg.tile_imgs, crate::bnn::DEFAULT_TILE_IMGS);
     }
 
     #[test]
@@ -246,6 +263,23 @@ mem_style = "bram"
         .is_err());
         assert!(ServeConfig::from_toml(
             &Toml::parse("[coordinator]\nblock_rows = 0").unwrap()
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml(
+            &Toml::parse("[coordinator]\ntile_imgs = 0").unwrap()
+        )
+        .is_err());
+        // negative values must be rejected, not wrapped through `as usize`
+        assert!(ServeConfig::from_toml(
+            &Toml::parse("[coordinator]\ntile_imgs = -1").unwrap()
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml(
+            &Toml::parse("[coordinator]\nblock_rows = -8").unwrap()
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml(
+            &Toml::parse("[coordinator]\nworkers = -2").unwrap()
         )
         .is_err());
         assert!(ServeConfig::from_toml(

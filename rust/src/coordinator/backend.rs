@@ -4,20 +4,175 @@
 //! prediction-equivalent in the integration suite — the coordinator can
 //! route to any of them interchangeably:
 //!
-//! * [`NativeBackend`] — the bit-packed Rust hot path (lowest latency);
+//! * [`NativeBackend`] — the bit-packed Rust hot path (lowest latency),
+//!   with three kernel schedules selected by [`Kernel`];
 //! * [`PjrtBackend`] — the AOT-compiled JAX/Pallas artifacts via PJRT
 //!   (the paper's "CPU" platform in Table 5);
 //! * [`SimBackend`] — the cycle-accurate FPGA simulator (the paper's
 //!   hardware platform; also reports simulated-hardware latency).
+//!
+//! ## Flat-logits contract (DESIGN.md §Flat logits)
+//!
+//! `infer_batch` writes into a **caller-owned** [`LogitsBuf`] (one flat
+//! `i32` arena, `images.len()` rows × `n_classes` stride) and reuses a
+//! caller-owned [`InferScratch`], instead of returning `Vec<Vec<i32>>`.
+//! Workers own one scratch + one logits arena each (`coordinator::pool`),
+//! so the steady-state batch path performs no per-request allocation and
+//! backends stay shareable behind `&self`.
 
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::bnn::packing::Packed;
-use crate::bnn::{argmax_i32, BnnModel};
+use crate::bnn::{argmax_i32, BnnModel, DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS};
 use crate::runtime::Engine;
 use crate::sim::{Accelerator, SimConfig};
+
+/// Kernel schedule for [`NativeBackend`].  All three are bit-identical
+/// (asserted in `bnn::model` tests and `rust/tests/integration.rs`);
+/// they differ only in how compute is scheduled over the weight matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// One neuron per pass over the input — the semantics reference.
+    Scalar,
+    /// `block_rows` neurons per pass over one image
+    /// ([`BnnModel::logits_into_blocked`]).
+    Blocked {
+        /// Rows per pass, ≥ 1 (see [`DEFAULT_BLOCK_ROWS`]).
+        block_rows: usize,
+    },
+    /// Weight-stationary batch tile: each `block_rows` weight block is
+    /// loaded once per `tile_imgs`-image tile
+    /// ([`BnnModel::logits_batch_into_tiled`]) — the serving default.
+    Tiled {
+        /// Rows per pass, ≥ 1.
+        block_rows: usize,
+        /// Images per tile, ≥ 1 (see [`DEFAULT_TILE_IMGS`]).
+        tile_imgs: usize,
+    },
+}
+
+impl Default for Kernel {
+    fn default() -> Self {
+        Kernel::Tiled {
+            block_rows: DEFAULT_BLOCK_ROWS,
+            tile_imgs: DEFAULT_TILE_IMGS,
+        }
+    }
+}
+
+impl Kernel {
+    /// Short human-readable name (metrics/tables).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Blocked { .. } => "blocked",
+            Kernel::Tiled { .. } => "tiled",
+        }
+    }
+
+    /// Panics on a degenerate shape (both knobs must be ≥ 1).
+    pub fn assert_valid(&self) {
+        match *self {
+            Kernel::Scalar => {}
+            Kernel::Blocked { block_rows } => {
+                assert!(block_rows >= 1, "block_rows must be ≥ 1");
+            }
+            Kernel::Tiled {
+                block_rows,
+                tile_imgs,
+            } => {
+                assert!(block_rows >= 1, "block_rows must be ≥ 1");
+                assert!(tile_imgs >= 1, "tile_imgs must be ≥ 1");
+            }
+        }
+    }
+}
+
+/// Caller-owned flat logits arena: `rows × stride` `i32`, row-major.
+///
+/// Ownership convention: the **caller** (worker thread, bench loop, test)
+/// owns the buffer and hands it to [`InferBackend::infer_batch`], which
+/// resets it to `images.len()` rows and fills every row.  Rows are valid
+/// until the next `infer_batch` call with the same buffer; capacity is
+/// retained across calls, so steady-state reuse allocates nothing.
+#[derive(Clone, Debug, Default)]
+pub struct LogitsBuf {
+    data: Vec<i32>,
+    rows: usize,
+    stride: usize,
+}
+
+impl LogitsBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resize to `rows × stride` and zero-fill (no allocation once the
+    /// high-water capacity is reached).
+    pub fn reset(&mut self, rows: usize, stride: usize) {
+        assert!(stride >= 1, "class stride must be ≥ 1");
+        self.rows = rows;
+        self.stride = stride;
+        self.data.clear();
+        self.data.resize(rows * stride, 0);
+    }
+
+    /// Number of logits rows (= images in the last batch).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Classes per row.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Logits of image `i`.
+    pub fn row(&self, i: usize) -> &[i32] {
+        &self.data[i * self.stride..(i + 1) * self.stride]
+    }
+
+    /// Mutable logits of image `i`.
+    pub fn row_mut(&mut self, i: usize) -> &mut [i32] {
+        &mut self.data[i * self.stride..(i + 1) * self.stride]
+    }
+
+    /// The whole arena, row-major (`rows × stride`).
+    pub fn flat(&self) -> &[i32] {
+        &self.data
+    }
+
+    /// Mutable whole arena (kernel writers).
+    pub fn flat_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+
+    /// Iterate rows in image order.
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[i32]> {
+        self.data.chunks_exact(self.stride.max(1))
+    }
+
+    /// Copy out as one `Vec` per image (tests/tools — allocates).
+    pub fn to_vecs(&self) -> Vec<Vec<i32>> {
+        self.iter_rows().map(|r| r.to_vec()).collect()
+    }
+}
+
+/// Caller-owned, backend-agnostic scratch reused across `infer_batch`
+/// calls (one per worker thread).  Keeping it outside the backend lets
+/// backends stay `&self`-shareable across workers while the hot path
+/// stays allocation-free after warmup.
+#[derive(Clone, Debug, Default)]
+pub struct InferScratch {
+    /// Native: forward-pass arenas (activations + pre-activation tiles).
+    model: crate::bnn::model::Scratch,
+    /// Native tiled path: flat packed-input arena (`batch × input_words`).
+    input: Vec<u64>,
+    /// PJRT: u32 staging arena for the fixed-shape artifact input.
+    staging: Vec<u32>,
+}
 
 /// A batch inference engine: packed images in, integer logits out.
 pub trait InferBackend: Send + Sync {
@@ -26,58 +181,66 @@ pub trait InferBackend: Send + Sync {
     /// Largest batch the backend can execute in one call.
     fn max_batch(&self) -> usize;
 
-    /// Classify a batch; returns one logits vector per input.
-    fn infer_batch(&self, images: &[Packed]) -> Result<Vec<Vec<i32>>>;
+    /// Classify a batch into the caller-owned `out` arena
+    /// (`images.len()` rows × `n_classes` stride), reusing `scratch`.
+    fn infer_batch(
+        &self,
+        images: &[&Packed],
+        scratch: &mut InferScratch,
+        out: &mut LogitsBuf,
+    ) -> Result<()>;
+
+    /// Allocating convenience (tests/tools): one logits `Vec` per image.
+    fn infer_logits(&self, images: &[Packed]) -> Result<Vec<Vec<i32>>> {
+        let refs: Vec<&Packed> = images.iter().collect();
+        let mut scratch = InferScratch::default();
+        let mut out = LogitsBuf::new();
+        self.infer_batch(&refs, &mut scratch, &mut out)?;
+        Ok(out.to_vecs())
+    }
 
     /// Convenience single-image predict.
     fn predict(&self, image: &Packed) -> Result<u8> {
-        let logits = self.infer_batch(std::slice::from_ref(image))?;
-        Ok(argmax_i32(&logits[0]) as u8)
+        let mut scratch = InferScratch::default();
+        let mut out = LogitsBuf::new();
+        self.infer_batch(&[image], &mut scratch, &mut out)?;
+        Ok(argmax_i32(out.row(0)) as u8)
     }
 }
 
 // ---------------------------------------------------------------------------
 
-/// Native bit-packed software BNN.
-///
-/// Two kernel schedules, both bit-identical (asserted in `bnn::model`
-/// tests and `rust/tests/integration.rs`):
-/// * scalar — one neuron per pass over the input ([`BnnModel::logits_into`]),
-///   the semantics reference;
-/// * blocked — `block_rows` neurons per pass
-///   ([`BnnModel::logits_into_blocked`]), the serving default.
+/// Native bit-packed software BNN with a selectable [`Kernel`] schedule.
 pub struct NativeBackend {
     model: BnnModel,
-    /// `Some(b)` → blocked kernel with `b` rows per pass; `None` → scalar.
-    block_rows: Option<usize>,
+    kernel: Kernel,
 }
 
 impl NativeBackend {
     /// Scalar-kernel backend (the semantics reference).
     pub fn new(model: BnnModel) -> Self {
-        Self {
-            model,
-            block_rows: None,
-        }
+        Self::with_kernel(model, Kernel::Scalar)
     }
 
     /// Blocked-kernel backend; `block_rows` ≥ 1
     /// (see [`crate::bnn::DEFAULT_BLOCK_ROWS`]).
     pub fn with_block_rows(model: BnnModel, block_rows: usize) -> Self {
-        assert!(block_rows >= 1, "block_rows must be ≥ 1");
-        Self {
-            model,
-            block_rows: Some(block_rows),
-        }
+        Self::with_kernel(model, Kernel::Blocked { block_rows })
+    }
+
+    /// Backend with an explicit kernel schedule.
+    pub fn with_kernel(model: BnnModel, kernel: Kernel) -> Self {
+        kernel.assert_valid();
+        Self { model, kernel }
     }
 
     pub fn model(&self) -> &BnnModel {
         &self.model
     }
 
-    /// The configured block size (`None` = scalar path).
-    pub fn block_rows(&self) -> Option<usize> {
-        self.block_rows
+    /// The configured kernel schedule.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
     }
 }
 
@@ -90,21 +253,64 @@ impl InferBackend for NativeBackend {
         usize::MAX
     }
 
-    fn infer_batch(&self, images: &[Packed]) -> Result<Vec<Vec<i32>>> {
-        let mut scratch = crate::bnn::model::Scratch::default();
-        let nc = self.model.n_classes();
-        let mut out = Vec::with_capacity(images.len());
+    fn infer_batch(
+        &self,
+        images: &[&Packed],
+        scratch: &mut InferScratch,
+        out: &mut LogitsBuf,
+    ) -> Result<()> {
+        // Reject size-mismatched images with an Err (the batch executor's
+        // designed failure path: submitters observe a disconnected reply
+        // channel) — a panic here would instead kill the worker thread and
+        // strand everything queued on its shard.
+        let n_in = self.model.n_in();
         for img in images {
-            let mut logits = vec![0i32; nc];
-            match self.block_rows {
-                Some(b) => self
-                    .model
-                    .logits_into_blocked(&img.words, &mut scratch, &mut logits, b),
-                None => self.model.logits_into(&img.words, &mut scratch, &mut logits),
-            }
-            out.push(logits);
+            anyhow::ensure!(
+                img.n_bits == n_in,
+                "image has {} bits, model expects {n_in}",
+                img.n_bits
+            );
         }
-        Ok(out)
+        let nc = self.model.n_classes();
+        out.reset(images.len(), nc);
+        match self.kernel {
+            Kernel::Tiled {
+                block_rows,
+                tile_imgs,
+            } => {
+                // gather the packed inputs into the flat arena, then one
+                // weight-stationary pass over the whole batch
+                scratch.input.clear();
+                for img in images {
+                    scratch.input.extend_from_slice(&img.words);
+                }
+                self.model.logits_batch_into_tiled(
+                    &scratch.input,
+                    images.len(),
+                    &mut scratch.model,
+                    out.flat_mut(),
+                    block_rows,
+                    tile_imgs,
+                );
+            }
+            Kernel::Blocked { block_rows } => {
+                for (i, img) in images.iter().enumerate() {
+                    self.model.logits_into_blocked(
+                        &img.words,
+                        &mut scratch.model,
+                        out.row_mut(i),
+                        block_rows,
+                    );
+                }
+            }
+            Kernel::Scalar => {
+                for (i, img) in images.iter().enumerate() {
+                    self.model
+                        .logits_into(&img.words, &mut scratch.model, out.row_mut(i));
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -156,19 +362,28 @@ impl InferBackend for PjrtBackend {
         *self.ladder.last().unwrap()
     }
 
-    fn infer_batch(&self, images: &[Packed]) -> Result<Vec<Vec<i32>>> {
-        let mut out = Vec::with_capacity(images.len());
+    fn infer_batch(
+        &self,
+        images: &[&Packed],
+        scratch: &mut InferScratch,
+        out: &mut LogitsBuf,
+    ) -> Result<()> {
+        let nc = self.n_classes;
+        out.reset(images.len(), nc);
         let mut start = 0;
         while start < images.len() {
             let remaining = images.len() - start;
             let exec_batch = self.pick_batch(remaining);
             let chunk = remaining.min(exec_batch);
-            // flatten + zero-pad to the artifact's fixed shape
-            let mut input = vec![0u32; exec_batch * self.input_words];
+            // stage + zero-pad to the artifact's fixed shape (arena reused)
+            scratch.staging.clear();
+            scratch.staging.resize(exec_batch * self.input_words, 0);
             for (i, img) in images[start..start + chunk].iter().enumerate() {
-                let w32 = img.to_u32_words();
-                input[i * self.input_words..i * self.input_words + w32.len()]
-                    .copy_from_slice(&w32);
+                crate::bnn::packing::u64_words_to_u32_into(
+                    &img.words,
+                    img.n_bits,
+                    &mut scratch.staging[i * self.input_words..(i + 1) * self.input_words],
+                );
             }
             let name = self
                 .engine
@@ -176,13 +391,16 @@ impl InferBackend for PjrtBackend {
                 .name_for("bnn", exec_batch)
                 .expect("ladder batch has artifact")
                 .to_string();
-            let logits = self.engine.run_u32_to_i32(&name, &input)?;
-            for i in 0..chunk {
-                out.push(logits[i * self.n_classes..(i + 1) * self.n_classes].to_vec());
-            }
+            // padded rows beyond `chunk` are computed by the artifact but
+            // never copied out
+            self.engine.run_u32_to_i32_into(
+                &name,
+                &scratch.staging,
+                &mut out.flat_mut()[start * nc..(start + chunk) * nc],
+            )?;
             start += chunk;
         }
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -192,6 +410,7 @@ impl InferBackend for PjrtBackend {
 /// (exactly what the physical accelerator would do).
 pub struct SimBackend {
     acc: Mutex<Accelerator>,
+    n_classes: usize,
     /// Simulated-hardware nanoseconds accumulated (distinct from wall time).
     pub simulated_ns: Mutex<f64>,
 }
@@ -200,6 +419,7 @@ impl SimBackend {
     pub fn new(model: &BnnModel, cfg: SimConfig) -> Result<Self> {
         Ok(Self {
             acc: Mutex::new(Accelerator::new(model, cfg)?),
+            n_classes: model.n_classes(),
             simulated_ns: Mutex::new(0.0),
         })
     }
@@ -214,19 +434,22 @@ impl InferBackend for SimBackend {
         1
     }
 
-    fn infer_batch(&self, images: &[Packed]) -> Result<Vec<Vec<i32>>> {
+    fn infer_batch(
+        &self,
+        images: &[&Packed],
+        _scratch: &mut InferScratch,
+        out: &mut LogitsBuf,
+    ) -> Result<()> {
+        out.reset(images.len(), self.n_classes);
         let mut acc = self.acc.lock().unwrap();
         let mut sim_ns = 0.0;
-        let out = images
-            .iter()
-            .map(|img| {
-                let r = acc.run_image(img);
-                sim_ns += r.latency_ns;
-                r.scores
-            })
-            .collect();
+        for (i, img) in images.iter().enumerate() {
+            let r = acc.run_image(img);
+            sim_ns += r.latency_ns;
+            out.row_mut(i).copy_from_slice(&r.scores);
+        }
         *self.simulated_ns.lock().unwrap() += sim_ns;
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -271,10 +494,51 @@ mod tests {
         let native = NativeBackend::new(model.clone());
         let sim = SimBackend::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap();
         let imgs = images(5, 12);
-        let a = native.infer_batch(&imgs).unwrap();
-        let b = sim.infer_batch(&imgs).unwrap();
+        let a = native.infer_logits(&imgs).unwrap();
+        let b = sim.infer_logits(&imgs).unwrap();
         assert_eq!(a, b);
         assert!(*sim.simulated_ns.lock().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn all_native_kernels_agree() {
+        let model = tiny_model(15);
+        let imgs = images(9, 16);
+        let scalar = NativeBackend::new(model.clone()).infer_logits(&imgs).unwrap();
+        for kernel in [
+            Kernel::Blocked { block_rows: 16 },
+            Kernel::Tiled {
+                block_rows: 16,
+                tile_imgs: 4,
+            },
+            Kernel::default(),
+        ] {
+            let b = NativeBackend::with_kernel(model.clone(), kernel);
+            assert_eq!(b.infer_logits(&imgs).unwrap(), scalar, "{kernel:?}");
+        }
+    }
+
+    #[test]
+    fn logits_buf_is_reused_without_reallocation() {
+        let model = tiny_model(17);
+        let backend = NativeBackend::with_kernel(model, Kernel::default());
+        let mut scratch = InferScratch::default();
+        let mut out = LogitsBuf::new();
+        let warm = images(8, 18);
+        let refs: Vec<&Packed> = warm.iter().collect();
+        backend.infer_batch(&refs, &mut scratch, &mut out).unwrap();
+        assert_eq!(out.rows(), 8);
+        assert_eq!(out.stride(), 10);
+        let cap = out.flat().len();
+        // a smaller follow-up batch must not grow the arena
+        let small = images(3, 19);
+        let refs: Vec<&Packed> = small.iter().collect();
+        backend.infer_batch(&refs, &mut scratch, &mut out).unwrap();
+        assert_eq!(out.rows(), 3);
+        assert!(out.flat().len() <= cap);
+        for (img, row) in small.iter().zip(out.iter_rows()) {
+            assert_eq!(row, backend.model().logits(&img.words), "row mismatch");
+        }
     }
 
     #[test]
@@ -282,10 +546,21 @@ mod tests {
         let model = tiny_model(13);
         let native = NativeBackend::new(model.clone());
         let imgs = images(1, 14);
-        let logits = native.infer_batch(&imgs).unwrap();
+        let logits = native.infer_logits(&imgs).unwrap();
         assert_eq!(
             native.predict(&imgs[0]).unwrap() as usize,
             argmax_i32(&logits[0])
         );
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let model = tiny_model(20);
+        let backend = NativeBackend::with_kernel(model, Kernel::default());
+        let mut scratch = InferScratch::default();
+        let mut out = LogitsBuf::new();
+        backend.infer_batch(&[], &mut scratch, &mut out).unwrap();
+        assert_eq!(out.rows(), 0);
+        assert_eq!(out.iter_rows().count(), 0);
     }
 }

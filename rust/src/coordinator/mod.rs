@@ -10,10 +10,13 @@
 //!
 //! * [`request`] — request/response types with timing capture;
 //! * [`backend`] — the pluggable inference engines: native bit-packed Rust
-//!   ([`backend::NativeBackend`]), AOT PJRT artifacts
-//!   ([`backend::PjrtBackend`]), and the cycle-accurate FPGA simulator
-//!   ([`backend::SimBackend`]) — all proven prediction-equivalent in
-//!   `rust/tests/integration.rs`;
+//!   ([`backend::NativeBackend`], kernel schedule selected by
+//!   [`backend::Kernel`]), AOT PJRT artifacts ([`backend::PjrtBackend`]),
+//!   and the cycle-accurate FPGA simulator ([`backend::SimBackend`]) — all
+//!   proven prediction-equivalent in `rust/tests/integration.rs`.  Batches
+//!   execute into caller-owned [`backend::LogitsBuf`] arenas (flat
+//!   `batch × n_classes` logits) with per-worker [`backend::InferScratch`]
+//!   reuse, so the steady-state serve path is allocation-free;
 //! * [`batcher`] — dynamic batching: drain-until(max_batch | deadline),
 //!   ladder-aware batch sizing for the fixed-shape PJRT artifacts;
 //! * [`router`] — named-backend routing with a least-queue-depth policy;
@@ -36,7 +39,9 @@ pub mod router;
 pub mod server;
 pub mod wire;
 
-pub use backend::{InferBackend, NativeBackend, PjrtBackend, SimBackend};
+pub use backend::{
+    InferBackend, InferScratch, Kernel, LogitsBuf, NativeBackend, PjrtBackend, SimBackend,
+};
 pub use batcher::BatcherConfig;
 pub use metrics::Metrics;
 pub use pool::WorkerPool;

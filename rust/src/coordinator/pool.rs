@@ -40,7 +40,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::backend::{InferBackend, NativeBackend};
+use super::backend::{InferBackend, InferScratch, Kernel, LogitsBuf, NativeBackend};
 use super::batcher::{decide, BatcherConfig, DrainDecision};
 use super::metrics::Metrics;
 use super::request::{InferRequest, InferResponse, RequestId};
@@ -61,22 +61,33 @@ pub(crate) struct Pending {
 /// answer each reply channel.  On backend failure the replies are dropped
 /// (submitters observe a disconnected channel) and the batch counts as
 /// rejected.
+///
+/// `scratch` and `logits` are the worker's long-lived arenas
+/// ([`InferScratch`], [`LogitsBuf`]): images are passed to the backend by
+/// reference and logits come back in one flat buffer, so the steady-state
+/// batch path performs no per-request allocation — the only remaining
+/// per-request heap traffic is the `n_classes`-element logits copy inside
+/// each [`InferResponse`] envelope.
 pub(crate) fn execute_batch(
     backend: &dyn InferBackend,
     agg: Option<&Metrics>,
     mine: &Metrics,
     batch: Vec<Pending>,
+    scratch: &mut InferScratch,
+    logits: &mut LogitsBuf,
 ) {
-    let images: Vec<Packed> = batch.iter().map(|p| p.req.image.clone()).collect();
+    let images: Vec<&Packed> = batch.iter().map(|p| &p.req.image).collect();
     let batch_size = images.len();
     mine.record_batch(batch_size);
     if let Some(a) = agg {
         a.record_batch(batch_size);
     }
     let exec_start = Instant::now();
-    match backend.infer_batch(&images) {
-        Ok(all_logits) => {
-            for (p, logits) in batch.into_iter().zip(all_logits) {
+    let result = backend.infer_batch(&images, scratch, logits);
+    drop(images);
+    match result {
+        Ok(()) => {
+            for (i, p) in batch.into_iter().enumerate() {
                 let latency_ns = p.req.enqueued_at.elapsed().as_nanos() as u64;
                 let wait_ns = (exec_start - p.req.enqueued_at).as_nanos() as u64;
                 mine.record_queue_wait(wait_ns);
@@ -84,10 +95,11 @@ pub(crate) fn execute_batch(
                 if let Some(a) = agg {
                     a.completed.fetch_add(1, Ordering::Relaxed);
                 }
+                let row = logits.row(i);
                 let _ = p.reply.send(InferResponse {
                     id: p.req.id,
-                    digit: argmax_i32(&logits) as u8,
-                    logits,
+                    digit: argmax_i32(row) as u8,
+                    logits: row.to_vec(),
                     latency_ns,
                     batch_size,
                     backend: backend.name(),
@@ -183,21 +195,17 @@ impl WorkerPool {
     }
 
     /// Pool of `workers` native replicas, each owning its own copy of the
-    /// packed model.  `block_rows = Some(b)` selects the blocked kernel
-    /// ([`crate::bnn::BnnModel::logits_into_blocked`]), `None` the scalar
-    /// reference path.
+    /// packed model, running the given [`Kernel`] schedule
+    /// (`Kernel::default()` = the weight-stationary tiled serving path).
     pub fn native(
         model: &BnnModel,
         workers: usize,
-        block_rows: Option<usize>,
+        kernel: Kernel,
         cfg: BatcherConfig,
     ) -> Result<WorkerPool> {
         let replicas: Vec<Arc<dyn InferBackend>> = (0..workers.max(1))
             .map(|_| -> Arc<dyn InferBackend> {
-                match block_rows {
-                    Some(b) => Arc::new(NativeBackend::with_block_rows(model.clone(), b)),
-                    None => Arc::new(NativeBackend::new(model.clone())),
-                }
+                Arc::new(NativeBackend::with_kernel(model.clone(), kernel))
             })
             .collect();
         Self::start(replicas, cfg)
@@ -348,6 +356,10 @@ fn shard_worker_loop(
     mine: Arc<Metrics>,
 ) {
     let shard = &shared.shards[idx];
+    // Per-worker arenas: grow to the steady-state batch size once, then
+    // every subsequent batch runs allocation-free through the backend.
+    let mut scratch = InferScratch::default();
+    let mut logits = LogitsBuf::new();
     loop {
         // Decide under the shard lock, execute outside it.
         let batch: Vec<Pending> = {
@@ -377,7 +389,14 @@ fn shard_worker_loop(
                 }
             }
         };
-        execute_batch(backend.as_ref(), Some(agg.as_ref()), mine.as_ref(), batch);
+        execute_batch(
+            backend.as_ref(),
+            Some(agg.as_ref()),
+            mine.as_ref(),
+            batch,
+            &mut scratch,
+            &mut logits,
+        );
     }
 }
 
@@ -386,7 +405,6 @@ mod tests {
     use super::*;
     use crate::bnn::model::random_model;
     use crate::bnn::packing::pack_bits_u64;
-    use crate::bnn::DEFAULT_BLOCK_ROWS;
     use crate::util::prng::Xoshiro256;
     use std::time::Duration;
 
@@ -409,7 +427,7 @@ mod tests {
         let pool = WorkerPool::native(
             &model,
             4,
-            Some(DEFAULT_BLOCK_ROWS),
+            Kernel::default(),
             BatcherConfig {
                 max_batch: 8,
                 max_wait: Duration::from_micros(100),
@@ -439,7 +457,7 @@ mod tests {
         let pool = WorkerPool::native(
             &model,
             3,
-            Some(DEFAULT_BLOCK_ROWS),
+            Kernel::default(),
             BatcherConfig {
                 max_batch: 16,
                 max_wait: Duration::from_micros(50),
@@ -474,31 +492,41 @@ mod tests {
     }
 
     #[test]
-    fn blocked_pool_equals_scalar_pool() {
+    fn all_kernel_pools_agree() {
+        // scalar, blocked and tiled pools must serve identical logits for
+        // the same request stream.
         let model = random_model(&[784, 128, 64, 10], 55);
         let cfg = BatcherConfig {
             max_batch: 8,
             max_wait: Duration::from_micros(50),
         };
-        let blocked = WorkerPool::native(&model, 2, Some(32), cfg).unwrap();
-        let scalar = WorkerPool::native(&model, 2, None, cfg).unwrap();
         let images = imgs(30, 56);
-        let a = blocked.infer_many(images.clone()).unwrap();
-        let b = scalar.infer_many(images).unwrap();
-        for (x, y) in a.iter().zip(&b) {
-            assert_eq!(x.logits, y.logits);
-            assert_eq!(x.digit, y.digit);
+        let scalar_pool = WorkerPool::native(&model, 2, Kernel::Scalar, cfg).unwrap();
+        let want = scalar_pool.infer_many(images.clone()).unwrap();
+        scalar_pool.shutdown();
+        for kernel in [
+            Kernel::Blocked { block_rows: 32 },
+            Kernel::Tiled {
+                block_rows: 16,
+                tile_imgs: 4,
+            },
+            Kernel::default(),
+        ] {
+            let pool = WorkerPool::native(&model, 2, kernel, cfg).unwrap();
+            let got = pool.infer_many(images.clone()).unwrap();
+            for (x, y) in got.iter().zip(&want) {
+                assert_eq!(x.logits, y.logits, "{kernel:?}");
+                assert_eq!(x.digit, y.digit, "{kernel:?}");
+            }
+            pool.shutdown();
         }
-        blocked.shutdown();
-        scalar.shutdown();
     }
 
     #[test]
     fn single_worker_pool_degenerates_to_coordinator_semantics() {
         let model = random_model(&[784, 128, 64, 10], 57);
         let pool =
-            WorkerPool::native(&model, 1, Some(DEFAULT_BLOCK_ROWS), BatcherConfig::default())
-                .unwrap();
+            WorkerPool::native(&model, 1, Kernel::default(), BatcherConfig::default()).unwrap();
         assert_eq!(pool.workers(), 1);
         let r = pool.infer(imgs(1, 58).pop().unwrap()).unwrap();
         assert_eq!(r.batch_size, 1);
@@ -509,7 +537,23 @@ mod tests {
     #[test]
     fn shutdown_terminates_workers() {
         let model = random_model(&[784, 128, 64, 10], 59);
-        let pool = WorkerPool::native(&model, 4, None, BatcherConfig::default()).unwrap();
+        let pool = WorkerPool::native(&model, 4, Kernel::Scalar, BatcherConfig::default()).unwrap();
         pool.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn size_mismatched_image_is_rejected_not_fatal() {
+        // A wrong-width image must surface as an Err on the submitter's
+        // channel (backend reject path), and the worker must survive to
+        // serve well-formed requests afterwards.
+        let model = random_model(&[784, 128, 64, 10], 61);
+        let pool =
+            WorkerPool::native(&model, 1, Kernel::default(), BatcherConfig::default()).unwrap();
+        let bad = Packed::from_bits(&vec![1u8; 100]); // 100 ≠ 784 bits
+        assert!(pool.infer(bad).is_err(), "mismatched image must error");
+        let good = imgs(1, 62).pop().unwrap();
+        let r = pool.infer(good.clone()).unwrap();
+        assert_eq!(r.logits, model.logits(&good.words), "worker must still serve");
+        pool.shutdown();
     }
 }

@@ -143,6 +143,10 @@ impl Drop for Coordinator {
 }
 
 fn worker_loop(shared: Arc<Shared>, backend: Arc<dyn InferBackend>, metrics: Arc<Metrics>) {
+    // Per-worker arenas (see `pool::execute_batch`): reused across batches
+    // so the steady-state path is allocation-free.
+    let mut scratch = super::backend::InferScratch::default();
+    let mut logits = super::backend::LogitsBuf::new();
     loop {
         // Decide under the lock, execute outside it.
         let batch: Vec<Pending> = {
@@ -168,7 +172,14 @@ fn worker_loop(shared: Arc<Shared>, backend: Arc<dyn InferBackend>, metrics: Arc
             }
         };
 
-        execute_batch(backend.as_ref(), None, metrics.as_ref(), batch);
+        execute_batch(
+            backend.as_ref(),
+            None,
+            metrics.as_ref(),
+            batch,
+            &mut scratch,
+            &mut logits,
+        );
     }
 }
 

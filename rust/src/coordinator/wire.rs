@@ -278,13 +278,11 @@ mod tests {
     #[test]
     fn tcp_end_to_end_over_worker_pool() {
         use crate::bnn::model::random_model;
-        use crate::bnn::DEFAULT_BLOCK_ROWS;
-        use crate::coordinator::{BatcherConfig, WorkerPool};
+        use crate::coordinator::{BatcherConfig, Kernel, WorkerPool};
 
         let model = random_model(&[784, 128, 64, 10], 6);
         let pool = Arc::new(
-            WorkerPool::native(&model, 2, Some(DEFAULT_BLOCK_ROWS), BatcherConfig::default())
-                .unwrap(),
+            WorkerPool::native(&model, 2, Kernel::default(), BatcherConfig::default()).unwrap(),
         );
         let server = WireServer::start("127.0.0.1:0", pool.clone()).unwrap();
         let mut client = WireClient::connect(server.addr).unwrap();

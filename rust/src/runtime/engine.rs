@@ -122,6 +122,28 @@ impl Engine {
         Ok(out.to_vec::<i32>()?)
     }
 
+    /// Execute a u32→i32 artifact into a caller-owned output slice — the
+    /// flat-logits serving path ([`crate::coordinator::LogitsBuf`]).
+    ///
+    /// `out` receives the first `out.len()` output elements, which lets a
+    /// ladder-padded execution (artifact batch > request batch) drop the
+    /// padding rows without a per-row copy into fresh `Vec`s.  Note this
+    /// path is *not* allocation-free: the `xla 0.1.6` decode surface only
+    /// offers `Literal::to_vec`, so one `exec_batch × n_classes` `Vec<i32>`
+    /// is still materialized per executed batch (per batch, not per
+    /// request) before the copy into `out`.
+    pub fn run_u32_to_i32_into(&self, name: &str, input: &[u32], out: &mut [i32]) -> Result<()> {
+        let logits = self.run_u32_to_i32(name, input)?;
+        anyhow::ensure!(
+            logits.len() >= out.len(),
+            "artifact {name} produced {} elements, caller expects ≥ {}",
+            logits.len(),
+            out.len()
+        );
+        out.copy_from_slice(&logits[..out.len()]);
+        Ok(())
+    }
+
     /// Execute an f32→f32 artifact (CNN baseline).
     pub fn run_f32_to_f32(&self, name: &str, input: &[f32]) -> Result<Vec<f32>> {
         let spec = self.manifest.get(name)?;

@@ -7,7 +7,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use bnn_fpga::coordinator::{
-    BatcherConfig, Coordinator, NativeBackend, PjrtBackend, Router, SimBackend, WorkerPool,
+    BatcherConfig, Coordinator, Kernel, NativeBackend, PjrtBackend, Router, SimBackend, WorkerPool,
 };
 use bnn_fpga::data::Dataset;
 use bnn_fpga::runtime::Engine;
@@ -132,11 +132,18 @@ fn worker_pool_scales_without_changing_results() {
     let images: Vec<_> = (0..60).map(|i| ds.images[i % ds.len()].clone()).collect();
     let expected: Vec<Vec<i32>> = images.iter().map(|img| model.logits(&img.words)).collect();
     for workers in [1usize, 2, 4] {
-        for block_rows in [None, Some(16)] {
+        for kernel in [
+            Kernel::Scalar,
+            Kernel::Blocked { block_rows: 16 },
+            Kernel::Tiled {
+                block_rows: 16,
+                tile_imgs: 4,
+            },
+        ] {
             let pool = WorkerPool::native(
                 &model,
                 workers,
-                block_rows,
+                kernel,
                 BatcherConfig {
                     max_batch: 8,
                     max_wait: Duration::from_micros(100),
@@ -147,7 +154,7 @@ fn worker_pool_scales_without_changing_results() {
             for (r, want) in responses.iter().zip(&expected) {
                 assert_eq!(
                     &r.logits, want,
-                    "workers={workers} block_rows={block_rows:?} req {}",
+                    "workers={workers} kernel={kernel:?} req {}",
                     r.id
                 );
             }
@@ -167,7 +174,7 @@ fn worker_pool_concurrent_submitters_no_loss_no_mixup() {
         WorkerPool::native(
             &model,
             4,
-            Some(16),
+            Kernel::default(),
             BatcherConfig {
                 max_batch: 16,
                 max_wait: Duration::from_micros(100),

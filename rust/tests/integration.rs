@@ -15,7 +15,7 @@ use std::sync::Arc;
 
 use bnn_fpga::bnn::model::random_model;
 use bnn_fpga::bnn::packing::pack_bits_u64;
-use bnn_fpga::coordinator::{InferBackend, NativeBackend, PjrtBackend, SimBackend};
+use bnn_fpga::coordinator::{InferBackend, Kernel, NativeBackend, PjrtBackend, SimBackend};
 use bnn_fpga::data::Dataset;
 use bnn_fpga::runtime::Engine;
 use bnn_fpga::sim::{Accelerator, MemStyle, SimConfig};
@@ -92,10 +92,50 @@ fn blocked_scalar_and_sim_logits_are_bit_identical() {
     }
 }
 
-/// The backend wrappers agree too: a blocked NativeBackend, a scalar
-/// NativeBackend and the SimBackend produce identical batch outputs.
+/// Acceptance gate for the weight-stationary batch-tiled kernel
+/// (ISSUE 2): on the paper's 784-128-64-10 network the tiled batch pass is
+/// bit-identical to the per-image scalar reference AND to the
+/// cycle-accurate simulator, across batch sizes and tile shapes.  Needs no
+/// artifacts — equivalence is dimension-dependent only.
 #[test]
-fn blocked_backend_equals_scalar_and_sim_backends() {
+fn tiled_scalar_and_sim_logits_are_bit_identical() {
+    let model = random_model(&BNN_DIMS, 2027);
+    let mut rng = Xoshiro256::new(4243);
+    let mut sim = Accelerator::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap();
+    for batch in [1usize, 2, 7, 16] {
+        let mut inputs: Vec<u64> = Vec::new();
+        let mut images = Vec::new();
+        for _ in 0..batch {
+            let bits: Vec<u8> = (0..784).map(|_| rng.bool() as u8).collect();
+            let words = pack_bits_u64(&bits);
+            inputs.extend_from_slice(&words);
+            images.push(bnn_fpga::bnn::Packed {
+                words,
+                n_bits: 784,
+            });
+        }
+        // per-image scalar reference + simulator, flattened batch-major
+        let mut scalar = Vec::new();
+        for img in &images {
+            let logits = model.logits(&img.words);
+            let r = sim.run_image(img);
+            assert_eq!(r.scores, logits, "sim != scalar (batch {batch})");
+            scalar.extend(logits);
+        }
+        for (block, tile) in [(1usize, 1usize), (4, 2), (16, 8), (64, 3), (128, 16)] {
+            assert_eq!(
+                model.logits_batch_tiled(&inputs, batch, block, tile),
+                scalar,
+                "batch {batch}, block {block}, tile {tile}: tiled != scalar"
+            );
+        }
+    }
+}
+
+/// The backend wrappers agree too: tiled, blocked and scalar
+/// NativeBackends and the SimBackend produce identical batch outputs.
+#[test]
+fn all_native_kernels_and_sim_backends_agree() {
     let model = random_model(&BNN_DIMS, 2026);
     let mut rng = Xoshiro256::new(777);
     let images: Vec<bnn_fpga::bnn::Packed> = (0..6)
@@ -109,11 +149,14 @@ fn blocked_backend_equals_scalar_and_sim_backends() {
         .collect();
     let scalar = NativeBackend::new(model.clone());
     let blocked = NativeBackend::with_block_rows(model.clone(), 16);
+    let tiled = NativeBackend::with_kernel(model.clone(), Kernel::default());
     let sim = SimBackend::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap();
-    let a = scalar.infer_batch(&images).unwrap();
-    let b = blocked.infer_batch(&images).unwrap();
-    let c = sim.infer_batch(&images).unwrap();
+    let a = scalar.infer_logits(&images).unwrap();
+    let b = blocked.infer_logits(&images).unwrap();
+    let t = tiled.infer_logits(&images).unwrap();
+    let c = sim.infer_logits(&images).unwrap();
     assert_eq!(a, b, "scalar vs blocked backend");
+    assert_eq!(a, t, "scalar vs tiled backend");
     assert_eq!(a, c, "scalar vs fpga-sim backend");
 }
 
@@ -176,7 +219,7 @@ fn pjrt_backend_ladder_padding_is_invisible() {
     let backend = PjrtBackend::new(require_engine!(&dir)).unwrap();
     // 13 is not in the ladder → padded to 16; results must match native
     let images: Vec<_> = ds.images.iter().take(13).cloned().collect();
-    let out = backend.infer_batch(&images).unwrap();
+    let out = backend.infer_logits(&images).unwrap();
     assert_eq!(out.len(), 13);
     for (i, img) in images.iter().enumerate() {
         assert_eq!(out[i], model.logits(&img.words), "padded row {i}");
@@ -273,13 +316,13 @@ fn all_three_backends_agree_as_backends() {
     let ds = Dataset::load_mem_subset(&dir.join("mem")).unwrap();
     let images: Vec<_> = ds.images.iter().take(10).cloned().collect();
 
-    let native = NativeBackend::new(model.clone());
+    let native = NativeBackend::with_kernel(model.clone(), Kernel::default());
     let sim = SimBackend::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap();
     let pjrt = PjrtBackend::new(require_engine!(&dir)).unwrap();
 
-    let a = native.infer_batch(&images).unwrap();
-    let b = sim.infer_batch(&images).unwrap();
-    let c = pjrt.infer_batch(&images).unwrap();
+    let a = native.infer_logits(&images).unwrap();
+    let b = sim.infer_logits(&images).unwrap();
+    let c = pjrt.infer_logits(&images).unwrap();
     assert_eq!(a, b, "native vs fpga-sim");
     assert_eq!(a, c, "native vs pjrt");
 }
