@@ -57,6 +57,21 @@ fn main() -> anyhow::Result<()> {
         "tiled kernel  : bit-identical over a {batch}-image batch (tile_imgs = {})",
         bnn_fpga::bnn::DEFAULT_TILE_IMGS
     );
+    // ...and the runtime-dispatched SIMD tier (AVX2/NEON when the host has
+    // them, tiled fallback otherwise) — same logits on every path.
+    assert_eq!(
+        model.logits_batch_simd(
+            &inputs,
+            batch,
+            bnn_fpga::bnn::DEFAULT_BLOCK_ROWS,
+            bnn_fpga::bnn::DEFAULT_TILE_IMGS
+        ),
+        model.logits_batch(&inputs, batch)
+    );
+    println!(
+        "simd kernel   : bit-identical at the '{}' vector level (--kernel simd)",
+        bnn_fpga::bnn::simd_level().name()
+    );
 
     // 3. The same image through the cycle-accurate FPGA simulator at the
     //    paper's chosen design point (64× parallelism, BRAM weights).

@@ -10,6 +10,7 @@
 //!   - a single-worker scalar-kernel coordinator (the baseline),
 //!   - the sharded multi-worker pool with the per-image blocked kernel,
 //!   - the same pool on the weight-stationary batch-tiled kernel,
+//!   - the same pool on the runtime-dispatched SIMD tier (AVX2/NEON),
 //!   - the PJRT backend (when the runtime + artifacts are available),
 //!   - a pool of cycle-accurate FPGA simulator replicas,
 //!   reporting accuracy, latency percentiles and throughput per backend.
@@ -174,7 +175,33 @@ fn main() -> anyhow::Result<()> {
         report
     };
 
-    // 4. PJRT over the AOT artifact ladder, when runtime + artifacts exist.
+    // 4. The runtime-dispatched SIMD tier on the same pool: AVX2/NEON when
+    //    the host reports them, the tiled kernel otherwise (or under
+    //    BNN_FORCE_SCALAR=1) — logits are bit-identical either way.
+    {
+        let pool = WorkerPool::native(
+            &model,
+            workers,
+            Kernel::Simd {
+                block_rows,
+                tile_imgs,
+            },
+            batcher,
+        )?;
+        let (correct, wall) = run_load(n_requests, &pool)?;
+        add_row(
+            &format!("native simd[{}] x{workers}", bnn::simd_level().name()),
+            workers,
+            n_requests,
+            correct,
+            wall,
+            pool.latency_snapshot(),
+            pool.metrics.mean_batch_size(),
+        );
+        pool.shutdown();
+    }
+
+    // 5. PJRT over the AOT artifact ladder, when runtime + artifacts exist.
     match Engine::load(&dir) {
         Ok(engine) => {
             let engine = Arc::new(engine);
@@ -203,7 +230,7 @@ fn main() -> anyhow::Result<()> {
         Err(e) => println!("pjrt backend skipped: {e:#}"),
     }
 
-    // 5. A pool of cycle-accurate simulator replicas (deliberately slow —
+    // 6. A pool of cycle-accurate simulator replicas (deliberately slow —
     //    each request pays the full simulated hardware latency).
     {
         let sim_workers = workers.min(2);

@@ -1,0 +1,243 @@
+#!/usr/bin/env python3
+"""Generate rust/tests/golden/golden_vectors.json — the committed
+golden-vector fixture the kernel-conformance suite pins every kernel tier
+against.
+
+This is a line-for-line Python port of the Rust pieces the fixture depends
+on (util::prng::{SplitMix64, Xoshiro256}, bnn::model::random_model and the
+scalar forward pass), so the expected logits can be authored — and audited
+— without a Rust toolchain.  The canonical regeneration path is the
+ignored Rust test:
+
+    cargo test --release --test kernel_conformance regenerate -- --ignored
+
+which must produce a byte-identical file (both writers emit compact JSON
+with sorted keys and a trailing newline).
+
+The script also differentially checks the port itself: the blocked /
+batch-tiled / SIMD row-pair tile schedules (including a word-level model
+of the AVX2 nibble-LUT popcount) are simulated here and asserted equal to
+the scalar reference before anything is written.
+"""
+
+import json
+import os
+import sys
+
+MASK64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Port of rust/src/util/prng.rs SplitMix64."""
+
+    def __init__(self, seed):
+        self.state = seed & MASK64
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+
+def rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK64
+
+
+class Xoshiro256:
+    """Port of rust/src/util/prng.rs Xoshiro256 (xoshiro256**)."""
+
+    def __init__(self, seed):
+        sm = SplitMix64(seed)
+        self.s = [sm.next_u64() for _ in range(4)]
+
+    def next_u64(self):
+        s = self.s
+        result = (rotl((s[1] * 5) & MASK64, 7) * 9) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return result
+
+    def bool(self):
+        return self.next_u64() & 1 == 1
+
+
+def random_model(dims, seed):
+    """Port of bnn::model::random_model: per layer, n_out rows × n_in
+    rng.bool() draws (+1 for True, packed as bit 1), zero thresholds on
+    hidden layers, raw output layer.  Returns [(rows_bits, has_threshold)]
+    where rows_bits is a list of per-neuron {0,1} weight-bit lists."""
+    rng = Xoshiro256(seed)
+    layers = []
+    for li in range(len(dims) - 1):
+        n_in, n_out = dims[li], dims[li + 1]
+        rows = [[1 if rng.bool() else 0 for _ in range(n_in)] for _ in range(n_out)]
+        thresholded = li + 2 < len(dims)
+        layers.append((rows, thresholded))
+    return layers
+
+
+def dot_z(x_bits, w_bits):
+    """z = Σ ±1·±1 = n − 2·popcount(x ⊕ w) on {0,1} bit lists."""
+    return sum(1 if a == b else -1 for a, b in zip(x_bits, w_bits))
+
+
+def forward(layers, x_bits):
+    """Scalar reference forward pass (bnn::model::logits_into)."""
+    a = list(x_bits)
+    for rows, thresholded in layers:
+        z = [dot_z(a, w) for w in rows]
+        if thresholded:
+            a = [1 if zi >= 0 else 0 for zi in z]  # zero thresholds
+        else:
+            return z
+    raise AssertionError("model has no output layer")
+
+
+def gen_inputs(n_in, n_inputs, seed):
+    rng = Xoshiro256(seed)
+    return [[1 if rng.bool() else 0 for _ in range(n_in)] for _ in range(n_inputs)]
+
+
+# --- differential self-checks of the tile schedules ------------------------
+
+
+def pack_u64(bits):
+    words = [0] * ((len(bits) + 63) // 64)
+    for i, b in enumerate(bits):
+        words[i // 64] |= (b & 1) << (i % 64)
+    return words
+
+
+def mula_popcount_4words(v_words):
+    """Word-level model of the AVX2 nibble-LUT popcount of a 256-bit value
+    (4 × u64): vpshufb on low/high nibbles + vpsadbw per-64-bit lane sums.
+    Must equal the plain popcount for every input."""
+    lut = [bin(i).count("1") for i in range(16)]
+    total = 0
+    for w in v_words:  # one u64 lane each
+        lane = 0
+        for byte in range(8):
+            b = (w >> (8 * byte)) & 0xFF
+            lane += lut[b & 0x0F] + lut[(b >> 4) & 0x0F]
+        total += lane  # vpsadbw then lane sum
+    return total
+
+
+def simd_tile_rowpair(imgs_words, n_imgs, rows_words, wpr, n_bits, stride):
+    """Port of packing.rs avx2::tile / neon::tile: row pairs share each
+    image load; 4-word vector groups use the Mula popcount model, the
+    remainder words scalar popcount."""
+    n_rows = len(rows_words) // wpr
+    out = [0] * (n_imgs * stride)
+
+    def xor_pop(x, w):
+        c = 0
+        i = 0
+        while i + 4 <= wpr:
+            c += mula_popcount_4words([x[i + k] ^ w[i + k] for k in range(4)])
+            i += 4
+        while i < wpr:
+            c += bin(x[i] ^ w[i]).count("1")
+            i += 1
+        return c
+
+    r = 0
+    while r + 2 <= n_rows:
+        w0 = rows_words[r * wpr:(r + 1) * wpr]
+        w1 = rows_words[(r + 1) * wpr:(r + 2) * wpr]
+        for i in range(n_imgs):
+            x = imgs_words[i * wpr:(i + 1) * wpr]
+            out[i * stride + r] = n_bits - 2 * xor_pop(x, w0)
+            out[i * stride + r + 1] = n_bits - 2 * xor_pop(x, w1)
+        r += 2
+    if r < n_rows:
+        w = rows_words[r * wpr:(r + 1) * wpr]
+        for i in range(n_imgs):
+            x = imgs_words[i * wpr:(i + 1) * wpr]
+            out[i * stride + r] = n_bits - 2 * xor_pop(x, w)
+    return out
+
+
+def self_check():
+    """The SIMD row-pair schedule (with the word-level AVX2 popcount
+    model) must equal the ±1 scalar definition at edge widths."""
+    rng = Xoshiro256(0xC0FFEE)
+    for n in [1, 37, 63, 64, 65, 128, 129, 256, 784]:
+        wpr = (n + 63) // 64
+        for n_imgs in range(4):
+            for n_rows in range(6):
+                img_bits = [[1 if rng.bool() else 0 for _ in range(n)] for _ in range(n_imgs)]
+                row_bits = [[1 if rng.bool() else 0 for _ in range(n)] for _ in range(n_rows)]
+                imgs = [w for b in img_bits for w in pack_u64(b)]
+                rows = [w for b in row_bits for w in pack_u64(b)]
+                stride = max(n_rows, 1)
+                got = simd_tile_rowpair(imgs, n_imgs, rows, wpr, n, stride)
+                for i in range(n_imgs):
+                    for r in range(n_rows):
+                        want = dot_z(img_bits[i], row_bits[r])
+                        assert got[i * stride + r] == want, (n, n_imgs, n_rows, i, r)
+    print("self-check: SIMD row-pair tile schedule == scalar at all edge widths")
+
+
+# --- fixture ---------------------------------------------------------------
+
+# Keep in sync with CASES in rust/tests/common/mod.rs (the regeneration
+# test re-derives everything from these seeds).
+CASES = [
+    ("paper-784-128-64-10", [784, 128, 64, 10], 2601, 9001, 8),
+    ("edge-65-63-5-3", [65, 63, 5, 3], 2602, 9002, 8),
+    ("edge-37-19-11-3", [37, 19, 11, 3], 2603, 9003, 8),
+    ("aligned-128-64-10", [128, 64, 10], 2604, 9004, 4),
+    ("single-layer-64-10", [64, 10], 2605, 9005, 4),
+]
+
+
+def build_fixture():
+    cases = []
+    for name, dims, model_seed, input_seed, n_inputs in CASES:
+        layers = random_model(dims, model_seed)
+        inputs = gen_inputs(dims[0], n_inputs, input_seed)
+        logits = [forward(layers, x) for x in inputs]
+        cases.append(
+            {
+                "dims": dims,
+                "input_seed": input_seed,
+                "logits": logits,
+                "model_seed": model_seed,
+                "n_inputs": n_inputs,
+                "name": name,
+            }
+        )
+    return {
+        "cases": cases,
+        "generator": "python/tools/gen_golden_vectors.py",
+        "version": 1,
+    }
+
+
+def main():
+    self_check()
+    fixture = build_fixture()
+    out_path = os.path.join(
+        os.path.dirname(__file__), "..", "..", "rust", "tests", "golden", "golden_vectors.json"
+    )
+    out_path = os.path.normpath(out_path)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    # Byte-compatible with util::json's writer: compact separators, sorted
+    # keys, trailing newline.
+    text = json.dumps(fixture, sort_keys=True, separators=(",", ":")) + "\n"
+    with open(out_path, "w") as f:
+        f.write(text)
+    n_inputs = sum(c["n_inputs"] for c in fixture["cases"])
+    print(f"wrote {out_path}: {len(fixture['cases'])} cases, {n_inputs} inputs")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,7 @@
 //! Hot-path micro-benchmarks (the §Perf instrument): native inference
-//! (scalar vs blocked vs weight-stationary tiled kernel, with block-size
-//! and tile-width sweeps), batch throughput, the 1-vs-N worker-pool
+//! (scalar vs blocked vs weight-stationary tiled vs the runtime-dispatched
+//! SIMD kernel tier, with block-size and tile-width sweeps), batch
+//! throughput, the 1-vs-N worker-pool
 //! scaling sweep, simulator tick rate, PJRT dispatch overhead, and
 //! coordinator round-trip cost.  Run before/after each optimization and
 //! record deltas in EXPERIMENTS.md §Perf.
@@ -115,6 +116,25 @@ fn main() {
             );
             add(&format!("native batch-100, tiled T={tile} (total)"), r);
         }
+        // the runtime-dispatched SIMD tier (AVX2/NEON, tiled fallback) at
+        // the same tile-width ladder — plus the resolved vector level so
+        // BENCH_hotpath.json rows are comparable across hosts
+        let level = bnn_fpga::bnn::simd_level();
+        for tile in [2usize, 4, 8, 16] {
+            let r = bench.run(&format!("native-b100-simd-t{tile}"), || {
+                model.logits_batch_simd(&inputs, n, DEFAULT_BLOCK_ROWS, tile)
+            });
+            record_kernel(
+                &mut kernel_json,
+                &format!("simd_b{DEFAULT_BLOCK_ROWS}_t{tile}"),
+                n,
+                &r,
+            );
+            add(
+                &format!("native batch-100, simd[{}] T={tile} (total)", level.name()),
+                r,
+            );
+        }
     }
 
     // 4. one binary dense layer (784→128) in isolation, scalar vs blocked
@@ -180,6 +200,7 @@ fn main() {
         ("bench", Json::from("hotpath")),
         ("batch", Json::from(batch_n as u64)),
         ("block_rows", Json::from(DEFAULT_BLOCK_ROWS as u64)),
+        ("simd_level", Json::from(bnn_fpga::bnn::simd_level().name())),
         ("kernels", Json::Obj(kernel_json)),
     ]);
     match std::fs::write("BENCH_hotpath.json", doc.to_string()) {
@@ -210,6 +231,13 @@ fn main() {
             (
                 "tiled",
                 Kernel::Tiled {
+                    block_rows: DEFAULT_BLOCK_ROWS,
+                    tile_imgs: DEFAULT_TILE_IMGS,
+                },
+            ),
+            (
+                "simd",
+                Kernel::Simd {
                     block_rows: DEFAULT_BLOCK_ROWS,
                     tile_imgs: DEFAULT_TILE_IMGS,
                 },

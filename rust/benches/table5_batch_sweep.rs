@@ -50,6 +50,13 @@ fn main() {
         let tiled =
             model.logits_batch_tiled(&inputs, check_n, DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS);
         assert_eq!(tiled, scalar, "tiled kernel diverged from the scalar reference");
+        let simd =
+            model.logits_batch_simd(&inputs, check_n, DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS);
+        assert_eq!(
+            simd, scalar,
+            "simd kernel ({}) diverged from the scalar reference",
+            bnn_fpga::bnn::simd_level().name()
+        );
         let mut acc = Accelerator::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap();
         for i in 0..check_n {
             let r = acc.run_image(&ds.images[i % ds.len()]);
@@ -59,7 +66,7 @@ fn main() {
                 "simulator diverged from the scalar reference at image {i}"
             );
         }
-        println!("tiled kernel verified bit-identical to scalar reference and FPGA simulator\n");
+        println!("tiled + simd kernels verified bit-identical to scalar reference and FPGA simulator\n");
     }
 
     println!("=== Table 5: inference latency vs batch size (CPU measured, GPU modeled) ===\n");
@@ -126,6 +133,13 @@ fn main() {
                     tile_imgs: DEFAULT_TILE_IMGS,
                 },
             ),
+            (
+                "native simd",
+                Kernel::Simd {
+                    block_rows: DEFAULT_BLOCK_ROWS,
+                    tile_imgs: DEFAULT_TILE_IMGS,
+                },
+            ),
         ] {
             let series: Vec<f64> = bench
                 .run_series(runs.min(15), || match kernel {
@@ -137,6 +151,10 @@ fn main() {
                         block_rows,
                         tile_imgs,
                     } => model.logits_batch_tiled(&batch_inputs, batch, block_rows, tile_imgs),
+                    Kernel::Simd {
+                        block_rows,
+                        tile_imgs,
+                    } => model.logits_batch_simd(&batch_inputs, batch, block_rows, tile_imgs),
                 })
                 .iter()
                 .map(|ns| ns / 1e6)

@@ -8,7 +8,10 @@ pub mod packing;
 pub use model::{
     random_model, BinaryDenseLayer, BnnModel, Scratch, DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS,
 };
-pub use packing::{pack_bits_u32, pack_bits_u64, unpack_bits_u64, words_u32, words_u64, Packed};
+pub use packing::{
+    pack_bits_u32, pack_bits_u64, simd_level, unpack_bits_u64, words_u32, words_u64, Packed,
+    SimdLevel,
+};
 
 /// Argmax with lowest-index tie-break — exactly the FSM's iterative
 /// comparison (§3.4: "identifies the class index with the highest output

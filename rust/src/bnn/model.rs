@@ -395,6 +395,81 @@ impl BnnModel {
         block_rows: usize,
         tile_imgs: usize,
     ) {
+        self.logits_batch_into_with(
+            inputs,
+            batch,
+            scratch,
+            out,
+            block_rows,
+            tile_imgs,
+            packing::xnor_popcount_z_tile,
+        )
+    }
+
+    /// Explicitly vectorized batch forward pass — `Kernel::Simd`.
+    ///
+    /// The same weight-stationary walk as [`Self::logits_batch_into_tiled`]
+    /// (identical `Scratch` arenas, tile schedule and layout contracts),
+    /// with every `tile_imgs × block_rows` pre-activation tile computed by
+    /// [`packing::xnor_popcount_z_simd`]: AVX2 on x86_64, NEON on aarch64
+    /// (runtime-detected, [`packing::simd_level`]), the tiled kernel on
+    /// other targets or under `BNN_FORCE_SCALAR=1`.  Bit-identical to the
+    /// scalar reference on every path — the vector level only changes how
+    /// popcounts are computed, never the result (pinned by the
+    /// golden-vector and differential suites in
+    /// `rust/tests/kernel_conformance.rs`).
+    ///
+    /// ```
+    /// use bnn_fpga::bnn::model::{random_model, Scratch};
+    /// use bnn_fpga::bnn::packing::pack_bits_u64;
+    ///
+    /// let model = random_model(&[784, 128, 64, 10], 7);
+    /// let mut inputs = Vec::new();
+    /// for seed in 0..3u8 {
+    ///     inputs.extend(pack_bits_u64(&vec![seed & 1; 784]));
+    /// }
+    /// let mut scratch = Scratch::default(); // reuse across batches
+    /// let mut simd = vec![0i32; 3 * 10];
+    /// model.logits_batch_into_simd(&inputs, 3, &mut scratch, &mut simd, 16, 8);
+    /// assert_eq!(simd, model.logits_batch(&inputs, 3)); // bit-identical
+    /// ```
+    pub fn logits_batch_into_simd(
+        &self,
+        inputs: &[u64],
+        batch: usize,
+        scratch: &mut Scratch,
+        out: &mut [i32],
+        block_rows: usize,
+        tile_imgs: usize,
+    ) {
+        self.logits_batch_into_with(
+            inputs,
+            batch,
+            scratch,
+            out,
+            block_rows,
+            tile_imgs,
+            packing::xnor_popcount_z_simd,
+        )
+    }
+
+    /// The shared weight-stationary batch walk behind the tiled and SIMD
+    /// paths: `tile_kernel` computes one `t × b` pre-activation tile under
+    /// the [`packing::xnor_popcount_z_tile`] contract (row-major
+    /// `imgs`/`rows`, strided `out`); everything else — tile schedule,
+    /// thresholding, arena ping-pong, logits layout — is identical across
+    /// kernels by construction.
+    #[allow(clippy::too_many_arguments)]
+    fn logits_batch_into_with(
+        &self,
+        inputs: &[u64],
+        batch: usize,
+        scratch: &mut Scratch,
+        out: &mut [i32],
+        block_rows: usize,
+        tile_imgs: usize,
+        tile_kernel: fn(&[u64], usize, &[u64], usize, usize, &mut [i32], usize),
+    ) {
         assert!(block_rows >= 1, "block_rows must be ≥ 1");
         assert!(tile_imgs >= 1, "tile_imgs must be ≥ 1");
         let iw = self.input_words();
@@ -423,7 +498,7 @@ impl BnnModel {
                         while j < layer.n_out {
                             let b = block_rows.min(layer.n_out - j);
                             let rows = &layer.weights[j * wpr..(j + b) * wpr];
-                            packing::xnor_popcount_z_tile(
+                            tile_kernel(
                                 &scratch.ta[..t * wpr],
                                 t,
                                 rows,
@@ -451,7 +526,7 @@ impl BnnModel {
                         while j < layer.n_out {
                             let b = block_rows.min(layer.n_out - j);
                             let rows = &layer.weights[j * wpr..(j + b) * wpr];
-                            packing::xnor_popcount_z_tile(
+                            tile_kernel(
                                 &scratch.ta[..t * wpr],
                                 t,
                                 rows,
@@ -480,6 +555,20 @@ impl BnnModel {
         let mut scratch = Scratch::default();
         let mut out = vec![0i32; batch * self.n_classes()];
         self.logits_batch_into_tiled(inputs, batch, &mut scratch, &mut out, block_rows, tile_imgs);
+        out
+    }
+
+    /// SIMD batch inference, allocating convenience (tests/benches).
+    pub fn logits_batch_simd(
+        &self,
+        inputs: &[u64],
+        batch: usize,
+        block_rows: usize,
+        tile_imgs: usize,
+    ) -> Vec<i32> {
+        let mut scratch = Scratch::default();
+        let mut out = vec![0i32; batch * self.n_classes()];
+        self.logits_batch_into_simd(inputs, batch, &mut scratch, &mut out, block_rows, tile_imgs);
         out
     }
 }
@@ -788,6 +877,58 @@ mod tests {
                 })
             },
         );
+    }
+
+    #[test]
+    fn simd_batch_equals_scalar_for_all_tile_shapes() {
+        // The SIMD walk shares the tiled schedule; whatever vector level
+        // this host dispatches to must be bit-identical to the per-image
+        // scalar reference for every (block_rows, tile_imgs) shape.
+        let mut rng = Xoshiro256::new(84);
+        let spec = random_net(&mut rng, &[784, 128, 64, 10]);
+        let model = model_from_sign_rows(spec).unwrap();
+        for batch in [1usize, 3, 8, 17] {
+            let mut inputs = Vec::new();
+            for _ in 0..batch {
+                let bits: Vec<u8> = (0..784).map(|_| rng.bool() as u8).collect();
+                inputs.extend(packing::pack_bits_u64(&bits));
+            }
+            let scalar = model.logits_batch(&inputs, batch);
+            for block in [1usize, 3, 16, 128, 200] {
+                for tile in [1usize, 2, 5, 8, 32] {
+                    assert_eq!(
+                        model.logits_batch_simd(&inputs, batch, block, tile),
+                        scalar,
+                        "batch {batch}, block {block}, tile {tile}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_batch_equals_scalar_on_odd_dims() {
+        // widths that straddle the u64 word, the vector width (4 words on
+        // AVX2, 2 on NEON) and the row pair all at once
+        let mut rng = Xoshiro256::new(85);
+        for dims in [[37usize, 19, 11, 3], [65, 63, 5, 1], [130, 129, 67, 9]] {
+            let spec = random_net(&mut rng, &dims);
+            let model = model_from_sign_rows(spec).unwrap();
+            let batch = 7;
+            let mut inputs = Vec::new();
+            for _ in 0..batch {
+                let bits: Vec<u8> = (0..dims[0]).map(|_| rng.bool() as u8).collect();
+                inputs.extend(packing::pack_bits_u64(&bits));
+            }
+            let scalar = model.logits_batch(&inputs, batch);
+            for (block, tile) in [(1usize, 1usize), (4, 2), (6, 3), (33, 8)] {
+                assert_eq!(
+                    model.logits_batch_simd(&inputs, batch, block, tile),
+                    scalar,
+                    "{dims:?} block {block} tile {tile}"
+                );
+            }
+        }
     }
 
     #[test]

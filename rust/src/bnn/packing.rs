@@ -321,6 +321,414 @@ pub fn xnor_popcount_z_tile(
     }
 }
 
+// ---------------------------------------------------------------------------
+// SIMD kernel tier (runtime-dispatched explicit vectorization)
+
+/// Which vector path the SIMD kernel tier ([`xnor_popcount_z_simd`])
+/// resolves to at runtime.
+///
+/// Dispatch is decided once per process ([`simd_level`]): AVX2 on x86_64
+/// hosts that report it, NEON on aarch64, and the guaranteed-portable
+/// fallback (the tiled kernel, [`xnor_popcount_z_tile`]) everywhere else —
+/// or anywhere when `BNN_FORCE_SCALAR=1` is set, which pins the tier to
+/// the fallback so the non-SIMD path stays exercisable on SIMD hosts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// 256-bit AVX2 path (x86_64, runtime-detected).
+    Avx2,
+    /// 128-bit NEON path (aarch64, runtime-detected).
+    Neon,
+    /// Portable fallback: delegates to [`xnor_popcount_z_tile`].
+    Portable,
+}
+
+impl SimdLevel {
+    /// Short human-readable name (metrics/tables/logs).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+            SimdLevel::Portable => "portable",
+        }
+    }
+
+    /// Every level, most-vectorized first.  Conformance suites iterate
+    /// this so each path is pinned bit-identical on whatever host runs
+    /// them: a level the host cannot execute degrades safely to
+    /// [`SimdLevel::Portable`] inside [`xnor_popcount_z_simd_at`].
+    pub const ALL: [SimdLevel; 3] = [SimdLevel::Avx2, SimdLevel::Neon, SimdLevel::Portable];
+}
+
+/// `BNN_FORCE_SCALAR=1` (any value other than empty or `0`) pins the SIMD
+/// tier to the portable fallback.  Read once per process — the CI matrix
+/// leg sets it for the whole test binary.
+fn force_portable() -> bool {
+    static FORCE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *FORCE.get_or_init(|| {
+        std::env::var("BNN_FORCE_SCALAR")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+    })
+}
+
+/// The vector level [`xnor_popcount_z_simd`] dispatches to on this host:
+/// runtime feature detection gated by `BNN_FORCE_SCALAR` (see
+/// [`SimdLevel`]).
+pub fn simd_level() -> SimdLevel {
+    if force_portable() {
+        return SimdLevel::Portable;
+    }
+    detected_level()
+}
+
+fn detected_level() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return SimdLevel::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return SimdLevel::Neon;
+        }
+    }
+    SimdLevel::Portable
+}
+
+/// Explicitly vectorized XNOR-popcount tile kernel — the `Kernel::Simd`
+/// tier.  Same contract and layout as [`xnor_popcount_z_tile`] (row-major
+/// `imgs`/`rows`, strided `out`, padding bits zero in every operand), but
+/// the inner popcount runs on 256-bit AVX2 or 128-bit NEON vectors when
+/// the host supports them ([`simd_level`]), falling back to the tiled
+/// kernel otherwise.  Bit-identical to [`xnor_popcount_z`] on every path —
+/// all of them compute `z = n − 2·popcount(x ⊕ w)` exactly over the same
+/// words (pinned by the golden-vector and differential conformance suites
+/// in `rust/tests/kernel_conformance.rs`).
+///
+/// ```
+/// use bnn_fpga::bnn::packing::{pack_bits_u64, words_u64, xnor_popcount_z_simd};
+/// let imgs = [pack_bits_u64(&[1, 0, 1]), pack_bits_u64(&[0, 0, 0])].concat();
+/// let rows = [pack_bits_u64(&[1, 1, 1]), pack_bits_u64(&[0, 0, 0])].concat();
+/// let mut z = [0i32; 4];
+/// xnor_popcount_z_simd(&imgs, 2, &rows, words_u64(3), 3, &mut z, 2);
+/// assert_eq!(z, [1, -1, -3, 3]); // identical to the tiled/scalar kernels
+/// ```
+#[allow(clippy::too_many_arguments)]
+pub fn xnor_popcount_z_simd(
+    imgs: &[u64],
+    n_imgs: usize,
+    rows: &[u64],
+    words_per_row: usize,
+    n_bits: usize,
+    out: &mut [i32],
+    out_stride: usize,
+) {
+    xnor_popcount_z_simd_at(
+        simd_level(),
+        imgs,
+        n_imgs,
+        rows,
+        words_per_row,
+        n_bits,
+        out,
+        out_stride,
+    )
+}
+
+/// [`xnor_popcount_z_simd`] pinned to an explicit [`SimdLevel`] — the
+/// conformance suites exercise every level deterministically regardless of
+/// environment.  A level this host cannot execute (wrong architecture or
+/// missing CPU feature) degrades to the portable fallback, so the function
+/// is safe to call with any level anywhere.
+#[allow(clippy::too_many_arguments)]
+pub fn xnor_popcount_z_simd_at(
+    level: SimdLevel,
+    imgs: &[u64],
+    n_imgs: usize,
+    rows: &[u64],
+    words_per_row: usize,
+    n_bits: usize,
+    out: &mut [i32],
+    out_stride: usize,
+) {
+    debug_assert!(words_per_row >= 1);
+    debug_assert_eq!(imgs.len(), n_imgs * words_per_row);
+    debug_assert_eq!(rows.len() % words_per_row, 0);
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 if std::arch::is_x86_feature_detected!("avx2") => unsafe {
+            avx2::tile(imgs, n_imgs, rows, words_per_row, n_bits, out, out_stride)
+        },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon if std::arch::is_aarch64_feature_detected!("neon") => unsafe {
+            neon::tile(imgs, n_imgs, rows, words_per_row, n_bits, out, out_stride)
+        },
+        _ => xnor_popcount_z_tile(imgs, n_imgs, rows, words_per_row, n_bits, out, out_stride),
+    }
+}
+
+/// AVX2 path: 4 u64 words per 256-bit XOR, popcount via the nibble-LUT
+/// (`vpshufb`) + byte-sum (`vpsadbw`) sequence (Muła et al., "Faster
+/// Population Counts Using AVX2 Instructions" — the same shape FINN-style
+/// wide PE lanes compute in hardware).  Two weight rows share every loaded
+/// image vector, halving image-side loads relative to a row-at-a-time
+/// walk.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Per-(image, row-pair) tile walk, same contract as
+    /// [`super::xnor_popcount_z_tile`].
+    ///
+    /// # Safety
+    /// Caller must ensure the `avx2` target feature is available.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn tile(
+        imgs: &[u64],
+        n_imgs: usize,
+        rows: &[u64],
+        words_per_row: usize,
+        n_bits: usize,
+        out: &mut [i32],
+        out_stride: usize,
+    ) {
+        let n_rows = rows.len() / words_per_row;
+        if n_rows == 0 || n_imgs == 0 {
+            return;
+        }
+        debug_assert!(out_stride >= n_rows);
+        debug_assert!(out.len() >= (n_imgs - 1) * out_stride + n_rows);
+        let n = n_bits as i32;
+        let mut r = 0;
+        while r + 2 <= n_rows {
+            let w0 = &rows[r * words_per_row..(r + 1) * words_per_row];
+            let w1 = &rows[(r + 1) * words_per_row..(r + 2) * words_per_row];
+            for i in 0..n_imgs {
+                let x = &imgs[i * words_per_row..(i + 1) * words_per_row];
+                let (c0, c1) = xor_popcount_2(x, w0, w1);
+                let o = i * out_stride + r;
+                out[o] = n - 2 * c0 as i32;
+                out[o + 1] = n - 2 * c1 as i32;
+            }
+            r += 2;
+        }
+        if r < n_rows {
+            let w = &rows[r * words_per_row..(r + 1) * words_per_row];
+            for i in 0..n_imgs {
+                let x = &imgs[i * words_per_row..(i + 1) * words_per_row];
+                out[i * out_stride + r] = n - 2 * xor_popcount_1(x, w) as i32;
+            }
+        }
+    }
+
+    /// `popcount(i & 0xF)` per byte position, duplicated across both lanes
+    /// for `vpshufb`.
+    ///
+    /// # Safety
+    /// Requires `avx2`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn nibble_lut() -> __m256i {
+        _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, // lane 0
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, // lane 1
+        )
+    }
+
+    /// Per-64-bit-lane sums of the byte popcounts of `v`.
+    ///
+    /// # Safety
+    /// Requires `avx2`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcount_lanes(v: __m256i, lut: __m256i, mask: __m256i, zero: __m256i) -> __m256i {
+        let lo = _mm256_and_si256(v, mask);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), mask);
+        let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+        _mm256_sad_epu8(cnt, zero)
+    }
+
+    /// Sum of the four u64 lanes of an accumulator.
+    ///
+    /// # Safety
+    /// Requires `avx2`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256i) -> u32 {
+        let mut lanes = [0u64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+        (lanes[0] + lanes[1] + lanes[2] + lanes[3]) as u32
+    }
+
+    /// `(popcount(x ⊕ w0), popcount(x ⊕ w1))` in one pass: each 256-bit
+    /// image load feeds two XOR-popcount chains.  Remainder words (< 4)
+    /// use the scalar `popcnt`.
+    ///
+    /// # Safety
+    /// Requires `avx2`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn xor_popcount_2(x: &[u64], w0: &[u64], w1: &[u64]) -> (u32, u32) {
+        debug_assert_eq!(x.len(), w0.len());
+        debug_assert_eq!(x.len(), w1.len());
+        let lut = nibble_lut();
+        let mask = _mm256_set1_epi8(0x0f);
+        let zero = _mm256_setzero_si256();
+        let mut a0 = zero;
+        let mut a1 = zero;
+        let n = x.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let xv = _mm256_loadu_si256(x.as_ptr().add(i) as *const __m256i);
+            let v0 =
+                _mm256_xor_si256(xv, _mm256_loadu_si256(w0.as_ptr().add(i) as *const __m256i));
+            let v1 =
+                _mm256_xor_si256(xv, _mm256_loadu_si256(w1.as_ptr().add(i) as *const __m256i));
+            a0 = _mm256_add_epi64(a0, popcount_lanes(v0, lut, mask, zero));
+            a1 = _mm256_add_epi64(a1, popcount_lanes(v1, lut, mask, zero));
+            i += 4;
+        }
+        let mut c0 = hsum(a0);
+        let mut c1 = hsum(a1);
+        while i < n {
+            c0 += (x[i] ^ w0[i]).count_ones();
+            c1 += (x[i] ^ w1[i]).count_ones();
+            i += 1;
+        }
+        (c0, c1)
+    }
+
+    /// `popcount(x ⊕ w)` for the odd trailing row.
+    ///
+    /// # Safety
+    /// Requires `avx2`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn xor_popcount_1(x: &[u64], w: &[u64]) -> u32 {
+        debug_assert_eq!(x.len(), w.len());
+        let lut = nibble_lut();
+        let mask = _mm256_set1_epi8(0x0f);
+        let zero = _mm256_setzero_si256();
+        let mut acc = zero;
+        let n = x.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let xv = _mm256_loadu_si256(x.as_ptr().add(i) as *const __m256i);
+            let v = _mm256_xor_si256(xv, _mm256_loadu_si256(w.as_ptr().add(i) as *const __m256i));
+            acc = _mm256_add_epi64(acc, popcount_lanes(v, lut, mask, zero));
+            i += 4;
+        }
+        let mut c = hsum(acc);
+        while i < n {
+            c += (x[i] ^ w[i]).count_ones();
+            i += 1;
+        }
+        c
+    }
+}
+
+/// NEON path: 2 u64 words per 128-bit XOR, hardware byte popcount
+/// (`vcntq_u8`) + horizontal add (`vaddvq_u8` — 16 bytes × 8 bits ≤ 255,
+/// no overflow).  Same row-pair image-load sharing as the AVX2 path.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// Per-(image, row-pair) tile walk, same contract as
+    /// [`super::xnor_popcount_z_tile`].
+    ///
+    /// # Safety
+    /// Caller must ensure the `neon` target feature is available.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn tile(
+        imgs: &[u64],
+        n_imgs: usize,
+        rows: &[u64],
+        words_per_row: usize,
+        n_bits: usize,
+        out: &mut [i32],
+        out_stride: usize,
+    ) {
+        let n_rows = rows.len() / words_per_row;
+        if n_rows == 0 || n_imgs == 0 {
+            return;
+        }
+        debug_assert!(out_stride >= n_rows);
+        debug_assert!(out.len() >= (n_imgs - 1) * out_stride + n_rows);
+        let n = n_bits as i32;
+        let mut r = 0;
+        while r + 2 <= n_rows {
+            let w0 = &rows[r * words_per_row..(r + 1) * words_per_row];
+            let w1 = &rows[(r + 1) * words_per_row..(r + 2) * words_per_row];
+            for i in 0..n_imgs {
+                let x = &imgs[i * words_per_row..(i + 1) * words_per_row];
+                let (c0, c1) = xor_popcount_2(x, w0, w1);
+                let o = i * out_stride + r;
+                out[o] = n - 2 * c0 as i32;
+                out[o + 1] = n - 2 * c1 as i32;
+            }
+            r += 2;
+        }
+        if r < n_rows {
+            let w = &rows[r * words_per_row..(r + 1) * words_per_row];
+            for i in 0..n_imgs {
+                let x = &imgs[i * words_per_row..(i + 1) * words_per_row];
+                out[i * out_stride + r] = n - 2 * xor_popcount_1(x, w) as i32;
+            }
+        }
+    }
+
+    /// `(popcount(x ⊕ w0), popcount(x ⊕ w1))`, sharing each image load.
+    ///
+    /// # Safety
+    /// Requires `neon`.
+    #[target_feature(enable = "neon")]
+    unsafe fn xor_popcount_2(x: &[u64], w0: &[u64], w1: &[u64]) -> (u32, u32) {
+        debug_assert_eq!(x.len(), w0.len());
+        debug_assert_eq!(x.len(), w1.len());
+        let n = x.len();
+        let mut c0 = 0u32;
+        let mut c1 = 0u32;
+        let mut i = 0;
+        while i + 2 <= n {
+            let xv = vld1q_u64(x.as_ptr().add(i));
+            let v0 = veorq_u64(xv, vld1q_u64(w0.as_ptr().add(i)));
+            let v1 = veorq_u64(xv, vld1q_u64(w1.as_ptr().add(i)));
+            c0 += vaddvq_u8(vcntq_u8(vreinterpretq_u8_u64(v0))) as u32;
+            c1 += vaddvq_u8(vcntq_u8(vreinterpretq_u8_u64(v1))) as u32;
+            i += 2;
+        }
+        while i < n {
+            c0 += (x[i] ^ w0[i]).count_ones();
+            c1 += (x[i] ^ w1[i]).count_ones();
+            i += 1;
+        }
+        (c0, c1)
+    }
+
+    /// `popcount(x ⊕ w)` for the odd trailing row.
+    ///
+    /// # Safety
+    /// Requires `neon`.
+    #[target_feature(enable = "neon")]
+    unsafe fn xor_popcount_1(x: &[u64], w: &[u64]) -> u32 {
+        debug_assert_eq!(x.len(), w.len());
+        let n = x.len();
+        let mut c = 0u32;
+        let mut i = 0;
+        while i + 2 <= n {
+            let xv = vld1q_u64(x.as_ptr().add(i));
+            let v = veorq_u64(xv, vld1q_u64(w.as_ptr().add(i)));
+            c += vaddvq_u8(vcntq_u8(vreinterpretq_u8_u64(v))) as u32;
+            i += 2;
+        }
+        while i < n {
+            c += (x[i] ^ w[i]).count_ones();
+            i += 1;
+        }
+        c
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -591,6 +999,142 @@ mod tests {
                 })
             },
         );
+    }
+
+    #[test]
+    fn simd_equals_scalar_at_edge_widths_for_every_level() {
+        // Every SIMD level — including levels this host degrades to the
+        // portable fallback — must be bit-identical to the scalar path
+        // around the row-pair tile, at word-straddling widths.
+        let mut rng = Xoshiro256::new(2031);
+        for level in SimdLevel::ALL {
+            for &n in &[784usize, 10, 1, 37, 63, 64, 65, 128, 129] {
+                let wpr = words_u64(n);
+                for n_imgs in 0..=4usize {
+                    for n_rows in 0..=5usize {
+                        let mut imgs = Vec::with_capacity(n_imgs * wpr);
+                        for _ in 0..n_imgs {
+                            imgs.extend(pack_bits_u64(&random_bits(&mut rng, n)));
+                        }
+                        let mut rows = Vec::with_capacity(n_rows * wpr);
+                        for _ in 0..n_rows {
+                            rows.extend(pack_bits_u64(&random_bits(&mut rng, n)));
+                        }
+                        let stride = n_rows.max(1);
+                        let mut got = vec![0i32; n_imgs * stride];
+                        xnor_popcount_z_simd_at(
+                            level, &imgs, n_imgs, &rows, wpr, n, &mut got, stride,
+                        );
+                        for i in 0..n_imgs {
+                            for r in 0..n_rows {
+                                let want = xnor_popcount_z(
+                                    &imgs[i * wpr..(i + 1) * wpr],
+                                    &rows[r * wpr..(r + 1) * wpr],
+                                    n,
+                                );
+                                assert_eq!(
+                                    got[i * stride + r],
+                                    want,
+                                    "{level:?} width {n}, {n_imgs} imgs, {n_rows} rows, ({i},{r})"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_respects_wide_out_stride() {
+        // out_stride > n_rows writes a row block into a wider logits
+        // buffer without touching the columns beyond the block — for
+        // every level, including the vectorized ones.
+        let mut rng = Xoshiro256::new(2032);
+        let n = 129; // two full words + one straddling bit
+        let wpr = words_u64(n);
+        let (n_imgs, n_rows, stride) = (3usize, 5usize, 9usize);
+        let mut imgs = Vec::new();
+        for _ in 0..n_imgs {
+            imgs.extend(pack_bits_u64(&random_bits(&mut rng, n)));
+        }
+        let mut rows = Vec::new();
+        for _ in 0..n_rows {
+            rows.extend(pack_bits_u64(&random_bits(&mut rng, n)));
+        }
+        for level in SimdLevel::ALL {
+            let mut out = vec![i32::MIN; n_imgs * stride];
+            xnor_popcount_z_simd_at(level, &imgs, n_imgs, &rows, wpr, n, &mut out, stride);
+            for i in 0..n_imgs {
+                for c in 0..stride {
+                    let got = out[i * stride + c];
+                    if c < n_rows {
+                        let want = xnor_popcount_z(
+                            &imgs[i * wpr..(i + 1) * wpr],
+                            &rows[c * wpr..(c + 1) * wpr],
+                            n,
+                        );
+                        assert_eq!(got, want, "{level:?} img {i} row {c}");
+                    } else {
+                        assert_eq!(got, i32::MIN, "{level:?} img {i} col {c} clobbered");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_kernel_matches_naive_property() {
+        // Property: at random widths/images/rows, the dispatched SIMD
+        // kernel (whatever level this host resolves to) equals the ±1
+        // definition — so neither padding nor the vector remainder loop
+        // can leak.
+        Runner::new("simd-vs-naive").cases(32).run(
+            &gens::Pair(gens::BitVec(1..=300), gens::Pair(gens::U64(1..=5), gens::U64(1..=10))),
+            |(bits, (n_imgs, n_rows))| {
+                let n = bits.len();
+                let wpr = words_u64(n);
+                let (n_imgs, n_rows) = (*n_imgs as usize, *n_rows as usize);
+                let mut rng = Xoshiro256::new(n as u64 * 41 + n_imgs as u64 * 11 + n_rows as u64);
+                let mut img_bits = vec![bits.clone()];
+                for _ in 1..n_imgs {
+                    img_bits.push((0..n).map(|_| rng.bool() as u8).collect());
+                }
+                let mut row_bits = Vec::new();
+                for _ in 0..n_rows {
+                    row_bits.push((0..n).map(|_| rng.bool() as u8).collect::<Vec<u8>>());
+                }
+                let imgs: Vec<u64> = img_bits.iter().flat_map(|b| pack_bits_u64(b)).collect();
+                let rows: Vec<u64> = row_bits.iter().flat_map(|b| pack_bits_u64(b)).collect();
+                let mut got = vec![0i32; n_imgs * n_rows];
+                xnor_popcount_z_simd(&imgs, n_imgs, &rows, wpr, n, &mut got, n_rows);
+                img_bits.iter().enumerate().all(|(i, xb)| {
+                    row_bits.iter().enumerate().all(|(r, wb)| {
+                        let naive: i32 = xb
+                            .iter()
+                            .zip(wb)
+                            .map(|(&a, &b)| if a == b { 1i32 } else { -1 })
+                            .sum();
+                        got[i * n_rows + r] == naive
+                    })
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn simd_level_is_stable_and_named() {
+        // The per-process dispatch decision must be deterministic, and
+        // every level must carry a distinct display name.
+        assert_eq!(simd_level(), simd_level());
+        let names: Vec<&str> = SimdLevel::ALL.iter().map(|l| l.name()).collect();
+        assert_eq!(names.len(), 3);
+        assert!(names.contains(&"portable"));
+        for (i, a) in names.iter().enumerate() {
+            for b in &names[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
     }
 
     #[test]

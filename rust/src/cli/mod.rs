@@ -38,9 +38,9 @@ SUBCOMMANDS
   verify     [--parallelism P] [--mem bram|lut]        §4.1 100-image check
   sweep      [--strict-clock]                          Table 1 sweep
   report     --parallelism P [--mem bram|lut]          §3.6-style report
-  serve-demo [--backend ...] [--requests N] [--workers W] [--kernel scalar|blocked|tiled]
+  serve-demo [--backend ...] [--requests N] [--workers W] [--kernel scalar|blocked|tiled|simd]
              [--block-rows B] [--tile-imgs T] [--max-batch B] [--config FILE]
-  serve      [--addr HOST:PORT] [--backend ...] [--workers W] [--kernel scalar|blocked|tiled]
+  serve      [--addr HOST:PORT] [--backend ...] [--workers W] [--kernel scalar|blocked|tiled|simd]
              [--block-rows B] [--tile-imgs T] [--config FILE]
   trace      [--image N] [--parallelism P] [--out trace.vcd]  VCD waveform
 
@@ -71,23 +71,17 @@ fn tile_imgs_arg(args: &Args, default: usize) -> Result<usize> {
     Ok(t)
 }
 
-/// `--kernel scalar|blocked|tiled` (default tiled — the serving hot path),
-/// shaped by `--block-rows` / `--tile-imgs`.
+/// `--kernel scalar|blocked|tiled|simd` (default from `[coordinator]
+/// kernel`, "tiled" — the serving hot path — when no config is given),
+/// shaped by `--block-rows` / `--tile-imgs`.  `simd` runtime-dispatches to
+/// AVX2/NEON and falls back to the tiled kernel on hosts without them.
 fn kernel_arg(
     args: &Args,
+    default: &str,
     block_rows: usize,
     tile_imgs: usize,
 ) -> Result<crate::coordinator::Kernel> {
-    use crate::coordinator::Kernel;
-    Ok(match args.opt_or("kernel", "tiled").as_str() {
-        "scalar" => Kernel::Scalar,
-        "blocked" => Kernel::Blocked { block_rows },
-        "tiled" => Kernel::Tiled {
-            block_rows,
-            tile_imgs,
-        },
-        other => bail!("--kernel must be scalar|blocked|tiled, got '{other}'"),
-    })
+    crate::coordinator::Kernel::parse(&args.opt_or("kernel", default), block_rows, tile_imgs)
 }
 
 /// `--config FILE` → [`crate::config::ServeConfig`]; defaults otherwise.
@@ -313,7 +307,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     let workers = args.usize_or("workers", file_cfg.workers)?;
     let block_rows = block_rows_arg(args, file_cfg.block_rows)?;
     let tile_imgs = tile_imgs_arg(args, file_cfg.tile_imgs)?;
-    let kernel = kernel_arg(args, block_rows, tile_imgs)?;
+    let kernel = kernel_arg(args, &file_cfg.kernel, block_rows, tile_imgs)?;
     let cfg = BatcherConfig {
         max_batch: args.usize_or("max-batch", file_cfg.batcher.max_batch)?,
         max_wait: std::time::Duration::from_micros(
@@ -405,7 +399,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers = args.usize_or("workers", file_cfg.workers)?;
     let block_rows = block_rows_arg(args, file_cfg.block_rows)?;
     let tile_imgs = tile_imgs_arg(args, file_cfg.tile_imgs)?;
-    let kernel = kernel_arg(args, block_rows, tile_imgs)?;
+    let kernel = kernel_arg(args, &file_cfg.kernel, block_rows, tile_imgs)?;
     let backend_default = file_cfg
         .backends
         .first()

@@ -115,6 +115,11 @@ pub struct ServeConfig {
     /// Images per weight-stationary tile of the batch kernel (≥ 1) —
     /// `[coordinator] tile_imgs` / `--tile-imgs`.
     pub tile_imgs: usize,
+    /// Native kernel tier: `scalar|blocked|tiled|simd` (`[coordinator]
+    /// kernel` / `--kernel`); shaped by `block_rows`/`tile_imgs`.  `simd`
+    /// runtime-dispatches to AVX2/NEON and falls back to `tiled` on hosts
+    /// without them (or under `BNN_FORCE_SCALAR=1`).
+    pub kernel: String,
     pub batcher: BatcherConfig,
     /// FPGA-sim backend parameters.
     pub parallelism: usize,
@@ -129,6 +134,7 @@ impl Default for ServeConfig {
             workers: 2,
             block_rows: crate::bnn::DEFAULT_BLOCK_ROWS,
             tile_imgs: crate::bnn::DEFAULT_TILE_IMGS,
+            kernel: "tiled".to_string(),
             batcher: BatcherConfig::default(),
             parallelism: 64,
             mem_style: MemStyle::Bram,
@@ -176,12 +182,17 @@ impl ServeConfig {
             bail!("tile_imgs must be ≥ 1");
         }
         let tile_imgs = tile_imgs as usize;
+        let kernel = doc.str_or("coordinator", "kernel", &d.kernel)?;
+        // vocabulary check at load time so a typo fails the config, not
+        // the first serve request (the shape knobs are validated above)
+        crate::coordinator::Kernel::parse(&kernel, block_rows, tile_imgs)?;
         Ok(ServeConfig {
             artifacts_dir: doc.str_or("coordinator", "artifacts_dir", "artifacts")?.into(),
             backends,
             workers,
             block_rows,
             tile_imgs,
+            kernel,
             batcher: BatcherConfig {
                 max_batch: doc.int_or("batcher", "max_batch", d.batcher.max_batch as i64)?
                     as usize,
@@ -214,6 +225,7 @@ backends = "native, fpga-sim"
 workers = 4
 block_rows = 32
 tile_imgs = 8
+kernel = "simd"
 artifacts_dir = "artifacts"
 
 [batcher]
@@ -232,6 +244,7 @@ mem_style = "bram"
         assert_eq!(cfg.workers, 4);
         assert_eq!(cfg.block_rows, 32);
         assert_eq!(cfg.tile_imgs, 8);
+        assert_eq!(cfg.kernel, "simd");
         assert_eq!(cfg.batcher.max_batch, 32);
         assert_eq!(cfg.batcher.max_wait, Duration::from_micros(150));
         assert_eq!(cfg.parallelism, 64);
@@ -245,6 +258,16 @@ mem_style = "bram"
         assert_eq!(cfg.workers, 2);
         assert_eq!(cfg.block_rows, crate::bnn::DEFAULT_BLOCK_ROWS);
         assert_eq!(cfg.tile_imgs, crate::bnn::DEFAULT_TILE_IMGS);
+        assert_eq!(cfg.kernel, "tiled");
+    }
+
+    #[test]
+    fn every_registered_kernel_name_is_accepted() {
+        for k in crate::coordinator::Kernel::registry() {
+            let toml = format!("[coordinator]\nkernel = \"{}\"", k.name());
+            let cfg = ServeConfig::from_toml(&Toml::parse(&toml).unwrap()).unwrap();
+            assert_eq!(cfg.kernel, k.name());
+        }
     }
 
     #[test]
@@ -284,6 +307,11 @@ mem_style = "bram"
         .is_err());
         assert!(ServeConfig::from_toml(
             &Toml::parse("[coordinator]\nworkers = 0").unwrap()
+        )
+        .is_err());
+        // an unknown kernel name fails at load time, not at first request
+        assert!(ServeConfig::from_toml(
+            &Toml::parse("[coordinator]\nkernel = \"warp\"").unwrap()
         )
         .is_err());
     }

@@ -5,7 +5,7 @@
 //! route to any of them interchangeably:
 //!
 //! * [`NativeBackend`] — the bit-packed Rust hot path (lowest latency),
-//!   with three kernel schedules selected by [`Kernel`];
+//!   with four kernel schedules selected by [`Kernel`];
 //! * [`PjrtBackend`] — the AOT-compiled JAX/Pallas artifacts via PJRT
 //!   (the paper's "CPU" platform in Table 5);
 //! * [`SimBackend`] — the cycle-accurate FPGA simulator (the paper's
@@ -29,9 +29,11 @@ use crate::bnn::{argmax_i32, BnnModel, DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS};
 use crate::runtime::Engine;
 use crate::sim::{Accelerator, SimConfig};
 
-/// Kernel schedule for [`NativeBackend`].  All three are bit-identical
-/// (asserted in `bnn::model` tests and `rust/tests/integration.rs`);
-/// they differ only in how compute is scheduled over the weight matrix.
+/// Kernel schedule for [`NativeBackend`].  All tiers are bit-identical
+/// (asserted in `bnn::model` tests and the golden-vector + differential
+/// conformance suites in `rust/tests/kernel_conformance.rs`, which
+/// enumerate [`Kernel::registry`]); they differ only in how compute is
+/// scheduled over the weight matrix.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Kernel {
     /// One neuron per pass over the input — the semantics reference.
@@ -49,6 +51,17 @@ pub enum Kernel {
         /// Rows per pass, ≥ 1.
         block_rows: usize,
         /// Images per tile, ≥ 1 (see [`DEFAULT_TILE_IMGS`]).
+        tile_imgs: usize,
+    },
+    /// Explicitly vectorized tile: the tiled schedule with every
+    /// pre-activation tile computed on AVX2/NEON vectors when the host
+    /// supports them ([`BnnModel::logits_batch_into_simd`]; runtime
+    /// dispatch via [`crate::bnn::simd_level`], portable fallback to the
+    /// tiled kernel elsewhere or under `BNN_FORCE_SCALAR=1`).
+    Simd {
+        /// Rows per pass, ≥ 1.
+        block_rows: usize,
+        /// Images per tile, ≥ 1.
         tile_imgs: usize,
     },
 }
@@ -69,6 +82,7 @@ impl Kernel {
             Kernel::Scalar => "scalar",
             Kernel::Blocked { .. } => "blocked",
             Kernel::Tiled { .. } => "tiled",
+            Kernel::Simd { .. } => "simd",
         }
     }
 
@@ -82,11 +96,70 @@ impl Kernel {
             Kernel::Tiled {
                 block_rows,
                 tile_imgs,
+            }
+            | Kernel::Simd {
+                block_rows,
+                tile_imgs,
             } => {
                 assert!(block_rows >= 1, "block_rows must be ≥ 1");
                 assert!(tile_imgs >= 1, "tile_imgs must be ≥ 1");
             }
         }
+    }
+
+    /// Parse a kernel name (`scalar|blocked|tiled|simd` — the config/CLI
+    /// vocabulary) with explicit shape knobs.
+    pub fn parse(name: &str, block_rows: usize, tile_imgs: usize) -> Result<Kernel> {
+        Ok(match name {
+            "scalar" => Kernel::Scalar,
+            "blocked" => Kernel::Blocked { block_rows },
+            "tiled" => Kernel::Tiled {
+                block_rows,
+                tile_imgs,
+            },
+            "simd" => Kernel::Simd {
+                block_rows,
+                tile_imgs,
+            },
+            other => anyhow::bail!("kernel must be scalar|blocked|tiled|simd, got '{other}'"),
+        })
+    }
+
+    /// **The kernel registry**: every tier, at the given shape knobs.
+    ///
+    /// Conformance suites (`rust/tests/kernel_conformance.rs`, the
+    /// golden-vector test, the pool equality tests) enumerate kernels from
+    /// here instead of hand-listing variants, so a future tier added to
+    /// the enum is automatically pinned bit-identical to the scalar
+    /// reference and the FPGA simulator.  The `const` guard below makes
+    /// forgetting to extend this registry a compile error: a new enum
+    /// variant leaves its match non-exhaustive, and the fix-up lands next
+    /// to the list that must grow with it.
+    pub fn registry_with(block_rows: usize, tile_imgs: usize) -> Vec<Kernel> {
+        // every variant must appear here AND in the vec below
+        const _: fn(Kernel) = |k| match k {
+            Kernel::Scalar
+            | Kernel::Blocked { .. }
+            | Kernel::Tiled { .. }
+            | Kernel::Simd { .. } => {}
+        };
+        vec![
+            Kernel::Scalar,
+            Kernel::Blocked { block_rows },
+            Kernel::Tiled {
+                block_rows,
+                tile_imgs,
+            },
+            Kernel::Simd {
+                block_rows,
+                tile_imgs,
+            },
+        ]
+    }
+
+    /// [`Self::registry_with`] at the default shape knobs.
+    pub fn registry() -> Vec<Kernel> {
+        Self::registry_with(DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS)
     }
 }
 
@@ -277,21 +350,37 @@ impl InferBackend for NativeBackend {
             Kernel::Tiled {
                 block_rows,
                 tile_imgs,
+            }
+            | Kernel::Simd {
+                block_rows,
+                tile_imgs,
             } => {
                 // gather the packed inputs into the flat arena, then one
-                // weight-stationary pass over the whole batch
+                // weight-stationary pass over the whole batch; the two
+                // tiers share the walk and differ only in the tile kernel
                 scratch.input.clear();
                 for img in images {
                     scratch.input.extend_from_slice(&img.words);
                 }
-                self.model.logits_batch_into_tiled(
-                    &scratch.input,
-                    images.len(),
-                    &mut scratch.model,
-                    out.flat_mut(),
-                    block_rows,
-                    tile_imgs,
-                );
+                if matches!(self.kernel, Kernel::Simd { .. }) {
+                    self.model.logits_batch_into_simd(
+                        &scratch.input,
+                        images.len(),
+                        &mut scratch.model,
+                        out.flat_mut(),
+                        block_rows,
+                        tile_imgs,
+                    );
+                } else {
+                    self.model.logits_batch_into_tiled(
+                        &scratch.input,
+                        images.len(),
+                        &mut scratch.model,
+                        out.flat_mut(),
+                        block_rows,
+                        tile_imgs,
+                    );
+                }
             }
             Kernel::Blocked { block_rows } => {
                 for (i, img) in images.iter().enumerate() {
@@ -502,20 +591,36 @@ mod tests {
 
     #[test]
     fn all_native_kernels_agree() {
+        // every registered tier (plus the default) against the scalar
+        // reference — the registry is the single source of truth, so a new
+        // tier is pinned here automatically
         let model = tiny_model(15);
         let imgs = images(9, 16);
         let scalar = NativeBackend::new(model.clone()).infer_logits(&imgs).unwrap();
-        for kernel in [
-            Kernel::Blocked { block_rows: 16 },
-            Kernel::Tiled {
-                block_rows: 16,
-                tile_imgs: 4,
-            },
-            Kernel::default(),
-        ] {
+        let mut kernels = Kernel::registry_with(16, 4);
+        kernels.push(Kernel::default());
+        for kernel in kernels {
             let b = NativeBackend::with_kernel(model.clone(), kernel);
             assert_eq!(b.infer_logits(&imgs).unwrap(), scalar, "{kernel:?}");
         }
+    }
+
+    #[test]
+    fn registry_covers_every_kernel_tier() {
+        // one entry per enum variant, with distinct names — the
+        // conformance suites rely on this being exhaustive
+        let reg = Kernel::registry();
+        assert_eq!(reg.len(), 4);
+        let names: Vec<&str> = reg.iter().map(|k| k.name()).collect();
+        for want in ["scalar", "blocked", "tiled", "simd"] {
+            assert!(names.contains(&want), "registry missing {want}: {names:?}");
+        }
+        // parse() round-trips the registry's vocabulary
+        for k in &reg {
+            let parsed = Kernel::parse(k.name(), 16, 4).unwrap();
+            assert_eq!(parsed.name(), k.name());
+        }
+        assert!(Kernel::parse("gpu", 16, 4).is_err());
     }
 
     #[test]

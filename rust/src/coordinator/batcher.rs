@@ -154,6 +154,89 @@ mod tests {
     }
 
     #[test]
+    fn zero_max_wait_launches_any_nonempty_queue_immediately() {
+        // max_wait == 0: batching is disabled — every non-empty queue
+        // launches at once (capped at max_batch), freshness of the oldest
+        // request notwithstanding.
+        use crate::util::proptest_lite::{gens, Runner};
+        Runner::new("decide-max-wait-zero").cases(64).run(
+            &gens::Pair(gens::U64(0..=40), gens::U64(1..=16)),
+            |(qlen, max_batch)| {
+                let (qlen, max_batch) = (*qlen as usize, *max_batch as usize);
+                let now = Instant::now();
+                let c = cfg(max_batch, 0);
+                match decide(qlen, (qlen > 0).then_some(now), &c, now) {
+                    DrainDecision::Launch(n) => qlen > 0 && n == qlen.min(max_batch),
+                    DrainDecision::Idle => qlen == 0,
+                    DrainDecision::Wait(_) => false, // must never wait at max_wait == 0
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn queue_exactly_max_batch_launches_full_regardless_of_age() {
+        // queue length exactly max_batch: a full batch launches even if
+        // the oldest request arrived this very instant and max_wait is
+        // enormous.
+        use crate::util::proptest_lite::{gens, Runner};
+        Runner::new("decide-exact-full-batch").cases(64).run(
+            &gens::U64(1..=64),
+            |&max_batch| {
+                let max_batch = max_batch as usize;
+                let now = Instant::now();
+                let c = cfg(max_batch, 1_000_000_000);
+                decide(max_batch, Some(now), &c, now) == DrainDecision::Launch(max_batch)
+            },
+        );
+    }
+
+    #[test]
+    fn aged_out_partial_batch_launches_whole_queue() {
+        // A partial batch whose oldest entry has aged ≥ max_wait launches
+        // with exactly the queue length — the deadline flushes everything
+        // queued, never a sub-prefix.  Exactly at the boundary counts as
+        // aged (age >= max_wait, not >).
+        use crate::util::proptest_lite::{gens, Runner};
+        Runner::new("decide-aged-partial").cases(64).run(
+            &gens::Pair(gens::Pair(gens::U64(1..=15), gens::U64(1..=500)), gens::U64(0..=500)),
+            |((qlen, wait_us), extra_us)| {
+                let qlen = *qlen as usize;
+                let max_batch = 16; // strictly larger than any qlen here
+                let c = cfg(max_batch, *wait_us);
+                let t0 = Instant::now();
+                let oldest_age = c.max_wait + Duration::from_micros(*extra_us);
+                let oldest = t0.checked_sub(oldest_age).unwrap_or(t0);
+                // guard against platforms where Instant cannot go back far
+                // enough: recompute the age decide() will actually see
+                let seen_age = t0.saturating_duration_since(oldest);
+                match decide(qlen, Some(oldest), &c, t0) {
+                    DrainDecision::Launch(n) => seen_age >= c.max_wait && n == qlen,
+                    DrainDecision::Wait(d) => {
+                        seen_age < c.max_wait && d == c.max_wait - seen_age
+                    }
+                    DrainDecision::Idle => false,
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn boundary_age_exactly_max_wait_launches() {
+        // the precise >= boundary, deterministic (no clock arithmetic slop)
+        let t0 = Instant::now();
+        let c = cfg(8, 100);
+        let now = t0 + Duration::from_micros(100); // age == max_wait exactly
+        assert_eq!(decide(3, Some(t0), &c, now), DrainDecision::Launch(3));
+        // one tick earlier it still waits, for exactly the remainder
+        let almost = t0 + Duration::from_micros(99);
+        assert_eq!(
+            decide(3, Some(t0), &c, almost),
+            DrainDecision::Wait(Duration::from_micros(1))
+        );
+    }
+
+    #[test]
     fn property_never_exceeds_max_batch_and_launch_is_prefix() {
         // randomized queue states: the decision must never launch more than
         // max_batch, never launch 0, and Launch(n) must imply n ≤ queue.len()

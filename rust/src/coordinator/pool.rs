@@ -493,8 +493,9 @@ mod tests {
 
     #[test]
     fn all_kernel_pools_agree() {
-        // scalar, blocked and tiled pools must serve identical logits for
-        // the same request stream.
+        // every registered kernel tier must serve identical logits for the
+        // same request stream (the registry keeps this exhaustive as new
+        // tiers land).
         let model = random_model(&[784, 128, 64, 10], 55);
         let cfg = BatcherConfig {
             max_batch: 8,
@@ -504,14 +505,10 @@ mod tests {
         let scalar_pool = WorkerPool::native(&model, 2, Kernel::Scalar, cfg).unwrap();
         let want = scalar_pool.infer_many(images.clone()).unwrap();
         scalar_pool.shutdown();
-        for kernel in [
-            Kernel::Blocked { block_rows: 32 },
-            Kernel::Tiled {
-                block_rows: 16,
-                tile_imgs: 4,
-            },
-            Kernel::default(),
-        ] {
+        let mut kernels = Kernel::registry_with(16, 4);
+        kernels.push(Kernel::Blocked { block_rows: 32 });
+        kernels.push(Kernel::default());
+        for kernel in kernels {
             let pool = WorkerPool::native(&model, 2, kernel, cfg).unwrap();
             let got = pool.infer_many(images.clone()).unwrap();
             for (x, y) in got.iter().zip(&want) {

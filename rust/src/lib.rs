@@ -6,8 +6,11 @@
 //!
 //! * [`bnn`] — bit-packed XNOR-popcount inference library (the paper's
 //!   Algorithm 1 in software, `z = n − 2·popcount(x ⊕ w)`), with a scalar
-//!   reference kernel and a blocked multi-row kernel (the software mirror
-//!   of the FPGA's parallelism parameter).
+//!   reference kernel, a blocked multi-row kernel (the software mirror
+//!   of the FPGA's parallelism parameter), a weight-stationary batch-tiled
+//!   kernel, and a runtime-dispatched SIMD tier (AVX2/NEON with a
+//!   guaranteed portable fallback) — all bit-identical, pinned by the
+//!   golden-vector + differential conformance suite.
 //! * [`sim`] — cycle-accurate simulator of the paper's Verilog design:
 //!   FSM-controlled datapath, dual-port BRAM / LUT-ROM memories, argmax,
 //!   seven-segment output, parameterized parallelism (1..128).

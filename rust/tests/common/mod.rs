@@ -1,0 +1,241 @@
+//! Shared kernel-conformance harness for the integration test crates.
+//!
+//! One place defines (a) the golden-vector case specs — deterministic
+//! synthetic models + input streams pinned by seed — and (b) the helpers
+//! that rebuild them and load/serialize the committed fixture
+//! (`tests/golden/golden_vectors.json`).  `kernel_conformance.rs` pulls
+//! from here (any future test crate can `mod common;` the same way), so a
+//! new golden case is wired into every golden gate at once; kernel
+//! enumeration itself lives in `Kernel::registry` so library tests share
+//! it too.
+//!
+//! Fixture provenance: authored by `python/tools/gen_golden_vectors.py`
+//! (a line-for-line Python port of the PRNG + model builder + scalar
+//! forward pass, usable without a Rust toolchain) and regenerable from
+//! Rust via the ignored `regenerate_golden_vectors` test in
+//! `kernel_conformance.rs`.  Both writers emit byte-identical JSON
+//! (compact separators, sorted keys, trailing newline), which
+//! `fixture_file_is_canonical` relies on.
+
+#![allow(dead_code)] // consumers use different subsets of the helpers
+
+use bnn_fpga::bnn::model::random_model;
+use bnn_fpga::bnn::packing::pack_bits_u64;
+use bnn_fpga::bnn::{BnnModel, Packed};
+use bnn_fpga::util::json::Json;
+use bnn_fpga::util::prng::Xoshiro256;
+
+/// One golden case: a fixed-seed synthetic model and input stream.
+#[derive(Clone, Copy, Debug)]
+pub struct CaseSpec {
+    pub name: &'static str,
+    pub dims: &'static [usize],
+    pub model_seed: u64,
+    pub input_seed: u64,
+    pub n_inputs: usize,
+}
+
+/// The golden-vector case specs — keep in sync with `CASES` in
+/// `python/tools/gen_golden_vectors.py`.  Widths deliberately cover the
+/// paper network plus the word-boundary edges (65/63/37) and exact
+/// multiples of 64; ~32 inputs total.
+pub const CASES: [CaseSpec; 5] = [
+    CaseSpec {
+        name: "paper-784-128-64-10",
+        dims: &[784, 128, 64, 10],
+        model_seed: 2601,
+        input_seed: 9001,
+        n_inputs: 8,
+    },
+    CaseSpec {
+        name: "edge-65-63-5-3",
+        dims: &[65, 63, 5, 3],
+        model_seed: 2602,
+        input_seed: 9002,
+        n_inputs: 8,
+    },
+    CaseSpec {
+        name: "edge-37-19-11-3",
+        dims: &[37, 19, 11, 3],
+        model_seed: 2603,
+        input_seed: 9003,
+        n_inputs: 8,
+    },
+    CaseSpec {
+        name: "aligned-128-64-10",
+        dims: &[128, 64, 10],
+        model_seed: 2604,
+        input_seed: 9004,
+        n_inputs: 4,
+    },
+    CaseSpec {
+        name: "single-layer-64-10",
+        dims: &[64, 10],
+        model_seed: 2605,
+        input_seed: 9005,
+        n_inputs: 4,
+    },
+];
+
+/// Absolute path of the committed fixture (CWD-independent).
+pub fn golden_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/golden_vectors.json")
+}
+
+impl CaseSpec {
+    /// Rebuild the case's deterministic model.
+    pub fn model(&self) -> BnnModel {
+        random_model(self.dims, self.model_seed)
+    }
+
+    /// Rebuild the case's input stream: `n_inputs` images drawn
+    /// sequentially from one PRNG (the fixture's draw order).
+    pub fn inputs(&self) -> Vec<Packed> {
+        let mut rng = Xoshiro256::new(self.input_seed);
+        let n_in = self.dims[0];
+        (0..self.n_inputs)
+            .map(|_| {
+                let bits: Vec<u8> = (0..n_in).map(|_| rng.bool() as u8).collect();
+                Packed {
+                    words: pack_bits_u64(&bits),
+                    n_bits: n_in,
+                }
+            })
+            .collect()
+    }
+
+    /// Expected logits from the scalar semantics reference.
+    pub fn scalar_logits(&self) -> Vec<Vec<i32>> {
+        let model = self.model();
+        self.inputs()
+            .iter()
+            .map(|img| model.logits(&img.words))
+            .collect()
+    }
+}
+
+/// Serialize all cases (with the given per-case logits, index-aligned with
+/// [`CASES`]) into the canonical fixture document.
+pub fn fixture_doc(logits_per_case: &[Vec<Vec<i32>>]) -> Json {
+    assert_eq!(logits_per_case.len(), CASES.len());
+    let cases: Vec<Json> = CASES
+        .iter()
+        .zip(logits_per_case)
+        .map(|(spec, logits)| {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert(
+                "dims".to_string(),
+                Json::Arr(spec.dims.iter().map(|&d| Json::from(d as u64)).collect()),
+            );
+            m.insert("input_seed".to_string(), Json::from(spec.input_seed));
+            m.insert(
+                "logits".to_string(),
+                Json::Arr(
+                    logits
+                        .iter()
+                        .map(|row| {
+                            Json::Arr(row.iter().map(|&z| Json::from(z as f64)).collect())
+                        })
+                        .collect(),
+                ),
+            );
+            m.insert("model_seed".to_string(), Json::from(spec.model_seed));
+            m.insert("n_inputs".to_string(), Json::from(spec.n_inputs as u64));
+            m.insert("name".to_string(), Json::from(spec.name));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut doc = std::collections::BTreeMap::new();
+    doc.insert("cases".to_string(), Json::Arr(cases));
+    doc.insert(
+        "generator".to_string(),
+        Json::from("python/tools/gen_golden_vectors.py"),
+    );
+    doc.insert("version".to_string(), Json::from(1u64));
+    Json::Obj(doc)
+}
+
+/// The canonical fixture file contents for the given logits.
+pub fn fixture_text(logits_per_case: &[Vec<Vec<i32>>]) -> String {
+    let mut s = fixture_doc(logits_per_case).to_string();
+    s.push('\n');
+    s
+}
+
+/// Load the committed fixture and return the expected logits per case,
+/// index-aligned with [`CASES`] (validates names/dims/seeds against the
+/// in-code specs so the two cannot drift apart silently).
+pub fn load_golden_logits() -> Vec<Vec<Vec<i32>>> {
+    let path = golden_path();
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "cannot read golden fixture {} ({e}); regenerate with \
+             `cargo test --release --test kernel_conformance regenerate -- --ignored`",
+            path.display()
+        )
+    });
+    let doc = Json::parse(&text).expect("golden fixture parses");
+    assert_eq!(doc.get("version").unwrap().as_u64().unwrap(), 1);
+    let cases = doc.get("cases").unwrap().as_arr().unwrap();
+    assert_eq!(cases.len(), CASES.len(), "fixture case count");
+    cases
+        .iter()
+        .zip(&CASES)
+        .map(|(case, spec)| {
+            assert_eq!(case.get("name").unwrap().as_str().unwrap(), spec.name);
+            let dims: Vec<usize> = case
+                .get("dims")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|d| d.as_usize().unwrap())
+                .collect();
+            assert_eq!(dims, spec.dims, "{}: dims drifted", spec.name);
+            assert_eq!(
+                case.get("model_seed").unwrap().as_u64().unwrap(),
+                spec.model_seed,
+                "{}: model_seed drifted",
+                spec.name
+            );
+            assert_eq!(
+                case.get("input_seed").unwrap().as_u64().unwrap(),
+                spec.input_seed,
+                "{}: input_seed drifted",
+                spec.name
+            );
+            assert_eq!(
+                case.get("n_inputs").unwrap().as_u64().unwrap() as usize,
+                spec.n_inputs,
+                "{}: n_inputs drifted",
+                spec.name
+            );
+            case.get("logits")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|row| {
+                    row.as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|z| z.as_i64().unwrap() as i32)
+                        .collect()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Random packed images of width `n_in`, drawn from one PRNG stream.
+pub fn random_images(rng: &mut Xoshiro256, n_in: usize, count: usize) -> Vec<Packed> {
+    (0..count)
+        .map(|_| {
+            let bits: Vec<u8> = (0..n_in).map(|_| rng.bool() as u8).collect();
+            Packed {
+                words: pack_bits_u64(&bits),
+                n_bits: n_in,
+            }
+        })
+        .collect()
+}

@@ -3,11 +3,13 @@
 //! these run on the synthetic fallback when `make artifacts` has not run;
 //! only the PJRT test needs real artifacts (and skips without them).
 
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
 use bnn_fpga::coordinator::{
-    BatcherConfig, Coordinator, Kernel, NativeBackend, PjrtBackend, Router, SimBackend, WorkerPool,
+    BatcherConfig, Coordinator, InferBackend, Kernel, NativeBackend, PjrtBackend, Router,
+    SimBackend, WorkerPool,
 };
 use bnn_fpga::data::Dataset;
 use bnn_fpga::runtime::Engine;
@@ -132,14 +134,7 @@ fn worker_pool_scales_without_changing_results() {
     let images: Vec<_> = (0..60).map(|i| ds.images[i % ds.len()].clone()).collect();
     let expected: Vec<Vec<i32>> = images.iter().map(|img| model.logits(&img.words)).collect();
     for workers in [1usize, 2, 4] {
-        for kernel in [
-            Kernel::Scalar,
-            Kernel::Blocked { block_rows: 16 },
-            Kernel::Tiled {
-                block_rows: 16,
-                tile_imgs: 4,
-            },
-        ] {
+        for kernel in Kernel::registry_with(16, 4) {
             let pool = WorkerPool::native(
                 &model,
                 workers,
@@ -212,6 +207,165 @@ fn worker_pool_concurrent_submitters_no_loss_no_mixup() {
         .map(|m| m.completed.load(std::sync::atomic::Ordering::Relaxed))
         .sum();
     assert_eq!(per, 200);
+}
+
+#[test]
+fn mixed_kernel_pool_burst_no_loss_and_metrics_balance() {
+    // Concurrency stress (ISSUE 3): one worker per registered kernel tier
+    // — scalar, blocked, tiled and the runtime-dispatched SIMD path all
+    // serving the same pool — under a multi-thread burst.  Whatever shard
+    // a request lands on, the response must carry *that* request's logits
+    // (no loss, no misrouting), every request id must be answered exactly
+    // once, and the pool's books must balance:
+    // `submitted == completed + rejected`.
+    let (model, ds) = setup();
+    let replicas: Vec<Arc<dyn InferBackend>> = Kernel::registry()
+        .into_iter()
+        .map(|k| -> Arc<dyn InferBackend> {
+            Arc::new(NativeBackend::with_kernel(model.clone(), k))
+        })
+        .collect();
+    let n_workers = replicas.len();
+    let pool = Arc::new(
+        WorkerPool::start(
+            replicas,
+            BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(100),
+            },
+        )
+        .unwrap(),
+    );
+    assert_eq!(pool.workers(), n_workers);
+
+    let threads = 8u64;
+    let per_thread = 40usize;
+    let mut joins = Vec::new();
+    for t in 0..threads {
+        let pool = pool.clone();
+        let ds = ds.clone();
+        let model = model.clone();
+        joins.push(std::thread::spawn(move || {
+            // burst-submit everything first, then collect — maximizes
+            // in-flight overlap across the mixed-kernel shards
+            let mut pending = Vec::with_capacity(per_thread);
+            for i in 0..per_thread {
+                let idx = ((t as usize) * per_thread + i) % ds.len();
+                let img = ds.images[idx].clone();
+                let (id, rx) = pool.submit(img.clone()).unwrap();
+                pending.push((id, rx, img));
+            }
+            let mut ids = Vec::with_capacity(per_thread);
+            for (id, rx, img) in pending {
+                let r = rx.recv().expect("response lost");
+                assert_eq!(r.id, id, "response misrouted across requests");
+                assert_eq!(
+                    r.logits,
+                    model.logits(&img.words),
+                    "thread {t}: logits belong to a different image"
+                );
+                assert_eq!(r.backend, "native");
+                ids.push(id);
+            }
+            ids
+        }));
+    }
+    let mut all_ids: Vec<u64> = Vec::new();
+    for j in joins {
+        all_ids.extend(j.join().unwrap());
+    }
+    let total = threads as usize * per_thread;
+    all_ids.sort_unstable();
+    all_ids.dedup();
+    assert_eq!(all_ids.len(), total, "duplicate or missing request ids");
+
+    // inject size-mismatched images (backend reject path) once the burst
+    // has drained, one at a time so each failed batch is its own
+    let bad_count = 3u64;
+    for _ in 0..bad_count {
+        let bad = bnn_fpga::bnn::Packed::from_bits(&vec![1u8; 5]);
+        assert!(pool.infer(bad).is_err(), "mismatched image must error");
+    }
+
+    let m = &pool.metrics;
+    let submitted = m.submitted.load(Ordering::Relaxed);
+    let completed = m.completed.load(Ordering::Relaxed);
+    let rejected = m.rejected.load(Ordering::Relaxed);
+    assert_eq!(submitted, total as u64 + bad_count);
+    assert_eq!(completed, total as u64);
+    assert_eq!(rejected, bad_count);
+    assert_eq!(
+        submitted,
+        completed + rejected,
+        "pool books must balance: submitted == completed + rejected"
+    );
+    // the per-worker ledgers agree with the aggregate
+    let per_completed: u64 = pool
+        .worker_metrics
+        .iter()
+        .map(|w| w.completed.load(Ordering::Relaxed))
+        .sum();
+    let per_rejected: u64 = pool
+        .worker_metrics
+        .iter()
+        .map(|w| w.rejected.load(Ordering::Relaxed))
+        .sum();
+    assert_eq!(per_completed, completed);
+    assert_eq!(per_rejected, rejected);
+    // Arc-held pool: workers join on Drop
+}
+
+#[test]
+fn coordinator_burst_metrics_balance() {
+    // Same accounting contract on the single-queue coordinator: a
+    // concurrent burst plus backend-rejected stragglers must leave
+    // `submitted == completed + rejected`.
+    let (model, ds) = setup();
+    let coord = Arc::new(
+        Coordinator::start(
+            Arc::new(NativeBackend::with_kernel(model.clone(), Kernel::default())),
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(50),
+            },
+            2,
+        )
+        .unwrap(),
+    );
+    let mut joins = Vec::new();
+    for t in 0..6u64 {
+        let coord = coord.clone();
+        let ds = ds.clone();
+        let model = model.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut pending = Vec::new();
+            for i in 0..30usize {
+                let img = ds.images[((t as usize) * 30 + i) % ds.len()].clone();
+                let (id, rx) = coord.submit(img.clone()).unwrap();
+                pending.push((id, rx, img));
+            }
+            for (id, rx, img) in pending {
+                let r = rx.recv().expect("response lost");
+                assert_eq!(r.id, id);
+                assert_eq!(r.logits, model.logits(&img.words), "thread {t}");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let bad = bnn_fpga::bnn::Packed::from_bits(&vec![0u8; 9]);
+    assert!(coord.infer(bad).is_err());
+    let submitted = coord.metrics.submitted.load(Ordering::Relaxed);
+    let completed = coord.metrics.completed.load(Ordering::Relaxed);
+    let rejected = coord.metrics.rejected.load(Ordering::Relaxed);
+    assert_eq!(completed, 180);
+    assert_eq!(
+        submitted,
+        completed + rejected,
+        "coordinator books must balance"
+    );
+    // Arc-held coordinator: workers join on Drop
 }
 
 #[test]

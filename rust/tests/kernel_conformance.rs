@@ -1,0 +1,229 @@
+//! Kernel-conformance suite: golden vectors + differential fuzzing.
+//!
+//! The contract every kernel tier must hold (ISSUE 3): **bit-identical
+//! logits** to the scalar semantics reference and to the cycle-accurate
+//! FPGA simulator, on every input.  Two instruments pin it:
+//!
+//! * **Golden vectors** — committed expected logits
+//!   (`tests/golden/golden_vectors.json`) for fixed-seed synthetic models
+//!   and inputs (see `common::CASES`), so cross-platform or cross-PR drift
+//!   — a PRNG change, a packing change, an optimization-dependent kernel
+//!   divergence — fails loudly against values that cannot silently move.
+//!   Regenerate deliberately with the ignored test below or
+//!   `python/tools/gen_golden_vectors.py` (both emit byte-identical JSON).
+//! * **Differential fuzzing** — randomized layer shapes, edge widths,
+//!   batch ladders and tile shapes, with every kernel enumerated from
+//!   [`Kernel::registry_with`] (never hand-listed) and every [`SimdLevel`]
+//!   forced explicitly, so the vectorized and fallback paths are both
+//!   exercised on whatever host runs the suite.
+//!
+//! The CI matrix re-runs all of this with `BNN_FORCE_SCALAR=1` (pinning
+//! the SIMD tier to its portable fallback on SIMD hosts) and runs the
+//! golden test under `--release` to catch optimization-dependent drift.
+
+mod common;
+
+use bnn_fpga::bnn::model::random_model;
+use bnn_fpga::bnn::packing::{
+    pack_bits_u64, words_u64, xnor_popcount_z, xnor_popcount_z_simd_at, SimdLevel,
+};
+use bnn_fpga::coordinator::{InferBackend, Kernel, NativeBackend, SimBackend};
+use bnn_fpga::sim::{MemStyle, SimConfig};
+use bnn_fpga::util::prng::Xoshiro256;
+use bnn_fpga::util::proptest_lite::{gens, Runner};
+
+/// Golden gate #1: the committed logits are exactly what the scalar
+/// semantics reference computes from the pinned seeds.  A failure here
+/// means the *reference itself* moved (PRNG, packing, model builder) —
+/// which must be a deliberate, fixture-regenerating change, never an
+/// accident.
+#[test]
+fn golden_fixture_matches_scalar_reference() {
+    let golden = common::load_golden_logits();
+    for (spec, want) in common::CASES.iter().zip(&golden) {
+        let got = spec.scalar_logits();
+        assert_eq!(
+            &got, want,
+            "{}: scalar reference drifted from the committed golden vectors",
+            spec.name
+        );
+    }
+}
+
+/// Golden gate #2: every registered kernel tier reproduces the committed
+/// logits exactly, through the same backend path serving uses.
+#[test]
+fn every_kernel_reproduces_golden_vectors() {
+    let golden = common::load_golden_logits();
+    for (spec, want) in common::CASES.iter().zip(&golden) {
+        let model = spec.model();
+        let inputs = spec.inputs();
+        // default shapes plus deliberately awkward ones (unaligned with
+        // the 4-row quad / 2-image pair / layer widths)
+        for (block, tile) in [(16usize, 8usize), (3, 2), (5, 3)] {
+            for kernel in Kernel::registry_with(block, tile) {
+                let backend = NativeBackend::with_kernel(model.clone(), kernel);
+                let got = backend.infer_logits(&inputs).unwrap();
+                assert_eq!(
+                    &got, want,
+                    "{}: kernel {kernel:?} diverged from the golden vectors",
+                    spec.name
+                );
+            }
+        }
+    }
+}
+
+/// Golden gate #3: the cycle-accurate FPGA simulator reproduces the
+/// committed logits too — the golden vectors pin hardware semantics, not
+/// just the software kernels.
+#[test]
+fn fpga_sim_reproduces_golden_vectors() {
+    let golden = common::load_golden_logits();
+    for (spec, want) in common::CASES.iter().zip(&golden) {
+        let model = spec.model();
+        let sim = SimBackend::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap();
+        let got = sim.infer_logits(&spec.inputs()).unwrap();
+        assert_eq!(
+            &got, want,
+            "{}: fpga-sim diverged from the golden vectors",
+            spec.name
+        );
+    }
+}
+
+/// The committed file is byte-for-byte the canonical serialization of the
+/// current reference — catches a stale fixture (or a writer divergence
+/// between the Python generator and the Rust regeneration path) even when
+/// the logits happen to still match.
+#[test]
+fn fixture_file_is_canonical() {
+    let logits: Vec<_> = common::CASES.iter().map(|s| s.scalar_logits()).collect();
+    let want = common::fixture_text(&logits);
+    let got = std::fs::read_to_string(common::golden_path()).expect("fixture readable");
+    assert_eq!(
+        got, want,
+        "golden_vectors.json is stale or non-canonical; regenerate with \
+         `cargo test --release --test kernel_conformance regenerate -- --ignored`"
+    );
+}
+
+/// The regeneration path (satellite): rewrite the fixture from the scalar
+/// reference.  Ignored so it only runs deliberately:
+/// `cargo test --release --test kernel_conformance regenerate -- --ignored`
+#[test]
+#[ignore = "rewrites tests/golden/golden_vectors.json from the scalar reference"]
+fn regenerate_golden_vectors() {
+    let logits: Vec<_> = common::CASES.iter().map(|s| s.scalar_logits()).collect();
+    let text = common::fixture_text(&logits);
+    let path = common::golden_path();
+    std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+    std::fs::write(&path, &text).unwrap();
+    // round-trip sanity: what we wrote is what the loader sees
+    assert_eq!(common::load_golden_logits(), logits);
+    eprintln!("regenerated {}", path.display());
+}
+
+/// Differential fuzz (satellite): random layer shapes, batch sizes and
+/// tile shapes — every registered kernel against the per-image scalar
+/// reference, and the scalar reference against the cycle-accurate
+/// simulator.  Kernels come from the registry, so a future tier is pulled
+/// in automatically.
+#[test]
+fn kernel_registry_differential_fuzz() {
+    Runner::new("kernel-registry-differential").cases(10).run(
+        &gens::Pair(gens::U64(0..=1u64 << 40), gens::Pair(gens::U64(1..=40), gens::U64(1..=12))),
+        |(seed, (block, tile))| {
+            let (block, tile) = (*block as usize, *tile as usize);
+            let mut rng = Xoshiro256::new(*seed);
+            // random 2–3-layer nets over word-straddling widths
+            let n_layers = 2 + rng.below(2) as usize;
+            let mut dims = Vec::with_capacity(n_layers + 1);
+            for _ in 0..=n_layers {
+                dims.push(1 + rng.below(130) as usize);
+            }
+            let model = random_model(&dims, rng.next_u64());
+            let mut sim = None; // built lazily: the sim pays full cycle cost
+            [1usize, 2, 7, 16].iter().all(|&batch| {
+                let images = common::random_images(&mut rng, dims[0], batch);
+                let scalar: Vec<Vec<i32>> =
+                    images.iter().map(|img| model.logits(&img.words)).collect();
+                // every registered kernel tier through the backend path
+                let kernels_ok = Kernel::registry_with(block, tile).into_iter().all(|kernel| {
+                    let backend = NativeBackend::with_kernel(model.clone(), kernel);
+                    backend.infer_logits(&images).unwrap() == scalar
+                });
+                // the simulator on the first batch only (enough to pin the
+                // model; keeps the fuzz loop fast)
+                let sim_ok = if batch == 1 {
+                    let s = sim.get_or_insert_with(|| {
+                        SimBackend::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap()
+                    });
+                    s.infer_logits(&images).unwrap() == scalar
+                } else {
+                    true
+                };
+                kernels_ok && sim_ok
+            })
+        },
+    );
+}
+
+/// Every [`SimdLevel`] — the vectorized paths *and* the forced portable
+/// fallback — conforms to the scalar XNOR-popcount identity over random
+/// shapes.  This pins the `BNN_FORCE_SCALAR=1` path without needing the
+/// env var, and the AVX2/NEON paths on hosts that have them.
+#[test]
+fn simd_levels_differential_fuzz() {
+    Runner::new("simd-levels-differential").cases(24).run(
+        &gens::Pair(gens::BitVec(1..=300), gens::Pair(gens::U64(1..=6), gens::U64(1..=9))),
+        |(bits, (n_imgs, n_rows))| {
+            let n = bits.len();
+            let wpr = words_u64(n);
+            let (n_imgs, n_rows) = (*n_imgs as usize, *n_rows as usize);
+            let mut rng = Xoshiro256::new(n as u64 * 977 + n_imgs as u64 * 31 + n_rows as u64);
+            let mut imgs = pack_bits_u64(bits);
+            for _ in 1..n_imgs {
+                let b: Vec<u8> = (0..n).map(|_| rng.bool() as u8).collect();
+                imgs.extend(pack_bits_u64(&b));
+            }
+            let mut rows = Vec::new();
+            for _ in 0..n_rows {
+                let b: Vec<u8> = (0..n).map(|_| rng.bool() as u8).collect();
+                rows.extend(pack_bits_u64(&b));
+            }
+            SimdLevel::ALL.iter().all(|&level| {
+                let mut got = vec![0i32; n_imgs * n_rows];
+                xnor_popcount_z_simd_at(level, &imgs, n_imgs, &rows, wpr, n, &mut got, n_rows);
+                (0..n_imgs).all(|i| {
+                    (0..n_rows).all(|r| {
+                        let want = xnor_popcount_z(
+                            &imgs[i * wpr..(i + 1) * wpr],
+                            &rows[r * wpr..(r + 1) * wpr],
+                            n,
+                        );
+                        got[i * n_rows + r] == want
+                    })
+                })
+            })
+        },
+    );
+}
+
+/// The fixture deliberately covers the widths that break naive kernels:
+/// sub-word, word-straddling, exact-multiple and the paper's own shapes.
+#[test]
+fn golden_cases_cover_edge_widths() {
+    let all_dims: Vec<usize> = common::CASES
+        .iter()
+        .flat_map(|c| c.dims.iter().copied())
+        .collect();
+    for needed in [63usize, 64, 65, 37, 784] {
+        assert!(
+            all_dims.contains(&needed),
+            "golden cases no longer cover width {needed}"
+        );
+    }
+    let total: usize = common::CASES.iter().map(|c| c.n_inputs).sum();
+    assert!(total >= 32, "golden fixture shrank below 32 inputs ({total})");
+}
