@@ -10,6 +10,7 @@
 //! deterministic synthetic model + dataset (accuracy is chance, but every
 //! mechanism — packing, kernels, simulator, display — behaves identically).
 
+use bnn_fpga::coordinator::{BatcherConfig, Engine, InferOptions, Kernel};
 use bnn_fpga::data::synth;
 use bnn_fpga::sim::{sevenseg, Accelerator, MemStyle, SimConfig};
 
@@ -73,7 +74,39 @@ fn main() -> anyhow::Result<()> {
         bnn_fpga::bnn::simd_level().name()
     );
 
-    // 3. The same image through the cycle-accurate FPGA simulator at the
+    // 3. Serving: Engine::builder() is the one construction path for every
+    //    topology.  submit() returns a Ticket (no channel internals);
+    //    per-request InferOptions select top-k / logits-on-off.
+    let engine = Engine::builder()
+        .native(&model)
+        .kernel(Kernel::default())
+        .workers(2)
+        .batcher(BatcherConfig::default())
+        .queue_cap(10_000)
+        .build()?;
+    let ticket = engine.submit(ds.images[0].clone())?;
+    println!("serving       : submitted request {} through the engine", ticket.id());
+    let resp = ticket.wait()?;
+    assert_eq!(resp.digit as usize, model.predict(&ds.images[0].words));
+    println!(
+        "               ticket resolved: digit {} in {} µs (batch of {})",
+        resp.digit,
+        resp.latency_ns / 1000,
+        resp.batch_size
+    );
+    let top3 = engine.infer_with(
+        ds.images[1].clone(),
+        InferOptions::digits_only().with_top_k(3),
+    )?;
+    println!(
+        "               top-3 for the next digit: {:?} (no logits copied: {})",
+        top3.top_k,
+        top3.logits.is_empty()
+    );
+    println!("               {}", engine.summary_line());
+    engine.shutdown();
+
+    // 4. The same image through the cycle-accurate FPGA simulator at the
     //    paper's chosen design point (64× parallelism, BRAM weights).
     let mut acc = Accelerator::new(&model, SimConfig::new(64, MemStyle::Bram))?;
     let r = acc.run_image(&ds.images[0]);
@@ -86,11 +119,11 @@ fn main() -> anyhow::Result<()> {
         r.activity.xnor_ops, r.activity.bram_row_reads, r.breakdown.argmax
     );
 
-    // 4. Seven-segment display output, as the Nexys A7 board would show it.
+    // 5. Seven-segment display output, as the Nexys A7 board would show it.
     println!("seven-segment display (active-low 0b{:07b}):", r.sevenseg);
     print!("{}", sevenseg::ascii(r.sevenseg));
 
-    // 5. The synthetic generator also renders demo digits directly:
+    // 6. The synthetic generator also renders demo digits directly:
     let demo = synth::generate_dataset(1, 42);
     println!("\na synthetic digit (label {}):", demo.labels[0]);
     print!("{}", synth::ascii_digit(&demo.images[0]));

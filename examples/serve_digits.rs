@@ -24,11 +24,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use bnn_fpga::cli::args::Args;
-use bnn_fpga::coordinator::{
-    BatcherConfig, Coordinator, InferService, Kernel, NativeBackend, PjrtBackend, WorkerPool,
-};
+use bnn_fpga::coordinator::{BatcherConfig, Engine, InferService, Kernel, PjrtBackend};
 use bnn_fpga::data::{synth, Dataset};
-use bnn_fpga::runtime::Engine;
+use bnn_fpga::runtime::Engine as PjrtRuntime;
 use bnn_fpga::sim::{MemStyle, SimConfig};
 use bnn_fpga::util::stats::LatencyHistogram;
 use bnn_fpga::util::table::{Align, Table};
@@ -107,71 +105,73 @@ fn main() -> anyhow::Result<()> {
         max_wait: Duration::from_micros(100),
     };
 
-    // 1. Baseline: one worker, one shared queue, scalar kernel.
+    // 1. Baseline: one worker, one shared queue, scalar kernel — every
+    //    topology below comes from the same Engine::builder() call chain.
     {
-        let coord = Coordinator::start(
-            Arc::new(NativeBackend::new(model.clone())),
-            batcher,
-            1,
-        )?;
-        let (correct, wall) = run_load(n_requests, &coord)?;
+        let engine = Engine::builder()
+            .native(&model)
+            .kernel(Kernel::Scalar)
+            .workers(1)
+            .batcher(batcher)
+            .build()?;
+        let (correct, wall) = run_load(n_requests, &engine)?;
         add_row(
             "native scalar",
             1,
             n_requests,
             correct,
             wall,
-            coord.metrics.latency_snapshot(),
-            coord.metrics.mean_batch_size(),
+            engine.latency_snapshot(),
+            engine.metrics().mean_batch_size(),
         );
-        coord.shutdown();
+        engine.shutdown();
     }
 
     // 2. The sharded worker pool with the per-image blocked kernel.
     {
-        let pool = WorkerPool::native(
-            &model,
-            workers,
-            Kernel::Blocked { block_rows },
-            batcher,
-        )?;
-        let (correct, wall) = run_load(n_requests, &pool)?;
+        let engine = Engine::builder()
+            .native(&model)
+            .kernel(Kernel::Blocked { block_rows })
+            .workers(workers)
+            .batcher(batcher)
+            .build()?;
+        let (correct, wall) = run_load(n_requests, &engine)?;
         add_row(
             &format!("native blocked x{workers}"),
             workers,
             n_requests,
             correct,
             wall,
-            pool.latency_snapshot(),
-            pool.metrics.mean_batch_size(),
+            engine.latency_snapshot(),
+            engine.metrics().mean_batch_size(),
         );
-        pool.shutdown();
+        engine.shutdown();
     }
 
     // 3. The weight-stationary batch-tiled kernel — the serving hot path:
     //    each weight-row block is loaded once per tile of images.
     let per_worker_report = {
-        let pool = WorkerPool::native(
-            &model,
-            workers,
-            Kernel::Tiled {
+        let engine = Engine::builder()
+            .native(&model)
+            .kernel(Kernel::Tiled {
                 block_rows,
                 tile_imgs,
-            },
-            batcher,
-        )?;
-        let (correct, wall) = run_load(n_requests, &pool)?;
+            })
+            .workers(workers)
+            .batcher(batcher)
+            .build()?;
+        let (correct, wall) = run_load(n_requests, &engine)?;
         add_row(
             &format!("native tiled x{workers}"),
             workers,
             n_requests,
             correct,
             wall,
-            pool.latency_snapshot(),
-            pool.metrics.mean_batch_size(),
+            engine.latency_snapshot(),
+            engine.metrics().mean_batch_size(),
         );
-        let report = pool.per_worker_report();
-        pool.shutdown();
+        let report = engine.per_worker_report().unwrap_or_default();
+        engine.shutdown();
         report
     };
 
@@ -179,82 +179,84 @@ fn main() -> anyhow::Result<()> {
     //    the host reports them, the tiled kernel otherwise (or under
     //    BNN_FORCE_SCALAR=1) — logits are bit-identical either way.
     {
-        let pool = WorkerPool::native(
-            &model,
-            workers,
-            Kernel::Simd {
+        let engine = Engine::builder()
+            .native(&model)
+            .kernel(Kernel::Simd {
                 block_rows,
                 tile_imgs,
-            },
-            batcher,
-        )?;
-        let (correct, wall) = run_load(n_requests, &pool)?;
+            })
+            .workers(workers)
+            .batcher(batcher)
+            .build()?;
+        let (correct, wall) = run_load(n_requests, &engine)?;
         add_row(
             &format!("native simd[{}] x{workers}", bnn::simd_level().name()),
             workers,
             n_requests,
             correct,
             wall,
-            pool.latency_snapshot(),
-            pool.metrics.mean_batch_size(),
+            engine.latency_snapshot(),
+            engine.metrics().mean_batch_size(),
         );
-        pool.shutdown();
+        engine.shutdown();
     }
 
-    // 5. PJRT over the AOT artifact ladder, when runtime + artifacts exist.
-    match Engine::load(&dir) {
-        Ok(engine) => {
-            let engine = Arc::new(engine);
-            println!("PJRT platform: {}", engine.platform());
-            engine.warm("bnn")?; // compile the artifact ladder up front
-            let coord = Coordinator::start(
-                Arc::new(PjrtBackend::new(engine)?),
-                BatcherConfig {
+    // 5. PJRT over the AOT artifact ladder, when runtime + artifacts exist
+    //    — one shared backend behind a single queue (the PJRT engine
+    //    serializes dispatch; PJRT-CPU parallelizes inside).
+    match PjrtRuntime::load(&dir) {
+        Ok(runtime) => {
+            let runtime = Arc::new(runtime);
+            println!("PJRT platform: {}", runtime.platform());
+            runtime.warm("bnn")?; // compile the artifact ladder up front
+            let engine = Engine::builder()
+                .shared(Arc::new(PjrtBackend::new(runtime)?))
+                .workers(1)
+                .batcher(BatcherConfig {
                     max_batch: 128,
                     max_wait: Duration::from_micros(300),
-                },
-                1, // the engine serializes dispatch; PJRT-CPU parallelizes inside
-            )?;
-            let (correct, wall) = run_load(n_requests, &coord)?;
+                })
+                .build()?;
+            let (correct, wall) = run_load(n_requests, &engine)?;
             add_row(
                 "pjrt",
                 1,
                 n_requests,
                 correct,
                 wall,
-                coord.metrics.latency_snapshot(),
-                coord.metrics.mean_batch_size(),
+                engine.latency_snapshot(),
+                engine.metrics().mean_batch_size(),
             );
-            coord.shutdown();
+            engine.shutdown();
         }
         Err(e) => println!("pjrt backend skipped: {e:#}"),
     }
 
     // 6. A pool of cycle-accurate simulator replicas (deliberately slow —
-    //    each request pays the full simulated hardware latency).
+    //    each request pays the full simulated hardware latency; the builder
+    //    clamps max_batch to the hardware's single-image limit).
     {
         let sim_workers = workers.min(2);
-        let pool = WorkerPool::fpga_sim(
-            &model,
-            sim_workers,
-            SimConfig::new(64, MemStyle::Bram),
-            BatcherConfig {
-                max_batch: 1, // the hardware is single-image
+        let engine = Engine::builder()
+            .fpga_sim(&model, SimConfig::new(64, MemStyle::Bram))
+            .workers(sim_workers)
+            .batcher(BatcherConfig {
+                max_batch: 1,
                 max_wait: Duration::from_micros(10),
-            },
-        )?;
+            })
+            .build()?;
         let n = n_requests.min(300);
-        let (correct, wall) = run_load(n, &pool)?;
+        let (correct, wall) = run_load(n, &engine)?;
         add_row(
             &format!("fpga-sim x{sim_workers}"),
             sim_workers,
             n,
             correct,
             wall,
-            pool.latency_snapshot(),
-            pool.metrics.mean_batch_size(),
+            engine.latency_snapshot(),
+            engine.metrics().mean_batch_size(),
         );
-        pool.shutdown();
+        engine.shutdown();
     }
 
     table.print();

@@ -19,8 +19,8 @@ use std::time::{Duration, Instant};
 use std::collections::BTreeMap;
 
 use bnn_fpga::bnn::{DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS};
-use bnn_fpga::coordinator::{BatcherConfig, Coordinator, Kernel, NativeBackend, WorkerPool};
-use bnn_fpga::runtime::Engine;
+use bnn_fpga::coordinator::{BatcherConfig, Engine, Kernel};
+use bnn_fpga::runtime::Engine as PjrtRuntime;
 use bnn_fpga::sim::{Accelerator, MemStyle, SimConfig};
 use bnn_fpga::util::bench::{from_args, BenchResult};
 use bnn_fpga::util::json::{obj, Json};
@@ -165,7 +165,7 @@ fn main() {
 
     // 6. PJRT dispatch (batch-1 artifact) — skipped when the runtime or the
     //    artifacts are unavailable
-    match Engine::load(&dir) {
+    match PjrtRuntime::load(&dir) {
         Ok(engine) => {
             let engine = Arc::new(engine);
             engine.prepare("bnn_b1").unwrap();
@@ -176,20 +176,21 @@ fn main() {
         Err(e) => println!("pjrt bench skipped: {e:#}\n"),
     }
 
-    // 7. coordinator round trip (queue + batch + native execute)
+    // 7. engine round trip (queue + batch + native execute)
     {
-        let coord = Coordinator::start(
-            Arc::new(NativeBackend::new(model.clone())),
-            BatcherConfig {
+        let engine = Engine::builder()
+            .native(&model)
+            .kernel(Kernel::Scalar)
+            .workers(1)
+            .batcher(BatcherConfig {
                 max_batch: 1,
                 max_wait: Duration::from_micros(1),
-            },
-            1,
-        )
-        .unwrap();
-        let r = bench.run("coord-rt", || coord.infer(img.clone()).unwrap().digit);
-        add("coordinator round trip (b=1)", r);
-        coord.shutdown();
+            })
+            .build()
+            .unwrap();
+        let r = bench.run("coord-rt", || engine.infer(img.clone()).unwrap().digit);
+        add("engine round trip (b=1)", r);
+        engine.shutdown();
     }
 
     t.print();
@@ -243,16 +244,16 @@ fn main() {
                 },
             ),
         ] {
-            let pool = WorkerPool::native(
-                &model,
-                workers,
-                kernel,
-                BatcherConfig {
+            let pool = Engine::builder()
+                .native(&model)
+                .kernel(kernel)
+                .workers(workers)
+                .batcher(BatcherConfig {
                     max_batch: 64,
                     max_wait: Duration::from_micros(100),
-                },
-            )
-            .unwrap();
+                })
+                .build()
+                .unwrap();
             let input = images.clone(); // clone outside the timed window
             let t0 = Instant::now();
             pool.infer_many(input).unwrap();

@@ -18,9 +18,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use bnn_fpga::bnn::{DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS};
-use bnn_fpga::coordinator::{BatcherConfig, Kernel, WorkerPool};
+use bnn_fpga::coordinator::{BatcherConfig, Engine, Kernel};
 use bnn_fpga::estimate::gpu_model::GpuModel;
-use bnn_fpga::runtime::Engine;
+use bnn_fpga::runtime::Engine as PjrtRuntime;
 use bnn_fpga::sim::{Accelerator, MemStyle, SimConfig};
 use bnn_fpga::util::bench::Bench;
 use bnn_fpga::util::stats::Summary;
@@ -76,7 +76,7 @@ fn main() {
     ])
     .align(1, Align::Left);
 
-    let engine = match Engine::load(&dir) {
+    let engine = match PjrtRuntime::load(&dir) {
         Ok(e) => Some(Arc::new(e)),
         Err(e) => {
             println!("CPU (PJRT) column skipped: {e:#}\n");
@@ -193,16 +193,16 @@ fn main() {
         let images: Vec<_> = (0..n).map(|i| ds.images[i % ds.len()].clone()).collect();
         let mut base = 0.0f64;
         for workers in [1usize, 2, 4] {
-            let pool = WorkerPool::native(
-                &model,
-                workers,
-                Kernel::default(),
-                BatcherConfig {
+            let pool = Engine::builder()
+                .native(&model)
+                .kernel(Kernel::default())
+                .workers(workers)
+                .batcher(BatcherConfig {
                     max_batch: 64,
                     max_wait: Duration::from_micros(100),
-                },
-            )
-            .unwrap();
+                })
+                .build()
+                .unwrap();
             let input = images.clone(); // clone outside the timed window
             let t0 = Instant::now();
             pool.infer_many(input).unwrap();

@@ -17,9 +17,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::{
-    BatcherConfig, Coordinator, NativeBackend, PjrtBackend, SimBackend, WorkerPool,
-};
+use crate::coordinator::{BatcherConfig, Engine, NativeBackend, PjrtBackend, SimBackend};
 use crate::data::Dataset;
 use crate::estimate::{power, resources, timing};
 use crate::sim::{analytic_steps, Accelerator, MemStyle, SimConfig};
@@ -39,9 +37,9 @@ SUBCOMMANDS
   sweep      [--strict-clock]                          Table 1 sweep
   report     --parallelism P [--mem bram|lut]          §3.6-style report
   serve-demo [--backend ...] [--requests N] [--workers W] [--kernel scalar|blocked|tiled|simd]
-             [--block-rows B] [--tile-imgs T] [--max-batch B] [--config FILE]
+             [--block-rows B] [--tile-imgs T] [--max-batch B] [--queue-cap N] [--config FILE]
   serve      [--addr HOST:PORT] [--backend ...] [--workers W] [--kernel scalar|blocked|tiled|simd]
-             [--block-rows B] [--tile-imgs T] [--config FILE]
+             [--block-rows B] [--tile-imgs T] [--queue-cap N] [--config FILE]
   trace      [--image N] [--parallelism P] [--out trace.vcd]  VCD waveform
 
 Set BNN_FPGA_ARTIFACTS to override the artifacts directory (default ./artifacts).
@@ -71,17 +69,31 @@ fn tile_imgs_arg(args: &Args, default: usize) -> Result<usize> {
     Ok(t)
 }
 
-/// `--kernel scalar|blocked|tiled|simd` (default from `[coordinator]
-/// kernel`, "tiled" — the serving hot path — when no config is given),
-/// shaped by `--block-rows` / `--tile-imgs`.  `simd` runtime-dispatches to
-/// AVX2/NEON and falls back to the tiled kernel on hosts without them.
+/// `--kernel scalar|blocked|tiled|simd` overrides the config file's typed
+/// kernel; without the flag the file kernel is kept but re-shaped by the
+/// (possibly flag-overridden) `--block-rows` / `--tile-imgs`.  `simd`
+/// runtime-dispatches to AVX2/NEON and falls back to the tiled kernel on
+/// hosts without them.
 fn kernel_arg(
     args: &Args,
-    default: &str,
+    file_kernel: crate::coordinator::Kernel,
     block_rows: usize,
     tile_imgs: usize,
 ) -> Result<crate::coordinator::Kernel> {
-    crate::coordinator::Kernel::parse(&args.opt_or("kernel", default), block_rows, tile_imgs)
+    match args.opt("kernel") {
+        Some(name) => crate::coordinator::Kernel::parse(name, block_rows, tile_imgs),
+        None => Ok(file_kernel.with_shape(block_rows, tile_imgs)),
+    }
+}
+
+/// `--queue-cap N` (default from `[coordinator] queue_cap`): the engine's
+/// backpressure bound.
+fn queue_cap_arg(args: &Args, default: usize) -> Result<usize> {
+    let c = args.usize_or("queue-cap", default)?;
+    if c < 1 {
+        bail!("--queue-cap must be ≥ 1");
+    }
+    Ok(c)
 }
 
 /// `--config FILE` → [`crate::config::ServeConfig`]; defaults otherwise.
@@ -307,7 +319,8 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     let workers = args.usize_or("workers", file_cfg.workers)?;
     let block_rows = block_rows_arg(args, file_cfg.block_rows)?;
     let tile_imgs = tile_imgs_arg(args, file_cfg.tile_imgs)?;
-    let kernel = kernel_arg(args, &file_cfg.kernel, block_rows, tile_imgs)?;
+    let kernel = kernel_arg(args, file_cfg.kernel, block_rows, tile_imgs)?;
+    let queue_cap = queue_cap_arg(args, file_cfg.queue_cap)?;
     let cfg = BatcherConfig {
         max_batch: args.usize_or("max-batch", file_cfg.batcher.max_batch)?,
         max_wait: std::time::Duration::from_micros(
@@ -318,43 +331,44 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     let images: Vec<_> = (0..n).map(|i| ds.images[i % ds.len()].clone()).collect();
     let labels: Vec<_> = (0..n).map(|i| ds.labels[i % ds.len()]).collect();
 
-    // native and fpga-sim scale via per-worker replicas (WorkerPool); pjrt
-    // keeps the single-queue coordinator — the engine serializes dispatch
-    // and PJRT-CPU parallelizes internally.  Only the serving window is
-    // timed: construction and shutdown stay outside t0..wall.
-    let (responses, wall, summary, per_worker) = match args.opt_or("backend", "native").as_str() {
-        "native" => {
-            let pool = WorkerPool::native(&model, workers, kernel, cfg)?;
-            let t0 = std::time::Instant::now();
-            let r = pool.infer_many(images)?;
-            let wall = t0.elapsed();
-            let out = (r, wall, pool.summary_line(), Some(pool.per_worker_report()));
-            pool.shutdown();
-            out
-        }
+    // One construction path for every topology: native and fpga-sim scale
+    // via per-worker replicas (the sharded core); pjrt shares one backend
+    // behind a single queue — the PJRT engine serializes dispatch and
+    // PJRT-CPU parallelizes internally.
+    let engine = match args.opt_or("backend", "native").as_str() {
+        "native" => Engine::builder()
+            .native(&model)
+            .kernel(kernel)
+            .workers(workers)
+            .batcher(cfg)
+            .queue_cap(queue_cap)
+            .build()?,
         "fpga-sim" => {
             let sim_cfg = SimConfig::new(args.usize_or("parallelism", 64)?, mem_style(args)?);
-            let pool = WorkerPool::fpga_sim(&model, workers, sim_cfg, cfg)?;
-            let t0 = std::time::Instant::now();
-            let r = pool.infer_many(images)?;
-            let wall = t0.elapsed();
-            let out = (r, wall, pool.summary_line(), Some(pool.per_worker_report()));
-            pool.shutdown();
-            out
+            Engine::builder()
+                .fpga_sim(&model, sim_cfg)
+                .workers(workers)
+                .batcher(cfg)
+                .queue_cap(queue_cap)
+                .build()?
         }
-        "pjrt" => {
-            let backend: Arc<dyn crate::coordinator::InferBackend> =
-                Arc::new(PjrtBackend::new(Arc::new(crate::runtime::Engine::load(&dir)?))?);
-            let coord = Coordinator::start(backend, cfg, workers)?;
-            let t0 = std::time::Instant::now();
-            let r = coord.infer_many(images)?;
-            let wall = t0.elapsed();
-            let out = (r, wall, coord.metrics.summary_line(), None);
-            coord.shutdown();
-            out
-        }
+        "pjrt" => Engine::builder()
+            .shared(Arc::new(PjrtBackend::new(Arc::new(crate::runtime::Engine::load(&dir)?))?))
+            .workers(workers)
+            .batcher(cfg)
+            .queue_cap(queue_cap)
+            .build()?,
         other => bail!("unknown backend '{other}'"),
     };
+
+    // Only the serving window is timed: construction and shutdown stay
+    // outside t0..wall.
+    let t0 = std::time::Instant::now();
+    let responses = engine.infer_many(images)?;
+    let wall = t0.elapsed();
+    let summary = engine.summary_line();
+    let per_worker = engine.per_worker_report();
+    engine.shutdown();
 
     let correct = responses
         .iter()
@@ -399,42 +413,47 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers = args.usize_or("workers", file_cfg.workers)?;
     let block_rows = block_rows_arg(args, file_cfg.block_rows)?;
     let tile_imgs = tile_imgs_arg(args, file_cfg.tile_imgs)?;
-    let kernel = kernel_arg(args, &file_cfg.kernel, block_rows, tile_imgs)?;
+    let kernel = kernel_arg(args, file_cfg.kernel, block_rows, tile_imgs)?;
+    let queue_cap = queue_cap_arg(args, file_cfg.queue_cap)?;
     let backend_default = file_cfg
         .backends
         .first()
         .cloned()
         .unwrap_or_else(|| "native".to_string());
-    let server = match args.opt_or("backend", &backend_default).as_str() {
-        "native" => {
-            let pool = Arc::new(WorkerPool::native(&model, workers, kernel, file_cfg.batcher)?);
-            WireServer::start(&addr, pool)?
-        }
+    let engine = match args.opt_or("backend", &backend_default).as_str() {
+        "native" => Engine::builder()
+            .native(&model)
+            .kernel(kernel)
+            .workers(workers)
+            .batcher(file_cfg.batcher)
+            .queue_cap(queue_cap)
+            .build()?,
         "fpga-sim" => {
             let sim_cfg =
                 SimConfig::new(args.usize_or("parallelism", file_cfg.parallelism)?, mem_style(args)?);
-            let pool = Arc::new(WorkerPool::fpga_sim(
-                &model,
-                workers,
-                sim_cfg,
-                BatcherConfig {
-                    max_batch: 1, // the simulated hardware is single-image
-                    max_wait: std::time::Duration::from_micros(10),
-                },
-            )?);
-            WireServer::start(&addr, pool)?
+            // the simulated hardware is single-image; the builder clamps
+            // max_batch to the replica's limit of 1 automatically
+            Engine::builder()
+                .fpga_sim(&model, sim_cfg)
+                .workers(workers)
+                .batcher(file_cfg.batcher)
+                .queue_cap(queue_cap)
+                .build()?
         }
-        "pjrt" => {
-            let backend: Arc<dyn crate::coordinator::InferBackend> = Arc::new(PjrtBackend::new(
-                Arc::new(crate::runtime::Engine::load(&artifacts_dir())?),
-            )?);
-            let coord = Arc::new(Coordinator::start(backend, file_cfg.batcher, workers)?);
-            WireServer::start(&addr, coord)?
-        }
+        "pjrt" => Engine::builder()
+            .shared(Arc::new(PjrtBackend::new(Arc::new(crate::runtime::Engine::load(
+                &artifacts_dir(),
+            )?))?))
+            .workers(workers)
+            .batcher(file_cfg.batcher)
+            .queue_cap(queue_cap)
+            .build()?,
         other => bail!("unknown backend '{other}'"),
     };
+    let server = WireServer::start(&addr, Arc::new(engine))?;
     println!("wire-protocol server listening on {} (Ctrl-C to stop)", server.addr);
-    println!("frame: 0xB1 len16 payload[98] -> 0xB2 digit status latency_us32");
+    println!("v1 frame: 0xB1 len16 payload[98] -> 0xB2 digit status latency_us32");
+    println!("v2 frame: 0xC1 features top_k id64 n_images16 n_bits32 payloads -> 0xC2 … (batched, echoes ids)");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(5));
         println!("served: {}", server.served.load(std::sync::atomic::Ordering::Relaxed));

@@ -10,7 +10,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::BatcherConfig;
+use crate::coordinator::{BatcherConfig, Kernel, DEFAULT_QUEUE_CAP};
 use crate::sim::MemStyle;
 
 /// A parsed TOML-subset document: section → key → raw value.
@@ -107,7 +107,7 @@ pub struct ServeConfig {
     /// Backends to register: any of "native", "pjrt", "fpga-sim".
     pub backends: Vec<String>,
     /// Worker threads; for native backends each worker owns a model replica
-    /// (`coordinator::WorkerPool`).
+    /// (the sharded engine core, `coordinator::pool::WorkerPool`).
     pub workers: usize,
     /// Rows per pass of the blocked/tiled XNOR kernel (≥ 1); the software
     /// counterpart of the FPGA parallelism knob.
@@ -115,11 +115,17 @@ pub struct ServeConfig {
     /// Images per weight-stationary tile of the batch kernel (≥ 1) —
     /// `[coordinator] tile_imgs` / `--tile-imgs`.
     pub tile_imgs: usize,
-    /// Native kernel tier: `scalar|blocked|tiled|simd` (`[coordinator]
-    /// kernel` / `--kernel`); shaped by `block_rows`/`tile_imgs`.  `simd`
-    /// runtime-dispatches to AVX2/NEON and falls back to `tiled` on hosts
-    /// without them (or under `BNN_FORCE_SCALAR=1`).
-    pub kernel: String,
+    /// Native kernel tier, parsed from `[coordinator] kernel`
+    /// (`scalar|blocked|tiled|simd`) and shaped by `block_rows`/`tile_imgs`
+    /// at load time — a typo fails the config, and downstream code never
+    /// re-parses a string.  `simd` runtime-dispatches to AVX2/NEON and
+    /// falls back to `tiled` on hosts without them (or under
+    /// `BNN_FORCE_SCALAR=1`).
+    pub kernel: Kernel,
+    /// Backpressure bound (`[coordinator] queue_cap` / `--queue-cap`):
+    /// submits fail once this many requests are queued (per shard on the
+    /// sharded engine core).
+    pub queue_cap: usize,
     pub batcher: BatcherConfig,
     /// FPGA-sim backend parameters.
     pub parallelism: usize,
@@ -134,7 +140,8 @@ impl Default for ServeConfig {
             workers: 2,
             block_rows: crate::bnn::DEFAULT_BLOCK_ROWS,
             tile_imgs: crate::bnn::DEFAULT_TILE_IMGS,
-            kernel: "tiled".to_string(),
+            kernel: Kernel::default(),
+            queue_cap: DEFAULT_QUEUE_CAP,
             batcher: BatcherConfig::default(),
             parallelism: 64,
             mem_style: MemStyle::Bram,
@@ -182,10 +189,16 @@ impl ServeConfig {
             bail!("tile_imgs must be ≥ 1");
         }
         let tile_imgs = tile_imgs as usize;
-        let kernel = doc.str_or("coordinator", "kernel", &d.kernel)?;
-        // vocabulary check at load time so a typo fails the config, not
-        // the first serve request (the shape knobs are validated above)
-        crate::coordinator::Kernel::parse(&kernel, block_rows, tile_imgs)?;
+        // parse into the typed Kernel at load time so a typo fails the
+        // config, not the first serve request, and so every consumer gets
+        // the enum (the shape knobs are validated above)
+        let kernel_name = doc.str_or("coordinator", "kernel", d.kernel.name())?;
+        let kernel = Kernel::parse(&kernel_name, block_rows, tile_imgs)?;
+        let queue_cap = doc.int_or("coordinator", "queue_cap", d.queue_cap as i64)?;
+        if queue_cap < 1 {
+            bail!("queue_cap must be ≥ 1");
+        }
+        let queue_cap = queue_cap as usize;
         Ok(ServeConfig {
             artifacts_dir: doc.str_or("coordinator", "artifacts_dir", "artifacts")?.into(),
             backends,
@@ -193,6 +206,7 @@ impl ServeConfig {
             block_rows,
             tile_imgs,
             kernel,
+            queue_cap,
             batcher: BatcherConfig {
                 max_batch: doc.int_or("batcher", "max_batch", d.batcher.max_batch as i64)?
                     as usize,
@@ -226,6 +240,7 @@ workers = 4
 block_rows = 32
 tile_imgs = 8
 kernel = "simd"
+queue_cap = 5000
 artifacts_dir = "artifacts"
 
 [batcher]
@@ -244,7 +259,9 @@ mem_style = "bram"
         assert_eq!(cfg.workers, 4);
         assert_eq!(cfg.block_rows, 32);
         assert_eq!(cfg.tile_imgs, 8);
-        assert_eq!(cfg.kernel, "simd");
+        // the kernel arrives typed, already shaped by block_rows/tile_imgs
+        assert_eq!(cfg.kernel, Kernel::Simd { block_rows: 32, tile_imgs: 8 });
+        assert_eq!(cfg.queue_cap, 5000);
         assert_eq!(cfg.batcher.max_batch, 32);
         assert_eq!(cfg.batcher.max_wait, Duration::from_micros(150));
         assert_eq!(cfg.parallelism, 64);
@@ -258,15 +275,16 @@ mem_style = "bram"
         assert_eq!(cfg.workers, 2);
         assert_eq!(cfg.block_rows, crate::bnn::DEFAULT_BLOCK_ROWS);
         assert_eq!(cfg.tile_imgs, crate::bnn::DEFAULT_TILE_IMGS);
-        assert_eq!(cfg.kernel, "tiled");
+        assert_eq!(cfg.kernel, Kernel::default());
+        assert_eq!(cfg.queue_cap, DEFAULT_QUEUE_CAP);
     }
 
     #[test]
     fn every_registered_kernel_name_is_accepted() {
-        for k in crate::coordinator::Kernel::registry() {
+        for k in Kernel::registry() {
             let toml = format!("[coordinator]\nkernel = \"{}\"", k.name());
             let cfg = ServeConfig::from_toml(&Toml::parse(&toml).unwrap()).unwrap();
-            assert_eq!(cfg.kernel, k.name());
+            assert_eq!(cfg.kernel.name(), k.name());
         }
     }
 
@@ -312,6 +330,15 @@ mem_style = "bram"
         // an unknown kernel name fails at load time, not at first request
         assert!(ServeConfig::from_toml(
             &Toml::parse("[coordinator]\nkernel = \"warp\"").unwrap()
+        )
+        .is_err());
+        // degenerate queue caps fail at load time too
+        assert!(ServeConfig::from_toml(
+            &Toml::parse("[coordinator]\nqueue_cap = 0").unwrap()
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml(
+            &Toml::parse("[coordinator]\nqueue_cap = -5").unwrap()
         )
         .is_err());
     }

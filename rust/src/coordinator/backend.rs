@@ -86,12 +86,12 @@ impl Kernel {
         }
     }
 
-    /// Panics on a degenerate shape (both knobs must be ≥ 1).
-    pub fn assert_valid(&self) {
+    /// Reject a degenerate shape (both knobs must be ≥ 1).
+    pub fn validate(&self) -> Result<()> {
         match *self {
             Kernel::Scalar => {}
             Kernel::Blocked { block_rows } => {
-                assert!(block_rows >= 1, "block_rows must be ≥ 1");
+                anyhow::ensure!(block_rows >= 1, "block_rows must be ≥ 1");
             }
             Kernel::Tiled {
                 block_rows,
@@ -101,9 +101,35 @@ impl Kernel {
                 block_rows,
                 tile_imgs,
             } => {
-                assert!(block_rows >= 1, "block_rows must be ≥ 1");
-                assert!(tile_imgs >= 1, "tile_imgs must be ≥ 1");
+                anyhow::ensure!(block_rows >= 1, "block_rows must be ≥ 1");
+                anyhow::ensure!(tile_imgs >= 1, "tile_imgs must be ≥ 1");
             }
+        }
+        Ok(())
+    }
+
+    /// Panicking [`Self::validate`] (construction-time assertion).
+    pub fn assert_valid(&self) {
+        if let Err(e) = self.validate() {
+            panic!("{e}");
+        }
+    }
+
+    /// The same tier reshaped to new `block_rows`/`tile_imgs` knobs
+    /// (`Scalar` has no shape; `Blocked` ignores `tile_imgs`).  This is how
+    /// CLI flags re-shape a config-file kernel without re-parsing its name.
+    pub fn with_shape(self, block_rows: usize, tile_imgs: usize) -> Kernel {
+        match self {
+            Kernel::Scalar => Kernel::Scalar,
+            Kernel::Blocked { .. } => Kernel::Blocked { block_rows },
+            Kernel::Tiled { .. } => Kernel::Tiled {
+                block_rows,
+                tile_imgs,
+            },
+            Kernel::Simd { .. } => Kernel::Simd {
+                block_rows,
+                tile_imgs,
+            },
         }
     }
 
@@ -254,6 +280,14 @@ pub trait InferBackend: Send + Sync {
     /// Largest batch the backend can execute in one call.
     fn max_batch(&self) -> usize;
 
+    /// Exact input width (bits) this backend accepts, when it knows it.
+    /// Serving engines reject mismatched images **at submit time** so one
+    /// bad request can never fail a whole co-scheduled batch; `None`
+    /// defers the check to `infer_batch` (which must then error cleanly).
+    fn expected_bits(&self) -> Option<usize> {
+        None
+    }
+
     /// Classify a batch into the caller-owned `out` arena
     /// (`images.len()` rows × `n_classes` stride), reusing `scratch`.
     fn infer_batch(
@@ -324,6 +358,10 @@ impl InferBackend for NativeBackend {
 
     fn max_batch(&self) -> usize {
         usize::MAX
+    }
+
+    fn expected_bits(&self) -> Option<usize> {
+        Some(self.model.n_in())
     }
 
     fn infer_batch(
@@ -499,6 +537,7 @@ impl InferBackend for PjrtBackend {
 /// (exactly what the physical accelerator would do).
 pub struct SimBackend {
     acc: Mutex<Accelerator>,
+    n_in: usize,
     n_classes: usize,
     /// Simulated-hardware nanoseconds accumulated (distinct from wall time).
     pub simulated_ns: Mutex<f64>,
@@ -508,6 +547,7 @@ impl SimBackend {
     pub fn new(model: &BnnModel, cfg: SimConfig) -> Result<Self> {
         Ok(Self {
             acc: Mutex::new(Accelerator::new(model, cfg)?),
+            n_in: model.n_in(),
             n_classes: model.n_classes(),
             simulated_ns: Mutex::new(0.0),
         })
@@ -521,6 +561,10 @@ impl InferBackend for SimBackend {
 
     fn max_batch(&self) -> usize {
         1
+    }
+
+    fn expected_bits(&self) -> Option<usize> {
+        Some(self.n_in)
     }
 
     fn infer_batch(
@@ -621,6 +665,31 @@ mod tests {
             assert_eq!(parsed.name(), k.name());
         }
         assert!(Kernel::parse("gpu", 16, 4).is_err());
+    }
+
+    #[test]
+    fn with_shape_reshapes_without_changing_the_tier() {
+        for k in Kernel::registry_with(16, 4) {
+            let r = k.with_shape(32, 8);
+            assert_eq!(r.name(), k.name());
+            r.validate().unwrap();
+            match r {
+                Kernel::Scalar => {}
+                Kernel::Blocked { block_rows } => assert_eq!(block_rows, 32),
+                Kernel::Tiled {
+                    block_rows,
+                    tile_imgs,
+                }
+                | Kernel::Simd {
+                    block_rows,
+                    tile_imgs,
+                } => {
+                    assert_eq!((block_rows, tile_imgs), (32, 8));
+                }
+            }
+        }
+        assert!(Kernel::Blocked { block_rows: 0 }.validate().is_err());
+        assert!(Kernel::Tiled { block_rows: 4, tile_imgs: 0 }.validate().is_err());
     }
 
     #[test]

@@ -98,6 +98,7 @@ mod tests {
                 words: pack_bits_u64(&[0u8; 16]),
                 n_bits: 16,
             },
+            opts: crate::coordinator::InferOptions::default(),
             enqueued_at,
         }
     }

@@ -1,0 +1,640 @@
+//! The public serving API: [`Engine`] and its typed builder — the **one**
+//! construction path for every serving topology (PR 4 API redesign).
+//!
+//! ```
+//! use bnn_fpga::bnn::model::random_model;
+//! use bnn_fpga::bnn::Packed;
+//! use bnn_fpga::coordinator::{BatcherConfig, Engine, Kernel};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let model = random_model(&[784, 128, 64, 10], 1);
+//! let engine = Engine::builder()
+//!     .native(&model)
+//!     .kernel(Kernel::default())
+//!     .workers(4)
+//!     .batcher(BatcherConfig::default())
+//!     .queue_cap(50_000)
+//!     .build()?;
+//! let ticket = engine.submit(Packed::from_bits(&vec![1u8; 784]))?;
+//! let response = ticket.wait()?;
+//! assert!(response.digit < 10);
+//! engine.shutdown();
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The builder picks the right core for the backend spec:
+//!
+//! * [`EngineBuilder::native`] / [`EngineBuilder::fpga_sim`] /
+//!   [`EngineBuilder::replicas`] — the sharded [`WorkerPool`] (one queue
+//!   shard + one backend replica per worker, the scaling path);
+//! * [`EngineBuilder::shared`] — the single-queue [`Coordinator`] (N
+//!   workers draining one queue into **one** shared backend; right for
+//!   PJRT, whose engine serializes dispatch anyway).
+//!
+//! Both cores speak the same [`super::InferService`] contract, so
+//! everything above them — wire server, router, load drivers — is
+//! topology-blind.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::backend::{InferBackend, Kernel};
+use super::batcher::BatcherConfig;
+use super::metrics::Metrics;
+use super::pool::WorkerPool;
+use super::request::{InferOptions, InferResponse, Ticket};
+use super::server::{Coordinator, DEFAULT_QUEUE_CAP};
+use crate::bnn::packing::Packed;
+use crate::bnn::BnnModel;
+use crate::sim::SimConfig;
+use crate::util::stats::LatencyHistogram;
+
+/// What an [`Engine`] runs on.  Usually constructed through the named
+/// builder methods ([`EngineBuilder::native`] etc.); the `From` impls let
+/// `.backend(...)` accept a backend `Arc` or a replica list directly.
+pub enum BackendSpec {
+    /// One shared backend behind a single queue (the [`Coordinator`] core).
+    Shared(Arc<dyn InferBackend>),
+    /// Explicit per-worker replicas (the [`WorkerPool`] core; one worker
+    /// per replica).
+    Replicas(Vec<Arc<dyn InferBackend>>),
+    /// Native replicas cloned from this model, shaped by the builder's
+    /// [`Kernel`] (the [`WorkerPool`] core).
+    Native(BnnModel),
+    /// Cycle-accurate simulator replicas (the [`WorkerPool`] core) — the
+    /// software version of deploying several accelerator boards.
+    FpgaSim(BnnModel, SimConfig),
+}
+
+impl From<Arc<dyn InferBackend>> for BackendSpec {
+    fn from(backend: Arc<dyn InferBackend>) -> Self {
+        BackendSpec::Shared(backend)
+    }
+}
+
+impl From<Vec<Arc<dyn InferBackend>>> for BackendSpec {
+    fn from(replicas: Vec<Arc<dyn InferBackend>>) -> Self {
+        BackendSpec::Replicas(replicas)
+    }
+}
+
+impl From<&BnnModel> for BackendSpec {
+    fn from(model: &BnnModel) -> Self {
+        BackendSpec::Native(model.clone())
+    }
+}
+
+/// Typed builder for [`Engine`] — see the module docs for the shape of a
+/// typical call chain.  Defaults: 1 worker, [`Kernel::default`],
+/// [`BatcherConfig::default`], [`DEFAULT_QUEUE_CAP`].
+pub struct EngineBuilder {
+    spec: Option<BackendSpec>,
+    kernel: Kernel,
+    workers: Option<usize>,
+    batcher: BatcherConfig,
+    queue_cap: usize,
+}
+
+impl EngineBuilder {
+    fn new() -> Self {
+        Self {
+            spec: None,
+            kernel: Kernel::default(),
+            workers: None,
+            batcher: BatcherConfig::default(),
+            queue_cap: DEFAULT_QUEUE_CAP,
+        }
+    }
+
+    /// Set the backend spec directly (see the `From` impls on
+    /// [`BackendSpec`]); the named methods below are usually clearer.
+    pub fn backend(mut self, spec: impl Into<BackendSpec>) -> Self {
+        self.spec = Some(spec.into());
+        self
+    }
+
+    /// Native bit-packed replicas of `model`, one per worker, running the
+    /// builder's [`Self::kernel`].
+    pub fn native(self, model: &BnnModel) -> Self {
+        self.backend(BackendSpec::Native(model.clone()))
+    }
+
+    /// One shared backend behind a single queue (`workers` threads drain
+    /// it) — the PJRT topology.
+    pub fn shared(self, backend: Arc<dyn InferBackend>) -> Self {
+        self.backend(BackendSpec::Shared(backend))
+    }
+
+    /// Explicit per-worker replicas; the worker count is the list length.
+    pub fn replicas(self, replicas: Vec<Arc<dyn InferBackend>>) -> Self {
+        self.backend(BackendSpec::Replicas(replicas))
+    }
+
+    /// Cycle-accurate FPGA-simulator replicas, one per worker.
+    pub fn fpga_sim(self, model: &BnnModel, sim_cfg: SimConfig) -> Self {
+        self.backend(BackendSpec::FpgaSim(model.clone(), sim_cfg))
+    }
+
+    /// Native kernel tier (ignored by non-native specs).
+    pub fn kernel(mut self, kernel: Kernel) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Worker threads (sharded cores: also the replica count).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = Some(workers);
+        self
+    }
+
+    /// Dynamic-batching policy.
+    pub fn batcher(mut self, cfg: BatcherConfig) -> Self {
+        self.batcher = cfg;
+        self
+    }
+
+    /// Backpressure bound: submits fail once this many requests are queued
+    /// (per shard on the sharded core).
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = cap;
+        self
+    }
+
+    /// Validate and start the engine (spawns the worker threads).
+    pub fn build(self) -> Result<Engine> {
+        let spec = self.spec.ok_or_else(|| {
+            anyhow::anyhow!(
+                "Engine::builder() needs a backend: call .native(), .shared(), \
+                 .replicas() or .fpga_sim() before .build()"
+            )
+        })?;
+        anyhow::ensure!(self.queue_cap >= 1, "queue_cap must be ≥ 1");
+        self.batcher.validate()?;
+        self.kernel.validate()?;
+        if let Some(w) = self.workers {
+            anyhow::ensure!(w >= 1, "workers must be ≥ 1");
+        }
+        let workers = self.workers.unwrap_or(1);
+        let core = match spec {
+            BackendSpec::Native(model) => EngineCore::Sharded(WorkerPool::native(
+                &model,
+                workers,
+                self.kernel,
+                self.batcher,
+                self.queue_cap,
+            )?),
+            BackendSpec::FpgaSim(model, sim_cfg) => EngineCore::Sharded(WorkerPool::fpga_sim(
+                &model,
+                workers,
+                sim_cfg,
+                self.batcher,
+                self.queue_cap,
+            )?),
+            BackendSpec::Replicas(replicas) => {
+                if let Some(w) = self.workers {
+                    anyhow::ensure!(
+                        w == replicas.len(),
+                        "workers({w}) conflicts with {} explicit replicas — drop .workers() \
+                         or make the counts match",
+                        replicas.len()
+                    );
+                }
+                EngineCore::Sharded(WorkerPool::start(replicas, self.batcher, self.queue_cap)?)
+            }
+            BackendSpec::Shared(backend) => EngineCore::Single(Coordinator::start(
+                backend,
+                self.batcher,
+                workers,
+                self.queue_cap,
+            )?),
+        };
+        Ok(Engine { core })
+    }
+}
+
+enum EngineCore {
+    Single(Coordinator),
+    Sharded(WorkerPool),
+}
+
+/// A running serving engine (workers spawned, queue live).  Construct with
+/// [`Engine::builder`]; submit through [`Engine::submit`]/[`Engine::infer`]
+/// or the [`super::InferService`] trait.
+pub struct Engine {
+    core: EngineCore,
+}
+
+impl Engine {
+    /// Start building an engine.
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    /// Enqueue one image with explicit per-request options.
+    pub fn submit_with(&self, image: Packed, opts: InferOptions) -> Result<Ticket> {
+        match &self.core {
+            EngineCore::Single(c) => c.submit_with(image, opts),
+            EngineCore::Sharded(p) => p.submit_with(image, opts),
+        }
+    }
+
+    // Inherent mirrors of the `InferService` defaults (so callers don't
+    // need the trait in scope) — one implementation, in the trait.
+
+    /// Enqueue one image; returns its [`Ticket`].
+    pub fn submit(&self, image: Packed) -> Result<Ticket> {
+        super::InferService::submit(self, image)
+    }
+
+    /// Blocking classify.
+    pub fn infer(&self, image: Packed) -> Result<InferResponse> {
+        super::InferService::infer(self, image)
+    }
+
+    /// Blocking classify with options.
+    pub fn infer_with(&self, image: Packed, opts: InferOptions) -> Result<InferResponse> {
+        super::InferService::infer_with(self, image, opts)
+    }
+
+    /// Submit many, wait for all (responses in submission order).
+    pub fn infer_many(&self, images: Vec<Packed>) -> Result<Vec<InferResponse>> {
+        super::InferService::infer_many(self, images)
+    }
+
+    /// Engine-wide aggregate metrics.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        match &self.core {
+            EngineCore::Single(c) => &c.metrics,
+            EngineCore::Sharded(p) => &p.metrics,
+        }
+    }
+
+    /// Per-worker metrics (sharded core only; empty for the single queue).
+    pub fn worker_metrics(&self) -> &[Arc<Metrics>] {
+        match &self.core {
+            EngineCore::Single(_) => &[],
+            EngineCore::Sharded(p) => &p.worker_metrics,
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match &self.core {
+            EngineCore::Single(c) => c.backend_name(),
+            EngineCore::Sharded(p) => p.backend_name(),
+        }
+    }
+
+    /// Worker thread count.
+    pub fn workers(&self) -> usize {
+        match &self.core {
+            EngineCore::Single(c) => c.workers(),
+            EngineCore::Sharded(p) => p.workers(),
+        }
+    }
+
+    /// Total queued requests (across shards on the sharded core).
+    pub fn queue_depth(&self) -> usize {
+        match &self.core {
+            EngineCore::Single(c) => c.queue_depth(),
+            EngineCore::Sharded(p) => p.queue_depth(),
+        }
+    }
+
+    /// Latency histogram: the single queue's own, or the per-worker
+    /// histograms merged (the pool aggregate records counters only — no
+    /// shared histogram lock on the hot path).
+    pub fn latency_snapshot(&self) -> LatencyHistogram {
+        match &self.core {
+            EngineCore::Single(c) => c.metrics.latency_snapshot(),
+            EngineCore::Sharded(p) => p.latency_snapshot(),
+        }
+    }
+
+    /// One-line metrics summary (latency from [`Self::latency_snapshot`]).
+    pub fn summary_line(&self) -> String {
+        match &self.core {
+            EngineCore::Single(c) => c.metrics.summary_line(),
+            EngineCore::Sharded(p) => p.summary_line(),
+        }
+    }
+
+    /// One metrics line per worker (sharded core only).
+    pub fn per_worker_report(&self) -> Option<String> {
+        match &self.core {
+            EngineCore::Single(_) => None,
+            EngineCore::Sharded(p) => Some(p.per_worker_report()),
+        }
+    }
+
+    /// Stop workers; in-flight batches finish, queued work is abandoned.
+    pub fn shutdown(self) {
+        match self.core {
+            EngineCore::Single(c) => c.shutdown(),
+            EngineCore::Sharded(p) => p.shutdown(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::model::random_model;
+    use crate::bnn::packing::pack_bits_u64;
+    use crate::coordinator::backend::{InferScratch, LogitsBuf, NativeBackend};
+    use crate::util::prng::Xoshiro256;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Condvar, Mutex};
+    use std::time::Duration;
+
+    fn imgs(n: usize, seed: u64) -> Vec<Packed> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n)
+            .map(|_| {
+                let bits: Vec<u8> = (0..784).map(|_| rng.bool() as u8).collect();
+                Packed {
+                    words: pack_bits_u64(&bits),
+                    n_bits: 784,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn builder_requires_a_backend_and_sane_knobs() {
+        assert!(Engine::builder().build().is_err(), "no backend must fail");
+        let model = random_model(&[784, 32, 10], 71);
+        assert!(Engine::builder().native(&model).queue_cap(0).build().is_err());
+        assert!(Engine::builder().native(&model).workers(0).build().is_err());
+        assert!(Engine::builder()
+            .native(&model)
+            .kernel(Kernel::Blocked { block_rows: 0 })
+            .build()
+            .is_err());
+        assert!(Engine::builder()
+            .native(&model)
+            .batcher(BatcherConfig {
+                max_batch: 0,
+                max_wait: Duration::from_micros(1),
+            })
+            .build()
+            .is_err());
+        // explicit replicas conflicting with .workers() is a build error
+        let replicas: Vec<Arc<dyn InferBackend>> = (0..2)
+            .map(|_| -> Arc<dyn InferBackend> { Arc::new(NativeBackend::new(model.clone())) })
+            .collect();
+        assert!(Engine::builder().replicas(replicas).workers(3).build().is_err());
+    }
+
+    #[test]
+    fn sharded_and_single_cores_agree_with_direct_inference() {
+        let model = random_model(&[784, 128, 64, 10], 72);
+        let images = imgs(40, 73);
+        let sharded = Engine::builder()
+            .native(&model)
+            .kernel(Kernel::default())
+            .workers(3)
+            .batcher(BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(100),
+            })
+            .build()
+            .unwrap();
+        assert_eq!(sharded.workers(), 3);
+        assert_eq!(sharded.backend_name(), "native");
+        assert_eq!(sharded.worker_metrics().len(), 3);
+        let single = Engine::builder()
+            .shared(Arc::new(NativeBackend::new(model.clone())))
+            .workers(2)
+            .build()
+            .unwrap();
+        assert_eq!(single.workers(), 2);
+        assert!(single.worker_metrics().is_empty());
+        assert!(single.per_worker_report().is_none());
+        for engine in [&sharded, &single] {
+            let responses = engine.infer_many(images.clone()).unwrap();
+            for (img, r) in images.iter().zip(&responses) {
+                assert_eq!(r.logits, model.logits(&img.words));
+                assert_eq!(r.digit as usize, model.predict(&img.words));
+            }
+            assert_eq!(
+                engine.metrics().completed.load(Ordering::Relaxed),
+                images.len() as u64
+            );
+            assert_eq!(engine.latency_snapshot().count(), images.len() as u64);
+            assert!(engine.summary_line().contains("completed=40"));
+        }
+        sharded.shutdown();
+        single.shutdown();
+    }
+
+    #[test]
+    fn options_flow_through_the_engine() {
+        let model = random_model(&[784, 64, 10], 74);
+        let engine = Engine::builder().native(&model).workers(2).build().unwrap();
+        let img = imgs(1, 75).pop().unwrap();
+        let want = model.logits(&img.words);
+        let r = engine
+            .infer_with(img.clone(), InferOptions::digits_only().with_top_k(3))
+            .unwrap();
+        assert!(r.logits.is_empty(), "digits_only suppresses the logits copy");
+        assert_eq!(r.top_k, crate::coordinator::request::top_k_i32(&want, 3));
+        assert_eq!(r.top_k[0].0, r.digit as u16);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn dropped_ticket_is_counted_cancelled() {
+        let model = random_model(&[784, 32, 10], 76);
+        let engine = Engine::builder().native(&model).workers(1).build().unwrap();
+        let mut two = imgs(2, 77);
+        let abandoned = engine.submit(two.pop().unwrap()).unwrap();
+        drop(abandoned);
+        assert_eq!(engine.metrics().cancelled.load(Ordering::Relaxed), 1);
+        // a waited request is not a cancel
+        engine.infer(two.pop().unwrap()).unwrap();
+        assert_eq!(engine.metrics().cancelled.load(Ordering::Relaxed), 1);
+        engine.shutdown();
+    }
+
+    /// Backend that blocks inside `infer_batch` until the test opens its
+    /// gate — makes queue-overflow rejection deterministic.
+    struct GateBackend {
+        gate: Mutex<bool>,
+        cv: Condvar,
+        entered: AtomicU64,
+    }
+
+    impl GateBackend {
+        fn new() -> Self {
+            Self {
+                gate: Mutex::new(false),
+                cv: Condvar::new(),
+                entered: AtomicU64::new(0),
+            }
+        }
+
+        fn open(&self) {
+            *self.gate.lock().unwrap() = true;
+            self.cv.notify_all();
+        }
+    }
+
+    impl InferBackend for GateBackend {
+        fn name(&self) -> &'static str {
+            "gate"
+        }
+
+        fn max_batch(&self) -> usize {
+            1
+        }
+
+        fn infer_batch(
+            &self,
+            images: &[&Packed],
+            _scratch: &mut InferScratch,
+            out: &mut LogitsBuf,
+        ) -> Result<()> {
+            self.entered.fetch_add(1, Ordering::SeqCst);
+            let mut open = self.gate.lock().unwrap();
+            while !*open {
+                open = self.cv.wait(open).unwrap();
+            }
+            drop(open);
+            out.reset(images.len(), 10);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn tiny_queue_cap_rejects_and_counts_deterministically() {
+        // worker 0 blocks in the gate backend holding request 1; the
+        // 2-slot queue then absorbs exactly two more submits, and every
+        // further submit must be rejected with the rejection counted.
+        let backend = Arc::new(GateBackend::new());
+        let engine = Engine::builder()
+            .shared(backend.clone())
+            .workers(1)
+            .batcher(BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::ZERO,
+            })
+            .queue_cap(2)
+            .build()
+            .unwrap();
+        let mut pool = imgs(6, 78).into_iter();
+        let t1 = engine.submit(pool.next().unwrap()).unwrap();
+        // wait until the worker is provably inside the backend (its request
+        // has left the queue)
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while backend.entered.load(Ordering::SeqCst) == 0 {
+            assert!(std::time::Instant::now() < deadline, "worker never started");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let t2 = engine.submit(pool.next().unwrap()).unwrap();
+        let t3 = engine.submit(pool.next().unwrap()).unwrap();
+        // queue is now full at the cap: the rest must bounce
+        for img in pool {
+            assert!(engine.submit(img).is_err(), "over-cap submit must fail");
+        }
+        let m = engine.metrics();
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 3);
+        // bounced arrivals still count as submitted, keeping the books
+        // balanced on the rejection path too
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 6);
+        backend.open();
+        for t in [t1, t2, t3] {
+            t.wait().unwrap();
+        }
+        assert_eq!(m.completed.load(Ordering::Relaxed), 3);
+        assert_eq!(m.cancelled.load(Ordering::Relaxed), 0);
+        assert_eq!(
+            m.submitted.load(Ordering::Relaxed),
+            m.completed.load(Ordering::Relaxed) + m.rejected.load(Ordering::Relaxed),
+            "books must balance even across queue-full rejections"
+        );
+        engine.shutdown();
+    }
+
+    #[test]
+    fn backend_failure_is_rejected_not_cancelled() {
+        struct FailBackend;
+        impl InferBackend for FailBackend {
+            fn name(&self) -> &'static str {
+                "fail"
+            }
+            fn max_batch(&self) -> usize {
+                1
+            }
+            fn infer_batch(
+                &self,
+                _images: &[&Packed],
+                _scratch: &mut InferScratch,
+                _out: &mut LogitsBuf,
+            ) -> Result<()> {
+                anyhow::bail!("injected failure")
+            }
+        }
+        let engine = Engine::builder()
+            .shared(Arc::new(FailBackend))
+            .workers(1)
+            .build()
+            .unwrap();
+        // infer_many over a failing backend: every ticket still resolves,
+        // so the books say rejected — never phantom client cancellations
+        assert!(engine.infer_many(imgs(4, 81)).is_err());
+        let m = engine.metrics();
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 4);
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 4);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 0);
+        assert_eq!(m.cancelled.load(Ordering::Relaxed), 0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn mismatched_width_is_rejected_at_submit_time() {
+        // the expected_bits gate: a wrong-width image errors at submit —
+        // it never reaches a queue where it could fail a co-scheduled
+        // batch — and the books stay balanced
+        let model = random_model(&[784, 32, 10], 82);
+        let engine = Engine::builder().native(&model).workers(2).build().unwrap();
+        let narrow = Packed::from_bits(&vec![1u8; 64]);
+        assert!(engine.submit(narrow).is_err());
+        let m = engine.metrics();
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 1);
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 1);
+        // per-worker ledgers carry the rejection too
+        let per: u64 = engine
+            .worker_metrics()
+            .iter()
+            .map(|w| w.rejected.load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(per, 1);
+        // well-formed traffic is unaffected
+        let good = imgs(1, 83).pop().unwrap();
+        assert_eq!(
+            engine.infer(good.clone()).unwrap().digit as usize,
+            model.predict(&good.words)
+        );
+        engine.shutdown();
+    }
+
+    #[test]
+    fn fpga_sim_spec_builds_a_replica_pool() {
+        let model = random_model(&[784, 32, 10], 79);
+        let engine = Engine::builder()
+            .fpga_sim(&model, crate::sim::SimConfig::new(64, crate::sim::MemStyle::Bram))
+            .workers(2)
+            .build()
+            .unwrap();
+        assert_eq!(engine.backend_name(), "fpga-sim");
+        let img = imgs(1, 80).pop().unwrap();
+        let r = engine.infer(img.clone()).unwrap();
+        assert_eq!(r.digit as usize, model.predict(&img.words));
+        // the simulated hardware is single-image: batches of 1 regardless
+        // of the default batcher (max_batch clamped to the replica's 1)
+        assert_eq!(r.batch_size, 1);
+        engine.shutdown();
+    }
+}

@@ -12,6 +12,11 @@ pub struct Metrics {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
+    /// Tickets dropped by the caller before resolving (drop-to-cancel —
+    /// see [`super::request::Ticket`]).  A client-side signal: the request
+    /// may still have executed, so this is tracked *alongside* the
+    /// `submitted == completed + rejected` balance, not inside it.
+    pub cancelled: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
     latency: Mutex<LatencyHistogram>,
@@ -65,11 +70,12 @@ impl Metrics {
     /// the hot path.
     pub fn summary_line_with(&self, lat: &LatencyHistogram) -> String {
         format!(
-            "submitted={} completed={} rejected={} batches={} mean_batch={:.2} \
+            "submitted={} completed={} rejected={} cancelled={} batches={} mean_batch={:.2} \
              p50={}µs p99={}µs max={}µs",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
+            self.cancelled.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             lat.percentile_ns(50.0) / 1000,

@@ -3,12 +3,18 @@
 //! Architecture (vLLM-router-shaped, sized to this paper's workload):
 //!
 //! ```text
-//!   clients ──► Router ──► per-backend DynamicBatcher ──► worker threads
-//!                │                (queue + deadline)          │
-//!                └──────────────◄── responses ◄───────────────┘
+//!   clients ──► Router ──► per-backend Engine ──► worker threads
+//!                │           (queue + deadline)       │
+//!                └────────◄── Tickets ◄───────────────┘
 //! ```
 //!
-//! * [`request`] — request/response types with timing capture;
+//! * [`engine`] — **the public construction path**: [`Engine`] and its
+//!   typed builder (`Engine::builder().native(&model).kernel(..)
+//!   .workers(..).batcher(..).queue_cap(..).build()`), wrapping either
+//!   serving core;
+//! * [`request`] — request/response types with timing capture, per-request
+//!   [`InferOptions`] (top-k, logits on/off) and the [`Ticket`] submit
+//!   handle (wait/poll/drop-to-cancel);
 //! * [`backend`] — the pluggable inference engines: native bit-packed Rust
 //!   ([`backend::NativeBackend`], kernel schedule selected by
 //!   [`backend::Kernel`]), AOT PJRT artifacts ([`backend::PjrtBackend`]),
@@ -19,19 +25,23 @@
 //!   reuse, so the steady-state serve path is allocation-free;
 //! * [`batcher`] — dynamic batching: drain-until(max_batch | deadline),
 //!   ladder-aware batch sizing for the fixed-shape PJRT artifacts;
-//! * [`router`] — named-backend routing with a least-queue-depth policy;
+//! * [`router`] — named-engine routing with a least-queue-depth policy;
 //! * [`metrics`] — counters + log-bucket latency histograms;
-//! * [`server`] — the single-queue [`Coordinator`]: N worker threads
-//!   draining one shared queue into one backend;
-//! * [`pool`] — the sharded [`WorkerPool`]: one queue shard + one backend
-//!   **replica** + per-worker metrics per worker thread (DESIGN.md
-//!   §Worker pool), the scaling path;
-//! * [`wire`] — byte-framed TCP server, generic over [`InferService`].
+//! * [`server`] — the single-queue [`server::Coordinator`] core: N worker
+//!   threads draining one shared queue into one backend;
+//! * [`pool`] — the sharded [`pool::WorkerPool`] core: one queue shard +
+//!   one backend **replica** + per-worker metrics per worker thread
+//!   (DESIGN.md §Worker pool), the scaling path;
+//! * [`wire`] — byte-framed TCP server speaking protocol v1 (fixed
+//!   784-bit frames) and v2 (versioned, variable-width, batched, with
+//!   client-supplied ids and optional logits/top-k sections), generic over
+//!   [`InferService`].
 //!
 //! Python never appears here: the hot path is pure Rust + compiled HLO.
 
 pub mod backend;
 pub mod batcher;
+pub mod engine;
 pub mod metrics;
 pub mod pool;
 pub mod request;
@@ -43,54 +53,69 @@ pub use backend::{
     InferBackend, InferScratch, Kernel, LogitsBuf, NativeBackend, PjrtBackend, SimBackend,
 };
 pub use batcher::BatcherConfig;
+pub use engine::{BackendSpec, Engine, EngineBuilder};
 pub use metrics::Metrics;
-pub use pool::WorkerPool;
-pub use request::{InferRequest, InferResponse};
+pub use request::{InferOptions, InferRequest, InferResponse, RequestId, Ticket};
 pub use router::Router;
-pub use server::Coordinator;
+pub use server::DEFAULT_QUEUE_CAP;
+pub use wire::{WireClient, WireServer, WireStatus};
 
 use crate::bnn::packing::Packed;
 
 /// A serving frontend: anything requests can be submitted to.  Implemented
-/// by the single-queue [`Coordinator`] and the sharded [`WorkerPool`];
-/// the wire server and load drivers are generic over it.
+/// by [`Engine`] (the public construction path) and by the underlying
+/// [`server::Coordinator`]/[`pool::WorkerPool`] cores; the wire server and
+/// load drivers are generic over it.  Channel internals never leak: every
+/// submit returns a [`Ticket`].
 pub trait InferService: Send + Sync {
-    /// Enqueue one image; returns the receiver for its response.
-    fn submit(
-        &self,
-        image: Packed,
-    ) -> anyhow::Result<(request::RequestId, std::sync::mpsc::Receiver<InferResponse>)>;
+    /// Enqueue one image with explicit per-request options.
+    fn submit_with(&self, image: Packed, opts: InferOptions) -> anyhow::Result<Ticket>;
+
+    /// Enqueue one image with default options.
+    fn submit(&self, image: Packed) -> anyhow::Result<Ticket> {
+        self.submit_with(image, InferOptions::default())
+    }
 
     /// Blocking classify.
     fn infer(&self, image: Packed) -> anyhow::Result<InferResponse> {
-        let (_, rx) = self.submit(image)?;
-        Ok(rx.recv()?)
+        self.submit(image)?.wait()
+    }
+
+    /// Blocking classify with options.
+    fn infer_with(&self, image: Packed, opts: InferOptions) -> anyhow::Result<InferResponse> {
+        self.submit_with(image, opts)?.wait()
     }
 
     /// Submit many, wait for all (responses in submission order).
     fn infer_many(&self, images: Vec<Packed>) -> anyhow::Result<Vec<InferResponse>> {
-        let rxs: Vec<_> = images
+        let tickets: Vec<Ticket> = images
             .into_iter()
-            .map(|img| self.submit(img).map(|(_, rx)| rx))
+            .map(|img| self.submit(img))
             .collect::<anyhow::Result<_>>()?;
-        rxs.into_iter().map(|rx| Ok(rx.recv()?)).collect()
+        // resolve every ticket before surfacing the first error: a
+        // mid-list backend drop is the engine's `rejected` count, and
+        // short-circuiting would leave later tickets to be miscounted as
+        // client cancellations
+        let waited: Vec<anyhow::Result<InferResponse>> =
+            tickets.into_iter().map(Ticket::wait).collect();
+        waited.into_iter().collect()
     }
 }
 
-impl InferService for Coordinator {
-    fn submit(
-        &self,
-        image: Packed,
-    ) -> anyhow::Result<(request::RequestId, std::sync::mpsc::Receiver<InferResponse>)> {
-        Coordinator::submit(self, image)
+impl InferService for server::Coordinator {
+    fn submit_with(&self, image: Packed, opts: InferOptions) -> anyhow::Result<Ticket> {
+        server::Coordinator::submit_with(self, image, opts)
     }
 }
 
-impl InferService for WorkerPool {
-    fn submit(
-        &self,
-        image: Packed,
-    ) -> anyhow::Result<(request::RequestId, std::sync::mpsc::Receiver<InferResponse>)> {
-        WorkerPool::submit(self, image)
+impl InferService for pool::WorkerPool {
+    fn submit_with(&self, image: Packed, opts: InferOptions) -> anyhow::Result<Ticket> {
+        pool::WorkerPool::submit_with(self, image, opts)
+    }
+}
+
+impl InferService for Engine {
+    fn submit_with(&self, image: Packed, opts: InferOptions) -> anyhow::Result<Ticket> {
+        Engine::submit_with(self, image, opts)
     }
 }

@@ -43,7 +43,7 @@ use anyhow::Result;
 use super::backend::{InferBackend, InferScratch, Kernel, LogitsBuf, NativeBackend};
 use super::batcher::{decide, BatcherConfig, DrainDecision};
 use super::metrics::Metrics;
-use super::request::{InferRequest, InferResponse, RequestId};
+use super::request::{top_k_i32, InferOptions, InferRequest, InferResponse, Ticket};
 use crate::bnn::packing::Packed;
 use crate::bnn::{argmax_i32, BnnModel};
 use crate::sim::SimConfig;
@@ -95,11 +95,18 @@ pub(crate) fn execute_batch(
                 if let Some(a) = agg {
                     a.completed.fetch_add(1, Ordering::Relaxed);
                 }
+                // Response shape follows the request's InferOptions: the
+                // logits copy and the top-k selection are both opt-in.
                 let row = logits.row(i);
+                let opts = p.req.opts;
                 let _ = p.reply.send(InferResponse {
                     id: p.req.id,
                     digit: argmax_i32(row) as u8,
-                    logits: row.to_vec(),
+                    logits: if opts.include_logits { row.to_vec() } else { Vec::new() },
+                    top_k: match opts.top_k {
+                        Some(k) => top_k_i32(row, k),
+                        None => Vec::new(),
+                    },
                     latency_ns,
                     batch_size,
                     backend: backend.name(),
@@ -141,22 +148,38 @@ pub struct WorkerPool {
     rr: AtomicUsize,
     workers: Vec<std::thread::JoinHandle<()>>,
     backend_name: &'static str,
+    /// Input width every replica agrees on (submit-time rejection); `None`
+    /// when any replica doesn't know its width or they disagree.
+    expected_bits: Option<usize>,
 }
 
 impl WorkerPool {
     /// Spawn one worker thread per replica, each draining its own shard.
+    /// Crate-internal: the public construction path is `Engine::builder()`.
     ///
     /// `cfg.max_batch` is clamped to the smallest replica `max_batch` so a
-    /// drained batch always fits whichever worker drains it.
-    pub fn start(replicas: Vec<Arc<dyn InferBackend>>, cfg: BatcherConfig) -> Result<WorkerPool> {
+    /// drained batch always fits whichever worker drains it; `queue_cap`
+    /// is the per-shard backpressure bound.
+    pub(crate) fn start(
+        replicas: Vec<Arc<dyn InferBackend>>,
+        cfg: BatcherConfig,
+        queue_cap: usize,
+    ) -> Result<WorkerPool> {
         anyhow::ensure!(!replicas.is_empty(), "worker pool needs ≥ 1 replica");
         cfg.validate()?;
+        anyhow::ensure!(queue_cap >= 1, "queue_cap must be ≥ 1");
         let min_max_batch = replicas.iter().map(|r| r.max_batch()).min().unwrap();
         let cfg = BatcherConfig {
             max_batch: cfg.max_batch.min(min_max_batch),
             ..cfg
         };
         let backend_name = replicas[0].name();
+        let mut expected_bits = replicas[0].expected_bits();
+        for r in &replicas[1..] {
+            if r.expected_bits() != expected_bits {
+                expected_bits = None;
+            }
+        }
         let shared = Arc::new(PoolShared {
             shards: (0..replicas.len())
                 .map(|_| Shard {
@@ -166,7 +189,7 @@ impl WorkerPool {
                 .collect(),
             shutdown: AtomicBool::new(false),
             cfg,
-            shard_cap: 100_000,
+            shard_cap: queue_cap,
         });
         let metrics = Arc::new(Metrics::new());
         let worker_metrics: Vec<Arc<Metrics>> =
@@ -191,39 +214,42 @@ impl WorkerPool {
             rr: AtomicUsize::new(0),
             workers,
             backend_name,
+            expected_bits,
         })
     }
 
     /// Pool of `workers` native replicas, each owning its own copy of the
     /// packed model, running the given [`Kernel`] schedule
     /// (`Kernel::default()` = the weight-stationary tiled serving path).
-    pub fn native(
+    pub(crate) fn native(
         model: &BnnModel,
         workers: usize,
         kernel: Kernel,
         cfg: BatcherConfig,
+        queue_cap: usize,
     ) -> Result<WorkerPool> {
         let replicas: Vec<Arc<dyn InferBackend>> = (0..workers.max(1))
             .map(|_| -> Arc<dyn InferBackend> {
                 Arc::new(NativeBackend::with_kernel(model.clone(), kernel))
             })
             .collect();
-        Self::start(replicas, cfg)
+        Self::start(replicas, cfg, queue_cap)
     }
 
     /// Pool of `workers` independent cycle-accurate simulator replicas —
     /// software's version of deploying several accelerator boards.
-    pub fn fpga_sim(
+    pub(crate) fn fpga_sim(
         model: &BnnModel,
         workers: usize,
         sim_cfg: SimConfig,
         cfg: BatcherConfig,
+        queue_cap: usize,
     ) -> Result<WorkerPool> {
         let mut replicas: Vec<Arc<dyn InferBackend>> = Vec::new();
         for _ in 0..workers.max(1) {
             replicas.push(Arc::new(super::backend::SimBackend::new(model, sim_cfg)?));
         }
-        Self::start(replicas, cfg)
+        Self::start(replicas, cfg, queue_cap)
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -267,28 +293,51 @@ impl WorkerPool {
         }
     }
 
-    /// Enqueue one image on the least-loaded candidate shard.
-    pub fn submit(&self, image: Packed) -> Result<(RequestId, mpsc::Receiver<InferResponse>)> {
+    /// Enqueue one image on the least-loaded candidate shard, with explicit
+    /// per-request options.
+    pub fn submit_with(&self, image: Packed, opts: InferOptions) -> Result<Ticket> {
+        let s = self.pick_shard();
+        // width check at the door: a mismatched image must never reach a
+        // shard, where it would fail everything co-batched with it (books:
+        // counted as submitted AND rejected on the picked shard's ledger,
+        // same as a backend rejection)
+        if let Some(want) = self.expected_bits {
+            if image.n_bits != want {
+                for m in [self.metrics.as_ref(), self.worker_metrics[s].as_ref()] {
+                    m.submitted.fetch_add(1, Ordering::Relaxed);
+                    m.rejected.fetch_add(1, Ordering::Relaxed);
+                }
+                anyhow::bail!("image has {} bits, backend expects {want}", image.n_bits);
+            }
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
-        let s = self.pick_shard();
         let shard = &self.shared.shards[s];
         {
             let mut q = shard.queue.lock().unwrap();
             if q.len() >= self.shared.shard_cap {
-                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                self.worker_metrics[s].rejected.fetch_add(1, Ordering::Relaxed);
-                anyhow::bail!("shard {s} full ({} requests)", q.len());
+                // every arrival counts as submitted, so the books keep
+                // `submitted == completed + rejected` on every path
+                for m in [self.metrics.as_ref(), self.worker_metrics[s].as_ref()] {
+                    m.submitted.fetch_add(1, Ordering::Relaxed);
+                    m.rejected.fetch_add(1, Ordering::Relaxed);
+                }
+                anyhow::bail!("shard {s} full ({} requests, cap {})", q.len(), self.shared.shard_cap);
             }
             q.push_back(Pending {
-                req: InferRequest::new(id, image),
+                req: InferRequest::with_opts(id, image, opts),
                 reply: tx,
             });
         }
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         self.worker_metrics[s].submitted.fetch_add(1, Ordering::Relaxed);
         shard.cv.notify_one();
-        Ok((id, rx))
+        Ok(Ticket::new(id, rx, self.metrics.clone()))
+    }
+
+    /// Enqueue one image; returns its [`Ticket`].
+    pub fn submit(&self, image: Packed) -> Result<Ticket> {
+        self.submit_with(image, InferOptions::default())
     }
 
     /// Blocking classify (the [`super::InferService`] default, kept as an
@@ -405,6 +454,7 @@ mod tests {
     use super::*;
     use crate::bnn::model::random_model;
     use crate::bnn::packing::pack_bits_u64;
+    use crate::coordinator::server::DEFAULT_QUEUE_CAP;
     use crate::util::prng::Xoshiro256;
     use std::time::Duration;
 
@@ -432,6 +482,7 @@ mod tests {
                 max_batch: 8,
                 max_wait: Duration::from_micros(100),
             },
+            DEFAULT_QUEUE_CAP,
         )
         .unwrap();
         assert_eq!(pool.workers(), 4);
@@ -462,6 +513,7 @@ mod tests {
                 max_batch: 16,
                 max_wait: Duration::from_micros(50),
             },
+            DEFAULT_QUEUE_CAP,
         )
         .unwrap();
         let n = 90;
@@ -502,14 +554,15 @@ mod tests {
             max_wait: Duration::from_micros(50),
         };
         let images = imgs(30, 56);
-        let scalar_pool = WorkerPool::native(&model, 2, Kernel::Scalar, cfg).unwrap();
+        let scalar_pool =
+            WorkerPool::native(&model, 2, Kernel::Scalar, cfg, DEFAULT_QUEUE_CAP).unwrap();
         let want = scalar_pool.infer_many(images.clone()).unwrap();
         scalar_pool.shutdown();
         let mut kernels = Kernel::registry_with(16, 4);
         kernels.push(Kernel::Blocked { block_rows: 32 });
         kernels.push(Kernel::default());
         for kernel in kernels {
-            let pool = WorkerPool::native(&model, 2, kernel, cfg).unwrap();
+            let pool = WorkerPool::native(&model, 2, kernel, cfg, DEFAULT_QUEUE_CAP).unwrap();
             let got = pool.infer_many(images.clone()).unwrap();
             for (x, y) in got.iter().zip(&want) {
                 assert_eq!(x.logits, y.logits, "{kernel:?}");
@@ -522,8 +575,14 @@ mod tests {
     #[test]
     fn single_worker_pool_degenerates_to_coordinator_semantics() {
         let model = random_model(&[784, 128, 64, 10], 57);
-        let pool =
-            WorkerPool::native(&model, 1, Kernel::default(), BatcherConfig::default()).unwrap();
+        let pool = WorkerPool::native(
+            &model,
+            1,
+            Kernel::default(),
+            BatcherConfig::default(),
+            DEFAULT_QUEUE_CAP,
+        )
+        .unwrap();
         assert_eq!(pool.workers(), 1);
         let r = pool.infer(imgs(1, 58).pop().unwrap()).unwrap();
         assert_eq!(r.batch_size, 1);
@@ -534,18 +593,32 @@ mod tests {
     #[test]
     fn shutdown_terminates_workers() {
         let model = random_model(&[784, 128, 64, 10], 59);
-        let pool = WorkerPool::native(&model, 4, Kernel::Scalar, BatcherConfig::default()).unwrap();
+        let pool = WorkerPool::native(
+            &model,
+            4,
+            Kernel::Scalar,
+            BatcherConfig::default(),
+            DEFAULT_QUEUE_CAP,
+        )
+        .unwrap();
         pool.shutdown(); // must not hang
     }
 
     #[test]
     fn size_mismatched_image_is_rejected_not_fatal() {
-        // A wrong-width image must surface as an Err on the submitter's
-        // channel (backend reject path), and the worker must survive to
-        // serve well-formed requests afterwards.
+        // A wrong-width image must surface as an Err at submit time
+        // (expected_bits gate — it never reaches a shard, so it can't
+        // poison a co-scheduled batch), and the worker keeps serving
+        // well-formed requests afterwards.
         let model = random_model(&[784, 128, 64, 10], 61);
-        let pool =
-            WorkerPool::native(&model, 1, Kernel::default(), BatcherConfig::default()).unwrap();
+        let pool = WorkerPool::native(
+            &model,
+            1,
+            Kernel::default(),
+            BatcherConfig::default(),
+            DEFAULT_QUEUE_CAP,
+        )
+        .unwrap();
         let bad = Packed::from_bits(&vec![1u8; 100]); // 100 ≠ 784 bits
         assert!(pool.infer(bad).is_err(), "mismatched image must error");
         let good = imgs(1, 62).pop().unwrap();

@@ -1,25 +1,105 @@
-//! Request/response types flowing through the coordinator.
+//! Request/response types flowing through the coordinator, plus the
+//! [`Ticket`] handle every `submit` returns.
+//!
+//! The PR 4 API redesign made three things first-class here:
+//!
+//! * [`InferOptions`] — per-request knobs (full logits on/off, top-k),
+//!   carried end to end: wire frame → [`InferRequest`] → response assembly
+//!   in `pool::execute_batch`;
+//! * [`Ticket`] — the submit handle.  Callers never see the underlying
+//!   `mpsc::Receiver`; they `wait()`, `wait_timeout()` or `try_poll()` the
+//!   ticket, and dropping it unresolved counts into `Metrics::cancelled`
+//!   (drop-to-cancel accounting — the batch may still execute, but the
+//!   abandonment is visible in the books);
+//! * [`top_k_i32`] — the shared top-k selection both the response builder
+//!   and the wire layer agree on.
 
-use std::time::Instant;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, RecvTimeoutError, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
+use anyhow::{bail, Result};
+
+use super::metrics::Metrics;
 use crate::bnn::packing::Packed;
 
-/// Monotonically increasing request id (assigned by the coordinator).
+/// Monotonically increasing request id (assigned by the serving engine).
 pub type RequestId = u64;
 
-/// One classification request: a packed 784-bit binarized image.
+/// Per-request serving options.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InferOptions {
+    /// Include the full logits vector in the response.  Turning this off
+    /// drops the per-request `n_classes` heap copy — the digit is still
+    /// computed from the worker's flat arena.
+    pub include_logits: bool,
+    /// Also return the best `k` `(class, logit)` pairs, best first (ties
+    /// toward the lower class index, matching [`crate::bnn::argmax_i32`]).
+    pub top_k: Option<usize>,
+}
+
+impl Default for InferOptions {
+    fn default() -> Self {
+        Self {
+            include_logits: true,
+            top_k: None,
+        }
+    }
+}
+
+impl InferOptions {
+    /// Digit-only responses: no logits copy, no top-k section.
+    pub fn digits_only() -> Self {
+        Self {
+            include_logits: false,
+            top_k: None,
+        }
+    }
+
+    /// Request the best `k` `(class, logit)` pairs.
+    pub fn with_top_k(mut self, k: usize) -> Self {
+        self.top_k = Some(k);
+        self
+    }
+
+    /// Toggle the full logits vector.
+    pub fn with_logits(mut self, include: bool) -> Self {
+        self.include_logits = include;
+        self
+    }
+}
+
+/// Top-k `(class, logit)` pairs of one logits row, best first; ties break
+/// toward the lower class index (so `top_k_i32(row, 1)[0].0 as usize` is
+/// exactly `argmax_i32(row)`).  Class ids are u16 — wide enough for the
+/// wire protocol's `MAX_WIRE_CLASSES` (4096), so no silent truncation.
+pub fn top_k_i32(scores: &[i32], k: usize) -> Vec<(u16, i32)> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].cmp(&scores[a]).then(a.cmp(&b)));
+    idx.truncate(k.min(scores.len()));
+    idx.into_iter().map(|i| (i as u16, scores[i])).collect()
+}
+
+/// One classification request: a packed binarized image + options.
 #[derive(Clone, Debug)]
 pub struct InferRequest {
     pub id: RequestId,
     pub image: Packed,
+    pub opts: InferOptions,
     pub enqueued_at: Instant,
 }
 
 impl InferRequest {
     pub fn new(id: RequestId, image: Packed) -> Self {
+        Self::with_opts(id, image, InferOptions::default())
+    }
+
+    pub fn with_opts(id: RequestId, image: Packed, opts: InferOptions) -> Self {
         Self {
             id,
             image,
+            opts,
             enqueued_at: Instant::now(),
         }
     }
@@ -30,7 +110,10 @@ impl InferRequest {
 pub struct InferResponse {
     pub id: RequestId,
     pub digit: u8,
+    /// Full logits row (empty when the request set `include_logits: false`).
     pub logits: Vec<i32>,
+    /// Top-k `(class, logit)` pairs, best first (empty unless requested).
+    pub top_k: Vec<(u16, i32)>,
     /// Queue + batch + execute time, nanoseconds.
     pub latency_ns: u64,
     /// Batch this request was executed in (observability).
@@ -38,19 +121,208 @@ pub struct InferResponse {
     pub backend: &'static str,
 }
 
+/// Handle to one in-flight request.
+///
+/// Lifecycle:
+///
+/// ```text
+///   submit ──► Ticket ──► wait()/wait_timeout()/try_poll() ──► InferResponse
+///                │
+///                └─ dropped unresolved ──► Metrics::cancelled += 1
+/// ```
+///
+/// A ticket resolves exactly once: after a response (or a backend-drop
+/// error) has been delivered, further polls error out.  Dropping an
+/// unresolved ticket is the cancel signal — the engine may still execute
+/// the request (its reply then lands in a closed channel), but the
+/// abandonment is counted so `submitted == completed + rejected` plus the
+/// `cancelled` gauge always tells the whole story.
+pub struct Ticket {
+    id: RequestId,
+    rx: mpsc::Receiver<InferResponse>,
+    metrics: Arc<Metrics>,
+    resolved: bool,
+}
+
+impl Ticket {
+    pub(crate) fn new(
+        id: RequestId,
+        rx: mpsc::Receiver<InferResponse>,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        Self {
+            id,
+            rx,
+            metrics,
+            resolved: false,
+        }
+    }
+
+    /// The engine-assigned request id.
+    pub fn id(&self) -> RequestId {
+        self.id
+    }
+
+    /// Block until the response arrives, consuming the ticket.
+    pub fn wait(mut self) -> Result<InferResponse> {
+        self.resolved = true;
+        match self.rx.recv() {
+            Ok(r) => Ok(r),
+            Err(_) => bail!(
+                "request {} was dropped by the backend (see the rejected counter)",
+                self.id
+            ),
+        }
+    }
+
+    /// Wait up to `timeout`.  `Ok(None)` means not ready yet — the ticket
+    /// stays live and can be polled again.
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Result<Option<InferResponse>> {
+        if self.resolved {
+            bail!("ticket {} already resolved", self.id);
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => {
+                self.resolved = true;
+                Ok(Some(r))
+            }
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => {
+                self.resolved = true;
+                bail!(
+                    "request {} was dropped by the backend (see the rejected counter)",
+                    self.id
+                )
+            }
+        }
+    }
+
+    /// Non-blocking poll.  `Ok(None)` means not ready yet.
+    pub fn try_poll(&mut self) -> Result<Option<InferResponse>> {
+        if self.resolved {
+            bail!("ticket {} already resolved", self.id);
+        }
+        match self.rx.try_recv() {
+            Ok(r) => {
+                self.resolved = true;
+                Ok(Some(r))
+            }
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => {
+                self.resolved = true;
+                bail!(
+                    "request {} was dropped by the backend (see the rejected counter)",
+                    self.id
+                )
+            }
+        }
+    }
+}
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        if !self.resolved {
+            self.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::bnn::packing::pack_bits_u64;
 
-    #[test]
-    fn request_captures_enqueue_time() {
-        let img = Packed {
+    fn img() -> Packed {
+        Packed {
             words: pack_bits_u64(&vec![0u8; 784]),
             n_bits: 784,
-        };
-        let r = InferRequest::new(7, img);
+        }
+    }
+
+    fn resp(id: RequestId) -> InferResponse {
+        InferResponse {
+            id,
+            digit: 3,
+            logits: vec![0; 10],
+            top_k: Vec::new(),
+            latency_ns: 1,
+            batch_size: 1,
+            backend: "test",
+        }
+    }
+
+    #[test]
+    fn request_captures_enqueue_time_and_default_opts() {
+        let r = InferRequest::new(7, img());
         assert_eq!(r.id, 7);
+        assert_eq!(r.opts, InferOptions::default());
+        assert!(r.opts.include_logits && r.opts.top_k.is_none());
         assert!(r.enqueued_at.elapsed().as_secs() < 1);
+    }
+
+    #[test]
+    fn top_k_orders_and_breaks_ties_like_argmax() {
+        let scores = [5, 9, 9, -1, 7];
+        assert_eq!(top_k_i32(&scores, 3), vec![(1, 9), (2, 9), (4, 7)]);
+        // k = 1 agrees with argmax; k beyond len truncates
+        assert_eq!(top_k_i32(&scores, 1)[0].0 as usize, crate::bnn::argmax_i32(&scores));
+        assert_eq!(top_k_i32(&scores, 99).len(), scores.len());
+        assert!(top_k_i32(&[], 3).is_empty());
+        // class ids above the u8 range survive intact (u16 carrier)
+        let mut wide = vec![0i32; 400];
+        wide[300] = 7;
+        assert_eq!(top_k_i32(&wide, 1), vec![(300, 7)]);
+    }
+
+    #[test]
+    fn waited_ticket_is_not_counted_cancelled() {
+        let m = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::channel();
+        let t = Ticket::new(1, rx, m.clone());
+        tx.send(resp(1)).unwrap();
+        assert_eq!(t.wait().unwrap().id, 1);
+        assert_eq!(m.cancelled.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn dropped_ticket_counts_cancelled_exactly_once() {
+        let m = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::channel();
+        let t = Ticket::new(2, rx, m.clone());
+        drop(t);
+        drop(tx);
+        assert_eq!(m.cancelled.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn try_poll_and_wait_timeout_resolve_once() {
+        let m = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::channel();
+        let mut t = Ticket::new(3, rx, m.clone());
+        assert!(t.try_poll().unwrap().is_none(), "nothing sent yet");
+        assert!(t
+            .wait_timeout(Duration::from_millis(1))
+            .unwrap()
+            .is_none());
+        tx.send(resp(3)).unwrap();
+        let got = t.try_poll().unwrap().expect("response ready");
+        assert_eq!(got.id, 3);
+        // resolved: further polls error, and drop does not count cancelled
+        assert!(t.try_poll().is_err());
+        assert!(t.wait_timeout(Duration::from_millis(1)).is_err());
+        drop(t);
+        assert_eq!(m.cancelled.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn disconnected_ticket_errors_but_is_not_cancelled() {
+        // backend dropped the reply (rejected batch): wait errors, and the
+        // abandonment is the server's rejected counter, not a client cancel
+        let m = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::channel::<InferResponse>();
+        drop(tx);
+        let t = Ticket::new(4, rx, m.clone());
+        assert!(t.wait().is_err());
+        assert_eq!(m.cancelled.load(Ordering::Relaxed), 0);
     }
 }

@@ -1,23 +1,24 @@
-//! Request router over named coordinators (backends).
+//! Request router over named serving engines.
 //!
 //! Policies:
-//! * **Named** — caller pins a backend (`route("fpga-sim", …)`);
-//! * **LeastQueue** — default routing picks the backend with the shallowest
+//! * **Named** — caller pins an engine (`route("fpga-sim", …)`);
+//! * **LeastQueue** — default routing picks the engine with the shallowest
 //!   queue (ties → first registered), the standard load-balancing policy
-//!   for heterogeneous engines.
+//!   for heterogeneous backends.
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
+use super::engine::Engine;
 use super::request::InferResponse;
-use super::server::Coordinator;
 use crate::bnn::packing::Packed;
 
-/// A named collection of coordinators.
+/// A named collection of serving engines (each built with
+/// [`Engine::builder`]).
 #[derive(Default)]
 pub struct Router {
-    backends: BTreeMap<String, Coordinator>,
+    backends: BTreeMap<String, Engine>,
     order: Vec<String>,
 }
 
@@ -26,8 +27,8 @@ impl Router {
         Self::default()
     }
 
-    pub fn register(&mut self, name: &str, coord: Coordinator) -> &mut Self {
-        if self.backends.insert(name.to_string(), coord).is_none() {
+    pub fn register(&mut self, name: &str, engine: Engine) -> &mut Self {
+        if self.backends.insert(name.to_string(), engine).is_none() {
             self.order.push(name.to_string());
         }
         self
@@ -37,13 +38,13 @@ impl Router {
         &self.order
     }
 
-    pub fn get(&self, name: &str) -> Result<&Coordinator> {
+    pub fn get(&self, name: &str) -> Result<&Engine> {
         self.backends
             .get(name)
             .with_context(|| format!("no backend '{name}' (have: {:?})", self.order))
     }
 
-    /// Route to a named backend.
+    /// Route to a named engine.
     pub fn route(&self, name: &str, image: Packed) -> Result<InferResponse> {
         self.get(name)?.infer(image)
     }
@@ -61,11 +62,11 @@ impl Router {
         self.backends[name].infer(image)
     }
 
-    /// Aggregate metrics lines per backend.
+    /// Aggregate metrics lines per engine.
     pub fn metrics_report(&self) -> String {
         let mut out = String::new();
         for n in &self.order {
-            out.push_str(&format!("{n}: {}\n", self.backends[n].metrics.summary_line()));
+            out.push_str(&format!("{n}: {}\n", self.backends[n].summary_line()));
         }
         out
     }
@@ -76,10 +77,8 @@ mod tests {
     use super::*;
     use crate::bnn::model::model_from_sign_rows;
     use crate::bnn::packing::pack_bits_u64;
-    use crate::coordinator::backend::NativeBackend;
-    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::{BatcherConfig, Kernel};
     use crate::util::prng::Xoshiro256;
-    use std::sync::Arc;
 
     fn setup() -> (Router, crate::bnn::BnnModel) {
         let mut rng = Xoshiro256::new(41);
@@ -96,12 +95,13 @@ mod tests {
         for name in ["a", "b"] {
             router.register(
                 name,
-                Coordinator::start(
-                    Arc::new(NativeBackend::new(model.clone())),
-                    BatcherConfig::default(),
-                    1,
-                )
-                .unwrap(),
+                Engine::builder()
+                    .native(&model)
+                    .kernel(Kernel::Scalar)
+                    .workers(1)
+                    .batcher(BatcherConfig::default())
+                    .build()
+                    .unwrap(),
             );
         }
         (router, model)
@@ -134,11 +134,11 @@ mod tests {
             let r = router.route_least_queue(image.clone()).unwrap();
             assert_eq!(r.digit as usize, model.predict(&image.words));
         }
-        // both backends must have seen traffic counters (routing totals add up)
+        // both engines must have seen traffic counters (routing totals add up)
         let total: u64 = ["a", "b"]
             .iter()
             .map(|n| {
-                router.get(n).unwrap().metrics.completed
+                router.get(n).unwrap().metrics().completed
                     .load(std::sync::atomic::Ordering::Relaxed)
             })
             .sum();

@@ -1,10 +1,13 @@
-//! The serving loop: worker threads draining a shared queue through the
-//! dynamic batcher into a backend, with per-request response channels.
+//! The single-queue serving core: worker threads draining a shared queue
+//! through the dynamic batcher into one backend, with per-request response
+//! channels wrapped in [`super::request::Ticket`]s.
 //!
 //! No async runtime exists offline, so this is a classic std-thread design:
 //! an injector mutex guards the queue; workers park on a condvar with the
 //! batcher's deadline as the wait timeout.  A `Coordinator` owns one
-//! backend; the [`super::router::Router`] composes several coordinators.
+//! backend; [`super::engine::Engine`] is the **only** public construction
+//! path (`Engine::builder().shared(backend)` builds one of these), and the
+//! [`super::router::Router`] composes several engines.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -18,8 +21,13 @@ use super::backend::InferBackend;
 use super::batcher::{decide, BatcherConfig, DrainDecision};
 use super::metrics::Metrics;
 use super::pool::{execute_batch, Pending};
-use super::request::{InferRequest, InferResponse, RequestId};
+use super::request::{InferOptions, InferRequest, InferResponse, Ticket};
 use crate::bnn::packing::Packed;
+
+/// Default backpressure bound: submits fail once this many requests are
+/// queued.  Override per engine with `Engine::builder().queue_cap(..)`,
+/// `[coordinator] queue_cap` in config files, or `--queue-cap` on the CLI.
+pub const DEFAULT_QUEUE_CAP: usize = 100_000;
 
 struct Shared {
     queue: Mutex<VecDeque<Pending>>,
@@ -39,13 +47,16 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Spawn `workers` threads draining into `backend`.
-    pub fn start(
+    /// Spawn `workers` threads draining into `backend`.  Crate-internal:
+    /// the public construction path is `Engine::builder()`.
+    pub(crate) fn start(
         backend: Arc<dyn InferBackend>,
         cfg: BatcherConfig,
         workers: usize,
+        queue_cap: usize,
     ) -> Result<Self> {
         cfg.validate()?;
+        anyhow::ensure!(queue_cap >= 1, "queue_cap must be ≥ 1");
         let cfg = BatcherConfig {
             max_batch: cfg.max_batch.min(backend.max_batch()),
             ..cfg
@@ -55,7 +66,7 @@ impl Coordinator {
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             cfg,
-            queue_cap: 100_000,
+            queue_cap,
         });
         let metrics = Arc::new(Metrics::new());
         let mut handles = Vec::new();
@@ -83,43 +94,68 @@ impl Coordinator {
         self.backend.name()
     }
 
+    /// Worker threads draining the shared queue.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
     pub fn queue_depth(&self) -> usize {
         self.shared.queue.lock().unwrap().len()
     }
 
-    /// Submit an image; returns the receiver for its response.
-    pub fn submit(&self, image: Packed) -> Result<(RequestId, mpsc::Receiver<InferResponse>)> {
+    /// Enqueue one image with explicit per-request options.
+    pub fn submit_with(&self, image: Packed, opts: InferOptions) -> Result<Ticket> {
+        // width check at the door: a mismatched image must never reach the
+        // queue, where it would fail everything co-batched with it (books:
+        // counted as submitted AND rejected, same as a backend rejection)
+        if let Some(want) = self.backend.expected_bits() {
+            if image.n_bits != want {
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!("image has {} bits, backend expects {want}", image.n_bits);
+            }
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         {
             let mut q = self.shared.queue.lock().unwrap();
             if q.len() >= self.shared.queue_cap {
+                // every arrival counts as submitted, so the books keep
+                // `submitted == completed + rejected` on every path
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                anyhow::bail!("queue full ({} requests)", q.len());
+                anyhow::bail!(
+                    "queue full ({} requests, cap {})",
+                    q.len(),
+                    self.shared.queue_cap
+                );
             }
             q.push_back(Pending {
-                req: InferRequest::new(id, image),
+                req: InferRequest::with_opts(id, image, opts),
                 reply: tx,
             });
         }
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         self.shared.cv.notify_one();
-        Ok((id, rx))
+        Ok(Ticket::new(id, rx, self.metrics.clone()))
+    }
+
+    // Inherent mirrors of the `InferService` defaults (so callers don't
+    // need the trait in scope) — one implementation, in the trait.
+
+    /// Enqueue one image; returns its [`Ticket`].
+    pub fn submit(&self, image: Packed) -> Result<Ticket> {
+        super::InferService::submit(self, image)
     }
 
     /// Blocking classify.
     pub fn infer(&self, image: Packed) -> Result<InferResponse> {
-        let (_, rx) = self.submit(image)?;
-        Ok(rx.recv()?)
+        super::InferService::infer(self, image)
     }
 
     /// Submit many, wait for all (order of responses matches submissions).
     pub fn infer_many(&self, images: Vec<Packed>) -> Result<Vec<InferResponse>> {
-        let rxs: Vec<_> = images
-            .into_iter()
-            .map(|img| self.submit(img).map(|(_, rx)| rx))
-            .collect::<Result<_>>()?;
-        rxs.into_iter().map(|rx| Ok(rx.recv()?)).collect()
+        super::InferService::infer_many(self, images)
     }
 
     /// Stop workers (drains nothing further; in-flight batches finish).
@@ -229,8 +265,10 @@ mod tests {
                 max_wait: Duration::from_micros(100),
             },
             2,
+            DEFAULT_QUEUE_CAP,
         )
         .unwrap();
+        assert_eq!(coord.workers(), 2);
         let images = imgs(50, 32);
         let responses = coord.infer_many(images.clone()).unwrap();
         assert_eq!(responses.len(), 50);
@@ -259,15 +297,16 @@ mod tests {
                 max_wait: Duration::from_millis(2),
             },
             1,
+            DEFAULT_QUEUE_CAP,
         )
         .unwrap();
         // burst-submit then collect: expect mean batch > 1
-        let rxs: Vec<_> = imgs(64, 34)
+        let tickets: Vec<Ticket> = imgs(64, 34)
             .into_iter()
-            .map(|img| coord.submit(img).unwrap().1)
+            .map(|img| coord.submit(img).unwrap())
             .collect();
-        for rx in rxs {
-            rx.recv().unwrap();
+        for t in tickets {
+            t.wait().unwrap();
         }
         assert!(
             coord.metrics.mean_batch_size() > 1.5,
@@ -278,11 +317,41 @@ mod tests {
     }
 
     #[test]
+    fn per_request_options_shape_the_response() {
+        let model = tiny_model(37);
+        let backend = Arc::new(NativeBackend::new(model.clone()));
+        let coord =
+            Coordinator::start(backend, BatcherConfig::default(), 1, DEFAULT_QUEUE_CAP).unwrap();
+        let img = imgs(1, 38).pop().unwrap();
+        let want = model.logits(&img.words);
+
+        // digit-only: logits suppressed, digit still correct
+        let r = coord
+            .submit_with(img.clone(), InferOptions::digits_only())
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(r.logits.is_empty() && r.top_k.is_empty());
+        assert_eq!(r.digit as usize, model.predict(&img.words));
+
+        // top-3 agrees with the shared selection helper
+        let r = coord
+            .submit_with(img.clone(), InferOptions::default().with_top_k(3))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(r.top_k, crate::coordinator::request::top_k_i32(&want, 3));
+        assert_eq!(r.top_k[0].0, r.digit as u16);
+        assert_eq!(r.logits, want);
+        coord.shutdown();
+    }
+
+    #[test]
     fn shutdown_terminates_workers() {
         let model = tiny_model(35);
         let backend = Arc::new(NativeBackend::new(model));
         let coord =
-            Coordinator::start(backend, BatcherConfig::default(), 4).unwrap();
+            Coordinator::start(backend, BatcherConfig::default(), 4, DEFAULT_QUEUE_CAP).unwrap();
         coord.shutdown(); // must not hang
     }
 }

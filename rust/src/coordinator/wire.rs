@@ -2,17 +2,35 @@
 //! ("external image input, such as from a UART interface …, while
 //! UART-based output can provide digit predictions to external systems").
 //!
-//! Framing (byte-oriented, UART-friendly — works unchanged over a serial
-//! link):
+//! Two protocol versions share one port; the server sniffs the magic byte
+//! (DESIGN.md §Wire protocol has the full field tables):
+//!
+//! **v1** (fixed-function, UART-friendly, still accepted unchanged):
 //!
 //! ```text
 //!   request :  0xB1  len_lo len_hi  payload[len]      len = 98 (784 bits)
 //!   response:  0xB2  digit  status  lat[4 LE, µs]     status 0 = OK
-//!   error   :  0xBE  code   0x00    0x00000000
+//!   error   :  0xBE  status 0x00    0x00000000
 //! ```
 //!
-//! Payload is the binarized image, bit *i* at byte `i/8` bit `i%8`
-//! (LSB-first — the same order as the packed words).
+//! **v2** (versioned + batchable — the FINN-style streaming contract):
+//!
+//! ```text
+//!   request :  0xC1  features top_k  id[8 LE]  n_images[2 LE]  n_bits[4 LE]
+//!              then n_images × ceil(n_bits/8) payload bytes
+//!   response:  0xC2  status features top_k  id[8 LE]  n_items[2 LE]
+//!              then per item: item_id[8 LE] digit lat[4 LE, µs]
+//!                [FEAT_LOGITS: n[2 LE] + n × i32 LE]
+//!                [FEAT_TOPK  : k + k × (class u16 LE, logit i32 LE)]
+//! ```
+//!
+//! v2 request ids are **client-supplied** and echoed back; the i-th image
+//! of a batch frame answers as `id + i`.  Widths are arbitrary
+//! (1 ..= [`MAX_WIRE_BITS`] bits — the model still decides what it
+//! accepts); protocol errors come back as a [`WireStatus`], never a hang.
+//!
+//! Payload bit order: bit *i* at byte `i/8` bit `i%8` (LSB-first — the
+//! same order as the packed words).
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -21,42 +39,200 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use super::request::{InferOptions, InferResponse, Ticket};
 use super::InferService;
 use crate::bnn::packing::Packed;
 
 pub const MAGIC_REQ: u8 = 0xB1;
 pub const MAGIC_RESP: u8 = 0xB2;
 pub const MAGIC_ERR: u8 = 0xBE;
+pub const MAGIC_REQ_V2: u8 = 0xC1;
+pub const MAGIC_RESP_V2: u8 = 0xC2;
+
+/// v1 frames are fixed to the paper's 28×28 binarized images.
 pub const IMAGE_BITS: usize = 784;
 pub const PAYLOAD_BYTES: usize = IMAGE_BITS.div_ceil(8); // 98
 
-/// Encode a packed image as a request frame.
-pub fn encode_request(image: &Packed) -> Vec<u8> {
-    assert_eq!(image.n_bits, IMAGE_BITS);
-    let bits = image.to_bits();
-    let mut payload = vec![0u8; PAYLOAD_BYTES];
-    for (i, &b) in bits.iter().enumerate() {
-        payload[i / 8] |= b << (i % 8);
+/// v2 feature bits (request byte 1, echoed in responses).
+pub const FEAT_LOGITS: u8 = 0x01;
+pub const FEAT_TOPK: u8 = 0x02;
+pub const FEAT_MASK: u8 = FEAT_LOGITS | FEAT_TOPK;
+
+/// Hard protocol limits — anything beyond them is a [`WireStatus::TooLarge`]
+/// error, not an attempted allocation.
+pub const MAX_WIRE_BITS: usize = 1 << 20;
+pub const MAX_WIRE_BATCH: usize = 1024;
+pub const MAX_WIRE_CLASSES: usize = 4096;
+
+/// Shared error taxonomy, used as the v1 error code byte and the v2 status
+/// byte (v1 kept its historical numeric values).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum WireStatus {
+    Ok = 0,
+    BadMagic = 1,
+    BadLength = 2,
+    /// The backend refused the request (e.g. image width ≠ model width).
+    Backend = 3,
+    TooLarge = 4,
+    BadFeature = 5,
+    /// A status byte this build does not know (forward compatibility).
+    Unknown = 255,
+}
+
+impl WireStatus {
+    pub fn from_u8(b: u8) -> WireStatus {
+        match b {
+            0 => WireStatus::Ok,
+            1 => WireStatus::BadMagic,
+            2 => WireStatus::BadLength,
+            3 => WireStatus::Backend,
+            4 => WireStatus::TooLarge,
+            5 => WireStatus::BadFeature,
+            _ => WireStatus::Unknown,
+        }
     }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WireStatus::Ok => "ok",
+            WireStatus::BadMagic => "bad-magic",
+            WireStatus::BadLength => "bad-length",
+            WireStatus::Backend => "backend-error",
+            WireStatus::TooLarge => "too-large",
+            WireStatus::BadFeature => "bad-feature",
+            WireStatus::Unknown => "unknown-status",
+        }
+    }
+}
+
+/// A typed wire-layer failure: the status the peer should see, the frame id
+/// when it was parsed far enough to know it, and a human-readable detail.
+#[derive(Debug)]
+pub struct WireError {
+    pub status: WireStatus,
+    pub id: Option<u64>,
+    msg: String,
+}
+
+impl WireError {
+    fn new(status: WireStatus, msg: impl Into<String>) -> Self {
+        Self {
+            status,
+            id: None,
+            msg: msg.into(),
+        }
+    }
+
+    fn with_id(mut self, id: u64) -> Self {
+        self.id = Some(id);
+        self
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.status.name(), self.msg)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+// ---------------------------------------------------------------------------
+// payload codec (shared by v1 and v2)
+
+/// Bytes needed for an `n_bits` payload.
+pub fn payload_bytes(n_bits: usize) -> usize {
+    n_bits.div_ceil(8)
+}
+
+/// Serialize a packed image into LSB-first payload bytes.
+///
+/// The wire layout (bit *i* at byte `i/8`, bit `i%8`) is byte-identical to
+/// the little-endian serialization of the packed u64 words (bit *i* at
+/// word `i/64`, bit `i%64`), so this is a straight byte copy — no
+/// per-bit work even at [`MAX_WIRE_BITS`]-sized images.
+pub fn bits_to_payload(image: &Packed) -> Vec<u8> {
+    let n = payload_bytes(image.n_bits);
+    let mut payload = Vec::with_capacity(image.words.len() * 8);
+    for w in &image.words {
+        payload.extend_from_slice(&w.to_le_bytes());
+    }
+    payload.truncate(n);
+    // mask padding bits of a partial final byte (defensive: a hand-built
+    // Packed with dirty word padding must not leak onto the wire)
+    if image.n_bits % 8 != 0 {
+        if let Some(last) = payload.last_mut() {
+            *last &= (1u8 << (image.n_bits % 8)) - 1;
+        }
+    }
+    payload
+}
+
+fn unpack_payload(payload: &[u8], n_bits: usize) -> Packed {
+    // inverse of `bits_to_payload`: the payload bytes are the words'
+    // little-endian bytes (zero-padded tail), so assemble words directly
+    let n_words = n_bits.div_ceil(64);
+    let mut words = vec![0u64; n_words];
+    for (i, chunk) in payload.chunks(8).enumerate() {
+        let mut b = [0u8; 8];
+        b[..chunk.len()].copy_from_slice(chunk);
+        words[i] = u64::from_le_bytes(b);
+    }
+    // ignore any payload bits at or beyond n_bits (same contract as the
+    // old per-bit decoder)
+    if n_bits % 64 != 0 {
+        words[n_words - 1] &= (1u64 << (n_bits % 64)) - 1;
+    }
+    Packed { words, n_bits }
+}
+
+/// Decode an exactly-sized payload into a packed image, with explicit
+/// truncated/oversized diagnostics.
+pub fn payload_to_packed(payload: &[u8], n_bits: usize) -> Result<Packed> {
+    anyhow::ensure!(n_bits >= 1, "payload width must be ≥ 1 bit");
+    let want = payload_bytes(n_bits);
+    if payload.len() < want {
+        bail!(
+            "truncated payload: {} of {want} bytes for {n_bits} bits",
+            payload.len()
+        );
+    }
+    if payload.len() > want {
+        bail!(
+            "oversized payload: {} bytes where {n_bits} bits need {want}",
+            payload.len()
+        );
+    }
+    Ok(unpack_payload(payload, n_bits))
+}
+
+// ---------------------------------------------------------------------------
+// v1 frames
+
+/// Encode a packed image as a v1 request frame.  v1 is fixed-width: any
+/// other size is an error (v2 carries arbitrary widths).
+pub fn encode_request(image: &Packed) -> Result<Vec<u8>> {
+    anyhow::ensure!(
+        image.n_bits == IMAGE_BITS,
+        "v1 frames are fixed at {IMAGE_BITS} bits, got {} — use the v2 protocol \
+         (encode_request_v2) for other widths",
+        image.n_bits
+    );
+    let payload = bits_to_payload(image);
     let mut frame = Vec::with_capacity(3 + PAYLOAD_BYTES);
     frame.push(MAGIC_REQ);
     frame.extend_from_slice(&(PAYLOAD_BYTES as u16).to_le_bytes());
     frame.extend_from_slice(&payload);
-    frame
+    Ok(frame)
 }
 
-/// Decode a request payload into a packed image.
+/// Decode a v1 request payload into a packed image.
 pub fn decode_payload(payload: &[u8]) -> Result<Packed> {
-    if payload.len() != PAYLOAD_BYTES {
-        bail!("payload {} bytes, expected {PAYLOAD_BYTES}", payload.len());
-    }
-    let bits: Vec<u8> = (0..IMAGE_BITS)
-        .map(|i| (payload[i / 8] >> (i % 8)) & 1)
-        .collect();
-    Ok(Packed::from_bits(&bits))
+    payload_to_packed(payload, IMAGE_BITS)
 }
 
-/// A parsed response frame.
+/// A parsed v1 response frame.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct WireResponse {
     pub digit: u8,
@@ -69,8 +245,8 @@ pub fn encode_response(digit: u8, latency_us: u32) -> [u8; 7] {
     [MAGIC_RESP, digit, 0, l[0], l[1], l[2], l[3]]
 }
 
-pub fn encode_error(code: u8) -> [u8; 7] {
-    [MAGIC_ERR, code, 0, 0, 0, 0, 0]
+pub fn encode_error(status: WireStatus) -> [u8; 7] {
+    [MAGIC_ERR, status as u8, 0, 0, 0, 0, 0]
 }
 
 pub fn decode_response(frame: &[u8; 7]) -> Result<WireResponse> {
@@ -80,23 +256,341 @@ pub fn decode_response(frame: &[u8; 7]) -> Result<WireResponse> {
             status: frame[2],
             latency_us: u32::from_le_bytes([frame[3], frame[4], frame[5], frame[6]]),
         }),
-        MAGIC_ERR => bail!("server error code {}", frame[1]),
+        MAGIC_ERR => bail!("server error: {}", WireStatus::from_u8(frame[1]).name()),
         m => bail!("bad response magic {m:#x}"),
     }
 }
 
-/// A running TCP server bound to a coordinator.
+// ---------------------------------------------------------------------------
+// v2 frames
+
+/// A parsed v2 request frame: client-supplied id, per-request options, and
+/// one or more equal-width images.
+#[derive(Clone, Debug)]
+pub struct WireRequestV2 {
+    pub id: u64,
+    pub opts: InferOptions,
+    pub images: Vec<Packed>,
+}
+
+/// One classified image inside a v2 response.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireItem {
+    /// Echoed id: the frame id plus the image's index within its batch.
+    pub id: u64,
+    pub digit: u8,
+    pub latency_us: u32,
+    /// Present iff the request set [`FEAT_LOGITS`].
+    pub logits: Vec<i32>,
+    /// Present iff the request set [`FEAT_TOPK`]; best first.  Class ids
+    /// are u16 on the wire ([`MAX_WIRE_CLASSES`] fits).
+    pub top_k: Vec<(u16, i32)>,
+}
+
+/// A parsed v2 response frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireResponseV2 {
+    pub id: u64,
+    pub status: WireStatus,
+    pub features: u8,
+    pub items: Vec<WireItem>,
+}
+
+/// The v2 `(features, top_k)` header bytes for a set of options.
+pub fn encode_features(opts: &InferOptions) -> (u8, u8) {
+    let mut features = 0u8;
+    if opts.include_logits {
+        features |= FEAT_LOGITS;
+    }
+    let k = match opts.top_k {
+        Some(k) => {
+            features |= FEAT_TOPK;
+            k as u8
+        }
+        None => 0,
+    };
+    (features, k)
+}
+
+fn decode_features(features: u8, top_k: u8) -> InferOptions {
+    InferOptions {
+        include_logits: features & FEAT_LOGITS != 0,
+        top_k: (features & FEAT_TOPK != 0).then_some(top_k as usize),
+    }
+}
+
+/// Encode a v2 request frame: `id` is echoed back, image `i` answers as
+/// `id + i`.  All images must share one width in `1..=MAX_WIRE_BITS`.
+pub fn encode_request_v2(images: &[Packed], id: u64, opts: InferOptions) -> Result<Vec<u8>> {
+    anyhow::ensure!(!images.is_empty(), "a v2 frame needs ≥ 1 image");
+    anyhow::ensure!(
+        images.len() <= MAX_WIRE_BATCH,
+        "{} images exceed the per-frame batch limit {MAX_WIRE_BATCH}",
+        images.len()
+    );
+    let n_bits = images[0].n_bits;
+    anyhow::ensure!(
+        (1..=MAX_WIRE_BITS).contains(&n_bits),
+        "image width {n_bits} outside 1..={MAX_WIRE_BITS}"
+    );
+    for (i, img) in images.iter().enumerate() {
+        anyhow::ensure!(
+            img.n_bits == n_bits,
+            "a v2 frame carries one width: image 0 has {n_bits} bits, image {i} has {}",
+            img.n_bits
+        );
+    }
+    if let Some(k) = opts.top_k {
+        anyhow::ensure!((1..=255).contains(&k), "top_k must be in 1..=255, got {k}");
+    }
+    let (features, top_k) = encode_features(&opts);
+    let mut frame = Vec::with_capacity(17 + images.len() * payload_bytes(n_bits));
+    frame.push(MAGIC_REQ_V2);
+    frame.push(features);
+    frame.push(top_k);
+    frame.extend_from_slice(&id.to_le_bytes());
+    frame.extend_from_slice(&(images.len() as u16).to_le_bytes());
+    frame.extend_from_slice(&(n_bits as u32).to_le_bytes());
+    for img in images {
+        frame.extend_from_slice(&bits_to_payload(img));
+    }
+    Ok(frame)
+}
+
+fn truncated(what: &str) -> impl Fn(std::io::Error) -> WireError + '_ {
+    move |e| WireError::new(WireStatus::BadLength, format!("truncated {what}: {e}"))
+}
+
+/// Read and validate a v2 request body from `r` — the magic byte has
+/// already been consumed by the dispatcher.
+pub fn read_request_v2_body(r: &mut impl Read) -> Result<WireRequestV2, WireError> {
+    let mut head = [0u8; 16];
+    r.read_exact(&mut head).map_err(truncated("v2 header"))?;
+    let features = head[0];
+    let top_k = head[1];
+    let id = u64::from_le_bytes(head[2..10].try_into().unwrap());
+    let n_images = u16::from_le_bytes([head[10], head[11]]) as usize;
+    let n_bits = u32::from_le_bytes(head[12..16].try_into().unwrap()) as usize;
+    if features & !FEAT_MASK != 0 {
+        return Err(
+            WireError::new(WireStatus::BadFeature, format!("unknown feature bits {features:#04x}"))
+                .with_id(id),
+        );
+    }
+    if features & FEAT_TOPK != 0 && top_k == 0 {
+        return Err(WireError::new(WireStatus::BadFeature, "top-k requested with k = 0").with_id(id));
+    }
+    if n_images == 0 {
+        return Err(WireError::new(WireStatus::BadLength, "v2 frame with 0 images").with_id(id));
+    }
+    if n_images > MAX_WIRE_BATCH {
+        return Err(WireError::new(
+            WireStatus::TooLarge,
+            format!("{n_images} images exceed the per-frame batch limit {MAX_WIRE_BATCH}"),
+        )
+        .with_id(id));
+    }
+    if n_bits == 0 {
+        return Err(WireError::new(WireStatus::BadLength, "v2 frame with 0-bit images").with_id(id));
+    }
+    if n_bits > MAX_WIRE_BITS {
+        return Err(WireError::new(
+            WireStatus::TooLarge,
+            format!("image width {n_bits} exceeds the limit {MAX_WIRE_BITS}"),
+        )
+        .with_id(id));
+    }
+    let pb = payload_bytes(n_bits);
+    let mut payload = vec![0u8; pb];
+    let mut images = Vec::with_capacity(n_images);
+    for i in 0..n_images {
+        r.read_exact(&mut payload)
+            .map_err(|e| {
+                WireError::new(
+                    WireStatus::BadLength,
+                    format!("truncated payload for image {i}: {e}"),
+                )
+                .with_id(id)
+            })?;
+        images.push(unpack_payload(&payload, n_bits));
+    }
+    Ok(WireRequestV2 {
+        id,
+        opts: decode_features(features, top_k),
+        images,
+    })
+}
+
+/// Encode a v2 response frame (`status != Ok` ⇒ `items` is empty).
+/// The write side enforces the same limits the read side checks, so the
+/// encoder can never emit a frame its own decoder rejects — or silently
+/// truncate a count field and desync the stream.
+pub fn encode_response_v2(
+    id: u64,
+    status: WireStatus,
+    features: u8,
+    top_k: u8,
+    items: &[WireItem],
+) -> Result<Vec<u8>> {
+    anyhow::ensure!(
+        items.len() <= MAX_WIRE_BATCH,
+        "{} response items exceed the batch limit {MAX_WIRE_BATCH}",
+        items.len()
+    );
+    for it in items {
+        if features & FEAT_LOGITS != 0 {
+            anyhow::ensure!(
+                it.logits.len() <= MAX_WIRE_CLASSES,
+                "{} logits exceed the class limit {MAX_WIRE_CLASSES}",
+                it.logits.len()
+            );
+        }
+        if features & FEAT_TOPK != 0 {
+            anyhow::ensure!(
+                it.top_k.len() <= 255,
+                "top-k section of {} entries exceeds 255",
+                it.top_k.len()
+            );
+        }
+    }
+    let mut f = Vec::with_capacity(14 + items.len() * 13);
+    f.push(MAGIC_RESP_V2);
+    f.push(status as u8);
+    f.push(features);
+    f.push(top_k);
+    f.extend_from_slice(&id.to_le_bytes());
+    f.extend_from_slice(&(items.len() as u16).to_le_bytes());
+    for it in items {
+        f.extend_from_slice(&it.id.to_le_bytes());
+        f.push(it.digit);
+        f.extend_from_slice(&it.latency_us.to_le_bytes());
+        if features & FEAT_LOGITS != 0 {
+            f.extend_from_slice(&(it.logits.len() as u16).to_le_bytes());
+            for &l in &it.logits {
+                f.extend_from_slice(&l.to_le_bytes());
+            }
+        }
+        if features & FEAT_TOPK != 0 {
+            f.push(it.top_k.len() as u8);
+            for &(class, logit) in &it.top_k {
+                f.extend_from_slice(&class.to_le_bytes());
+                f.extend_from_slice(&logit.to_le_bytes());
+            }
+        }
+    }
+    Ok(f)
+}
+
+/// A v2 error frame: non-Ok status, zero items.
+pub fn encode_error_v2(id: u64, status: WireStatus) -> Vec<u8> {
+    encode_response_v2(id, status, 0, 0, &[]).expect("an empty v2 frame always encodes")
+}
+
+/// Read one complete v2 response frame (including the magic byte) from `r`.
+pub fn read_response_v2(r: &mut impl Read) -> Result<WireResponseV2, WireError> {
+    let mut head = [0u8; 14];
+    r.read_exact(&mut head).map_err(truncated("v2 response header"))?;
+    if head[0] != MAGIC_RESP_V2 {
+        return Err(WireError::new(
+            WireStatus::BadMagic,
+            format!("bad v2 response magic {:#04x}", head[0]),
+        ));
+    }
+    let status = WireStatus::from_u8(head[1]);
+    let features = head[2];
+    let id = u64::from_le_bytes(head[4..12].try_into().unwrap());
+    let n_items = u16::from_le_bytes([head[12], head[13]]) as usize;
+    if features & !FEAT_MASK != 0 {
+        return Err(WireError::new(
+            WireStatus::BadFeature,
+            format!("unknown response feature bits {features:#04x}"),
+        )
+        .with_id(id));
+    }
+    if n_items > MAX_WIRE_BATCH {
+        return Err(WireError::new(
+            WireStatus::TooLarge,
+            format!("{n_items} response items exceed the batch limit {MAX_WIRE_BATCH}"),
+        )
+        .with_id(id));
+    }
+    let mut items = Vec::with_capacity(n_items);
+    for i in 0..n_items {
+        let mut fixed = [0u8; 13];
+        r.read_exact(&mut fixed)
+            .map_err(|e| {
+                WireError::new(WireStatus::BadLength, format!("truncated response item {i}: {e}"))
+                    .with_id(id)
+            })?;
+        let item_id = u64::from_le_bytes(fixed[0..8].try_into().unwrap());
+        let digit = fixed[8];
+        let latency_us = u32::from_le_bytes(fixed[9..13].try_into().unwrap());
+        let logits = if features & FEAT_LOGITS != 0 {
+            let mut nb = [0u8; 2];
+            r.read_exact(&mut nb).map_err(truncated("logits length"))?;
+            let n = u16::from_le_bytes(nb) as usize;
+            if n > MAX_WIRE_CLASSES {
+                return Err(WireError::new(
+                    WireStatus::TooLarge,
+                    format!("{n} logits exceed the class limit {MAX_WIRE_CLASSES}"),
+                )
+                .with_id(id));
+            }
+            let mut buf = vec![0u8; n * 4];
+            r.read_exact(&mut buf).map_err(truncated("logits section"))?;
+            buf.chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let top_k = if features & FEAT_TOPK != 0 {
+            let mut kb = [0u8; 1];
+            r.read_exact(&mut kb).map_err(truncated("top-k length"))?;
+            let mut buf = vec![0u8; kb[0] as usize * 6];
+            r.read_exact(&mut buf).map_err(truncated("top-k section"))?;
+            buf.chunks_exact(6)
+                .map(|c| {
+                    (
+                        u16::from_le_bytes([c[0], c[1]]),
+                        i32::from_le_bytes(c[2..6].try_into().unwrap()),
+                    )
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        items.push(WireItem {
+            id: item_id,
+            digit,
+            latency_us,
+            logits,
+            top_k,
+        });
+    }
+    Ok(WireResponseV2 {
+        id,
+        status,
+        features,
+        items,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// server
+
+/// A running TCP server bound to a serving engine.
 pub struct WireServer {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
+    /// Images served OK (a v2 batch frame counts once per image).
     pub served: Arc<AtomicU64>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl WireServer {
     /// Bind `addr` (e.g. "127.0.0.1:0") and serve requests through any
-    /// [`InferService`] (single-queue [`super::Coordinator`] or sharded
-    /// [`super::WorkerPool`]).
+    /// [`InferService`] — usually an [`super::Engine`].
     pub fn start<S: InferService + 'static>(addr: &str, service: Arc<S>) -> Result<WireServer> {
         let service: Arc<dyn InferService> = service;
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
@@ -152,74 +646,250 @@ impl Drop for WireServer {
 
 fn handle_conn(
     mut stream: TcpStream,
-    coord: Arc<dyn InferService>,
+    service: Arc<dyn InferService>,
     served: Arc<AtomicU64>,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     loop {
-        let mut header = [0u8; 3];
-        match stream.read_exact(&mut header) {
+        let mut magic = [0u8; 1];
+        match stream.read_exact(&mut magic) {
             Ok(()) => {}
             Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(()),
             Err(e) => return Err(e.into()),
         }
-        if header[0] != MAGIC_REQ {
-            stream.write_all(&encode_error(1))?;
-            bail!("bad request magic {:#x}", header[0]);
-        }
-        let len = u16::from_le_bytes([header[1], header[2]]) as usize;
-        if len != PAYLOAD_BYTES {
-            stream.write_all(&encode_error(2))?;
-            bail!("bad payload length {len}");
-        }
-        let mut payload = vec![0u8; len];
-        stream.read_exact(&mut payload)?;
-        match decode_payload(&payload).and_then(|img| coord.infer(img)) {
-            Ok(resp) => {
-                let us = (resp.latency_ns / 1000).min(u32::MAX as u64) as u32;
-                stream.write_all(&encode_response(resp.digit, us))?;
-                served.fetch_add(1, Ordering::Relaxed);
+        match magic[0] {
+            MAGIC_REQ => handle_v1(&mut stream, &service, &served)?,
+            MAGIC_REQ_V2 => handle_v2(&mut stream, &service, &served)?,
+            m => {
+                // version unknown, so answer in the lowest common form and
+                // drop the connection (framing can't be trusted any more)
+                let _ = stream.write_all(&encode_error(WireStatus::BadMagic));
+                bail!("bad request magic {m:#x}");
             }
-            Err(_) => stream.write_all(&encode_error(3))?,
         }
     }
 }
 
-/// Blocking client for tests/tools.
+fn handle_v1(
+    stream: &mut TcpStream,
+    service: &Arc<dyn InferService>,
+    served: &Arc<AtomicU64>,
+) -> Result<()> {
+    let mut len_b = [0u8; 2];
+    stream.read_exact(&mut len_b)?;
+    let len = u16::from_le_bytes(len_b) as usize;
+    if len != PAYLOAD_BYTES {
+        stream.write_all(&encode_error(WireStatus::BadLength))?;
+        bail!("bad v1 payload length {len} (expected {PAYLOAD_BYTES})");
+    }
+    let mut payload = vec![0u8; len];
+    stream.read_exact(&mut payload)?;
+    match decode_payload(&payload).and_then(|img| service.infer(img)) {
+        Ok(resp) => {
+            let us = (resp.latency_ns / 1000).min(u32::MAX as u64) as u32;
+            stream.write_all(&encode_response(resp.digit, us))?;
+            served.fetch_add(1, Ordering::Relaxed);
+        }
+        Err(_) => stream.write_all(&encode_error(WireStatus::Backend))?,
+    }
+    Ok(())
+}
+
+fn handle_v2(
+    stream: &mut TcpStream,
+    service: &Arc<dyn InferService>,
+    served: &Arc<AtomicU64>,
+) -> Result<()> {
+    let req = match read_request_v2_body(stream) {
+        Ok(r) => r,
+        Err(e) => {
+            // protocol-level failure: answer with the typed status, then
+            // drop the connection (stream position is undefined)
+            let _ = stream.write_all(&encode_error_v2(e.id.unwrap_or(0), e.status));
+            return Err(e.into());
+        }
+    };
+    let (features, top_k) = encode_features(&req.opts);
+    // submit the whole frame before waiting on anything, so the dynamic
+    // batcher sees the batch as one burst
+    let opts = req.opts;
+    // Submit the whole frame before waiting on anything (one burst for
+    // the dynamic batcher), with no short-circuit at either stage: every
+    // submit is attempted and every created ticket is waited, even when
+    // some fail.  A failed frame is the engine's `rejected` count —
+    // dropping live tickets early would miscount them as client cancels.
+    let submitted: Vec<Result<Ticket>> = req
+        .images
+        .into_iter()
+        .map(|img| service.submit_with(img, opts))
+        .collect();
+    let waited: Vec<Result<InferResponse>> = submitted
+        .into_iter()
+        .map(|t| t.and_then(Ticket::wait))
+        .collect();
+    let responses: Result<Vec<InferResponse>> = waited.into_iter().collect();
+    match responses {
+        Ok(rs) => {
+            let items: Vec<WireItem> = rs
+                .into_iter()
+                .enumerate()
+                .map(|(i, r)| WireItem {
+                    id: req.id.wrapping_add(i as u64),
+                    digit: r.digit,
+                    latency_us: (r.latency_ns / 1000).min(u32::MAX as u64) as u32,
+                    logits: r.logits,
+                    top_k: r.top_k,
+                })
+                .collect();
+            match encode_response_v2(req.id, WireStatus::Ok, features, top_k, &items) {
+                Ok(frame) => {
+                    stream.write_all(&frame)?;
+                    served.fetch_add(items.len() as u64, Ordering::Relaxed);
+                }
+                // e.g. a model with more classes than the wire carries
+                Err(_) => stream.write_all(&encode_error_v2(req.id, WireStatus::TooLarge))?,
+            }
+        }
+        // backend refusal (e.g. width mismatch) fails the whole frame but
+        // keeps the connection: the frame boundary is intact
+        Err(_) => stream.write_all(&encode_error_v2(req.id, WireStatus::Backend))?,
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// client
+
+/// Blocking client for tests/tools.  Speaks v1 ([`Self::classify`]) and v2
+/// ([`Self::classify_v2`], [`Self::classify_batch`],
+/// [`Self::classify_pipelined`]); v2 request ids are drawn from a
+/// per-connection counter and verified against the echoes.
 pub struct WireClient {
     stream: TcpStream,
+    next_id: u64,
 }
 
 impl WireClient {
+    /// Max unanswered frames [`Self::classify_pipelined`] keeps in flight
+    /// (64 single-image requests ≈ a few KB — far under any socket
+    /// buffer, while still hiding the per-frame round trip).
+    pub const PIPELINE_WINDOW: usize = 64;
+
     pub fn connect(addr: std::net::SocketAddr) -> Result<WireClient> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
-        Ok(WireClient { stream })
+        Ok(WireClient { stream, next_id: 1 })
     }
 
+    fn take_ids(&mut self, n: u64) -> u64 {
+        let base = self.next_id;
+        self.next_id = self.next_id.wrapping_add(n);
+        base
+    }
+
+    /// v1 round trip (784-bit images only).
     pub fn classify(&mut self, image: &Packed) -> Result<WireResponse> {
-        self.stream.write_all(&encode_request(image))?;
+        self.stream.write_all(&encode_request(image)?)?;
         let mut frame = [0u8; 7];
         self.stream.read_exact(&mut frame)?;
         decode_response(&frame)
+    }
+
+    /// v2 round trip for one image.
+    pub fn classify_v2(&mut self, image: &Packed, opts: InferOptions) -> Result<WireItem> {
+        let mut items = self.classify_batch(std::slice::from_ref(image), opts)?;
+        Ok(items.pop().expect("one item per image"))
+    }
+
+    /// One batched v2 frame: `images.len()` images in, one response frame
+    /// with per-image ids/digits out.
+    pub fn classify_batch(
+        &mut self,
+        images: &[Packed],
+        opts: InferOptions,
+    ) -> Result<Vec<WireItem>> {
+        let id = self.take_ids(images.len() as u64);
+        self.stream.write_all(&encode_request_v2(images, id, opts)?)?;
+        let resp = read_response_v2(&mut self.stream)?;
+        anyhow::ensure!(
+            resp.status == WireStatus::Ok,
+            "server error: {} (frame id {})",
+            resp.status.name(),
+            resp.id
+        );
+        anyhow::ensure!(resp.id == id, "response id {} for request {id}", resp.id);
+        anyhow::ensure!(
+            resp.items.len() == images.len(),
+            "{} items for {} images",
+            resp.items.len(),
+            images.len()
+        );
+        Ok(resp.items)
+    }
+
+    /// Pipelined v2: keep up to [`Self::PIPELINE_WINDOW`] single-image
+    /// frames in flight on one connection — one in-flight *window* instead
+    /// of one round trip per image.  The window is bounded so an
+    /// arbitrarily long image list can never wedge both peers against
+    /// full TCP buffers (the server answers frame-by-frame and would stop
+    /// reading once its send buffer filled).
+    pub fn classify_pipelined(
+        &mut self,
+        images: &[Packed],
+        opts: InferOptions,
+    ) -> Result<Vec<WireItem>> {
+        let base = self.take_ids(images.len() as u64);
+        let mut out = Vec::with_capacity(images.len());
+        for (i, img) in images.iter().enumerate() {
+            let frame = encode_request_v2(std::slice::from_ref(img), base.wrapping_add(i as u64), opts)?;
+            self.stream.write_all(&frame)?;
+            if i + 1 - out.len() >= Self::PIPELINE_WINDOW {
+                self.read_pipelined_item(base, out.len(), &mut out)?;
+            }
+        }
+        while out.len() < images.len() {
+            self.read_pipelined_item(base, out.len(), &mut out)?;
+        }
+        Ok(out)
+    }
+
+    /// Read + validate the next pipelined response (request `base + idx`).
+    fn read_pipelined_item(&mut self, base: u64, idx: usize, out: &mut Vec<WireItem>) -> Result<()> {
+        let want_id = base.wrapping_add(idx as u64);
+        let resp = read_response_v2(&mut self.stream)?;
+        anyhow::ensure!(
+            resp.status == WireStatus::Ok,
+            "server error: {} (frame id {})",
+            resp.status.name(),
+            resp.id
+        );
+        anyhow::ensure!(resp.id == want_id, "response id {} for request {want_id}", resp.id);
+        anyhow::ensure!(resp.items.len() == 1, "{} items for 1 image", resp.items.len());
+        out.push(resp.items.into_iter().next().unwrap());
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::Engine;
     use crate::util::prng::Xoshiro256;
 
-    fn image(seed: u64) -> Packed {
+    fn image_of(seed: u64, n_bits: usize) -> Packed {
         let mut rng = Xoshiro256::new(seed);
-        let bits: Vec<u8> = (0..IMAGE_BITS).map(|_| rng.bool() as u8).collect();
+        let bits: Vec<u8> = (0..n_bits).map(|_| rng.bool() as u8).collect();
         Packed::from_bits(&bits)
     }
 
+    fn image(seed: u64) -> Packed {
+        image_of(seed, IMAGE_BITS)
+    }
+
     #[test]
-    fn frame_roundtrip() {
+    fn v1_frame_roundtrip() {
         let img = image(1);
-        let frame = encode_request(&img);
+        let frame = encode_request(&img).unwrap();
         assert_eq!(frame[0], MAGIC_REQ);
         assert_eq!(frame.len(), 3 + PAYLOAD_BYTES);
         let decoded = decode_payload(&frame[3..]).unwrap();
@@ -227,72 +897,245 @@ mod tests {
     }
 
     #[test]
-    fn response_roundtrip() {
+    fn v1_rejects_other_widths_instead_of_panicking() {
+        let e = encode_request(&image_of(2, 100)).unwrap_err();
+        assert!(format!("{e}").contains("v2"), "{e}");
+    }
+
+    #[test]
+    fn v1_response_roundtrip() {
         let f = encode_response(7, 123_456);
         let r = decode_response(&f).unwrap();
         assert_eq!(r, WireResponse { digit: 7, status: 0, latency_us: 123_456 });
-        assert!(decode_response(&encode_error(3)).is_err());
+        assert!(decode_response(&encode_error(WireStatus::Backend)).is_err());
         assert!(decode_response(&[0u8; 7]).is_err());
     }
 
     #[test]
-    fn bad_payload_rejected() {
-        assert!(decode_payload(&[0u8; 10]).is_err());
+    fn payload_layout_is_lsb_first_bytes() {
+        // the word-level fast path must serialize exactly the documented
+        // bit-i-at-byte-i/8-bit-i%8 layout (per-bit reference built here)
+        for n_bits in [1usize, 7, 8, 63, 64, 65, 77, 784] {
+            let img = image_of(60 + n_bits as u64, n_bits);
+            let payload = bits_to_payload(&img);
+            let bits = img.to_bits();
+            let mut want = vec![0u8; payload_bytes(n_bits)];
+            for (i, &b) in bits.iter().enumerate() {
+                want[i / 8] |= b << (i % 8);
+            }
+            assert_eq!(payload, want, "width {n_bits}");
+            let back = payload_to_packed(&payload, n_bits).unwrap();
+            assert_eq!(back.words, img.words, "width {n_bits}");
+            assert_eq!(back.n_bits, n_bits);
+        }
+        // dirty padding in a hand-built Packed must not leak onto the wire
+        let dirty = Packed { words: vec![u64::MAX], n_bits: 5 };
+        assert_eq!(bits_to_payload(&dirty), vec![0b0001_1111u8]);
     }
 
     #[test]
-    fn tcp_end_to_end() {
-        use crate::bnn::model::model_from_sign_rows;
-        use crate::coordinator::{BatcherConfig, Coordinator, NativeBackend};
+    fn v1_payloads_hardened_against_bad_sizes() {
+        let truncated = decode_payload(&[0u8; 10]).unwrap_err();
+        assert!(format!("{truncated}").contains("truncated"), "{truncated}");
+        let oversized = decode_payload(&[0u8; 200]).unwrap_err();
+        assert!(format!("{oversized}").contains("oversized"), "{oversized}");
+    }
 
-        let mut rng = Xoshiro256::new(5);
-        let dims = [784usize, 128, 64, 10];
-        let mut spec = Vec::new();
-        for (li, w) in dims.windows(2).enumerate() {
-            let rows: Vec<Vec<i8>> = (0..w[1])
-                .map(|_| (0..w[0]).map(|_| if rng.bool() { 1 } else { -1 }).collect())
-                .collect();
-            spec.push((rows, (li + 2 < dims.len()).then(|| vec![0i32; w[1]])));
+    #[test]
+    fn v2_request_roundtrip_all_sections() {
+        let imgs = vec![image_of(3, 65), image_of(4, 65), image_of(5, 65)];
+        let opts = InferOptions::default().with_top_k(3);
+        let frame = encode_request_v2(&imgs, 42, opts).unwrap();
+        assert_eq!(frame[0], MAGIC_REQ_V2);
+        let mut cur = std::io::Cursor::new(&frame[1..]);
+        let req = read_request_v2_body(&mut cur).unwrap();
+        assert_eq!(cur.position() as usize, frame.len() - 1, "frame fully consumed");
+        assert_eq!(req.id, 42);
+        assert_eq!(req.opts, opts);
+        assert_eq!(req.images.len(), 3);
+        for (a, b) in req.images.iter().zip(&imgs) {
+            assert_eq!(a.n_bits, b.n_bits);
+            assert_eq!(a.words, b.words);
         }
-        let model = model_from_sign_rows(spec).unwrap();
-        let coord = Arc::new(
-            Coordinator::start(
-                Arc::new(NativeBackend::new(model.clone())),
-                BatcherConfig::default(),
-                1,
-            )
-            .unwrap(),
+    }
+
+    #[test]
+    fn v2_request_validation() {
+        assert!(encode_request_v2(&[], 1, InferOptions::default()).is_err());
+        // mixed widths refuse to encode
+        let mixed = vec![image_of(6, 64), image_of(7, 63)];
+        assert!(encode_request_v2(&mixed, 1, InferOptions::default()).is_err());
+        // absurd top-k refuses to encode
+        let one = vec![image_of(8, 64)];
+        assert!(encode_request_v2(&one, 1, InferOptions::default().with_top_k(0)).is_err());
+        assert!(encode_request_v2(&one, 1, InferOptions::default().with_top_k(300)).is_err());
+    }
+
+    #[test]
+    fn v2_response_roundtrip_with_and_without_sections() {
+        let items = vec![
+            WireItem { id: 9, digit: 3, latency_us: 17, logits: vec![1, -2, 3], top_k: vec![(2, 3), (0, 1)] },
+            WireItem { id: 10, digit: 0, latency_us: 1, logits: vec![5, 4, -9], top_k: vec![(0, 5), (1, 4)] },
+        ];
+        let frame = encode_response_v2(9, WireStatus::Ok, FEAT_LOGITS | FEAT_TOPK, 2, &items).unwrap();
+        let mut cur = std::io::Cursor::new(frame.as_slice());
+        let resp = read_response_v2(&mut cur).unwrap();
+        assert_eq!(cur.position() as usize, frame.len());
+        assert_eq!(resp.status, WireStatus::Ok);
+        assert_eq!(resp.id, 9);
+        assert_eq!(resp.items, items);
+
+        // digit-only response: no logits/top-k bytes on the wire at all
+        let bare = vec![WireItem { id: 1, digit: 7, latency_us: 2, logits: vec![], top_k: vec![] }];
+        let frame = encode_response_v2(1, WireStatus::Ok, 0, 0, &bare).unwrap();
+        assert_eq!(frame.len(), 14 + 13);
+        let resp = read_response_v2(&mut std::io::Cursor::new(frame.as_slice())).unwrap();
+        assert_eq!(resp.items, bare);
+
+        // error frame decodes to a typed status with zero items
+        let err = encode_error_v2(77, WireStatus::TooLarge);
+        let resp = read_response_v2(&mut std::io::Cursor::new(err.as_slice())).unwrap();
+        assert_eq!(resp.status, WireStatus::TooLarge);
+        assert_eq!(resp.id, 77);
+        assert!(resp.items.is_empty());
+    }
+
+    #[test]
+    fn encoder_enforces_the_read_side_limits() {
+        let big = WireItem {
+            id: 1,
+            digit: 0,
+            latency_us: 0,
+            logits: vec![0; MAX_WIRE_CLASSES + 1],
+            top_k: vec![],
+        };
+        assert!(
+            encode_response_v2(1, WireStatus::Ok, FEAT_LOGITS, 0, std::slice::from_ref(&big))
+                .is_err()
         );
-        let server = WireServer::start("127.0.0.1:0", coord).unwrap();
-        let mut client = WireClient::connect(server.addr).unwrap();
-        for seed in 0..5 {
-            let img = image(seed);
-            let r = client.classify(&img).unwrap();
-            assert_eq!(r.digit as usize, model.predict(&img.words), "seed {seed}");
-            assert_eq!(r.status, 0);
+        // without FEAT_LOGITS the oversize vector is never serialized
+        assert!(encode_response_v2(1, WireStatus::Ok, 0, 0, std::slice::from_ref(&big)).is_ok());
+        let many_topk = WireItem {
+            id: 1,
+            digit: 0,
+            latency_us: 0,
+            logits: vec![],
+            top_k: vec![(0, 0); 256],
+        };
+        assert!(encode_response_v2(1, WireStatus::Ok, FEAT_TOPK, 0, &[many_topk]).is_err());
+    }
+
+    #[test]
+    fn v2_truncated_frames_give_typed_errors() {
+        let imgs = vec![image_of(11, 784)];
+        let frame = encode_request_v2(&imgs, 5, InferOptions::default()).unwrap();
+        for cut in [1usize, 8, 16, frame.len() - 1] {
+            let mut cur = std::io::Cursor::new(&frame[1..cut]);
+            let e = read_request_v2_body(&mut cur).unwrap_err();
+            assert_eq!(e.status, WireStatus::BadLength, "cut at {cut}: {e}");
         }
-        assert_eq!(server.served.load(Ordering::Relaxed), 5);
+        let resp = encode_response_v2(5, WireStatus::Ok, FEAT_LOGITS, 0, &[WireItem {
+            id: 5, digit: 1, latency_us: 3, logits: vec![1, 2], top_k: vec![],
+        }])
+        .unwrap();
+        for cut in [2usize, 13, resp.len() - 1] {
+            let mut cur = std::io::Cursor::new(&resp[..cut]);
+            let e = read_response_v2(&mut cur).unwrap_err();
+            assert_eq!(e.status, WireStatus::BadLength, "cut at {cut}: {e}");
+        }
+    }
+
+    #[test]
+    fn v2_header_validation_is_typed() {
+        // hand-crafted headers (after the magic byte):
+        // features, top_k, id[8], n_images[2], n_bits[4]
+        let head = |features: u8, top_k: u8, n_images: u16, n_bits: u32| -> Vec<u8> {
+            let mut h = vec![features, top_k];
+            h.extend_from_slice(&99u64.to_le_bytes());
+            h.extend_from_slice(&n_images.to_le_bytes());
+            h.extend_from_slice(&n_bits.to_le_bytes());
+            h
+        };
+        let cases = [
+            (head(0x80, 0, 1, 64), WireStatus::BadFeature),
+            (head(FEAT_TOPK, 0, 1, 64), WireStatus::BadFeature),
+            (head(0, 0, 0, 64), WireStatus::BadLength),
+            (head(0, 0, u16::MAX, 64), WireStatus::TooLarge),
+            (head(0, 0, 1, 0), WireStatus::BadLength),
+            (head(0, 0, 1, u32::MAX), WireStatus::TooLarge),
+        ];
+        for (bytes, want) in cases {
+            let e = read_request_v2_body(&mut std::io::Cursor::new(bytes.as_slice())).unwrap_err();
+            assert_eq!(e.status, want, "{e}");
+            assert_eq!(e.id, Some(99), "id still echoed: {e}");
+        }
+    }
+
+    #[test]
+    fn tcp_end_to_end_v1_and_v2_against_one_server() {
+        use crate::bnn::model::random_model;
+        use crate::coordinator::Kernel;
+
+        let model = random_model(&[784, 128, 64, 10], 5);
+        let engine = Arc::new(
+            Engine::builder()
+                .native(&model)
+                .kernel(Kernel::default())
+                .workers(2)
+                .build()
+                .unwrap(),
+        );
+        let server = WireServer::start("127.0.0.1:0", engine).unwrap();
+        let mut client = WireClient::connect(server.addr).unwrap();
+        // v1 and v2 single-image classifies agree with direct inference
+        for seed in 0..4 {
+            let img = image(seed);
+            let r1 = client.classify(&img).unwrap();
+            assert_eq!(r1.digit as usize, model.predict(&img.words), "v1 seed {seed}");
+            assert_eq!(r1.status, 0);
+            let r2 = client.classify_v2(&img, InferOptions::default().with_top_k(2)).unwrap();
+            assert_eq!(r2.digit, r1.digit, "v2 seed {seed}");
+            assert_eq!(r2.logits, model.logits(&img.words));
+            assert_eq!(r2.top_k.len(), 2);
+            assert_eq!(r2.top_k[0].0, r2.digit as u16);
+        }
+        // one batched frame: per-image ids and digits
+        let batch: Vec<Packed> = (10..17).map(image).collect();
+        let items = client.classify_batch(&batch, InferOptions::digits_only()).unwrap();
+        assert_eq!(items.len(), batch.len());
+        for (i, (item, img)) in items.iter().zip(&batch).enumerate() {
+            assert_eq!(item.id, items[0].id + i as u64, "ids are base + index");
+            assert_eq!(item.digit as usize, model.predict(&img.words));
+            assert!(item.logits.is_empty(), "digits_only carries no logits");
+        }
+        assert_eq!(
+            server.served.load(Ordering::Relaxed),
+            4 * 2 + batch.len() as u64
+        );
         server.shutdown();
     }
 
     #[test]
-    fn tcp_end_to_end_over_worker_pool() {
+    fn tcp_v2_serves_non_784_widths() {
         use crate::bnn::model::random_model;
-        use crate::coordinator::{BatcherConfig, Kernel, WorkerPool};
 
-        let model = random_model(&[784, 128, 64, 10], 6);
-        let pool = Arc::new(
-            WorkerPool::native(&model, 2, Kernel::default(), BatcherConfig::default()).unwrap(),
-        );
-        let server = WireServer::start("127.0.0.1:0", pool.clone()).unwrap();
+        // a 65-bit model: v2 carries the width, v1 cannot
+        let model = random_model(&[65, 32, 10], 6);
+        let engine = Arc::new(Engine::builder().native(&model).workers(1).build().unwrap());
+        let server = WireServer::start("127.0.0.1:0", engine).unwrap();
         let mut client = WireClient::connect(server.addr).unwrap();
-        for seed in 10..14 {
-            let img = image(seed);
-            let r = client.classify(&img).unwrap();
-            assert_eq!(r.digit as usize, model.predict(&img.words), "seed {seed}");
-            assert_eq!(r.status, 0);
+        for seed in 20..24 {
+            let img = image_of(seed, 65);
+            let item = client.classify_v2(&img, InferOptions::default()).unwrap();
+            assert_eq!(item.digit as usize, model.predict(&img.words), "seed {seed}");
+            assert_eq!(item.logits, model.logits(&img.words));
         }
-        assert_eq!(server.served.load(Ordering::Relaxed), 4);
+        // a 784-bit v1 frame against the 65-bit model is a clean backend
+        // error, not a dead worker: the v2 path keeps serving after it
+        assert!(client.classify(&image(25)).is_err());
+        let img = image_of(26, 65);
+        let item = client.classify_v2(&img, InferOptions::default()).unwrap();
+        assert_eq!(item.digit as usize, model.predict(&img.words));
         server.shutdown();
     }
 }

@@ -19,11 +19,13 @@
 //! * [`runtime`] — PJRT loader/executor for the AOT HLO artifacts the
 //!   Python build path emits (`make artifacts`); Python never runs on the
 //!   request path.
-//! * [`coordinator`] — serving layer: request router + dynamic batcher over
-//!   interchangeable backends (native / PJRT / FPGA-sim), the single-queue
-//!   [`coordinator::Coordinator`] and the sharded multi-worker
-//!   [`coordinator::WorkerPool`] (one backend replica + metrics per
-//!   worker).
+//! * [`coordinator`] — serving layer behind one typed construction path,
+//!   [`coordinator::Engine`]`::builder()`: request router + dynamic
+//!   batcher over interchangeable backends (native / PJRT / FPGA-sim),
+//!   ticketed submissions with per-request options, a single-queue core
+//!   and a sharded multi-worker core (one backend replica + metrics per
+//!   worker), and a TCP wire server speaking protocol v1 and the
+//!   batched, id-echoing v2.
 //! * [`mem`], [`data`] — the paper's `.mem`/idx interchange formats and the
 //!   synthetic-MNIST dataset substrate.
 //! * [`util`], [`config`], [`cli`] — first-party infrastructure (PRNG,

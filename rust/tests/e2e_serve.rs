@@ -1,4 +1,5 @@
-//! End-to-end serving tests: coordinator + worker pool + router under
+//! End-to-end serving tests: the `Engine` builder API (the one public
+//! construction path), tickets, the router and the metrics books under
 //! concurrent load.  Serving mechanics don't depend on trained weights, so
 //! these run on the synthetic fallback when `make artifacts` has not run;
 //! only the PJRT test needs real artifacts (and skips without them).
@@ -8,11 +9,11 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use bnn_fpga::coordinator::{
-    BatcherConfig, Coordinator, InferBackend, Kernel, NativeBackend, PjrtBackend, Router,
-    SimBackend, WorkerPool,
+    BatcherConfig, Engine, InferBackend, InferOptions, Kernel, NativeBackend, PjrtBackend, Router,
+    Ticket,
 };
 use bnn_fpga::data::Dataset;
-use bnn_fpga::runtime::Engine;
+use bnn_fpga::runtime::Engine as PjrtRuntime;
 use bnn_fpga::sim::{MemStyle, SimConfig};
 use bnn_fpga::{artifacts_dir, load_model_or_synth};
 
@@ -22,58 +23,58 @@ fn setup() -> (bnn_fpga::bnn::BnnModel, Dataset) {
 }
 
 #[test]
-fn coordinator_over_pjrt_serves_correctly() {
+fn engine_over_pjrt_serves_correctly() {
     let (model, ds) = setup();
-    let engine = match Engine::load(&artifacts_dir()) {
+    let runtime = match PjrtRuntime::load(&artifacts_dir()) {
         Ok(e) => Arc::new(e),
         Err(e) => {
             eprintln!("skipping PJRT e2e test: {e:#}");
             return;
         }
     };
-    let coord = Coordinator::start(
-        Arc::new(PjrtBackend::new(engine).unwrap()),
-        BatcherConfig {
+    let engine = Engine::builder()
+        .shared(Arc::new(PjrtBackend::new(runtime).unwrap()))
+        .workers(1)
+        .batcher(BatcherConfig {
             max_batch: 32,
             max_wait: Duration::from_micros(500),
-        },
-        1,
-    )
-    .unwrap();
+        })
+        .build()
+        .unwrap();
     let images: Vec<_> = ds.images.iter().take(40).cloned().collect();
-    let responses = coord.infer_many(images.clone()).unwrap();
+    let responses = engine.infer_many(images.clone()).unwrap();
     for (img, r) in images.iter().zip(&responses) {
         assert_eq!(r.digit as usize, model.predict(&img.words));
         assert_eq!(r.backend, "pjrt");
     }
-    assert_eq!(coord.metrics.completed.load(std::sync::atomic::Ordering::Relaxed), 40);
-    coord.shutdown();
+    assert_eq!(engine.metrics().completed.load(Ordering::Relaxed), 40);
+    engine.shutdown();
 }
 
 #[test]
-fn concurrent_submitters_no_loss_no_mixup() {
+fn concurrent_submitters_no_loss_no_mixup_single_queue() {
     let (model, ds) = setup();
-    let coord = Arc::new(
-        Coordinator::start(
-            Arc::new(NativeBackend::new(model.clone())),
-            BatcherConfig {
+    let engine = Arc::new(
+        Engine::builder()
+            .shared(Arc::new(NativeBackend::new(model.clone())))
+            .workers(3)
+            .batcher(BatcherConfig {
                 max_batch: 16,
                 max_wait: Duration::from_micros(100),
-            },
-            3,
-        )
-        .unwrap(),
+            })
+            .build()
+            .unwrap(),
     );
     let mut joins = Vec::new();
     for t in 0..8u64 {
-        let coord = coord.clone();
+        let engine = engine.clone();
         let ds = ds.clone();
         let model = model.clone();
         joins.push(std::thread::spawn(move || {
             for i in 0..25usize {
                 let idx = ((t as usize) * 25 + i) % ds.len();
                 let img = ds.images[idx].clone();
-                let r = coord.infer(img.clone()).unwrap();
+                let r = engine.infer(img.clone()).unwrap();
                 // response must correspond to *this* image (no cross-wiring)
                 assert_eq!(r.logits, model.logits(&img.words), "thread {t} req {i}");
             }
@@ -82,37 +83,35 @@ fn concurrent_submitters_no_loss_no_mixup() {
     for j in joins {
         j.join().unwrap();
     }
-    assert_eq!(
-        coord.metrics.completed.load(std::sync::atomic::Ordering::Relaxed),
-        200
-    );
-    assert_eq!(coord.metrics.rejected.load(std::sync::atomic::Ordering::Relaxed), 0);
+    assert_eq!(engine.metrics().completed.load(Ordering::Relaxed), 200);
+    assert_eq!(engine.metrics().rejected.load(Ordering::Relaxed), 0);
+    assert_eq!(engine.metrics().cancelled.load(Ordering::Relaxed), 0);
 }
 
 #[test]
-fn router_composes_heterogeneous_backends() {
+fn router_composes_heterogeneous_engines() {
     let (model, ds) = setup();
     let mut router = Router::new();
     router.register(
         "native",
-        Coordinator::start(
-            Arc::new(NativeBackend::new(model.clone())),
-            BatcherConfig::default(),
-            1,
-        )
-        .unwrap(),
+        Engine::builder()
+            .native(&model)
+            .kernel(Kernel::Scalar)
+            .workers(1)
+            .build()
+            .unwrap(),
     );
     router.register(
         "fpga-sim",
-        Coordinator::start(
-            Arc::new(SimBackend::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap()),
-            BatcherConfig {
+        Engine::builder()
+            .fpga_sim(&model, SimConfig::new(64, MemStyle::Bram))
+            .workers(1)
+            .batcher(BatcherConfig {
                 max_batch: 1,
                 max_wait: Duration::from_micros(10),
-            },
-            1,
-        )
-        .unwrap(),
+            })
+            .build()
+            .unwrap(),
     );
     for (i, img) in ds.images.iter().take(12).enumerate() {
         let name = if i % 2 == 0 { "native" } else { "fpga-sim" };
@@ -124,28 +123,30 @@ fn router_composes_heterogeneous_backends() {
         let r = router.route_least_queue(img.clone()).unwrap();
         assert_eq!(r.digit as usize, model.predict(&img.words));
     }
+    let report = router.metrics_report();
+    assert!(report.contains("native:") && report.contains("fpga-sim:"), "{report}");
 }
 
 #[test]
-fn worker_pool_scales_without_changing_results() {
-    // The sharded pool must return the same classifications at every worker
-    // count (1, 2, 4) and kernel schedule; only throughput may differ.
+fn engine_scales_workers_without_changing_results() {
+    // The sharded engine must return the same classifications at every
+    // worker count (1, 2, 4) and kernel schedule; only throughput differs.
     let (model, ds) = setup();
     let images: Vec<_> = (0..60).map(|i| ds.images[i % ds.len()].clone()).collect();
     let expected: Vec<Vec<i32>> = images.iter().map(|img| model.logits(&img.words)).collect();
     for workers in [1usize, 2, 4] {
         for kernel in Kernel::registry_with(16, 4) {
-            let pool = WorkerPool::native(
-                &model,
-                workers,
-                kernel,
-                BatcherConfig {
+            let engine = Engine::builder()
+                .native(&model)
+                .kernel(kernel)
+                .workers(workers)
+                .batcher(BatcherConfig {
                     max_batch: 8,
                     max_wait: Duration::from_micros(100),
-                },
-            )
-            .unwrap();
-            let responses = pool.infer_many(images.clone()).unwrap();
+                })
+                .build()
+                .unwrap();
+            let responses = engine.infer_many(images.clone()).unwrap();
             for (r, want) in responses.iter().zip(&expected) {
                 assert_eq!(
                     &r.logits, want,
@@ -153,40 +154,37 @@ fn worker_pool_scales_without_changing_results() {
                     r.id
                 );
             }
-            assert_eq!(
-                pool.metrics.completed.load(std::sync::atomic::Ordering::Relaxed),
-                60
-            );
-            pool.shutdown();
+            assert_eq!(engine.metrics().completed.load(Ordering::Relaxed), 60);
+            engine.shutdown();
         }
     }
 }
 
 #[test]
-fn worker_pool_concurrent_submitters_no_loss_no_mixup() {
+fn engine_concurrent_submitters_no_loss_no_mixup() {
     let (model, ds) = setup();
-    let pool = Arc::new(
-        WorkerPool::native(
-            &model,
-            4,
-            Kernel::default(),
-            BatcherConfig {
+    let engine = Arc::new(
+        Engine::builder()
+            .native(&model)
+            .kernel(Kernel::default())
+            .workers(4)
+            .batcher(BatcherConfig {
                 max_batch: 16,
                 max_wait: Duration::from_micros(100),
-            },
-        )
-        .unwrap(),
+            })
+            .build()
+            .unwrap(),
     );
     let mut joins = Vec::new();
     for t in 0..8u64 {
-        let pool = pool.clone();
+        let engine = engine.clone();
         let ds = ds.clone();
         let model = model.clone();
         joins.push(std::thread::spawn(move || {
             for i in 0..25usize {
                 let idx = ((t as usize) * 25 + i) % ds.len();
                 let img = ds.images[idx].clone();
-                let r = pool.infer(img.clone()).unwrap();
+                let r = engine.infer(img.clone()).unwrap();
                 // response must correspond to *this* image (no cross-wiring)
                 assert_eq!(r.logits, model.logits(&img.words), "thread {t} req {i}");
             }
@@ -195,28 +193,25 @@ fn worker_pool_concurrent_submitters_no_loss_no_mixup() {
     for j in joins {
         j.join().unwrap();
     }
-    assert_eq!(
-        pool.metrics.completed.load(std::sync::atomic::Ordering::Relaxed),
-        200
-    );
-    assert_eq!(pool.metrics.rejected.load(std::sync::atomic::Ordering::Relaxed), 0);
+    assert_eq!(engine.metrics().completed.load(Ordering::Relaxed), 200);
+    assert_eq!(engine.metrics().rejected.load(Ordering::Relaxed), 0);
     // the per-worker view accounts for every completion exactly once
-    let per: u64 = pool
-        .worker_metrics
+    let per: u64 = engine
+        .worker_metrics()
         .iter()
-        .map(|m| m.completed.load(std::sync::atomic::Ordering::Relaxed))
+        .map(|m| m.completed.load(Ordering::Relaxed))
         .sum();
     assert_eq!(per, 200);
 }
 
 #[test]
-fn mixed_kernel_pool_burst_no_loss_and_metrics_balance() {
-    // Concurrency stress (ISSUE 3): one worker per registered kernel tier
-    // — scalar, blocked, tiled and the runtime-dispatched SIMD path all
-    // serving the same pool — under a multi-thread burst.  Whatever shard
-    // a request lands on, the response must carry *that* request's logits
-    // (no loss, no misrouting), every request id must be answered exactly
-    // once, and the pool's books must balance:
+fn mixed_kernel_engine_burst_no_loss_and_metrics_balance() {
+    // Concurrency stress: one worker per registered kernel tier — scalar,
+    // blocked, tiled and the runtime-dispatched SIMD path all serving the
+    // same engine — under a multi-thread burst of ticketed submissions.
+    // Whatever shard a request lands on, the response must carry *that*
+    // request's logits (no loss, no misrouting), every ticket id must be
+    // answered exactly once, and the books must balance:
     // `submitted == completed + rejected`.
     let (model, ds) = setup();
     let replicas: Vec<Arc<dyn InferBackend>> = Kernel::registry()
@@ -226,38 +221,39 @@ fn mixed_kernel_pool_burst_no_loss_and_metrics_balance() {
         })
         .collect();
     let n_workers = replicas.len();
-    let pool = Arc::new(
-        WorkerPool::start(
-            replicas,
-            BatcherConfig {
+    let engine = Arc::new(
+        Engine::builder()
+            .replicas(replicas)
+            .batcher(BatcherConfig {
                 max_batch: 16,
                 max_wait: Duration::from_micros(100),
-            },
-        )
-        .unwrap(),
+            })
+            .build()
+            .unwrap(),
     );
-    assert_eq!(pool.workers(), n_workers);
+    assert_eq!(engine.workers(), n_workers);
 
     let threads = 8u64;
     let per_thread = 40usize;
     let mut joins = Vec::new();
     for t in 0..threads {
-        let pool = pool.clone();
+        let engine = engine.clone();
         let ds = ds.clone();
         let model = model.clone();
         joins.push(std::thread::spawn(move || {
             // burst-submit everything first, then collect — maximizes
             // in-flight overlap across the mixed-kernel shards
-            let mut pending = Vec::with_capacity(per_thread);
+            let mut pending: Vec<(Ticket, _)> = Vec::with_capacity(per_thread);
             for i in 0..per_thread {
                 let idx = ((t as usize) * per_thread + i) % ds.len();
                 let img = ds.images[idx].clone();
-                let (id, rx) = pool.submit(img.clone()).unwrap();
-                pending.push((id, rx, img));
+                let ticket = engine.submit(img.clone()).unwrap();
+                pending.push((ticket, img));
             }
             let mut ids = Vec::with_capacity(per_thread);
-            for (id, rx, img) in pending {
-                let r = rx.recv().expect("response lost");
+            for (ticket, img) in pending {
+                let id = ticket.id();
+                let r = ticket.wait().expect("response lost");
                 assert_eq!(r.id, id, "response misrouted across requests");
                 assert_eq!(
                     r.logits,
@@ -279,15 +275,16 @@ fn mixed_kernel_pool_burst_no_loss_and_metrics_balance() {
     all_ids.dedup();
     assert_eq!(all_ids.len(), total, "duplicate or missing request ids");
 
-    // inject size-mismatched images (backend reject path) once the burst
-    // has drained, one at a time so each failed batch is its own
+    // inject size-mismatched images once the burst has drained: the
+    // expected_bits gate rejects them at submit time (counted submitted +
+    // rejected), so they can never poison a co-scheduled batch
     let bad_count = 3u64;
     for _ in 0..bad_count {
         let bad = bnn_fpga::bnn::Packed::from_bits(&vec![1u8; 5]);
-        assert!(pool.infer(bad).is_err(), "mismatched image must error");
+        assert!(engine.infer(bad).is_err(), "mismatched image must error");
     }
 
-    let m = &pool.metrics;
+    let m = engine.metrics();
     let submitted = m.submitted.load(Ordering::Relaxed);
     let completed = m.completed.load(Ordering::Relaxed);
     let rejected = m.rejected.load(Ordering::Relaxed);
@@ -297,57 +294,67 @@ fn mixed_kernel_pool_burst_no_loss_and_metrics_balance() {
     assert_eq!(
         submitted,
         completed + rejected,
-        "pool books must balance: submitted == completed + rejected"
+        "engine books must balance: submitted == completed + rejected"
     );
+    // every ticket was waited, so nothing counts as cancelled
+    assert_eq!(m.cancelled.load(Ordering::Relaxed), 0);
     // the per-worker ledgers agree with the aggregate
-    let per_completed: u64 = pool
-        .worker_metrics
+    let per_completed: u64 = engine
+        .worker_metrics()
         .iter()
         .map(|w| w.completed.load(Ordering::Relaxed))
         .sum();
-    let per_rejected: u64 = pool
-        .worker_metrics
+    let per_rejected: u64 = engine
+        .worker_metrics()
         .iter()
         .map(|w| w.rejected.load(Ordering::Relaxed))
         .sum();
     assert_eq!(per_completed, completed);
     assert_eq!(per_rejected, rejected);
-    // Arc-held pool: workers join on Drop
+    // Arc-held engine: workers join on Drop
 }
 
 #[test]
-fn coordinator_burst_metrics_balance() {
-    // Same accounting contract on the single-queue coordinator: a
-    // concurrent burst plus backend-rejected stragglers must leave
-    // `submitted == completed + rejected`.
+fn single_queue_burst_metrics_balance_and_options() {
+    // Same accounting contract on the single-queue core: a concurrent
+    // burst plus backend-rejected stragglers must leave
+    // `submitted == completed + rejected`; per-request options ride along.
     let (model, ds) = setup();
-    let coord = Arc::new(
-        Coordinator::start(
-            Arc::new(NativeBackend::with_kernel(model.clone(), Kernel::default())),
-            BatcherConfig {
+    let engine = Arc::new(
+        Engine::builder()
+            .shared(Arc::new(NativeBackend::with_kernel(
+                model.clone(),
+                Kernel::default(),
+            )))
+            .workers(2)
+            .batcher(BatcherConfig {
                 max_batch: 8,
                 max_wait: Duration::from_micros(50),
-            },
-            2,
-        )
-        .unwrap(),
+            })
+            .build()
+            .unwrap(),
     );
     let mut joins = Vec::new();
     for t in 0..6u64 {
-        let coord = coord.clone();
+        let engine = engine.clone();
         let ds = ds.clone();
         let model = model.clone();
         joins.push(std::thread::spawn(move || {
             let mut pending = Vec::new();
             for i in 0..30usize {
                 let img = ds.images[((t as usize) * 30 + i) % ds.len()].clone();
-                let (id, rx) = coord.submit(img.clone()).unwrap();
-                pending.push((id, rx, img));
+                let ticket = engine
+                    .submit_with(img.clone(), InferOptions::default().with_top_k(2))
+                    .unwrap();
+                pending.push((ticket, img));
             }
-            for (id, rx, img) in pending {
-                let r = rx.recv().expect("response lost");
+            for (ticket, img) in pending {
+                let id = ticket.id();
+                let r = ticket.wait().expect("response lost");
                 assert_eq!(r.id, id);
-                assert_eq!(r.logits, model.logits(&img.words), "thread {t}");
+                let want = model.logits(&img.words);
+                assert_eq!(r.logits, want, "thread {t}");
+                assert_eq!(r.top_k, bnn_fpga::coordinator::request::top_k_i32(&want, 2));
             }
         }));
     }
@@ -355,17 +362,35 @@ fn coordinator_burst_metrics_balance() {
         j.join().unwrap();
     }
     let bad = bnn_fpga::bnn::Packed::from_bits(&vec![0u8; 9]);
-    assert!(coord.infer(bad).is_err());
-    let submitted = coord.metrics.submitted.load(Ordering::Relaxed);
-    let completed = coord.metrics.completed.load(Ordering::Relaxed);
-    let rejected = coord.metrics.rejected.load(Ordering::Relaxed);
+    assert!(engine.infer(bad).is_err());
+    let submitted = engine.metrics().submitted.load(Ordering::Relaxed);
+    let completed = engine.metrics().completed.load(Ordering::Relaxed);
+    let rejected = engine.metrics().rejected.load(Ordering::Relaxed);
     assert_eq!(completed, 180);
     assert_eq!(
         submitted,
         completed + rejected,
-        "coordinator books must balance"
+        "engine books must balance"
     );
-    // Arc-held coordinator: workers join on Drop
+    // Arc-held engine: workers join on Drop
+}
+
+#[test]
+fn ticket_polling_under_real_serving() {
+    let (model, ds) = setup();
+    let engine = Engine::builder().native(&model).workers(1).build().unwrap();
+    let img = ds.images[0].clone();
+    let mut ticket = engine.submit(img.clone()).unwrap();
+    // poll until resolved (bounded; the backend is fast)
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let r = loop {
+        if let Some(r) = ticket.wait_timeout(Duration::from_millis(5)).unwrap() {
+            break r;
+        }
+        assert!(std::time::Instant::now() < deadline, "response never arrived");
+    };
+    assert_eq!(r.digit as usize, model.predict(&img.words));
+    engine.shutdown();
 }
 
 #[test]
@@ -374,21 +399,22 @@ fn throughput_sanity_native() {
     // in CI; `cargo test` runs unoptimized, so use a debug-aware floor
     let floor = if cfg!(debug_assertions) { 500.0 } else { 10_000.0 };
     let (model, ds) = setup();
-    let coord = Coordinator::start(
-        Arc::new(NativeBackend::new(model)),
-        BatcherConfig {
+    let engine = Engine::builder()
+        .native(&model)
+        .kernel(Kernel::default())
+        .workers(2)
+        .batcher(BatcherConfig {
             max_batch: 64,
             max_wait: Duration::from_micros(50),
-        },
-        2,
-    )
-    .unwrap();
+        })
+        .build()
+        .unwrap();
     let n = 2000;
     let images: Vec<_> = (0..n).map(|i| ds.images[i % ds.len()].clone()).collect();
     let t0 = std::time::Instant::now();
-    let responses = coord.infer_many(images).unwrap();
+    let responses = engine.infer_many(images).unwrap();
     let rps = n as f64 / t0.elapsed().as_secs_f64();
     assert_eq!(responses.len(), n);
     assert!(rps > floor, "native throughput only {rps:.0} req/s (floor {floor})");
-    coord.shutdown();
+    engine.shutdown();
 }

@@ -1,0 +1,379 @@
+//! Wire-protocol conformance: v2 round-trip property tests over random
+//! widths, v1↔v2 compatibility against one server, batch-vs-single
+//! bit-identity, and malformed-frame fuzz asserting typed [`WireStatus`]
+//! errors — never hangs.  Everything here runs artifact-free.
+
+use std::io::{Cursor, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use bnn_fpga::bnn::model::random_model;
+use bnn_fpga::bnn::Packed;
+use bnn_fpga::coordinator::wire::{
+    encode_error_v2, encode_request, encode_request_v2, encode_response_v2, payload_bytes,
+    read_request_v2_body, read_response_v2, WireItem, WireServer, WireStatus, MAGIC_ERR,
+    MAGIC_REQ_V2, MAX_WIRE_BATCH, MAX_WIRE_BITS, PAYLOAD_BYTES,
+};
+use bnn_fpga::coordinator::{BatcherConfig, Engine, InferOptions, Kernel, WireClient};
+use bnn_fpga::util::prng::Xoshiro256;
+use bnn_fpga::util::proptest_lite::{gens, Runner};
+
+fn rand_image(rng: &mut Xoshiro256, n_bits: usize) -> Packed {
+    let bits: Vec<u8> = (0..n_bits).map(|_| rng.bool() as u8).collect();
+    Packed::from_bits(&bits)
+}
+
+/// The widths the acceptance gate names explicitly: the paper's 784 plus
+/// the word-boundary edge cases.
+const ACCEPTANCE_WIDTHS: [usize; 5] = [784, 65, 64, 63, 1];
+
+// ---------------------------------------------------------------------------
+// frame-level property tests (no sockets)
+
+#[test]
+fn v2_request_roundtrip_random_widths_and_batches() {
+    Runner::new("wire-v2-request-roundtrip").cases(96).run(
+        &gens::Pair(gens::U64(1..=1200), gens::Pair(gens::U64(1..=5), gens::U64(0..=u64::MAX / 2))),
+        |&(n_bits, (n_images, seed))| {
+            let mut rng = Xoshiro256::new(seed ^ 0xA5A5);
+            let n_bits = n_bits as usize;
+            let images: Vec<Packed> = (0..n_images).map(|_| rand_image(&mut rng, n_bits)).collect();
+            let opts = InferOptions {
+                include_logits: seed % 2 == 0,
+                top_k: (seed % 3 == 0).then_some(1 + (seed % 10) as usize),
+            };
+            let id = seed.wrapping_mul(31);
+            let frame = encode_request_v2(&images, id, opts).unwrap();
+            if frame.len() != 17 + n_images as usize * payload_bytes(n_bits) {
+                return false;
+            }
+            let mut cur = Cursor::new(&frame[1..]);
+            let req = match read_request_v2_body(&mut cur) {
+                Ok(r) => r,
+                Err(_) => return false,
+            };
+            cur.position() as usize == frame.len() - 1
+                && req.id == id
+                && req.opts == opts
+                && req.images.len() == images.len()
+                && req
+                    .images
+                    .iter()
+                    .zip(&images)
+                    .all(|(a, b)| a.n_bits == b.n_bits && a.words == b.words)
+        },
+    );
+}
+
+#[test]
+fn v2_request_roundtrip_acceptance_widths() {
+    let mut rng = Xoshiro256::new(2026);
+    for w in ACCEPTANCE_WIDTHS {
+        let images: Vec<Packed> = (0..3).map(|_| rand_image(&mut rng, w)).collect();
+        let frame = encode_request_v2(&images, 7, InferOptions::default()).unwrap();
+        let req = read_request_v2_body(&mut Cursor::new(&frame[1..])).unwrap();
+        for (a, b) in req.images.iter().zip(&images) {
+            assert_eq!(a.n_bits, w);
+            assert_eq!(a.words, b.words, "width {w}");
+            assert_eq!(a.to_bits(), b.to_bits(), "width {w}");
+        }
+    }
+}
+
+#[test]
+fn v2_response_roundtrip_random_payloads() {
+    Runner::new("wire-v2-response-roundtrip").cases(96).run(
+        &gens::Pair(gens::U64(0..=3), gens::U64(0..=u64::MAX / 2)),
+        |&(n_items, seed)| {
+            let mut rng = Xoshiro256::new(seed ^ 0x17);
+            let with_logits = seed % 2 == 0;
+            let with_topk = seed % 3 == 0;
+            let mut features = 0u8;
+            if with_logits {
+                features |= bnn_fpga::coordinator::wire::FEAT_LOGITS;
+            }
+            if with_topk {
+                features |= bnn_fpga::coordinator::wire::FEAT_TOPK;
+            }
+            let items: Vec<WireItem> = (0..n_items)
+                .map(|i| WireItem {
+                    id: seed.wrapping_add(i),
+                    digit: (rng.below(10)) as u8,
+                    latency_us: rng.below(1 << 30) as u32,
+                    logits: if with_logits {
+                        (0..10).map(|_| rng.below(1 << 16) as i32 - (1 << 15)).collect()
+                    } else {
+                        Vec::new()
+                    },
+                    top_k: if with_topk {
+                        (0..3)
+                            .map(|_| (rng.below(5000) as u16, rng.below(100) as i32))
+                            .collect()
+                    } else {
+                        Vec::new()
+                    },
+                })
+                .collect();
+            let frame = match encode_response_v2(seed, WireStatus::Ok, features, 3, &items) {
+                Ok(f) => f,
+                Err(_) => return false,
+            };
+            let mut cur = Cursor::new(frame.as_slice());
+            match read_response_v2(&mut cur) {
+                Ok(resp) => {
+                    cur.position() as usize == frame.len()
+                        && resp.id == seed
+                        && resp.status == WireStatus::Ok
+                        && resp.items == items
+                }
+                Err(_) => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn v2_error_frames_roundtrip_every_status() {
+    for status in [
+        WireStatus::BadMagic,
+        WireStatus::BadLength,
+        WireStatus::Backend,
+        WireStatus::TooLarge,
+        WireStatus::BadFeature,
+    ] {
+        let frame = encode_error_v2(123, status);
+        let resp = read_response_v2(&mut Cursor::new(frame.as_slice())).unwrap();
+        assert_eq!(resp.status, status);
+        assert_eq!(resp.id, 123);
+        assert!(resp.items.is_empty());
+    }
+    assert_eq!(WireStatus::from_u8(200), WireStatus::Unknown);
+}
+
+#[test]
+fn v2_truncation_fuzz_every_cut_is_a_typed_error() {
+    // every strict prefix of a valid request body must parse to a clean
+    // BadLength — no panic, no garbage acceptance
+    let mut rng = Xoshiro256::new(9);
+    let images = vec![rand_image(&mut rng, 63), rand_image(&mut rng, 63)];
+    let frame = encode_request_v2(&images, 11, InferOptions::default().with_top_k(2)).unwrap();
+    let body = &frame[1..];
+    for cut in 0..body.len() {
+        let e = read_request_v2_body(&mut Cursor::new(&body[..cut])).unwrap_err();
+        assert_eq!(e.status, WireStatus::BadLength, "cut {cut}: {e}");
+    }
+    // full body parses
+    assert!(read_request_v2_body(&mut Cursor::new(body)).is_ok());
+}
+
+// ---------------------------------------------------------------------------
+// live-server tests
+
+fn engine_784() -> (bnn_fpga::bnn::BnnModel, Arc<Engine>) {
+    let model = random_model(&[784, 128, 64, 10], 41);
+    let engine = Arc::new(
+        Engine::builder()
+            .native(&model)
+            .kernel(Kernel::default())
+            .workers(2)
+            .batcher(BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(100),
+            })
+            .build()
+            .unwrap(),
+    );
+    (model, engine)
+}
+
+#[test]
+fn v1_client_still_classifies_against_the_v2_server() {
+    let (model, engine) = engine_784();
+    let server = WireServer::start("127.0.0.1:0", engine).unwrap();
+    let mut client = WireClient::connect(server.addr).unwrap();
+    let mut rng = Xoshiro256::new(50);
+    for i in 0..6 {
+        let img = rand_image(&mut rng, 784);
+        let r = client.classify(&img).unwrap();
+        assert_eq!(r.digit as usize, model.predict(&img.words), "image {i}");
+        assert_eq!(r.status, 0);
+    }
+    assert_eq!(server.served.load(Ordering::Relaxed), 6);
+    server.shutdown();
+}
+
+#[test]
+fn batched_frame_matches_per_image_submission_bit_for_bit() {
+    let (model, engine) = engine_784();
+    let server = WireServer::start("127.0.0.1:0", engine).unwrap();
+    let mut rng = Xoshiro256::new(51);
+    let images: Vec<Packed> = (0..9).map(|_| rand_image(&mut rng, 784)).collect();
+    let opts = InferOptions::default().with_top_k(3);
+
+    // one batched frame on one connection…
+    let mut batch_client = WireClient::connect(server.addr).unwrap();
+    let batched = batch_client.classify_batch(&images, opts).unwrap();
+    // …vs one frame per image, pipelined, on another
+    let mut single_client = WireClient::connect(server.addr).unwrap();
+    let singles = single_client.classify_pipelined(&images, opts).unwrap();
+
+    assert_eq!(batched.len(), images.len());
+    assert_eq!(singles.len(), images.len());
+    let base = batched[0].id;
+    for (i, ((b, s), img)) in batched.iter().zip(&singles).zip(&images).enumerate() {
+        assert_eq!(b.id, base + i as u64, "batch ids are frame id + index");
+        assert_eq!(b.digit, s.digit, "image {i}");
+        assert_eq!(b.digit as usize, model.predict(&img.words), "image {i}");
+        assert_eq!(b.logits, s.logits, "image {i}");
+        assert_eq!(b.logits, model.logits(&img.words), "image {i}");
+        assert_eq!(b.top_k, s.top_k, "image {i}");
+        assert_eq!(b.top_k.len(), 3);
+        assert_eq!(b.top_k[0].0, b.digit as u16);
+    }
+    assert_eq!(server.served.load(Ordering::Relaxed), 18);
+    server.shutdown();
+}
+
+#[test]
+fn pipelined_path_survives_lists_longer_than_its_window() {
+    // more images than WireClient::PIPELINE_WINDOW forces the bounded
+    // window to interleave reads with writes — the path that prevents the
+    // both-sides-blocked-on-full-TCP-buffers failure mode
+    let (model, engine) = engine_784();
+    let server = WireServer::start("127.0.0.1:0", engine).unwrap();
+    let mut rng = Xoshiro256::new(57);
+    let n = WireClient::PIPELINE_WINDOW * 2 + 5;
+    let images: Vec<Packed> = (0..n).map(|_| rand_image(&mut rng, 784)).collect();
+    let mut client = WireClient::connect(server.addr).unwrap();
+    let items = client.classify_pipelined(&images, InferOptions::digits_only()).unwrap();
+    assert_eq!(items.len(), n);
+    for (item, img) in items.iter().zip(&images) {
+        assert_eq!(item.digit as usize, model.predict(&img.words));
+    }
+    assert_eq!(server.served.load(Ordering::Relaxed), n as u64);
+    server.shutdown();
+}
+
+#[test]
+fn v2_serves_every_acceptance_width_end_to_end() {
+    // the wire path must be width-agnostic end to end: serve a model of
+    // each acceptance width and classify over v2
+    let mut rng = Xoshiro256::new(52);
+    for w in ACCEPTANCE_WIDTHS {
+        let model = random_model(&[w, 16, 10], 60 + w as u64);
+        let engine = Arc::new(Engine::builder().native(&model).workers(1).build().unwrap());
+        let server = WireServer::start("127.0.0.1:0", engine).unwrap();
+        let mut client = WireClient::connect(server.addr).unwrap();
+        for _ in 0..3 {
+            let img = rand_image(&mut rng, w);
+            let item = client.classify_v2(&img, InferOptions::default()).unwrap();
+            assert_eq!(item.digit as usize, model.predict(&img.words), "width {w}");
+            assert_eq!(item.logits, model.logits(&img.words), "width {w}");
+        }
+        server.shutdown();
+    }
+}
+
+/// Raw-socket helper with a read timeout so a hung server fails the test
+/// instead of deadlocking it.
+fn raw_conn(addr: std::net::SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s
+}
+
+#[test]
+fn malformed_frames_get_typed_errors_not_hangs() {
+    let (model, engine) = engine_784();
+    let server = WireServer::start("127.0.0.1:0", engine).unwrap();
+
+    // bad magic → 7-byte v1-style error frame with BadMagic, then close
+    {
+        let mut s = raw_conn(server.addr);
+        s.write_all(&[0x55, 0, 0]).unwrap();
+        let mut frame = [0u8; 7];
+        s.read_exact(&mut frame).unwrap();
+        assert_eq!(frame[0], MAGIC_ERR);
+        assert_eq!(WireStatus::from_u8(frame[1]), WireStatus::BadMagic);
+        // connection is closed after a magic failure
+        assert_eq!(s.read(&mut frame).unwrap(), 0, "server should close");
+    }
+
+    // v1 frame with a wrong length → BadLength
+    {
+        let mut s = raw_conn(server.addr);
+        let mut f = vec![0xB1u8];
+        f.extend_from_slice(&5u16.to_le_bytes());
+        f.extend_from_slice(&[0u8; 5]);
+        s.write_all(&f).unwrap();
+        let mut frame = [0u8; 7];
+        s.read_exact(&mut frame).unwrap();
+        assert_eq!(frame[0], MAGIC_ERR);
+        assert_eq!(WireStatus::from_u8(frame[1]), WireStatus::BadLength);
+    }
+
+    // absurd v2 header fields → v2 error frames with typed statuses
+    let v2_head = |features: u8, top_k: u8, n_images: u16, n_bits: u32| -> Vec<u8> {
+        let mut h = vec![MAGIC_REQ_V2, features, top_k];
+        h.extend_from_slice(&7u64.to_le_bytes());
+        h.extend_from_slice(&n_images.to_le_bytes());
+        h.extend_from_slice(&n_bits.to_le_bytes());
+        h
+    };
+    let cases: [(Vec<u8>, WireStatus); 4] = [
+        (v2_head(0, 0, u16::MAX, 784), WireStatus::TooLarge),
+        (v2_head(0, 0, 1, u32::MAX), WireStatus::TooLarge),
+        (v2_head(0, 0, 0, 784), WireStatus::BadLength),
+        (v2_head(0xF0, 0, 1, 784), WireStatus::BadFeature),
+    ];
+    for (bytes, want) in cases {
+        let mut s = raw_conn(server.addr);
+        s.write_all(&bytes).unwrap();
+        let resp = read_response_v2(&mut s).unwrap();
+        assert_eq!(resp.status, want);
+        assert_eq!(resp.id, 7, "v2 errors echo the frame id");
+        assert!(resp.items.is_empty());
+    }
+    // sanity: the limits the fuzz leans on are what the module exports
+    assert!(u16::MAX as usize > MAX_WIRE_BATCH);
+    assert!(u32::MAX as usize > MAX_WIRE_BITS);
+
+    // short read: half a v2 header, then hang up — the server must just
+    // drop the connection and keep serving others
+    {
+        let mut s = raw_conn(server.addr);
+        s.write_all(&[MAGIC_REQ_V2, 0, 0, 1, 2, 3]).unwrap();
+        drop(s);
+    }
+    // a backend-refused request (wrong width for this model) errors the
+    // frame but keeps the connection
+    {
+        let mut client = WireClient::connect(server.addr).unwrap();
+        let narrow = rand_image(&mut Xoshiro256::new(53), 16);
+        let e = client.classify_v2(&narrow, InferOptions::default()).unwrap_err();
+        assert!(format!("{e}").contains(WireStatus::Backend.name()), "{e}");
+        // still serving on the same connection
+        let img = rand_image(&mut Xoshiro256::new(54), 784);
+        let item = client.classify_v2(&img, InferOptions::default()).unwrap();
+        assert_eq!(item.digit as usize, model.predict(&img.words));
+    }
+    // and the server overall is still alive for fresh connections
+    {
+        let mut client = WireClient::connect(server.addr).unwrap();
+        let img = rand_image(&mut Xoshiro256::new(55), 784);
+        assert!(client.classify(&img).is_ok());
+    }
+    server.shutdown();
+}
+
+#[test]
+fn oversize_batches_refuse_to_encode_client_side() {
+    let mut rng = Xoshiro256::new(56);
+    let too_many: Vec<Packed> = (0..MAX_WIRE_BATCH + 1).map(|_| rand_image(&mut rng, 8)).collect();
+    assert!(encode_request_v2(&too_many, 1, InferOptions::default()).is_err());
+    // and the v1 payload constant matches the v2 arithmetic at 784 bits
+    assert_eq!(payload_bytes(784), PAYLOAD_BYTES);
+    assert!(encode_request(&rand_image(&mut rng, 12)).is_err());
+}
