@@ -4,7 +4,7 @@
 
 ARTIFACTS ?= artifacts
 
-.PHONY: artifacts build test bench doc clean
+.PHONY: artifacts build test bench bench-json doc clean
 
 artifacts:
 	cd python && python3 -m compile.train --out ../$(ARTIFACTS)
@@ -18,6 +18,16 @@ test:
 
 bench:
 	cargo bench --bench hotpath -- --quick
+
+# The committed perf trajectory: run the hotpath kernel sweep and refresh
+# BENCH_hotpath.json at the repo root (kernel -> ns/image, images/sec,
+# simd_level), then assert the fused tier produced rows.  CI runs this on
+# every push so kernel regressions diff against a baseline.
+bench-json:
+	cargo bench --bench hotpath -- --quick
+	@test -f BENCH_hotpath.json || { echo "BENCH_hotpath.json missing at repo root"; exit 1; }
+	@grep -q '"fused' BENCH_hotpath.json || { echo "BENCH_hotpath.json has no fused rows"; exit 1; }
+	@echo "BENCH_hotpath.json refreshed (fused rows present)"
 
 doc:
 	cargo doc --no-deps

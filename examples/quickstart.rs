@@ -73,6 +73,15 @@ fn main() -> anyhow::Result<()> {
         "simd kernel   : bit-identical at the '{}' vector level (--kernel simd)",
         bnn_fpga::bnn::simd_level().name()
     );
+    // ...and the fused threshold-pack tier: weights re-laid into 64-row
+    // panels once up front, then popcount → threshold-compare → activation
+    // bit-pack happen in registers — hidden-layer sums never touch memory.
+    let prepared = bnn_fpga::bnn::PreparedModel::new(&model)?;
+    assert_eq!(
+        prepared.logits_batch(&inputs, batch, bnn_fpga::bnn::DEFAULT_TILE_IMGS),
+        model.logits_batch(&inputs, batch)
+    );
+    println!("fused kernel  : bit-identical on engine-prepared panel weights (--kernel fused)");
 
     // 3. Serving: Engine::builder() is the one construction path for every
     //    topology.  submit() returns a Ticket (no channel internals);

@@ -11,6 +11,8 @@
 //!   - the sharded multi-worker pool with the per-image blocked kernel,
 //!   - the same pool on the weight-stationary batch-tiled kernel,
 //!   - the same pool on the runtime-dispatched SIMD tier (AVX2/NEON),
+//!   - the same pool on the fused threshold-pack tier (engine-prepared
+//!     panel weights, sums never materialized),
 //!   - the PJRT backend (when the runtime + artifacts are available),
 //!   - a pool of cycle-accurate FPGA simulator replicas,
 //!   reporting accuracy, latency percentiles and throughput per backend.
@@ -201,7 +203,30 @@ fn main() -> anyhow::Result<()> {
         engine.shutdown();
     }
 
-    // 5. PJRT over the AOT artifact ladder, when runtime + artifacts exist
+    // 5. The fused threshold-pack tier: panel weights prepared once at
+    //    engine build, hidden-layer popcount → threshold → bit-pack fused
+    //    in registers (no i32 tile arena, no repack pass).
+    {
+        let engine = Engine::builder()
+            .native(&model)
+            .kernel(Kernel::Fused { tile_imgs })
+            .workers(workers)
+            .batcher(batcher)
+            .build()?;
+        let (correct, wall) = run_load(n_requests, &engine)?;
+        add_row(
+            &format!("native fused x{workers}"),
+            workers,
+            n_requests,
+            correct,
+            wall,
+            engine.latency_snapshot(),
+            engine.metrics().mean_batch_size(),
+        );
+        engine.shutdown();
+    }
+
+    // 6. PJRT over the AOT artifact ladder, when runtime + artifacts exist
     //    — one shared backend behind a single queue (the PJRT engine
     //    serializes dispatch; PJRT-CPU parallelizes inside).
     match PjrtRuntime::load(&dir) {
@@ -232,7 +257,7 @@ fn main() -> anyhow::Result<()> {
         Err(e) => println!("pjrt backend skipped: {e:#}"),
     }
 
-    // 6. A pool of cycle-accurate simulator replicas (deliberately slow —
+    // 7. A pool of cycle-accurate simulator replicas (deliberately slow —
     //    each request pays the full simulated hardware latency; the builder
     //    clamps max_batch to the hardware's single-image limit).
     {

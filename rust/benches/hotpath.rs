@@ -1,14 +1,16 @@
 //! Hot-path micro-benchmarks (the §Perf instrument): native inference
 //! (scalar vs blocked vs weight-stationary tiled vs the runtime-dispatched
-//! SIMD kernel tier, with block-size and tile-width sweeps), batch
-//! throughput, the 1-vs-N worker-pool
+//! SIMD tier vs the fused threshold-pack tier, with block-size and
+//! tile-width sweeps), batch throughput, the 1-vs-N worker-pool
 //! scaling sweep, simulator tick rate, PJRT dispatch overhead, and
 //! coordinator round-trip cost.  Run before/after each optimization and
 //! record deltas in EXPERIMENTS.md §Perf.
 //!
 //! Besides the human-readable tables, the kernel-variant results are
-//! written to `BENCH_hotpath.json` (kernel → ns/image, images/sec) so the
-//! perf trajectory is tracked across PRs instead of only printed.
+//! written to `BENCH_hotpath.json` **at the repo root** (kernel →
+//! ns/image, images/sec, simd_level) — the committed perf trajectory
+//! `make bench-json` and CI regenerate every run, so kernel regressions
+//! have a baseline to diff against instead of only printed tables.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -135,6 +137,20 @@ fn main() {
                 r,
             );
         }
+        // the fused threshold-pack tier: panel weights prepared once
+        // outside the timed loop (exactly what Engine::build() does),
+        // then the register-fused walk over the same tile-width ladder
+        let prepared = bnn_fpga::bnn::PreparedModel::new(&model).unwrap();
+        for tile in [2usize, 4, 8, 16] {
+            let r = bench.run(&format!("native-b100-fused-t{tile}"), || {
+                prepared.logits_batch(&inputs, n, tile)
+            });
+            record_kernel(&mut kernel_json, &format!("fused_t{tile}"), n, &r);
+            add(
+                &format!("native batch-100, fused[{}] T={tile} (total)", level.name()),
+                r,
+            );
+        }
     }
 
     // 4. one binary dense layer (784→128) in isolation, scalar vs blocked
@@ -196,7 +212,10 @@ fn main() {
     t.print();
 
     // machine-readable perf trajectory: kernel variant -> ns/image +
-    // images/sec at the batch-100 point, tracked across PRs
+    // images/sec at the batch-100 point, tracked across PRs.  Written to
+    // the **repo root** (cargo runs benches from the package dir) so
+    // `make bench-json` / CI always land the file in one committed place;
+    // BNN_BENCH_JSON overrides the destination.
     let doc = obj(vec![
         ("bench", Json::from("hotpath")),
         ("batch", Json::from(batch_n as u64)),
@@ -204,9 +223,17 @@ fn main() {
         ("simd_level", Json::from(bnn_fpga::bnn::simd_level().name())),
         ("kernels", Json::Obj(kernel_json)),
     ]);
-    match std::fs::write("BENCH_hotpath.json", doc.to_string()) {
-        Ok(()) => println!("\nwrote kernel-variant results to BENCH_hotpath.json"),
-        Err(e) => println!("\ncould not write BENCH_hotpath.json: {e}"),
+    let out_path = std::env::var_os("BNN_BENCH_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+                .parent()
+                .map(|p| p.join("BENCH_hotpath.json"))
+                .unwrap_or_else(|| std::path::PathBuf::from("BENCH_hotpath.json"))
+        });
+    match std::fs::write(&out_path, doc.to_string()) {
+        Ok(()) => println!("\nwrote kernel-variant results to {}", out_path.display()),
+        Err(e) => println!("\ncould not write {}: {e}", out_path.display()),
     }
 
     // 8. worker-pool scaling sweep: same workload, 1..N workers, scalar vs
@@ -240,6 +267,12 @@ fn main() {
                 "simd",
                 Kernel::Simd {
                     block_rows: DEFAULT_BLOCK_ROWS,
+                    tile_imgs: DEFAULT_TILE_IMGS,
+                },
+            ),
+            (
+                "fused",
+                Kernel::Fused {
                     tile_imgs: DEFAULT_TILE_IMGS,
                 },
             ),

@@ -1,8 +1,9 @@
 //! Table 5 (§4.7.2): inference latency vs batch size on CPU and GPU — plus
 //! the native-engine extension: scalar vs blocked vs weight-stationary
-//! tiled kernel and 1-vs-N worker pools over the same batch ladder.  The
-//! tiled path is asserted bit-identical to the scalar reference and the
-//! cycle-accurate simulator before any timing is reported.
+//! tiled vs simd vs fused threshold-pack kernels and 1-vs-N worker pools
+//! over the same batch ladder.  Every batch-capable tier is asserted
+//! bit-identical to the scalar reference and the cycle-accurate simulator
+//! before any timing is reported.
 //!
 //! The CPU column is **measured** by executing the batched AOT artifacts on
 //! the PJRT CPU client (the paper used TF on a Colab Xeon) when the runtime
@@ -57,6 +58,10 @@ fn main() {
             "simd kernel ({}) diverged from the scalar reference",
             bnn_fpga::bnn::simd_level().name()
         );
+        let fused = bnn_fpga::bnn::PreparedModel::new(&model)
+            .unwrap()
+            .logits_batch(&inputs, check_n, DEFAULT_TILE_IMGS);
+        assert_eq!(fused, scalar, "fused kernel diverged from the scalar reference");
         let mut acc = Accelerator::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap();
         for i in 0..check_n {
             let r = acc.run_image(&ds.images[i % ds.len()]);
@@ -66,8 +71,11 @@ fn main() {
                 "simulator diverged from the scalar reference at image {i}"
             );
         }
-        println!("tiled + simd kernels verified bit-identical to scalar reference and FPGA simulator\n");
+        println!("tiled + simd + fused kernels verified bit-identical to scalar reference and FPGA simulator\n");
     }
+    // panel weights prepared once, outside every timed window (as the
+    // engine does at build)
+    let prepared = bnn_fpga::bnn::PreparedModel::new(&model).unwrap();
 
     println!("=== Table 5: inference latency vs batch size (CPU measured, GPU modeled) ===\n");
     common::paper_row_note();
@@ -140,6 +148,12 @@ fn main() {
                     tile_imgs: DEFAULT_TILE_IMGS,
                 },
             ),
+            (
+                "native fused",
+                Kernel::Fused {
+                    tile_imgs: DEFAULT_TILE_IMGS,
+                },
+            ),
         ] {
             let series: Vec<f64> = bench
                 .run_series(runs.min(15), || match kernel {
@@ -155,6 +169,9 @@ fn main() {
                         block_rows,
                         tile_imgs,
                     } => model.logits_batch_simd(&batch_inputs, batch, block_rows, tile_imgs),
+                    Kernel::Fused { tile_imgs } => {
+                        prepared.logits_batch(&batch_inputs, batch, tile_imgs)
+                    }
                 })
                 .iter()
                 .map(|ns| ns / 1e6)

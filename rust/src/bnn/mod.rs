@@ -6,11 +6,12 @@ pub mod model;
 pub mod packing;
 
 pub use model::{
-    random_model, BinaryDenseLayer, BnnModel, Scratch, DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS,
+    random_model, BinaryDenseLayer, BnnModel, PreparedModel, PreparedPanelLayer, Scratch,
+    DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS, FUSED_PAR_MIN_CHUNK,
 };
 pub use packing::{
     pack_bits_u32, pack_bits_u64, simd_level, unpack_bits_u64, words_u32, words_u64, Packed,
-    SimdLevel,
+    SimdLevel, PANEL_ROWS,
 };
 
 /// Argmax with lowest-index tie-break — exactly the FSM's iterative

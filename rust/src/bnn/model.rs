@@ -25,6 +25,14 @@ pub const DEFAULT_BLOCK_ROWS: usize = 16;
 /// Override per deployment via `--tile-imgs` / `[coordinator] tile_imgs`.
 pub const DEFAULT_TILE_IMGS: usize = 8;
 
+/// Minimum images per scoped thread before the fused batch walk
+/// ([`PreparedModel::logits_batch_into`]) splits a batch across
+/// `std::thread::scope` threads.  Serving batches (bounded by the
+/// batcher's `max_batch`, typically ≤ 64) stay on the worker's own thread
+/// — the split targets large offline/bench batches, where thread-spawn
+/// cost amortizes over ≥ this many images per thread.
+pub const FUSED_PAR_MIN_CHUNK: usize = 128;
+
 /// One binary dense layer: `n_out` packed weight rows (neuron-major — the
 /// paper's transposed ROM layout) and, for hidden layers, folded integer
 /// thresholds.
@@ -109,10 +117,13 @@ pub struct BnnModel {
 /// the `a`/`b` ping-pong buffers, the batch-tiled path
 /// ([`BnnModel::logits_batch_into_tiled`]) uses the flat activation arenas
 /// `ta`/`tb` (`tile_imgs` images × per-layer word stride, swapped by
-/// pointer between layers) plus the `zt` pre-activation tile.  All buffers
-/// grow to their steady-state size on first use and are reused thereafter,
-/// so a worker that owns one `Scratch` performs zero forward-pass
-/// allocations after warmup.
+/// pointer between layers) plus the `zt` pre-activation tile.  The fused
+/// path ([`PreparedModel::logits_batch_into`]) needs only `ta`/`tb`:
+/// its hidden-layer sums never leave registers, so `zt` (and the per-tile
+/// `i32` traffic it implies) stays empty — the slimmest steady state of
+/// any schedule.  All buffers grow to their steady-state size on first
+/// use and are reused thereafter, so a worker that owns one `Scratch`
+/// performs zero forward-pass allocations after warmup.
 #[derive(Clone, Debug, Default)]
 pub struct Scratch {
     a: Vec<u64>,
@@ -311,9 +322,42 @@ impl BnnModel {
         out
     }
 
-    /// Predicted digit for one packed input.
+    /// Predicted digit for one packed input (allocating convenience over
+    /// [`Self::predict_into`]).
     pub fn predict(&self, x_words: &[u64]) -> usize {
-        super::argmax_i32(&self.logits(x_words))
+        let mut scratch = Scratch::default();
+        let mut logits = vec![0i32; self.n_classes()];
+        self.predict_into(x_words, &mut scratch, &mut logits)
+    }
+
+    /// Allocation-free single-image predict: [`Self::logits_into`] into a
+    /// caller-owned logits row, then top-1 ([`super::argmax_i32`]).
+    /// `logits` must hold `n_classes` entries.  Steady-state single-image
+    /// callers (the v1 wire path serves through
+    /// `InferOptions::digits_only`, and the CLI `infer` loop reuses worker
+    /// arenas) lean on this so [`Self::predict`]'s per-call `Vec` never
+    /// appears on a hot path.
+    ///
+    /// ```
+    /// use bnn_fpga::bnn::model::{random_model, Scratch};
+    /// use bnn_fpga::bnn::packing::pack_bits_u64;
+    ///
+    /// let model = random_model(&[784, 128, 64, 10], 1);
+    /// let x = pack_bits_u64(&vec![1u8; 784]);
+    /// let mut scratch = Scratch::default(); // reuse across calls
+    /// let mut logits = vec![0i32; 10];
+    /// let digit = model.predict_into(&x, &mut scratch, &mut logits);
+    /// assert_eq!(digit, model.predict(&x));
+    /// assert_eq!(logits, model.logits(&x)); // the row is the full logits
+    /// ```
+    pub fn predict_into(
+        &self,
+        x_words: &[u64],
+        scratch: &mut Scratch,
+        logits: &mut [i32],
+    ) -> usize {
+        self.logits_into(x_words, scratch, logits);
+        super::argmax_i32(logits)
     }
 
     /// Batch inference: `inputs` is `batch × input_words` row-major; returns
@@ -570,6 +614,295 @@ impl BnnModel {
         let mut out = vec![0i32; batch * self.n_classes()];
         self.logits_batch_into_simd(inputs, batch, &mut scratch, &mut out, block_rows, tile_imgs);
         out
+    }
+}
+
+/// One hidden layer re-laid out for the fused threshold-pack walk
+/// (`Kernel::Fused`): weight rows grouped into
+/// [`packing::PANEL_ROWS`]-row panels whose rows are **quad-interleaved**
+/// word by word — word `k` of row `64p + 4q + lane` lives at
+/// `panels[p·64·wpr + (q·wpr + k)·4 + lane]` — so
+/// [`packing::xnor_threshold_pack`] streams each panel strictly linearly
+/// (one 256-bit load per quad step on AVX2) instead of hopping per-row
+/// [`BinaryDenseLayer::row`] slices.  The folded thresholds ride along
+/// sliced per panel ([`Self::panel_thresholds`]).  Rows padding the last
+/// quad are zero and never packed, so the padding-bit contract (bits ≥
+/// `n_out` are 0) holds for the next layer by construction.
+#[derive(Clone, Debug)]
+pub struct PreparedPanelLayer {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub words_per_row: usize,
+    /// `n_panels() × PANEL_ROWS × words_per_row` words, panel-major,
+    /// quad-interleaved within each panel (zero rows pad the tail).
+    panels: Vec<u64>,
+    /// Folded thresholds in row order; panel `p`'s slice is
+    /// `[p·PANEL_ROWS, p·PANEL_ROWS + rows_in_panel(p))`.
+    thresholds: Vec<i32>,
+}
+
+impl PreparedPanelLayer {
+    fn from_layer(layer: &BinaryDenseLayer) -> Result<Self> {
+        let Some(thresholds) = layer.thresholds.clone() else {
+            bail!("fused panels need a thresholded (hidden) layer");
+        };
+        let wpr = layer.words_per_row;
+        let n_panels = packing::words_u64(layer.n_out);
+        let mut panels = vec![0u64; n_panels * packing::PANEL_ROWS * wpr];
+        for j in 0..layer.n_out {
+            let (p, r) = (j / packing::PANEL_ROWS, j % packing::PANEL_ROWS);
+            let (q, lane) = (r / 4, r % 4);
+            let base = p * packing::PANEL_ROWS * wpr + q * 4 * wpr;
+            for (k, &w) in layer.row(j).iter().enumerate() {
+                panels[base + 4 * k + lane] = w;
+            }
+        }
+        Ok(Self {
+            n_in: layer.n_in,
+            n_out: layer.n_out,
+            words_per_row: wpr,
+            panels,
+            thresholds,
+        })
+    }
+
+    /// Number of 64-row panels — which is also the packed activation words
+    /// per image this layer emits (`words_u64(n_out)`).
+    #[inline]
+    pub fn n_panels(&self) -> usize {
+        packing::words_u64(self.n_out)
+    }
+
+    /// Real (non-padding) rows in panel `p`.
+    #[inline]
+    pub fn rows_in_panel(&self, p: usize) -> usize {
+        packing::PANEL_ROWS.min(self.n_out - p * packing::PANEL_ROWS)
+    }
+
+    /// Panel `p`'s quad-interleaved weight words — exactly the quads that
+    /// hold real rows (a short last panel's trailing zero quads are not
+    /// exposed, so the kernel never computes them).
+    #[inline]
+    pub fn panel(&self, p: usize) -> &[u64] {
+        let n_quads = self.rows_in_panel(p).div_ceil(4);
+        let start = p * packing::PANEL_ROWS * self.words_per_row;
+        &self.panels[start..start + n_quads * 4 * self.words_per_row]
+    }
+
+    /// Panel `p`'s thresholds (length = `rows_in_panel(p)`).
+    #[inline]
+    pub fn panel_thresholds(&self, p: usize) -> &[i32] {
+        let start = p * packing::PANEL_ROWS;
+        &self.thresholds[start..start + self.rows_in_panel(p)]
+    }
+
+    /// Reconstruct row `j` from the panel layout (round-trip
+    /// checks/tooling — the hot path never de-interleaves).
+    pub fn row(&self, j: usize) -> Vec<u64> {
+        let (p, r) = (j / packing::PANEL_ROWS, j % packing::PANEL_ROWS);
+        let (q, lane) = (r / 4, r % 4);
+        let base =
+            p * packing::PANEL_ROWS * self.words_per_row + q * 4 * self.words_per_row;
+        (0..self.words_per_row)
+            .map(|k| self.panels[base + 4 * k + lane])
+            .collect()
+    }
+
+    /// Row `j`'s folded threshold.
+    #[inline]
+    pub fn threshold(&self, j: usize) -> i32 {
+        self.thresholds[j]
+    }
+}
+
+/// A [`BnnModel`] re-laid out **once** for the fused threshold-pack walk —
+/// built at engine construction (`Engine::build()` →
+/// `NativeBackend::with_kernel` when the kernel is `Fused`), never per
+/// request.  Hidden layers become [`PreparedPanelLayer`] panels; the
+/// output layer keeps its row-major form (its raw sums *are* the logits,
+/// §3.4 — there is no threshold to fuse).  Zero padding rounds each
+/// hidden layer up to the next 64-row panel boundary.
+#[derive(Clone, Debug)]
+pub struct PreparedModel {
+    hidden: Vec<PreparedPanelLayer>,
+    output: BinaryDenseLayer,
+    n_in: usize,
+    n_classes: usize,
+    input_words: usize,
+    max_act_words: usize,
+}
+
+impl PreparedModel {
+    /// Build the fused panel layout from a model (validates first: fused
+    /// panels only make sense on a well-formed hidden/output split).
+    pub fn new(model: &BnnModel) -> Result<Self> {
+        model.validate()?;
+        let (last, hidden) = model.layers.split_last().expect("validated: non-empty");
+        let hidden = hidden
+            .iter()
+            .map(PreparedPanelLayer::from_layer)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            hidden,
+            output: last.clone(),
+            n_in: model.n_in(),
+            n_classes: model.n_classes(),
+            input_words: model.input_words(),
+            max_act_words: model.max_act_words(),
+        })
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.n_in
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    /// The hidden layers in panel layout (round-trip checks/tooling).
+    pub fn hidden_layers(&self) -> &[PreparedPanelLayer] {
+        &self.hidden
+    }
+
+    /// Fused batch forward pass — `Kernel::Fused`, the memory-traffic
+    /// optimisation of the serving hot path.
+    ///
+    /// Where the tiled/simd walks materialize every hidden layer's
+    /// `tile_imgs × block_rows` pre-activation tile in the `i32` arena and
+    /// threshold/re-pack it in a second pass, this walk calls
+    /// [`packing::xnor_threshold_pack_simd`] once per (image, panel):
+    /// popcount → threshold-compare → activation bit-pack happen in
+    /// registers and exactly **one `u64` is written per 64 neurons** —
+    /// the sums never touch memory, and because every arena word is
+    /// assigned (not OR-ed) there is no zero-fill pass either.  Only the
+    /// output layer still writes `i32` logits, directly into the caller's
+    /// rows.  Batches of ≥ `2 ×` [`FUSED_PAR_MIN_CHUNK`] images split
+    /// across `std::thread::scope` threads (per-image results are
+    /// independent, so the split is bit-identical to the serial walk).
+    ///
+    /// Layout contracts match [`BnnModel::logits_batch_into_tiled`]:
+    /// `inputs` is `batch × input_words` row-major, `out` is
+    /// `batch × n_classes` row-major, and the call is allocation-free once
+    /// `scratch` has warmed up (the parallel split is the one exception —
+    /// each scoped thread owns a fresh local `Scratch`, amortized over its
+    /// ≥ 128-image chunk).  Bit-identical to the scalar reference for
+    /// every batch size and tile width (property-tested below and pinned
+    /// by the golden-vector + differential conformance suites).
+    pub fn logits_batch_into(
+        &self,
+        inputs: &[u64],
+        batch: usize,
+        scratch: &mut Scratch,
+        out: &mut [i32],
+        tile_imgs: usize,
+    ) {
+        assert!(tile_imgs >= 1, "tile_imgs must be ≥ 1");
+        let iw = self.input_words;
+        assert_eq!(inputs.len(), batch * iw, "batch input length");
+        let nc = self.n_classes;
+        assert_eq!(out.len(), batch * nc, "batch output length");
+        let threads = std::thread::available_parallelism().map_or(1, |n| n.get());
+        let chunks = (batch / FUSED_PAR_MIN_CHUNK).min(threads);
+        if chunks < 2 {
+            self.fused_walk(inputs, batch, scratch, out, tile_imgs);
+            return;
+        }
+        let per = batch.div_ceil(chunks);
+        std::thread::scope(|s| {
+            for (in_c, out_c) in inputs.chunks(per * iw).zip(out.chunks_mut(per * nc)) {
+                s.spawn(move || {
+                    let mut local = Scratch::default();
+                    let n = out_c.len() / nc;
+                    self.fused_walk(in_c, n, &mut local, out_c, tile_imgs);
+                });
+            }
+        });
+    }
+
+    /// Fused batch inference, allocating convenience (tests/benches).
+    ///
+    /// ```
+    /// use bnn_fpga::bnn::model::{random_model, PreparedModel};
+    /// use bnn_fpga::bnn::packing::pack_bits_u64;
+    ///
+    /// let model = random_model(&[784, 128, 64, 10], 7);
+    /// let prepared = PreparedModel::new(&model).unwrap();
+    /// let mut inputs = Vec::new();
+    /// for seed in 0..3u8 {
+    ///     inputs.extend(pack_bits_u64(&vec![seed & 1; 784]));
+    /// }
+    /// assert_eq!(
+    ///     prepared.logits_batch(&inputs, 3, 8),
+    ///     model.logits_batch(&inputs, 3) // bit-identical to scalar
+    /// );
+    /// ```
+    pub fn logits_batch(&self, inputs: &[u64], batch: usize, tile_imgs: usize) -> Vec<i32> {
+        let mut scratch = Scratch::default();
+        let mut out = vec![0i32; batch * self.n_classes];
+        self.logits_batch_into(inputs, batch, &mut scratch, &mut out, tile_imgs);
+        out
+    }
+
+    /// The serial fused walk over one image range (the parallel split
+    /// dispatches per-chunk copies of this).  Hidden layers run
+    /// panel-outer/image-inner so each panel stays cache-hot while the
+    /// tile's images stream through it; the fused path needs only the
+    /// `ta`/`tb` word arenas — `Scratch.zt` (the tiled walk's `i32` tile)
+    /// is never grown.
+    fn fused_walk(
+        &self,
+        inputs: &[u64],
+        batch: usize,
+        scratch: &mut Scratch,
+        out: &mut [i32],
+        tile_imgs: usize,
+    ) {
+        let iw = self.input_words;
+        let nc = self.n_classes;
+        let maxw = self.max_act_words;
+        scratch.ta.resize(tile_imgs * maxw, 0);
+        scratch.tb.resize(tile_imgs * maxw, 0);
+        let mut i0 = 0;
+        while i0 < batch {
+            let t = tile_imgs.min(batch - i0);
+            scratch.ta[..t * iw].copy_from_slice(&inputs[i0 * iw..(i0 + t) * iw]);
+            for layer in &self.hidden {
+                let wpr = layer.words_per_row;
+                let ow = layer.n_panels();
+                for p in 0..ow {
+                    let panel = layer.panel(p);
+                    let thr = layer.panel_thresholds(p);
+                    for i in 0..t {
+                        let x = &scratch.ta[i * wpr..(i + 1) * wpr];
+                        scratch.tb[i * ow + p] =
+                            packing::xnor_threshold_pack_simd(x, panel, wpr, layer.n_in, thr);
+                    }
+                }
+                std::mem::swap(&mut scratch.ta, &mut scratch.tb);
+            }
+            // output layer: raw-sum row blocks land directly in the
+            // caller's flat logits rows (stride = n_classes, §3.4)
+            let lo = &self.output;
+            let wpr = lo.words_per_row;
+            let out_tile = &mut out[i0 * nc..(i0 + t) * nc];
+            let mut j = 0;
+            while j < lo.n_out {
+                let b = DEFAULT_BLOCK_ROWS.min(lo.n_out - j);
+                let rows = &lo.weights[j * wpr..(j + b) * wpr];
+                packing::xnor_popcount_z_simd(
+                    &scratch.ta[..t * wpr],
+                    t,
+                    rows,
+                    wpr,
+                    lo.n_in,
+                    &mut out_tile[j..],
+                    nc,
+                );
+                j += b;
+            }
+            i0 += t;
+        }
     }
 }
 
@@ -955,6 +1288,194 @@ mod tests {
                 DEFAULT_TILE_IMGS,
             );
             assert_eq!(out, model.logits_batch(&inputs, batch), "batch {batch}");
+        }
+    }
+
+    #[test]
+    fn prepared_model_round_trips_rows_and_thresholds() {
+        // The acceptance property (ISSUE 5): panel layout → reconstructed
+        // rows == original rows and thresholds preserved, across edge
+        // widths {1, 37, 63, 64, 65, 784} and hidden row counts that are
+        // not multiples of 64 (or of the 4-row quad).
+        let mut rng = Xoshiro256::new(90);
+        for dims in [
+            vec![1usize, 1, 1],
+            vec![37, 63, 3],
+            vec![63, 64, 5],
+            vec![64, 65, 10],
+            vec![65, 37, 1],
+            vec![784, 128, 64, 10],
+            vec![784, 100, 10],
+            vec![128, 130, 67, 9],
+        ] {
+            let spec = random_net(&mut rng, &dims);
+            let model = model_from_sign_rows(spec).unwrap();
+            let prepared = PreparedModel::new(&model).unwrap();
+            let hidden = prepared.hidden_layers();
+            assert_eq!(hidden.len(), model.layers.len() - 1, "{dims:?}");
+            for (li, layer) in model.layers[..model.layers.len() - 1].iter().enumerate() {
+                let pl = &hidden[li];
+                assert_eq!((pl.n_in, pl.n_out), (layer.n_in, layer.n_out), "{dims:?}");
+                assert_eq!(pl.n_panels(), packing::words_u64(layer.n_out));
+                let thr = layer.thresholds.as_ref().unwrap();
+                for j in 0..layer.n_out {
+                    assert_eq!(pl.row(j), layer.row(j), "{dims:?} layer {li} row {j}");
+                    assert_eq!(pl.threshold(j), thr[j], "{dims:?} layer {li} thr {j}");
+                }
+                // per-panel slices tile the layer exactly
+                let total: usize = (0..pl.n_panels()).map(|p| pl.rows_in_panel(p)).sum();
+                assert_eq!(total, layer.n_out, "{dims:?} layer {li}");
+                for p in 0..pl.n_panels() {
+                    let rows = pl.rows_in_panel(p);
+                    assert_eq!(pl.panel_thresholds(p), &thr[p * 64..p * 64 + rows]);
+                    assert_eq!(
+                        pl.panel(p).len(),
+                        rows.div_ceil(4) * 4 * pl.words_per_row,
+                        "{dims:?} layer {li} panel {p}"
+                    );
+                }
+            }
+        }
+        // building from a model with an un-thresholded hidden layer fails
+        let mut rng = Xoshiro256::new(91);
+        let mut spec = random_net(&mut rng, &[16, 8, 4]);
+        spec[0].1 = None;
+        let broken = BnnModel {
+            layers: spec
+                .into_iter()
+                .map(|(rows, thr)| {
+                    let n_in = rows[0].len();
+                    let rows_u32: Vec<Vec<u32>> = rows
+                        .iter()
+                        .map(|r| {
+                            let bits: Vec<u8> = r.iter().map(|&v| u8::from(v >= 0)).collect();
+                            packing::pack_bits_u32(&bits)
+                        })
+                        .collect();
+                    BinaryDenseLayer::from_u32_rows(n_in, &rows_u32, thr).unwrap()
+                })
+                .collect(),
+        };
+        assert!(PreparedModel::new(&broken).is_err());
+    }
+
+    #[test]
+    fn fused_batch_equals_scalar_for_all_tile_widths() {
+        // The fused threshold-pack walk must be bit-identical to the
+        // per-image scalar reference for every batch size and tile width
+        // on the paper dims.
+        let mut rng = Xoshiro256::new(92);
+        let spec = random_net(&mut rng, &[784, 128, 64, 10]);
+        let model = model_from_sign_rows(spec).unwrap();
+        let prepared = PreparedModel::new(&model).unwrap();
+        for batch in [1usize, 3, 8, 17] {
+            let mut inputs = Vec::new();
+            for _ in 0..batch {
+                let bits: Vec<u8> = (0..784).map(|_| rng.bool() as u8).collect();
+                inputs.extend(packing::pack_bits_u64(&bits));
+            }
+            let scalar = model.logits_batch(&inputs, batch);
+            for tile in [1usize, 2, 5, 8, 32] {
+                assert_eq!(
+                    prepared.logits_batch(&inputs, batch, tile),
+                    scalar,
+                    "batch {batch}, tile {tile}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_batch_equals_scalar_on_odd_dims() {
+        // widths that straddle the u64 word, the 64-row panel and the
+        // 4-row quad all at once — including a no-hidden-layer model,
+        // where the fused walk is output-layer only
+        let mut rng = Xoshiro256::new(93);
+        for dims in [
+            vec![37usize, 19, 11, 3],
+            vec![65, 63, 5, 1],
+            vec![130, 129, 67, 9],
+            vec![64, 65, 10],
+            vec![64, 10],
+        ] {
+            let spec = random_net(&mut rng, &dims);
+            let model = model_from_sign_rows(spec).unwrap();
+            let prepared = PreparedModel::new(&model).unwrap();
+            let batch = 7;
+            let mut inputs = Vec::new();
+            for _ in 0..batch {
+                let bits: Vec<u8> = (0..dims[0]).map(|_| rng.bool() as u8).collect();
+                inputs.extend(packing::pack_bits_u64(&bits));
+            }
+            let scalar = model.logits_batch(&inputs, batch);
+            for tile in [1usize, 3, 8] {
+                assert_eq!(
+                    prepared.logits_batch(&inputs, batch, tile),
+                    scalar,
+                    "{dims:?} tile {tile}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_parallel_split_is_bit_identical() {
+        // A batch large enough to trigger the scoped-thread split must
+        // produce exactly the serial result (per-image independence).
+        let mut rng = Xoshiro256::new(94);
+        let spec = random_net(&mut rng, &[128, 64, 10]);
+        let model = model_from_sign_rows(spec).unwrap();
+        let prepared = PreparedModel::new(&model).unwrap();
+        let batch = 2 * FUSED_PAR_MIN_CHUNK + 37; // odd tail chunk included
+        let mut inputs = Vec::new();
+        for _ in 0..batch {
+            let bits: Vec<u8> = (0..128).map(|_| rng.bool() as u8).collect();
+            inputs.extend(packing::pack_bits_u64(&bits));
+        }
+        let got = prepared.logits_batch(&inputs, batch, DEFAULT_TILE_IMGS);
+        // serial oracle: walk the same range through the private serial path
+        let mut scratch = Scratch::default();
+        let mut want = vec![0i32; batch * 10];
+        prepared.fused_walk(&inputs, batch, &mut scratch, &mut want, DEFAULT_TILE_IMGS);
+        assert_eq!(got, want);
+        assert_eq!(want, model.logits_batch(&inputs, batch));
+    }
+
+    #[test]
+    fn fused_walk_leaves_the_i32_tile_empty() {
+        // Scratch slimming: the fused path's hidden-layer sums never touch
+        // memory, so the zt arena (the tiled walk's i32 tile) must stay
+        // unallocated after a fused batch.
+        let mut rng = Xoshiro256::new(95);
+        let spec = random_net(&mut rng, &[784, 128, 64, 10]);
+        let model = model_from_sign_rows(spec).unwrap();
+        let prepared = PreparedModel::new(&model).unwrap();
+        let mut inputs = Vec::new();
+        for _ in 0..5 {
+            let bits: Vec<u8> = (0..784).map(|_| rng.bool() as u8).collect();
+            inputs.extend(packing::pack_bits_u64(&bits));
+        }
+        let mut scratch = Scratch::default();
+        let mut out = vec![0i32; 5 * 10];
+        prepared.logits_batch_into(&inputs, 5, &mut scratch, &mut out, DEFAULT_TILE_IMGS);
+        assert_eq!(out, model.logits_batch(&inputs, 5));
+        assert!(scratch.zt.is_empty(), "fused walk must not grow the i32 tile");
+        assert!(!scratch.ta.is_empty(), "fused walk runs on the word arenas");
+    }
+
+    #[test]
+    fn predict_into_matches_predict_and_reuses_scratch() {
+        let mut rng = Xoshiro256::new(96);
+        let spec = random_net(&mut rng, &[784, 128, 64, 10]);
+        let model = model_from_sign_rows(spec).unwrap();
+        let mut scratch = Scratch::default();
+        let mut logits = vec![0i32; 10];
+        for _ in 0..5 {
+            let bits: Vec<u8> = (0..784).map(|_| rng.bool() as u8).collect();
+            let x = packing::pack_bits_u64(&bits);
+            let digit = model.predict_into(&x, &mut scratch, &mut logits);
+            assert_eq!(digit, model.predict(&x));
+            assert_eq!(logits, model.logits(&x));
         }
     }
 

@@ -469,6 +469,122 @@ pub fn xnor_popcount_z_simd_at(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Fused threshold-pack kernel tier (popcount → compare → bit-pack in registers)
+
+/// Rows per fused weight panel: one panel's thresholded activations fill
+/// exactly one packed `u64` word, so the fused kernel
+/// ([`xnor_threshold_pack`]) emits a hidden layer's output **one word per
+/// (image, panel)** with the integer pre-activations never touching memory.
+pub const PANEL_ROWS: usize = 64;
+
+/// Fused popcount → threshold-compare → activation-pack panel kernel — the
+/// software mirror of the paper's Verilog datapath, where the popcount
+/// tree, the threshold comparator and the next layer's activation register
+/// are one combinational path (§3.3–3.4; the BatchNorm-as-threshold fusion
+/// FINN identifies as the key to BNN throughput).  Where the tiled/simd
+/// tiers materialize a `tile_imgs × block_rows` `i32` tile and re-pack it
+/// in a second pass, this kernel keeps every sum in a register and returns
+/// the packed activation word directly.
+///
+/// Layout contract (the [`super::model::PreparedPanelLayer`] layout): the
+/// panel holds `thr.len() ≤ 64` weight rows **quad-interleaved** — word
+/// `k` of row `4q + lane` lives at `panel[(q * words_per_row + k) * 4 +
+/// lane]` — so the walk streams the panel strictly linearly (and the AVX2
+/// path turns each quad step into a single 256-bit load).  Rows padding
+/// the last quad (when `thr.len() % 4 != 0`) must be present (zeroed);
+/// their sums are computed and discarded, never packed.
+///
+/// Bit `j` of the returned word is `z_j ≥ thr[j]` with
+/// `z_j = n − 2·popcount(x ⊕ w_j)`; bits `≥ thr.len()` are 0 — exactly
+/// the padding contract every other kernel in this module relies on.
+///
+/// ```
+/// use bnn_fpga::bnn::packing::{pack_bits_u64, words_u64, xnor_threshold_pack};
+/// let x = pack_bits_u64(&[1, 0, 1]);
+/// // one 2-row panel (quad-padded): rows [1,1,1] (z=1) and [0,0,0] (z=-1)
+/// let (r0, r1) = (pack_bits_u64(&[1, 1, 1]), pack_bits_u64(&[0, 0, 0]));
+/// let panel = vec![r0[0], r1[0], 0, 0]; // word 0 of rows 0..4, interleaved
+/// let word = xnor_threshold_pack(&x, &panel, words_u64(3), 3, &[0, 0]);
+/// assert_eq!(word, 0b01); // z0=1 ≥ 0 fires, z1=−1 < 0 does not
+/// ```
+pub fn xnor_threshold_pack(
+    x: &[u64],
+    panel: &[u64],
+    words_per_row: usize,
+    n_bits: usize,
+    thr: &[i32],
+) -> u64 {
+    let n_rows = thr.len();
+    debug_assert!(n_rows <= PANEL_ROWS);
+    debug_assert!(words_per_row >= 1);
+    debug_assert_eq!(x.len(), words_per_row);
+    let n_quads = n_rows.div_ceil(4);
+    debug_assert_eq!(panel.len(), n_quads * 4 * words_per_row);
+    let n = n_bits as i32;
+    let mut word = 0u64;
+    for q in 0..n_quads {
+        let quad = &panel[q * 4 * words_per_row..(q + 1) * 4 * words_per_row];
+        let (mut c0, mut c1, mut c2, mut c3) = (0u32, 0u32, 0u32, 0u32);
+        for (k, xw) in x.iter().enumerate() {
+            c0 += (xw ^ quad[4 * k]).count_ones();
+            c1 += (xw ^ quad[4 * k + 1]).count_ones();
+            c2 += (xw ^ quad[4 * k + 2]).count_ones();
+            c3 += (xw ^ quad[4 * k + 3]).count_ones();
+        }
+        for (lane, c) in [c0, c1, c2, c3].into_iter().enumerate() {
+            let j = 4 * q + lane;
+            if j < n_rows {
+                word |= u64::from(n - 2 * c as i32 >= thr[j]) << j;
+            }
+        }
+    }
+    word
+}
+
+/// [`xnor_threshold_pack`] behind the same once-per-process runtime
+/// dispatch as the SIMD tile tier ([`simd_level`]): AVX2 on x86_64, NEON
+/// on aarch64, the portable fused kernel elsewhere or under
+/// `BNN_FORCE_SCALAR=1`.  Bit-identical on every path — the level only
+/// changes how the popcounts are computed (pinned by the golden-vector and
+/// differential suites through `Kernel::Fused`).
+pub fn xnor_threshold_pack_simd(
+    x: &[u64],
+    panel: &[u64],
+    words_per_row: usize,
+    n_bits: usize,
+    thr: &[i32],
+) -> u64 {
+    xnor_threshold_pack_simd_at(simd_level(), x, panel, words_per_row, n_bits, thr)
+}
+
+/// [`xnor_threshold_pack_simd`] pinned to an explicit [`SimdLevel`] (the
+/// conformance suites force every path deterministically).  A level this
+/// host cannot execute degrades to the portable fused kernel, so the
+/// function is safe to call with any level anywhere.
+pub fn xnor_threshold_pack_simd_at(
+    level: SimdLevel,
+    x: &[u64],
+    panel: &[u64],
+    words_per_row: usize,
+    n_bits: usize,
+    thr: &[i32],
+) -> u64 {
+    debug_assert!(thr.len() <= PANEL_ROWS);
+    debug_assert_eq!(panel.len(), thr.len().div_ceil(4) * 4 * words_per_row);
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 if std::arch::is_x86_feature_detected!("avx2") => unsafe {
+            avx2::threshold_pack(x, panel, words_per_row, n_bits, thr)
+        },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon if std::arch::is_aarch64_feature_detected!("neon") => unsafe {
+            neon::threshold_pack(x, panel, words_per_row, n_bits, thr)
+        },
+        _ => xnor_threshold_pack(x, panel, words_per_row, n_bits, thr),
+    }
+}
+
 /// AVX2 path: 4 u64 words per 256-bit XOR, popcount via the nibble-LUT
 /// (`vpshufb`) + byte-sum (`vpsadbw`) sequence (Muła et al., "Faster
 /// Population Counts Using AVX2 Instructions" — the same shape FINN-style
@@ -623,6 +739,55 @@ mod avx2 {
         }
         c
     }
+
+    /// Fused threshold-pack over one quad-interleaved panel (same contract
+    /// as [`super::xnor_threshold_pack`]): each 256-bit load brings word
+    /// `k` of all four rows of a quad, XORs it against the broadcast image
+    /// word, and `vpsadbw` accumulates the four per-row popcounts in one
+    /// vector accumulator — the panel streams strictly linearly with no
+    /// per-row pointer hopping.
+    ///
+    /// # Safety
+    /// Caller must ensure the `avx2` target feature is available.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn threshold_pack(
+        x: &[u64],
+        panel: &[u64],
+        words_per_row: usize,
+        n_bits: usize,
+        thr: &[i32],
+    ) -> u64 {
+        let n_rows = thr.len();
+        let n_quads = n_rows.div_ceil(4);
+        debug_assert_eq!(x.len(), words_per_row);
+        debug_assert_eq!(panel.len(), n_quads * 4 * words_per_row);
+        let lut = nibble_lut();
+        let mask = _mm256_set1_epi8(0x0f);
+        let zero = _mm256_setzero_si256();
+        let n = n_bits as i32;
+        let mut word = 0u64;
+        for q in 0..n_quads {
+            let quad = &panel[q * 4 * words_per_row..(q + 1) * 4 * words_per_row];
+            let mut acc = zero;
+            for (k, &xw) in x.iter().enumerate() {
+                let xv = _mm256_set1_epi64x(xw as i64);
+                let wv = _mm256_loadu_si256(quad.as_ptr().add(4 * k) as *const __m256i);
+                acc = _mm256_add_epi64(
+                    acc,
+                    popcount_lanes(_mm256_xor_si256(xv, wv), lut, mask, zero),
+                );
+            }
+            let mut lanes = [0u64; 4];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+            for (lane, &c) in lanes.iter().enumerate() {
+                let j = 4 * q + lane;
+                if j < n_rows {
+                    word |= u64::from(n - 2 * c as i32 >= thr[j]) << j;
+                }
+            }
+        }
+        word
+    }
 }
 
 /// NEON path: 2 u64 words per 128-bit XOR, hardware byte popcount
@@ -726,6 +891,61 @@ mod neon {
             i += 1;
         }
         c
+    }
+
+    /// Fused threshold-pack over one quad-interleaved panel (same contract
+    /// as [`super::xnor_threshold_pack`]): two 128-bit loads per quad step
+    /// (rows 0–1 and 2–3 of word `k`), XORed against the broadcast image
+    /// word, with per-64-bit-lane popcounts accumulated through the
+    /// `vcnt` + pairwise-widening-add chain.
+    ///
+    /// # Safety
+    /// Caller must ensure the `neon` target feature is available.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn threshold_pack(
+        x: &[u64],
+        panel: &[u64],
+        words_per_row: usize,
+        n_bits: usize,
+        thr: &[i32],
+    ) -> u64 {
+        let n_rows = thr.len();
+        let n_quads = n_rows.div_ceil(4);
+        debug_assert_eq!(x.len(), words_per_row);
+        debug_assert_eq!(panel.len(), n_quads * 4 * words_per_row);
+        let n = n_bits as i32;
+        let mut word = 0u64;
+        for q in 0..n_quads {
+            let quad = &panel[q * 4 * words_per_row..(q + 1) * 4 * words_per_row];
+            let mut acc01 = vdupq_n_u64(0);
+            let mut acc23 = vdupq_n_u64(0);
+            for (k, &xw) in x.iter().enumerate() {
+                let xv = vdupq_n_u64(xw);
+                let v01 = veorq_u64(xv, vld1q_u64(quad.as_ptr().add(4 * k)));
+                let v23 = veorq_u64(xv, vld1q_u64(quad.as_ptr().add(4 * k + 2)));
+                acc01 = vaddq_u64(
+                    acc01,
+                    vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(vcntq_u8(vreinterpretq_u8_u64(v01))))),
+                );
+                acc23 = vaddq_u64(
+                    acc23,
+                    vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(vcntq_u8(vreinterpretq_u8_u64(v23))))),
+                );
+            }
+            let counts = [
+                vgetq_lane_u64(acc01, 0),
+                vgetq_lane_u64(acc01, 1),
+                vgetq_lane_u64(acc23, 0),
+                vgetq_lane_u64(acc23, 1),
+            ];
+            for (lane, &c) in counts.iter().enumerate() {
+                let j = 4 * q + lane;
+                if j < n_rows {
+                    word |= u64::from(n - 2 * c as i32 >= thr[j]) << j;
+                }
+            }
+        }
+        word
     }
 }
 
@@ -1164,6 +1384,96 @@ mod tests {
                 let mut blocked = vec![0i32; n_rows];
                 xnor_popcount_z_block(&x, &rows, wpr, n, &mut blocked);
                 blocked == naive
+            },
+        );
+    }
+
+    /// Quad-interleave `rows` into the fused panel layout (the test mirror
+    /// of `model::PreparedPanelLayer`): word `k` of row `4q + lane` at
+    /// `panel[(q * wpr + k) * 4 + lane]`, zero rows padding the last quad.
+    fn interleave_panel(rows: &[Vec<u64>], wpr: usize) -> Vec<u64> {
+        let n_quads = rows.len().div_ceil(4);
+        let mut panel = vec![0u64; n_quads * 4 * wpr];
+        for (j, row) in rows.iter().enumerate() {
+            let (q, lane) = (j / 4, j % 4);
+            for (k, &w) in row.iter().enumerate() {
+                panel[(q * wpr + k) * 4 + lane] = w;
+            }
+        }
+        panel
+    }
+
+    #[test]
+    fn threshold_pack_equals_scalar_at_edge_widths_for_every_level() {
+        // The fused kernel — on every SIMD level, including levels this
+        // host degrades to the portable path — must pack exactly the bits
+        // the scalar z ≥ thr comparison produces, at word-straddling
+        // widths and every row count around the 4-row quad.
+        let mut rng = Xoshiro256::new(2033);
+        for level in SimdLevel::ALL {
+            for &n in &[784usize, 10, 1, 37, 63, 64, 65, 128, 129] {
+                let wpr = words_u64(n);
+                for n_rows in [0usize, 1, 3, 4, 5, 8, 63, 64] {
+                    let x = pack_bits_u64(&random_bits(&mut rng, n));
+                    let rows: Vec<Vec<u64>> = (0..n_rows)
+                        .map(|_| pack_bits_u64(&random_bits(&mut rng, n)))
+                        .collect();
+                    let thr: Vec<i32> = (0..n_rows)
+                        .map(|_| rng.range_i64(-(n as i64), n as i64) as i32)
+                        .collect();
+                    let panel = interleave_panel(&rows, wpr);
+                    let word = xnor_threshold_pack_simd_at(level, &x, &panel, wpr, n, &thr);
+                    for (j, row) in rows.iter().enumerate() {
+                        let z = xnor_popcount_z(&x, row, n);
+                        assert_eq!(
+                            (word >> j) & 1,
+                            u64::from(z >= thr[j]),
+                            "{level:?} width {n}, {n_rows} rows, row {j}"
+                        );
+                    }
+                    // bits beyond the panel's rows stay zero — the padding
+                    // contract the next layer's XOR relies on
+                    if n_rows < 64 {
+                        assert_eq!(word >> n_rows, 0, "{level:?} width {n}, {n_rows} rows");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_pack_matches_naive_property() {
+        // Property: at random widths, row counts and thresholds, the fused
+        // kernel's packed bits equal the ±1 definition thresholded — so
+        // neither padding, the quad remainder, nor the compare can leak —
+        // and the runtime-dispatched entry agrees with the portable one.
+        Runner::new("threshold-pack-vs-naive").cases(32).run(
+            &gens::Pair(gens::BitVec(1..=300), gens::U64(1..=64)),
+            |(bits, n_rows)| {
+                let n = bits.len();
+                let wpr = words_u64(n);
+                let n_rows = *n_rows as usize;
+                let mut rng = Xoshiro256::new(n as u64 * 53 + n_rows as u64 * 17);
+                let x = pack_bits_u64(bits);
+                let row_bits: Vec<Vec<u8>> = (0..n_rows)
+                    .map(|_| (0..n).map(|_| rng.bool() as u8).collect())
+                    .collect();
+                let rows: Vec<Vec<u64>> = row_bits.iter().map(|b| pack_bits_u64(b)).collect();
+                let thr: Vec<i32> = (0..n_rows)
+                    .map(|_| rng.range_i64(-(n as i64), n as i64) as i32)
+                    .collect();
+                let panel = interleave_panel(&rows, wpr);
+                let word = xnor_threshold_pack(&x, &panel, wpr, n, &thr);
+                let dispatched = xnor_threshold_pack_simd(&x, &panel, wpr, n, &thr);
+                word == dispatched
+                    && row_bits.iter().enumerate().all(|(j, wb)| {
+                        let naive: i32 = wb
+                            .iter()
+                            .zip(bits)
+                            .map(|(&a, &b)| if a == b { 1i32 } else { -1 })
+                            .sum();
+                        (word >> j) & 1 == u64::from(naive >= thr[j])
+                    })
             },
         );
     }

@@ -36,9 +36,11 @@ SUBCOMMANDS
   verify     [--parallelism P] [--mem bram|lut]        §4.1 100-image check
   sweep      [--strict-clock]                          Table 1 sweep
   report     --parallelism P [--mem bram|lut]          §3.6-style report
-  serve-demo [--backend ...] [--requests N] [--workers W] [--kernel scalar|blocked|tiled|simd]
+  serve-demo [--backend ...] [--requests N] [--workers W]
+             [--kernel scalar|blocked|tiled|simd|fused]
              [--block-rows B] [--tile-imgs T] [--max-batch B] [--queue-cap N] [--config FILE]
-  serve      [--addr HOST:PORT] [--backend ...] [--workers W] [--kernel scalar|blocked|tiled|simd]
+  serve      [--addr HOST:PORT] [--backend ...] [--workers W]
+             [--kernel scalar|blocked|tiled|simd|fused]
              [--block-rows B] [--tile-imgs T] [--queue-cap N] [--config FILE]
   trace      [--image N] [--parallelism P] [--out trace.vcd]  VCD waveform
 
@@ -69,11 +71,12 @@ fn tile_imgs_arg(args: &Args, default: usize) -> Result<usize> {
     Ok(t)
 }
 
-/// `--kernel scalar|blocked|tiled|simd` overrides the config file's typed
-/// kernel; without the flag the file kernel is kept but re-shaped by the
-/// (possibly flag-overridden) `--block-rows` / `--tile-imgs`.  `simd`
-/// runtime-dispatches to AVX2/NEON and falls back to the tiled kernel on
-/// hosts without them.
+/// `--kernel scalar|blocked|tiled|simd|fused` overrides the config file's
+/// typed kernel; without the flag the file kernel is kept but re-shaped by
+/// the (possibly flag-overridden) `--block-rows` / `--tile-imgs`.  `simd`
+/// and `fused` runtime-dispatch to AVX2/NEON and fall back to their
+/// portable kernels on hosts without them; `fused` additionally prepares
+/// the panel weight layout once at engine build.
 fn kernel_arg(
     args: &Args,
     file_kernel: crate::coordinator::Kernel,
@@ -186,10 +189,14 @@ fn cmd_infer(args: &Args) -> Result<()> {
             }
             other => bail!("unknown backend '{other}'"),
         };
+    // one arena pair for the whole loop: after the first image the
+    // per-prediction path allocates nothing (InferBackend::predict_into)
+    let mut scratch = crate::coordinator::InferScratch::default();
+    let mut logits = crate::coordinator::LogitsBuf::new();
     let mut correct = 0;
     for i in 0..count {
         let t = std::time::Instant::now();
-        let digit = backend.predict(&ds.images[i])?;
+        let digit = backend.predict_into(&ds.images[i], &mut scratch, &mut logits)?;
         let us = t.elapsed().as_micros();
         let ok = digit == ds.labels[i];
         correct += ok as usize;

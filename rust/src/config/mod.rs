@@ -116,11 +116,13 @@ pub struct ServeConfig {
     /// `[coordinator] tile_imgs` / `--tile-imgs`.
     pub tile_imgs: usize,
     /// Native kernel tier, parsed from `[coordinator] kernel`
-    /// (`scalar|blocked|tiled|simd`) and shaped by `block_rows`/`tile_imgs`
-    /// at load time — a typo fails the config, and downstream code never
-    /// re-parses a string.  `simd` runtime-dispatches to AVX2/NEON and
-    /// falls back to `tiled` on hosts without them (or under
-    /// `BNN_FORCE_SCALAR=1`).
+    /// (`scalar|blocked|tiled|simd|fused`) and shaped by
+    /// `block_rows`/`tile_imgs` at load time — a typo fails the config,
+    /// and downstream code never re-parses a string.  `simd` and `fused`
+    /// runtime-dispatch to AVX2/NEON and fall back to their portable
+    /// kernels on hosts without them (or under `BNN_FORCE_SCALAR=1`);
+    /// `fused` additionally has its panel weights prepared once at engine
+    /// build.
     pub kernel: Kernel,
     /// Backpressure bound (`[coordinator] queue_cap` / `--queue-cap`):
     /// submits fail once this many requests are queued (per shard on the
@@ -286,6 +288,12 @@ mem_style = "bram"
             let cfg = ServeConfig::from_toml(&Toml::parse(&toml).unwrap()).unwrap();
             assert_eq!(cfg.kernel.name(), k.name());
         }
+        // the fused tier takes its tile width from [coordinator] tile_imgs
+        let cfg = ServeConfig::from_toml(
+            &Toml::parse("[coordinator]\nkernel = \"fused\"\ntile_imgs = 5").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.kernel, Kernel::Fused { tile_imgs: 5 });
     }
 
     #[test]

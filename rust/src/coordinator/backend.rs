@@ -5,7 +5,7 @@
 //! route to any of them interchangeably:
 //!
 //! * [`NativeBackend`] — the bit-packed Rust hot path (lowest latency),
-//!   with four kernel schedules selected by [`Kernel`];
+//!   with five kernel schedules selected by [`Kernel`];
 //! * [`PjrtBackend`] — the AOT-compiled JAX/Pallas artifacts via PJRT
 //!   (the paper's "CPU" platform in Table 5);
 //! * [`SimBackend`] — the cycle-accurate FPGA simulator (the paper's
@@ -25,7 +25,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::bnn::packing::Packed;
-use crate::bnn::{argmax_i32, BnnModel, DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS};
+use crate::bnn::{argmax_i32, BnnModel, PreparedModel, DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS};
 use crate::runtime::Engine;
 use crate::sim::{Accelerator, SimConfig};
 
@@ -64,6 +64,20 @@ pub enum Kernel {
         /// Images per tile, ≥ 1.
         tile_imgs: usize,
     },
+    /// Fused threshold-pack: popcount → threshold-compare → activation
+    /// bit-pack in registers, one packed `u64` written per (image, 64-row
+    /// panel) of every hidden layer — the hidden-layer `i32` tile arena
+    /// and its repack pass disappear
+    /// ([`PreparedModel::logits_batch_into`]).  Runs on engine-prepared
+    /// panel weights built once at construction
+    /// ([`NativeBackend::with_kernel`] → [`PreparedModel::new`]), with the
+    /// same [`crate::bnn::simd_level`] runtime dispatch as the simd tier.
+    /// No `block_rows` knob: the panel width is fixed at
+    /// [`crate::bnn::PANEL_ROWS`] (64) rows = one activation word.
+    Fused {
+        /// Images per tile, ≥ 1.
+        tile_imgs: usize,
+    },
 }
 
 impl Default for Kernel {
@@ -83,6 +97,7 @@ impl Kernel {
             Kernel::Blocked { .. } => "blocked",
             Kernel::Tiled { .. } => "tiled",
             Kernel::Simd { .. } => "simd",
+            Kernel::Fused { .. } => "fused",
         }
     }
 
@@ -104,6 +119,9 @@ impl Kernel {
                 anyhow::ensure!(block_rows >= 1, "block_rows must be ≥ 1");
                 anyhow::ensure!(tile_imgs >= 1, "tile_imgs must be ≥ 1");
             }
+            Kernel::Fused { tile_imgs } => {
+                anyhow::ensure!(tile_imgs >= 1, "tile_imgs must be ≥ 1");
+            }
         }
         Ok(())
     }
@@ -116,8 +134,10 @@ impl Kernel {
     }
 
     /// The same tier reshaped to new `block_rows`/`tile_imgs` knobs
-    /// (`Scalar` has no shape; `Blocked` ignores `tile_imgs`).  This is how
-    /// CLI flags re-shape a config-file kernel without re-parsing its name.
+    /// (`Scalar` has no shape; `Blocked` ignores `tile_imgs`; `Fused`
+    /// ignores `block_rows` — its panel width is fixed at 64 rows).  This
+    /// is how CLI flags re-shape a config-file kernel without re-parsing
+    /// its name.
     pub fn with_shape(self, block_rows: usize, tile_imgs: usize) -> Kernel {
         match self {
             Kernel::Scalar => Kernel::Scalar,
@@ -130,11 +150,12 @@ impl Kernel {
                 block_rows,
                 tile_imgs,
             },
+            Kernel::Fused { .. } => Kernel::Fused { tile_imgs },
         }
     }
 
-    /// Parse a kernel name (`scalar|blocked|tiled|simd` — the config/CLI
-    /// vocabulary) with explicit shape knobs.
+    /// Parse a kernel name (`scalar|blocked|tiled|simd|fused` — the
+    /// config/CLI vocabulary) with explicit shape knobs.
     pub fn parse(name: &str, block_rows: usize, tile_imgs: usize) -> Result<Kernel> {
         Ok(match name {
             "scalar" => Kernel::Scalar,
@@ -147,7 +168,10 @@ impl Kernel {
                 block_rows,
                 tile_imgs,
             },
-            other => anyhow::bail!("kernel must be scalar|blocked|tiled|simd, got '{other}'"),
+            "fused" => Kernel::Fused { tile_imgs },
+            other => {
+                anyhow::bail!("kernel must be scalar|blocked|tiled|simd|fused, got '{other}'")
+            }
         })
     }
 
@@ -162,12 +186,16 @@ impl Kernel {
     /// variant leaves its match non-exhaustive, and the fix-up lands next
     /// to the list that must grow with it.
     pub fn registry_with(block_rows: usize, tile_imgs: usize) -> Vec<Kernel> {
-        // every variant must appear here AND in the vec below
+        // every variant must appear here AND in the vec below — a new enum
+        // variant fails this match (and every dispatch match in this file)
+        // at compile time, so a missing dispatch arm is a build error, not
+        // a silently unexercised tier
         const _: fn(Kernel) = |k| match k {
             Kernel::Scalar
             | Kernel::Blocked { .. }
             | Kernel::Tiled { .. }
-            | Kernel::Simd { .. } => {}
+            | Kernel::Simd { .. }
+            | Kernel::Fused { .. } => {}
         };
         vec![
             Kernel::Scalar,
@@ -180,6 +208,7 @@ impl Kernel {
                 block_rows,
                 tile_imgs,
             },
+            Kernel::Fused { tile_imgs },
         ]
     }
 
@@ -306,12 +335,25 @@ pub trait InferBackend: Send + Sync {
         Ok(out.to_vecs())
     }
 
-    /// Convenience single-image predict.
+    /// Allocation-free single-image predict over caller-owned arenas —
+    /// the steady-state form of [`Self::predict`] (top-1 straight off the
+    /// flat logits row, mirroring `BnnModel::predict_into`).
+    fn predict_into(
+        &self,
+        image: &Packed,
+        scratch: &mut InferScratch,
+        out: &mut LogitsBuf,
+    ) -> Result<u8> {
+        self.infer_batch(&[image], scratch, out)?;
+        Ok(argmax_i32(out.row(0)) as u8)
+    }
+
+    /// Convenience single-image predict (allocates fresh arenas; loops
+    /// should hold arenas and call [`Self::predict_into`]).
     fn predict(&self, image: &Packed) -> Result<u8> {
         let mut scratch = InferScratch::default();
         let mut out = LogitsBuf::new();
-        self.infer_batch(&[image], &mut scratch, &mut out)?;
-        Ok(argmax_i32(out.row(0)) as u8)
+        self.predict_into(image, &mut scratch, &mut out)
     }
 }
 
@@ -321,6 +363,11 @@ pub trait InferBackend: Send + Sync {
 pub struct NativeBackend {
     model: BnnModel,
     kernel: Kernel,
+    /// Fused panel layout, built once at construction when the kernel is
+    /// [`Kernel::Fused`] — `Engine::build()` pays the re-layout cost, the
+    /// request path never does.  Each pool replica owns its copy, keeping
+    /// the worker's hot loop on core-local weights.
+    prepared: Option<PreparedModel>,
 }
 
 impl NativeBackend {
@@ -335,10 +382,21 @@ impl NativeBackend {
         Self::with_kernel(model, Kernel::Blocked { block_rows })
     }
 
-    /// Backend with an explicit kernel schedule.
+    /// Backend with an explicit kernel schedule.  For [`Kernel::Fused`]
+    /// this is where the panel weights are prepared (construction happens
+    /// inside `Engine::build()` on the serving path) — a model the fused
+    /// layout cannot represent (invalid layer chaining) panics here, at
+    /// build time, exactly like an invalid kernel shape.
     pub fn with_kernel(model: BnnModel, kernel: Kernel) -> Self {
         kernel.assert_valid();
-        Self { model, kernel }
+        let prepared = matches!(kernel, Kernel::Fused { .. }).then(|| {
+            PreparedModel::new(&model).expect("fused kernel needs a valid hidden/output model")
+        });
+        Self {
+            model,
+            kernel,
+            prepared,
+        }
     }
 
     pub fn model(&self) -> &BnnModel {
@@ -348,6 +406,12 @@ impl NativeBackend {
     /// The configured kernel schedule.
     pub fn kernel(&self) -> Kernel {
         self.kernel
+    }
+
+    /// The engine-prepared fused panel layout (`Some` iff the kernel is
+    /// [`Kernel::Fused`]).
+    pub fn prepared(&self) -> Option<&PreparedModel> {
+        self.prepared.as_ref()
     }
 }
 
@@ -419,6 +483,25 @@ impl InferBackend for NativeBackend {
                         tile_imgs,
                     );
                 }
+            }
+            Kernel::Fused { tile_imgs } => {
+                // same flat-arena gather as the tiled tiers, then the
+                // fused threshold-pack walk over the panels prepared at
+                // construction — hidden-layer sums never touch memory
+                scratch.input.clear();
+                for img in images {
+                    scratch.input.extend_from_slice(&img.words);
+                }
+                self.prepared
+                    .as_ref()
+                    .expect("fused panels are prepared with the kernel at construction")
+                    .logits_batch_into(
+                        &scratch.input,
+                        images.len(),
+                        &mut scratch.model,
+                        out.flat_mut(),
+                        tile_imgs,
+                    );
             }
             Kernel::Blocked { block_rows } => {
                 for (i, img) in images.iter().enumerate() {
@@ -654,9 +737,9 @@ mod tests {
         // one entry per enum variant, with distinct names — the
         // conformance suites rely on this being exhaustive
         let reg = Kernel::registry();
-        assert_eq!(reg.len(), 4);
+        assert_eq!(reg.len(), 5);
         let names: Vec<&str> = reg.iter().map(|k| k.name()).collect();
-        for want in ["scalar", "blocked", "tiled", "simd"] {
+        for want in ["scalar", "blocked", "tiled", "simd", "fused"] {
             assert!(names.contains(&want), "registry missing {want}: {names:?}");
         }
         // parse() round-trips the registry's vocabulary
@@ -686,10 +769,30 @@ mod tests {
                 } => {
                     assert_eq!((block_rows, tile_imgs), (32, 8));
                 }
+                Kernel::Fused { tile_imgs } => assert_eq!(tile_imgs, 8),
             }
         }
         assert!(Kernel::Blocked { block_rows: 0 }.validate().is_err());
         assert!(Kernel::Tiled { block_rows: 4, tile_imgs: 0 }.validate().is_err());
+        assert!(Kernel::Fused { tile_imgs: 0 }.validate().is_err());
+    }
+
+    #[test]
+    fn fused_backend_prepares_panels_at_construction() {
+        // the fused tier carries its engine-prepared layout; every other
+        // tier does not pay for it
+        let model = tiny_model(21);
+        let fused = NativeBackend::with_kernel(model.clone(), Kernel::Fused { tile_imgs: 4 });
+        let prepared = fused.prepared().expect("fused backend owns prepared panels");
+        assert_eq!(prepared.n_in(), model.n_in());
+        assert_eq!(prepared.n_classes(), model.n_classes());
+        assert!(NativeBackend::new(model.clone()).prepared().is_none());
+        // ...and serves through them bit-identically to the scalar path
+        let imgs = images(7, 22);
+        assert_eq!(
+            fused.infer_logits(&imgs).unwrap(),
+            NativeBackend::new(model).infer_logits(&imgs).unwrap()
+        );
     }
 
     #[test]

@@ -137,7 +137,10 @@ impl EngineBuilder {
         self.backend(BackendSpec::FpgaSim(model.clone(), sim_cfg))
     }
 
-    /// Native kernel tier (ignored by non-native specs).
+    /// Native kernel tier (ignored by non-native specs).  For
+    /// [`Kernel::Fused`], `build()` also prepares the fused panel weight
+    /// layout ([`crate::bnn::PreparedModel`]) — one re-layout per replica
+    /// at build time, never on the request path.
     pub fn kernel(mut self, kernel: Kernel) -> Self {
         self.kernel = kernel;
         self
@@ -427,6 +430,31 @@ mod tests {
         }
         sharded.shutdown();
         single.shutdown();
+    }
+
+    #[test]
+    fn fused_engine_prepares_at_build_and_serves() {
+        // Kernel::Fused through the one public construction path: the
+        // panel re-layout happens inside build(), and the served logits
+        // are bit-identical to the direct scalar reference.
+        let model = random_model(&[784, 128, 64, 10], 85);
+        let engine = Engine::builder()
+            .native(&model)
+            .kernel(Kernel::Fused { tile_imgs: 8 })
+            .workers(2)
+            .batcher(BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(100),
+            })
+            .build()
+            .unwrap();
+        let images = imgs(24, 86);
+        let responses = engine.infer_many(images.clone()).unwrap();
+        for (img, r) in images.iter().zip(&responses) {
+            assert_eq!(r.logits, model.logits(&img.words));
+            assert_eq!(r.digit as usize, model.predict(&img.words));
+        }
+        engine.shutdown();
     }
 
     #[test]

@@ -684,7 +684,14 @@ fn handle_v1(
     }
     let mut payload = vec![0u8; len];
     stream.read_exact(&mut payload)?;
-    match decode_payload(&payload).and_then(|img| service.infer(img)) {
+    // A v1 response carries only the digit, so serve the request through
+    // the top-1-only path (`digits_only`): the worker computes the digit
+    // from its flat logits arena and the per-request `n_classes` logits
+    // copy never happens — the v1 serve loop is allocation-free end to
+    // end (`BnnModel::predict_into` semantics through the engine).
+    match decode_payload(&payload)
+        .and_then(|img| service.infer_with(img, InferOptions::digits_only()))
+    {
         Ok(resp) => {
             let us = (resp.latency_ns / 1000).min(u32::MAX as u64) as u32;
             stream.write_all(&encode_response(resp.digit, us))?;

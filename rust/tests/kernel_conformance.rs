@@ -210,6 +210,38 @@ fn simd_levels_differential_fuzz() {
     );
 }
 
+/// CI-pinned (ISSUE 5): the fused threshold-pack tier must be in the
+/// registry — so every golden/differential gate above enumerates it — and
+/// must reproduce the committed logits through the serving backend path on
+/// its own, at tile widths that straddle its 64-row panel and 4-row quad.
+/// The CI kernel-conformance matrix runs this by name in both
+/// `BNN_FORCE_SCALAR` legs, so the vectorized and portable fused kernels
+/// are each provably exercised.
+#[test]
+fn fused_tier_is_registered_and_golden_conformant() {
+    let reg = Kernel::registry();
+    assert!(
+        reg.iter().any(|k| k.name() == "fused"),
+        "fused tier missing from the registry: {reg:?}"
+    );
+    let golden = common::load_golden_logits();
+    for (spec, want) in common::CASES.iter().zip(&golden) {
+        let model = spec.model();
+        let inputs = spec.inputs();
+        for tile in [1usize, 3, 8] {
+            let kernel = Kernel::Fused { tile_imgs: tile };
+            let backend = NativeBackend::with_kernel(model.clone(), kernel);
+            assert!(backend.prepared().is_some(), "{}: panels not prepared", spec.name);
+            assert_eq!(
+                &backend.infer_logits(&inputs).unwrap(),
+                want,
+                "{}: fused tier (tile {tile}) diverged from the golden vectors",
+                spec.name
+            );
+        }
+    }
+}
+
 /// The fixture deliberately covers the widths that break naive kernels:
 /// sub-word, word-straddling, exact-multiple and the paper's own shapes.
 #[test]
