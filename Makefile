@@ -4,7 +4,7 @@
 
 ARTIFACTS ?= artifacts
 
-.PHONY: artifacts build test bench bench-json doc clean
+.PHONY: artifacts build test bench bench-json bench-check doc clean
 
 artifacts:
 	cd python && python3 -m compile.train --out ../$(ARTIFACTS)
@@ -28,6 +28,15 @@ bench-json:
 	@test -f BENCH_hotpath.json || { echo "BENCH_hotpath.json missing at repo root"; exit 1; }
 	@grep -q '"fused' BENCH_hotpath.json || { echo "BENCH_hotpath.json has no fused rows"; exit 1; }
 	@echo "BENCH_hotpath.json refreshed (fused rows present)"
+
+# Gate the committed trajectory: BENCH_hotpath.json must exist at the
+# repo root and carry a row for every Kernel::registry() tier (so a new
+# tier cannot land without refreshing the baseline).  The heavy lifting
+# is tests/bench_trajectory.rs.
+bench-check:
+	@test -f BENCH_hotpath.json || { echo "BENCH_hotpath.json missing at repo root; run 'make bench-json' and commit the result"; exit 1; }
+	cargo test --release --test bench_trajectory -q
+	@echo "BENCH_hotpath.json covers every registry kernel tier"
 
 doc:
 	cargo doc --no-deps

@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 
 use std::collections::BTreeMap;
 
-use bnn_fpga::bnn::{DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS};
+use bnn_fpga::bnn::{DEFAULT_BLOCK_ROWS, DEFAULT_RING_CAP, DEFAULT_TILE_IMGS};
 use bnn_fpga::coordinator::{BatcherConfig, Engine, Kernel};
 use bnn_fpga::runtime::Engine as PjrtRuntime;
 use bnn_fpga::sim::{Accelerator, MemStyle, SimConfig};
@@ -151,6 +151,22 @@ fn main() {
                 r,
             );
         }
+        // the streaming layer-pipelined dataflow tier over the same
+        // prepared panels: one stage thread per hidden layer chained by
+        // SPSC rings, swept across ring capacities (1 = lockstep
+        // hand-over-hand; larger caps absorb inter-layer jitter)
+        let mut piped_out = vec![0i32; n * model.n_classes()];
+        for cap in [1usize, 4, DEFAULT_RING_CAP, 64] {
+            let r = bench.run(&format!("native-b100-pipelined-r{cap}"), || {
+                prepared.logits_batch_pipelined(&inputs, n, &mut piped_out, cap);
+                piped_out[0]
+            });
+            record_kernel(&mut kernel_json, &format!("pipelined_r{cap}"), n, &r);
+            add(
+                &format!("native batch-100, pipelined[{}] R={cap} (total)", level.name()),
+                r,
+            );
+        }
     }
 
     // 4. one binary dense layer (784→128) in isolation, scalar vs blocked
@@ -274,6 +290,12 @@ fn main() {
                 "fused",
                 Kernel::Fused {
                     tile_imgs: DEFAULT_TILE_IMGS,
+                },
+            ),
+            (
+                "pipelined",
+                Kernel::Pipelined {
+                    ring_cap: DEFAULT_RING_CAP,
                 },
             ),
         ] {

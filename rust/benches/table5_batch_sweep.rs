@@ -1,7 +1,7 @@
 //! Table 5 (§4.7.2): inference latency vs batch size on CPU and GPU — plus
 //! the native-engine extension: scalar vs blocked vs weight-stationary
-//! tiled vs simd vs fused threshold-pack kernels and 1-vs-N worker pools
-//! over the same batch ladder.  Every batch-capable tier is asserted
+//! tiled vs simd vs fused threshold-pack vs streaming layer-pipelined
+//! kernels and 1-vs-N worker pools over the same batch ladder.  Every batch-capable tier is asserted
 //! bit-identical to the scalar reference and the cycle-accurate simulator
 //! before any timing is reported.
 //!
@@ -18,7 +18,7 @@ mod common;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use bnn_fpga::bnn::{DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS};
+use bnn_fpga::bnn::{DEFAULT_BLOCK_ROWS, DEFAULT_RING_CAP, DEFAULT_TILE_IMGS};
 use bnn_fpga::coordinator::{BatcherConfig, Engine, Kernel};
 use bnn_fpga::estimate::gpu_model::GpuModel;
 use bnn_fpga::runtime::Engine as PjrtRuntime;
@@ -58,10 +58,15 @@ fn main() {
             "simd kernel ({}) diverged from the scalar reference",
             bnn_fpga::bnn::simd_level().name()
         );
-        let fused = bnn_fpga::bnn::PreparedModel::new(&model)
-            .unwrap()
-            .logits_batch(&inputs, check_n, DEFAULT_TILE_IMGS);
+        let pre = bnn_fpga::bnn::PreparedModel::new(&model).unwrap();
+        let fused = pre.logits_batch(&inputs, check_n, DEFAULT_TILE_IMGS);
         assert_eq!(fused, scalar, "fused kernel diverged from the scalar reference");
+        let mut pipelined = vec![0i32; check_n * 10];
+        pre.logits_batch_pipelined(&inputs, check_n, &mut pipelined, DEFAULT_RING_CAP);
+        assert_eq!(
+            pipelined, scalar,
+            "pipelined kernel diverged from the scalar reference"
+        );
         let mut acc = Accelerator::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap();
         for i in 0..check_n {
             let r = acc.run_image(&ds.images[i % ds.len()]);
@@ -71,7 +76,7 @@ fn main() {
                 "simulator diverged from the scalar reference at image {i}"
             );
         }
-        println!("tiled + simd + fused kernels verified bit-identical to scalar reference and FPGA simulator\n");
+        println!("tiled + simd + fused + pipelined kernels verified bit-identical to scalar reference and FPGA simulator\n");
     }
     // panel weights prepared once, outside every timed window (as the
     // engine does at build)
@@ -154,6 +159,12 @@ fn main() {
                     tile_imgs: DEFAULT_TILE_IMGS,
                 },
             ),
+            (
+                "native pipelined",
+                Kernel::Pipelined {
+                    ring_cap: DEFAULT_RING_CAP,
+                },
+            ),
         ] {
             let series: Vec<f64> = bench
                 .run_series(runs.min(15), || match kernel {
@@ -171,6 +182,11 @@ fn main() {
                     } => model.logits_batch_simd(&batch_inputs, batch, block_rows, tile_imgs),
                     Kernel::Fused { tile_imgs } => {
                         prepared.logits_batch(&batch_inputs, batch, tile_imgs)
+                    }
+                    Kernel::Pipelined { ring_cap } => {
+                        let mut out = vec![0i32; batch * model.n_classes()];
+                        prepared.logits_batch_pipelined(&batch_inputs, batch, &mut out, ring_cap);
+                        out
                     }
                 })
                 .iter()

@@ -4,11 +4,13 @@
 
 pub mod model;
 pub mod packing;
+pub mod pipeline;
 
 pub use model::{
     random_model, BinaryDenseLayer, BnnModel, PreparedModel, PreparedPanelLayer, Scratch,
     DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS, FUSED_PAR_MIN_CHUNK,
 };
+pub use pipeline::{spsc_ring, RingDisconnected, RingReceiver, RingSender, DEFAULT_RING_CAP};
 pub use packing::{
     pack_bits_u32, pack_bits_u64, simd_level, unpack_bits_u64, words_u32, words_u64, Packed,
     SimdLevel, PANEL_ROWS,

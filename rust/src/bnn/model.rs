@@ -765,6 +765,12 @@ impl PreparedModel {
         &self.hidden
     }
 
+    /// The output (non-thresholded) layer in row-major form — the
+    /// dataflow pipeline's final stage consumes it directly.
+    pub fn output_layer(&self) -> &BinaryDenseLayer {
+        &self.output
+    }
+
     /// Fused batch forward pass — `Kernel::Fused`, the memory-traffic
     /// optimisation of the serving hot path.
     ///
@@ -786,7 +792,10 @@ impl PreparedModel {
     /// `batch × n_classes` row-major, and the call is allocation-free once
     /// `scratch` has warmed up (the parallel split is the one exception —
     /// each scoped thread owns a fresh local `Scratch`, amortized over its
-    /// ≥ 128-image chunk).  Bit-identical to the scalar reference for
+    /// ≥ 128-image chunk).  The split itself is dispatched through
+    /// `run_batch_split` in [`crate::bnn::pipeline`], the shared stage
+    /// scheduler the `Kernel::Pipelined` dataflow tier also lives in.
+    /// Bit-identical to the scalar reference for
     /// every batch size and tile width (property-tested below and pinned
     /// by the golden-vector + differential conformance suites).
     pub fn logits_batch_into(
@@ -802,22 +811,18 @@ impl PreparedModel {
         assert_eq!(inputs.len(), batch * iw, "batch input length");
         let nc = self.n_classes;
         assert_eq!(out.len(), batch * nc, "batch output length");
-        let threads = std::thread::available_parallelism().map_or(1, |n| n.get());
-        let chunks = (batch / FUSED_PAR_MIN_CHUNK).min(threads);
-        if chunks < 2 {
-            self.fused_walk(inputs, batch, scratch, out, tile_imgs);
-            return;
-        }
-        let per = batch.div_ceil(chunks);
-        std::thread::scope(|s| {
-            for (in_c, out_c) in inputs.chunks(per * iw).zip(out.chunks_mut(per * nc)) {
-                s.spawn(move || {
-                    let mut local = Scratch::default();
-                    let n = out_c.len() / nc;
-                    self.fused_walk(in_c, n, &mut local, out_c, tile_imgs);
-                });
-            }
-        });
+        super::pipeline::run_batch_split(
+            inputs,
+            batch,
+            scratch,
+            out,
+            iw,
+            nc,
+            FUSED_PAR_MIN_CHUNK,
+            &|in_c: &[u64], n: usize, sc: &mut Scratch, out_c: &mut [i32]| {
+                self.fused_walk(in_c, n, sc, out_c, tile_imgs)
+            },
+        );
     }
 
     /// Fused batch inference, allocating convenience (tests/benches).
@@ -842,6 +847,29 @@ impl PreparedModel {
         let mut out = vec![0i32; batch * self.n_classes];
         self.logits_batch_into(inputs, batch, &mut scratch, &mut out, tile_imgs);
         out
+    }
+
+    /// Streaming layer-pipelined batch forward pass — `Kernel::Pipelined`,
+    /// the throughput tentpole of the serving hot path.
+    ///
+    /// One stage worker thread per hidden layer, chained by
+    /// `ring_cap`-deep SPSC rings of packed `u64` activation words; the
+    /// output stage runs on the calling thread (see
+    /// [`crate::bnn::pipeline`] for the stage graph and ring sizing
+    /// model).  Layout contracts match [`Self::logits_batch_into`]:
+    /// `inputs` is `batch × input_words` row-major, `out` is
+    /// `batch × n_classes` row-major.  Bit-identical to the scalar
+    /// reference at every ring capacity and batch size — including
+    /// batch = 1 and no-hidden-layer models, which degenerate to the
+    /// output stage inline — pinned by `tests/pipeline_conformance.rs`.
+    pub fn logits_batch_pipelined(
+        &self,
+        inputs: &[u64],
+        batch: usize,
+        out: &mut [i32],
+        ring_cap: usize,
+    ) {
+        super::pipeline::run_layer_pipeline(self, inputs, batch, out, ring_cap);
     }
 
     /// The serial fused walk over one image range (the parallel split

@@ -1,0 +1,543 @@
+//! Streaming layer-pipelined dataflow engine — `Kernel::Pipelined`.
+//!
+//! The paper's Verilog datapath earns its throughput from *layer-parallel
+//! streaming*: every layer is live hardware and images flow through the
+//! chain, one result draining while the next is still being computed.
+//! FINN (Umuroglu et al.) and Fraser et al. make the same dataflow
+//! argument for scaling binarized networks.  This module is the software
+//! analogue: one stage worker thread per hidden layer, connected by
+//! fixed-capacity SPSC rings whose currency is the packed `u64`
+//! activation words the fused tier already emits
+//! ([`packing::xnor_threshold_pack_simd`] produces exactly one word per
+//! 64 neurons).  The output stage runs on the calling thread and writes
+//! raw `i32` logits straight into the caller's rows, so a depth-`H` model
+//! keeps `H` cores busy on a *single* batch — throughput scales with
+//! cores × layers, where the fused batch split only scales with
+//! batch ÷ [`FUSED_PAR_MIN_CHUNK`](super::FUSED_PAR_MIN_CHUNK).
+//!
+//! Two stage schedulers live here so there is exactly one home for
+//! thread orchestration over [`PreparedModel`] stages:
+//!
+//! * `run_layer_pipeline` — the dataflow pipeline (`Kernel::Pipelined`),
+//!   reached through `PreparedModel::logits_batch_pipelined`.
+//! * `run_batch_split` — the chunked batch split the fused tier uses
+//!   for large batches (subsumed from `PreparedModel::logits_batch_into`,
+//!   which now delegates here).
+//!
+//! Drain contract (pinned by `tests/pipeline_conformance.rs`): every
+//! batch — single-image, ragged, or empty — drains with no deadlock and
+//! no lost images; a no-hidden-layer model degenerates to the output
+//! stage inline (zero rings, zero threads); and `std::thread::scope`
+//! structurally joins every stage worker before the call returns
+//! (observable via [`live_stage_threads`]).
+//!
+//! Ring sizing: capacity 1 already pipelines (stages run in lockstep,
+//! hand-over-hand); larger capacities only absorb per-image compute
+//! jitter between unevenly sized layers.  [`DEFAULT_RING_CAP`] images of
+//! slack per boundary is plenty — each slot is just `words_u64(n_out)`
+//! packed words — and the conformance suite sweeps {1, 2, 7, 64} to pin
+//! that capacity never changes results.
+
+use super::model::{BinaryDenseLayer, PreparedModel, PreparedPanelLayer, Scratch};
+use super::packing;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Default inter-stage ring capacity (in-flight images per layer
+/// boundary) — `[coordinator] ring_cap` / `--ring-cap` override it.
+pub const DEFAULT_RING_CAP: usize = 8;
+
+// ---------------------------------------------------------------------------
+// Bounded SPSC ring
+// ---------------------------------------------------------------------------
+
+/// `send` failed because the consumer side was dropped; the undelivered
+/// value is handed back.
+#[derive(Debug)]
+pub struct RingDisconnected<T>(pub T);
+
+struct RingState<T> {
+    buf: VecDeque<T>,
+    tx_alive: bool,
+    rx_alive: bool,
+}
+
+struct RingShared<T> {
+    state: Mutex<RingState<T>>,
+    /// Producer parks here when the ring is full.
+    space: Condvar,
+    /// Consumer parks here when the ring is empty.
+    items: Condvar,
+    cap: usize,
+}
+
+impl<T> RingShared<T> {
+    /// Lock the ring state, recovering from poisoning (a stage panicking
+    /// mid-drain must not turn neighbours' joins into double panics).
+    fn lock(&self) -> MutexGuard<'_, RingState<T>> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Producer half of a bounded SPSC ring (see [`spsc_ring`]).
+pub struct RingSender<T> {
+    shared: Arc<RingShared<T>>,
+}
+
+/// Consumer half of a bounded SPSC ring (see [`spsc_ring`]).
+pub struct RingReceiver<T> {
+    shared: Arc<RingShared<T>>,
+}
+
+/// A fixed-capacity single-producer single-consumer ring: the inter-stage
+/// channel of the dataflow pipeline.  Blocking with no spinning, and both
+/// drop directions are wired for clean shutdown — a dropped producer
+/// wakes the consumer into the `None` drain path, a dropped consumer
+/// unblocks the producer with [`RingDisconnected`] instead of hanging it.
+pub fn spsc_ring<T>(cap: usize) -> (RingSender<T>, RingReceiver<T>) {
+    assert!(cap >= 1, "ring capacity must be ≥ 1");
+    let shared = Arc::new(RingShared {
+        state: Mutex::new(RingState {
+            buf: VecDeque::with_capacity(cap),
+            tx_alive: true,
+            rx_alive: true,
+        }),
+        space: Condvar::new(),
+        items: Condvar::new(),
+        cap,
+    });
+    (
+        RingSender {
+            shared: Arc::clone(&shared),
+        },
+        RingReceiver { shared },
+    )
+}
+
+impl<T> RingSender<T> {
+    /// Enqueue `value`, blocking while the ring is full.  Errs (returning
+    /// the value) once the receiver has been dropped — queued-but-unread
+    /// items are abandoned, never silently re-delivered.
+    pub fn send(&self, value: T) -> Result<(), RingDisconnected<T>> {
+        let mut st = self.shared.lock();
+        loop {
+            if !st.rx_alive {
+                return Err(RingDisconnected(value));
+            }
+            if st.buf.len() < self.shared.cap {
+                st.buf.push_back(value);
+                drop(st);
+                self.shared.items.notify_one();
+                return Ok(());
+            }
+            st = self
+                .shared
+                .space
+                .wait(st)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// The fixed capacity this ring was built with.
+    pub fn capacity(&self) -> usize {
+        self.shared.cap
+    }
+}
+
+impl<T> Drop for RingSender<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.lock();
+        st.tx_alive = false;
+        drop(st);
+        // wake a consumer blocked in `recv` so it observes the drain
+        self.shared.items.notify_all();
+    }
+}
+
+impl<T> RingReceiver<T> {
+    /// Dequeue the next value, blocking while the ring is empty.  Returns
+    /// `None` only once the ring is drained *and* the producer is gone —
+    /// FIFO order is preserved to the last item.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.shared.lock();
+        loop {
+            if let Some(v) = st.buf.pop_front() {
+                drop(st);
+                self.shared.space.notify_one();
+                return Some(v);
+            }
+            if !st.tx_alive {
+                return None;
+            }
+            st = self
+                .shared
+                .items
+                .wait(st)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// The fixed capacity this ring was built with.
+    pub fn capacity(&self) -> usize {
+        self.shared.cap
+    }
+}
+
+impl<T> Drop for RingReceiver<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.lock();
+        st.rx_alive = false;
+        st.buf.clear(); // abandoned work is dropped eagerly
+        drop(st);
+        // wake a producer blocked in `send` so it errors instead of hanging
+        self.shared.space.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stage-thread accounting
+// ---------------------------------------------------------------------------
+
+static LIVE_STAGE_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Stage worker threads currently alive across *all* pipelines in the
+/// process (both schedulers count).  `std::thread::scope` joins every
+/// worker before `run_layer_pipeline` / `run_batch_split` return, so
+/// this reads 0 whenever no call is in flight — the conformance suite
+/// asserts exactly that after every case to pin joined-on-drop.
+pub fn live_stage_threads() -> usize {
+    LIVE_STAGE_THREADS.load(Ordering::SeqCst)
+}
+
+/// RAII increment of [`live_stage_threads`] for the lifetime of one stage
+/// worker (decrements even if the stage unwinds).
+struct StageGuard;
+
+impl StageGuard {
+    fn enter() -> Self {
+        LIVE_STAGE_THREADS.fetch_add(1, Ordering::SeqCst);
+        StageGuard
+    }
+}
+
+impl Drop for StageGuard {
+    fn drop(&mut self) {
+        LIVE_STAGE_THREADS.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stage kernels
+// ---------------------------------------------------------------------------
+
+/// One hidden stage on one image: threshold-pack every panel of `layer`
+/// into `act` (`n_panels()` packed words — the next stage's input).
+fn hidden_stage(layer: &PreparedPanelLayer, x: &[u64], act: &mut Vec<u64>) {
+    let wpr = layer.words_per_row;
+    act.clear();
+    for p in 0..layer.n_panels() {
+        act.push(packing::xnor_threshold_pack_simd(
+            x,
+            layer.panel(p),
+            wpr,
+            layer.n_in,
+            layer.panel_thresholds(p),
+        ));
+    }
+}
+
+/// The output stage on one image: raw XNOR-popcount sums written straight
+/// into the caller's logits row (no threshold — the sums *are* the
+/// logits, §3.4), in the same row blocks the fused walk uses.
+fn output_stage(layer: &BinaryDenseLayer, x: &[u64], out_row: &mut [i32]) {
+    let wpr = layer.words_per_row;
+    let nc = layer.n_out;
+    let mut j = 0;
+    while j < nc {
+        let b = super::DEFAULT_BLOCK_ROWS.min(nc - j);
+        let rows = &layer.weights[j * wpr..(j + b) * wpr];
+        packing::xnor_popcount_z_simd(x, 1, rows, wpr, layer.n_in, &mut out_row[j..], nc);
+        j += b;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler 1: the layer pipeline (`Kernel::Pipelined`)
+// ---------------------------------------------------------------------------
+
+/// Drive `batch` images through the stage graph: one worker thread per
+/// hidden layer chained by `ring_cap`-deep SPSC rings, output stage on
+/// the calling thread.  `inputs` is `batch × input_words` row-major and
+/// `out` is `batch × n_classes` row-major, exactly like
+/// [`PreparedModel::logits_batch_into`]; results are bit-identical to the
+/// scalar reference at every ring capacity.
+pub(crate) fn run_layer_pipeline(
+    prepared: &PreparedModel,
+    inputs: &[u64],
+    batch: usize,
+    out: &mut [i32],
+    ring_cap: usize,
+) {
+    assert!(ring_cap >= 1, "ring_cap must be ≥ 1");
+    let iw = packing::words_u64(prepared.n_in());
+    assert_eq!(inputs.len(), batch * iw, "batch input length");
+    let nc = prepared.n_classes();
+    assert_eq!(out.len(), batch * nc, "batch output length");
+    if batch == 0 {
+        return;
+    }
+    let hidden = prepared.hidden_layers();
+    let output = prepared.output_layer();
+    if hidden.is_empty() {
+        // a no-hidden-layer model is a one-stage graph: run the output
+        // stage inline — zero rings, zero threads to join
+        for (x, row) in inputs.chunks_exact(iw).zip(out.chunks_exact_mut(nc)) {
+            output_stage(output, x, row);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        // stage 0: pack raw input images through the first hidden layer
+        let (tx0, mut rx) = spsc_ring::<Vec<u64>>(ring_cap);
+        {
+            let layer = &hidden[0];
+            s.spawn(move || {
+                let _live = StageGuard::enter();
+                for x in inputs.chunks_exact(iw) {
+                    let mut act = Vec::with_capacity(layer.n_panels());
+                    hidden_stage(layer, x, &mut act);
+                    if tx0.send(act).is_err() {
+                        return; // downstream died mid-drain; unwind quietly
+                    }
+                }
+                // falling out drops tx0: the drain signal for stage 1
+            });
+        }
+        // stages 1..H: one worker per remaining hidden layer
+        for layer in &hidden[1..] {
+            let (tx, rx_next) = spsc_ring::<Vec<u64>>(ring_cap);
+            let rx_prev = rx;
+            rx = rx_next;
+            s.spawn(move || {
+                let _live = StageGuard::enter();
+                while let Some(x) = rx_prev.recv() {
+                    let mut act = Vec::with_capacity(layer.n_panels());
+                    hidden_stage(layer, &x, &mut act);
+                    if tx.send(act).is_err() {
+                        return;
+                    }
+                }
+            });
+        }
+        // the output stage drains the final ring on the calling thread,
+        // writing each image's logits row the moment it arrives — the
+        // `chunks_exact_mut` bound guarantees no image is lost or extra
+        for row in out.chunks_exact_mut(nc) {
+            let x = rx
+                .recv()
+                .expect("pipeline drained early: a stage thread died");
+            output_stage(output, &x, row);
+        }
+        // `thread::scope` joins every stage worker here (joined-on-drop)
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler 2: the chunked batch split (fused tier, large batches)
+// ---------------------------------------------------------------------------
+
+/// Split `batch` images into per-thread chunks of at least `min_chunk`
+/// and run `walk` on each in a scoped worker (fresh local [`Scratch`] per
+/// worker, amortized over its chunk); small batches run `walk` serially
+/// on the caller's `scratch`.  Per-image results are independent, so the
+/// split is bit-identical to the serial walk for every batch size.
+/// `PreparedModel::logits_batch_into` delegates its parallel split here
+/// so both stage schedulers share one home (and one thread-accounting
+/// path — [`live_stage_threads`] covers these workers too).
+pub(crate) fn run_batch_split(
+    inputs: &[u64],
+    batch: usize,
+    scratch: &mut Scratch,
+    out: &mut [i32],
+    words_per_image: usize,
+    n_classes: usize,
+    min_chunk: usize,
+    walk: &(dyn Fn(&[u64], usize, &mut Scratch, &mut [i32]) + Sync),
+) {
+    assert!(min_chunk >= 1, "min_chunk must be ≥ 1");
+    let threads = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let chunks = (batch / min_chunk).min(threads);
+    if chunks < 2 {
+        walk(inputs, batch, scratch, out);
+        return;
+    }
+    let per = batch.div_ceil(chunks);
+    std::thread::scope(|s| {
+        for (in_c, out_c) in inputs
+            .chunks(per * words_per_image)
+            .zip(out.chunks_mut(per * n_classes))
+        {
+            s.spawn(move || {
+                let _live = StageGuard::enter();
+                let mut local = Scratch::default();
+                let n = out_c.len() / n_classes;
+                walk(in_c, n, &mut local, out_c);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::model::{random_model, PreparedModel};
+    use crate::bnn::packing::pack_bits_u64;
+    use crate::util::prng::Xoshiro256;
+    use crate::util::proptest_lite::{gens, Runner};
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    // --- SPSC ring properties (ISSUE 6 satellite) ---
+
+    #[test]
+    fn ring_preserves_fifo_order_at_every_capacity() {
+        Runner::new("spsc-ring-fifo").cases(32).run(
+            &gens::Pair(
+                gens::U64(1..=9),
+                gens::VecU64 {
+                    len: 0..=80,
+                    elem: 0..=u64::MAX - 1,
+                },
+            ),
+            |(cap, items)| {
+                let (tx, rx) = spsc_ring::<u64>(*cap as usize);
+                let sent = items.clone();
+                let producer = std::thread::spawn(move || {
+                    for v in sent {
+                        if tx.send(v).is_err() {
+                            return;
+                        }
+                    }
+                });
+                let mut got = Vec::new();
+                while let Some(v) = rx.recv() {
+                    got.push(v);
+                }
+                producer.join().unwrap();
+                got == *items
+            },
+        );
+    }
+
+    #[test]
+    fn capacity_one_ring_ping_pongs_in_lockstep() {
+        let (tx, rx) = spsc_ring::<u64>(1);
+        assert_eq!(tx.capacity(), 1);
+        let producer = std::thread::spawn(move || {
+            for v in 0..200u64 {
+                tx.send(v).unwrap(); // every send waits for the matching recv
+            }
+        });
+        for want in 0..200u64 {
+            assert_eq!(rx.recv(), Some(want));
+        }
+        assert_eq!(rx.recv(), None, "drained ring with a dropped producer");
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn producer_drop_wakes_a_blocked_consumer() {
+        let (tx, rx) = spsc_ring::<u64>(4);
+        tx.send(7).unwrap();
+        let (done_tx, done_rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(v) = rx.recv() {
+                got.push(v);
+            }
+            done_tx.send(got).unwrap();
+        });
+        std::thread::sleep(Duration::from_millis(20)); // let the consumer park
+        drop(tx);
+        let got = done_rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("consumer must wake (not hang) when the producer drops");
+        assert_eq!(got, vec![7], "buffered items still drain before None");
+    }
+
+    #[test]
+    fn consumer_drop_errors_a_blocked_producer() {
+        let (tx, rx) = spsc_ring::<u64>(1);
+        tx.send(1).unwrap(); // ring now full
+        let (done_tx, done_rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            let res = tx.send(2); // parks on the full ring
+            done_tx.send(res).unwrap();
+        });
+        std::thread::sleep(Duration::from_millis(20)); // let the producer park
+        drop(rx);
+        let res = done_rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("producer must unblock (not hang) when the consumer drops");
+        assert_eq!(
+            res.unwrap_err().0,
+            2,
+            "the undelivered value rides back in the error"
+        );
+    }
+
+    #[test]
+    fn send_to_a_dropped_consumer_errors_immediately() {
+        let (tx, rx) = spsc_ring::<u64>(4);
+        drop(rx);
+        assert_eq!(tx.send(9).unwrap_err().0, 9);
+    }
+
+    // --- pipeline walk spot checks (the full golden + fuzz matrix lives
+    //     in tests/pipeline_conformance.rs) ---
+
+    fn packed_batch(rng: &mut Xoshiro256, n_in: usize, batch: usize) -> Vec<u64> {
+        let mut inputs = Vec::new();
+        for _ in 0..batch {
+            let bits: Vec<u8> = (0..n_in).map(|_| rng.bool() as u8).collect();
+            inputs.extend(pack_bits_u64(&bits));
+        }
+        inputs
+    }
+
+    #[test]
+    fn pipelined_walk_matches_scalar_on_the_paper_shape() {
+        let model = random_model(&[784, 128, 64, 10], 42);
+        let prepared = PreparedModel::new(&model).unwrap();
+        let mut rng = Xoshiro256::new(7);
+        for batch in [1usize, 2, 9] {
+            let inputs = packed_batch(&mut rng, 784, batch);
+            let want = model.logits_batch(&inputs, batch);
+            for cap in [1usize, 3] {
+                let mut got = vec![0i32; batch * 10];
+                prepared.logits_batch_pipelined(&inputs, batch, &mut got, cap);
+                assert_eq!(got, want, "batch {batch}, ring cap {cap}");
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_walk_handles_a_no_hidden_layer_model_inline() {
+        let model = random_model(&[65, 10], 5);
+        let prepared = PreparedModel::new(&model).unwrap();
+        let mut rng = Xoshiro256::new(8);
+        let inputs = packed_batch(&mut rng, 65, 3);
+        let want = model.logits_batch(&inputs, 3);
+        let mut got = vec![0i32; 3 * 10];
+        prepared.logits_batch_pipelined(&inputs, 3, &mut got, 1);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let model = random_model(&[64, 32, 10], 3);
+        let prepared = PreparedModel::new(&model).unwrap();
+        prepared.logits_batch_pipelined(&[], 0, &mut [], DEFAULT_RING_CAP);
+    }
+}

@@ -37,11 +37,13 @@ SUBCOMMANDS
   sweep      [--strict-clock]                          Table 1 sweep
   report     --parallelism P [--mem bram|lut]          §3.6-style report
   serve-demo [--backend ...] [--requests N] [--workers W]
-             [--kernel scalar|blocked|tiled|simd|fused]
-             [--block-rows B] [--tile-imgs T] [--max-batch B] [--queue-cap N] [--config FILE]
+             [--kernel scalar|blocked|tiled|simd|fused|pipelined]
+             [--block-rows B] [--tile-imgs T] [--ring-cap R]
+             [--max-batch B] [--queue-cap N] [--config FILE]
   serve      [--addr HOST:PORT] [--backend ...] [--workers W]
-             [--kernel scalar|blocked|tiled|simd|fused]
-             [--block-rows B] [--tile-imgs T] [--queue-cap N] [--config FILE]
+             [--kernel scalar|blocked|tiled|simd|fused|pipelined]
+             [--block-rows B] [--tile-imgs T] [--ring-cap R]
+             [--queue-cap N] [--config FILE]
   trace      [--image N] [--parallelism P] [--out trace.vcd]  VCD waveform
 
 Set BNN_FPGA_ARTIFACTS to override the artifacts directory (default ./artifacts).
@@ -71,22 +73,33 @@ fn tile_imgs_arg(args: &Args, default: usize) -> Result<usize> {
     Ok(t)
 }
 
-/// `--kernel scalar|blocked|tiled|simd|fused` overrides the config file's
-/// typed kernel; without the flag the file kernel is kept but re-shaped by
-/// the (possibly flag-overridden) `--block-rows` / `--tile-imgs`.  `simd`
-/// and `fused` runtime-dispatch to AVX2/NEON and fall back to their
-/// portable kernels on hosts without them; `fused` additionally prepares
-/// the panel weight layout once at engine build.
+fn ring_cap_arg(args: &Args, default: usize) -> Result<usize> {
+    let r = args.usize_or("ring-cap", default)?;
+    if r < 1 {
+        bail!("--ring-cap must be ≥ 1");
+    }
+    Ok(r)
+}
+
+/// `--kernel scalar|blocked|tiled|simd|fused|pipelined` overrides the
+/// config file's typed kernel; without the flag the file kernel is kept
+/// but re-shaped by the (possibly flag-overridden) `--block-rows` /
+/// `--tile-imgs` / `--ring-cap`.  `simd` and `fused` runtime-dispatch to
+/// AVX2/NEON and fall back to their portable kernels on hosts without
+/// them; `fused` and `pipelined` additionally prepare the panel weight
+/// layout once at engine build.
 fn kernel_arg(
     args: &Args,
     file_kernel: crate::coordinator::Kernel,
     block_rows: usize,
     tile_imgs: usize,
+    ring_cap: usize,
 ) -> Result<crate::coordinator::Kernel> {
-    match args.opt("kernel") {
-        Some(name) => crate::coordinator::Kernel::parse(name, block_rows, tile_imgs),
-        None => Ok(file_kernel.with_shape(block_rows, tile_imgs)),
-    }
+    let kernel = match args.opt("kernel") {
+        Some(name) => crate::coordinator::Kernel::parse(name, block_rows, tile_imgs)?,
+        None => file_kernel.with_shape(block_rows, tile_imgs),
+    };
+    Ok(kernel.with_ring_cap(ring_cap))
 }
 
 /// `--queue-cap N` (default from `[coordinator] queue_cap`): the engine's
@@ -326,7 +339,8 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     let workers = args.usize_or("workers", file_cfg.workers)?;
     let block_rows = block_rows_arg(args, file_cfg.block_rows)?;
     let tile_imgs = tile_imgs_arg(args, file_cfg.tile_imgs)?;
-    let kernel = kernel_arg(args, file_cfg.kernel, block_rows, tile_imgs)?;
+    let ring_cap = ring_cap_arg(args, file_cfg.ring_cap)?;
+    let kernel = kernel_arg(args, file_cfg.kernel, block_rows, tile_imgs, ring_cap)?;
     let queue_cap = queue_cap_arg(args, file_cfg.queue_cap)?;
     let cfg = BatcherConfig {
         max_batch: args.usize_or("max-batch", file_cfg.batcher.max_batch)?,
@@ -420,7 +434,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers = args.usize_or("workers", file_cfg.workers)?;
     let block_rows = block_rows_arg(args, file_cfg.block_rows)?;
     let tile_imgs = tile_imgs_arg(args, file_cfg.tile_imgs)?;
-    let kernel = kernel_arg(args, file_cfg.kernel, block_rows, tile_imgs)?;
+    let ring_cap = ring_cap_arg(args, file_cfg.ring_cap)?;
+    let kernel = kernel_arg(args, file_cfg.kernel, block_rows, tile_imgs, ring_cap)?;
     let queue_cap = queue_cap_arg(args, file_cfg.queue_cap)?;
     let backend_default = file_cfg
         .backends

@@ -115,14 +115,17 @@ pub struct ServeConfig {
     /// Images per weight-stationary tile of the batch kernel (≥ 1) —
     /// `[coordinator] tile_imgs` / `--tile-imgs`.
     pub tile_imgs: usize,
+    /// In-flight images per inter-stage ring of the pipelined kernel
+    /// (≥ 1) — `[coordinator] ring_cap` / `--ring-cap`.
+    pub ring_cap: usize,
     /// Native kernel tier, parsed from `[coordinator] kernel`
-    /// (`scalar|blocked|tiled|simd|fused`) and shaped by
-    /// `block_rows`/`tile_imgs` at load time — a typo fails the config,
-    /// and downstream code never re-parses a string.  `simd` and `fused`
-    /// runtime-dispatch to AVX2/NEON and fall back to their portable
-    /// kernels on hosts without them (or under `BNN_FORCE_SCALAR=1`);
-    /// `fused` additionally has its panel weights prepared once at engine
-    /// build.
+    /// (`scalar|blocked|tiled|simd|fused|pipelined`) and shaped by
+    /// `block_rows`/`tile_imgs`/`ring_cap` at load time — a typo fails
+    /// the config, and downstream code never re-parses a string.  `simd`
+    /// and `fused` runtime-dispatch to AVX2/NEON and fall back to their
+    /// portable kernels on hosts without them (or under
+    /// `BNN_FORCE_SCALAR=1`); `fused` and `pipelined` additionally have
+    /// their panel weights prepared once at engine build.
     pub kernel: Kernel,
     /// Backpressure bound (`[coordinator] queue_cap` / `--queue-cap`):
     /// submits fail once this many requests are queued (per shard on the
@@ -142,6 +145,7 @@ impl Default for ServeConfig {
             workers: 2,
             block_rows: crate::bnn::DEFAULT_BLOCK_ROWS,
             tile_imgs: crate::bnn::DEFAULT_TILE_IMGS,
+            ring_cap: crate::bnn::DEFAULT_RING_CAP,
             kernel: Kernel::default(),
             queue_cap: DEFAULT_QUEUE_CAP,
             batcher: BatcherConfig::default(),
@@ -191,11 +195,16 @@ impl ServeConfig {
             bail!("tile_imgs must be ≥ 1");
         }
         let tile_imgs = tile_imgs as usize;
+        let ring_cap = doc.int_or("coordinator", "ring_cap", d.ring_cap as i64)?;
+        if ring_cap < 1 {
+            bail!("ring_cap must be ≥ 1");
+        }
+        let ring_cap = ring_cap as usize;
         // parse into the typed Kernel at load time so a typo fails the
         // config, not the first serve request, and so every consumer gets
         // the enum (the shape knobs are validated above)
         let kernel_name = doc.str_or("coordinator", "kernel", d.kernel.name())?;
-        let kernel = Kernel::parse(&kernel_name, block_rows, tile_imgs)?;
+        let kernel = Kernel::parse(&kernel_name, block_rows, tile_imgs)?.with_ring_cap(ring_cap);
         let queue_cap = doc.int_or("coordinator", "queue_cap", d.queue_cap as i64)?;
         if queue_cap < 1 {
             bail!("queue_cap must be ≥ 1");
@@ -207,6 +216,7 @@ impl ServeConfig {
             workers,
             block_rows,
             tile_imgs,
+            ring_cap,
             kernel,
             queue_cap,
             batcher: BatcherConfig {
@@ -241,6 +251,7 @@ backends = "native, fpga-sim"
 workers = 4
 block_rows = 32
 tile_imgs = 8
+ring_cap = 4
 kernel = "simd"
 queue_cap = 5000
 artifacts_dir = "artifacts"
@@ -261,6 +272,9 @@ mem_style = "bram"
         assert_eq!(cfg.workers, 4);
         assert_eq!(cfg.block_rows, 32);
         assert_eq!(cfg.tile_imgs, 8);
+        // ring_cap is carried for the pipelined tier; with_ring_cap is a
+        // no-op on every other tier, so "simd" is unaffected by it
+        assert_eq!(cfg.ring_cap, 4);
         // the kernel arrives typed, already shaped by block_rows/tile_imgs
         assert_eq!(cfg.kernel, Kernel::Simd { block_rows: 32, tile_imgs: 8 });
         assert_eq!(cfg.queue_cap, 5000);
@@ -277,6 +291,7 @@ mem_style = "bram"
         assert_eq!(cfg.workers, 2);
         assert_eq!(cfg.block_rows, crate::bnn::DEFAULT_BLOCK_ROWS);
         assert_eq!(cfg.tile_imgs, crate::bnn::DEFAULT_TILE_IMGS);
+        assert_eq!(cfg.ring_cap, crate::bnn::DEFAULT_RING_CAP);
         assert_eq!(cfg.kernel, Kernel::default());
         assert_eq!(cfg.queue_cap, DEFAULT_QUEUE_CAP);
     }
@@ -294,6 +309,21 @@ mem_style = "bram"
         )
         .unwrap();
         assert_eq!(cfg.kernel, Kernel::Fused { tile_imgs: 5 });
+        // the pipelined tier takes its ring depth from [coordinator] ring_cap
+        let cfg = ServeConfig::from_toml(
+            &Toml::parse("[coordinator]\nkernel = \"pipelined\"\nring_cap = 3").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.kernel, Kernel::Pipelined { ring_cap: 3 });
+        // ...and defaults to DEFAULT_RING_CAP when the knob is absent
+        let cfg = ServeConfig::from_toml(
+            &Toml::parse("[coordinator]\nkernel = \"pipelined\"").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.kernel,
+            Kernel::Pipelined { ring_cap: crate::bnn::DEFAULT_RING_CAP }
+        );
     }
 
     #[test]
@@ -325,6 +355,14 @@ mem_style = "bram"
         .is_err());
         assert!(ServeConfig::from_toml(
             &Toml::parse("[coordinator]\nblock_rows = -8").unwrap()
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml(
+            &Toml::parse("[coordinator]\nring_cap = 0").unwrap()
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml(
+            &Toml::parse("[coordinator]\nring_cap = -2").unwrap()
         )
         .is_err());
         assert!(ServeConfig::from_toml(

@@ -5,7 +5,7 @@
 //! route to any of them interchangeably:
 //!
 //! * [`NativeBackend`] — the bit-packed Rust hot path (lowest latency),
-//!   with five kernel schedules selected by [`Kernel`];
+//!   with six kernel schedules selected by [`Kernel`];
 //! * [`PjrtBackend`] — the AOT-compiled JAX/Pallas artifacts via PJRT
 //!   (the paper's "CPU" platform in Table 5);
 //! * [`SimBackend`] — the cycle-accurate FPGA simulator (the paper's
@@ -25,7 +25,9 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::bnn::packing::Packed;
-use crate::bnn::{argmax_i32, BnnModel, PreparedModel, DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS};
+use crate::bnn::{
+    argmax_i32, BnnModel, PreparedModel, DEFAULT_BLOCK_ROWS, DEFAULT_RING_CAP, DEFAULT_TILE_IMGS,
+};
 use crate::runtime::Engine;
 use crate::sim::{Accelerator, SimConfig};
 
@@ -78,6 +80,22 @@ pub enum Kernel {
         /// Images per tile, ≥ 1.
         tile_imgs: usize,
     },
+    /// Streaming layer-pipelined dataflow: one stage worker thread per
+    /// hidden layer (output stage on the calling thread), chained by
+    /// fixed-capacity SPSC rings of packed `u64` activation words — the
+    /// software analogue of the paper's layer-parallel Verilog datapath
+    /// and the FINN/Fraser et al. dataflow architectures
+    /// ([`PreparedModel::logits_batch_pipelined`]).  Runs on the same
+    /// engine-prepared panel weights as the fused tier, so throughput
+    /// scales with cores × layers on a *single* batch where the fused
+    /// split only scales with batch size.  No `block_rows`/`tile_imgs`
+    /// knobs: images stream one at a time, panel width is fixed at 64.
+    Pipelined {
+        /// In-flight images buffered per inter-stage ring, ≥ 1 (see
+        /// [`crate::bnn::DEFAULT_RING_CAP`]; capacity 1 runs the stages
+        /// hand-over-hand, larger caps absorb per-layer compute jitter).
+        ring_cap: usize,
+    },
 }
 
 impl Default for Kernel {
@@ -98,6 +116,7 @@ impl Kernel {
             Kernel::Tiled { .. } => "tiled",
             Kernel::Simd { .. } => "simd",
             Kernel::Fused { .. } => "fused",
+            Kernel::Pipelined { .. } => "pipelined",
         }
     }
 
@@ -122,6 +141,9 @@ impl Kernel {
             Kernel::Fused { tile_imgs } => {
                 anyhow::ensure!(tile_imgs >= 1, "tile_imgs must be ≥ 1");
             }
+            Kernel::Pipelined { ring_cap } => {
+                anyhow::ensure!(ring_cap >= 1, "ring_cap must be ≥ 1");
+            }
         }
         Ok(())
     }
@@ -135,9 +157,10 @@ impl Kernel {
 
     /// The same tier reshaped to new `block_rows`/`tile_imgs` knobs
     /// (`Scalar` has no shape; `Blocked` ignores `tile_imgs`; `Fused`
-    /// ignores `block_rows` — its panel width is fixed at 64 rows).  This
-    /// is how CLI flags re-shape a config-file kernel without re-parsing
-    /// its name.
+    /// ignores `block_rows` — its panel width is fixed at 64 rows;
+    /// `Pipelined` has neither knob and keeps its `ring_cap`, which
+    /// [`Self::with_ring_cap`] re-shapes instead).  This is how CLI flags
+    /// re-shape a config-file kernel without re-parsing its name.
     pub fn with_shape(self, block_rows: usize, tile_imgs: usize) -> Kernel {
         match self {
             Kernel::Scalar => Kernel::Scalar,
@@ -151,11 +174,26 @@ impl Kernel {
                 tile_imgs,
             },
             Kernel::Fused { .. } => Kernel::Fused { tile_imgs },
+            Kernel::Pipelined { ring_cap } => Kernel::Pipelined { ring_cap },
         }
     }
 
-    /// Parse a kernel name (`scalar|blocked|tiled|simd|fused` — the
-    /// config/CLI vocabulary) with explicit shape knobs.
+    /// The same tier re-shaped to a new inter-stage ring capacity — only
+    /// the pipelined tier has one; every other tier passes through
+    /// unchanged.  The `[coordinator] ring_cap` / `--ring-cap` plumbing
+    /// applies this after [`Self::parse`]/[`Self::with_shape`], mirroring
+    /// how `block_rows`/`tile_imgs` reach the other tiers.
+    pub fn with_ring_cap(self, ring_cap: usize) -> Kernel {
+        match self {
+            Kernel::Pipelined { .. } => Kernel::Pipelined { ring_cap },
+            other => other,
+        }
+    }
+
+    /// Parse a kernel name (`scalar|blocked|tiled|simd|fused|pipelined` —
+    /// the config/CLI vocabulary) with explicit shape knobs.  `pipelined`
+    /// starts at [`DEFAULT_RING_CAP`]; apply [`Self::with_ring_cap`] to
+    /// override.
     pub fn parse(name: &str, block_rows: usize, tile_imgs: usize) -> Result<Kernel> {
         Ok(match name {
             "scalar" => Kernel::Scalar,
@@ -169,8 +207,13 @@ impl Kernel {
                 tile_imgs,
             },
             "fused" => Kernel::Fused { tile_imgs },
+            "pipelined" => Kernel::Pipelined {
+                ring_cap: DEFAULT_RING_CAP,
+            },
             other => {
-                anyhow::bail!("kernel must be scalar|blocked|tiled|simd|fused, got '{other}'")
+                anyhow::bail!(
+                    "kernel must be scalar|blocked|tiled|simd|fused|pipelined, got '{other}'"
+                )
             }
         })
     }
@@ -195,7 +238,8 @@ impl Kernel {
             | Kernel::Blocked { .. }
             | Kernel::Tiled { .. }
             | Kernel::Simd { .. }
-            | Kernel::Fused { .. } => {}
+            | Kernel::Fused { .. }
+            | Kernel::Pipelined { .. } => {}
         };
         vec![
             Kernel::Scalar,
@@ -209,6 +253,9 @@ impl Kernel {
                 tile_imgs,
             },
             Kernel::Fused { tile_imgs },
+            Kernel::Pipelined {
+                ring_cap: DEFAULT_RING_CAP,
+            },
         ]
     }
 
@@ -364,9 +411,10 @@ pub struct NativeBackend {
     model: BnnModel,
     kernel: Kernel,
     /// Fused panel layout, built once at construction when the kernel is
-    /// [`Kernel::Fused`] — `Engine::build()` pays the re-layout cost, the
-    /// request path never does.  Each pool replica owns its copy, keeping
-    /// the worker's hot loop on core-local weights.
+    /// [`Kernel::Fused`] or [`Kernel::Pipelined`] (both walk the panels) —
+    /// `Engine::build()` pays the re-layout cost, the request path never
+    /// does.  Each pool replica owns its copy, keeping the worker's hot
+    /// loop on core-local weights.
     prepared: Option<PreparedModel>,
 }
 
@@ -383,14 +431,15 @@ impl NativeBackend {
     }
 
     /// Backend with an explicit kernel schedule.  For [`Kernel::Fused`]
-    /// this is where the panel weights are prepared (construction happens
-    /// inside `Engine::build()` on the serving path) — a model the fused
-    /// layout cannot represent (invalid layer chaining) panics here, at
-    /// build time, exactly like an invalid kernel shape.
+    /// and [`Kernel::Pipelined`] this is where the panel weights are
+    /// prepared (construction happens inside `Engine::build()` on the
+    /// serving path) — a model the panel layout cannot represent (invalid
+    /// layer chaining) panics here, at build time, exactly like an
+    /// invalid kernel shape.
     pub fn with_kernel(model: BnnModel, kernel: Kernel) -> Self {
         kernel.assert_valid();
-        let prepared = matches!(kernel, Kernel::Fused { .. }).then(|| {
-            PreparedModel::new(&model).expect("fused kernel needs a valid hidden/output model")
+        let prepared = matches!(kernel, Kernel::Fused { .. } | Kernel::Pipelined { .. }).then(|| {
+            PreparedModel::new(&model).expect("panel kernels need a valid hidden/output model")
         });
         Self {
             model,
@@ -409,7 +458,8 @@ impl NativeBackend {
     }
 
     /// The engine-prepared fused panel layout (`Some` iff the kernel is
-    /// [`Kernel::Fused`]).
+    /// [`Kernel::Fused`] or [`Kernel::Pipelined`] — both walk the panel
+    /// weights).
     pub fn prepared(&self) -> Option<&PreparedModel> {
         self.prepared.as_ref()
     }
@@ -501,6 +551,24 @@ impl InferBackend for NativeBackend {
                         &mut scratch.model,
                         out.flat_mut(),
                         tile_imgs,
+                    );
+            }
+            Kernel::Pipelined { ring_cap } => {
+                // same flat-arena gather, then the streaming dataflow
+                // walk: one stage thread per hidden layer over the same
+                // engine-prepared panels, output stage on this thread
+                scratch.input.clear();
+                for img in images {
+                    scratch.input.extend_from_slice(&img.words);
+                }
+                self.prepared
+                    .as_ref()
+                    .expect("pipelined stages are prepared with the kernel at construction")
+                    .logits_batch_pipelined(
+                        &scratch.input,
+                        images.len(),
+                        out.flat_mut(),
+                        ring_cap,
                     );
             }
             Kernel::Blocked { block_rows } => {
@@ -737,9 +805,9 @@ mod tests {
         // one entry per enum variant, with distinct names — the
         // conformance suites rely on this being exhaustive
         let reg = Kernel::registry();
-        assert_eq!(reg.len(), 5);
+        assert_eq!(reg.len(), 6);
         let names: Vec<&str> = reg.iter().map(|k| k.name()).collect();
-        for want in ["scalar", "blocked", "tiled", "simd", "fused"] {
+        for want in ["scalar", "blocked", "tiled", "simd", "fused", "pipelined"] {
             assert!(names.contains(&want), "registry missing {want}: {names:?}");
         }
         // parse() round-trips the registry's vocabulary
@@ -770,11 +838,27 @@ mod tests {
                     assert_eq!((block_rows, tile_imgs), (32, 8));
                 }
                 Kernel::Fused { tile_imgs } => assert_eq!(tile_imgs, 8),
+                // no block_rows/tile_imgs knobs: with_shape keeps the
+                // ring untouched, with_ring_cap re-shapes it instead
+                Kernel::Pipelined { ring_cap } => assert_eq!(ring_cap, DEFAULT_RING_CAP),
             }
         }
         assert!(Kernel::Blocked { block_rows: 0 }.validate().is_err());
         assert!(Kernel::Tiled { block_rows: 4, tile_imgs: 0 }.validate().is_err());
         assert!(Kernel::Fused { tile_imgs: 0 }.validate().is_err());
+        assert!(Kernel::Pipelined { ring_cap: 0 }.validate().is_err());
+    }
+
+    #[test]
+    fn with_ring_cap_only_reshapes_the_pipelined_tier() {
+        for k in Kernel::registry_with(16, 4) {
+            let r = k.with_ring_cap(5);
+            assert_eq!(r.name(), k.name());
+            match r {
+                Kernel::Pipelined { ring_cap } => assert_eq!(ring_cap, 5),
+                other => assert_eq!(other, k, "non-pipelined tiers pass through"),
+            }
+        }
     }
 
     #[test]
@@ -791,6 +875,20 @@ mod tests {
         let imgs = images(7, 22);
         assert_eq!(
             fused.infer_logits(&imgs).unwrap(),
+            NativeBackend::new(model).infer_logits(&imgs).unwrap()
+        );
+    }
+
+    #[test]
+    fn pipelined_backend_prepares_stages_at_construction() {
+        // the pipelined tier shares the fused tier's engine-prepared
+        // panel layout and serves through it bit-identically
+        let model = tiny_model(23);
+        let piped = NativeBackend::with_kernel(model.clone(), Kernel::Pipelined { ring_cap: 2 });
+        assert!(piped.prepared().is_some(), "pipelined backend owns prepared stages");
+        let imgs = images(6, 24);
+        assert_eq!(
+            piped.infer_logits(&imgs).unwrap(),
             NativeBackend::new(model).infer_logits(&imgs).unwrap()
         );
     }

@@ -605,6 +605,75 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_pool_ledger_balances_at_mid_drain_shutdown() {
+        // ISSUE 6 satellite: burst-stress the pipelined tier (pulled from
+        // the registry, not hand-built) and check the metrics ledger still
+        // balances when the pool is shut down while a pipelined worker is
+        // mid-drain.  Accounting contract under shutdown: in-flight
+        // batches finish (counted completed), queued work is abandoned —
+        // counted submitted but never completed/rejected, its waiters see
+        // a disconnected reply channel.  Every ticket is waited, so
+        // nothing may count cancelled.
+        let kernel = *Kernel::registry()
+            .iter()
+            .find(|k| k.name() == "pipelined")
+            .expect("registry carries the pipelined tier");
+        let model = random_model(&[784, 128, 64, 10], 63);
+        let pool = WorkerPool::native(
+            &model,
+            1, // one worker: the burst must outrun a single drain loop
+            kernel,
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(10),
+            },
+            DEFAULT_QUEUE_CAP,
+        )
+        .unwrap();
+        let n = 256usize;
+        let mut tickets = Vec::with_capacity(n);
+        for img in imgs(n, 64) {
+            tickets.push(pool.submit(img).unwrap());
+        }
+        // resolve a handful, then pull the plug with the rest in flight
+        let mut completed_seen = 0u64;
+        for t in tickets.drain(..4) {
+            t.wait().unwrap();
+            completed_seen += 1;
+        }
+        let metrics = Arc::clone(&pool.metrics);
+        pool.shutdown();
+        // classify every remaining ticket: executed before the stop flag
+        // (reply delivered → Ok) or abandoned on the shard queue (reply
+        // sender dropped → Err).  wait() resolves the ticket either way,
+        // so none of these may be counted cancelled.
+        let mut abandoned = 0u64;
+        for t in tickets {
+            match t.wait() {
+                Ok(_) => completed_seen += 1,
+                Err(_) => abandoned += 1,
+            }
+        }
+        let submitted = metrics.submitted.load(Ordering::Relaxed);
+        let completed = metrics.completed.load(Ordering::Relaxed);
+        let rejected = metrics.rejected.load(Ordering::Relaxed);
+        let cancelled = metrics.cancelled.load(Ordering::Relaxed);
+        assert_eq!(submitted, n as u64, "every burst submit is counted");
+        assert_eq!(rejected, 0, "well-formed images are never rejected");
+        assert_eq!(cancelled, 0, "waited tickets must not count cancelled");
+        assert_eq!(
+            completed, completed_seen,
+            "completed counter must match delivered replies"
+        );
+        assert_eq!(
+            submitted,
+            completed + rejected + abandoned,
+            "ledger must balance at mid-drain shutdown \
+             (submitted == completed + rejected + abandoned)"
+        );
+    }
+
+    #[test]
     fn size_mismatched_image_is_rejected_not_fatal() {
         // A wrong-width image must surface as an Err at submit time
         // (expected_bits gate — it never reaches a shard, so it can't

@@ -1,0 +1,83 @@
+//! Bench-trajectory gate (ISSUE 6, satellite 4): the committed
+//! `BENCH_hotpath.json` at the repo root must carry a row for **every**
+//! kernel tier in `Kernel::registry()`, and every row must be a sane
+//! measurement.  ROADMAP flagged the missing committed benchmark file as
+//! an open gap; this test (driven by `make bench-check`) keeps the file
+//! from silently going stale when a new tier lands — the const
+//! exhaustiveness guard adds the tier to the registry, and this gate
+//! then fails until `make bench-json` regenerates the rows.
+//!
+//! The file is produced by `cargo bench --bench hotpath` (see the
+//! `record_kernel` helper there); rows are keyed `scalar`,
+//! `blocked_b16`, `tiled_b16_t4`, ..., `fused_t4`, `pipelined_r8` — a
+//! registry tier matches a row whose key is the tier name or starts
+//! with `"{name}_"` (shape-parameter suffix).
+
+use std::path::Path;
+
+use bnn_fpga::coordinator::Kernel;
+use bnn_fpga::util::json::Json;
+
+fn bench_file() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .join("BENCH_hotpath.json")
+}
+
+#[test]
+fn committed_hotpath_bench_covers_every_registry_tier() {
+    let path = bench_file();
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "{} is missing ({e}); run `make bench-json` to regenerate it \
+             and commit the result",
+            path.display()
+        )
+    });
+    let doc = Json::parse(&text).expect("BENCH_hotpath.json is not valid JSON");
+    assert_eq!(
+        doc.get("bench").unwrap().as_str().unwrap(),
+        "hotpath",
+        "unexpected bench id"
+    );
+    let kernels = match doc.get("kernels").unwrap() {
+        Json::Obj(m) => m,
+        other => panic!("'kernels' must be an object, got {other:?}"),
+    };
+    assert!(!kernels.is_empty(), "'kernels' carries no rows");
+
+    // every registered tier has at least one committed row
+    for k in Kernel::registry() {
+        let name = k.name();
+        let prefix = format!("{name}_");
+        assert!(
+            kernels
+                .keys()
+                .any(|key| key == name || key.starts_with(&prefix)),
+            "no BENCH_hotpath.json row for registry tier '{name}' \
+             (rows: {:?}); run `make bench-json` and commit the result",
+            kernels.keys().collect::<Vec<_>>()
+        );
+    }
+
+    // every row is a positive, self-consistent measurement
+    for (key, row) in kernels {
+        let ns = row
+            .get("ns_per_image")
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|e| panic!("row '{key}': {e}"));
+        let ips = row
+            .get("images_per_sec")
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|e| panic!("row '{key}': {e}"));
+        assert!(ns > 0.0, "row '{key}': ns_per_image must be positive");
+        assert!(ips > 0.0, "row '{key}': images_per_sec must be positive");
+        let implied = 1e9 / ns;
+        assert!(
+            (ips - implied).abs() / implied < 0.01,
+            "row '{key}': images_per_sec {ips} inconsistent with \
+             ns_per_image {ns} (implies {implied})"
+        );
+    }
+}

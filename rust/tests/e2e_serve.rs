@@ -207,8 +207,9 @@ fn engine_concurrent_submitters_no_loss_no_mixup() {
 #[test]
 fn mixed_kernel_engine_burst_no_loss_and_metrics_balance() {
     // Concurrency stress: one worker per registered kernel tier — scalar,
-    // blocked, tiled, the runtime-dispatched SIMD path and the fused
-    // threshold-pack path all serving the same engine — under a
+    // blocked, tiled, the runtime-dispatched SIMD path, the fused
+    // threshold-pack path and the streaming layer pipeline all serving
+    // the same engine — under a
     // multi-thread burst of ticketed submissions.
     // Whatever shard a request lands on, the response must carry *that*
     // request's logits (no loss, no misrouting), every ticket id must be

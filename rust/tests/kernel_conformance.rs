@@ -242,6 +242,43 @@ fn fused_tier_is_registered_and_golden_conformant() {
     }
 }
 
+/// CI-pinned (ISSUE 6): the streaming layer-pipelined dataflow tier must
+/// be in the registry — so every golden/differential gate above
+/// enumerates it — and must reproduce the committed logits through the
+/// serving backend path on its own, at ring capacities from lockstep (1)
+/// to generous buffering (64).  The CI kernel-conformance matrix runs
+/// this by name in both `BNN_FORCE_SCALAR` legs, so the vectorized and
+/// portable stage kernels are each provably exercised; the dedicated
+/// drain/fuzz matrix lives in `tests/pipeline_conformance.rs`.
+#[test]
+fn pipelined_tier_is_registered_and_golden_conformant() {
+    let reg = Kernel::registry();
+    assert!(
+        reg.iter().any(|k| k.name() == "pipelined"),
+        "pipelined tier missing from the registry: {reg:?}"
+    );
+    let golden = common::load_golden_logits();
+    for (spec, want) in common::CASES.iter().zip(&golden) {
+        let model = spec.model();
+        let inputs = spec.inputs();
+        for cap in [1usize, 3, 64] {
+            let kernel = Kernel::Pipelined { ring_cap: cap };
+            let backend = NativeBackend::with_kernel(model.clone(), kernel);
+            assert!(
+                backend.prepared().is_some(),
+                "{}: stages not prepared",
+                spec.name
+            );
+            assert_eq!(
+                &backend.infer_logits(&inputs).unwrap(),
+                want,
+                "{}: pipelined tier (ring cap {cap}) diverged from the golden vectors",
+                spec.name
+            );
+        }
+    }
+}
+
 /// The fixture deliberately covers the widths that break naive kernels:
 /// sub-word, word-straddling, exact-multiple and the paper's own shapes.
 #[test]

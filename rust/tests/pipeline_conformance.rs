@@ -1,0 +1,220 @@
+//! Pipeline-conformance suite (ISSUE 6): the streaming layer-pipelined
+//! dataflow tier (`Kernel::Pipelined`) against the scalar semantics
+//! reference.
+//!
+//! Two instruments, mirroring `kernel_conformance.rs`:
+//!
+//! * **Golden vectors** — the pipelined walk must reproduce the committed
+//!   logits (`tests/golden/golden_vectors.json`) for every fixed-seed
+//!   case, at every swept ring capacity, through both the direct
+//!   `PreparedModel::logits_batch_pipelined` path and the
+//!   `NativeBackend` serving path.
+//! * **Differential fuzz** — edge widths {1, 37, 63, 64, 65, 784} ×
+//!   batch sizes {1, 2, `FUSED_PAR_MIN_CHUNK`±1, 2×`FUSED_PAR_MIN_CHUNK`
+//!   + 37} × ring capacities {1, 2, 7, 64} × depths 0–2 hidden layers,
+//!   asserting bit-identity against the per-image scalar reference.
+//!
+//! Every case additionally asserts **clean shutdown**: the pipeline's
+//! `std::thread::scope` must have joined all stage workers by the time
+//! the call returns, observed via
+//! [`bnn_fpga::bnn::pipeline::live_stage_threads`].  That counter is
+//! process-global, so every test in this binary serializes on one mutex —
+//! the assertion is exact, never racing a concurrent pipeline.
+
+mod common;
+
+use std::sync::{Mutex, MutexGuard};
+
+use bnn_fpga::bnn::model::random_model;
+use bnn_fpga::bnn::pipeline::live_stage_threads;
+use bnn_fpga::bnn::{PreparedModel, FUSED_PAR_MIN_CHUNK};
+use bnn_fpga::coordinator::{InferBackend, Kernel, NativeBackend};
+use bnn_fpga::util::prng::Xoshiro256;
+
+/// Ring capacities under test: lockstep (1), tiny, odd, generous.
+const RING_CAPS: [usize; 4] = [1, 2, 7, 64];
+
+/// Batch sizes under test: single image, pair, the parallel-split
+/// threshold straddled from both sides, and a ragged multi-chunk batch.
+const BATCHES: [usize; 5] = [
+    1,
+    2,
+    FUSED_PAR_MIN_CHUNK - 1,
+    FUSED_PAR_MIN_CHUNK + 1,
+    2 * FUSED_PAR_MIN_CHUNK + 37,
+];
+
+/// Input widths that break naive kernels: sub-word, word-straddling,
+/// exact multiples, and the paper's 784.
+const WIDTHS: [usize; 6] = [1, 37, 63, 64, 65, 784];
+
+/// All tests in this binary serialize here so the process-global
+/// [`live_stage_threads`] gauge reads exactly 0 between cases.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serialized() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Assert the scope joined every stage worker before returning.
+fn assert_drained(context: &str) {
+    assert_eq!(
+        live_stage_threads(),
+        0,
+        "{context}: stage threads leaked past the pipeline call"
+    );
+}
+
+/// Golden gate: the pipelined tier reproduces the committed logits for
+/// every fixed-seed case at every ring capacity — through the direct
+/// prepared-model walk AND the serving backend path — and joins all
+/// stage threads after every call.
+#[test]
+fn pipelined_walk_reproduces_golden_vectors_at_every_ring_cap() {
+    let _guard = serialized();
+    let golden = common::load_golden_logits();
+    for (spec, want) in common::CASES.iter().zip(&golden) {
+        let model = spec.model();
+        let inputs = spec.inputs();
+        let prepared = PreparedModel::new(&model).unwrap();
+        let batch = inputs.len();
+        let mut flat = Vec::new();
+        for img in &inputs {
+            flat.extend_from_slice(&img.words);
+        }
+        let want_flat: Vec<i32> = want.iter().flatten().copied().collect();
+        for cap in RING_CAPS {
+            // direct walk
+            let mut got = vec![0i32; batch * model.n_classes()];
+            prepared.logits_batch_pipelined(&flat, batch, &mut got, cap);
+            assert_eq!(
+                got, want_flat,
+                "{}: pipelined walk (ring cap {cap}) diverged from the golden vectors",
+                spec.name
+            );
+            assert_drained(spec.name);
+            // serving backend path
+            let backend =
+                NativeBackend::with_kernel(model.clone(), Kernel::Pipelined { ring_cap: cap });
+            assert!(
+                backend.prepared().is_some(),
+                "{}: pipelined backend did not prepare stages",
+                spec.name
+            );
+            assert_eq!(
+                &backend.infer_logits(&inputs).unwrap(),
+                want,
+                "{}: pipelined backend (ring cap {cap}) diverged from the golden vectors",
+                spec.name
+            );
+            assert_drained(spec.name);
+        }
+    }
+}
+
+/// Differential fuzz: edge widths × batch ladder × ring capacities ×
+/// model depths (including no-hidden-layer), bit-identical to the
+/// per-image scalar reference with clean shutdown on every single case.
+#[test]
+fn pipelined_walk_differential_fuzz_widths_batches_ring_caps() {
+    let _guard = serialized();
+    let mut rng = Xoshiro256::new(0xDA7A_F10E);
+    for (wi, &w) in WIDTHS.iter().enumerate() {
+        // depth 0 (output stage inline), depth 1, and depth 2 (a real
+        // multi-stage chain) — hidden widths straddle word boundaries
+        let depths: [Vec<usize>; 3] = [
+            vec![w, 10],
+            vec![w, 65, 10],
+            vec![w, 63, 37, 10],
+        ];
+        for (di, dims) in depths.iter().enumerate() {
+            let model = random_model(dims, 4_000 + (wi * 10 + di) as u64);
+            let prepared = PreparedModel::new(&model).unwrap();
+            for &batch in &BATCHES {
+                let images = common::random_images(&mut rng, w, batch);
+                let mut flat = Vec::new();
+                for img in &images {
+                    flat.extend_from_slice(&img.words);
+                }
+                // scalar reference, computed once per (width, depth, batch)
+                let want = model.logits_batch(&flat, batch);
+                for cap in RING_CAPS {
+                    let mut got = vec![0i32; batch * model.n_classes()];
+                    prepared.logits_batch_pipelined(&flat, batch, &mut got, cap);
+                    assert_eq!(
+                        got, want,
+                        "dims {dims:?}, batch {batch}, ring cap {cap}: \
+                         pipelined diverged from scalar"
+                    );
+                    assert_drained("differential fuzz");
+                }
+            }
+        }
+    }
+}
+
+/// The degenerate drains named in the tentpole contract, each pinned
+/// explicitly (they are also inside the fuzz matrix, but a named failure
+/// beats a matrix coordinate): single-image batch, ragged tail relative
+/// to the parallel-split chunking, no-hidden-layer model, empty batch.
+#[test]
+fn pipelined_walk_drains_degenerate_batches_cleanly() {
+    let _guard = serialized();
+    let mut rng = Xoshiro256::new(0x0D0E_60E5);
+
+    // single image through a deep chain at lockstep capacity
+    let deep = random_model(&[65, 63, 37, 19, 10], 31);
+    let prepared = PreparedModel::new(&deep).unwrap();
+    let images = common::random_images(&mut rng, 65, 1);
+    let want = deep.logits(&images[0].words);
+    let mut got = vec![0i32; 10];
+    prepared.logits_batch_pipelined(&images[0].words, 1, &mut got, 1);
+    assert_eq!(got, want, "single-image batch through 3 hidden stages");
+    assert_drained("single-image batch");
+
+    // ragged tail: a batch that does not divide the split threshold
+    let batch = FUSED_PAR_MIN_CHUNK + FUSED_PAR_MIN_CHUNK / 2 + 1;
+    let images = common::random_images(&mut rng, 65, batch);
+    let mut flat = Vec::new();
+    for img in &images {
+        flat.extend_from_slice(&img.words);
+    }
+    let want = deep.logits_batch(&flat, batch);
+    let mut got = vec![0i32; batch * 10];
+    prepared.logits_batch_pipelined(&flat, batch, &mut got, 2);
+    assert_eq!(got, want, "ragged-tail batch of {batch}");
+    assert_drained("ragged-tail batch");
+
+    // no hidden layers: the output stage runs inline, zero threads
+    let shallow = random_model(&[37, 10], 32);
+    let prepared = PreparedModel::new(&shallow).unwrap();
+    let images = common::random_images(&mut rng, 37, 5);
+    let mut flat = Vec::new();
+    for img in &images {
+        flat.extend_from_slice(&img.words);
+    }
+    let want = shallow.logits_batch(&flat, 5);
+    let mut got = vec![0i32; 5 * 10];
+    prepared.logits_batch_pipelined(&flat, 5, &mut got, 64);
+    assert_eq!(got, want, "no-hidden-layer model");
+    assert_drained("no-hidden-layer model");
+
+    // empty batch: a no-op that must not spawn or deadlock
+    prepared.logits_batch_pipelined(&[], 0, &mut [], 1);
+    assert_drained("empty batch");
+}
+
+/// The registry pins the pipelined tier into every kernel-enumerating
+/// suite; this guards the wiring this suite itself depends on.
+#[test]
+fn registry_carries_the_pipelined_tier() {
+    let _guard = serialized();
+    let reg = Kernel::registry();
+    let pipelined: Vec<_> = reg.iter().filter(|k| k.name() == "pipelined").collect();
+    assert_eq!(
+        pipelined.len(),
+        1,
+        "registry must carry exactly one pipelined tier: {reg:?}"
+    );
+    pipelined[0].validate().unwrap();
+}
