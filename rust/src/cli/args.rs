@@ -75,6 +75,15 @@ impl Args {
                 .with_context(|| format!("--{name}: expected integer, got '{v}'")),
         }
     }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name}: expected number, got '{v}'")),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -118,5 +127,9 @@ mod tests {
         assert_eq!(a.usize_or("m", 9).unwrap(), 9);
         let bad = parse("x --n five");
         assert!(bad.usize_or("n", 1).is_err());
+        let f = parse("x --rate 2500.5");
+        assert_eq!(f.f64_or("rate", 1.0).unwrap(), 2500.5);
+        assert_eq!(f.f64_or("other", 7.0).unwrap(), 7.0);
+        assert!(parse("x --rate fast").f64_or("rate", 1.0).is_err());
     }
 }

@@ -15,7 +15,7 @@ pub mod args;
 
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{BatcherConfig, Engine, NativeBackend, PjrtBackend, SimBackend};
 use crate::data::Dataset;
@@ -44,6 +44,10 @@ SUBCOMMANDS
              [--kernel scalar|blocked|tiled|simd|fused|pipelined]
              [--block-rows B] [--tile-imgs T] [--ring-cap R]
              [--queue-cap N] [--config FILE]
+             [--serve-async] [--max-conns N] [--idle-timeout-ms MS]
+  loadgen    --addr HOST:PORT [--rate R] [--connections C]
+             [--duration-ms MS] [--mix-v1 PCT] [--seed S]
+             open-loop load against a running serve instance
   trace      [--image N] [--parallelism P] [--out trace.vcd]  VCD waveform
 
 Set BNN_FPGA_ARTIFACTS to override the artifacts directory (default ./artifacts).
@@ -142,6 +146,7 @@ fn dispatch(args: Args) -> Result<()> {
         Some("report") => cmd_report(&args),
         Some("serve-demo") => cmd_serve_demo(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("trace") => cmd_trace(&args),
         Some(other) => bail!("unknown subcommand '{other}'\n\n{USAGE}"),
         None => {
@@ -423,8 +428,33 @@ fn cmd_trace(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--max-conns` / `--idle-timeout-ms` override the `[server]` section; the
+/// resulting policy applies to whichever server (`--serve-async` or the
+/// file's `async` key picks the readiness-polled one).
+fn wire_server_cfg(
+    args: &Args,
+    file_cfg: &crate::config::ServeConfig,
+) -> Result<crate::coordinator::WireServerConfig> {
+    let max_conns = args.usize_or("max-conns", file_cfg.server.max_conns)?;
+    if max_conns < 1 {
+        bail!("--max-conns must be ≥ 1");
+    }
+    let idle_ms = args.u64_or(
+        "idle-timeout-ms",
+        file_cfg.server.idle_timeout.as_millis() as u64,
+    )?;
+    if idle_ms < 1 {
+        bail!("--idle-timeout-ms must be ≥ 1");
+    }
+    Ok(crate::coordinator::WireServerConfig {
+        max_conns,
+        idle_timeout: std::time::Duration::from_millis(idle_ms),
+    })
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     use crate::coordinator::wire::WireServer;
+    use crate::coordinator::AsyncWireServer;
     let (model, _, trained) = crate::load_model_or_synth(1);
     if !trained {
         println!("(artifacts missing — serving an untrained synthetic model)");
@@ -472,12 +502,94 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .build()?,
         other => bail!("unknown backend '{other}'"),
     };
-    let server = WireServer::start(&addr, Arc::new(engine))?;
-    println!("wire-protocol server listening on {} (Ctrl-C to stop)", server.addr);
-    println!("v1 frame: 0xB1 len16 payload[98] -> 0xB2 digit status latency_us32");
-    println!("v2 frame: 0xC1 features top_k id64 n_images16 n_bits32 payloads -> 0xC2 … (batched, echoes ids)");
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(5));
-        println!("served: {}", server.served.load(std::sync::atomic::Ordering::Relaxed));
+    let server_cfg = wire_server_cfg(args, &file_cfg)?;
+    let use_async = args.flag("serve-async") || file_cfg.async_serve;
+    let banner = |listen: std::net::SocketAddr| {
+        println!("v1 frame: 0xB1 len16 payload[98] -> 0xB2 digit status latency_us32");
+        println!("v2 frame: 0xC1 features top_k id64 n_images16 n_bits32 payloads -> 0xC2 … (batched, echoes ids)");
+        println!(
+            "policy: max {} connections, {} ms idle timeout (listening on {listen}, Ctrl-C to stop)",
+            server_cfg.max_conns,
+            server_cfg.idle_timeout.as_millis()
+        );
+    };
+    if use_async {
+        let server = AsyncWireServer::start_with(&addr, Arc::new(engine), server_cfg)?;
+        println!(
+            "async wire server on {} ({} readiness backend)",
+            server.addr, server.poll_backend
+        );
+        banner(server.addr);
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(5));
+            println!(
+                "served: {}  open connections: {}",
+                server.served.load(std::sync::atomic::Ordering::Relaxed),
+                server.metrics().conn_open.load(std::sync::atomic::Ordering::SeqCst)
+            );
+        }
+    } else {
+        let server = WireServer::start_with(&addr, Arc::new(engine), server_cfg)?;
+        println!("wire-protocol server (thread-per-connection) on {}", server.addr);
+        banner(server.addr);
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(5));
+            println!(
+                "served: {}  open connections: {}",
+                server.served.load(std::sync::atomic::Ordering::Relaxed),
+                server.metrics().conn_open.load(std::sync::atomic::Ordering::SeqCst)
+            );
+        }
     }
+}
+
+/// Open-loop load against a running `serve` instance (see
+/// `coordinator/loadgen.rs` on why the loop is open): prints the achieved
+/// throughput and the scheduled-send latency percentiles.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use crate::coordinator::{run_open_loop, LoadConfig};
+    use std::net::ToSocketAddrs;
+    let addr_s = args
+        .opt("addr")
+        .ok_or_else(|| anyhow::anyhow!("loadgen needs --addr HOST:PORT"))?;
+    let addr = addr_s
+        .to_socket_addrs()
+        .with_context(|| format!("resolving '{addr_s}'"))?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("'{addr_s}' resolved to no address"))?;
+    let mix_v1 = args.f64_or("mix-v1", 50.0)?;
+    if !(0.0..=100.0).contains(&mix_v1) {
+        bail!("--mix-v1 must be a percentage in 0..=100");
+    }
+    let cfg = LoadConfig {
+        addr,
+        connections: args.usize_or("connections", 16)?,
+        rate: args.f64_or("rate", 10_000.0)?,
+        duration: std::time::Duration::from_millis(args.u64_or("duration-ms", 2_000)?),
+        v1_fraction: mix_v1 / 100.0,
+        seed: args.u64_or("seed", 0xB14D)?,
+    };
+    // the image pool: trained artifacts when present, synthetic otherwise —
+    // load generation only needs well-formed 784-bit frames
+    let (_, ds, trained) = crate::load_model_or_synth(256);
+    if !trained {
+        println!("(artifacts missing — load uses synthetic images)");
+    }
+    println!(
+        "offering {:.0} images/sec for {} ms over {} connections ({:.0}% v1) at {addr}",
+        cfg.rate,
+        cfg.duration.as_millis(),
+        cfg.connections,
+        mix_v1
+    );
+    let r = run_open_loop(&ds.images, &cfg)?;
+    println!("sent       : {}", r.sent);
+    println!("completed  : {} ({} typed errors)", r.completed, r.errors);
+    println!("achieved   : {:.0} images/sec (offered {:.0})", r.achieved_ips, r.offered_ips);
+    println!(
+        "latency    : p50 {:.0} µs  p99 {:.0} µs  p999 {:.0} µs  max {:.0} µs",
+        r.p50_us, r.p99_us, r.p999_us, r.max_us
+    );
+    println!("wall       : {:.1} ms", r.wall.as_secs_f64() * 1e3);
+    Ok(())
 }

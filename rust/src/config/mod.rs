@@ -10,7 +10,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{BatcherConfig, Kernel, DEFAULT_QUEUE_CAP};
+use crate::coordinator::{BatcherConfig, Kernel, WireServerConfig, DEFAULT_QUEUE_CAP};
 use crate::sim::MemStyle;
 
 /// A parsed TOML-subset document: section → key → raw value.
@@ -132,6 +132,14 @@ pub struct ServeConfig {
     /// sharded engine core).
     pub queue_cap: usize,
     pub batcher: BatcherConfig,
+    /// Wire-server connection policy (`[server] max_conns` /
+    /// `idle_timeout_ms`): the admission cap and the mid-frame stall bound
+    /// both servers enforce (DESIGN.md §Async serving).
+    pub server: WireServerConfig,
+    /// Serve through the readiness-polled event loop
+    /// ([`crate::coordinator::AsyncWireServer`]) instead of
+    /// thread-per-connection (`[server] async` / `--serve-async`).
+    pub async_serve: bool,
     /// FPGA-sim backend parameters.
     pub parallelism: usize,
     pub mem_style: MemStyle,
@@ -149,6 +157,8 @@ impl Default for ServeConfig {
             kernel: Kernel::default(),
             queue_cap: DEFAULT_QUEUE_CAP,
             batcher: BatcherConfig::default(),
+            server: WireServerConfig::default(),
+            async_serve: false,
             parallelism: 64,
             mem_style: MemStyle::Bram,
         }
@@ -210,6 +220,20 @@ impl ServeConfig {
             bail!("queue_cap must be ≥ 1");
         }
         let queue_cap = queue_cap as usize;
+        let max_conns = doc.int_or("server", "max_conns", d.server.max_conns as i64)?;
+        if max_conns < 1 {
+            bail!("max_conns must be ≥ 1");
+        }
+        let idle_timeout_ms =
+            doc.int_or("server", "idle_timeout_ms", d.server.idle_timeout.as_millis() as i64)?;
+        if idle_timeout_ms < 1 {
+            bail!("idle_timeout_ms must be ≥ 1");
+        }
+        let server = WireServerConfig {
+            max_conns: max_conns as usize,
+            idle_timeout: Duration::from_millis(idle_timeout_ms as u64),
+        };
+        let async_serve = doc.bool_or("server", "async", d.async_serve)?;
         Ok(ServeConfig {
             artifacts_dir: doc.str_or("coordinator", "artifacts_dir", "artifacts")?.into(),
             backends,
@@ -228,6 +252,8 @@ impl ServeConfig {
                     d.batcher.max_wait.as_micros() as i64,
                 )? as u64),
             },
+            server,
+            async_serve,
             parallelism,
             mem_style,
         })
@@ -260,6 +286,11 @@ artifacts_dir = "artifacts"
 max_batch = 32
 max_wait_us = 150
 
+[server]
+max_conns = 512
+idle_timeout_ms = 30000
+async = true
+
 [fpga]
 parallelism = 64
 mem_style = "bram"
@@ -280,6 +311,9 @@ mem_style = "bram"
         assert_eq!(cfg.queue_cap, 5000);
         assert_eq!(cfg.batcher.max_batch, 32);
         assert_eq!(cfg.batcher.max_wait, Duration::from_micros(150));
+        assert_eq!(cfg.server.max_conns, 512);
+        assert_eq!(cfg.server.idle_timeout, Duration::from_secs(30));
+        assert!(cfg.async_serve);
         assert_eq!(cfg.parallelism, 64);
         assert_eq!(cfg.mem_style, MemStyle::Bram);
     }
@@ -294,6 +328,9 @@ mem_style = "bram"
         assert_eq!(cfg.ring_cap, crate::bnn::DEFAULT_RING_CAP);
         assert_eq!(cfg.kernel, Kernel::default());
         assert_eq!(cfg.queue_cap, DEFAULT_QUEUE_CAP);
+        assert_eq!(cfg.server.max_conns, WireServerConfig::default().max_conns);
+        assert_eq!(cfg.server.idle_timeout, WireServerConfig::default().idle_timeout);
+        assert!(!cfg.async_serve);
     }
 
     #[test]
@@ -385,6 +422,23 @@ mem_style = "bram"
         .is_err());
         assert!(ServeConfig::from_toml(
             &Toml::parse("[coordinator]\nqueue_cap = -5").unwrap()
+        )
+        .is_err());
+        // connection-policy knobs validate on the signed value too
+        assert!(ServeConfig::from_toml(
+            &Toml::parse("[server]\nmax_conns = 0").unwrap()
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml(
+            &Toml::parse("[server]\nmax_conns = -1").unwrap()
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml(
+            &Toml::parse("[server]\nidle_timeout_ms = 0").unwrap()
+        )
+        .is_err());
+        assert!(ServeConfig::from_toml(
+            &Toml::parse("[server]\nasync = 1").unwrap()
         )
         .is_err());
     }

@@ -1,0 +1,874 @@
+//! Readiness-polled async wire server — the high-fanout replacement for the
+//! thread-per-connection [`super::WireServer`] accept path (ROADMAP item 2).
+//!
+//! One event-loop thread multiplexes every connection through a vendored
+//! readiness poller (`netpoll`: epoll on Linux, portable `poll(2)` fallback):
+//!
+//! - **Per-connection state machines** assemble v1/v2 frames from partial
+//!   reads (magic-sniffed, same framing as the blocking server, shared
+//!   validation via [`super::wire::parse_v2_header`] so the two servers
+//!   cannot drift).
+//! - **Submit-and-continue**: a parsed frame is submitted to the
+//!   [`InferService`] immediately (one burst per v2 batch frame, same as the
+//!   blocking path) and the loop moves on; [`Ticket`]s park in a
+//!   per-connection reply queue that preserves response order.
+//! - **Write-side buffering**: responses append to a per-connection write
+//!   buffer flushed as the socket accepts bytes, with poller interest
+//!   re-registered (read/write) as buffers fill and drain.
+//! - **Admission control** rides the engine's queue-cap ledger: a submit
+//!   refused with "queue full" surfaces to the peer as a typed
+//!   [`WireStatus::Overloaded`] frame while the engine counts it `rejected`,
+//!   so `submitted == completed + rejected (+ cancelled)` still balances
+//!   under overload.  A connection cap bounds fds; per-connection in-flight
+//!   caps stop one peer from buying the whole queue.
+//! - **Idle read timeout**: a connection stalled *mid-frame* past
+//!   [`super::WireServerConfig::idle_timeout`] gets a typed
+//!   [`WireStatus::Timeout`] frame and is dropped — a slow-loris client
+//!   costs one poller slot for a bounded time, never a blocked thread.
+//!   Idleness *between* frames is free (that's the point of readiness
+//!   polling).
+//!
+//! Protocol errors poison the connection: the typed error frame is queued
+//! *behind* earlier pending replies (never reordered past them), reading
+//! stops, and the connection closes once the error has flushed — byte-alike
+//! with the blocking server's answer-then-drop behavior.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+use netpoll::{Events, Interest, Poller};
+
+use super::metrics::Metrics;
+use super::request::InferOptions;
+use super::wire::{
+    encode_error, encode_error_v2, encode_response, encode_response_v2, parse_v2_header,
+    payload_bytes, submit_error_status, unpack_payload, WireItem, WireServerConfig, WireStatus,
+    IMAGE_BITS, MAGIC_REQ, MAGIC_REQ_V2, PAYLOAD_BYTES,
+};
+use super::InferService;
+use crate::bnn::packing::Packed;
+
+/// Images one connection may have in the engine at once before the loop
+/// stops *reading* from it (backpressure through TCP flow control, not
+/// memory growth).  Matches the wire-frame batch limit so a single maximal
+/// v2 frame always fits.
+const MAX_INFLIGHT_PER_CONN: usize = 4096;
+
+/// Busy-poll iterations (with `yield_now`) while replies are in flight
+/// before falling back to 1 ms blocking waits — keeps reply latency low
+/// without starving engine workers on small hosts.
+const SPIN_LIMIT: u32 = 64;
+
+const LISTENER_TOKEN: usize = 0;
+
+// ---------------------------------------------------------------------------
+// frame parsing (incremental)
+
+/// Outcome of one parse attempt against the connection's read buffer.
+enum Parsed {
+    /// Not enough buffered bytes for a full frame.
+    NeedMore,
+    /// A complete v1 request.
+    V1(Packed),
+    /// A complete v2 request.
+    V2 {
+        id: u64,
+        features: u8,
+        top_k: u8,
+        opts: InferOptions,
+        images: Vec<Packed>,
+    },
+    /// Protocol error: answer `status` (v2-form iff `v2`) and poison.
+    Bad { v2: bool, id: u64, status: WireStatus },
+}
+
+/// Try to parse one frame from `buf`; returns `(bytes_consumed, outcome)`.
+/// `bytes_consumed` is nonzero only for complete frames — `Bad` outcomes
+/// consume nothing because the connection is torn down anyway.
+fn try_parse(buf: &[u8]) -> (usize, Parsed) {
+    let Some(&magic) = buf.first() else {
+        return (0, Parsed::NeedMore);
+    };
+    match magic {
+        MAGIC_REQ => {
+            if buf.len() < 3 {
+                return (0, Parsed::NeedMore);
+            }
+            let len = u16::from_le_bytes([buf[1], buf[2]]) as usize;
+            if len != PAYLOAD_BYTES {
+                return (
+                    0,
+                    Parsed::Bad {
+                        v2: false,
+                        id: 0,
+                        status: WireStatus::BadLength,
+                    },
+                );
+            }
+            let total = 3 + len;
+            if buf.len() < total {
+                return (0, Parsed::NeedMore);
+            }
+            (total, Parsed::V1(unpack_payload(&buf[3..total], IMAGE_BITS)))
+        }
+        MAGIC_REQ_V2 => {
+            if buf.len() < 17 {
+                return (0, Parsed::NeedMore);
+            }
+            let head: [u8; 16] = buf[1..17].try_into().unwrap();
+            let h = match parse_v2_header(&head) {
+                Ok(h) => h,
+                Err(e) => {
+                    return (
+                        0,
+                        Parsed::Bad {
+                            v2: true,
+                            id: e.id.unwrap_or(0),
+                            status: e.status,
+                        },
+                    )
+                }
+            };
+            let pb = payload_bytes(h.n_bits);
+            let total = 17 + h.n_images * pb;
+            if buf.len() < total {
+                return (0, Parsed::NeedMore);
+            }
+            let images = (0..h.n_images)
+                .map(|i| {
+                    let off = 17 + i * pb;
+                    unpack_payload(&buf[off..off + pb], h.n_bits)
+                })
+                .collect();
+            (
+                total,
+                Parsed::V2 {
+                    id: h.id,
+                    features: h.features,
+                    top_k: h.top_k,
+                    opts: h.opts(),
+                    images,
+                },
+            )
+        }
+        _ => (
+            0,
+            Parsed::Bad {
+                v2: false,
+                id: 0,
+                status: WireStatus::BadMagic,
+            },
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-connection state
+
+/// One submitted image's lifecycle inside a pending reply.
+enum Slot {
+    Waiting(super::request::Ticket),
+    Done(super::request::InferResponse),
+    Failed(WireStatus),
+}
+
+/// A response owed to the peer, in request order.
+enum PendingReply {
+    V1 {
+        slot: Slot,
+    },
+    V2 {
+        id: u64,
+        features: u8,
+        top_k: u8,
+        slots: Vec<Slot>,
+    },
+    /// A typed error frame (protocol error or idle timeout), queued in
+    /// order behind earlier replies.
+    Err { v2: bool, id: u64, status: WireStatus },
+}
+
+struct Conn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    /// Flushed prefix of `wbuf` (compacted lazily).
+    wpos: usize,
+    pending: VecDeque<PendingReply>,
+    /// `Slot::Waiting` count across `pending` (backpressure gauge).
+    inflight: usize,
+    last_activity: Instant,
+    interest: Interest,
+    /// Protocol error queued: stop reading, close once flushed.
+    poisoned: bool,
+    eof: bool,
+    /// Unrecoverable socket error: close immediately.
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Self {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            pending: VecDeque::new(),
+            inflight: 0,
+            last_activity: Instant::now(),
+            interest: Interest::READ,
+            poisoned: false,
+            eof: false,
+            dead: false,
+        }
+    }
+
+    /// Drain the socket into `rbuf`; returns true if any bytes arrived.
+    fn do_read(&mut self, scratch: &mut [u8]) -> bool {
+        let mut progress = false;
+        loop {
+            match self.stream.read(scratch) {
+                Ok(0) => {
+                    self.eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&scratch[..n]);
+                    self.last_activity = Instant::now();
+                    progress = true;
+                    if n < scratch.len() {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        progress
+    }
+
+    /// Write as much buffered response data as the socket accepts.
+    fn flush(&mut self) {
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.wpos += n;
+                    self.last_activity = Instant::now();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        } else if self.wpos > 32 * 1024 {
+            // large flushed prefix: compact so the buffer can't grow
+            // unboundedly under sustained partial writes
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+    }
+
+    fn flushed(&self) -> bool {
+        self.wpos == self.wbuf.len()
+    }
+
+    /// What poller interest this connection wants right now.
+    fn desired_interest(&self) -> Interest {
+        Interest {
+            read: !self.eof && !self.poisoned && self.inflight < MAX_INFLIGHT_PER_CONN,
+            write: !self.flushed(),
+        }
+    }
+
+    fn should_close(&self) -> bool {
+        if self.dead {
+            return true;
+        }
+        // poisoned: close once the error frame is out.  EOF: close once
+        // every already-read frame has been answered and flushed (half-close
+        // support — `pending` empty implies no in-flight tickets).
+        (self.poisoned || self.eof) && self.pending.is_empty() && self.flushed()
+    }
+}
+
+/// Submit one image; a refusal becomes an immediately-resolved failed slot
+/// with the typed status (the engine counted it `rejected`).
+fn submit_one(service: &Arc<dyn InferService>, img: Packed, opts: InferOptions) -> Slot {
+    match service.submit_with(img, opts) {
+        Ok(t) => Slot::Waiting(t),
+        Err(e) => Slot::Failed(submit_error_status(&e)),
+    }
+}
+
+/// Parse every complete frame in `rbuf` and submit it, respecting the
+/// per-connection in-flight cap.  Returns true on any progress.
+fn parse_and_submit(conn: &mut Conn, service: &Arc<dyn InferService>) -> bool {
+    let mut progress = false;
+    let mut consumed_total = 0usize;
+    while !conn.poisoned && conn.inflight < MAX_INFLIGHT_PER_CONN {
+        let (consumed, parsed) = try_parse(&conn.rbuf[consumed_total..]);
+        match parsed {
+            Parsed::NeedMore => break,
+            Parsed::V1(img) => {
+                consumed_total += consumed;
+                // v1 responses carry only the digit: the top-1-only path
+                // keeps the serve loop allocation-free (same as blocking)
+                let slot = submit_one(service, img, InferOptions::digits_only());
+                conn.inflight += matches!(slot, Slot::Waiting(_)) as usize;
+                conn.pending.push_back(PendingReply::V1 { slot });
+                progress = true;
+            }
+            Parsed::V2 {
+                id,
+                features,
+                top_k,
+                opts,
+                images,
+            } => {
+                consumed_total += consumed;
+                // submit the whole frame before waiting on anything (one
+                // burst for the dynamic batcher), never short-circuiting:
+                // a mid-frame refusal still submits the rest, mirroring
+                // the blocking server's ledger semantics
+                let slots: Vec<Slot> = images
+                    .into_iter()
+                    .map(|img| submit_one(service, img, opts))
+                    .collect();
+                conn.inflight += slots.iter().filter(|s| matches!(s, Slot::Waiting(_))).count();
+                conn.pending.push_back(PendingReply::V2 {
+                    id,
+                    features,
+                    top_k,
+                    slots,
+                });
+                progress = true;
+            }
+            Parsed::Bad { v2, id, status } => {
+                conn.pending.push_back(PendingReply::Err { v2, id, status });
+                conn.poisoned = true;
+                progress = true;
+                break;
+            }
+        }
+    }
+    if consumed_total > 0 {
+        conn.rbuf.drain(..consumed_total);
+    }
+    progress
+}
+
+/// Poll a reply's waiting slots; returns whether the whole reply is
+/// resolved.  `resolved_now` counts Waiting → resolved transitions (the
+/// caller decrements `inflight`).
+fn poll_reply(reply: &mut PendingReply, resolved_now: &mut usize) -> bool {
+    let poll_slot = |slot: &mut Slot, resolved_now: &mut usize| -> bool {
+        if let Slot::Waiting(t) = slot {
+            match t.try_poll() {
+                Ok(Some(r)) => {
+                    *resolved_now += 1;
+                    *slot = Slot::Done(r);
+                }
+                Ok(None) => return false,
+                Err(_) => {
+                    // backend dropped the ticket channel — a worker died
+                    *resolved_now += 1;
+                    *slot = Slot::Failed(WireStatus::Backend);
+                }
+            }
+        }
+        true
+    };
+    match reply {
+        PendingReply::Err { .. } => true,
+        PendingReply::V1 { slot } => poll_slot(slot, resolved_now),
+        PendingReply::V2 { slots, .. } => {
+            let mut all = true;
+            for slot in slots.iter_mut() {
+                all &= poll_slot(slot, resolved_now);
+            }
+            all
+        }
+    }
+}
+
+fn latency_us(ns: u64) -> u32 {
+    (ns / 1000).min(u32::MAX as u64) as u32
+}
+
+/// Encode a fully-resolved reply; returns the frame bytes and how many
+/// images it served OK (for the `served` counter).
+fn encode_reply(reply: PendingReply) -> (Vec<u8>, u64) {
+    match reply {
+        PendingReply::Err { v2, id, status } => {
+            let bytes = if v2 {
+                encode_error_v2(id, status)
+            } else {
+                encode_error(status).to_vec()
+            };
+            (bytes, 0)
+        }
+        PendingReply::V1 { slot } => match slot {
+            Slot::Done(r) => (encode_response(r.digit, latency_us(r.latency_ns)).to_vec(), 1),
+            Slot::Failed(status) => (encode_error(status).to_vec(), 0),
+            Slot::Waiting(_) => unreachable!("encode_reply on an unresolved v1 slot"),
+        },
+        PendingReply::V2 {
+            id,
+            features,
+            top_k,
+            slots,
+        } => {
+            // the first failure decides the typed status for the whole
+            // frame (same all-or-nothing contract as the blocking server)
+            let first_failure = slots.iter().find_map(|s| match s {
+                Slot::Failed(st) => Some(*st),
+                _ => None,
+            });
+            if let Some(status) = first_failure {
+                return (encode_error_v2(id, status), 0);
+            }
+            let items: Vec<WireItem> = slots
+                .into_iter()
+                .enumerate()
+                .map(|(i, s)| match s {
+                    Slot::Done(r) => WireItem {
+                        id: id.wrapping_add(i as u64),
+                        digit: r.digit,
+                        latency_us: latency_us(r.latency_ns),
+                        logits: r.logits,
+                        top_k: r.top_k,
+                    },
+                    _ => unreachable!("encode_reply on an unresolved v2 slot"),
+                })
+                .collect();
+            match encode_response_v2(id, WireStatus::Ok, features, top_k, &items) {
+                Ok(frame) => {
+                    let n = items.len() as u64;
+                    (frame, n)
+                }
+                // e.g. a model with more classes than the wire carries
+                Err(_) => (encode_error_v2(id, WireStatus::TooLarge), 0),
+            }
+        }
+    }
+}
+
+/// Resolve-and-encode as many in-order replies as are ready.
+fn pump(conn: &mut Conn, served: &AtomicU64) -> bool {
+    let mut progress = false;
+    loop {
+        let mut resolved_now = 0usize;
+        let ready = match conn.pending.front_mut() {
+            None => break,
+            Some(reply) => poll_reply(reply, &mut resolved_now),
+        };
+        conn.inflight -= resolved_now;
+        if !ready {
+            break;
+        }
+        let reply = conn.pending.pop_front().unwrap();
+        let (bytes, ok_images) = encode_reply(reply);
+        conn.wbuf.extend_from_slice(&bytes);
+        if ok_images > 0 {
+            served.fetch_add(ok_images, Ordering::Relaxed);
+        }
+        progress = true;
+    }
+    progress
+}
+
+// ---------------------------------------------------------------------------
+// the server
+
+/// A running readiness-polled TCP server bound to a serving engine.
+///
+/// Same two wire protocols on one port as [`super::WireServer`], same
+/// response bytes (modulo the measured latency field), thousands of
+/// connections on one thread.
+pub struct AsyncWireServer {
+    pub addr: std::net::SocketAddr,
+    /// Which poller backend the event loop runs on ("epoll" or "poll").
+    pub poll_backend: &'static str,
+    stop: Arc<AtomicBool>,
+    /// Images served OK (a v2 batch frame counts once per image).
+    pub served: Arc<AtomicU64>,
+    metrics: Arc<Metrics>,
+    loop_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl AsyncWireServer {
+    /// Bind `addr` and serve through `service` with the default policy.
+    pub fn start<S: InferService + 'static>(addr: &str, service: Arc<S>) -> Result<AsyncWireServer> {
+        Self::start_with(addr, service, WireServerConfig::default())
+    }
+
+    /// [`Self::start`] with an explicit connection cap / idle timeout.
+    pub fn start_with<S: InferService + 'static>(
+        addr: &str,
+        service: Arc<S>,
+        cfg: WireServerConfig,
+    ) -> Result<AsyncWireServer> {
+        let service: Arc<dyn InferService> = service;
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        // poller + listener registration happen before the spawn so setup
+        // errors surface to the caller instead of a dead thread
+        let poller = Poller::new().context("creating the readiness poller")?;
+        let poll_backend = poller.backend_name();
+        {
+            use std::os::unix::io::AsRawFd;
+            poller
+                .register(listener.as_raw_fd(), LISTENER_TOKEN, Interest::READ)
+                .context("registering the listener")?;
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let served = Arc::new(AtomicU64::new(0));
+        let metrics = Arc::new(Metrics::default());
+        let t_stop = stop.clone();
+        let t_served = served.clone();
+        let t_metrics = metrics.clone();
+        let loop_thread = std::thread::Builder::new()
+            .name("bnn-wire-async".into())
+            .spawn(move || {
+                event_loop(listener, poller, service, cfg, t_stop, t_served, t_metrics);
+            })?;
+        Ok(AsyncWireServer {
+            addr: local,
+            poll_backend,
+            stop,
+            served,
+            metrics,
+            loop_thread: Some(loop_thread),
+        })
+    }
+
+    /// Connection gauges (`conn_accepted`/`conn_open`/`conn_closed`).
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.loop_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for AsyncWireServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.loop_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_lines)]
+fn event_loop(
+    listener: TcpListener,
+    poller: Poller,
+    service: Arc<dyn InferService>,
+    cfg: WireServerConfig,
+    stop: Arc<AtomicBool>,
+    served: Arc<AtomicU64>,
+    metrics: Arc<Metrics>,
+) {
+    use std::os::unix::io::AsRawFd;
+
+    let mut conns: HashMap<usize, Conn> = HashMap::new();
+    let mut events = Events::with_capacity(1024);
+    let mut next_token = LISTENER_TOKEN + 1;
+    let mut scratch = vec![0u8; 64 * 1024];
+    let mut spins: u32 = 0;
+    let idle_timeout = cfg.idle_timeout.max(Duration::from_millis(1));
+    let sweep_every = (idle_timeout / 4).clamp(Duration::from_millis(10), Duration::from_millis(500));
+    let mut last_sweep = Instant::now();
+    let mut close_list: Vec<usize> = Vec::new();
+
+    while !stop.load(Ordering::SeqCst) {
+        let any_inflight = conns.values().any(|c| !c.pending.is_empty());
+        // Replies in flight: poll hot (yield per spin so engine workers on
+        // small hosts still run), then back off to 1 ms blocking waits.
+        // Fully idle: sleep long; accepts and readable sockets wake us.
+        let timeout = if any_inflight {
+            if spins < SPIN_LIMIT {
+                Duration::ZERO
+            } else {
+                Duration::from_millis(1)
+            }
+        } else {
+            Duration::from_millis(25)
+        };
+        let n_events = match poller.wait(&mut events, Some(timeout)) {
+            Ok(n) => n,
+            Err(_) => break,
+        };
+        if any_inflight && n_events == 0 && spins < SPIN_LIMIT {
+            std::thread::yield_now();
+        }
+
+        let mut progress = n_events > 0;
+
+        for ev in &events {
+            if ev.token == LISTENER_TOKEN {
+                // drain the accept queue (level-triggered, but cheap)
+                loop {
+                    match listener.accept() {
+                        Ok((mut stream, _)) => {
+                            metrics.conn_accepted.fetch_add(1, Ordering::SeqCst);
+                            if conns.len() >= cfg.max_conns {
+                                // over the cap: best-effort typed refusal
+                                // (7 bytes fit a fresh send buffer), close
+                                let _ = stream.write_all(&encode_error(WireStatus::Overloaded));
+                                metrics.conn_closed.fetch_add(1, Ordering::SeqCst);
+                                continue;
+                            }
+                            if stream.set_nonblocking(true).is_err() {
+                                metrics.conn_closed.fetch_add(1, Ordering::SeqCst);
+                                continue;
+                            }
+                            stream.set_nodelay(true).ok();
+                            let token = next_token;
+                            next_token += 1;
+                            if poller.register(stream.as_raw_fd(), token, Interest::READ).is_err() {
+                                metrics.conn_closed.fetch_add(1, Ordering::SeqCst);
+                                continue;
+                            }
+                            metrics.conn_open.fetch_add(1, Ordering::SeqCst);
+                            conns.insert(token, Conn::new(stream));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                        Err(_) => break,
+                    }
+                }
+                continue;
+            }
+            let Some(conn) = conns.get_mut(&ev.token) else {
+                continue; // already closed this pass
+            };
+            if ev.readable && conn.do_read(&mut scratch) {
+                progress |= parse_and_submit(conn, &service);
+            }
+            if ev.writable {
+                conn.flush();
+            }
+        }
+
+        // resolve-and-encode ready replies on every connection, then flush
+        // opportunistically (most responses go out without waiting for a
+        // writable event)
+        for conn in conns.values_mut() {
+            if !conn.pending.is_empty() && pump(conn, &served) {
+                progress = true;
+            }
+            if !conn.flushed() {
+                conn.flush();
+            }
+        }
+
+        // idle sweep: connections stalled mid-frame past the timeout get a
+        // typed Timeout frame and close; ones wedged on an unflushable
+        // write buffer are cut off
+        if last_sweep.elapsed() >= sweep_every {
+            last_sweep = Instant::now();
+            for conn in conns.values_mut() {
+                if conn.poisoned || conn.dead || conn.eof {
+                    continue;
+                }
+                if conn.last_activity.elapsed() < idle_timeout {
+                    continue;
+                }
+                if !conn.flushed() {
+                    // peer stopped reading and writing: nothing more to say
+                    conn.dead = true;
+                } else if !conn.rbuf.is_empty() && conn.pending.is_empty() {
+                    // stalled mid-frame (slow-loris): typed timeout, poison
+                    let v2 = conn.rbuf[0] == MAGIC_REQ_V2;
+                    conn.pending.push_back(PendingReply::Err {
+                        v2,
+                        id: 0,
+                        status: WireStatus::Timeout,
+                    });
+                    conn.poisoned = true;
+                    pump(conn, &served);
+                    conn.flush();
+                }
+            }
+        }
+
+        // finalize: re-register interest where it changed, close what's done
+        close_list.clear();
+        for (&token, conn) in conns.iter_mut() {
+            if conn.should_close() {
+                close_list.push(token);
+                continue;
+            }
+            let want = conn.desired_interest();
+            if want != conn.interest {
+                if poller.modify(conn.stream.as_raw_fd(), token, want).is_ok() {
+                    conn.interest = want;
+                } else {
+                    conn.dead = true;
+                    close_list.push(token);
+                }
+            }
+        }
+        for token in close_list.drain(..) {
+            if let Some(conn) = conns.remove(&token) {
+                let _ = poller.deregister(conn.stream.as_raw_fd());
+                metrics.conn_open.fetch_sub(1, Ordering::SeqCst);
+                metrics.conn_closed.fetch_add(1, Ordering::SeqCst);
+                progress = true;
+            }
+        }
+
+        if progress {
+            spins = 0;
+        } else {
+            spins = spins.saturating_add(1);
+        }
+    }
+    // shutdown: every still-open connection closes now so the gauge books
+    // balance after the loop exits
+    for (_, conn) in conns.drain() {
+        let _ = poller.deregister(conn.stream.as_raw_fd());
+        metrics.conn_open.fetch_sub(1, Ordering::SeqCst);
+        metrics.conn_closed.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v1_frame(seed: u64) -> (Packed, Vec<u8>) {
+        let mut rng = crate::util::prng::Xoshiro256::new(seed);
+        let bits: Vec<u8> = (0..IMAGE_BITS).map(|_| rng.bool() as u8).collect();
+        let img = Packed::from_bits(&bits);
+        let frame = super::super::wire::encode_request(&img).unwrap();
+        (img, frame)
+    }
+
+    #[test]
+    fn try_parse_needs_full_v1_frame() {
+        let (img, frame) = v1_frame(7);
+        for cut in 0..frame.len() {
+            let (consumed, parsed) = try_parse(&frame[..cut]);
+            assert_eq!(consumed, 0, "cut {cut}");
+            assert!(matches!(parsed, Parsed::NeedMore), "cut {cut}");
+        }
+        let (consumed, parsed) = try_parse(&frame);
+        assert_eq!(consumed, frame.len());
+        match parsed {
+            Parsed::V1(p) => assert_eq!(p.words, img.words),
+            _ => panic!("complete v1 frame did not parse"),
+        }
+    }
+
+    #[test]
+    fn try_parse_rejects_bad_magic_and_bad_v1_length() {
+        let (_, mut frame) = v1_frame(8);
+        frame[0] = 0x5A;
+        match try_parse(&frame).1 {
+            Parsed::Bad { v2, id, status } => {
+                assert!(!v2);
+                assert_eq!(id, 0);
+                assert_eq!(status, WireStatus::BadMagic);
+            }
+            _ => panic!("bad magic accepted"),
+        }
+        let (_, mut frame) = v1_frame(9);
+        frame[1] = (PAYLOAD_BYTES as u8).wrapping_add(1);
+        match try_parse(&frame).1 {
+            Parsed::Bad { v2, status, .. } => {
+                assert!(!v2);
+                assert_eq!(status, WireStatus::BadLength);
+            }
+            _ => panic!("bad v1 length accepted"),
+        }
+    }
+
+    #[test]
+    fn try_parse_v2_roundtrip_and_trailing_bytes_survive() {
+        let mut rng = crate::util::prng::Xoshiro256::new(11);
+        let images: Vec<Packed> = (0..3)
+            .map(|_| {
+                let bits: Vec<u8> = (0..65).map(|_| rng.bool() as u8).collect();
+                Packed::from_bits(&bits)
+            })
+            .collect();
+        let opts = InferOptions::default().with_top_k(2);
+        let mut frame =
+            super::super::wire::encode_request_v2(&images, 42, opts).unwrap();
+        let frame_len = frame.len();
+        frame.extend_from_slice(&[MAGIC_REQ, 0xFF]); // next frame's prefix
+        let (consumed, parsed) = try_parse(&frame);
+        assert_eq!(consumed, frame_len, "must not consume the next frame's bytes");
+        match parsed {
+            Parsed::V2 {
+                id,
+                opts: parsed_opts,
+                images: parsed_images,
+                ..
+            } => {
+                assert_eq!(id, 42);
+                assert_eq!(parsed_opts, opts);
+                assert_eq!(parsed_images.len(), 3);
+                for (a, b) in parsed_images.iter().zip(images.iter()) {
+                    assert_eq!(a.words, b.words);
+                    assert_eq!(a.n_bits, b.n_bits);
+                }
+            }
+            _ => panic!("complete v2 frame did not parse"),
+        }
+        // every strict prefix of the v2 frame is NeedMore, never Bad
+        for cut in 0..frame_len {
+            let (c, p) = try_parse(&frame[..cut]);
+            assert_eq!(c, 0, "cut {cut}");
+            assert!(matches!(p, Parsed::NeedMore), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn try_parse_v2_header_errors_echo_the_id() {
+        // 0 images: BadLength with the client id echoed
+        let img = {
+            let bits: Vec<u8> = (0..64).map(|i| (i % 2) as u8).collect();
+            Packed::from_bits(&bits)
+        };
+        let mut frame =
+            super::super::wire::encode_request_v2(&[img], 99, InferOptions::default()).unwrap();
+        frame[11] = 0; // n_images lo
+        frame[12] = 0; // n_images hi
+        match try_parse(&frame).1 {
+            Parsed::Bad { v2, id, status } => {
+                assert!(v2);
+                assert_eq!(id, 99);
+                assert_eq!(status, WireStatus::BadLength);
+            }
+            _ => panic!("zero-image v2 frame accepted"),
+        }
+    }
+}

@@ -1,0 +1,298 @@
+//! Open-loop load generator for the wire servers.
+//!
+//! Closed-loop clients (send, wait, send) measure a system that is never
+//! actually saturated: each stalled response slows the *offered* load too,
+//! hiding queueing delay — the coordinated-omission trap.  This generator is
+//! **open-loop**: every request has a scheduled send time on a fixed arrival
+//! grid (`k / rate` seconds after start), writer threads pace the schedule
+//! without ever waiting for responses, and latency is measured from the
+//! *scheduled* send time, so a server that falls behind pays for the delay
+//! in the histogram instead of silently shedding offered load.
+//!
+//! Traffic is a deterministic (seeded) mix of v1 and single-image v2 frames
+//! striped round-robin across `connections` sockets; responses are read by
+//! one reader thread per connection (in order — both servers answer one
+//! connection's frames in order).  Typed error frames count as `errors`
+//! (e.g. [`super::WireStatus::Overloaded`] under queue-cap shedding), not
+//! latency samples.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::request::InferOptions;
+use super::wire::{
+    encode_request, encode_request_v2, read_response_v2, WireStatus, IMAGE_BITS, MAGIC_ERR,
+    MAGIC_RESP,
+};
+use crate::bnn::packing::Packed;
+use crate::util::prng::Xoshiro256;
+use crate::util::stats::percentile_sorted;
+
+/// Open-loop run parameters.
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    pub addr: SocketAddr,
+    /// Concurrent connections the offered load is striped across.
+    pub connections: usize,
+    /// Offered arrival rate, images per second (fixed grid, not Poisson —
+    /// deterministic schedules make runs comparable).
+    pub rate: f64,
+    /// How long to offer load for.
+    pub duration: Duration,
+    /// Fraction of requests sent as v1 frames (the rest are single-image
+    /// v2, digits-only).  v1 requires 784-bit images.
+    pub v1_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        LoadConfig {
+            addr: SocketAddr::from(([127, 0, 0, 1], 0)),
+            connections: 16,
+            rate: 10_000.0,
+            duration: Duration::from_secs(2),
+            v1_fraction: 0.5,
+            seed: 0xB14D,
+        }
+    }
+}
+
+/// What one open-loop run measured.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// The configured arrival rate (images/sec).
+    pub offered_ips: f64,
+    /// Requests actually written to sockets.
+    pub sent: u64,
+    /// OK responses received.
+    pub completed: u64,
+    /// Typed error responses (overload shedding, backend refusals).
+    pub errors: u64,
+    /// `completed / wall` — what the server actually sustained.
+    pub achieved_ips: f64,
+    /// Latency percentiles in µs, measured from *scheduled* send time.
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    pub max_us: f64,
+    /// Start of the arrival schedule to the last response read.
+    pub wall: Duration,
+}
+
+/// One pre-planned request: when to send, what bytes, how many response
+/// frames it answers with (always 1 — single-image frames only).
+struct PlannedSend {
+    offset: Duration,
+    frame: Vec<u8>,
+    v1: bool,
+}
+
+/// Drive `cfg.rate` images/sec of mixed v1/v2 traffic at `cfg.addr` for
+/// `cfg.duration`, open-loop.  `images` is the pool requests draw from
+/// (round-robin); every image must be 784 bits wide when `v1_fraction > 0`
+/// (v1 is fixed-width).
+pub fn run_open_loop(images: &[Packed], cfg: &LoadConfig) -> Result<LoadReport> {
+    anyhow::ensure!(!images.is_empty(), "load generation needs ≥ 1 image");
+    anyhow::ensure!(cfg.connections >= 1, "need ≥ 1 connection");
+    anyhow::ensure!(cfg.rate > 0.0, "arrival rate must be positive");
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&cfg.v1_fraction),
+        "v1_fraction must be in [0, 1]"
+    );
+    if cfg.v1_fraction > 0.0 {
+        for img in images {
+            anyhow::ensure!(
+                img.n_bits == IMAGE_BITS,
+                "v1 traffic requires {IMAGE_BITS}-bit images, got {}",
+                img.n_bits
+            );
+        }
+    }
+
+    let total = (cfg.rate * cfg.duration.as_secs_f64()).floor() as usize;
+    anyhow::ensure!(total >= 1, "rate × duration must yield ≥ 1 request");
+
+    // Pre-encode the whole schedule so the pacer threads do no per-request
+    // work beyond a sleep and a write (encoding jitter would otherwise eat
+    // into the arrival grid at high rates).  Request k goes out at
+    // `k / rate` on connection `k % connections`.
+    let mut rng = Xoshiro256::new(cfg.seed);
+    let mut plans: Vec<Vec<PlannedSend>> = (0..cfg.connections).map(|_| Vec::new()).collect();
+    let mut next_id: u64 = 1;
+    for k in 0..total {
+        let img = &images[k % images.len()];
+        let v1 = rng.next_f64() < cfg.v1_fraction;
+        let frame = if v1 {
+            encode_request(img).context("encoding a v1 load frame")?
+        } else {
+            let id = next_id;
+            next_id = next_id.wrapping_add(1);
+            encode_request_v2(std::slice::from_ref(img), id, InferOptions::digits_only())
+                .context("encoding a v2 load frame")?
+        };
+        plans[k % cfg.connections].push(PlannedSend {
+            offset: Duration::from_secs_f64(k as f64 / cfg.rate),
+            frame,
+            v1,
+        });
+    }
+
+    // Connect everything up front; a small grace period before the schedule
+    // starts so connect latency doesn't pollute the first samples.
+    let mut writers: Vec<TcpStream> = Vec::with_capacity(cfg.connections);
+    for i in 0..cfg.connections {
+        let s = TcpStream::connect(cfg.addr)
+            .with_context(|| format!("connecting load connection {i} to {}", cfg.addr))?;
+        s.set_nodelay(true).ok();
+        writers.push(s);
+    }
+    let start = Instant::now() + Duration::from_millis(50);
+    // Readers must eventually give up if the server wedges: generously past
+    // the schedule end.
+    let read_deadline = cfg.duration + Duration::from_secs(10);
+
+    struct ConnOutcome {
+        sent: u64,
+        completed: u64,
+        errors: u64,
+        latencies_ns: Vec<u64>,
+        last_read_at: Option<Instant>,
+    }
+
+    let outcomes: Vec<Result<ConnOutcome>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(cfg.connections);
+        for (plan, stream) in plans.into_iter().zip(writers.into_iter()) {
+            handles.push(scope.spawn(move || -> Result<ConnOutcome> {
+                let mut reader = stream.try_clone().context("cloning for the reader side")?;
+                reader
+                    .set_read_timeout(Some(read_deadline))
+                    .context("setting the reader deadline")?;
+                let expected: Vec<(Duration, bool)> =
+                    plan.iter().map(|p| (p.offset, p.v1)).collect();
+
+                // Writer half: pace the schedule.  Never reads, never waits
+                // on responses — that's what keeps the loop open.
+                let writer = scope.spawn(move || -> Result<u64> {
+                    let mut stream = stream;
+                    let mut sent = 0u64;
+                    for p in &plan {
+                        let due = start + p.offset;
+                        let now = Instant::now();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                        stream
+                            .write_all(&p.frame)
+                            .context("writing a load frame")?;
+                        sent += 1;
+                    }
+                    Ok(sent)
+                });
+
+                // Reader half: responses come back in request order on this
+                // connection; latency is measured from the *scheduled* send.
+                let mut completed = 0u64;
+                let mut errors = 0u64;
+                let mut latencies_ns = Vec::with_capacity(expected.len());
+                let mut last_read_at = None;
+                for &(offset, v1) in &expected {
+                    let status = if v1 {
+                        let mut frame = [0u8; 7];
+                        if let Err(e) = reader.read_exact(&mut frame) {
+                            bail!("reading a v1 response: {e}");
+                        }
+                        match frame[0] {
+                            MAGIC_RESP => WireStatus::from_u8(frame[2]),
+                            MAGIC_ERR => {
+                                let st = WireStatus::from_u8(frame[1]);
+                                if st == WireStatus::Ok {
+                                    WireStatus::Unknown
+                                } else {
+                                    st
+                                }
+                            }
+                            m => bail!("bad response magic {m:#x} mid-stream"),
+                        }
+                    } else {
+                        match read_response_v2(&mut reader) {
+                            Ok(resp) => resp.status,
+                            Err(e) => bail!("reading a v2 response: {e}"),
+                        }
+                    };
+                    last_read_at = Some(Instant::now());
+                    if status == WireStatus::Ok {
+                        completed += 1;
+                        let lat = Instant::now().saturating_duration_since(start + offset);
+                        latencies_ns.push(lat.as_nanos().min(u64::MAX as u128) as u64);
+                    } else {
+                        errors += 1;
+                    }
+                }
+                let sent = match writer.join() {
+                    Ok(r) => r.context("load writer failed")?,
+                    Err(_) => bail!("load writer panicked"),
+                };
+                Ok(ConnOutcome {
+                    sent,
+                    completed,
+                    errors,
+                    latencies_ns,
+                    last_read_at,
+                })
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow::anyhow!("load connection thread panicked")),
+            })
+            .collect()
+    });
+
+    let mut sent = 0u64;
+    let mut completed = 0u64;
+    let mut errors = 0u64;
+    let mut latencies_us: Vec<f64> = Vec::new();
+    let mut last_read_at: Option<Instant> = None;
+    for outcome in outcomes {
+        let o = outcome?;
+        sent += o.sent;
+        completed += o.completed;
+        errors += o.errors;
+        latencies_us.extend(o.latencies_ns.iter().map(|&ns| ns as f64 / 1000.0));
+        last_read_at = match (last_read_at, o.last_read_at) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        };
+    }
+
+    let wall = last_read_at
+        .map(|t| t.saturating_duration_since(start))
+        .unwrap_or(cfg.duration)
+        .max(Duration::from_millis(1));
+    latencies_us.sort_by(f64::total_cmp);
+    let pct = |p: f64| -> f64 {
+        if latencies_us.is_empty() {
+            0.0
+        } else {
+            percentile_sorted(&latencies_us, p)
+        }
+    };
+    Ok(LoadReport {
+        offered_ips: cfg.rate,
+        sent,
+        completed,
+        errors,
+        achieved_ips: completed as f64 / wall.as_secs_f64(),
+        p50_us: pct(50.0),
+        p99_us: pct(99.0),
+        p999_us: pct(99.9),
+        max_us: latencies_us.last().copied().unwrap_or(0.0),
+        wall,
+    })
+}

@@ -19,6 +19,15 @@ pub struct Metrics {
     pub cancelled: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
+    /// Connection gauges, maintained by the wire servers (both blocking and
+    /// async): every accepted socket increments `conn_accepted`; admitted
+    /// ones hold `conn_open` until teardown, which moves them to
+    /// `conn_closed`.  Invariant at any quiescent point:
+    /// `conn_accepted == conn_closed + conn_open` (see
+    /// [`Self::conn_books_balance`]).
+    pub conn_accepted: AtomicU64,
+    pub conn_open: AtomicU64,
+    pub conn_closed: AtomicU64,
     latency: Mutex<LatencyHistogram>,
     queue_wait: Mutex<LatencyHistogram>,
 }
@@ -26,6 +35,15 @@ pub struct Metrics {
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// `conn_accepted == conn_closed + conn_open` — true whenever no
+    /// accept/teardown is mid-flight (the servers update the gauges with
+    /// `SeqCst` ordering, accepted first, so the books only ever lag by a
+    /// connection that is actively being admitted or torn down).
+    pub fn conn_books_balance(&self) -> bool {
+        self.conn_accepted.load(Ordering::SeqCst)
+            == self.conn_closed.load(Ordering::SeqCst) + self.conn_open.load(Ordering::SeqCst)
     }
 
     pub fn record_batch(&self, batch_size: usize) {

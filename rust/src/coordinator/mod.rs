@@ -35,13 +35,21 @@
 //! * [`wire`] — byte-framed TCP server speaking protocol v1 (fixed
 //!   784-bit frames) and v2 (versioned, variable-width, batched, with
 //!   client-supplied ids and optional logits/top-k sections), generic over
-//!   [`InferService`].
+//!   [`InferService`];
+//! * [`async_wire`] — the readiness-polled (epoll/poll via the vendored
+//!   `netpoll` crate) high-fanout server: same protocols, thousands of
+//!   connections multiplexed onto one event-loop thread (DESIGN.md
+//!   §Async serving);
+//! * [`loadgen`] — open-loop load generator (fixed arrival rate, latency
+//!   from scheduled send time) for serving benchmarks.
 //!
 //! Python never appears here: the hot path is pure Rust + compiled HLO.
 
+pub mod async_wire;
 pub mod backend;
 pub mod batcher;
 pub mod engine;
+pub mod loadgen;
 pub mod metrics;
 pub mod pool;
 pub mod request;
@@ -58,7 +66,9 @@ pub use metrics::Metrics;
 pub use request::{InferOptions, InferRequest, InferResponse, RequestId, Ticket};
 pub use router::Router;
 pub use server::DEFAULT_QUEUE_CAP;
-pub use wire::{WireClient, WireServer, WireStatus};
+pub use async_wire::AsyncWireServer;
+pub use loadgen::{run_open_loop, LoadConfig, LoadReport};
+pub use wire::{WireClient, WireServer, WireServerConfig, WireStatus};
 
 use crate::bnn::packing::Packed;
 

@@ -76,6 +76,13 @@ pub enum WireStatus {
     Backend = 3,
     TooLarge = 4,
     BadFeature = 5,
+    /// The engine's admission queue is at its cap — retry later.  Distinct
+    /// from [`WireStatus::Backend`] so load generators and clients can tell
+    /// overload (expected under stress, counted `rejected` in the ledger)
+    /// from genuine backend refusal (width mismatch, dead worker).
+    Overloaded = 6,
+    /// The connection sat idle past the server's read timeout mid-frame.
+    Timeout = 7,
     /// A status byte this build does not know (forward compatibility).
     Unknown = 255,
 }
@@ -89,6 +96,8 @@ impl WireStatus {
             3 => WireStatus::Backend,
             4 => WireStatus::TooLarge,
             5 => WireStatus::BadFeature,
+            6 => WireStatus::Overloaded,
+            7 => WireStatus::Timeout,
             _ => WireStatus::Unknown,
         }
     }
@@ -101,8 +110,24 @@ impl WireStatus {
             WireStatus::Backend => "backend-error",
             WireStatus::TooLarge => "too-large",
             WireStatus::BadFeature => "bad-feature",
+            WireStatus::Overloaded => "overloaded",
+            WireStatus::Timeout => "idle-timeout",
             WireStatus::Unknown => "unknown-status",
         }
+    }
+}
+
+/// Map an engine submit/wait error onto the wire taxonomy: queue-cap
+/// rejections (the coordinator's "queue full (…)" refusals, counted
+/// `rejected` in the metrics ledger) become [`WireStatus::Overloaded`];
+/// everything else is a generic [`WireStatus::Backend`].  The vendored
+/// `anyhow` subset has no downcasting, but `{e:#}` renders the full
+/// context chain, so the match is a substring test.
+pub(crate) fn submit_error_status(e: &anyhow::Error) -> WireStatus {
+    if format!("{e:#}").contains("queue full") {
+        WireStatus::Overloaded
+    } else {
+        WireStatus::Backend
     }
 }
 
@@ -169,7 +194,7 @@ pub fn bits_to_payload(image: &Packed) -> Vec<u8> {
     payload
 }
 
-fn unpack_payload(payload: &[u8], n_bits: usize) -> Packed {
+pub(crate) fn unpack_payload(payload: &[u8], n_bits: usize) -> Packed {
     // inverse of `bits_to_payload`: the payload bytes are the words'
     // little-endian bytes (zero-padded tail), so assemble words directly
     let n_words = n_bits.div_ceil(64);
@@ -357,15 +382,45 @@ pub fn encode_request_v2(images: &[Packed], id: u64, opts: InferOptions) -> Resu
     Ok(frame)
 }
 
-fn truncated(what: &str) -> impl Fn(std::io::Error) -> WireError + '_ {
-    move |e| WireError::new(WireStatus::BadLength, format!("truncated {what}: {e}"))
+/// Read-timeout errors surface as `TimedOut` (or `WouldBlock` on platforms
+/// where `SO_RCVTIMEO` reports it that way).
+pub(crate) fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+    )
 }
 
-/// Read and validate a v2 request body from `r` — the magic byte has
-/// already been consumed by the dispatcher.
-pub fn read_request_v2_body(r: &mut impl Read) -> Result<WireRequestV2, WireError> {
-    let mut head = [0u8; 16];
-    r.read_exact(&mut head).map_err(truncated("v2 header"))?;
+fn truncated(what: &str) -> impl Fn(std::io::Error) -> WireError + '_ {
+    move |e| {
+        if is_timeout(&e) {
+            WireError::new(WireStatus::Timeout, format!("idle while reading {what}: {e}"))
+        } else {
+            WireError::new(WireStatus::BadLength, format!("truncated {what}: {e}"))
+        }
+    }
+}
+
+/// The fixed 16-byte v2 request head (after the magic byte), validated.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct V2Header {
+    pub features: u8,
+    pub top_k: u8,
+    pub id: u64,
+    pub n_images: usize,
+    pub n_bits: usize,
+}
+
+impl V2Header {
+    pub(crate) fn opts(&self) -> InferOptions {
+        decode_features(self.features, self.top_k)
+    }
+}
+
+/// Validate a raw 16-byte v2 request head.  Shared by the blocking reader
+/// ([`read_request_v2_body`]) and the async server's incremental parser so
+/// the two paths cannot drift on limits or statuses.
+pub(crate) fn parse_v2_header(head: &[u8; 16]) -> Result<V2Header, WireError> {
     let features = head[0];
     let top_k = head[1];
     let id = u64::from_le_bytes(head[2..10].try_into().unwrap());
@@ -400,23 +455,39 @@ pub fn read_request_v2_body(r: &mut impl Read) -> Result<WireRequestV2, WireErro
         )
         .with_id(id));
     }
-    let pb = payload_bytes(n_bits);
+    Ok(V2Header {
+        features,
+        top_k,
+        id,
+        n_images,
+        n_bits,
+    })
+}
+
+/// Read and validate a v2 request body from `r` — the magic byte has
+/// already been consumed by the dispatcher.
+pub fn read_request_v2_body(r: &mut impl Read) -> Result<WireRequestV2, WireError> {
+    let mut head = [0u8; 16];
+    r.read_exact(&mut head).map_err(truncated("v2 header"))?;
+    let h = parse_v2_header(&head)?;
+    let pb = payload_bytes(h.n_bits);
     let mut payload = vec![0u8; pb];
-    let mut images = Vec::with_capacity(n_images);
-    for i in 0..n_images {
+    let mut images = Vec::with_capacity(h.n_images);
+    for i in 0..h.n_images {
         r.read_exact(&mut payload)
             .map_err(|e| {
-                WireError::new(
-                    WireStatus::BadLength,
-                    format!("truncated payload for image {i}: {e}"),
-                )
-                .with_id(id)
+                let status = if is_timeout(&e) {
+                    WireStatus::Timeout
+                } else {
+                    WireStatus::BadLength
+                };
+                WireError::new(status, format!("truncated payload for image {i}: {e}")).with_id(h.id)
             })?;
-        images.push(unpack_payload(&payload, n_bits));
+        images.push(unpack_payload(&payload, h.n_bits));
     }
     Ok(WireRequestV2 {
-        id,
-        opts: decode_features(features, top_k),
+        id: h.id,
+        opts: h.opts(),
         images,
     })
 }
@@ -579,37 +650,102 @@ pub fn read_response_v2(r: &mut impl Read) -> Result<WireResponseV2, WireError> 
 // ---------------------------------------------------------------------------
 // server
 
-/// A running TCP server bound to a serving engine.
+/// Connection policy shared by the blocking and async servers.
+#[derive(Clone, Copy, Debug)]
+pub struct WireServerConfig {
+    /// Concurrent-connection cap: connection `max_conns + 1` is answered
+    /// with a best-effort [`WireStatus::Overloaded`] error frame and closed
+    /// instead of being admitted (and, in the blocking server, instead of
+    /// spawning an unbounded detached thread).
+    pub max_conns: usize,
+    /// Per-connection idle *read* timeout: a connection that goes silent
+    /// mid-frame for this long is answered with [`WireStatus::Timeout`] and
+    /// dropped, so a stalled client can't pin a handler thread (or an
+    /// event-loop slot) forever.  Idleness *between* frames is fine on the
+    /// async server; the blocking server applies the timeout to the magic
+    /// byte too (one blocked thread per idle connection is the resource
+    /// the timeout exists to reclaim).
+    pub idle_timeout: std::time::Duration,
+}
+
+impl Default for WireServerConfig {
+    fn default() -> Self {
+        WireServerConfig {
+            max_conns: 4096,
+            idle_timeout: std::time::Duration::from_secs(60),
+        }
+    }
+}
+
+/// A running TCP server bound to a serving engine (thread-per-connection;
+/// see [`super::AsyncWireServer`] for the readiness-polled high-fanout one).
 pub struct WireServer {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     /// Images served OK (a v2 batch frame counts once per image).
     pub served: Arc<AtomicU64>,
+    /// Connection gauges (`conn_accepted == conn_closed + conn_open`); the
+    /// request-ledger counters stay on the engine's own metrics.
+    metrics: Arc<super::metrics::Metrics>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Balances the connection gauges on every handler exit path (including
+/// panics): `conn_open -= 1`, `conn_closed += 1` on drop.
+struct OpenConnGuard(Arc<super::metrics::Metrics>);
+
+impl Drop for OpenConnGuard {
+    fn drop(&mut self) {
+        self.0.conn_open.fetch_sub(1, Ordering::SeqCst);
+        self.0.conn_closed.fetch_add(1, Ordering::SeqCst);
+    }
 }
 
 impl WireServer {
     /// Bind `addr` (e.g. "127.0.0.1:0") and serve requests through any
-    /// [`InferService`] — usually an [`super::Engine`].
+    /// [`InferService`] — usually an [`super::Engine`] — with the default
+    /// connection policy.
     pub fn start<S: InferService + 'static>(addr: &str, service: Arc<S>) -> Result<WireServer> {
+        Self::start_with(addr, service, WireServerConfig::default())
+    }
+
+    /// [`Self::start`] with an explicit connection cap / idle timeout.
+    pub fn start_with<S: InferService + 'static>(
+        addr: &str,
+        service: Arc<S>,
+        cfg: WireServerConfig,
+    ) -> Result<WireServer> {
         let service: Arc<dyn InferService> = service;
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let served = Arc::new(AtomicU64::new(0));
+        let metrics = Arc::new(super::metrics::Metrics::default());
         let t_stop = stop.clone();
         let t_served = served.clone();
+        let t_metrics = metrics.clone();
         let handle = std::thread::Builder::new()
             .name("bnn-wire-accept".into())
             .spawn(move || {
                 while !t_stop.load(Ordering::SeqCst) {
                     match listener.accept() {
-                        Ok((stream, _)) => {
+                        Ok((mut stream, _)) => {
+                            t_metrics.conn_accepted.fetch_add(1, Ordering::SeqCst);
+                            if t_metrics.conn_open.load(Ordering::SeqCst) >= cfg.max_conns {
+                                // over the cap: refuse in the lowest common
+                                // form and close — never spawn the thread
+                                let _ = stream.write_all(&encode_error(WireStatus::Overloaded));
+                                t_metrics.conn_closed.fetch_add(1, Ordering::SeqCst);
+                                continue;
+                            }
+                            t_metrics.conn_open.fetch_add(1, Ordering::SeqCst);
+                            let guard = OpenConnGuard(t_metrics.clone());
                             let service = service.clone();
                             let served = t_served.clone();
                             std::thread::spawn(move || {
-                                let _ = handle_conn(stream, service, served);
+                                let _guard = guard;
+                                let _ = handle_conn(stream, service, served, cfg.idle_timeout);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -623,8 +759,14 @@ impl WireServer {
             addr: local,
             stop,
             served,
+            metrics,
             accept_thread: Some(handle),
         })
+    }
+
+    /// Connection gauges (`conn_accepted`/`conn_open`/`conn_closed`).
+    pub fn metrics(&self) -> &Arc<super::metrics::Metrics> {
+        &self.metrics
     }
 
     pub fn shutdown(mut self) {
@@ -648,13 +790,24 @@ fn handle_conn(
     mut stream: TcpStream,
     service: Arc<dyn InferService>,
     served: Arc<AtomicU64>,
+    idle_timeout: std::time::Duration,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
+    // SO_RCVTIMEO gives every blocking read the idle bound; a zero duration
+    // would mean "no timeout", so clamp defensively.
+    stream
+        .set_read_timeout(Some(idle_timeout.max(std::time::Duration::from_millis(1))))
+        .ok();
     loop {
         let mut magic = [0u8; 1];
         match stream.read_exact(&mut magic) {
             Ok(()) => {}
             Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(()),
+            Err(e) if is_timeout(&e) => {
+                // silent past the idle bound: tell the peer why and hang up
+                let _ = stream.write_all(&encode_error(WireStatus::Timeout));
+                return Ok(());
+            }
             Err(e) => return Err(e.into()),
         }
         match magic[0] {
@@ -675,15 +828,27 @@ fn handle_v1(
     service: &Arc<dyn InferService>,
     served: &Arc<AtomicU64>,
 ) -> Result<()> {
+    // mid-frame reads: a stall here is a slow-loris, not idleness between
+    // requests — answer with the typed timeout and drop the connection
+    let read_or_timeout = |stream: &mut TcpStream, buf: &mut [u8]| -> Result<()> {
+        match stream.read_exact(buf) {
+            Ok(()) => Ok(()),
+            Err(e) if is_timeout(&e) => {
+                let _ = stream.write_all(&encode_error(WireStatus::Timeout));
+                Err(e.into())
+            }
+            Err(e) => Err(e.into()),
+        }
+    };
     let mut len_b = [0u8; 2];
-    stream.read_exact(&mut len_b)?;
+    read_or_timeout(stream, &mut len_b)?;
     let len = u16::from_le_bytes(len_b) as usize;
     if len != PAYLOAD_BYTES {
         stream.write_all(&encode_error(WireStatus::BadLength))?;
         bail!("bad v1 payload length {len} (expected {PAYLOAD_BYTES})");
     }
     let mut payload = vec![0u8; len];
-    stream.read_exact(&mut payload)?;
+    read_or_timeout(stream, &mut payload)?;
     // A v1 response carries only the digit, so serve the request through
     // the top-1-only path (`digits_only`): the worker computes the digit
     // from its flat logits arena and the per-request `n_classes` logits
@@ -697,7 +862,9 @@ fn handle_v1(
             stream.write_all(&encode_response(resp.digit, us))?;
             served.fetch_add(1, Ordering::Relaxed);
         }
-        Err(_) => stream.write_all(&encode_error(WireStatus::Backend))?,
+        // typed refusal: queue-cap rejections surface as Overloaded so an
+        // open-loop client can count shed load separately from failures
+        Err(e) => stream.write_all(&encode_error(submit_error_status(&e)))?,
     }
     Ok(())
 }
@@ -757,9 +924,10 @@ fn handle_v2(
                 Err(_) => stream.write_all(&encode_error_v2(req.id, WireStatus::TooLarge))?,
             }
         }
-        // backend refusal (e.g. width mismatch) fails the whole frame but
-        // keeps the connection: the frame boundary is intact
-        Err(_) => stream.write_all(&encode_error_v2(req.id, WireStatus::Backend))?,
+        // backend refusal (e.g. width mismatch) or queue-cap overload fails
+        // the whole frame but keeps the connection: the frame boundary is
+        // intact.  The first failure decides the typed status.
+        Err(e) => stream.write_all(&encode_error_v2(req.id, submit_error_status(&e)))?,
     }
     Ok(())
 }

@@ -1,0 +1,613 @@
+//! Async wire server e2e: bit-identity with the blocking server, ≥ 1024
+//! concurrent connections on one event-loop thread, connection-cap
+//! admission control, the `submitted == completed + rejected` ledger under
+//! queue-full overload, slow-loris resilience, and typed idle timeouts.
+//! Everything runs artifact-free on a `random_model`.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use bnn_fpga::bnn::model::{random_model, BnnModel};
+use bnn_fpga::bnn::Packed;
+use bnn_fpga::coordinator::wire::{
+    encode_request, read_response_v2, MAGIC_ERR, MAGIC_RESP,
+};
+use bnn_fpga::coordinator::{
+    AsyncWireServer, BatcherConfig, Engine, InferBackend, InferOptions, InferScratch, Kernel,
+    LogitsBuf, Metrics, WireClient, WireServer, WireServerConfig, WireStatus,
+};
+use bnn_fpga::util::prng::Xoshiro256;
+
+fn rand_image(rng: &mut Xoshiro256, n_bits: usize) -> Packed {
+    let bits: Vec<u8> = (0..n_bits).map(|_| rng.bool() as u8).collect();
+    Packed::from_bits(&bits)
+}
+
+fn engine_784(seed: u64) -> (BnnModel, Arc<Engine>) {
+    let model = random_model(&[784, 128, 64, 10], seed);
+    let engine = Arc::new(
+        Engine::builder()
+            .native(&model)
+            .kernel(Kernel::default())
+            .workers(2)
+            .batcher(BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(100),
+            })
+            .build()
+            .unwrap(),
+    );
+    (model, engine)
+}
+
+/// Raise the fd soft limit toward `want` (CI runners often default to
+/// 1024, which the 1024-connection test would exhaust with client +
+/// server sockets in one process).  Best-effort: never lowers, never
+/// exceeds the hard limit.
+#[cfg(target_os = "linux")]
+fn raise_nofile_limit(want: u64) {
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    unsafe {
+        let mut r = RLimit { cur: 0, max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut r) != 0 || r.cur >= want {
+            return;
+        }
+        let bumped = RLimit {
+            cur: want.min(r.max),
+            max: r.max,
+        };
+        let _ = setrlimit(RLIMIT_NOFILE, &bumped);
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn raise_nofile_limit(_want: u64) {}
+
+/// Poll `cond` until it holds or `deadline` elapses; panics with `what` on
+/// timeout.
+fn wait_until(what: &str, deadline: Duration, mut cond: impl FnMut() -> bool) {
+    let start = Instant::now();
+    while !cond() {
+        assert!(start.elapsed() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bit-identity with the blocking server
+
+#[test]
+fn async_and_blocking_servers_answer_bit_identically() {
+    let (model, blocking_engine) = engine_784(41);
+    let (_, async_engine) = engine_784(41); // same seed ⇒ same weights
+    let blocking = WireServer::start("127.0.0.1:0", blocking_engine).unwrap();
+    let asynch = AsyncWireServer::start("127.0.0.1:0", async_engine).unwrap();
+
+    let mut rng = Xoshiro256::new(7);
+    let images: Vec<Packed> = (0..40).map(|_| rand_image(&mut rng, 784)).collect();
+
+    let mut cb = WireClient::connect(blocking.addr).unwrap();
+    let mut ca = WireClient::connect(asynch.addr).unwrap();
+
+    // v1: digit + status must match (the latency field measures wall time,
+    // so it is excluded from bit-identity by design)
+    for img in images.iter().take(16) {
+        let rb = cb.classify(img).unwrap();
+        let ra = ca.classify(img).unwrap();
+        assert_eq!(ra.digit, rb.digit, "v1 digit diverged");
+        assert_eq!(ra.status, rb.status, "v1 status diverged");
+        assert_eq!(ra.digit as usize, model.predict(&img.words));
+    }
+
+    // v2 batch with every optional section on: ids, digits, logits and
+    // top-k must be byte-equal between the servers
+    let opts = InferOptions::default().with_logits(true).with_top_k(3);
+    let ib = cb.classify_batch(&images[..8], opts).unwrap();
+    let ia = ca.classify_batch(&images[..8], opts).unwrap();
+    assert_eq!(ib.len(), ia.len());
+    for (b, a) in ib.iter().zip(ia.iter()) {
+        assert_eq!(a.digit, b.digit, "v2 digit diverged");
+        assert_eq!(a.logits, b.logits, "v2 logits diverged");
+        assert_eq!(a.top_k, b.top_k, "v2 top-k diverged");
+    }
+
+    // pipelined v2 against the async server: in-order, correct digits
+    let items = ca.classify_pipelined(&images, InferOptions::digits_only()).unwrap();
+    assert_eq!(items.len(), images.len());
+    for (item, img) in items.iter().zip(images.iter()) {
+        assert_eq!(item.digit as usize, model.predict(&img.words));
+    }
+
+    // malformed magic: both servers answer the same 7-byte v1 error frame
+    // and then close
+    for addr in [blocking.addr, asynch.addr] {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.write_all(&[0x5A]).unwrap();
+        let mut frame = [0u8; 7];
+        s.read_exact(&mut frame).unwrap();
+        assert_eq!(frame[0], MAGIC_ERR);
+        assert_eq!(WireStatus::from_u8(frame[1]), WireStatus::BadMagic);
+        let mut probe = [0u8; 1];
+        assert_eq!(s.read(&mut probe).unwrap(), 0, "connection must close after BadMagic");
+    }
+
+    asynch.shutdown();
+    blocking.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// fanout: ≥ 1024 concurrent connections, gauges balancing
+
+#[test]
+fn async_server_sustains_1024_concurrent_connections() {
+    raise_nofile_limit(16_384);
+    let (model, engine) = engine_784(43);
+    let cfg = WireServerConfig {
+        max_conns: 2048,
+        idle_timeout: Duration::from_secs(60),
+    };
+    let server = AsyncWireServer::start_with("127.0.0.1:0", engine, cfg).unwrap();
+
+    const CONNS: usize = 1024;
+    let mut rng = Xoshiro256::new(9);
+    let images: Vec<Packed> = (0..16).map(|_| rand_image(&mut rng, 784)).collect();
+    let digits: Vec<u8> = images.iter().map(|i| model.predict(&i.words) as u8).collect();
+
+    let mut clients: Vec<WireClient> = Vec::with_capacity(CONNS);
+    for i in 0..CONNS {
+        clients.push(WireClient::connect(server.addr).unwrap());
+        // let the single accept loop drain the listen backlog
+        if i % 100 == 99 {
+            std::thread::sleep(Duration::from_millis(30));
+        }
+    }
+    let m = server.metrics().clone();
+    wait_until("all 1024 connections admitted", Duration::from_secs(30), || {
+        m.conn_open.load(Ordering::SeqCst) == CONNS as u64
+    });
+    assert_eq!(m.conn_accepted.load(Ordering::SeqCst), CONNS as u64);
+
+    // all 1024 connections held open, traffic on every one of them: v1 on
+    // even connections, v2 on odd
+    let outcomes: Vec<Result<()>> = std::thread::scope(|scope| {
+        let images = &images;
+        let digits = &digits;
+        let mut handles = Vec::new();
+        for (chunk_idx, chunk) in clients.chunks_mut(CONNS / 8).enumerate() {
+            handles.push(scope.spawn(move || -> Result<()> {
+                for (j, client) in chunk.iter_mut().enumerate() {
+                    let conn_idx = chunk_idx * (CONNS / 8) + j;
+                    let img_idx = conn_idx % images.len();
+                    if conn_idx % 2 == 0 {
+                        let r = client.classify(&images[img_idx])?;
+                        anyhow::ensure!(
+                            r.digit == digits[img_idx],
+                            "v1 digit {} ≠ {} on conn {conn_idx}",
+                            r.digit,
+                            digits[img_idx]
+                        );
+                    } else {
+                        let item =
+                            client.classify_v2(&images[img_idx], InferOptions::digits_only())?;
+                        anyhow::ensure!(
+                            item.digit == digits[img_idx],
+                            "v2 digit {} ≠ {} on conn {conn_idx}",
+                            item.digit,
+                            digits[img_idx]
+                        );
+                    }
+                }
+                Ok(())
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for o in outcomes {
+        o.unwrap();
+    }
+
+    // still all open (nothing timed out or died under load)
+    assert_eq!(m.conn_open.load(Ordering::SeqCst), CONNS as u64);
+    assert!(m.conn_books_balance(), "gauge books must balance under load");
+    assert!(server.served.load(Ordering::Relaxed) >= CONNS as u64);
+
+    drop(clients);
+    wait_until("all connections torn down", Duration::from_secs(30), || {
+        m.conn_open.load(Ordering::SeqCst) == 0
+    });
+    assert_eq!(m.conn_accepted.load(Ordering::SeqCst), CONNS as u64);
+    assert_eq!(m.conn_closed.load(Ordering::SeqCst), CONNS as u64);
+    assert!(m.conn_books_balance());
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// connection cap
+
+/// Open `n_conns` sockets against a server capped at `cap`; the excess must
+/// get a typed Overloaded v1 error frame then EOF, the rest stay open
+/// silently.  Returns after asserting the gauge books.
+fn assert_conn_cap(addr: std::net::SocketAddr, metrics: &Arc<Metrics>, cap: u64, n_conns: u64) {
+    let mut streams = Vec::new();
+    for _ in 0..n_conns {
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_millis(400))).unwrap();
+        streams.push(s);
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    wait_until("accept loop to process every connection", Duration::from_secs(10), || {
+        metrics.conn_accepted.load(Ordering::SeqCst) == n_conns
+    });
+    let mut rejected = 0u64;
+    let mut admitted = 0u64;
+    for s in &mut streams {
+        let mut frame = [0u8; 7];
+        match s.read_exact(&mut frame) {
+            Ok(()) => {
+                assert_eq!(frame[0], MAGIC_ERR);
+                assert_eq!(WireStatus::from_u8(frame[1]), WireStatus::Overloaded);
+                rejected += 1;
+            }
+            Err(e) => {
+                // admitted connections say nothing until spoken to
+                assert!(
+                    matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ),
+                    "unexpected read error: {e}"
+                );
+                admitted += 1;
+            }
+        }
+    }
+    assert_eq!(admitted, cap, "exactly `cap` connections admitted");
+    assert_eq!(rejected, n_conns - cap, "the excess got typed Overloaded");
+    assert_eq!(metrics.conn_open.load(Ordering::SeqCst), cap);
+    assert_eq!(metrics.conn_closed.load(Ordering::SeqCst), n_conns - cap);
+    assert!(metrics.conn_books_balance());
+
+    drop(streams);
+    wait_until("admitted connections to close", Duration::from_secs(10), || {
+        metrics.conn_open.load(Ordering::SeqCst) == 0
+    });
+    assert_eq!(metrics.conn_closed.load(Ordering::SeqCst), n_conns);
+    assert!(metrics.conn_books_balance());
+}
+
+#[test]
+fn connection_cap_rejects_excess_with_typed_status_async() {
+    let (_, engine) = engine_784(44);
+    let cfg = WireServerConfig {
+        max_conns: 8,
+        idle_timeout: Duration::from_secs(60),
+    };
+    let server = AsyncWireServer::start_with("127.0.0.1:0", engine, cfg).unwrap();
+    assert_conn_cap(server.addr, server.metrics(), 8, 11);
+    server.shutdown();
+}
+
+#[test]
+fn connection_cap_rejects_excess_with_typed_status_blocking() {
+    let (_, engine) = engine_784(45);
+    let cfg = WireServerConfig {
+        max_conns: 3,
+        idle_timeout: Duration::from_secs(60),
+    };
+    let server = WireServer::start_with("127.0.0.1:0", engine, cfg).unwrap();
+    assert_conn_cap(server.addr, server.metrics(), 3, 5);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// overload: queue-full rejections keep the ledger balanced
+
+/// A backend that blocks every batch on a gate until the test opens it —
+/// lets the test wedge the engine queue deterministically.
+struct GateBackend {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl GateBackend {
+    fn new() -> Arc<Self> {
+        Arc::new(GateBackend {
+            open: Mutex::new(false),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn release(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
+impl InferBackend for GateBackend {
+    fn name(&self) -> &'static str {
+        "gate"
+    }
+
+    fn max_batch(&self) -> usize {
+        16
+    }
+
+    fn expected_bits(&self) -> Option<usize> {
+        Some(784)
+    }
+
+    fn infer_batch(
+        &self,
+        images: &[&Packed],
+        _scratch: &mut InferScratch,
+        out: &mut LogitsBuf,
+    ) -> Result<()> {
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+        drop(open);
+        out.reset(images.len(), 10); // all-zero logits ⇒ digit 0
+        Ok(())
+    }
+}
+
+#[test]
+fn queue_full_surfaces_as_overloaded_and_ledger_balances() {
+    let gate = GateBackend::new();
+    let engine = Arc::new(
+        Engine::builder()
+            .shared(gate.clone())
+            .workers(1)
+            .queue_cap(4)
+            .build()
+            .unwrap(),
+    );
+    let metrics = engine.metrics().clone();
+    let server = AsyncWireServer::start("127.0.0.1:0", engine).unwrap();
+
+    let mut rng = Xoshiro256::new(3);
+    let img = rand_image(&mut rng, 784);
+    let frame = encode_request(&img).unwrap();
+
+    const N: u64 = 24;
+    let mut s = TcpStream::connect(server.addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    // fire all N v1 frames without reading: the gated worker wedges, the
+    // queue fills to its cap of 4, and the rest must be shed as Overloaded
+    for _ in 0..N {
+        s.write_all(&frame).unwrap();
+    }
+    // every request reaches its ledger verdict (submitted counts rejected
+    // submits too) before the gate opens, so shedding really happened
+    wait_until("all submits to reach the engine", Duration::from_secs(15), || {
+        metrics.submitted.load(Ordering::Relaxed) == N
+    });
+    assert!(
+        metrics.rejected.load(Ordering::Relaxed) > 0,
+        "the wedged queue must have shed load"
+    );
+    gate.release();
+
+    let mut ok = 0u64;
+    let mut overloaded = 0u64;
+    for i in 0..N {
+        let mut resp = [0u8; 7];
+        s.read_exact(&mut resp).unwrap();
+        match resp[0] {
+            MAGIC_RESP => {
+                assert_eq!(resp[1], 0, "gate backend always answers digit 0");
+                ok += 1;
+            }
+            MAGIC_ERR => {
+                assert_eq!(
+                    WireStatus::from_u8(resp[1]),
+                    WireStatus::Overloaded,
+                    "shed requests must carry the typed overload status (frame {i})"
+                );
+                overloaded += 1;
+            }
+            m => panic!("bad response magic {m:#x}"),
+        }
+    }
+    assert_eq!(ok + overloaded, N);
+    assert!(ok > 0, "the in-flight batch and queued requests complete");
+    assert!(overloaded > 0, "some requests must have been shed");
+
+    // the ledger invariant under overload, end to end through the wire
+    let submitted = metrics.submitted.load(Ordering::Relaxed);
+    let completed = metrics.completed.load(Ordering::Relaxed);
+    let rejected = metrics.rejected.load(Ordering::Relaxed);
+    assert_eq!(submitted, N);
+    assert_eq!(completed, ok);
+    assert_eq!(rejected, overloaded);
+    assert_eq!(
+        submitted,
+        completed + rejected,
+        "submitted == completed + rejected must hold under queue-full shedding"
+    );
+    assert_eq!(
+        metrics.cancelled.load(Ordering::Relaxed),
+        0,
+        "server-side slots never count as client cancels"
+    );
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// slow-loris
+
+#[test]
+fn slow_loris_dribble_does_not_stall_well_behaved_clients() {
+    let (model, engine) = engine_784(46);
+    let server = AsyncWireServer::start("127.0.0.1:0", engine).unwrap();
+
+    const DRIBBLERS: usize = 64;
+    let mut rng = Xoshiro256::new(5);
+    let dribble_images: Vec<Packed> = (0..DRIBBLERS).map(|_| rand_image(&mut rng, 784)).collect();
+    let dribble_frames: Vec<Vec<u8>> =
+        dribble_images.iter().map(|i| encode_request(i).unwrap()).collect();
+    let frame_len = dribble_frames[0].len(); // 101 bytes
+
+    let mut dribble_streams: Vec<TcpStream> = (0..DRIBBLERS)
+        .map(|_| {
+            let s = TcpStream::connect(server.addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+            s
+        })
+        .collect();
+
+    let good_images: Vec<Packed> = (0..8).map(|_| rand_image(&mut rng, 784)).collect();
+    let good_digits: Vec<u8> = good_images.iter().map(|i| model.predict(&i.words) as u8).collect();
+
+    let still_dribbling = AtomicBool::new(true);
+    std::thread::scope(|scope| {
+        // one thread feeds every dribbler a single byte per ~5 ms round:
+        // 64 stalled half-frames occupy 64 event-loop slots for ~500 ms
+        let streams = &mut dribble_streams;
+        let frames = &dribble_frames;
+        let flag = &still_dribbling;
+        let dribbler = scope.spawn(move || {
+            for byte_idx in 0..frame_len {
+                for (s, f) in streams.iter_mut().zip(frames.iter()) {
+                    s.write_all(&f[byte_idx..byte_idx + 1]).unwrap();
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            flag.store(false, Ordering::SeqCst);
+        });
+
+        // meanwhile, well-behaved clients must make normal progress
+        let addr = server.addr;
+        let good_images = &good_images;
+        let good_digits = &good_digits;
+        let flag = &still_dribbling;
+        let mut goods = Vec::new();
+        for t in 0..2 {
+            goods.push(scope.spawn(move || {
+                let mut client = WireClient::connect(addr).unwrap();
+                for round in 0..25 {
+                    let idx = (t + round) % good_images.len();
+                    if round % 2 == 0 {
+                        let r = client.classify(&good_images[idx]).unwrap();
+                        assert_eq!(r.digit, good_digits[idx]);
+                    } else {
+                        let item = client
+                            .classify_v2(&good_images[idx], InferOptions::digits_only())
+                            .unwrap();
+                        assert_eq!(item.digit, good_digits[idx]);
+                    }
+                }
+                // 50 round trips across 2 clients finish far inside the
+                // ~500 ms dribble window — progress was truly concurrent
+                assert!(
+                    flag.load(Ordering::SeqCst),
+                    "well-behaved clients should finish while the dribble is still running"
+                );
+            }));
+        }
+        for g in goods {
+            g.join().unwrap();
+        }
+        dribbler.join().unwrap();
+    });
+
+    // the dribbled frames, though slow, were valid — every one gets its
+    // correct answer (bit-identical digits to the model / blocking server)
+    for (s, img) in dribble_streams.iter_mut().zip(dribble_images.iter()) {
+        let mut resp = [0u8; 7];
+        s.read_exact(&mut resp).unwrap();
+        assert_eq!(resp[0], MAGIC_RESP);
+        assert_eq!(resp[1] as usize, model.predict(&img.words));
+    }
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// idle timeouts
+
+/// Half-send a v1 frame, go silent, and expect the typed 7-byte timeout
+/// frame followed by EOF.
+fn assert_v1_idle_timeout(addr: std::net::SocketAddr) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(&[bnn_fpga::coordinator::wire::MAGIC_REQ, 0x62]).unwrap(); // magic + half the length
+    let mut frame = [0u8; 7];
+    s.read_exact(&mut frame).unwrap();
+    assert_eq!(frame[0], MAGIC_ERR);
+    assert_eq!(WireStatus::from_u8(frame[1]), WireStatus::Timeout);
+    let mut probe = [0u8; 1];
+    assert_eq!(s.read(&mut probe).unwrap(), 0, "connection must close after the timeout");
+}
+
+/// Half-send a v2 header, go silent, and expect a v2 error frame with the
+/// typed timeout status followed by EOF.
+fn assert_v2_idle_timeout(addr: std::net::SocketAddr) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(&[bnn_fpga::coordinator::wire::MAGIC_REQ_V2, 0, 0, 1, 2]).unwrap();
+    let resp = read_response_v2(&mut s).unwrap();
+    assert_eq!(resp.status, WireStatus::Timeout);
+    assert_eq!(resp.id, 0, "the half-read header never yielded an id");
+    assert!(resp.items.is_empty());
+    let mut probe = [0u8; 1];
+    assert_eq!(s.read(&mut probe).unwrap(), 0, "connection must close after the timeout");
+}
+
+#[test]
+fn idle_timeout_surfaces_as_typed_status_async() {
+    let (model, engine) = engine_784(47);
+    let cfg = WireServerConfig {
+        max_conns: 64,
+        idle_timeout: Duration::from_millis(150),
+    };
+    let server = AsyncWireServer::start_with("127.0.0.1:0", engine, cfg).unwrap();
+    assert_v1_idle_timeout(server.addr);
+    assert_v2_idle_timeout(server.addr);
+
+    // idleness *between* frames is free on the async server: connect, wait
+    // well past the timeout, then serve a request normally
+    let mut rng = Xoshiro256::new(11);
+    let img = rand_image(&mut rng, 784);
+    let mut client = WireClient::connect(server.addr).unwrap();
+    std::thread::sleep(Duration::from_millis(400));
+    let r = client.classify(&img).unwrap();
+    assert_eq!(r.digit as usize, model.predict(&img.words));
+    server.shutdown();
+}
+
+#[test]
+fn idle_timeout_surfaces_as_typed_status_blocking() {
+    let (_, engine) = engine_784(48);
+    let cfg = WireServerConfig {
+        max_conns: 64,
+        idle_timeout: Duration::from_millis(150),
+    };
+    let server = WireServer::start_with("127.0.0.1:0", engine, cfg).unwrap();
+    assert_v1_idle_timeout(server.addr);
+    assert_v2_idle_timeout(server.addr);
+    // the blocking server times out idle-between-frames connections too —
+    // an idle connection pins a whole handler thread there, which is
+    // exactly the resource the timeout reclaims
+    let mut s = TcpStream::connect(server.addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut frame = [0u8; 7];
+    s.read_exact(&mut frame).unwrap();
+    assert_eq!(frame[0], MAGIC_ERR);
+    assert_eq!(WireStatus::from_u8(frame[1]), WireStatus::Timeout);
+    server.shutdown();
+}

@@ -19,10 +19,13 @@ use bnn_fpga::coordinator::Kernel;
 use bnn_fpga::util::json::Json;
 
 fn bench_file() -> std::path::PathBuf {
+    repo_root().join("BENCH_hotpath.json")
+}
+
+fn repo_root() -> &'static Path {
     Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .expect("crate dir has a parent")
-        .join("BENCH_hotpath.json")
 }
 
 #[test]
@@ -80,4 +83,76 @@ fn committed_hotpath_bench_covers_every_registry_tier() {
              ns_per_image {ns} (implies {implied})"
         );
     }
+}
+
+// ---------------------------------------------------------------------------
+// serving trajectory (ISSUE 7): BENCH_serving.json schema gate
+
+#[test]
+fn committed_serving_bench_has_a_sane_latency_trajectory() {
+    let path = repo_root().join("BENCH_serving.json");
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "{} is missing ({e}); run `make bench-serving` to regenerate it \
+             and commit the result",
+            path.display()
+        )
+    });
+    let doc = Json::parse(&text).expect("BENCH_serving.json is not valid JSON");
+    assert_eq!(
+        doc.get("bench").unwrap().as_str().unwrap(),
+        "serving",
+        "unexpected bench id"
+    );
+    assert_eq!(doc.get("server").unwrap().as_str().unwrap(), "async");
+    let backend = doc.get("poll_backend").unwrap().as_str().unwrap();
+    assert!(
+        backend == "epoll" || backend == "poll",
+        "unknown poll backend '{backend}'"
+    );
+
+    let rates = match doc.get("rates").unwrap() {
+        Json::Obj(m) => m,
+        other => panic!("'rates' must be an object, got {other:?}"),
+    };
+    assert!(!rates.is_empty(), "'rates' carries no ladder rungs");
+
+    for (rate, row) in rates {
+        let field = |name: &str| -> f64 {
+            row.get(name)
+                .and_then(Json::as_f64)
+                .unwrap_or_else(|e| panic!("rate '{rate}': {e}"))
+        };
+        let offered = field("offered_ips");
+        let achieved = field("achieved_ips");
+        let sent = field("sent");
+        let completed = field("completed");
+        let errors = field("errors");
+        assert!(offered > 0.0, "rate '{rate}': offered_ips must be positive");
+        assert!(achieved > 0.0, "rate '{rate}': achieved_ips must be positive");
+        assert!(sent >= 1.0, "rate '{rate}': no requests were sent");
+        assert!(
+            (completed + errors - sent).abs() < 0.5,
+            "rate '{rate}': completed {completed} + errors {errors} ≠ sent {sent}"
+        );
+
+        // percentiles present, positive, and ordered
+        let p50 = field("p50_us");
+        let p99 = field("p99_us");
+        let p999 = field("p999_us");
+        let max = field("max_us");
+        assert!(p50 > 0.0, "rate '{rate}': p50_us must be positive");
+        assert!(
+            p50 <= p99 && p99 <= p999 && p999 <= max,
+            "rate '{rate}': percentiles out of order \
+             (p50 {p50}, p99 {p99}, p999 {p999}, max {max}); \
+             run `make bench-serving` to regenerate"
+        );
+    }
+
+    let sustained = doc
+        .get("max_sustained_ips")
+        .and_then(Json::as_f64)
+        .expect("max_sustained_ips");
+    assert!(sustained > 0.0, "max_sustained_ips must be positive");
 }

@@ -1,0 +1,633 @@
+//! First-party offline subset of a readiness-polling library (mio-style).
+//!
+//! The offline build environment has no crates.io access (DESIGN.md
+//! §Substitutions in the main crate), so instead of depending on `mio` this
+//! vendored crate implements the small slice the async wire server needs:
+//!
+//! - register raw fds with a token and a read/write [`Interest`]
+//! - block until one or more fds become ready, collecting [`Event`]s
+//! - re-register (modify) interest as write buffers fill and drain
+//!
+//! Two backends sit behind one [`Poller`] facade:
+//!
+//! - **epoll** (Linux): level-triggered `epoll_(create1|ctl|wait)` via direct
+//!   `extern "C"` bindings — std already links libc, so no external crate is
+//!   needed. Level-triggered semantics keep the caller's state machine simple:
+//!   an fd with unread bytes reports readable on every wait.
+//! - **poll(2)** (portable fallback): a registration map snapshotted into a
+//!   `pollfd` array per wait. O(n) per wait, fine for tests and non-Linux
+//!   hosts, and selectable at runtime with `NETPOLL_FORCE_POLL=1` (mirroring
+//!   the main crate's `BNN_FORCE_SCALAR` idiom) so CI can pin the fallback on
+//!   Linux too.
+//!
+//! Both backends fold error/hangup conditions (`EPOLLERR`/`EPOLLHUP`,
+//! `POLLERR`/`POLLHUP`/`POLLNVAL`) into *both* `readable` and `writable` so a
+//! connection handler discovers the failure at its next read/write rather
+//! than needing a third code path; `Event::hangup` is still set for callers
+//! that want to fast-path teardown.
+
+use std::io;
+use std::os::unix::io::RawFd;
+use std::time::Duration;
+
+/// What readiness a registration wants to be woken for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    pub read: bool,
+    pub write: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest { read: true, write: false };
+    pub const WRITE: Interest = Interest { read: false, write: true };
+    pub const BOTH: Interest = Interest { read: true, write: true };
+}
+
+/// One readiness notification: the registered token plus what fired.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub token: usize,
+    pub readable: bool,
+    pub writable: bool,
+    /// Peer hung up or the fd errored; `readable`/`writable` are also set.
+    pub hangup: bool,
+}
+
+/// Reusable event buffer filled by [`Poller::wait`].
+#[derive(Default)]
+pub struct Events {
+    inner: Vec<Event>,
+}
+
+impl Events {
+    pub fn with_capacity(cap: usize) -> Self {
+        Events { inner: Vec::with_capacity(cap) }
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, Event> {
+        self.inner.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    fn clear(&mut self) {
+        self.inner.clear();
+    }
+
+    fn push(&mut self, ev: Event) {
+        self.inner.push(ev);
+    }
+}
+
+impl<'a> IntoIterator for &'a Events {
+    type Item = &'a Event;
+    type IntoIter = std::slice::Iter<'a, Event>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.inner.iter()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// epoll backend (Linux)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod epoll {
+    use super::{Event, Events, Interest};
+    use std::io;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+
+    // Kernel ABI: packed on x86-64, natural alignment elsewhere.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout_ms: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    pub struct Epoll {
+        epfd: RawFd,
+    }
+
+    impl Epoll {
+        pub fn new() -> io::Result<Self> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Epoll { epfd })
+        }
+
+        fn ctl(&self, op: i32, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+            let mut mask = 0u32;
+            if interest.read {
+                mask |= EPOLLIN;
+            }
+            if interest.write {
+                mask |= EPOLLOUT;
+            }
+            let mut ev = EpollEvent { events: mask, data: token as u64 };
+            let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn register(&self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        pub fn modify(&self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+            // A null event pointer is accepted on kernels >= 2.6.9; pass a
+            // real (ignored) struct anyway for maximum compatibility.
+            let mut ev = EpollEvent { events: 0, data: 0 };
+            let rc = unsafe { epoll_ctl(self.epfd, EPOLL_CTL_DEL, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn wait(&self, out: &mut Events, timeout: Option<Duration>) -> io::Result<usize> {
+            const CAP: usize = 256;
+            let mut buf = [EpollEvent { events: 0, data: 0 }; CAP];
+            let timeout_ms: i32 = match timeout {
+                None => -1,
+                Some(d) if d.is_zero() => 0,
+                // Round sub-millisecond timeouts up so "wait a little" never
+                // degenerates into a busy spin.
+                Some(d) => i32::try_from(d.as_millis().max(1)).unwrap_or(i32::MAX),
+            };
+            let n = unsafe { epoll_wait(self.epfd, buf.as_mut_ptr(), CAP as i32, timeout_ms) };
+            if n < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    return Ok(0);
+                }
+                return Err(err);
+            }
+            for ev in buf.iter().take(n as usize) {
+                // Copy out of the (possibly packed) struct by value.
+                let mask = ev.events;
+                let token = ev.data as usize;
+                let hup = mask & (EPOLLHUP | EPOLLERR) != 0;
+                out.push(Event {
+                    token,
+                    readable: mask & EPOLLIN != 0 || hup,
+                    writable: mask & EPOLLOUT != 0 || hup,
+                    hangup: hup,
+                });
+            }
+            Ok(n as usize)
+        }
+    }
+
+    impl Drop for Epoll {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// poll(2) backend (portable fallback)
+// ---------------------------------------------------------------------------
+
+mod pollfall {
+    use super::{Event, Events, Interest};
+    use std::collections::BTreeMap;
+    use std::io;
+    use std::os::unix::io::RawFd;
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    const POLLIN: i16 = 0x001;
+    const POLLOUT: i16 = 0x004;
+    const POLLERR: i16 = 0x008;
+    const POLLHUP: i16 = 0x010;
+    const POLLNVAL: i16 = 0x020;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+
+    #[cfg(target_os = "linux")]
+    type NfdsT = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    type NfdsT = std::os::raw::c_uint;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: NfdsT, timeout_ms: i32) -> i32;
+    }
+
+    /// Registration-map-based fallback: each `wait` snapshots the map into a
+    /// `pollfd` array. The map lives behind a mutex so registration from the
+    /// owning thread and waits interleave safely (the async server only ever
+    /// drives a poller from one thread, but the API shouldn't require that).
+    pub struct PollBackend {
+        registry: Mutex<BTreeMap<RawFd, (usize, Interest)>>,
+    }
+
+    impl PollBackend {
+        pub fn new() -> io::Result<Self> {
+            Ok(PollBackend { registry: Mutex::new(BTreeMap::new()) })
+        }
+
+        pub fn register(&self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+            let mut reg = self.registry.lock().unwrap();
+            if reg.contains_key(&fd) {
+                return Err(io::Error::new(
+                    io::ErrorKind::AlreadyExists,
+                    format!("fd {fd} already registered"),
+                ));
+            }
+            reg.insert(fd, (token, interest));
+            Ok(())
+        }
+
+        pub fn modify(&self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+            let mut reg = self.registry.lock().unwrap();
+            match reg.get_mut(&fd) {
+                Some(slot) => {
+                    *slot = (token, interest);
+                    Ok(())
+                }
+                None => Err(io::Error::new(
+                    io::ErrorKind::NotFound,
+                    format!("fd {fd} not registered"),
+                )),
+            }
+        }
+
+        pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+            let mut reg = self.registry.lock().unwrap();
+            match reg.remove(&fd) {
+                Some(_) => Ok(()),
+                None => Err(io::Error::new(
+                    io::ErrorKind::NotFound,
+                    format!("fd {fd} not registered"),
+                )),
+            }
+        }
+
+        pub fn wait(&self, out: &mut Events, timeout: Option<Duration>) -> io::Result<usize> {
+            let mut fds: Vec<PollFd> = Vec::new();
+            let mut tokens: Vec<usize> = Vec::new();
+            {
+                let reg = self.registry.lock().unwrap();
+                for (&fd, &(token, interest)) in reg.iter() {
+                    let mut mask = 0i16;
+                    if interest.read {
+                        mask |= POLLIN;
+                    }
+                    if interest.write {
+                        mask |= POLLOUT;
+                    }
+                    fds.push(PollFd { fd, events: mask, revents: 0 });
+                    tokens.push(token);
+                }
+            }
+            let timeout_ms: i32 = match timeout {
+                None => -1,
+                Some(d) if d.is_zero() => 0,
+                Some(d) => i32::try_from(d.as_millis().max(1)).unwrap_or(i32::MAX),
+            };
+            if fds.is_empty() {
+                // poll(2) with nfds == 0 is a valid sleep, but spell it out.
+                if timeout_ms > 0 {
+                    std::thread::sleep(Duration::from_millis(timeout_ms as u64));
+                }
+                return Ok(0);
+            }
+            let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms) };
+            if n < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    return Ok(0);
+                }
+                return Err(err);
+            }
+            for (pfd, &token) in fds.iter().zip(tokens.iter()) {
+                let re = pfd.revents;
+                if re == 0 {
+                    continue;
+                }
+                let hup = re & (POLLERR | POLLHUP | POLLNVAL) != 0;
+                out.push(Event {
+                    token,
+                    readable: re & POLLIN != 0 || hup,
+                    writable: re & POLLOUT != 0 || hup,
+                    hangup: hup,
+                });
+            }
+            Ok(n as usize)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Facade
+// ---------------------------------------------------------------------------
+
+enum Backend {
+    #[cfg(target_os = "linux")]
+    Epoll(epoll::Epoll),
+    Poll(pollfall::PollBackend),
+}
+
+/// Readiness poller over raw fds. See the crate docs for backend selection.
+pub struct Poller {
+    backend: Backend,
+}
+
+fn force_poll() -> bool {
+    matches!(std::env::var("NETPOLL_FORCE_POLL"), Ok(v) if v == "1")
+}
+
+impl Poller {
+    /// Platform-preferred backend: epoll on Linux (unless
+    /// `NETPOLL_FORCE_POLL=1`), poll(2) elsewhere.
+    pub fn new() -> io::Result<Self> {
+        #[cfg(target_os = "linux")]
+        {
+            if !force_poll() {
+                return Ok(Poller { backend: Backend::Epoll(epoll::Epoll::new()?) });
+            }
+        }
+        Self::new_poll()
+    }
+
+    /// Explicitly construct the portable poll(2) backend.
+    pub fn new_poll() -> io::Result<Self> {
+        Ok(Poller { backend: Backend::Poll(pollfall::PollBackend::new()?) })
+    }
+
+    /// Explicitly construct the epoll backend (Linux only).
+    #[cfg(target_os = "linux")]
+    pub fn new_epoll() -> io::Result<Self> {
+        Ok(Poller { backend: Backend::Epoll(epoll::Epoll::new()?) })
+    }
+
+    /// Human-readable backend name (for server banners / reports).
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(_) => "epoll",
+            Backend::Poll(_) => "poll",
+        }
+    }
+
+    pub fn register(&self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        match &self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(e) => e.register(fd, token, interest),
+            Backend::Poll(p) => p.register(fd, token, interest),
+        }
+    }
+
+    pub fn modify(&self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        match &self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(e) => e.modify(fd, token, interest),
+            Backend::Poll(p) => p.modify(fd, token, interest),
+        }
+    }
+
+    pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+        match &self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(e) => e.deregister(fd),
+            Backend::Poll(p) => p.deregister(fd),
+        }
+    }
+
+    /// Block until readiness or timeout; ready events are appended to `out`
+    /// (which is cleared first). `None` blocks indefinitely. Returns the
+    /// number of events delivered; `Ok(0)` on timeout or `EINTR`.
+    pub fn wait(&self, out: &mut Events, timeout: Option<Duration>) -> io::Result<usize> {
+        out.clear();
+        match &self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(e) => e.wait(out, timeout),
+            Backend::Poll(p) => p.wait(out, timeout),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+    use std::time::Instant;
+
+    fn wait_for(
+        poller: &Poller,
+        events: &mut Events,
+        pred: impl Fn(&Event) -> bool,
+        deadline: Duration,
+    ) -> bool {
+        let start = Instant::now();
+        while start.elapsed() < deadline {
+            poller.wait(events, Some(Duration::from_millis(50))).unwrap();
+            if events.iter().any(&pred) {
+                return true;
+            }
+        }
+        false
+    }
+
+    fn pollers() -> Vec<Poller> {
+        let mut v = vec![Poller::new_poll().unwrap()];
+        #[cfg(target_os = "linux")]
+        v.push(Poller::new_epoll().unwrap());
+        v
+    }
+
+    #[test]
+    fn readiness_round_trip_on_every_backend() {
+        for poller in pollers() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            listener.set_nonblocking(true).unwrap();
+            poller.register(listener.as_raw_fd(), 1, Interest::READ).unwrap();
+
+            let mut events = Events::with_capacity(16);
+            // Nothing pending: a short wait delivers no listener event.
+            poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+            assert!(
+                events.iter().all(|e| e.token != 1),
+                "{}: spurious listener readiness",
+                poller.backend_name()
+            );
+
+            let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            assert!(
+                wait_for(&poller, &mut events, |e| e.token == 1 && e.readable, Duration::from_secs(5)),
+                "{}: listener never became readable",
+                poller.backend_name()
+            );
+
+            let (mut server_side, _) = listener.accept().unwrap();
+            server_side.set_nonblocking(true).unwrap();
+            poller.register(server_side.as_raw_fd(), 2, Interest::READ).unwrap();
+
+            let mut client = client;
+            client.write_all(b"ping").unwrap();
+            assert!(
+                wait_for(&poller, &mut events, |e| e.token == 2 && e.readable, Duration::from_secs(5)),
+                "{}: connection never became readable",
+                poller.backend_name()
+            );
+            let mut buf = [0u8; 4];
+            server_side.read_exact(&mut buf).unwrap();
+            assert_eq!(&buf, b"ping");
+
+            poller.deregister(server_side.as_raw_fd()).unwrap();
+            poller.deregister(listener.as_raw_fd()).unwrap();
+        }
+    }
+
+    #[test]
+    fn modify_switches_interest_to_writable() {
+        for poller in pollers() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let (server_side, _) = listener.accept().unwrap();
+            server_side.set_nonblocking(true).unwrap();
+
+            // Registered read-only: an idle connected socket reports nothing.
+            poller.register(server_side.as_raw_fd(), 7, Interest::READ).unwrap();
+            let mut events = Events::with_capacity(16);
+            poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+            assert!(
+                events.iter().all(|e| e.token != 7),
+                "{}: idle read-registered socket fired",
+                poller.backend_name()
+            );
+
+            // Switch to write interest: an empty send buffer is instantly ready.
+            poller.modify(server_side.as_raw_fd(), 7, Interest::WRITE).unwrap();
+            assert!(
+                wait_for(&poller, &mut events, |e| e.token == 7 && e.writable, Duration::from_secs(5)),
+                "{}: writable readiness never delivered after modify",
+                poller.backend_name()
+            );
+
+            poller.deregister(server_side.as_raw_fd()).unwrap();
+            drop(client);
+        }
+    }
+
+    #[test]
+    fn deregister_stops_event_delivery() {
+        for poller in pollers() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let mut client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let (server_side, _) = listener.accept().unwrap();
+            server_side.set_nonblocking(true).unwrap();
+
+            poller.register(server_side.as_raw_fd(), 3, Interest::READ).unwrap();
+            client.write_all(b"x").unwrap();
+            let mut events = Events::with_capacity(16);
+            assert!(
+                wait_for(&poller, &mut events, |e| e.token == 3 && e.readable, Duration::from_secs(5)),
+                "{}: readable never delivered",
+                poller.backend_name()
+            );
+
+            poller.deregister(server_side.as_raw_fd()).unwrap();
+            // The byte is still unread, but a deregistered fd must stay silent.
+            poller.wait(&mut events, Some(Duration::from_millis(20))).unwrap();
+            assert!(
+                events.iter().all(|e| e.token != 3),
+                "{}: deregistered fd still delivered events",
+                poller.backend_name()
+            );
+        }
+    }
+
+    #[test]
+    fn hangup_surfaces_as_readable() {
+        for poller in pollers() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let (server_side, _) = listener.accept().unwrap();
+            server_side.set_nonblocking(true).unwrap();
+            poller.register(server_side.as_raw_fd(), 9, Interest::READ).unwrap();
+
+            drop(client); // peer closes -> HUP (or plain EOF readability)
+            let mut events = Events::with_capacity(16);
+            assert!(
+                wait_for(&poller, &mut events, |e| e.token == 9 && e.readable, Duration::from_secs(5)),
+                "{}: peer close never surfaced",
+                poller.backend_name()
+            );
+            poller.deregister(server_side.as_raw_fd()).unwrap();
+        }
+    }
+
+    #[test]
+    fn empty_registry_wait_times_out() {
+        for poller in pollers() {
+            let mut events = Events::with_capacity(4);
+            let start = Instant::now();
+            let n = poller.wait(&mut events, Some(Duration::from_millis(30))).unwrap();
+            assert_eq!(n, 0, "{}", poller.backend_name());
+            assert!(events.is_empty());
+            assert!(
+                start.elapsed() >= Duration::from_millis(20),
+                "{}: empty wait returned early",
+                poller.backend_name()
+            );
+        }
+    }
+
+    #[test]
+    fn force_poll_env_selects_fallback() {
+        // Don't mutate the env (tests run in parallel); check the predicate
+        // logic and the constructor directly instead.
+        let p = Poller::new_poll().unwrap();
+        assert_eq!(p.backend_name(), "poll");
+        #[cfg(target_os = "linux")]
+        {
+            let e = Poller::new_epoll().unwrap();
+            assert_eq!(e.backend_name(), "epoll");
+        }
+    }
+}
