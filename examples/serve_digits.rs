@@ -79,7 +79,7 @@ fn main() -> anyhow::Result<()> {
         let correct = responses
             .iter()
             .zip(&labels)
-            .filter(|(r, &l)| r.digit == l)
+            .filter(|(r, &l)| r.digit == u16::from(l))
             .count();
         Ok((correct, wall))
     };

@@ -7,6 +7,7 @@
 //! * `sweep`       — Table 1/2/3 rows for one or all configurations
 //! * `report`      — full §3.6-style implementation report for one config
 //! * `serve-demo`  — run the coordinator under synthetic load, print metrics
+//! * `classify`    — one-shot: load a weights file, classify one image file
 //!
 //! Benches (`cargo bench`) regenerate the paper's tables/figures; examples
 //! show the library API.  This binary is the operational tool.
@@ -45,9 +46,18 @@ SUBCOMMANDS
              [--block-rows B] [--tile-imgs T] [--ring-cap R]
              [--queue-cap N] [--config FILE]
              [--serve-async] [--max-conns N] [--idle-timeout-ms MS]
+             a config with [models.NAME] sections serves a multi-model
+             registry; wire-v2 clients route by model name
+  classify   <weights.json> <image> [--index N] [--width W] [--height H]
+             [--threshold T] [--invert] [--labels FILE]
+             one-shot local inference; <image> is raw grayscale bytes
+             (W×H, inferred from the model when square or 28×28) or an
+             idx3 file (--index picks the image)
   loadgen    --addr HOST:PORT [--rate R] [--connections C]
-             [--duration-ms MS] [--mix-v1 PCT] [--seed S]
-             open-loop load against a running serve instance
+             [--duration-ms MS] [--mix-v1 PCT] [--seed S] [--model NAME]
+             open-loop load against a running serve instance; --model
+             names a registry model in the v2 frames (implies v2-only
+             unless --mix-v1 is given)
   trace      [--image N] [--parallelism P] [--out trace.vcd]  VCD waveform
 
 Set BNN_FPGA_ARTIFACTS to override the artifacts directory (default ./artifacts).
@@ -146,6 +156,7 @@ fn dispatch(args: Args) -> Result<()> {
         Some("report") => cmd_report(&args),
         Some("serve-demo") => cmd_serve_demo(&args),
         Some("serve") => cmd_serve(&args),
+        Some("classify") => cmd_classify(&args),
         Some("loadgen") => cmd_loadgen(&args),
         Some("trace") => cmd_trace(&args),
         Some(other) => bail!("unknown subcommand '{other}'\n\n{USAGE}"),
@@ -399,7 +410,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     let correct = responses
         .iter()
         .zip(&labels)
-        .filter(|(r, &l)| r.digit == l)
+        .filter(|(r, &l)| r.digit == u16::from(l))
         .count();
     println!("served {n} requests in {:.1} ms", wall.as_secs_f64() * 1e3);
     println!("throughput : {:.0} req/s", n as f64 / wall.as_secs_f64());
@@ -467,6 +478,79 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let ring_cap = ring_cap_arg(args, file_cfg.ring_cap)?;
     let kernel = kernel_arg(args, file_cfg.kernel, block_rows, tile_imgs, ring_cap)?;
     let queue_cap = queue_cap_arg(args, file_cfg.queue_cap)?;
+    let server_cfg = wire_server_cfg(args, &file_cfg)?;
+    let use_async = args.flag("serve-async") || file_cfg.async_serve;
+    let banner = |listen: std::net::SocketAddr| {
+        println!("v1 frame: 0xB1 len16 payload[98] -> 0xB2 digit status latency_us32");
+        println!("v2 frame: 0xC1 features top_k id64 n_images16 n_bits32 payloads -> 0xC2 … (batched, echoes ids)");
+        println!(
+            "policy: max {} connections, {} ms idle timeout (listening on {listen}, Ctrl-C to stop)",
+            server_cfg.max_conns,
+            server_cfg.idle_timeout.as_millis()
+        );
+    };
+
+    // `[models.*]` sections switch the serve path to the multi-model
+    // registry: one native engine per named model, wire-v2 requests route
+    // by name, nameless (and all v1) traffic hits the default model.
+    if !file_cfg.models.is_empty() {
+        let registry = Arc::new(crate::coordinator::ModelRegistry::new());
+        for mc in &file_cfg.models {
+            let m = match &mc.weights {
+                Some(p) => mem::load_model(p)
+                    .with_context(|| format!("loading weights for model '{}'", mc.name))?,
+                None => model.clone(),
+            };
+            let engine = Engine::builder()
+                .native(&m)
+                .kernel(kernel)
+                .workers(workers)
+                .batcher(file_cfg.batcher)
+                .queue_cap(queue_cap)
+                .build()?;
+            registry.register_with_quota(&mc.name, engine, mc.quota);
+            if mc.default {
+                registry.set_default(&mc.name)?;
+            }
+        }
+        println!(
+            "models: {} (default: {})",
+            registry.names().join(", "),
+            registry.default_model().unwrap_or_default()
+        );
+        let status = |served: &std::sync::atomic::AtomicU64| {
+            println!(
+                "served: {}\n{}",
+                served.load(std::sync::atomic::Ordering::Relaxed),
+                registry.metrics_report()
+            );
+        };
+        if use_async {
+            let server =
+                AsyncWireServer::start_registry_with(&addr, registry.clone(), server_cfg)?;
+            println!(
+                "async wire server on {} ({} readiness backend), multi-model",
+                server.addr, server.poll_backend
+            );
+            banner(server.addr);
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(5));
+                status(&server.served);
+            }
+        } else {
+            let server = WireServer::start_registry_with(&addr, registry.clone(), server_cfg)?;
+            println!(
+                "wire-protocol server (thread-per-connection) on {}, multi-model",
+                server.addr
+            );
+            banner(server.addr);
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(5));
+                status(&server.served);
+            }
+        }
+    }
+
     let backend_default = file_cfg
         .backends
         .first()
@@ -502,17 +586,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .build()?,
         other => bail!("unknown backend '{other}'"),
     };
-    let server_cfg = wire_server_cfg(args, &file_cfg)?;
-    let use_async = args.flag("serve-async") || file_cfg.async_serve;
-    let banner = |listen: std::net::SocketAddr| {
-        println!("v1 frame: 0xB1 len16 payload[98] -> 0xB2 digit status latency_us32");
-        println!("v2 frame: 0xC1 features top_k id64 n_images16 n_bits32 payloads -> 0xC2 … (batched, echoes ids)");
-        println!(
-            "policy: max {} connections, {} ms idle timeout (listening on {listen}, Ctrl-C to stop)",
-            server_cfg.max_conns,
-            server_cfg.idle_timeout.as_millis()
-        );
-    };
     if use_async {
         let server = AsyncWireServer::start_with(&addr, Arc::new(engine), server_cfg)?;
         println!(
@@ -543,6 +616,116 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 }
 
+/// `bnn-fpga classify <weights.json> <image>` — one-shot local inference
+/// with no server and no artifacts directory: load the weights, read the
+/// image, binarize → bit-pack, predict, print the class and top logits.
+///
+/// The image file is either idx3 (magic 0x00000803; `--index` picks one
+/// image) or raw grayscale bytes.  For raw files the geometry is inferred:
+/// `--width`/`--height` when given, else the model's input size (square
+/// root when it is a perfect square, e.g. 784 → 28×28).  Pixels binarize
+/// as `p >= --threshold` (default 128, the MNIST convention); `--invert`
+/// flips polarity for black-on-white scans.  `--labels FILE` maps class
+/// indices to names (one per line).
+fn cmd_classify(args: &Args) -> Result<()> {
+    let [weights_path, image_path] = args.positionals.as_slice() else {
+        bail!("classify needs exactly two positionals: <weights.json> <image>\n\n{USAGE}");
+    };
+    let model = mem::load_model(std::path::Path::new(weights_path))?;
+    let n_in = model.n_in();
+
+    let bytes = std::fs::read(image_path).with_context(|| format!("reading image {image_path}"))?;
+    let idx3 = bytes.len() >= 4 && bytes[..4] == [0, 0, 8, 3];
+    let (pixels, geom) = if idx3 {
+        let (imgs, rows, cols) = mem::read_idx_images(std::path::Path::new(image_path))?;
+        let i = args.usize_or("index", 0)?;
+        if i >= imgs.len() {
+            bail!("--index {i} out of range: idx3 file holds {} images", imgs.len());
+        }
+        (imgs.into_iter().nth(i).unwrap(), format!("{rows}×{cols} (idx3 image {i})"))
+    } else {
+        let width = args.usize_or("width", 0)?;
+        let height = args.usize_or("height", 0)?;
+        let (w, h) = match (width, height) {
+            (0, 0) => {
+                // no geometry given: trust the model's input size, shown
+                // square when it is one (28×28 for the paper's 784)
+                let side = (n_in as f64).sqrt() as usize;
+                if side * side == n_in {
+                    (side, side)
+                } else {
+                    (n_in, 1)
+                }
+            }
+            (w, 0) if w > 0 && n_in % w == 0 => (w, n_in / w),
+            (0, h) if h > 0 && n_in % h == 0 => (n_in / h, h),
+            (w, h) if w > 0 && h > 0 => (w, h),
+            _ => bail!("--width/--height must divide the model input size {n_in}"),
+        };
+        if w * h != n_in {
+            bail!("{w}×{h} = {} pixels, but the model takes {n_in} inputs", w * h);
+        }
+        if bytes.len() != n_in {
+            bail!(
+                "raw image is {} bytes, expected {n_in} ({w}×{h} grayscale); \
+                 for idx3 files the header was not recognized",
+                bytes.len()
+            );
+        }
+        (bytes, format!("{w}×{h} (raw)"))
+    };
+    if pixels.len() != n_in {
+        bail!("image has {} pixels, model takes {n_in}", pixels.len());
+    }
+
+    let threshold = args.usize_or("threshold", 128)?;
+    if threshold > 255 {
+        bail!("--threshold must be in 0..=255");
+    }
+    let invert = args.flag("invert");
+    let bits: Vec<u8> = pixels
+        .iter()
+        .map(|&p| u8::from((usize::from(p) >= threshold) != invert))
+        .collect();
+    let img = crate::bnn::packing::Packed::from_bits(&bits);
+
+    let labels: Option<Vec<String>> = match args.opt("labels") {
+        Some(p) => Some(
+            std::fs::read_to_string(p)
+                .with_context(|| format!("reading labels {p}"))?
+                .lines()
+                .map(str::to_string)
+                .collect(),
+        ),
+        None => None,
+    };
+    let name_of = |c: usize| -> String {
+        match &labels {
+            Some(ls) if c < ls.len() => format!("{c} ({})", ls[c]),
+            _ => c.to_string(),
+        }
+    };
+
+    let t = std::time::Instant::now();
+    let logits = model.logits(&img.words);
+    let us = t.elapsed().as_micros();
+    let best = logits
+        .iter()
+        .enumerate()
+        .max_by_key(|&(i, &v)| (v, std::cmp::Reverse(i)))
+        .map(|(i, _)| i)
+        .unwrap();
+    println!("image  : {geom}, threshold {threshold}{}", if invert { ", inverted" } else { "" });
+    println!("model  : {} inputs, {} classes, {} layers", n_in, logits.len(), model.layers.len());
+    println!("class  : {}  ({us} µs)", name_of(best));
+    let mut ranked: Vec<(usize, i32)> = logits.iter().copied().enumerate().collect();
+    ranked.sort_by_key(|&(i, v)| (std::cmp::Reverse(v), i));
+    for &(c, v) in ranked.iter().take(5) {
+        println!("  logit[{}] = {v}", name_of(c));
+    }
+    Ok(())
+}
+
 /// Open-loop load against a running `serve` instance (see
 /// `coordinator/loadgen.rs` on why the loop is open): prints the achieved
 /// throughput and the scheduled-send latency percentiles.
@@ -557,7 +740,12 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         .with_context(|| format!("resolving '{addr_s}'"))?
         .next()
         .ok_or_else(|| anyhow::anyhow!("'{addr_s}' resolved to no address"))?;
-    let mix_v1 = args.f64_or("mix-v1", 50.0)?;
+    let model = args.opt("model").map(str::to_string);
+    // v1 frames cannot carry a model name, so naming a model defaults the
+    // mix to v2-only; an explicit --mix-v1 still wins (the v1 share just
+    // hits the default model)
+    let mix_default = if model.is_some() { 0.0 } else { 50.0 };
+    let mix_v1 = args.f64_or("mix-v1", mix_default)?;
     if !(0.0..=100.0).contains(&mix_v1) {
         bail!("--mix-v1 must be a percentage in 0..=100");
     }
@@ -568,6 +756,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         duration: std::time::Duration::from_millis(args.u64_or("duration-ms", 2_000)?),
         v1_fraction: mix_v1 / 100.0,
         seed: args.u64_or("seed", 0xB14D)?,
+        model,
     };
     // the image pool: trained artifacts when present, synthetic otherwise —
     // load generation only needs well-formed 784-bit frames
@@ -576,11 +765,12 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         println!("(artifacts missing — load uses synthetic images)");
     }
     println!(
-        "offering {:.0} images/sec for {} ms over {} connections ({:.0}% v1) at {addr}",
+        "offering {:.0} images/sec for {} ms over {} connections ({:.0}% v1{}) at {addr}",
         cfg.rate,
         cfg.duration.as_millis(),
         cfg.connections,
-        mix_v1
+        mix_v1,
+        cfg.model.as_deref().map(|m| format!(", model '{m}'")).unwrap_or_default()
     );
     let r = run_open_loop(&ds.images, &cfg)?;
     println!("sent       : {}", r.sent);

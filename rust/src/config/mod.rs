@@ -75,6 +75,16 @@ impl Toml {
         self.sections.get(section)?.get(key)
     }
 
+    /// Section names that start with `prefix.` — e.g. `sections_under("models")`
+    /// yields `("a", ..)` and `("b", ..)` for `[models.a]` / `[models.b]`,
+    /// in document-independent sorted order.  The suffix is the part after
+    /// the dot; full section names are reconstructible as `{prefix}.{suffix}`.
+    pub fn sections_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        self.sections
+            .keys()
+            .filter_map(move |name| name.strip_prefix(prefix).and_then(|r| r.strip_prefix('.')))
+    }
+
     pub fn str_or(&self, section: &str, key: &str, default: &str) -> Result<String> {
         match self.get(section, key) {
             None => Ok(default.to_string()),
@@ -98,6 +108,24 @@ impl Toml {
             Some(other) => bail!("[{section}] {key}: expected bool, got {other:?}"),
         }
     }
+}
+
+/// One `[models.NAME]` entry: a named engine for the multi-model registry
+/// (`coordinator::ModelRegistry`).  With no `[models.*]` sections the serve
+/// path stays single-model, exactly as before.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    /// Registry name — what wire-v2 `FEAT_MODEL` sections route on.
+    pub name: String,
+    /// `weights.json` to load (`mem::load_model` format); absent means a
+    /// seeded random 784→10 model (demo/smoke configs).
+    pub weights: Option<std::path::PathBuf>,
+    /// Per-model admission cap: at most this many requests in flight
+    /// (`ModelRegistry::register_with_quota`); absent means uncapped.
+    pub quota: Option<usize>,
+    /// Route nameless requests here.  At most one entry may set this; with
+    /// none set the first section (sorted order) is the default.
+    pub default: bool,
 }
 
 /// Typed serving configuration (`bnn-fpga serve --config <file>`).
@@ -143,6 +171,9 @@ pub struct ServeConfig {
     /// FPGA-sim backend parameters.
     pub parallelism: usize,
     pub mem_style: MemStyle,
+    /// Named models from `[models.NAME]` sections; empty means the classic
+    /// single-model serve path.
+    pub models: Vec<ModelConfig>,
 }
 
 impl Default for ServeConfig {
@@ -161,6 +192,7 @@ impl Default for ServeConfig {
             async_serve: false,
             parallelism: 64,
             mem_style: MemStyle::Bram,
+            models: Vec::new(),
         }
     }
 }
@@ -234,6 +266,30 @@ impl ServeConfig {
             idle_timeout: Duration::from_millis(idle_timeout_ms as u64),
         };
         let async_serve = doc.bool_or("server", "async", d.async_serve)?;
+        let mut models = Vec::new();
+        for name in doc.sections_under("models") {
+            let section = format!("models.{name}");
+            if name.is_empty() || name.len() > crate::coordinator::wire::MAX_MODEL_NAME {
+                bail!(
+                    "[{section}]: model name must be 1..={} bytes",
+                    crate::coordinator::wire::MAX_MODEL_NAME
+                );
+            }
+            let weights = match doc.str_or(&section, "weights", "")? {
+                s if s.is_empty() => None,
+                s => Some(std::path::PathBuf::from(s)),
+            };
+            let quota = match doc.int_or(&section, "quota", 0)? {
+                0 => None,
+                q if q < 0 => bail!("[{section}] quota: must be ≥ 1"),
+                q => Some(q as usize),
+            };
+            let default = doc.bool_or(&section, "default", false)?;
+            models.push(ModelConfig { name: name.to_string(), weights, quota, default });
+        }
+        if models.iter().filter(|m| m.default).count() > 1 {
+            bail!("[models.*]: at most one model may set default = true");
+        }
         Ok(ServeConfig {
             artifacts_dir: doc.str_or("coordinator", "artifacts_dir", "artifacts")?.into(),
             backends,
@@ -256,6 +312,7 @@ impl ServeConfig {
             async_serve,
             parallelism,
             mem_style,
+            models,
         })
     }
 
@@ -441,6 +498,51 @@ mem_style = "bram"
             &Toml::parse("[server]\nasync = 1").unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn parses_model_sections() {
+        let toml = r#"
+[models.mnist-a]
+weights = "artifacts/mnist_a/weights.json"
+quota = 128
+default = true
+
+[models.mnist-b]
+"#;
+        let cfg = ServeConfig::from_toml(&Toml::parse(toml).unwrap()).unwrap();
+        assert_eq!(cfg.models.len(), 2);
+        // BTreeMap section order: sorted by name
+        assert_eq!(
+            cfg.models[0],
+            ModelConfig {
+                name: "mnist-a".into(),
+                weights: Some("artifacts/mnist_a/weights.json".into()),
+                quota: Some(128),
+                default: true,
+            }
+        );
+        assert_eq!(
+            cfg.models[1],
+            ModelConfig { name: "mnist-b".into(), weights: None, quota: None, default: false }
+        );
+        // no [models.*] sections → the classic single-model path
+        let cfg = ServeConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert!(cfg.models.is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_model_sections() {
+        // two defaults is ambiguous routing
+        assert!(ServeConfig::from_toml(
+            &Toml::parse("[models.a]\ndefault = true\n[models.b]\ndefault = true").unwrap()
+        )
+        .is_err());
+        // negative quota must not wrap through `as usize`
+        assert!(ServeConfig::from_toml(&Toml::parse("[models.a]\nquota = -1").unwrap()).is_err());
+        // names must fit the wire's FEAT_MODEL length bound
+        let long = format!("[models.{}]", "x".repeat(65));
+        assert!(ServeConfig::from_toml(&Toml::parse(&long).unwrap()).is_err());
     }
 
     #[test]

@@ -46,10 +46,12 @@ use netpoll::{Events, Interest, Poller};
 use super::metrics::Metrics;
 use super::request::InferOptions;
 use super::wire::{
-    encode_error, encode_error_v2, encode_response, encode_response_v2, parse_v2_header,
-    payload_bytes, submit_error_status, unpack_payload, WireItem, WireServerConfig, WireStatus,
-    IMAGE_BITS, MAGIC_REQ, MAGIC_REQ_V2, PAYLOAD_BYTES,
+    check_model_name_len, encode_error, encode_error_v2, encode_response, encode_response_v2,
+    parse_model_name, parse_v2_header, payload_bytes, submit_error_status, unpack_payload,
+    Dispatch, WireItem, WireServerConfig, WireStatus, FEAT_MODEL, IMAGE_BITS, MAGIC_REQ,
+    MAGIC_REQ_V2, PAYLOAD_BYTES,
 };
+use super::router::ModelRegistry;
 use super::InferService;
 use crate::bnn::packing::Packed;
 
@@ -81,6 +83,8 @@ enum Parsed {
         features: u8,
         top_k: u8,
         opts: InferOptions,
+        /// [`FEAT_MODEL`] name section; `None` ⇒ the default model.
+        model: Option<String>,
         images: Vec<Packed>,
     },
     /// Protocol error: answer `status` (v2-form iff `v2`) and poison.
@@ -134,14 +138,51 @@ fn try_parse(buf: &[u8]) -> (usize, Parsed) {
                     )
                 }
             };
+            // the FEAT_MODEL name section sits between the head and the
+            // payloads, so the frame's total size isn't known until its
+            // length byte arrives — validate it as soon as it does
+            let (payload_off, model) = if h.features & FEAT_MODEL != 0 {
+                let Some(&name_len) = buf.get(17) else {
+                    return (0, Parsed::NeedMore);
+                };
+                if let Err(e) = check_model_name_len(name_len as usize) {
+                    return (
+                        0,
+                        Parsed::Bad {
+                            v2: true,
+                            id: h.id,
+                            status: e.status,
+                        },
+                    );
+                }
+                let name_end = 18 + name_len as usize;
+                if buf.len() < name_end {
+                    return (0, Parsed::NeedMore);
+                }
+                match parse_model_name(&buf[18..name_end]) {
+                    Ok(name) => (name_end, Some(name)),
+                    Err(e) => {
+                        return (
+                            0,
+                            Parsed::Bad {
+                                v2: true,
+                                id: h.id,
+                                status: e.status,
+                            },
+                        )
+                    }
+                }
+            } else {
+                (17, None)
+            };
             let pb = payload_bytes(h.n_bits);
-            let total = 17 + h.n_images * pb;
+            let total = payload_off + h.n_images * pb;
             if buf.len() < total {
                 return (0, Parsed::NeedMore);
             }
             let images = (0..h.n_images)
                 .map(|i| {
-                    let off = 17 + i * pb;
+                    let off = payload_off + i * pb;
                     unpack_payload(&buf[off..off + pb], h.n_bits)
                 })
                 .collect();
@@ -152,6 +193,7 @@ fn try_parse(buf: &[u8]) -> (usize, Parsed) {
                     features: h.features,
                     top_k: h.top_k,
                     opts: h.opts(),
+                    model,
                     images,
                 },
             )
@@ -312,8 +354,8 @@ impl Conn {
 
 /// Submit one image; a refusal becomes an immediately-resolved failed slot
 /// with the typed status (the engine counted it `rejected`).
-fn submit_one(service: &Arc<dyn InferService>, img: Packed, opts: InferOptions) -> Slot {
-    match service.submit_with(img, opts) {
+fn submit_one(dispatch: &Dispatch, model: Option<&str>, img: Packed, opts: InferOptions) -> Slot {
+    match dispatch.submit(model, img, opts) {
         Ok(t) => Slot::Waiting(t),
         Err(e) => Slot::Failed(submit_error_status(&e)),
     }
@@ -321,7 +363,7 @@ fn submit_one(service: &Arc<dyn InferService>, img: Packed, opts: InferOptions) 
 
 /// Parse every complete frame in `rbuf` and submit it, respecting the
 /// per-connection in-flight cap.  Returns true on any progress.
-fn parse_and_submit(conn: &mut Conn, service: &Arc<dyn InferService>) -> bool {
+fn parse_and_submit(conn: &mut Conn, dispatch: &Dispatch) -> bool {
     let mut progress = false;
     let mut consumed_total = 0usize;
     while !conn.poisoned && conn.inflight < MAX_INFLIGHT_PER_CONN {
@@ -332,7 +374,7 @@ fn parse_and_submit(conn: &mut Conn, service: &Arc<dyn InferService>) -> bool {
                 consumed_total += consumed;
                 // v1 responses carry only the digit: the top-1-only path
                 // keeps the serve loop allocation-free (same as blocking)
-                let slot = submit_one(service, img, InferOptions::digits_only());
+                let slot = submit_one(dispatch, None, img, InferOptions::digits_only());
                 conn.inflight += matches!(slot, Slot::Waiting(_)) as usize;
                 conn.pending.push_back(PendingReply::V1 { slot });
                 progress = true;
@@ -342,6 +384,7 @@ fn parse_and_submit(conn: &mut Conn, service: &Arc<dyn InferService>) -> bool {
                 features,
                 top_k,
                 opts,
+                model,
                 images,
             } => {
                 consumed_total += consumed;
@@ -351,7 +394,7 @@ fn parse_and_submit(conn: &mut Conn, service: &Arc<dyn InferService>) -> bool {
                 // the blocking server's ledger semantics
                 let slots: Vec<Slot> = images
                     .into_iter()
-                    .map(|img| submit_one(service, img, opts))
+                    .map(|img| submit_one(dispatch, model.as_deref(), img, opts))
                     .collect();
                 conn.inflight += slots.iter().filter(|s| matches!(s, Slot::Waiting(_))).count();
                 conn.pending.push_back(PendingReply::V2 {
@@ -378,13 +421,18 @@ fn parse_and_submit(conn: &mut Conn, service: &Arc<dyn InferService>) -> bool {
 
 /// Poll a reply's waiting slots; returns whether the whole reply is
 /// resolved.  `resolved_now` counts Waiting → resolved transitions (the
-/// caller decrements `inflight`).
-fn poll_reply(reply: &mut PendingReply, resolved_now: &mut usize) -> bool {
+/// caller decrements `inflight`).  Each resolution feeds the server's own
+/// latency/queue-wait histograms, so `summary_line()` shows real
+/// percentiles under async serving — the blocking server gets this for
+/// free from the engine, the event loop must book it per resolved slot.
+fn poll_reply(reply: &mut PendingReply, resolved_now: &mut usize, metrics: &Metrics) -> bool {
     let poll_slot = |slot: &mut Slot, resolved_now: &mut usize| -> bool {
         if let Slot::Waiting(t) = slot {
             match t.try_poll() {
                 Ok(Some(r)) => {
                     *resolved_now += 1;
+                    metrics.record_queue_wait(r.queue_wait_ns);
+                    metrics.record_latency(r.latency_ns);
                     *slot = Slot::Done(r);
                 }
                 Ok(None) => return false,
@@ -427,7 +475,16 @@ fn encode_reply(reply: PendingReply) -> (Vec<u8>, u64) {
             (bytes, 0)
         }
         PendingReply::V1 { slot } => match slot {
-            Slot::Done(r) => (encode_response(r.digit, latency_us(r.latency_ns)).to_vec(), 1),
+            // the v1 digit field is one byte: a >255-class argmax gets a
+            // typed refusal, never a wrapped digit (same as the blocking
+            // server — v2 carries the u16)
+            Slot::Done(r) if r.digit > u8::MAX as u16 => {
+                (encode_error(WireStatus::TooLarge).to_vec(), 0)
+            }
+            Slot::Done(r) => (
+                encode_response(r.digit as u8, latency_us(r.latency_ns)).to_vec(),
+                1,
+            ),
             Slot::Failed(status) => (encode_error(status).to_vec(), 0),
             Slot::Waiting(_) => unreachable!("encode_reply on an unresolved v1 slot"),
         },
@@ -473,13 +530,13 @@ fn encode_reply(reply: PendingReply) -> (Vec<u8>, u64) {
 }
 
 /// Resolve-and-encode as many in-order replies as are ready.
-fn pump(conn: &mut Conn, served: &AtomicU64) -> bool {
+fn pump(conn: &mut Conn, served: &AtomicU64, metrics: &Metrics) -> bool {
     let mut progress = false;
     loop {
         let mut resolved_now = 0usize;
         let ready = match conn.pending.front_mut() {
             None => break,
-            Some(reply) => poll_reply(reply, &mut resolved_now),
+            Some(reply) => poll_reply(reply, &mut resolved_now, metrics),
         };
         conn.inflight -= resolved_now;
         if !ready {
@@ -527,7 +584,30 @@ impl AsyncWireServer {
         service: Arc<S>,
         cfg: WireServerConfig,
     ) -> Result<AsyncWireServer> {
-        let service: Arc<dyn InferService> = service;
+        Self::start_dispatch(addr, Dispatch::Single(service), cfg)
+    }
+
+    /// Serve a [`ModelRegistry`]: v2 frames route by their
+    /// [`FEAT_MODEL`] name, nameless frames (and all of v1) go to the
+    /// registry's default model.
+    pub fn start_registry(addr: &str, registry: Arc<ModelRegistry>) -> Result<AsyncWireServer> {
+        Self::start_dispatch(addr, Dispatch::Registry(registry), WireServerConfig::default())
+    }
+
+    /// [`Self::start_registry`] with an explicit connection policy.
+    pub fn start_registry_with(
+        addr: &str,
+        registry: Arc<ModelRegistry>,
+        cfg: WireServerConfig,
+    ) -> Result<AsyncWireServer> {
+        Self::start_dispatch(addr, Dispatch::Registry(registry), cfg)
+    }
+
+    fn start_dispatch(
+        addr: &str,
+        dispatch: Dispatch,
+        cfg: WireServerConfig,
+    ) -> Result<AsyncWireServer> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -550,7 +630,7 @@ impl AsyncWireServer {
         let loop_thread = std::thread::Builder::new()
             .name("bnn-wire-async".into())
             .spawn(move || {
-                event_loop(listener, poller, service, cfg, t_stop, t_served, t_metrics);
+                event_loop(listener, poller, dispatch, cfg, t_stop, t_served, t_metrics);
             })?;
         Ok(AsyncWireServer {
             addr: local,
@@ -588,7 +668,7 @@ impl Drop for AsyncWireServer {
 fn event_loop(
     listener: TcpListener,
     poller: Poller,
-    service: Arc<dyn InferService>,
+    dispatch: Dispatch,
     cfg: WireServerConfig,
     stop: Arc<AtomicBool>,
     served: Arc<AtomicU64>,
@@ -669,7 +749,7 @@ fn event_loop(
                 continue; // already closed this pass
             };
             if ev.readable && conn.do_read(&mut scratch) {
-                progress |= parse_and_submit(conn, &service);
+                progress |= parse_and_submit(conn, &dispatch);
             }
             if ev.writable {
                 conn.flush();
@@ -680,7 +760,7 @@ fn event_loop(
         // opportunistically (most responses go out without waiting for a
         // writable event)
         for conn in conns.values_mut() {
-            if !conn.pending.is_empty() && pump(conn, &served) {
+            if !conn.pending.is_empty() && pump(conn, &served, &metrics) {
                 progress = true;
             }
             if !conn.flushed() {
@@ -712,7 +792,7 @@ fn event_loop(
                         status: WireStatus::Timeout,
                     });
                     conn.poisoned = true;
-                    pump(conn, &served);
+                    pump(conn, &served, &metrics);
                     conn.flush();
                 }
             }
@@ -869,6 +949,58 @@ mod tests {
                 assert_eq!(status, WireStatus::BadLength);
             }
             _ => panic!("zero-image v2 frame accepted"),
+        }
+    }
+
+    #[test]
+    fn try_parse_v2_model_section_incremental() {
+        let img = {
+            let bits: Vec<u8> = (0..64).map(|i| (i % 3 == 0) as u8).collect();
+            Packed::from_bits(&bits)
+        };
+        let frame = super::super::wire::encode_request_v2_for(
+            std::slice::from_ref(&img),
+            7,
+            InferOptions::default(),
+            Some("mnist-b"),
+        )
+        .unwrap();
+        // every strict prefix — including cuts inside the name section —
+        // is NeedMore, never Bad, never a short consume
+        for cut in 0..frame.len() {
+            let (c, p) = try_parse(&frame[..cut]);
+            assert_eq!(c, 0, "cut {cut}");
+            assert!(matches!(p, Parsed::NeedMore), "cut {cut}");
+        }
+        match try_parse(&frame) {
+            (c, Parsed::V2 { id, model, images, .. }) => {
+                assert_eq!(c, frame.len());
+                assert_eq!(id, 7);
+                assert_eq!(model.as_deref(), Some("mnist-b"));
+                assert_eq!(images[0].words, img.words);
+            }
+            _ => panic!("named v2 frame did not parse"),
+        }
+        // a corrupt name length is a typed error with the id echoed
+        let mut bad = frame.clone();
+        bad[17] = 0;
+        match try_parse(&bad).1 {
+            Parsed::Bad { v2, id, status } => {
+                assert!(v2);
+                assert_eq!(id, 7);
+                assert_eq!(status, WireStatus::BadLength);
+            }
+            _ => panic!("empty model name accepted"),
+        }
+        let mut bad = frame;
+        bad[18] = 0xFF; // "m" → invalid UTF-8 lead byte
+        match try_parse(&bad).1 {
+            Parsed::Bad { v2, id, status } => {
+                assert!(v2);
+                assert_eq!(id, 7);
+                assert_eq!(status, WireStatus::BadLength);
+            }
+            _ => panic!("non-UTF-8 model name accepted"),
         }
     }
 }

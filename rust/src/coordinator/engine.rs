@@ -468,7 +468,7 @@ mod tests {
             .unwrap();
         assert!(r.logits.is_empty(), "digits_only suppresses the logits copy");
         assert_eq!(r.top_k, crate::coordinator::request::top_k_i32(&want, 3));
-        assert_eq!(r.top_k[0].0, r.digit as u16);
+        assert_eq!(r.top_k[0].0, r.digit);
         engine.shutdown();
     }
 

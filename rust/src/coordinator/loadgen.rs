@@ -24,7 +24,7 @@ use anyhow::{bail, Context, Result};
 
 use super::request::InferOptions;
 use super::wire::{
-    encode_request, encode_request_v2, read_response_v2, WireStatus, IMAGE_BITS, MAGIC_ERR,
+    encode_request, encode_request_v2_for, read_response_v2, WireStatus, IMAGE_BITS, MAGIC_ERR,
     MAGIC_RESP,
 };
 use crate::bnn::packing::Packed;
@@ -46,6 +46,10 @@ pub struct LoadConfig {
     /// v2, digits-only).  v1 requires 784-bit images.
     pub v1_fraction: f64,
     pub seed: u64,
+    /// Name the v2 frames address to a registry model (`FEAT_MODEL`
+    /// section); `None` offers nameless traffic (the default model).  v1
+    /// frames cannot carry a name and always hit the default.
+    pub model: Option<String>,
 }
 
 impl Default for LoadConfig {
@@ -57,6 +61,7 @@ impl Default for LoadConfig {
             duration: Duration::from_secs(2),
             v1_fraction: 0.5,
             seed: 0xB14D,
+            model: None,
         }
     }
 }
@@ -131,8 +136,13 @@ pub fn run_open_loop(images: &[Packed], cfg: &LoadConfig) -> Result<LoadReport> 
         } else {
             let id = next_id;
             next_id = next_id.wrapping_add(1);
-            encode_request_v2(std::slice::from_ref(img), id, InferOptions::digits_only())
-                .context("encoding a v2 load frame")?
+            encode_request_v2_for(
+                std::slice::from_ref(img),
+                id,
+                InferOptions::digits_only(),
+                cfg.model.as_deref(),
+            )
+            .context("encoding a v2 load frame")?
         };
         plans[k % cfg.connections].push(PlannedSend {
             offset: Duration::from_secs_f64(k as f64 / cfg.rate),

@@ -64,7 +64,7 @@ pub use batcher::BatcherConfig;
 pub use engine::{BackendSpec, Engine, EngineBuilder};
 pub use metrics::Metrics;
 pub use request::{InferOptions, InferRequest, InferResponse, RequestId, Ticket};
-pub use router::Router;
+pub use router::{ModelRegistry, Router};
 pub use server::DEFAULT_QUEUE_CAP;
 pub use async_wire::AsyncWireServer;
 pub use loadgen::{run_open_loop, LoadConfig, LoadReport};

@@ -101,13 +101,16 @@ pub(crate) fn execute_batch(
                 let opts = p.req.opts;
                 let _ = p.reply.send(InferResponse {
                     id: p.req.id,
-                    digit: argmax_i32(row) as u8,
+                    // u16, never u8: a >255-class model's argmax must not
+                    // wrap (class ids share the top-k u16 carrier)
+                    digit: argmax_i32(row) as u16,
                     logits: if opts.include_logits { row.to_vec() } else { Vec::new() },
                     top_k: match opts.top_k {
                         Some(k) => top_k_i32(row, k),
                         None => Vec::new(),
                     },
                     latency_ns,
+                    queue_wait_ns: wait_ns,
                     batch_size,
                     backend: backend.name(),
                 });

@@ -109,13 +109,19 @@ impl InferRequest {
 #[derive(Clone, Debug)]
 pub struct InferResponse {
     pub id: RequestId,
-    pub digit: u8,
+    /// Winning class id.  u16 like the top-k class carrier: a >255-class
+    /// model must never wrap its argmax (`MAX_WIRE_CLASSES` is 4096).
+    pub digit: u16,
     /// Full logits row (empty when the request set `include_logits: false`).
     pub logits: Vec<i32>,
     /// Top-k `(class, logit)` pairs, best first (empty unless requested).
     pub top_k: Vec<(u16, i32)>,
     /// Queue + batch + execute time, nanoseconds.
     pub latency_ns: u64,
+    /// Time spent queued before execution began, nanoseconds (a component
+    /// of `latency_ns`, surfaced so serving front ends can feed their own
+    /// queue-wait histograms).
+    pub queue_wait_ns: u64,
     /// Batch this request was executed in (observability).
     pub batch_size: usize,
     pub backend: &'static str,
@@ -142,6 +148,10 @@ pub struct Ticket {
     rx: mpsc::Receiver<InferResponse>,
     metrics: Arc<Metrics>,
     resolved: bool,
+    /// Fired exactly once when the ticket leaves the system (resolved or
+    /// dropped) — the model registry hangs per-model in-flight accounting
+    /// here so quotas release no matter how the caller finishes.
+    observer: Option<Box<dyn FnOnce() + Send>>,
 }
 
 impl Ticket {
@@ -155,7 +165,14 @@ impl Ticket {
             rx,
             metrics,
             resolved: false,
+            observer: None,
         }
+    }
+
+    /// Attach a completion observer, fired exactly once on resolve-or-drop.
+    pub(crate) fn with_observer(mut self, f: Box<dyn FnOnce() + Send>) -> Self {
+        self.observer = Some(f);
+        self
     }
 
     /// The engine-assigned request id.
@@ -224,6 +241,12 @@ impl Drop for Ticket {
         if !self.resolved {
             self.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
         }
+        // Drop runs exactly once on every exit path (wait() consumes the
+        // ticket, so even that falls through here), which makes it the one
+        // place the observer can fire exactly once.
+        if let Some(f) = self.observer.take() {
+            f();
+        }
     }
 }
 
@@ -246,6 +269,7 @@ mod tests {
             logits: vec![0; 10],
             top_k: Vec::new(),
             latency_ns: 1,
+            queue_wait_ns: 0,
             batch_size: 1,
             backend: "test",
         }
@@ -312,6 +336,37 @@ mod tests {
         assert!(t.wait_timeout(Duration::from_millis(1)).is_err());
         drop(t);
         assert_eq!(m.cancelled.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn observer_fires_exactly_once_on_every_exit_path() {
+        use std::sync::atomic::AtomicUsize;
+        let fired = Arc::new(AtomicUsize::new(0));
+        // resolved via wait()
+        let m = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::channel();
+        let f = fired.clone();
+        let t = Ticket::new(1, rx, m.clone())
+            .with_observer(Box::new(move || { f.fetch_add(1, Ordering::SeqCst); }));
+        tx.send(resp(1)).unwrap();
+        t.wait().unwrap();
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+        // dropped unresolved
+        let (_tx2, rx2) = mpsc::channel::<InferResponse>();
+        let f = fired.clone();
+        let t = Ticket::new(2, rx2, m.clone())
+            .with_observer(Box::new(move || { f.fetch_add(1, Ordering::SeqCst); }));
+        drop(t);
+        assert_eq!(fired.load(Ordering::SeqCst), 2);
+        // resolved via try_poll, then dropped: still once
+        let (tx3, rx3) = mpsc::channel();
+        let f = fired.clone();
+        let mut t = Ticket::new(3, rx3, m)
+            .with_observer(Box::new(move || { f.fetch_add(1, Ordering::SeqCst); }));
+        tx3.send(resp(3)).unwrap();
+        t.try_poll().unwrap().unwrap();
+        drop(t);
+        assert_eq!(fired.load(Ordering::SeqCst), 3);
     }
 
     #[test]

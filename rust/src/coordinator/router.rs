@@ -1,17 +1,34 @@
-//! Request router over named serving engines.
+//! Request routing over named serving engines: the static [`Router`] and
+//! the hot-swappable [`ModelRegistry`].
 //!
-//! Policies:
+//! [`Router`] policies:
 //! * **Named** — caller pins an engine (`route("fpga-sim", …)`);
 //! * **LeastQueue** — default routing picks the engine with the shallowest
 //!   queue (ties → first registered), the standard load-balancing policy
 //!   for heterogeneous backends.
+//!
+//! [`ModelRegistry`] is the multi-model, multi-tenant seam (ROADMAP item
+//! 4): named models behind `Arc<Engine>` handles, per-model in-flight
+//! quotas, and **zero-downtime hot swap** — build the replacement engine
+//! off-thread ([`ModelRegistry::hot_swap`]), atomically swap the `Arc`
+//! ([`ModelRegistry::swap`]) so new submits land on the new engine while
+//! in-flight tickets drain on the old one, then wait for the outgoing
+//! engine's queue to empty and its
+//! `submitted == completed + rejected` ledger to balance before dropping
+//! it ([`ModelRegistry::drain`]).  Both wire servers can dispatch through
+//! a registry (wire-v2 `FEAT_MODEL` names the model per frame; absent ⇒
+//! the default model, so existing clients are untouched).
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use super::engine::Engine;
-use super::request::InferResponse;
+use super::request::{InferOptions, InferResponse, Ticket};
+use super::InferService;
 use crate::bnn::packing::Packed;
 
 /// A named collection of serving engines (each built with
@@ -27,11 +44,16 @@ impl Router {
         Self::default()
     }
 
-    pub fn register(&mut self, name: &str, engine: Engine) -> &mut Self {
-        if self.backends.insert(name.to_string(), engine).is_none() {
+    /// Register `engine` under `name`.  Re-registering an existing name
+    /// returns the displaced engine — the caller decides whether to drain
+    /// or shut it down; it is never silently dropped (a dropped `Engine`
+    /// abandons its queued work).
+    pub fn register(&mut self, name: &str, engine: Engine) -> Option<Engine> {
+        let displaced = self.backends.insert(name.to_string(), engine);
+        if displaced.is_none() {
             self.order.push(name.to_string());
         }
-        self
+        displaced
     }
 
     pub fn names(&self) -> &[String] {
@@ -69,6 +91,323 @@ impl Router {
             out.push_str(&format!("{n}: {}\n", self.backends[n].summary_line()));
         }
         out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ModelRegistry: named models, quotas, zero-downtime hot swap
+
+/// How long [`ModelRegistry::swap_and_drain`] waits for the outgoing
+/// engine to empty its queue and balance its ledger before giving up.
+pub const DEFAULT_DRAIN_TIMEOUT: Duration = Duration::from_secs(30);
+
+struct ModelEntry {
+    engine: Arc<Engine>,
+    /// Max in-flight requests for this model (`None` = unbounded).  The
+    /// per-model *queue* bound is the engine's own `queue_cap`, set at
+    /// build time; this bound additionally covers requests already handed
+    /// to clients as unresolved tickets.
+    quota: Option<usize>,
+    /// Requests admitted through the quota gate whose tickets have not
+    /// yet resolved (shared with ticket observers, so it outlives swaps).
+    inflight: Arc<AtomicUsize>,
+    /// Swap count for this name (observability; starts at 0).
+    generation: u64,
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    models: BTreeMap<String, ModelEntry>,
+    order: Vec<String>,
+    default: Option<String>,
+}
+
+/// A hot-swappable registry of named serving engines.
+///
+/// * **Lookup** takes a read lock only long enough to clone the model's
+///   `Arc<Engine>`; submits run outside the lock, so a swap (brief write
+///   lock) never blocks behind a slow backend.
+/// * **Swap** replaces the `Arc` atomically: submits that resolved the old
+///   engine keep their tickets (the old engine drains them), submits after
+///   the swap land on the new engine.  Per-model in-flight accounting is
+///   shared across the swap, so quotas stay correct mid-handoff.
+/// * **Quota** admission failures count `submitted` *and* `rejected` on
+///   the model's current engine, keeping the
+///   `submitted == completed + rejected (+ cancelled)` ledger balanced on
+///   every refusal path, same as queue-cap rejections.
+pub struct ModelRegistry {
+    inner: RwLock<RegistryInner>,
+}
+
+impl Default for ModelRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self {
+            inner: RwLock::new(RegistryInner::default()),
+        }
+    }
+
+    /// Register `engine` under `name` with no in-flight quota.  The first
+    /// registered model becomes the default.  Returns the displaced engine
+    /// on re-registration (prefer [`Self::swap`] for live replacement —
+    /// it is the same operation, but named for intent and generation-
+    /// counted).
+    pub fn register(&self, name: &str, engine: Engine) -> Option<Arc<Engine>> {
+        self.register_with_quota(name, engine, None)
+    }
+
+    /// [`Self::register`] with a per-model max-in-flight quota.
+    pub fn register_with_quota(
+        &self,
+        name: &str,
+        engine: Engine,
+        quota: Option<usize>,
+    ) -> Option<Arc<Engine>> {
+        let mut inner = self.inner.write().unwrap();
+        if inner.default.is_none() {
+            inner.default = Some(name.to_string());
+        }
+        let generation = inner.models.get(name).map_or(0, |e| e.generation + 1);
+        let inflight = inner
+            .models
+            .get(name)
+            .map_or_else(|| Arc::new(AtomicUsize::new(0)), |e| e.inflight.clone());
+        let displaced = inner.models.insert(
+            name.to_string(),
+            ModelEntry {
+                engine: Arc::new(engine),
+                quota,
+                inflight,
+                generation,
+            },
+        );
+        if displaced.is_none() {
+            inner.order.push(name.to_string());
+        }
+        displaced.map(|e| e.engine)
+    }
+
+    /// Atomically replace `name`'s engine, returning the outgoing
+    /// `Arc<Engine>` so the caller can drain it ([`Self::drain`]) before
+    /// letting it drop.  Fails if `name` was never registered (a swap
+    /// cannot invent a model); quota and in-flight accounting carry over.
+    pub fn swap(&self, name: &str, engine: Engine) -> Result<Arc<Engine>> {
+        let mut inner = self.inner.write().unwrap();
+        let entry = inner
+            .models
+            .get_mut(name)
+            .with_context(|| format!("unknown model '{name}': cannot swap"))?;
+        entry.generation += 1;
+        Ok(std::mem::replace(&mut entry.engine, Arc::new(engine)))
+    }
+
+    /// Wait until `engine` has an empty queue and a balanced ledger
+    /// (`submitted == completed + rejected` — cancelled tickets still
+    /// complete or reject inside the engine, so the base identity is the
+    /// drain criterion).  Errors if `timeout` elapses first.
+    pub fn drain(engine: &Engine, timeout: Duration) -> Result<()> {
+        let t0 = Instant::now();
+        loop {
+            let m = engine.metrics();
+            let submitted = m.submitted.load(Ordering::SeqCst);
+            let completed = m.completed.load(Ordering::SeqCst);
+            let rejected = m.rejected.load(Ordering::SeqCst);
+            if engine.queue_depth() == 0 && submitted == completed + rejected {
+                return Ok(());
+            }
+            if t0.elapsed() > timeout {
+                bail!(
+                    "drain timed out after {:?}: queue_depth={} ledger {}!={}+{}",
+                    timeout,
+                    engine.queue_depth(),
+                    submitted,
+                    completed,
+                    rejected
+                );
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// [`Self::swap`], then drain the outgoing engine and shut it down.
+    /// Zero-downtime: new submits already land on the replacement while
+    /// the old engine finishes its in-flight work.
+    pub fn swap_and_drain(&self, name: &str, engine: Engine, timeout: Duration) -> Result<()> {
+        let old = self.swap(name, engine)?;
+        Self::drain(&old, timeout)?;
+        // Dropping the last Arc joins the old engine's workers; if a
+        // client still holds a clone, teardown happens when it lets go.
+        drop(old);
+        Ok(())
+    }
+
+    /// The full hot-swap protocol on a background thread: build the
+    /// replacement engine off-thread (construction — weight prep, worker
+    /// spawn — never blocks serving), swap atomically, drain and drop the
+    /// outgoing engine.  Join the handle for the result.
+    pub fn hot_swap<F>(
+        self: &Arc<Self>,
+        name: &str,
+        build: F,
+    ) -> std::thread::JoinHandle<Result<()>>
+    where
+        F: FnOnce() -> Result<Engine> + Send + 'static,
+    {
+        let registry = self.clone();
+        let name = name.to_string();
+        std::thread::Builder::new()
+            .name(format!("bnn-swap-{name}"))
+            .spawn(move || {
+                let engine = build().with_context(|| format!("building replacement '{name}'"))?;
+                registry.swap_and_drain(&name, engine, DEFAULT_DRAIN_TIMEOUT)
+            })
+            .expect("spawning the hot-swap thread")
+    }
+
+    /// Registered model names, in registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.inner.read().unwrap().order.clone()
+    }
+
+    /// The model used when a request names none.
+    pub fn default_model(&self) -> Option<String> {
+        self.inner.read().unwrap().default.clone()
+    }
+
+    /// Point the default at another registered model.
+    pub fn set_default(&self, name: &str) -> Result<()> {
+        let mut inner = self.inner.write().unwrap();
+        if !inner.models.contains_key(name) {
+            bail!("unknown model '{name}': cannot set default");
+        }
+        inner.default = Some(name.to_string());
+        Ok(())
+    }
+
+    /// The current engine for `name` (its `Arc` survives swaps happening
+    /// after this call — callers observe a consistent engine).
+    pub fn engine(&self, name: &str) -> Result<Arc<Engine>> {
+        let inner = self.inner.read().unwrap();
+        inner
+            .models
+            .get(name)
+            .map(|e| e.engine.clone())
+            .with_context(|| {
+                format!("unknown model '{name}' (have: {:?})", inner.order)
+            })
+    }
+
+    /// Requests admitted for `name` whose tickets are still unresolved.
+    pub fn inflight(&self, name: &str) -> Result<usize> {
+        let inner = self.inner.read().unwrap();
+        inner
+            .models
+            .get(name)
+            .map(|e| e.inflight.load(Ordering::SeqCst))
+            .with_context(|| format!("unknown model '{name}'"))
+    }
+
+    /// Submit one image to `model` (or the default when `None`).  Unknown
+    /// names and quota refusals are typed by message ("unknown model …" /
+    /// "… quota exceeded …") so the wire layer maps them to
+    /// `WireStatus::UnknownModel` / `WireStatus::Overloaded`.
+    pub fn submit_to(
+        &self,
+        model: Option<&str>,
+        image: Packed,
+        opts: InferOptions,
+    ) -> Result<Ticket> {
+        let (engine, quota, inflight) = {
+            let inner = self.inner.read().unwrap();
+            let name = match model {
+                Some(n) => n,
+                None => inner
+                    .default
+                    .as_deref()
+                    .context("model registry is empty (no default model)")?,
+            };
+            let entry = inner.models.get(name).with_context(|| {
+                format!("unknown model '{name}' (have: {:?})", inner.order)
+            })?;
+            (entry.engine.clone(), entry.quota, entry.inflight.clone())
+        };
+        if let Some(q) = quota {
+            // admit-if-below: the slot is held until the ticket resolves
+            // or is dropped (the observer below releases it)
+            let mut cur = inflight.load(Ordering::SeqCst);
+            let admitted = loop {
+                if cur >= q {
+                    break false;
+                }
+                match inflight.compare_exchange(cur, cur + 1, Ordering::SeqCst, Ordering::SeqCst)
+                {
+                    Ok(_) => break true,
+                    Err(now) => cur = now,
+                }
+            };
+            if !admitted {
+                // count the refusal on the model's current engine so its
+                // ledger keeps balancing (submitted == completed+rejected)
+                let m = engine.metrics();
+                m.submitted.fetch_add(1, Ordering::Relaxed);
+                m.rejected.fetch_add(1, Ordering::Relaxed);
+                bail!(
+                    "model {} quota exceeded ({q} requests in flight)",
+                    model.map_or_else(|| "<default>".into(), |n| format!("'{n}'"))
+                );
+            }
+            match engine.submit_with(image, opts) {
+                Ok(t) => {
+                    let slot = inflight.clone();
+                    Ok(t.with_observer(Box::new(move || {
+                        slot.fetch_sub(1, Ordering::SeqCst);
+                    })))
+                }
+                Err(e) => {
+                    // the engine refused (queue cap / width): release the
+                    // quota slot immediately, the ticket never existed
+                    inflight.fetch_sub(1, Ordering::SeqCst);
+                    Err(e)
+                }
+            }
+        } else {
+            engine.submit_with(image, opts)
+        }
+    }
+
+    /// Per-model metrics lines: generation, quota, in-flight, engine books.
+    pub fn metrics_report(&self) -> String {
+        let inner = self.inner.read().unwrap();
+        let mut out = String::new();
+        for n in &inner.order {
+            let e = &inner.models[n];
+            let default_marker = if inner.default.as_deref() == Some(n.as_str()) {
+                "*"
+            } else {
+                ""
+            };
+            out.push_str(&format!(
+                "{n}{default_marker} gen={} inflight={} quota={} {}\n",
+                e.generation,
+                e.inflight.load(Ordering::SeqCst),
+                e.quota.map_or_else(|| "-".into(), |q| q.to_string()),
+                e.engine.summary_line()
+            ));
+        }
+        out
+    }
+}
+
+/// Model-blind submits route to the default model — a registry slots in
+/// anywhere an [`InferService`] is expected (v1 wire frames, loadgen).
+impl InferService for ModelRegistry {
+    fn submit_with(&self, image: Packed, opts: InferOptions) -> Result<Ticket> {
+        self.submit_to(None, image, opts)
     }
 }
 
@@ -116,6 +455,16 @@ mod tests {
         }
     }
 
+    fn engine(model: &crate::bnn::BnnModel) -> Engine {
+        Engine::builder()
+            .native(model)
+            .kernel(Kernel::Scalar)
+            .workers(1)
+            .batcher(BatcherConfig::default())
+            .build()
+            .unwrap()
+    }
+
     #[test]
     fn named_routing_and_errors() {
         let (router, model) = setup();
@@ -124,6 +473,129 @@ mod tests {
         assert_eq!(r.digit as usize, model.predict(&image.words));
         assert!(router.route("zzz", image).is_err());
         assert_eq!(router.names(), &["a", "b"]);
+    }
+
+    #[test]
+    fn reregistration_returns_the_displaced_engine() {
+        let (mut router, model) = setup();
+        // warm the engine being displaced so we can tell it apart
+        router.route("a", img(1)).unwrap();
+        let displaced = router.register("a", engine(&model));
+        let displaced = displaced.expect("re-registering must hand back the old engine");
+        assert_eq!(
+            displaced.metrics().completed.load(std::sync::atomic::Ordering::Relaxed),
+            1,
+            "the displaced engine is the one that served traffic"
+        );
+        // the replacement serves under the same name; order stays dup-free
+        assert_eq!(router.names(), &["a", "b"]);
+        let image = img(2);
+        let r = router.route("a", image.clone()).unwrap();
+        assert_eq!(r.digit as usize, model.predict(&image.words));
+        assert_eq!(
+            router.get("a").unwrap().metrics().completed.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+        displaced.shutdown();
+        // registering a brand-new name returns None
+        let mut fresh = Router::new();
+        assert!(fresh.register("only", engine(&model)).is_none());
+    }
+
+    #[test]
+    fn registry_routes_by_name_and_defaults_to_first() {
+        use crate::coordinator::InferService;
+        let (_, model) = setup();
+        let reg = ModelRegistry::new();
+        assert!(reg.register("mnist", engine(&model)).is_none());
+        assert!(reg.register("alt", engine(&model)).is_none());
+        assert_eq!(reg.default_model().as_deref(), Some("mnist"));
+        assert_eq!(reg.names(), vec!["mnist", "alt"]);
+        let image = img(3);
+        let want = model.predict(&image.words);
+        // named, defaulted, and trait-dispatched submits all serve
+        assert_eq!(
+            reg.submit_to(Some("alt"), image.clone(), InferOptions::default())
+                .unwrap()
+                .wait()
+                .unwrap()
+                .digit as usize,
+            want
+        );
+        assert_eq!(reg.infer(image.clone()).unwrap().digit as usize, want);
+        let err = reg
+            .submit_to(Some("nope"), image, InferOptions::default())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown model"), "{err:#}");
+        reg.set_default("alt").unwrap();
+        assert_eq!(reg.default_model().as_deref(), Some("alt"));
+        assert!(reg.set_default("nope").is_err());
+        let report = reg.metrics_report();
+        assert!(report.contains("mnist") && report.contains("alt*"), "{report}");
+    }
+
+    #[test]
+    fn registry_quota_rejects_and_releases() {
+        let (_, model) = setup();
+        let reg = ModelRegistry::new();
+        reg.register_with_quota("m", engine(&model), Some(2));
+        // a resolved ticket releases its slot via the observer
+        let t = reg.submit_to(Some("m"), img(1), InferOptions::default()).unwrap();
+        t.wait().unwrap();
+        for _ in 0..200 {
+            if reg.inflight("m").unwrap() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(reg.inflight("m").unwrap(), 0);
+        // hold two unresolved tickets: the third submit is refused with a
+        // quota-typed message and the engine ledger still balances
+        let _t1 = reg.submit_to(Some("m"), img(2), InferOptions::default()).unwrap();
+        let _t2 = reg.submit_to(Some("m"), img(3), InferOptions::default()).unwrap();
+        let err = reg
+            .submit_to(Some("m"), img(4), InferOptions::default())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("quota exceeded"), "{err:#}");
+        let eng = reg.engine("m").unwrap();
+        ModelRegistry::drain(&eng, std::time::Duration::from_secs(5)).unwrap();
+        let m = eng.metrics();
+        let submitted = m.submitted.load(std::sync::atomic::Ordering::SeqCst);
+        let completed = m.completed.load(std::sync::atomic::Ordering::SeqCst);
+        let rejected = m.rejected.load(std::sync::atomic::Ordering::SeqCst);
+        assert_eq!(submitted, completed + rejected);
+        assert_eq!(rejected, 1, "exactly the quota refusal");
+    }
+
+    #[test]
+    fn registry_swap_hands_back_old_engine_and_reroutes() {
+        let (_, model) = setup();
+        let reg = Arc::new(ModelRegistry::new());
+        reg.register("m", engine(&model));
+        reg.infer(img(1)).unwrap();
+        assert!(reg.swap("unregistered", engine(&model)).is_err());
+        let old = reg.swap("m", engine(&model)).unwrap();
+        assert_eq!(old.metrics().completed.load(std::sync::atomic::Ordering::Relaxed), 1);
+        ModelRegistry::drain(&old, std::time::Duration::from_secs(5)).unwrap();
+        drop(old);
+        // new engine serves; generation is visible in the report
+        reg.infer(img(2)).unwrap();
+        assert!(reg.metrics_report().contains("gen=1"), "{}", reg.metrics_report());
+        // and the off-thread build path completes the whole protocol
+        let model2 = model.clone();
+        reg.hot_swap("m", move || {
+            Ok(Engine::builder()
+                .native(&model2)
+                .kernel(Kernel::Scalar)
+                .workers(1)
+                .batcher(BatcherConfig::default())
+                .build()?)
+        })
+        .join()
+        .unwrap()
+        .unwrap();
+        assert!(reg.metrics_report().contains("gen=2"), "{}", reg.metrics_report());
+        reg.infer(img(3)).unwrap();
     }
 
     #[test]

@@ -341,7 +341,7 @@ mod tests {
             .wait()
             .unwrap();
         assert_eq!(r.top_k, crate::coordinator::request::top_k_i32(&want, 3));
-        assert_eq!(r.top_k[0].0, r.digit as u16);
+        assert_eq!(r.top_k[0].0, r.digit);
         assert_eq!(r.logits, want);
         coord.shutdown();
     }

@@ -17,9 +17,10 @@
 //!
 //! ```text
 //!   request :  0xC1  features top_k  id[8 LE]  n_images[2 LE]  n_bits[4 LE]
+//!              [FEAT_MODEL: name_len + name_len × UTF-8 bytes]
 //!              then n_images × ceil(n_bits/8) payload bytes
 //!   response:  0xC2  status features top_k  id[8 LE]  n_items[2 LE]
-//!              then per item: item_id[8 LE] digit lat[4 LE, µs]
+//!              then per item: item_id[8 LE] digit[2 LE] lat[4 LE, µs]
 //!                [FEAT_LOGITS: n[2 LE] + n × i32 LE]
 //!                [FEAT_TOPK  : k + k × (class u16 LE, logit i32 LE)]
 //! ```
@@ -56,7 +57,16 @@ pub const PAYLOAD_BYTES: usize = IMAGE_BITS.div_ceil(8); // 98
 /// v2 feature bits (request byte 1, echoed in responses).
 pub const FEAT_LOGITS: u8 = 0x01;
 pub const FEAT_TOPK: u8 = 0x02;
-pub const FEAT_MASK: u8 = FEAT_LOGITS | FEAT_TOPK;
+/// The request carries a model-name section (1 length byte + that many
+/// UTF-8 bytes) between the fixed head and the payloads, naming the
+/// registry model to serve it.  Echoed in responses but response frames
+/// never carry a name section.  Absent ⇒ the server's default model, so
+/// pre-registry clients are untouched.
+pub const FEAT_MODEL: u8 = 0x04;
+pub const FEAT_MASK: u8 = FEAT_LOGITS | FEAT_TOPK | FEAT_MODEL;
+
+/// Model names on the wire are 1..=64 bytes of UTF-8.
+pub const MAX_MODEL_NAME: usize = 64;
 
 /// Hard protocol limits — anything beyond them is a [`WireStatus::TooLarge`]
 /// error, not an attempted allocation.
@@ -83,6 +93,8 @@ pub enum WireStatus {
     Overloaded = 6,
     /// The connection sat idle past the server's read timeout mid-frame.
     Timeout = 7,
+    /// The request named a model the server's registry does not have.
+    UnknownModel = 8,
     /// A status byte this build does not know (forward compatibility).
     Unknown = 255,
 }
@@ -98,6 +110,7 @@ impl WireStatus {
             5 => WireStatus::BadFeature,
             6 => WireStatus::Overloaded,
             7 => WireStatus::Timeout,
+            8 => WireStatus::UnknownModel,
             _ => WireStatus::Unknown,
         }
     }
@@ -112,19 +125,29 @@ impl WireStatus {
             WireStatus::BadFeature => "bad-feature",
             WireStatus::Overloaded => "overloaded",
             WireStatus::Timeout => "idle-timeout",
+            WireStatus::UnknownModel => "unknown-model",
             WireStatus::Unknown => "unknown-status",
         }
     }
 }
 
-/// Map an engine submit/wait error onto the wire taxonomy: queue-cap
-/// rejections (the coordinator's "queue full (…)" refusals, counted
-/// `rejected` in the metrics ledger) become [`WireStatus::Overloaded`];
-/// everything else is a generic [`WireStatus::Backend`].  The vendored
-/// `anyhow` subset has no downcasting, but `{e:#}` renders the full
-/// context chain, so the match is a substring test.
+/// Map an engine/registry submit/wait error onto the wire taxonomy:
+/// admission refusals — the coordinator's "queue full (…)", the worker
+/// pool's "shard N full (…)" and the registry's "quota exceeded (…)", all
+/// counted `rejected` in the metrics ledger — become
+/// [`WireStatus::Overloaded`]; a registry lookup miss ("unknown model …")
+/// becomes [`WireStatus::UnknownModel`]; everything else is a generic
+/// [`WireStatus::Backend`].  The vendored `anyhow` subset has no
+/// downcasting, but `{e:#}` renders the full context chain, so the match
+/// is a substring test.
 pub(crate) fn submit_error_status(e: &anyhow::Error) -> WireStatus {
-    if format!("{e:#}").contains("queue full") {
+    let chain = format!("{e:#}");
+    if chain.contains("unknown model") {
+        WireStatus::UnknownModel
+    } else if chain.contains("queue full")
+        || chain.contains(" full (")
+        || chain.contains("quota exceeded")
+    {
         WireStatus::Overloaded
     } else {
         WireStatus::Backend
@@ -295,6 +318,9 @@ pub fn decode_response(frame: &[u8; 7]) -> Result<WireResponse> {
 pub struct WireRequestV2 {
     pub id: u64,
     pub opts: InferOptions,
+    /// Registry model to serve this frame ([`FEAT_MODEL`] section);
+    /// `None` ⇒ the server's default model.
+    pub model: Option<String>,
     pub images: Vec<Packed>,
 }
 
@@ -303,7 +329,9 @@ pub struct WireRequestV2 {
 pub struct WireItem {
     /// Echoed id: the frame id plus the image's index within its batch.
     pub id: u64,
-    pub digit: u8,
+    /// u16 like the top-k class carrier: a >255-class model's argmax rides
+    /// the wire unwrapped (2 LE bytes per item since the digit widening).
+    pub digit: u16,
     pub latency_us: u32,
     /// Present iff the request set [`FEAT_LOGITS`].
     pub logits: Vec<i32>,
@@ -321,20 +349,22 @@ pub struct WireResponseV2 {
     pub items: Vec<WireItem>,
 }
 
-/// The v2 `(features, top_k)` header bytes for a set of options.
-pub fn encode_features(opts: &InferOptions) -> (u8, u8) {
+/// The v2 `(features, top_k)` header bytes for a set of options.  Typed
+/// error (never a silent wrap) when `top_k` exceeds the one-byte carrier.
+pub fn encode_features(opts: &InferOptions) -> Result<(u8, u8)> {
     let mut features = 0u8;
     if opts.include_logits {
         features |= FEAT_LOGITS;
     }
     let k = match opts.top_k {
         Some(k) => {
+            anyhow::ensure!((1..=255).contains(&k), "top_k must be in 1..=255, got {k}");
             features |= FEAT_TOPK;
             k as u8
         }
         None => 0,
     };
-    (features, k)
+    Ok((features, k))
 }
 
 fn decode_features(features: u8, top_k: u8) -> InferOptions {
@@ -347,7 +377,26 @@ fn decode_features(features: u8, top_k: u8) -> InferOptions {
 /// Encode a v2 request frame: `id` is echoed back, image `i` answers as
 /// `id + i`.  All images must share one width in `1..=MAX_WIRE_BITS`.
 pub fn encode_request_v2(images: &[Packed], id: u64, opts: InferOptions) -> Result<Vec<u8>> {
+    encode_request_v2_for(images, id, opts, None)
+}
+
+/// [`encode_request_v2`] addressed to a named registry model: sets
+/// [`FEAT_MODEL`] and inserts the name section between the head and the
+/// payloads.  `None` encodes the plain frame (default model).
+pub fn encode_request_v2_for(
+    images: &[Packed],
+    id: u64,
+    opts: InferOptions,
+    model: Option<&str>,
+) -> Result<Vec<u8>> {
     anyhow::ensure!(!images.is_empty(), "a v2 frame needs ≥ 1 image");
+    if let Some(name) = model {
+        anyhow::ensure!(
+            (1..=MAX_MODEL_NAME).contains(&name.len()),
+            "model name must be 1..={MAX_MODEL_NAME} bytes, got {}",
+            name.len()
+        );
+    }
     anyhow::ensure!(
         images.len() <= MAX_WIRE_BATCH,
         "{} images exceed the per-frame batch limit {MAX_WIRE_BATCH}",
@@ -365,10 +414,10 @@ pub fn encode_request_v2(images: &[Packed], id: u64, opts: InferOptions) -> Resu
             img.n_bits
         );
     }
-    if let Some(k) = opts.top_k {
-        anyhow::ensure!((1..=255).contains(&k), "top_k must be in 1..=255, got {k}");
+    let (mut features, top_k) = encode_features(&opts)?;
+    if model.is_some() {
+        features |= FEAT_MODEL;
     }
-    let (features, top_k) = encode_features(&opts);
     let mut frame = Vec::with_capacity(17 + images.len() * payload_bytes(n_bits));
     frame.push(MAGIC_REQ_V2);
     frame.push(features);
@@ -376,6 +425,10 @@ pub fn encode_request_v2(images: &[Packed], id: u64, opts: InferOptions) -> Resu
     frame.extend_from_slice(&id.to_le_bytes());
     frame.extend_from_slice(&(images.len() as u16).to_le_bytes());
     frame.extend_from_slice(&(n_bits as u32).to_le_bytes());
+    if let Some(name) = model {
+        frame.push(name.len() as u8);
+        frame.extend_from_slice(name.as_bytes());
+    }
     for img in images {
         frame.extend_from_slice(&bits_to_payload(img));
     }
@@ -464,12 +517,48 @@ pub(crate) fn parse_v2_header(head: &[u8; 16]) -> Result<V2Header, WireError> {
     })
 }
 
+/// Validate a [`FEAT_MODEL`] section length byte.  Shared by the blocking
+/// reader and the async server's incremental parser (which needs the check
+/// before the frame's total size is even known).
+pub(crate) fn check_model_name_len(len: usize) -> Result<(), WireError> {
+    if len == 0 {
+        return Err(WireError::new(
+            WireStatus::BadLength,
+            "FEAT_MODEL set with an empty model name",
+        ));
+    }
+    if len > MAX_MODEL_NAME {
+        return Err(WireError::new(
+            WireStatus::TooLarge,
+            format!("model name of {len} bytes exceeds the limit {MAX_MODEL_NAME}"),
+        ));
+    }
+    Ok(())
+}
+
+/// Decode a [`FEAT_MODEL`] name section body (length already validated).
+pub(crate) fn parse_model_name(bytes: &[u8]) -> Result<String, WireError> {
+    std::str::from_utf8(bytes)
+        .map(str::to_string)
+        .map_err(|_| WireError::new(WireStatus::BadLength, "model name is not valid UTF-8"))
+}
+
 /// Read and validate a v2 request body from `r` — the magic byte has
 /// already been consumed by the dispatcher.
 pub fn read_request_v2_body(r: &mut impl Read) -> Result<WireRequestV2, WireError> {
     let mut head = [0u8; 16];
     r.read_exact(&mut head).map_err(truncated("v2 header"))?;
     let h = parse_v2_header(&head)?;
+    let model = if h.features & FEAT_MODEL != 0 {
+        let mut len_b = [0u8; 1];
+        r.read_exact(&mut len_b).map_err(truncated("model name length"))?;
+        check_model_name_len(len_b[0] as usize).map_err(|e| e.with_id(h.id))?;
+        let mut name = vec![0u8; len_b[0] as usize];
+        r.read_exact(&mut name).map_err(truncated("model name"))?;
+        Some(parse_model_name(&name).map_err(|e| e.with_id(h.id))?)
+    } else {
+        None
+    };
     let pb = payload_bytes(h.n_bits);
     let mut payload = vec![0u8; pb];
     let mut images = Vec::with_capacity(h.n_images);
@@ -488,6 +577,7 @@ pub fn read_request_v2_body(r: &mut impl Read) -> Result<WireRequestV2, WireErro
     Ok(WireRequestV2 {
         id: h.id,
         opts: h.opts(),
+        model,
         images,
     })
 }
@@ -524,7 +614,7 @@ pub fn encode_response_v2(
             );
         }
     }
-    let mut f = Vec::with_capacity(14 + items.len() * 13);
+    let mut f = Vec::with_capacity(14 + items.len() * 14);
     f.push(MAGIC_RESP_V2);
     f.push(status as u8);
     f.push(features);
@@ -533,7 +623,7 @@ pub fn encode_response_v2(
     f.extend_from_slice(&(items.len() as u16).to_le_bytes());
     for it in items {
         f.extend_from_slice(&it.id.to_le_bytes());
-        f.push(it.digit);
+        f.extend_from_slice(&it.digit.to_le_bytes());
         f.extend_from_slice(&it.latency_us.to_le_bytes());
         if features & FEAT_LOGITS != 0 {
             f.extend_from_slice(&(it.logits.len() as u16).to_le_bytes());
@@ -587,15 +677,15 @@ pub fn read_response_v2(r: &mut impl Read) -> Result<WireResponseV2, WireError> 
     }
     let mut items = Vec::with_capacity(n_items);
     for i in 0..n_items {
-        let mut fixed = [0u8; 13];
+        let mut fixed = [0u8; 14];
         r.read_exact(&mut fixed)
             .map_err(|e| {
                 WireError::new(WireStatus::BadLength, format!("truncated response item {i}: {e}"))
                     .with_id(id)
             })?;
         let item_id = u64::from_le_bytes(fixed[0..8].try_into().unwrap());
-        let digit = fixed[8];
-        let latency_us = u32::from_le_bytes(fixed[9..13].try_into().unwrap());
+        let digit = u16::from_le_bytes([fixed[8], fixed[9]]);
+        let latency_us = u32::from_le_bytes(fixed[10..14].try_into().unwrap());
         let logits = if features & FEAT_LOGITS != 0 {
             let mut nb = [0u8; 2];
             r.read_exact(&mut nb).map_err(truncated("logits length"))?;
@@ -649,6 +739,33 @@ pub fn read_response_v2(r: &mut impl Read) -> Result<WireResponseV2, WireError> 
 
 // ---------------------------------------------------------------------------
 // server
+
+/// Where a wire server sends the requests it parses: one [`InferService`]
+/// (the pre-registry shape — [`FEAT_MODEL`] names are accepted and
+/// ignored, there is nothing to route between) or a
+/// [`super::ModelRegistry`] that routes by the frame's model name
+/// (absent ⇒ the registry's default model, unknown ⇒
+/// [`WireStatus::UnknownModel`]).  Shared by the blocking and async
+/// servers so the two front ends cannot drift on routing semantics.
+#[derive(Clone)]
+pub enum Dispatch {
+    Single(Arc<dyn InferService>),
+    Registry(Arc<super::router::ModelRegistry>),
+}
+
+impl Dispatch {
+    pub(crate) fn submit(
+        &self,
+        model: Option<&str>,
+        image: Packed,
+        opts: InferOptions,
+    ) -> Result<Ticket> {
+        match self {
+            Dispatch::Single(s) => s.submit_with(image, opts),
+            Dispatch::Registry(r) => r.submit_to(model, image, opts),
+        }
+    }
+}
 
 /// Connection policy shared by the blocking and async servers.
 #[derive(Clone, Copy, Debug)]
@@ -715,7 +832,29 @@ impl WireServer {
         service: Arc<S>,
         cfg: WireServerConfig,
     ) -> Result<WireServer> {
-        let service: Arc<dyn InferService> = service;
+        Self::start_dispatch(addr, Dispatch::Single(service), cfg)
+    }
+
+    /// Serve a [`super::ModelRegistry`]: v2 frames route by their
+    /// [`FEAT_MODEL`] name, nameless frames (and all of v1) go to the
+    /// registry's default model.
+    pub fn start_registry(
+        addr: &str,
+        registry: Arc<super::router::ModelRegistry>,
+    ) -> Result<WireServer> {
+        Self::start_dispatch(addr, Dispatch::Registry(registry), WireServerConfig::default())
+    }
+
+    /// [`Self::start_registry`] with an explicit connection policy.
+    pub fn start_registry_with(
+        addr: &str,
+        registry: Arc<super::router::ModelRegistry>,
+        cfg: WireServerConfig,
+    ) -> Result<WireServer> {
+        Self::start_dispatch(addr, Dispatch::Registry(registry), cfg)
+    }
+
+    fn start_dispatch(addr: &str, dispatch: Dispatch, cfg: WireServerConfig) -> Result<WireServer> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -741,11 +880,11 @@ impl WireServer {
                             }
                             t_metrics.conn_open.fetch_add(1, Ordering::SeqCst);
                             let guard = OpenConnGuard(t_metrics.clone());
-                            let service = service.clone();
+                            let dispatch = dispatch.clone();
                             let served = t_served.clone();
                             std::thread::spawn(move || {
                                 let _guard = guard;
-                                let _ = handle_conn(stream, service, served, cfg.idle_timeout);
+                                let _ = handle_conn(stream, dispatch, served, cfg.idle_timeout);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -788,7 +927,7 @@ impl Drop for WireServer {
 
 fn handle_conn(
     mut stream: TcpStream,
-    service: Arc<dyn InferService>,
+    dispatch: Dispatch,
     served: Arc<AtomicU64>,
     idle_timeout: std::time::Duration,
 ) -> Result<()> {
@@ -811,8 +950,8 @@ fn handle_conn(
             Err(e) => return Err(e.into()),
         }
         match magic[0] {
-            MAGIC_REQ => handle_v1(&mut stream, &service, &served)?,
-            MAGIC_REQ_V2 => handle_v2(&mut stream, &service, &served)?,
+            MAGIC_REQ => handle_v1(&mut stream, &dispatch, &served)?,
+            MAGIC_REQ_V2 => handle_v2(&mut stream, &dispatch, &served)?,
             m => {
                 // version unknown, so answer in the lowest common form and
                 // drop the connection (framing can't be trusted any more)
@@ -825,7 +964,7 @@ fn handle_conn(
 
 fn handle_v1(
     stream: &mut TcpStream,
-    service: &Arc<dyn InferService>,
+    dispatch: &Dispatch,
     served: &Arc<AtomicU64>,
 ) -> Result<()> {
     // mid-frame reads: a stall here is a slow-loris, not idleness between
@@ -855,11 +994,17 @@ fn handle_v1(
     // copy never happens — the v1 serve loop is allocation-free end to
     // end (`BnnModel::predict_into` semantics through the engine).
     match decode_payload(&payload)
-        .and_then(|img| service.infer_with(img, InferOptions::digits_only()))
+        .and_then(|img| dispatch.submit(None, img, InferOptions::digits_only()))
+        .and_then(Ticket::wait)
     {
+        // the v1 digit field is one byte: a >255-class argmax gets a typed
+        // refusal, never a wrapped digit (v2 carries the u16)
+        Ok(resp) if resp.digit > u8::MAX as u16 => {
+            stream.write_all(&encode_error(WireStatus::TooLarge))?;
+        }
         Ok(resp) => {
             let us = (resp.latency_ns / 1000).min(u32::MAX as u64) as u32;
-            stream.write_all(&encode_response(resp.digit, us))?;
+            stream.write_all(&encode_response(resp.digit as u8, us))?;
             served.fetch_add(1, Ordering::Relaxed);
         }
         // typed refusal: queue-cap rejections surface as Overloaded so an
@@ -871,7 +1016,7 @@ fn handle_v1(
 
 fn handle_v2(
     stream: &mut TcpStream,
-    service: &Arc<dyn InferService>,
+    dispatch: &Dispatch,
     served: &Arc<AtomicU64>,
 ) -> Result<()> {
     let req = match read_request_v2_body(stream) {
@@ -883,10 +1028,13 @@ fn handle_v2(
             return Err(e.into());
         }
     };
-    let (features, top_k) = encode_features(&req.opts);
-    // submit the whole frame before waiting on anything, so the dynamic
-    // batcher sees the batch as one burst
+    let (mut features, top_k) =
+        encode_features(&req.opts).expect("wire-decoded options always re-encode");
+    if req.model.is_some() {
+        features |= FEAT_MODEL;
+    }
     let opts = req.opts;
+    let model = req.model.as_deref();
     // Submit the whole frame before waiting on anything (one burst for
     // the dynamic batcher), with no short-circuit at either stage: every
     // submit is attempted and every created ticket is waited, even when
@@ -895,7 +1043,7 @@ fn handle_v2(
     let submitted: Vec<Result<Ticket>> = req
         .images
         .into_iter()
-        .map(|img| service.submit_with(img, opts))
+        .map(|img| dispatch.submit(model, img, opts))
         .collect();
     let waited: Vec<Result<InferResponse>> = submitted
         .into_iter()
@@ -976,6 +1124,18 @@ impl WireClient {
         Ok(items.pop().expect("one item per image"))
     }
 
+    /// [`Self::classify_v2`] addressed to a named registry model.
+    pub fn classify_model(
+        &mut self,
+        model: &str,
+        image: &Packed,
+        opts: InferOptions,
+    ) -> Result<WireItem> {
+        let mut items =
+            self.classify_batch_for(Some(model), std::slice::from_ref(image), opts)?;
+        Ok(items.pop().expect("one item per image"))
+    }
+
     /// One batched v2 frame: `images.len()` images in, one response frame
     /// with per-image ids/digits out.
     pub fn classify_batch(
@@ -983,8 +1143,20 @@ impl WireClient {
         images: &[Packed],
         opts: InferOptions,
     ) -> Result<Vec<WireItem>> {
+        self.classify_batch_for(None, images, opts)
+    }
+
+    /// [`Self::classify_batch`] addressed to a named registry model
+    /// (`None` ⇒ the server's default model).
+    pub fn classify_batch_for(
+        &mut self,
+        model: Option<&str>,
+        images: &[Packed],
+        opts: InferOptions,
+    ) -> Result<Vec<WireItem>> {
         let id = self.take_ids(images.len() as u64);
-        self.stream.write_all(&encode_request_v2(images, id, opts)?)?;
+        self.stream
+            .write_all(&encode_request_v2_for(images, id, opts, model)?)?;
         let resp = read_response_v2(&mut self.stream)?;
         anyhow::ensure!(
             resp.status == WireStatus::Ok,
@@ -1135,6 +1307,61 @@ mod tests {
     }
 
     #[test]
+    fn v2_model_name_section_roundtrip_and_validation() {
+        let imgs = vec![image_of(30, 64)];
+        // plain frames carry no name and decode to model: None
+        let frame = encode_request_v2(&imgs, 7, InferOptions::default()).unwrap();
+        assert_eq!(frame[1] & FEAT_MODEL, 0);
+        let req = read_request_v2_body(&mut std::io::Cursor::new(&frame[1..])).unwrap();
+        assert_eq!(req.model, None);
+
+        // named frames round-trip the name and stay fully consumed
+        let frame =
+            encode_request_v2_for(&imgs, 7, InferOptions::default().with_top_k(1), Some("mnist-a"))
+                .unwrap();
+        assert_ne!(frame[1] & FEAT_MODEL, 0);
+        let mut cur = std::io::Cursor::new(&frame[1..]);
+        let req = read_request_v2_body(&mut cur).unwrap();
+        assert_eq!(cur.position() as usize, frame.len() - 1, "frame fully consumed");
+        assert_eq!(req.model.as_deref(), Some("mnist-a"));
+        assert_eq!(req.images[0].words, imgs[0].words);
+
+        // encode-side limits: empty and oversized names refuse to encode
+        assert!(encode_request_v2_for(&imgs, 1, InferOptions::default(), Some("")).is_err());
+        let long = "m".repeat(MAX_MODEL_NAME + 1);
+        assert!(encode_request_v2_for(&imgs, 1, InferOptions::default(), Some(&long)).is_err());
+        // read-side: a hand-built frame with a 0-length or oversized name
+        // section is a typed error, and bad UTF-8 never becomes a String
+        let good = encode_request_v2_for(&imgs, 9, InferOptions::default(), Some("ab")).unwrap();
+        let mut zero = good.clone();
+        zero[17] = 0; // name_len byte
+        let e = read_request_v2_body(&mut std::io::Cursor::new(&zero[1..])).unwrap_err();
+        assert_eq!(e.status, WireStatus::BadLength, "{e}");
+        let mut oversized = good.clone();
+        oversized[17] = (MAX_MODEL_NAME + 1) as u8;
+        let e = read_request_v2_body(&mut std::io::Cursor::new(&oversized[1..])).unwrap_err();
+        assert_eq!(e.status, WireStatus::TooLarge, "{e}");
+        let mut bad_utf8 = good;
+        bad_utf8[18] = 0xFF;
+        bad_utf8[19] = 0xFE;
+        let e = read_request_v2_body(&mut std::io::Cursor::new(&bad_utf8[1..])).unwrap_err();
+        assert_eq!(e.status, WireStatus::BadLength, "{e}");
+    }
+
+    #[test]
+    fn submit_errors_map_to_typed_statuses() {
+        let s = |msg: &str| submit_error_status(&anyhow::anyhow!("{msg}"));
+        assert_eq!(s("queue full (64 queued, cap 64)"), WireStatus::Overloaded);
+        assert_eq!(s("shard 3 full (16 requests, cap 16)"), WireStatus::Overloaded);
+        assert_eq!(
+            s("model mnist-a quota exceeded (8 requests in flight)"),
+            WireStatus::Overloaded
+        );
+        assert_eq!(s("unknown model 'nope' (have: [\"mnist\"])"), WireStatus::UnknownModel);
+        assert_eq!(s("image width 65 does not match model width 784"), WireStatus::Backend);
+    }
+
+    #[test]
     fn v2_request_validation() {
         assert!(encode_request_v2(&[], 1, InferOptions::default()).is_err());
         // mixed widths refuse to encode
@@ -1163,7 +1390,19 @@ mod tests {
         // digit-only response: no logits/top-k bytes on the wire at all
         let bare = vec![WireItem { id: 1, digit: 7, latency_us: 2, logits: vec![], top_k: vec![] }];
         let frame = encode_response_v2(1, WireStatus::Ok, 0, 0, &bare).unwrap();
-        assert_eq!(frame.len(), 14 + 13);
+        assert_eq!(frame.len(), 14 + 14);
+
+        // a >255-class digit survives the round trip unwrapped
+        let wide = vec![WireItem {
+            id: 2,
+            digit: 399,
+            latency_us: 5,
+            logits: vec![],
+            top_k: vec![],
+        }];
+        let frame = encode_response_v2(2, WireStatus::Ok, 0, 0, &wide).unwrap();
+        let resp = read_response_v2(&mut std::io::Cursor::new(frame.as_slice())).unwrap();
+        assert_eq!(resp.items, wide);
         let resp = read_response_v2(&mut std::io::Cursor::new(frame.as_slice())).unwrap();
         assert_eq!(resp.items, bare);
 
@@ -1269,10 +1508,10 @@ mod tests {
             assert_eq!(r1.digit as usize, model.predict(&img.words), "v1 seed {seed}");
             assert_eq!(r1.status, 0);
             let r2 = client.classify_v2(&img, InferOptions::default().with_top_k(2)).unwrap();
-            assert_eq!(r2.digit, r1.digit, "v2 seed {seed}");
+            assert_eq!(r2.digit, r1.digit as u16, "v2 seed {seed}");
             assert_eq!(r2.logits, model.logits(&img.words));
             assert_eq!(r2.top_k.len(), 2);
-            assert_eq!(r2.top_k[0].0, r2.digit as u16);
+            assert_eq!(r2.top_k[0].0, r2.digit);
         }
         // one batched frame: per-image ids and digits
         let batch: Vec<Packed> = (10..17).map(image).collect();

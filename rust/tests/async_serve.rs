@@ -165,7 +165,7 @@ fn async_server_sustains_1024_concurrent_connections() {
     const CONNS: usize = 1024;
     let mut rng = Xoshiro256::new(9);
     let images: Vec<Packed> = (0..16).map(|_| rand_image(&mut rng, 784)).collect();
-    let digits: Vec<u8> = images.iter().map(|i| model.predict(&i.words) as u8).collect();
+    let digits: Vec<u16> = images.iter().map(|i| model.predict(&i.words) as u16).collect();
 
     let mut clients: Vec<WireClient> = Vec::with_capacity(CONNS);
     for i in 0..CONNS {
@@ -195,7 +195,7 @@ fn async_server_sustains_1024_concurrent_connections() {
                     if conn_idx % 2 == 0 {
                         let r = client.classify(&images[img_idx])?;
                         anyhow::ensure!(
-                            r.digit == digits[img_idx],
+                            u16::from(r.digit) == digits[img_idx],
                             "v1 digit {} ≠ {} on conn {conn_idx}",
                             r.digit,
                             digits[img_idx]
@@ -472,7 +472,8 @@ fn slow_loris_dribble_does_not_stall_well_behaved_clients() {
         .collect();
 
     let good_images: Vec<Packed> = (0..8).map(|_| rand_image(&mut rng, 784)).collect();
-    let good_digits: Vec<u8> = good_images.iter().map(|i| model.predict(&i.words) as u8).collect();
+    let good_digits: Vec<u16> =
+        good_images.iter().map(|i| model.predict(&i.words) as u16).collect();
 
     let still_dribbling = AtomicBool::new(true);
     std::thread::scope(|scope| {
@@ -504,7 +505,7 @@ fn slow_loris_dribble_does_not_stall_well_behaved_clients() {
                     let idx = (t + round) % good_images.len();
                     if round % 2 == 0 {
                         let r = client.classify(&good_images[idx]).unwrap();
-                        assert_eq!(r.digit, good_digits[idx]);
+                        assert_eq!(u16::from(r.digit), good_digits[idx]);
                     } else {
                         let item = client
                             .classify_v2(&good_images[idx], InferOptions::digits_only())
@@ -587,6 +588,41 @@ fn idle_timeout_surfaces_as_typed_status_async() {
     std::thread::sleep(Duration::from_millis(400));
     let r = client.classify(&img).unwrap();
     assert_eq!(r.digit as usize, model.predict(&img.words));
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// server-side observability
+
+#[test]
+fn async_server_records_latency_and_queue_wait_histograms() {
+    // the async server's own Metrics must carry real percentiles after
+    // traffic — the event loop records each resolved slot's latency and
+    // queue wait (they were silently empty before, so a dashboard reading
+    // this server saw p50 = p99 = 0)
+    let (model, engine) = engine_784(49);
+    let server = AsyncWireServer::start("127.0.0.1:0", engine).unwrap();
+    let mut client = WireClient::connect(server.addr).unwrap();
+    let mut rng = Xoshiro256::new(13);
+    const N: u64 = 24;
+    for i in 0..N {
+        let img = rand_image(&mut rng, 784);
+        if i % 2 == 0 {
+            let r = client.classify(&img).unwrap();
+            assert_eq!(r.digit as usize, model.predict(&img.words));
+        } else {
+            let item = client.classify_v2(&img, InferOptions::digits_only()).unwrap();
+            assert_eq!(item.digit as usize, model.predict(&img.words));
+        }
+    }
+    let m = server.metrics();
+    let lat = m.latency_snapshot();
+    assert_eq!(lat.count(), N, "one latency sample per served request");
+    assert!(lat.percentile_ns(50.0) > 0, "p50 must be non-zero after traffic");
+    assert!(lat.percentile_ns(99.0) > 0, "p99 must be non-zero after traffic");
+    assert!(lat.percentile_ns(99.0) >= lat.percentile_ns(50.0));
+    let wait = m.queue_wait_snapshot();
+    assert_eq!(wait.count(), N, "one queue-wait sample per served request");
     server.shutdown();
 }
 

@@ -1,0 +1,268 @@
+//! Multi-model serving acceptance (DESIGN.md §Model registry): the
+//! 400-class digit gate on every serving path (pool, blocking v2, async
+//! v2, with v1 refusing typed instead of truncating), registry routing by
+//! wire name with a typed unknown-model status on both servers, and the
+//! zero-downtime hot-swap guarantee — open-loop load across repeated
+//! swaps loses nothing, both ledgers balance, and the outgoing engines'
+//! pipeline stage threads all exit.  Everything here runs artifact-free.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bnn_fpga::bnn::model::random_model;
+use bnn_fpga::bnn::{BnnModel, Packed, DEFAULT_RING_CAP};
+use bnn_fpga::coordinator::{
+    run_open_loop, AsyncWireServer, BatcherConfig, Engine, InferOptions, Kernel, LoadConfig,
+    ModelRegistry, WireClient, WireServer, WireStatus,
+};
+use bnn_fpga::util::prng::Xoshiro256;
+
+fn rand_image(rng: &mut Xoshiro256, n_bits: usize) -> Packed {
+    let bits: Vec<u8> = (0..n_bits).map(|_| rng.bool() as u8).collect();
+    Packed::from_bits(&bits)
+}
+
+/// A random 784-bit image whose argmax under `model` satisfies `want`.
+fn find_image(model: &BnnModel, seed: u64, want: impl Fn(usize) -> bool) -> (Packed, usize) {
+    let mut rng = Xoshiro256::new(seed);
+    for _ in 0..2000 {
+        let img = rand_image(&mut rng, 784);
+        let d = model.predict(&img.words);
+        if want(d) {
+            return (img, d);
+        }
+    }
+    panic!("no random image satisfied the predicate within 2000 draws");
+}
+
+fn engine_for(model: &BnnModel, kernel: Kernel) -> Engine {
+    Engine::builder()
+        .native(model)
+        .kernel(kernel)
+        .workers(2)
+        .batcher(BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_micros(100),
+        })
+        .build()
+        .unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// satellite 1: the u8 digit-truncation family
+
+/// A 400-class model must serve its real argmax on the pool path and both
+/// v2 wire paths; v1 (one digit byte) must refuse >255 digits with a typed
+/// `too-large` error — and the connection must survive the refusal.
+#[test]
+fn four_hundred_class_models_serve_unwrapped_digits_everywhere() {
+    let model = random_model(&[784, 128, 400], 77);
+    // Classes are near-uniform under a random ±1 model, so both kinds of
+    // image show up within a few draws.
+    let (img_hi, digit_hi) = find_image(&model, 4001, |d| d > 255);
+    let (img_lo, digit_lo) = find_image(&model, 4002, |d| d <= 255);
+
+    // Pool path: InferResponse carries the u16 digit unwrapped.
+    let engine = Arc::new(engine_for(&model, Kernel::default()));
+    let resp = engine.infer(img_hi.clone()).unwrap();
+    assert_eq!(usize::from(resp.digit), digit_hi);
+    assert!(resp.digit > 255, "the gate image must exercise the widened type");
+
+    // Blocking wire server: v2 carries the u16; v1 refuses typed.
+    let server = WireServer::start("127.0.0.1:0", engine.clone()).unwrap();
+    let mut client = WireClient::connect(server.addr).unwrap();
+    let item = client.classify_v2(&img_hi, InferOptions::default()).unwrap();
+    assert_eq!(usize::from(item.digit), digit_hi);
+    let err = client.classify(&img_hi).unwrap_err();
+    assert!(
+        format!("{err:#}").contains(WireStatus::TooLarge.name()),
+        "v1 must refuse a >255 digit with a typed error, got: {err:#}"
+    );
+    // The refusal is per-request: the same connection keeps serving.
+    let ok = client.classify(&img_lo).unwrap();
+    assert_eq!(usize::from(ok.digit), digit_lo);
+    drop(client);
+    server.shutdown();
+
+    // Async wire server: same contract on both protocol versions.
+    let server = AsyncWireServer::start("127.0.0.1:0", engine.clone()).unwrap();
+    let mut client = WireClient::connect(server.addr).unwrap();
+    let item = client.classify_v2(&img_hi, InferOptions::default()).unwrap();
+    assert_eq!(usize::from(item.digit), digit_hi);
+    let err = client.classify(&img_hi).unwrap_err();
+    assert!(
+        format!("{err:#}").contains(WireStatus::TooLarge.name()),
+        "async v1 must refuse a >255 digit with a typed error, got: {err:#}"
+    );
+    let ok = client.classify(&img_lo).unwrap();
+    assert_eq!(usize::from(ok.digit), digit_lo);
+    drop(client);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// tentpole: wire-v2 model routing
+
+/// Nameless v2 frames and all v1 frames hit the default model; a
+/// `FEAT_MODEL` name routes to that engine; an unregistered name is a
+/// typed `unknown-model` status — on both server implementations.
+#[test]
+fn registry_routes_by_name_with_default_and_typed_unknown() {
+    let model_a = random_model(&[784, 32, 10], 1);
+    let model_b = random_model(&[784, 32, 10], 2);
+    // A probe the two models classify differently, so routing is
+    // observable from the digit alone.
+    let mut rng = Xoshiro256::new(1203);
+    let (probe, digit_a, digit_b) = loop {
+        let img = rand_image(&mut rng, 784);
+        let (da, db) = (model_a.predict(&img.words), model_b.predict(&img.words));
+        if da != db {
+            break (img, da, db);
+        }
+    };
+
+    let registry = Arc::new(ModelRegistry::new());
+    assert!(registry.register("a", engine_for(&model_a, Kernel::default())).is_none());
+    assert!(registry.register("b", engine_for(&model_b, Kernel::default())).is_none());
+    assert_eq!(registry.default_model().as_deref(), Some("a"));
+
+    let check = |addr: std::net::SocketAddr| {
+        let mut client = WireClient::connect(addr).unwrap();
+        // nameless v2 → the default model
+        let item = client.classify_v2(&probe, InferOptions::default()).unwrap();
+        assert_eq!(usize::from(item.digit), digit_a, "nameless v2 hits the default");
+        // named v2 → that model's engine
+        let item = client.classify_model("b", &probe, InferOptions::default()).unwrap();
+        assert_eq!(usize::from(item.digit), digit_b, "named v2 routes by name");
+        // unknown name → typed status, connection survives
+        let err = client.classify_model("missing", &probe, InferOptions::default()).unwrap_err();
+        assert!(
+            format!("{err:#}").contains(WireStatus::UnknownModel.name()),
+            "unregistered names must be typed, got: {err:#}"
+        );
+        // v1 cannot name a model and always hits the default
+        let resp = client.classify(&probe).unwrap();
+        assert_eq!(usize::from(resp.digit), digit_a, "v1 hits the default");
+    };
+
+    let server = WireServer::start_registry("127.0.0.1:0", registry.clone()).unwrap();
+    check(server.addr);
+    server.shutdown();
+
+    let server = AsyncWireServer::start_registry("127.0.0.1:0", registry.clone()).unwrap();
+    check(server.addr);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// tentpole + satellite 5: zero-downtime hot swap under open-loop load
+
+/// Swap the live engine three times while an open-loop generator offers
+/// named v2 traffic: no request may fail, every displaced engine's ledger
+/// must balance after its drain, the post-swap engine must answer with the
+/// replacement model's weights, and — engines here run the streaming
+/// pipelined kernel — every stage thread must exit once the engines drop.
+#[test]
+fn hot_swap_under_open_loop_load_drops_nothing() {
+    let model_a = random_model(&[784, 64, 10], 31);
+    let model_b = random_model(&[784, 64, 10], 32);
+    let mut rng = Xoshiro256::new(55);
+    let (probe, digit_a, digit_b) = loop {
+        let img = rand_image(&mut rng, 784);
+        let (da, db) = (model_a.predict(&img.words), model_b.predict(&img.words));
+        if da != db {
+            break (img, da, db);
+        }
+    };
+
+    // The pipelined tier spawns per-worker stage threads — exactly what the
+    // leak gauge at the end watches.  Deep queue so load shedding can never
+    // masquerade as a swap casualty.
+    let build = |m: &BnnModel| {
+        Engine::builder()
+            .native(m)
+            .kernel(Kernel::Pipelined {
+                ring_cap: DEFAULT_RING_CAP,
+            })
+            .workers(2)
+            .batcher(BatcherConfig {
+                max_batch: 32,
+                max_wait: Duration::from_micros(100),
+            })
+            .queue_cap(20_000)
+            .build()
+            .unwrap()
+    };
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("live", build(&model_a));
+    let server = AsyncWireServer::start_registry("127.0.0.1:0", registry.clone()).unwrap();
+
+    let mut client = WireClient::connect(server.addr).unwrap();
+    let before = client.classify_model("live", &probe, InferOptions::default()).unwrap();
+    assert_eq!(usize::from(before.digit), digit_a);
+
+    // Open-loop named traffic for 1.5 s; the swaps land in the middle.
+    let images: Vec<Packed> = (0..8).map(|_| rand_image(&mut rng, 784)).collect();
+    let cfg = LoadConfig {
+        addr: server.addr,
+        connections: 4,
+        rate: 800.0,
+        duration: Duration::from_millis(1500),
+        v1_fraction: 0.0,
+        seed: 99,
+        model: Some("live".to_string()),
+    };
+    let load = std::thread::spawn(move || run_open_loop(&images, &cfg));
+
+    std::thread::sleep(Duration::from_millis(200));
+    for (i, m) in [&model_b, &model_a, &model_b].into_iter().enumerate() {
+        // New submits land on the replacement the instant swap() returns;
+        // the displaced engine finishes its in-flight tickets and must
+        // settle to a balanced ledger.
+        let old = registry.swap("live", build(m)).unwrap();
+        ModelRegistry::drain(&old, Duration::from_secs(10)).unwrap();
+        let mm = old.metrics();
+        let (submitted, completed, rejected, cancelled) = (
+            mm.submitted.load(Ordering::SeqCst),
+            mm.completed.load(Ordering::SeqCst),
+            mm.rejected.load(Ordering::SeqCst),
+            mm.cancelled.load(Ordering::SeqCst),
+        );
+        assert_eq!(submitted, completed + rejected, "swap {i}: displaced ledger must balance");
+        assert_eq!(cancelled, 0, "swap {i}: the wire path waits every ticket");
+        drop(old);
+        std::thread::sleep(Duration::from_millis(150));
+    }
+
+    let report = load.join().expect("loadgen thread").expect("open-loop run");
+    assert!(report.sent > 0);
+    assert_eq!(report.errors, 0, "a hot swap must shed nothing: {report:?}");
+    assert_eq!(report.completed, report.sent, "every offered request must complete: {report:?}");
+
+    // The name now routes to the last replacement's weights.
+    let after = client.classify_model("live", &probe, InferOptions::default()).unwrap();
+    assert_eq!(usize::from(after.digit), digit_b);
+    assert_ne!(before.digit, after.digit, "the swap must be observable");
+
+    // The surviving engine's ledger balances once traffic stops.
+    let live = registry.engine("live").unwrap();
+    ModelRegistry::drain(&live, Duration::from_secs(10)).unwrap();
+    drop(live);
+
+    drop(client);
+    server.shutdown();
+    drop(registry);
+    // Four pipelined engines came and went; their stage threads must all
+    // have exited (this binary's other tests never use the pipelined tier,
+    // so the process-wide gauge is exclusively ours).
+    let t0 = Instant::now();
+    while bnn_fpga::bnn::pipeline::live_stage_threads() != 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "pipeline stage threads leaked across the swaps"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}

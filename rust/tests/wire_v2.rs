@@ -100,7 +100,9 @@ fn v2_response_roundtrip_random_payloads() {
             let items: Vec<WireItem> = (0..n_items)
                 .map(|i| WireItem {
                     id: seed.wrapping_add(i),
-                    digit: (rng.below(10)) as u8,
+                    // the full u16 carrier, not just 0..10: digits > 255
+                    // must survive the round trip since the u8 widening
+                    digit: rng.below(5000) as u16,
                     latency_us: rng.below(1 << 30) as u32,
                     logits: if with_logits {
                         (0..10).map(|_| rng.below(1 << 16) as i32 - (1 << 15)).collect()
@@ -230,7 +232,7 @@ fn batched_frame_matches_per_image_submission_bit_for_bit() {
         assert_eq!(b.logits, model.logits(&img.words), "image {i}");
         assert_eq!(b.top_k, s.top_k, "image {i}");
         assert_eq!(b.top_k.len(), 3);
-        assert_eq!(b.top_k[0].0, b.digit as u16);
+        assert_eq!(b.top_k[0].0, b.digit);
     }
     assert_eq!(server.served.load(Ordering::Relaxed), 18);
     server.shutdown();
@@ -322,9 +324,14 @@ fn malformed_frames_get_typed_errors_not_hangs() {
         h.extend_from_slice(&n_bits.to_le_bytes());
         h
     };
-    let cases: [(Vec<u8>, WireStatus); 4] = [
+    let cases: [(Vec<u8>, WireStatus); 6] = [
         (v2_head(0, 0, u16::MAX, 784), WireStatus::TooLarge),
         (v2_head(0, 0, 1, u32::MAX), WireStatus::TooLarge),
+        // exact boundaries: one past each limit is TooLarge (never a
+        // wrapped length), the limits themselves pass header validation
+        // (exercised separately below)
+        (v2_head(0, 0, (MAX_WIRE_BATCH + 1) as u16, 1), WireStatus::TooLarge),
+        (v2_head(0, 0, 1, (MAX_WIRE_BITS + 1) as u32), WireStatus::TooLarge),
         (v2_head(0, 0, 0, 784), WireStatus::BadLength),
         (v2_head(0xF0, 0, 1, 784), WireStatus::BadFeature),
     ];
@@ -376,4 +383,69 @@ fn oversize_batches_refuse_to_encode_client_side() {
     // and the v1 payload constant matches the v2 arithmetic at 784 bits
     assert_eq!(payload_bytes(784), PAYLOAD_BYTES);
     assert!(encode_request(&rand_image(&mut rng, 12)).is_err());
+}
+
+#[test]
+fn boundary_counts_encode_or_refuse_typed_never_wrap() {
+    use bnn_fpga::coordinator::wire::{
+        encode_features, FEAT_LOGITS, FEAT_TOPK, MAX_WIRE_CLASSES,
+    };
+    // the one-byte top-k carrier's exact bounds
+    assert!(encode_features(&InferOptions::default().with_top_k(255)).is_ok());
+    assert!(encode_features(&InferOptions::default().with_top_k(256)).is_err());
+    assert!(encode_features(&InferOptions::default().with_top_k(0)).is_err());
+
+    // response sections at their exact limits round-trip; one past refuses
+    // with a typed error instead of wrapping the length byte/word
+    let item = |top_k_len: usize, logits_len: usize| WireItem {
+        id: 1,
+        digit: 300,
+        latency_us: 5,
+        logits: vec![0; logits_len],
+        top_k: (0..top_k_len).map(|i| (i as u16, 0)).collect(),
+    };
+    let f = encode_response_v2(9, WireStatus::Ok, FEAT_TOPK, 255, &[item(255, 0)]).unwrap();
+    let resp = read_response_v2(&mut Cursor::new(f.as_slice())).unwrap();
+    assert_eq!(resp.items[0].top_k.len(), 255);
+    assert_eq!(resp.items[0].digit, 300, "a >255 digit rides the wire unwrapped");
+    assert!(encode_response_v2(9, WireStatus::Ok, FEAT_TOPK, 255, &[item(256, 0)]).is_err());
+    let f =
+        encode_response_v2(9, WireStatus::Ok, FEAT_LOGITS, 0, &[item(0, MAX_WIRE_CLASSES)])
+            .unwrap();
+    let resp = read_response_v2(&mut Cursor::new(f.as_slice())).unwrap();
+    assert_eq!(resp.items[0].logits.len(), MAX_WIRE_CLASSES);
+    assert!(encode_response_v2(9, WireStatus::Ok, FEAT_LOGITS, 0, &[item(0, MAX_WIRE_CLASSES + 1)])
+        .is_err());
+}
+
+#[test]
+fn batch_limit_boundary_passes_framing_end_to_end() {
+    // exactly MAX_WIRE_BATCH images passes header validation and reaches
+    // the backend (which refuses the width with a typed Backend error on
+    // this 784-bit server) — proving the count boundary is inclusive and
+    // never a framing failure or a hang
+    let (_model, engine) = engine_784();
+    let server = WireServer::start("127.0.0.1:0", engine).unwrap();
+    let mut rng = Xoshiro256::new(58);
+    let images: Vec<Packed> = (0..MAX_WIRE_BATCH).map(|_| rand_image(&mut rng, 1)).collect();
+    let frame = encode_request_v2(&images, 21, InferOptions::digits_only()).unwrap();
+    let mut s = raw_conn(server.addr);
+    s.write_all(&frame).unwrap();
+    let resp = read_response_v2(&mut s).unwrap();
+    assert_eq!(resp.status, WireStatus::Backend);
+    assert_eq!(resp.id, 21);
+    server.shutdown();
+}
+
+#[test]
+fn single_model_server_ignores_v2_model_names() {
+    // a server started on one engine (no registry) serves named requests
+    // as if the name were absent — model routing is a registry concern
+    let (model, engine) = engine_784();
+    let server = WireServer::start("127.0.0.1:0", engine).unwrap();
+    let mut client = WireClient::connect(server.addr).unwrap();
+    let img = rand_image(&mut Xoshiro256::new(59), 784);
+    let item = client.classify_model("anything", &img, InferOptions::digits_only()).unwrap();
+    assert_eq!(item.digit as usize, model.predict(&img.words));
+    server.shutdown();
 }
