@@ -186,6 +186,192 @@ def self_check():
     print("self-check: SIMD row-pair tile schedule == scalar at all edge widths")
 
 
+# --- binary convolution (model format v2) ----------------------------------
+#
+# Three independent implementations of the same binary conv layer are
+# cross-checked before anything is written:
+#
+#   naive_conv   — nested-loop ±1 definition with explicit bounds checks
+#                  (padding contributes −1, i.e. packs as bit 0);
+#   im2col_conv  — gather each receptive field into a (ky*k + kx)*C_in + c
+#                  bit vector and reuse the dense dot_z per output channel;
+#   packed_conv  — big-int model of the Rust lowering: contiguous-run bit
+#                  copies into packed words, XNOR-popcount per core row,
+#                  64-row threshold-pack, splice into the flat packed
+#                  output at bit pos*C_out + 64*panel.
+#
+# Activation bit layout everywhere: (y*W + x)*C + c (pixel-major,
+# channel-minor), so a 1×28×28 first layer consumes the existing 784-bit
+# row-major MNIST packing unchanged.
+
+
+def conv_out_dim(n, k, s, p):
+    return (n + 2 * p - k) // s + 1
+
+
+def random_conv_model(in_shape, convs, dense, seed):
+    """Mirror of bnn::conv::random_conv_model — one PRNG stream, conv
+    layers first (row-major rng.bool() per weight bit, zero thresholds),
+    then the dense stack exactly like random_model."""
+    rng = Xoshiro256(seed)
+    c, h, w = in_shape
+    conv_layers = []
+    for out_ch, k, stride, pad in convs:
+        patch = k * k * c
+        rows = [[1 if rng.bool() else 0 for _ in range(patch)] for _ in range(out_ch)]
+        conv_layers.append(
+            {
+                "rows": rows,
+                "in_ch": c,
+                "in_h": h,
+                "in_w": w,
+                "out_ch": out_ch,
+                "k": k,
+                "s": stride,
+                "p": pad,
+            }
+        )
+        h, w, c = conv_out_dim(h, k, stride, pad), conv_out_dim(w, k, stride, pad), out_ch
+    dims = [c * h * w] + list(dense)
+    dense_layers = []
+    for li in range(len(dims) - 1):
+        rows = [[1 if rng.bool() else 0 for _ in range(dims[li])] for _ in range(dims[li + 1])]
+        dense_layers.append((rows, li + 2 < len(dims)))
+    return conv_layers, dense_layers
+
+
+def naive_conv(layer, x_bits):
+    """Independent nested-loop reference: ±1 products, explicit bounds
+    checks, out-of-image pixels are −1, sign activation at threshold 0."""
+    C, H, W = layer["in_ch"], layer["in_h"], layer["in_w"]
+    k, s, p, OC = layer["k"], layer["s"], layer["p"], layer["out_ch"]
+    OH, OW = conv_out_dim(H, k, s, p), conv_out_dim(W, k, s, p)
+
+    def pm(y, x, c):
+        if 0 <= y < H and 0 <= x < W:
+            return 1 if x_bits[(y * W + x) * C + c] else -1
+        return -1  # padding packs as bit 0
+
+    out = []
+    for oy in range(OH):
+        for ox in range(OW):
+            for co in range(OC):
+                wrow = layer["rows"][co]
+                z = 0
+                for ky in range(k):
+                    for kx in range(k):
+                        for c in range(C):
+                            wv = 1 if wrow[(ky * k + kx) * C + c] else -1
+                            z += pm(oy * s - p + ky, ox * s - p + kx, c) * wv
+                out.append(1 if z >= 0 else 0)
+    return out, (OC, OH, OW)
+
+
+def im2col_conv(layer, x_bits):
+    """im2col lowering at the bit-list level: each patch becomes a
+    k*k*C_in bit vector (padding = bit 0) fed to the dense dot_z."""
+    C, H, W = layer["in_ch"], layer["in_h"], layer["in_w"]
+    k, s, p, OC = layer["k"], layer["s"], layer["p"], layer["out_ch"]
+    OH, OW = conv_out_dim(H, k, s, p), conv_out_dim(W, k, s, p)
+    out = []
+    for oy in range(OH):
+        for ox in range(OW):
+            patch = [0] * (k * k * C)
+            for ky in range(k):
+                for kx in range(k):
+                    y, x = oy * s - p + ky, ox * s - p + kx
+                    if 0 <= y < H and 0 <= x < W:
+                        for c in range(C):
+                            patch[(ky * k + kx) * C + c] = x_bits[(y * W + x) * C + c]
+            for co in range(OC):
+                out.append(1 if dot_z(patch, layer["rows"][co]) >= 0 else 0)
+    return out, (OC, OH, OW)
+
+
+def packed_conv(layer, x_bits):
+    """Big-int model of the Rust packed lowering (bnn::conv):
+
+    * per kernel row ky, the receptive field (iy, ix0..ix1)×C_in is one
+      contiguous run of bits at source offset (iy*W + ix0)*C_in, copied
+      to patch offset (ky*k + (ix0 − base_x))*C_in — edge rows clip the
+      run, padding stays 0;
+    * per core row: z = patch_bits − 2·popcount(patch ⊕ row);
+    * per 64-channel panel: threshold-pack (bit j = z ≥ 0) and splice the
+      u64 into the flat output at bit pos*C_out + 64·panel."""
+    C, H, W = layer["in_ch"], layer["in_h"], layer["in_w"]
+    k, s, p, OC = layer["k"], layer["s"], layer["p"], layer["out_ch"]
+    OH, OW = conv_out_dim(H, k, s, p), conv_out_dim(W, k, s, p)
+    n_patch = k * k * C
+    x_int = sum(b << i for i, b in enumerate(x_bits))
+    rows_int = [sum(b << i for i, b in enumerate(r)) for r in layer["rows"]]
+    out_int = 0
+    for oy in range(OH):
+        for ox in range(OW):
+            pos = oy * OW + ox
+            base_y, base_x = oy * s - p, ox * s - p
+            patch = 0
+            for ky in range(k):
+                iy = base_y + ky
+                if not 0 <= iy < H:
+                    continue
+                ix0, ix1 = max(base_x, 0), min(base_x + k, W)
+                if ix0 >= ix1:
+                    continue
+                run = (ix1 - ix0) * C
+                src_off = (iy * W + ix0) * C
+                dst_off = (ky * k + (ix0 - base_x)) * C
+                patch |= ((x_int >> src_off) & ((1 << run) - 1)) << dst_off
+            for panel in range((OC + 63) // 64):
+                word = 0
+                for j in range(min(64, OC - 64 * panel)):
+                    z = n_patch - 2 * bin(patch ^ rows_int[64 * panel + j]).count("1")
+                    word |= (1 if z >= 0 else 0) << j
+                out_int |= word << (pos * OC + 64 * panel)
+    return [(out_int >> i) & 1 for i in range(OH * OW * OC)], (OC, OH, OW)
+
+
+def forward_conv_model(conv_layers, dense_layers, x_bits):
+    """Full mixed conv→dense forward pass (packed-lowering conv fronts,
+    then the scalar dense reference)."""
+    a = list(x_bits)
+    for layer in conv_layers:
+        a, _ = packed_conv(layer, a)
+    return forward(dense_layers, a)
+
+
+def conv_self_check():
+    """naive ≡ im2col ≡ packed over kernel sizes {1,3,5} × strides {1,2}
+    × paddings {0,1} × odd channel counts (incl. a 64-panel straddle)."""
+    rng = Xoshiro256(0xBEEF)
+    checked = 0
+    for k in [1, 3, 5]:
+        for s in [1, 2]:
+            for p in [0, 1]:
+                for C, OC in [(1, 5), (3, 7), (2, 66)]:
+                    H = W = max(k - 2 * p, 5)
+                    layer_rows = [
+                        [1 if rng.bool() else 0 for _ in range(k * k * C)] for _ in range(OC)
+                    ]
+                    layer = {
+                        "rows": layer_rows,
+                        "in_ch": C,
+                        "in_h": H,
+                        "in_w": W,
+                        "out_ch": OC,
+                        "k": k,
+                        "s": s,
+                        "p": p,
+                    }
+                    x = [1 if rng.bool() else 0 for _ in range(C * H * W)]
+                    a, sa = naive_conv(layer, x)
+                    b, sb = im2col_conv(layer, x)
+                    c, sc = packed_conv(layer, x)
+                    assert sa == sb == sc, (k, s, p, C, OC)
+                    assert a == b == c, (k, s, p, C, OC)
+                    checked += 1
+    print(f"self-check: naive == im2col == packed conv over {checked} geometries")
+
+
 # --- fixture ---------------------------------------------------------------
 
 # Keep in sync with CASES in rust/tests/common/mod.rs (the regeneration
@@ -197,6 +383,55 @@ CASES = [
     ("aligned-128-64-10", [128, 64, 10], 2604, 9004, 4),
     ("single-layer-64-10", [64, 10], 2605, 9005, 4),
 ]
+
+
+# Keep in sync with CONV_CASES in rust/tests/common/mod.rs.  Each case is
+# (name, (in_ch, in_h, in_w), [(out_ch, k, stride, pad)...], dense_dims,
+# model_seed, input_seed, n_inputs).  Geometries cover the MNIST shape,
+# stride 2, a two-conv chain with C_in > 1, and a 1×1 conv whose 66
+# output channels straddle the 64-row panel boundary.
+CONV_CASES = [
+    ("mnist-conv3x3-8ch", (1, 28, 28), [(8, 3, 1, 1)], [64, 10], 3601, 9101, 4),
+    ("conv5x5-stride2", (1, 28, 28), [(6, 5, 2, 0)], [32, 10], 3602, 9102, 4),
+    ("conv-stack-3ch", (3, 9, 9), [(5, 3, 1, 1), (7, 3, 2, 0)], [33, 10], 3603, 9103, 4),
+    ("conv1x1-panel-straddle", (2, 6, 6), [(66, 1, 1, 0)], [17, 5], 3604, 9104, 4),
+]
+
+
+def build_conv_fixture():
+    cases = []
+    for name, in_shape, convs, dense, model_seed, input_seed, n_inputs in CONV_CASES:
+        conv_layers, dense_layers = random_conv_model(in_shape, convs, dense, model_seed)
+        n_in = in_shape[0] * in_shape[1] * in_shape[2]
+        inputs = gen_inputs(n_in, n_inputs, input_seed)
+        logits = []
+        for x in inputs:
+            # the committed logits go through the independent naive conv;
+            # the packed-lowering pass must agree bit-for-bit
+            a = list(x)
+            b = list(x)
+            for layer in conv_layers:
+                a, _ = naive_conv(layer, a)
+                b, _ = packed_conv(layer, b)
+                assert a == b, f"{name}: packed lowering diverged from naive conv"
+            logits.append(forward(dense_layers, a))
+        cases.append(
+            {
+                "convs": [list(c) for c in convs],
+                "dense": list(dense),
+                "in_shape": list(in_shape),
+                "input_seed": input_seed,
+                "logits": logits,
+                "model_seed": model_seed,
+                "n_inputs": n_inputs,
+                "name": name,
+            }
+        )
+    return {
+        "cases": cases,
+        "generator": "python/tools/gen_golden_vectors.py",
+        "version": 1,
+    }
 
 
 def build_fixture():
@@ -222,11 +457,9 @@ def build_fixture():
     }
 
 
-def main():
-    self_check()
-    fixture = build_fixture()
+def write_fixture(fixture, filename):
     out_path = os.path.join(
-        os.path.dirname(__file__), "..", "..", "rust", "tests", "golden", "golden_vectors.json"
+        os.path.dirname(__file__), "..", "..", "rust", "tests", "golden", filename
     )
     out_path = os.path.normpath(out_path)
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
@@ -237,6 +470,13 @@ def main():
         f.write(text)
     n_inputs = sum(c["n_inputs"] for c in fixture["cases"])
     print(f"wrote {out_path}: {len(fixture['cases'])} cases, {n_inputs} inputs")
+
+
+def main():
+    self_check()
+    conv_self_check()
+    write_fixture(build_fixture(), "golden_vectors.json")
+    write_fixture(build_conv_fixture(), "conv_golden_vectors.json")
 
 
 if __name__ == "__main__":

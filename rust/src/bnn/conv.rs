@@ -1,0 +1,478 @@
+//! Binary convolution layers (model format v2), lowered onto the dense
+//! XNOR-popcount machinery via **im2col-to-packed-words**.
+//!
+//! A [`BinaryConvLayer`] is a dense "core" ([`BinaryDenseLayer`] with
+//! `n_in = k²·C_in`, `n_out = C_out`, mandatory integer thresholds)
+//! plus spatial geometry.  Executing it gathers each output patch's
+//! receptive field into packed u64 words — one contiguous `k·C_in`-bit
+//! run per kernel row ([`packing::copy_bits`]), padding stays 0 (= −1)
+//! — and then every dense kernel tier applies unchanged per patch: the
+//! scalar/blocked paths via [`BinaryDenseLayer::z`], the fused tier via
+//! [`packing::xnor_threshold_pack`] over 64-channel panels (see
+//! `PreparedConvLayer` in [`super::model`]).  DESIGN.md §Binary
+//! convolution derives the layout math.
+//!
+//! Bit layouts (fixed by the format, shared with the Python generator):
+//!
+//! * activations: bit index `(y·W + x)·C + c` — pixel-major,
+//!   channel-minor, so a `1×28×28` first layer consumes the existing
+//!   784-bit row-major MNIST packing unchanged;
+//! * core weight rows: bit index `(ky·k + kx)·C_in + c` (the im2col
+//!   patch layout);
+//! * output geometry: `out = (in + 2·pad − k) / stride + 1` (floor),
+//!   sign activation `z ≥ θ` packs bit `(oy·out_w + ox)·C_out + c_out`.
+
+use anyhow::{bail, Result};
+
+use super::model::{BinaryDenseLayer, BnnModel};
+use super::packing;
+use crate::util::prng::Xoshiro256;
+
+/// Layer kind tag — the format-v2 `type` field and the introspection
+/// vocabulary (`weights.json` v1 files carry no tag and default to
+/// [`LayerKind::Dense`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Binary convolution ([`BinaryConvLayer`]).
+    Conv,
+    /// Binary dense / fully-connected ([`BinaryDenseLayer`]).
+    Dense,
+}
+
+impl LayerKind {
+    /// The format-v2 `type` string.
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerKind::Conv => "conv",
+            LayerKind::Dense => "dense",
+        }
+    }
+
+    /// Parse a format-v2 `type` string.
+    pub fn parse(s: &str) -> Option<LayerKind> {
+        match s {
+            "conv" => Some(LayerKind::Conv),
+            "dense" => Some(LayerKind::Dense),
+            _ => None,
+        }
+    }
+}
+
+/// Output spatial extent of one axis: `(n + 2p − k)/s + 1` (floor), or
+/// `None` when the kernel does not fit even once.
+pub fn conv_out_dim(n: usize, k: usize, stride: usize, pad: usize) -> Option<usize> {
+    if k == 0 || stride == 0 || n + 2 * pad < k {
+        return None;
+    }
+    Some((n + 2 * pad - k) / stride + 1)
+}
+
+/// One binary convolution layer: spatial geometry around a dense core of
+/// `C_out` packed weight rows × `k²·C_in` bits, with mandatory integer
+/// thresholds (every conv layer emits sign activations — the raw-sum
+/// output layer of a model is always dense, §3.4).
+#[derive(Clone, Debug)]
+pub struct BinaryConvLayer {
+    pub in_ch: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// The conv cores as a dense layer: `n_in = k²·in_ch` (im2col patch
+    /// bits), `n_out = C_out`, thresholds mandatory.
+    pub core: BinaryDenseLayer,
+}
+
+impl BinaryConvLayer {
+    /// Build and validate (geometry must admit ≥ 1 output position; the
+    /// core must match `k²·C_in` and carry thresholds).
+    pub fn new(
+        in_ch: usize,
+        in_h: usize,
+        in_w: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+        core: BinaryDenseLayer,
+    ) -> Result<Self> {
+        let layer = Self {
+            in_ch,
+            in_h,
+            in_w,
+            kernel,
+            stride,
+            pad,
+            core,
+        };
+        layer.validate()?;
+        Ok(layer)
+    }
+
+    /// Geometry/core consistency checks (also run by
+    /// [`BnnModel::validate`]).
+    pub fn validate(&self) -> Result<()> {
+        if self.in_ch == 0 || self.in_h == 0 || self.in_w == 0 {
+            bail!(
+                "conv input shape must be non-zero, got {}×{}×{}",
+                self.in_ch,
+                self.in_h,
+                self.in_w
+            );
+        }
+        if self.kernel == 0 {
+            bail!("conv kernel must be ≥ 1");
+        }
+        if self.stride == 0 {
+            bail!("conv stride must be ≥ 1");
+        }
+        if self.pad >= self.kernel {
+            bail!(
+                "conv pad {} must be < kernel {} (an all-padding patch is degenerate)",
+                self.pad,
+                self.kernel
+            );
+        }
+        if conv_out_dim(self.in_h, self.kernel, self.stride, self.pad).is_none()
+            || conv_out_dim(self.in_w, self.kernel, self.stride, self.pad).is_none()
+        {
+            bail!(
+                "conv kernel {} does not fit {}×{} input with pad {}",
+                self.kernel,
+                self.in_h,
+                self.in_w,
+                self.pad
+            );
+        }
+        if self.core.n_in != self.patch_bits() {
+            bail!(
+                "conv core has n_in {} but k²·C_in = {}",
+                self.core.n_in,
+                self.patch_bits()
+            );
+        }
+        if self.core.n_out == 0 {
+            bail!("conv layer needs ≥ 1 output channel");
+        }
+        if self.core.thresholds.is_none() {
+            bail!("conv layer missing thresholds (sign activation is mandatory)");
+        }
+        Ok(())
+    }
+
+    /// Output channels (`C_out` = core rows).
+    #[inline]
+    pub fn out_ch(&self) -> usize {
+        self.core.n_out
+    }
+
+    /// Output height.
+    #[inline]
+    pub fn out_h(&self) -> usize {
+        conv_out_dim(self.in_h, self.kernel, self.stride, self.pad).expect("validated geometry")
+    }
+
+    /// Output width.
+    #[inline]
+    pub fn out_w(&self) -> usize {
+        conv_out_dim(self.in_w, self.kernel, self.stride, self.pad).expect("validated geometry")
+    }
+
+    /// Output positions per image (`out_h × out_w`).
+    #[inline]
+    pub fn n_patches(&self) -> usize {
+        self.out_h() * self.out_w()
+    }
+
+    /// im2col patch width in bits (`k²·C_in` = the core's `n_in`).
+    #[inline]
+    pub fn patch_bits(&self) -> usize {
+        self.kernel * self.kernel * self.in_ch
+    }
+
+    /// Input activation bits (`C_in·H·W`).
+    #[inline]
+    pub fn in_bits(&self) -> usize {
+        self.in_ch * self.in_h * self.in_w
+    }
+
+    /// Output activation bits (`C_out·out_h·out_w`).
+    #[inline]
+    pub fn out_bits(&self) -> usize {
+        self.out_ch() * self.n_patches()
+    }
+
+    /// Gather output position `(oy, ox)`'s receptive field into `patch`
+    /// (pre-sized to the core's `words_per_row`; bits beyond
+    /// [`Self::patch_bits`] stay 0).  Each in-bounds kernel row is one
+    /// contiguous `run·C_in`-bit copy; padding rows/columns are skipped
+    /// and stay 0, which the XNOR-popcount treats as −1 — the binary
+    /// analogue of FINN-style −1 padding.
+    pub fn gather_patch(&self, x: &[u64], oy: usize, ox: usize, patch: &mut [u64]) {
+        patch.fill(0);
+        let (k, c) = (self.kernel, self.in_ch);
+        let base_y = (oy * self.stride) as isize - self.pad as isize;
+        let base_x = (ox * self.stride) as isize - self.pad as isize;
+        for ky in 0..k {
+            let iy = base_y + ky as isize;
+            if iy < 0 || iy >= self.in_h as isize {
+                continue;
+            }
+            let ix0 = base_x.max(0) as usize;
+            let ix1 = (base_x + k as isize).min(self.in_w as isize) as usize;
+            if ix0 >= ix1 {
+                continue;
+            }
+            let src = (iy as usize * self.in_w + ix0) * c;
+            let dst = (ky * k + (ix0 as isize - base_x) as usize) * c;
+            packing::copy_bits(patch, dst, x, src, (ix1 - ix0) * c);
+        }
+    }
+
+    /// Scalar-reference forward pass: packed input activations → packed
+    /// output activations (`out` must hold `words_u64(out_bits())` words;
+    /// `patch` is the reusable im2col arena).  Per patch this is exactly
+    /// the dense scalar walk — [`BinaryDenseLayer::z`] per output channel,
+    /// sign at the folded threshold — so every dense-tier equivalence
+    /// proof transfers per patch.
+    pub fn forward(&self, x: &[u64], out: &mut [u64], patch: &mut Vec<u64>) {
+        debug_assert!(x.len() >= packing::words_u64(self.in_bits()));
+        assert_eq!(out.len(), packing::words_u64(self.out_bits()), "conv output arena");
+        out.fill(0);
+        patch.clear();
+        patch.resize(self.core.words_per_row, 0);
+        let (oc, ow) = (self.out_ch(), self.out_w());
+        let thr = self.core.thresholds.as_ref().expect("validated: conv thresholds");
+        for oy in 0..self.out_h() {
+            for ox in 0..ow {
+                let pos = oy * ow + ox;
+                self.gather_patch(x, oy, ox, patch);
+                for (co, &t) in thr.iter().enumerate().take(oc) {
+                    if self.core.z(patch, co) >= t {
+                        let bit = pos * oc + co;
+                        out[bit / 64] |= 1u64 << (bit % 64);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Deterministic random mixed conv→dense model with zero thresholds — the
+/// conv counterpart of [`super::model::random_model`], mirrored
+/// draw-for-draw by `python/tools/gen_golden_vectors.py`
+/// (`random_conv_model`): one PRNG stream, conv layers first (row-major
+/// `rng.bool()` per weight bit in `(ky·k + kx)·C_in + c` order), then the
+/// dense stack on the flattened width.
+pub fn random_conv_model(
+    in_shape: (usize, usize, usize),
+    convs: &[(usize, usize, usize, usize)], // (out_ch, kernel, stride, pad)
+    dense: &[usize],
+    seed: u64,
+) -> BnnModel {
+    assert!(!convs.is_empty(), "need at least one conv layer");
+    assert!(!dense.is_empty(), "need at least the dense output layer");
+    let mut rng = Xoshiro256::new(seed);
+    let (mut c, mut h, mut w) = in_shape;
+    let mut conv_layers = Vec::new();
+    for &(out_ch, kernel, stride, pad) in convs {
+        let patch = kernel * kernel * c;
+        let rows_u32: Vec<Vec<u32>> = (0..out_ch)
+            .map(|_| {
+                let bits: Vec<u8> = (0..patch).map(|_| rng.bool() as u8).collect();
+                packing::pack_bits_u32(&bits)
+            })
+            .collect();
+        let core = BinaryDenseLayer::from_u32_rows(patch, &rows_u32, Some(vec![0i32; out_ch]))
+            .expect("random conv core is well-formed");
+        let layer = BinaryConvLayer::new(c, h, w, kernel, stride, pad, core)
+            .expect("random conv geometry is well-formed");
+        (c, h, w) = (out_ch, layer.out_h(), layer.out_w());
+        conv_layers.push(layer);
+    }
+    let mut dims = vec![c * h * w];
+    dims.extend_from_slice(dense);
+    let mut dense_layers = Vec::new();
+    for (li, pair) in dims.windows(2).enumerate() {
+        let rows_u32: Vec<Vec<u32>> = (0..pair[1])
+            .map(|_| {
+                let bits: Vec<u8> = (0..pair[0]).map(|_| rng.bool() as u8).collect();
+                packing::pack_bits_u32(&bits)
+            })
+            .collect();
+        let thr = (li + 2 < dims.len()).then(|| vec![0i32; pair[1]]);
+        dense_layers.push(
+            BinaryDenseLayer::from_u32_rows(pair[0], &rows_u32, thr)
+                .expect("random dense layer is well-formed"),
+        );
+    }
+    let model = BnnModel::with_conv(conv_layers, dense_layers);
+    model.validate().expect("random conv model is well-formed");
+    model
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::packing::{pack_bits_u64, unpack_bits_u64, words_u64};
+
+    /// Independent naive reference: nested loops over ±1 values with
+    /// explicit bounds checks (padding contributes −1), no packing, no
+    /// im2col — the same oracle the Python generator cross-checks.
+    pub(crate) fn naive_conv_bits(layer: &BinaryConvLayer, x_bits: &[u8]) -> Vec<u8> {
+        let (ci, h, w) = (layer.in_ch, layer.in_h, layer.in_w);
+        let (k, s, p) = (layer.kernel, layer.stride as isize, layer.pad as isize);
+        let oc = layer.out_ch();
+        let thr = layer.core.thresholds.as_ref().unwrap();
+        let weight_bit = |co: usize, bit: usize| -> i32 {
+            let row = layer.core.row(co);
+            if (row[bit / 64] >> (bit % 64)) & 1 == 1 {
+                1
+            } else {
+                -1
+            }
+        };
+        let mut out = Vec::new();
+        for oy in 0..layer.out_h() {
+            for ox in 0..layer.out_w() {
+                for co in 0..oc {
+                    let mut z = 0i32;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let iy = oy as isize * s - p + ky as isize;
+                            let ix = ox as isize * s - p + kx as isize;
+                            for c in 0..ci {
+                                let xv = if iy >= 0
+                                    && iy < h as isize
+                                    && ix >= 0
+                                    && ix < w as isize
+                                    && x_bits[(iy as usize * w + ix as usize) * ci + c] == 1
+                                {
+                                    1i32
+                                } else {
+                                    -1
+                                };
+                                z += xv * weight_bit(co, (ky * k + kx) * ci + c);
+                            }
+                        }
+                    }
+                    out.push(u8::from(z >= thr[co]));
+                }
+            }
+        }
+        out
+    }
+
+    fn random_layer(
+        rng: &mut Xoshiro256,
+        in_ch: usize,
+        in_h: usize,
+        in_w: usize,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+    ) -> BinaryConvLayer {
+        let patch = kernel * kernel * in_ch;
+        let rows: Vec<Vec<u32>> = (0..out_ch)
+            .map(|_| {
+                let bits: Vec<u8> = (0..patch).map(|_| rng.bool() as u8).collect();
+                packing::pack_bits_u32(&bits)
+            })
+            .collect();
+        let thr: Vec<i32> = (0..out_ch)
+            .map(|_| rng.range_i64(-(patch as i64), patch as i64) as i32)
+            .collect();
+        let core = BinaryDenseLayer::from_u32_rows(patch, &rows, Some(thr)).unwrap();
+        BinaryConvLayer::new(in_ch, in_h, in_w, kernel, stride, pad, core).unwrap()
+    }
+
+    #[test]
+    fn packed_forward_matches_naive_reference() {
+        // the im2col-to-packed-words lowering vs the nested-loop ±1
+        // oracle over kernel {1,3,5} × stride {1,2} × pad {0,1} ×
+        // channel counts off the 64-bit word grid
+        let mut rng = Xoshiro256::new(0xC04B);
+        for k in [1usize, 3, 5] {
+            for s in [1usize, 2] {
+                for p in [0usize, 1] {
+                    if p >= k {
+                        continue;
+                    }
+                    for (ci, co) in [(1usize, 5usize), (3, 7), (2, 66)] {
+                        let h = k.max(5);
+                        let layer = random_layer(&mut rng, ci, h, h, co, k, s, p);
+                        let x_bits: Vec<u8> =
+                            (0..layer.in_bits()).map(|_| rng.bool() as u8).collect();
+                        let x = pack_bits_u64(&x_bits);
+                        let mut out = vec![0u64; words_u64(layer.out_bits())];
+                        let mut patch = Vec::new();
+                        layer.forward(&x, &mut out, &mut patch);
+                        assert_eq!(
+                            unpack_bits_u64(&out, layer.out_bits()),
+                            naive_conv_bits(&layer, &x_bits),
+                            "k={k} s={s} p={p} ci={ci} co={co}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn geometry_accessors_match_the_formula() {
+        let mut rng = Xoshiro256::new(0x6E0);
+        let layer = random_layer(&mut rng, 1, 28, 28, 8, 3, 1, 1);
+        assert_eq!((layer.out_h(), layer.out_w()), (28, 28));
+        assert_eq!(layer.patch_bits(), 9);
+        assert_eq!(layer.in_bits(), 784);
+        assert_eq!(layer.out_bits(), 8 * 28 * 28);
+        let strided = random_layer(&mut rng, 1, 28, 28, 6, 5, 2, 0);
+        assert_eq!((strided.out_h(), strided.out_w()), (12, 12));
+        assert_eq!(conv_out_dim(4, 5, 1, 0), None);
+        assert_eq!(conv_out_dim(5, 5, 1, 0), Some(1));
+        assert_eq!(conv_out_dim(9, 3, 2, 0), Some(4));
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_geometry() {
+        let mut rng = Xoshiro256::new(0xBAD);
+        let good = random_layer(&mut rng, 2, 6, 6, 4, 3, 1, 1);
+        // kernel larger than the padded input
+        assert!(
+            BinaryConvLayer::new(2, 2, 2, 5, 1, 1, good.core.clone()).is_err(),
+            "kernel must fit"
+        );
+        // zero stride
+        assert!(BinaryConvLayer::new(2, 6, 6, 3, 0, 1, good.core.clone()).is_err());
+        // pad ≥ kernel
+        assert!(BinaryConvLayer::new(2, 6, 6, 3, 1, 3, good.core.clone()).is_err());
+        // core width mismatch (claims 1 input channel → patch 9 ≠ 18)
+        assert!(BinaryConvLayer::new(1, 6, 6, 3, 1, 1, good.core.clone()).is_err());
+        // missing thresholds
+        let mut raw = good.core.clone();
+        raw.thresholds = None;
+        assert!(BinaryConvLayer::new(2, 6, 6, 3, 1, 1, raw).is_err());
+    }
+
+    #[test]
+    fn layer_kind_round_trips() {
+        for kind in [LayerKind::Conv, LayerKind::Dense] {
+            assert_eq!(LayerKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(LayerKind::parse("pooling"), None);
+    }
+
+    #[test]
+    fn random_conv_model_is_deterministic_and_valid() {
+        let a = random_conv_model((1, 28, 28), &[(8, 3, 1, 1)], &[64, 10], 42);
+        let b = random_conv_model((1, 28, 28), &[(8, 3, 1, 1)], &[64, 10], 42);
+        assert!(a.validate().is_ok());
+        assert_eq!(a.conv.len(), 1);
+        assert_eq!(a.n_in(), 784);
+        assert_eq!(a.layers[0].n_in, 8 * 28 * 28);
+        assert_eq!(a.conv[0].core.weights, b.conv[0].core.weights);
+        let c = random_conv_model((1, 28, 28), &[(8, 3, 1, 1)], &[64, 10], 43);
+        assert_ne!(a.conv[0].core.weights, c.conv[0].core.weights);
+    }
+}

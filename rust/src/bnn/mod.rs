@@ -2,18 +2,20 @@
 //! software — the native backend and the reference the simulator and PJRT
 //! paths are checked against).
 
+pub mod conv;
 pub mod model;
 pub mod packing;
 pub mod pipeline;
 
+pub use conv::{conv_out_dim, random_conv_model, BinaryConvLayer, LayerKind};
 pub use model::{
-    random_model, BinaryDenseLayer, BnnModel, PreparedModel, PreparedPanelLayer, Scratch,
-    DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS, FUSED_PAR_MIN_CHUNK,
+    random_model, BinaryDenseLayer, BnnModel, PreparedConvLayer, PreparedModel,
+    PreparedPanelLayer, Scratch, DEFAULT_BLOCK_ROWS, DEFAULT_TILE_IMGS, FUSED_PAR_MIN_CHUNK,
 };
 pub use pipeline::{spsc_ring, RingDisconnected, RingReceiver, RingSender, DEFAULT_RING_CAP};
 pub use packing::{
-    pack_bits_u32, pack_bits_u64, simd_level, unpack_bits_u64, words_u32, words_u64, Packed,
-    SimdLevel, PANEL_ROWS,
+    copy_bits, pack_bits_u32, pack_bits_u64, read_bits, simd_level, splice_bits, unpack_bits_u64,
+    words_u32, words_u64, Packed, SimdLevel, PANEL_ROWS,
 };
 
 /// Argmax with lowest-index tie-break — exactly the FSM's iterative

@@ -7,6 +7,7 @@
 
 use anyhow::{bail, Result};
 
+use super::conv::BinaryConvLayer;
 use super::packing;
 use crate::util::prng::Xoshiro256;
 
@@ -105,9 +106,17 @@ impl BinaryDenseLayer {
     }
 }
 
-/// A full network: hidden layers (thresholded) then one logits layer.
+/// A full network: an optional binary-convolution prefix
+/// ([`BinaryConvLayer`], format v2), then hidden dense layers
+/// (thresholded), then one logits layer.  Dense-only models (`conv`
+/// empty) are exactly the v1 format and behave byte-identically.
 #[derive(Clone, Debug)]
 pub struct BnnModel {
+    /// Conv prefix, executed first (may be empty).  Every conv layer is
+    /// thresholded; the last one's `out_bits()` must equal
+    /// `layers[0].n_in`.
+    pub conv: Vec<BinaryConvLayer>,
+    /// The dense stack (hidden + output) — non-empty, exactly as v1.
     pub layers: Vec<BinaryDenseLayer>,
 }
 
@@ -136,14 +145,71 @@ pub struct Scratch {
     tb: Vec<u64>,
     /// Tiled path: `tile_imgs × block_rows` pre-activation sums.
     zt: Vec<i32>,
+    /// Conv front: reusable im2col patch arena (one packed patch row).
+    patch: Vec<u64>,
+    /// Conv front: packed-activation ping-pong between chained conv layers
+    /// (only grown when the model has ≥ 2 conv layers).
+    ca: Vec<u64>,
+    /// Conv front: the other half of the conv-chain ping-pong.
+    cb: Vec<u64>,
+    /// Conv front, batch paths: flat dense-level input arena
+    /// (`batch × dense_input_words`), filled once per batch so the dense
+    /// walk runs unchanged over it.
+    cf: Vec<u64>,
 }
 
 impl BnnModel {
-    /// Validate layer chaining (layer i's n_out feeds layer i+1's n_in, all
-    /// hidden layers thresholded, output layer not).
+    /// Dense-only model (the v1 format) — the conv prefix stays empty.
+    pub fn dense(layers: Vec<BinaryDenseLayer>) -> Self {
+        Self {
+            conv: Vec::new(),
+            layers,
+        }
+    }
+
+    /// Mixed conv→dense model (format v2).  Call [`Self::validate`] after
+    /// construction — the chain geometry is checked there.
+    pub fn with_conv(conv: Vec<BinaryConvLayer>, layers: Vec<BinaryDenseLayer>) -> Self {
+        Self { conv, layers }
+    }
+
+    /// Validate layer chaining: conv layers (if any) chain spatially and
+    /// flatten into the first dense layer; dense layer i's n_out feeds
+    /// layer i+1's n_in; all hidden layers thresholded, output layer not.
     pub fn validate(&self) -> Result<()> {
         if self.layers.is_empty() {
-            bail!("empty model");
+            bail!("empty model (the dense stack must hold at least the output layer)");
+        }
+        for (i, cl) in self.conv.iter().enumerate() {
+            if let Err(e) = cl.validate() {
+                bail!("conv layer {i}: {e}");
+            }
+            if i + 1 < self.conv.len() {
+                let next = &self.conv[i + 1];
+                let out_shape = (cl.out_ch(), cl.out_h(), cl.out_w());
+                let in_shape = (next.in_ch, next.in_h, next.in_w);
+                if out_shape != in_shape {
+                    bail!(
+                        "conv layer {i} outputs {}×{}×{} but conv layer {} expects {}×{}×{}",
+                        out_shape.0,
+                        out_shape.1,
+                        out_shape.2,
+                        i + 1,
+                        in_shape.0,
+                        in_shape.1,
+                        in_shape.2
+                    );
+                }
+            }
+        }
+        if let Some(last) = self.conv.last() {
+            if last.out_bits() != self.layers[0].n_in {
+                bail!(
+                    "conv prefix flattens to {} bits but the first dense layer expects {}",
+                    last.out_bits(),
+                    self.layers[0].n_in
+                );
+            }
         }
         for (i, pair) in self.layers.windows(2).enumerate() {
             if pair[0].n_out != pair[1].n_in {
@@ -165,8 +231,10 @@ impl BnnModel {
         Ok(())
     }
 
+    /// Model input width in bits: the conv prefix's image bits
+    /// (`C_in·H·W`) when present, else the first dense layer's `n_in`.
     pub fn n_in(&self) -> usize {
-        self.layers[0].n_in
+        self.conv.first().map_or(self.layers[0].n_in, |c| c.in_bits())
     }
 
     pub fn n_classes(&self) -> usize {
@@ -177,14 +245,94 @@ impl BnnModel {
         packing::words_u64(self.n_in())
     }
 
+    /// The dense stack's input width in bits (= the conv prefix's
+    /// flattened output; equals [`Self::n_in`] for dense-only models).
+    #[inline]
+    pub fn dense_n_in(&self) -> usize {
+        self.layers[0].n_in
+    }
+
+    /// Packed words per dense-level input row
+    /// (`words_u64(dense_n_in())`).
+    #[inline]
+    pub fn dense_input_words(&self) -> usize {
+        packing::words_u64(self.dense_n_in())
+    }
+
+    /// Total layer count across the conv prefix and the dense stack.
+    #[inline]
+    pub fn n_layers(&self) -> usize {
+        self.conv.len() + self.layers.len()
+    }
+
+    /// Input image geometry `(channels, height, width)` — `Some` only for
+    /// conv models, where the spatial shape is part of the format.
+    pub fn input_geometry(&self) -> Option<(usize, usize, usize)> {
+        self.conv.first().map(|c| (c.in_ch, c.in_h, c.in_w))
+    }
+
     /// Widest packed activation buffer needed between layers (incl. input).
     #[inline]
     pub fn max_act_words(&self) -> usize {
-        self.layers
+        let dense = self
+            .layers
             .iter()
             .map(|l| packing::words_u64(l.n_out).max(packing::words_u64(l.n_in)))
             .max()
-            .unwrap()
+            .unwrap();
+        let conv = self
+            .conv
+            .iter()
+            .map(|c| packing::words_u64(c.in_bits()).max(packing::words_u64(c.out_bits())))
+            .max()
+            .unwrap_or(0);
+        dense.max(conv)
+    }
+
+    /// Run the conv prefix on one packed image, leaving the dense-level
+    /// input in `dst` (`dense_input_words()` words).  Chained conv layers
+    /// ping-pong through the `ca`/`cb` arenas; the final layer writes
+    /// `dst` directly.  Must only be called when the prefix is non-empty.
+    fn conv_front_into(&self, x: &[u64], dst: &mut [u64], scratch: &mut Scratch) {
+        let (last, chain) = self.conv.split_last().expect("conv prefix is non-empty");
+        if chain.is_empty() {
+            return last.forward(x, dst, &mut scratch.patch);
+        }
+        let mut a = std::mem::take(&mut scratch.ca);
+        let mut b = std::mem::take(&mut scratch.cb);
+        a.clear();
+        a.resize(packing::words_u64(chain[0].out_bits()), 0);
+        chain[0].forward(x, &mut a, &mut scratch.patch);
+        for cl in &chain[1..] {
+            b.clear();
+            b.resize(packing::words_u64(cl.out_bits()), 0);
+            cl.forward(&a, &mut b, &mut scratch.patch);
+            std::mem::swap(&mut a, &mut b);
+        }
+        last.forward(&a, dst, &mut scratch.patch);
+        scratch.ca = a;
+        scratch.cb = b;
+    }
+
+    /// Conv front over a whole batch into the flat `cf` arena
+    /// (`batch × dense_input_words` row-major), returned to the caller so
+    /// the dense walk can borrow it alongside `scratch`.  Restore it with
+    /// `scratch.cf = cf` when done — the arena (like every `Scratch`
+    /// buffer) keeps its high-water capacity across batches.
+    fn conv_front_batch(&self, inputs: &[u64], batch: usize, scratch: &mut Scratch) -> Vec<u64> {
+        let iw = self.input_words();
+        let dw = self.dense_input_words();
+        let mut cf = std::mem::take(&mut scratch.cf);
+        cf.clear();
+        cf.resize(batch * dw, 0);
+        for i in 0..batch {
+            self.conv_front_into(
+                &inputs[i * iw..(i + 1) * iw],
+                &mut cf[i * dw..(i + 1) * dw],
+                scratch,
+            );
+        }
+        cf
     }
 
     /// Full forward pass: packed input words → integer logits (allocates).
@@ -219,6 +367,20 @@ impl BnnModel {
     /// ```
     pub fn logits_into(&self, x_words: &[u64], scratch: &mut Scratch, out: &mut [i32]) {
         debug_assert_eq!(x_words.len(), self.input_words());
+        if self.conv.is_empty() {
+            return self.dense_logits_into(x_words, scratch, out);
+        }
+        // conv front first (batch of 1 through the flat arena), then the
+        // unchanged dense walk over the flattened activations
+        let cf = self.conv_front_batch(x_words, 1, scratch);
+        self.dense_logits_into(&cf, scratch, out);
+        scratch.cf = cf;
+    }
+
+    /// The dense-stack scalar walk ([`Self::logits_into`] for dense-only
+    /// models; the conv front feeds it the flattened activations).
+    fn dense_logits_into(&self, x_words: &[u64], scratch: &mut Scratch, out: &mut [i32]) {
+        debug_assert_eq!(x_words.len(), self.dense_input_words());
         debug_assert_eq!(out.len(), self.n_classes());
         let max_words = self.max_act_words();
         scratch.a.clear();
@@ -276,6 +438,23 @@ impl BnnModel {
     ) {
         assert!(block_rows >= 1, "block_rows must be ≥ 1");
         debug_assert_eq!(x_words.len(), self.input_words());
+        if self.conv.is_empty() {
+            return self.dense_logits_into_blocked(x_words, scratch, out, block_rows);
+        }
+        let cf = self.conv_front_batch(x_words, 1, scratch);
+        self.dense_logits_into_blocked(&cf, scratch, out, block_rows);
+        scratch.cf = cf;
+    }
+
+    /// The dense-stack blocked walk (see [`Self::logits_into_blocked`]).
+    fn dense_logits_into_blocked(
+        &self,
+        x_words: &[u64],
+        scratch: &mut Scratch,
+        out: &mut [i32],
+        block_rows: usize,
+    ) {
+        debug_assert_eq!(x_words.len(), self.dense_input_words());
         debug_assert_eq!(out.len(), self.n_classes());
         let max_words = self.max_act_words();
         scratch.a.clear();
@@ -516,10 +695,35 @@ impl BnnModel {
     ) {
         assert!(block_rows >= 1, "block_rows must be ≥ 1");
         assert!(tile_imgs >= 1, "tile_imgs must be ≥ 1");
-        let iw = self.input_words();
-        assert_eq!(inputs.len(), batch * iw, "batch input length");
+        assert_eq!(inputs.len(), batch * self.input_words(), "batch input length");
+        assert_eq!(out.len(), batch * self.n_classes(), "batch output length");
+        if self.conv.is_empty() {
+            return self
+                .dense_batch_walk(inputs, batch, scratch, out, block_rows, tile_imgs, tile_kernel);
+        }
+        // conv front once per batch into the flat dense-level arena, then
+        // the unchanged weight-stationary dense walk streams over it
+        let cf = self.conv_front_batch(inputs, batch, scratch);
+        self.dense_batch_walk(&cf, batch, scratch, out, block_rows, tile_imgs, tile_kernel);
+        scratch.cf = cf;
+    }
+
+    /// The dense-stack weight-stationary batch walk (`inputs` is at the
+    /// dense level: `batch × dense_input_words` row-major).
+    #[allow(clippy::too_many_arguments)]
+    fn dense_batch_walk(
+        &self,
+        inputs: &[u64],
+        batch: usize,
+        scratch: &mut Scratch,
+        out: &mut [i32],
+        block_rows: usize,
+        tile_imgs: usize,
+        tile_kernel: fn(&[u64], usize, &[u64], usize, usize, &mut [i32], usize),
+    ) {
+        let iw = self.dense_input_words();
+        debug_assert_eq!(inputs.len(), batch * iw, "dense-level batch input length");
         let nc = self.n_classes();
-        assert_eq!(out.len(), batch * nc, "batch output length");
         let maxw = self.max_act_words();
         scratch.ta.resize(tile_imgs * maxw, 0);
         scratch.tb.resize(tile_imgs * maxw, 0);
@@ -715,20 +919,91 @@ impl PreparedPanelLayer {
     }
 }
 
+/// One conv layer prepared for the fused walk: the geometry rides along
+/// unchanged while the dense core is re-laid out into 64-channel
+/// [`PreparedPanelLayer`] panels — per output patch, each panel is one
+/// [`packing::xnor_threshold_pack`] call whose u64 result is spliced into
+/// the flat packed output at bit `pos·C_out + 64·panel`
+/// ([`packing::splice_bits`]; `C_out` need not be word-aligned).
+#[derive(Clone, Debug)]
+pub struct PreparedConvLayer {
+    layer: BinaryConvLayer,
+    panels: PreparedPanelLayer,
+}
+
+impl PreparedConvLayer {
+    fn from_layer(cl: &BinaryConvLayer) -> Result<Self> {
+        Ok(Self {
+            panels: PreparedPanelLayer::from_layer(&cl.core)?,
+            layer: cl.clone(),
+        })
+    }
+
+    /// The source conv layer (geometry + row-major core).
+    pub fn layer(&self) -> &BinaryConvLayer {
+        &self.layer
+    }
+
+    /// The core's 64-channel panel layout.
+    pub fn panels(&self) -> &PreparedPanelLayer {
+        &self.panels
+    }
+
+    /// Fused forward pass over one packed image: im2col gather per patch,
+    /// then threshold-pack per 64-channel panel straight into the packed
+    /// output — the per-channel `i32` sums never touch memory, exactly as
+    /// the dense fused tier.  Bit-identical to
+    /// [`BinaryConvLayer::forward`].
+    fn forward(&self, x: &[u64], out: &mut [u64], patch: &mut Vec<u64>) {
+        let cl = &self.layer;
+        debug_assert!(x.len() >= packing::words_u64(cl.in_bits()));
+        assert_eq!(out.len(), packing::words_u64(cl.out_bits()), "conv output arena");
+        out.fill(0);
+        let wpr = self.panels.words_per_row;
+        patch.clear();
+        patch.resize(wpr, 0);
+        let (oc, ow, n_bits) = (cl.out_ch(), cl.out_w(), cl.patch_bits());
+        for oy in 0..cl.out_h() {
+            for ox in 0..ow {
+                let pos = oy * ow + ox;
+                cl.gather_patch(x, oy, ox, patch);
+                for p in 0..self.panels.n_panels() {
+                    let word = packing::xnor_threshold_pack_simd(
+                        patch,
+                        self.panels.panel(p),
+                        wpr,
+                        n_bits,
+                        self.panels.panel_thresholds(p),
+                    );
+                    packing::splice_bits(
+                        out,
+                        pos * oc + 64 * p,
+                        word,
+                        self.panels.rows_in_panel(p),
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// A [`BnnModel`] re-laid out **once** for the fused threshold-pack walk —
 /// built at engine construction (`Engine::build()` →
 /// `NativeBackend::with_kernel` when the kernel is `Fused`), never per
-/// request.  Hidden layers become [`PreparedPanelLayer`] panels; the
-/// output layer keeps its row-major form (its raw sums *are* the logits,
-/// §3.4 — there is no threshold to fuse).  Zero padding rounds each
-/// hidden layer up to the next 64-row panel boundary.
+/// request.  Conv layers become [`PreparedConvLayer`]s (panelled cores +
+/// geometry); hidden dense layers become [`PreparedPanelLayer`] panels;
+/// the output layer keeps its row-major form (its raw sums *are* the
+/// logits, §3.4 — there is no threshold to fuse).  Zero padding rounds
+/// each hidden layer up to the next 64-row panel boundary.
 #[derive(Clone, Debug)]
 pub struct PreparedModel {
+    conv: Vec<PreparedConvLayer>,
     hidden: Vec<PreparedPanelLayer>,
     output: BinaryDenseLayer,
     n_in: usize,
     n_classes: usize,
     input_words: usize,
+    dense_input_words: usize,
     max_act_words: usize,
 }
 
@@ -737,17 +1012,24 @@ impl PreparedModel {
     /// panels only make sense on a well-formed hidden/output split).
     pub fn new(model: &BnnModel) -> Result<Self> {
         model.validate()?;
+        let conv = model
+            .conv
+            .iter()
+            .map(PreparedConvLayer::from_layer)
+            .collect::<Result<Vec<_>>>()?;
         let (last, hidden) = model.layers.split_last().expect("validated: non-empty");
         let hidden = hidden
             .iter()
             .map(PreparedPanelLayer::from_layer)
             .collect::<Result<Vec<_>>>()?;
         Ok(Self {
+            conv,
             hidden,
             output: last.clone(),
             n_in: model.n_in(),
             n_classes: model.n_classes(),
             input_words: model.input_words(),
+            dense_input_words: model.dense_input_words(),
             max_act_words: model.max_act_words(),
         })
     }
@@ -758,6 +1040,18 @@ impl PreparedModel {
 
     pub fn n_classes(&self) -> usize {
         self.n_classes
+    }
+
+    /// Packed words per dense-level input row (= `input_words()` for
+    /// dense-only models; the layer pipeline feeds its first ring at this
+    /// width).
+    pub fn dense_input_words(&self) -> usize {
+        self.dense_input_words
+    }
+
+    /// The conv prefix in fused layout (empty for dense-only models).
+    pub fn conv_layers(&self) -> &[PreparedConvLayer] {
+        &self.conv
     }
 
     /// The hidden layers in panel layout (round-trip checks/tooling).
@@ -873,11 +1167,9 @@ impl PreparedModel {
     }
 
     /// The serial fused walk over one image range (the parallel split
-    /// dispatches per-chunk copies of this).  Hidden layers run
-    /// panel-outer/image-inner so each panel stays cache-hot while the
-    /// tile's images stream through it; the fused path needs only the
-    /// `ta`/`tb` word arenas — `Scratch.zt` (the tiled walk's `i32` tile)
-    /// is never grown.
+    /// dispatches per-chunk copies of this).  A conv prefix is lowered
+    /// first — fused threshold-pack per patch into the `cf` arena — then
+    /// the dense walk consumes the dense-level activations unchanged.
     fn fused_walk(
         &self,
         inputs: &[u64],
@@ -886,7 +1178,75 @@ impl PreparedModel {
         out: &mut [i32],
         tile_imgs: usize,
     ) {
+        if self.conv.is_empty() {
+            return self.fused_dense_walk(inputs, batch, scratch, out, tile_imgs);
+        }
+        let cf = self.conv_front_batch(inputs, batch, scratch);
+        self.fused_dense_walk(&cf, batch, scratch, out, tile_imgs);
+        scratch.cf = cf;
+    }
+
+    /// Run the fused conv prefix over one image into `dst` (dense-level
+    /// packed activations).  Same arena discipline as
+    /// [`BnnModel::conv_front_into`]: `ca`/`cb` ping-pong through the
+    /// chain, `patch` holds the im2col gather.
+    fn conv_front_into(&self, x: &[u64], dst: &mut [u64], scratch: &mut Scratch) {
+        let (last, chain) = self.conv.split_last().expect("conv prefix is non-empty");
+        if chain.is_empty() {
+            return last.forward(x, dst, &mut scratch.patch);
+        }
+        let mut a = std::mem::take(&mut scratch.ca);
+        let mut b = std::mem::take(&mut scratch.cb);
+        a.clear();
+        a.resize(packing::words_u64(chain[0].layer.out_bits()), 0);
+        chain[0].forward(x, &mut a, &mut scratch.patch);
+        for cl in &chain[1..] {
+            b.clear();
+            b.resize(packing::words_u64(cl.layer.out_bits()), 0);
+            cl.forward(&a, &mut b, &mut scratch.patch);
+            std::mem::swap(&mut a, &mut b);
+        }
+        last.forward(&a, dst, &mut scratch.patch);
+        scratch.ca = a;
+        scratch.cb = b;
+    }
+
+    /// Lower the conv prefix over a whole batch into the taken-out `cf`
+    /// arena (caller restores it to `scratch` afterwards).  `pub(crate)`
+    /// so the layer pipeline can materialize dense-level inputs before
+    /// feeding its first ring.
+    pub(crate) fn conv_front_batch(
+        &self,
+        inputs: &[u64],
+        batch: usize,
+        scratch: &mut Scratch,
+    ) -> Vec<u64> {
         let iw = self.input_words;
+        let dw = self.dense_input_words;
+        let mut cf = std::mem::take(&mut scratch.cf);
+        cf.clear();
+        cf.resize(batch * dw, 0);
+        for i in 0..batch {
+            let img = &inputs[i * iw..(i + 1) * iw];
+            self.conv_front_into(img, &mut cf[i * dw..(i + 1) * dw], scratch);
+        }
+        cf
+    }
+
+    /// The dense fused walk proper.  Hidden layers run
+    /// panel-outer/image-inner so each panel stays cache-hot while the
+    /// tile's images stream through it; the fused path needs only the
+    /// `ta`/`tb` word arenas — `Scratch.zt` (the tiled walk's `i32` tile)
+    /// is never grown.
+    fn fused_dense_walk(
+        &self,
+        inputs: &[u64],
+        batch: usize,
+        scratch: &mut Scratch,
+        out: &mut [i32],
+        tile_imgs: usize,
+    ) {
+        let iw = self.dense_input_words;
         let nc = self.n_classes;
         let maxw = self.max_act_words;
         scratch.ta.resize(tile_imgs * maxw, 0);
@@ -968,7 +1328,7 @@ pub fn model_from_sign_rows(
             .collect();
         out.push(BinaryDenseLayer::from_u32_rows(n_in, &rows_u32, thr)?);
     }
-    let model = BnnModel { layers: out };
+    let model = BnnModel::dense(out);
     model.validate()?;
     Ok(model)
 }
@@ -1369,6 +1729,7 @@ mod tests {
         let mut spec = random_net(&mut rng, &[16, 8, 4]);
         spec[0].1 = None;
         let broken = BnnModel {
+            conv: Vec::new(),
             layers: spec
                 .into_iter()
                 .map(|(rows, thr)| {
@@ -1531,5 +1892,124 @@ mod tests {
         model.logits_into(&x, &mut scratch, &mut out2); // reused scratch
         assert_eq!(out1, out2);
         assert_eq!(out1, model.logits(&x));
+    }
+
+    /// Random packed inputs at a conv model's image width.
+    fn conv_inputs(model: &BnnModel, batch: usize, rng: &mut Xoshiro256) -> Vec<u64> {
+        let mut inputs = Vec::new();
+        for _ in 0..batch {
+            let bits: Vec<u8> = (0..model.n_in()).map(|_| rng.bool() as u8).collect();
+            inputs.extend(packing::pack_bits_u64(&bits));
+        }
+        inputs
+    }
+
+    #[test]
+    fn conv_models_agree_across_every_walk() {
+        // Every execution path — scalar, blocked, tiled, SIMD, fused
+        // prepared, pipelined — must produce bit-identical logits on
+        // mixed conv→dense stacks, including a two-conv chain and a
+        // 66-channel layer that straddles the 64-row panel boundary.
+        use crate::bnn::conv::random_conv_model;
+        let specs: [(&str, BnnModel); 3] = [
+            ("mnist-conv", random_conv_model((1, 28, 28), &[(8, 3, 1, 1)], &[64, 10], 31)),
+            (
+                "conv-stack",
+                random_conv_model((3, 9, 9), &[(5, 3, 1, 1), (7, 3, 2, 0)], &[33, 10], 32),
+            ),
+            ("panel-straddle", random_conv_model((2, 6, 6), &[(66, 1, 1, 0)], &[17, 5], 33)),
+        ];
+        let mut rng = Xoshiro256::new(97);
+        for (name, model) in &specs {
+            model.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            let prepared = PreparedModel::new(model).unwrap();
+            let batch = 5;
+            let inputs = conv_inputs(model, batch, &mut rng);
+            let scalar = model.logits_batch(&inputs, batch);
+            assert_eq!(model.logits_batch_blocked(&inputs, batch, 16), scalar, "{name} blocked");
+            let mut scratch = Scratch::default();
+            let mut got = vec![0i32; batch * model.n_classes()];
+            for (br, ti) in [(1, 1), (16, 4), (64, 8)] {
+                got.fill(0);
+                model.logits_batch_into_tiled(&inputs, batch, &mut scratch, &mut got, br, ti);
+                assert_eq!(got, scalar, "{name} tiled {br}x{ti}");
+                got.fill(0);
+                model.logits_batch_into_simd(&inputs, batch, &mut scratch, &mut got, br, ti);
+                assert_eq!(got, scalar, "{name} simd {br}x{ti}");
+            }
+            for tile in [1usize, 3, 8] {
+                assert_eq!(prepared.logits_batch(&inputs, batch, tile), scalar, "{name} fused");
+            }
+            for ring in [1usize, 4] {
+                got.fill(0);
+                prepared.logits_batch_pipelined(&inputs, batch, &mut got, ring);
+                assert_eq!(got, scalar, "{name} pipelined ring={ring}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_fused_walk_leaves_the_i32_tile_empty() {
+        // The fused path must stay word-only even with a conv front: the
+        // tiled walk's i32 tile is never grown.
+        use crate::bnn::conv::random_conv_model;
+        let model = random_conv_model((1, 10, 10), &[(6, 3, 1, 1)], &[32, 10], 41);
+        let prepared = PreparedModel::new(&model).unwrap();
+        let mut rng = Xoshiro256::new(42);
+        let inputs = conv_inputs(&model, 4, &mut rng);
+        let mut scratch = Scratch::default();
+        let mut out = vec![0i32; 4 * model.n_classes()];
+        prepared.logits_batch_into(&inputs, 4, &mut scratch, &mut out, 2);
+        assert!(scratch.zt.is_empty(), "fused conv walk must not touch the i32 tile");
+        assert_eq!(out, model.logits_batch(&inputs, 4));
+    }
+
+    #[test]
+    fn conv_scratch_reuse_is_deterministic() {
+        use crate::bnn::conv::random_conv_model;
+        let model = random_conv_model((2, 7, 7), &[(9, 3, 2, 1)], &[20, 10], 43);
+        let mut rng = Xoshiro256::new(44);
+        let x = conv_inputs(&model, 1, &mut rng);
+        let mut scratch = Scratch::default();
+        let mut out1 = vec![0i32; model.n_classes()];
+        let mut out2 = vec![0i32; model.n_classes()];
+        model.logits_into(&x, &mut scratch, &mut out1);
+        model.logits_into(&x, &mut scratch, &mut out2); // warm conv arenas
+        assert_eq!(out1, out2);
+        assert_eq!(out1, model.logits(&x));
+        assert_eq!(model.predict_into(&x, &mut scratch, &mut out1), model.predict(&x));
+    }
+
+    #[test]
+    fn conv_model_validation_catches_mismatched_stacks() {
+        use crate::bnn::conv::random_conv_model;
+        // chain break: second conv's input channels disagree with the
+        // first conv's output channels
+        let mut m = random_conv_model((3, 9, 9), &[(5, 3, 1, 1), (7, 3, 2, 0)], &[33, 10], 51);
+        assert!(m.validate().is_ok());
+        m.conv[1].in_ch += 1;
+        assert!(m.validate().is_err(), "chain mismatch must be rejected");
+        // junction break: conv output bits disagree with the dense stack
+        let mut m = random_conv_model((1, 8, 8), &[(4, 3, 1, 1)], &[16, 10], 52);
+        m.conv[0].in_h += 2;
+        assert!(m.validate().is_err(), "junction mismatch must be rejected");
+    }
+
+    #[test]
+    fn conv_geometry_accessors_are_image_level() {
+        use crate::bnn::conv::random_conv_model;
+        let model = random_conv_model((1, 28, 28), &[(8, 3, 1, 1)], &[64, 10], 53);
+        assert_eq!(model.n_in(), 784, "first conv layer sets the image width");
+        assert_eq!(model.input_geometry(), Some((1, 28, 28)));
+        assert_eq!(model.dense_n_in(), 8 * 28 * 28);
+        assert_eq!(model.n_layers(), 3);
+        let prepared = PreparedModel::new(&model).unwrap();
+        assert_eq!(prepared.n_in(), 784);
+        assert_eq!(prepared.dense_input_words(), packing::words_u64(8 * 28 * 28));
+        assert_eq!(prepared.conv_layers().len(), 1);
+        let dense = random_model(&[784, 128, 64, 10], 54);
+        assert_eq!(dense.input_geometry(), None);
+        assert_eq!(dense.dense_n_in(), 784);
+        assert_eq!(dense.n_layers(), 3);
     }
 }

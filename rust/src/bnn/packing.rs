@@ -48,6 +48,54 @@ pub fn unpack_bits_u64(words: &[u64], n_bits: usize) -> Vec<u8> {
         .collect()
 }
 
+/// Read `n ≤ 64` bits of `src` starting at bit `off` into a u64 (LSB
+/// first).  `src` must cover `off + n` bits.
+#[inline]
+pub fn read_bits(src: &[u64], off: usize, n: usize) -> u64 {
+    debug_assert!(n >= 1 && n <= 64);
+    let (w, s) = (off / 64, off % 64);
+    let mut v = src[w] >> s;
+    if s != 0 && s + n > 64 {
+        v |= src[w + 1] << (64 - s);
+    }
+    if n < 64 {
+        v &= (1u64 << n) - 1;
+    }
+    v
+}
+
+/// OR `len ≤ 64` bits of `word` (LSB first) into `dst` starting at bit
+/// `off`.  The target bits must currently be 0 (the packed-arena zero-fill
+/// contract) — the splice ORs, it does not clear.
+#[inline]
+pub fn splice_bits(dst: &mut [u64], off: usize, word: u64, len: usize) {
+    debug_assert!(len >= 1 && len <= 64);
+    let masked = if len == 64 { word } else { word & ((1u64 << len) - 1) };
+    let (w, s) = (off / 64, off % 64);
+    dst[w] |= masked << s;
+    if s != 0 && s + len > 64 {
+        dst[w + 1] |= masked >> (64 - s);
+    }
+}
+
+/// Copy a contiguous run of `len` bits from `src` (starting at `src_off`)
+/// into `dst` (starting at `dst_off`), neither necessarily word-aligned.
+/// This is the im2col gather primitive (`bnn::conv`): each kernel row of a
+/// receptive field is one contiguous `k·C_in`-bit run in the pixel-major
+/// activation layout, so a whole patch assembles from ≤ `k` of these
+/// copies instead of `k²·C_in` single-bit probes.  Target bits must
+/// currently be 0 (OR semantics, as [`splice_bits`]).
+#[inline]
+pub fn copy_bits(dst: &mut [u64], dst_off: usize, src: &[u64], src_off: usize, len: usize) {
+    let mut done = 0;
+    while done < len {
+        let n = (len - done).min(64);
+        let w = read_bits(src, src_off + done, n);
+        splice_bits(dst, dst_off + done, w, n);
+        done += n;
+    }
+}
+
 /// Convert u32 interchange words into u64 hot-path words (same bit layout).
 pub fn u32_words_to_u64(words32: &[u32], n_bits: usize) -> Vec<u64> {
     let mut out = vec![0u64; words_u64(n_bits)];
@@ -1476,5 +1524,49 @@ mod tests {
                     })
             },
         );
+    }
+
+    #[test]
+    fn copy_bits_matches_bitwise_copy() {
+        // the im2col gather primitive vs a per-bit reference, across
+        // unaligned offsets, word-straddling runs and multi-word runs
+        let mut rng = Xoshiro256::new(0xC0B1);
+        for trial in 0..200 {
+            let src_bits: Vec<u8> = (0..300).map(|_| rng.bool() as u8).collect();
+            let src = pack_bits_u64(&src_bits);
+            let len = 1 + (rng.next_u64() % 180) as usize;
+            let src_off = (rng.next_u64() % (300 - len as u64 + 1)) as usize;
+            let dst_off = (rng.next_u64() % 100) as usize;
+            let dst_bits_len = dst_off + len;
+            let mut dst = vec![0u64; words_u64(dst_bits_len)];
+            copy_bits(&mut dst, dst_off, &src, src_off, len);
+            let got = unpack_bits_u64(&dst, dst_bits_len);
+            for i in 0..dst_bits_len {
+                let want = if i >= dst_off { src_bits[src_off + i - dst_off] } else { 0 };
+                assert_eq!(got[i], want, "trial {trial} bit {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn splice_and_read_round_trip() {
+        let mut rng = Xoshiro256::new(0x5B11);
+        for _ in 0..200 {
+            let word = rng.next_u64();
+            let len = 1 + (rng.next_u64() % 64) as usize;
+            let off = (rng.next_u64() % 130) as usize;
+            let mut dst = vec![0u64; words_u64(off + len)];
+            splice_bits(&mut dst, off, word, len);
+            let back = read_bits(&dst, off, len);
+            let mask = if len == 64 { u64::MAX } else { (1u64 << len) - 1 };
+            assert_eq!(back, word & mask, "off {off} len {len}");
+            // bits outside [off, off+len) stay zero
+            let total = dst.len() * 64;
+            for (i, b) in unpack_bits_u64(&dst, total).iter().enumerate() {
+                if !(off..off + len).contains(&i) {
+                    assert_eq!(*b, 0, "stray bit {i}");
+                }
+            }
+        }
     }
 }

@@ -272,6 +272,12 @@ fn output_stage(layer: &BinaryDenseLayer, x: &[u64], out_row: &mut [i32]) {
 /// `out` is `batch × n_classes` row-major, exactly like
 /// [`PreparedModel::logits_batch_into`]; results are bit-identical to the
 /// scalar reference at every ring capacity.
+///
+/// A conv prefix is lowered on the calling thread before the rings spin
+/// up: the stage graph's currency is *dense-level* packed activations, so
+/// the fused conv front materializes `batch × dense_input_words` words
+/// once and the dense pipeline streams over those (the conv front is a
+/// per-image loop and would otherwise serialize stage 0 anyway).
 pub(crate) fn run_layer_pipeline(
     prepared: &PreparedModel,
     inputs: &[u64],
@@ -287,24 +293,33 @@ pub(crate) fn run_layer_pipeline(
     if batch == 0 {
         return;
     }
+    let lowered: Vec<u64>;
+    let (feed, fw) = if prepared.conv_layers().is_empty() {
+        (inputs, iw)
+    } else {
+        let mut scratch = Scratch::default();
+        lowered = prepared.conv_front_batch(inputs, batch, &mut scratch);
+        (lowered.as_slice(), prepared.dense_input_words())
+    };
     let hidden = prepared.hidden_layers();
     let output = prepared.output_layer();
     if hidden.is_empty() {
         // a no-hidden-layer model is a one-stage graph: run the output
         // stage inline — zero rings, zero threads to join
-        for (x, row) in inputs.chunks_exact(iw).zip(out.chunks_exact_mut(nc)) {
+        for (x, row) in feed.chunks_exact(fw).zip(out.chunks_exact_mut(nc)) {
             output_stage(output, x, row);
         }
         return;
     }
     std::thread::scope(|s| {
-        // stage 0: pack raw input images through the first hidden layer
+        // stage 0: pack dense-level input images through the first hidden
+        // layer
         let (tx0, mut rx) = spsc_ring::<Vec<u64>>(ring_cap);
         {
             let layer = &hidden[0];
             s.spawn(move || {
                 let _live = StageGuard::enter();
-                for x in inputs.chunks_exact(iw) {
+                for x in feed.chunks_exact(fw) {
                     let mut act = Vec::with_capacity(layer.n_panels());
                     hidden_stage(layer, x, &mut act);
                     if tx0.send(act).is_err() {

@@ -175,17 +175,21 @@ fn cmd_info() -> Result<()> {
     let dir = artifacts_dir();
     println!("artifacts dir : {}", dir.display());
     let model = load_model()?;
+    let mut shape: Vec<String> = Vec::new();
+    match model.input_geometry() {
+        Some((c, h, w)) => shape.push(format!("{c}x{h}x{w}")),
+        None => shape.push(model.n_in().to_string()),
+    }
+    for cl in &model.conv {
+        shape.push(format!("conv{}@{1}x{1}", cl.out_ch(), cl.kernel));
+    }
+    shape.extend(model.layers.iter().map(|l| l.n_out.to_string()));
     println!(
-        "model         : {}-{} ({} layers, {} packed weight words)",
-        model.n_in(),
-        model
-            .layers
-            .iter()
-            .map(|l| l.n_out.to_string())
-            .collect::<Vec<_>>()
-            .join("-"),
-        model.layers.len(),
-        model.layers.iter().map(|l| l.weights.len()).sum::<usize>()
+        "model         : {} ({} layers, {} packed weight words)",
+        shape.join("-"),
+        model.n_layers(),
+        model.conv.iter().map(|c| c.core.weights.len()).sum::<usize>()
+            + model.layers.iter().map(|l| l.weights.len()).sum::<usize>()
     );
     match crate::runtime::Manifest::load(&dir) {
         Ok(m) => {
@@ -622,8 +626,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 ///
 /// The image file is either idx3 (magic 0x00000803; `--index` picks one
 /// image) or raw grayscale bytes.  For raw files the geometry is inferred:
-/// `--width`/`--height` when given, else the model's input size (square
-/// root when it is a perfect square, e.g. 784 → 28×28).  Pixels binarize
+/// `--width`/`--height` when given, else a conv first layer's spatial
+/// shape (the layer pins H×W×C exactly), else the model's input size
+/// (square root when it is a perfect square, e.g. 784 → 28×28).  Pixels
+/// binarize
 /// as `p >= --threshold` (default 128, the MNIST convention); `--invert`
 /// flips polarity for black-on-white scans.  `--labels FILE` maps class
 /// indices to names (one per line).
@@ -646,24 +652,47 @@ fn cmd_classify(args: &Args) -> Result<()> {
     } else {
         let width = args.usize_or("width", 0)?;
         let height = args.usize_or("height", 0)?;
+        // a conv first layer pins the image geometry exactly; dense-only
+        // models accept any factorization of n_in
+        let geometry = model.input_geometry();
+        let ch = geometry.map_or(1, |(c, _, _)| c);
         let (w, h) = match (width, height) {
             (0, 0) => {
-                // no geometry given: trust the model's input size, shown
-                // square when it is one (28×28 for the paper's 784)
-                let side = (n_in as f64).sqrt() as usize;
-                if side * side == n_in {
-                    (side, side)
+                if let Some((_, gh, gw)) = geometry {
+                    (gw, gh)
                 } else {
-                    (n_in, 1)
+                    // no geometry given: trust the model's input size, shown
+                    // square when it is one (28×28 for the paper's 784)
+                    let side = (n_in as f64).sqrt() as usize;
+                    if side * side == n_in {
+                        (side, side)
+                    } else {
+                        (n_in, 1)
+                    }
                 }
             }
-            (w, 0) if w > 0 && n_in % w == 0 => (w, n_in / w),
-            (0, h) if h > 0 && n_in % h == 0 => (n_in / h, h),
+            (w, 0) if w > 0 && n_in % (w * ch) == 0 => (w, n_in / (w * ch)),
+            (0, h) if h > 0 && n_in % (h * ch) == 0 => (n_in / (h * ch), h),
             (w, h) if w > 0 && h > 0 => (w, h),
-            _ => bail!("--width/--height must divide the model input size {n_in}"),
+            _ => bail!(
+                "--width/--height must divide the model input size {n_in}\
+                 {}",
+                if ch > 1 { format!(" ({ch} channels)") } else { String::new() }
+            ),
         };
-        if w * h != n_in {
-            bail!("{w}×{h} = {} pixels, but the model takes {n_in} inputs", w * h);
+        if let Some((gc, gh, gw)) = geometry {
+            if (w, h) != (gw, gh) {
+                bail!(
+                    "--width/--height {w}×{h} conflicts with the model's conv \
+                     first layer, which takes {gw}×{gh}×{gc} inputs"
+                );
+            }
+        }
+        if ch * w * h != n_in {
+            bail!(
+                "{w}×{h}×{ch} = {} pixels, but the model takes {n_in} inputs",
+                ch * w * h
+            );
         }
         if bytes.len() != n_in {
             bail!(
@@ -672,7 +701,12 @@ fn cmd_classify(args: &Args) -> Result<()> {
                 bytes.len()
             );
         }
-        (bytes, format!("{w}×{h} (raw)"))
+        let geom = if ch > 1 {
+            format!("{w}×{h}×{ch} (raw)")
+        } else {
+            format!("{w}×{h} (raw)")
+        };
+        (bytes, geom)
     };
     if pixels.len() != n_in {
         bail!("image has {} pixels, model takes {n_in}", pixels.len());
@@ -716,7 +750,7 @@ fn cmd_classify(args: &Args) -> Result<()> {
         .map(|(i, _)| i)
         .unwrap();
     println!("image  : {geom}, threshold {threshold}{}", if invert { ", inverted" } else { "" });
-    println!("model  : {} inputs, {} classes, {} layers", n_in, logits.len(), model.layers.len());
+    println!("model  : {} inputs, {} classes, {} layers", n_in, logits.len(), model.n_layers());
     println!("class  : {}  ({us} µs)", name_of(best));
     let mut ranked: Vec<(usize, i32)> = logits.iter().copied().enumerate().collect();
     ranked.sort_by_key(|&(i, v)| (std::cmp::Reverse(v), i));

@@ -69,6 +69,28 @@ impl Metrics {
         self.queue_wait.lock().unwrap().clone()
     }
 
+    /// p50 end-to-end request latency (ns), from the shared histogram the
+    /// async event loop books per resolved slot.
+    pub fn latency_p50_ns(&self) -> u64 {
+        self.latency.lock().unwrap().percentile_ns(50.0)
+    }
+
+    /// p99 end-to-end request latency (ns).
+    pub fn latency_p99_ns(&self) -> u64 {
+        self.latency.lock().unwrap().percentile_ns(99.0)
+    }
+
+    /// p50 queue wait (ns): submit → batch-pickup, the admission-pressure
+    /// signal (distinct from latency, which includes compute).
+    pub fn queue_wait_p50_ns(&self) -> u64 {
+        self.queue_wait.lock().unwrap().percentile_ns(50.0)
+    }
+
+    /// p99 queue wait (ns).
+    pub fn queue_wait_p99_ns(&self) -> u64 {
+        self.queue_wait.lock().unwrap().percentile_ns(99.0)
+    }
+
     /// Mean requests per executed batch — the batching efficiency signal.
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
@@ -113,6 +135,24 @@ mod tests {
         m.record_batch(4);
         m.record_batch(8);
         assert!((m.mean_batch_size() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_accessors_track_both_histograms() {
+        let m = Metrics::new();
+        // 9 fast requests + 1 slow one: p50 stays in the fast buckets,
+        // p99 lands in the slow one (log2 buckets: upper bound ≥ sample)
+        for _ in 0..9 {
+            m.record_latency(1_000);
+            m.record_queue_wait(500);
+        }
+        m.record_latency(4_000_000);
+        m.record_queue_wait(2_000_000);
+        assert!(m.latency_p50_ns() <= 2_048, "{}", m.latency_p50_ns());
+        assert!(m.latency_p99_ns() >= 4_000_000, "{}", m.latency_p99_ns());
+        assert!(m.queue_wait_p50_ns() <= 1_024, "{}", m.queue_wait_p50_ns());
+        assert!(m.queue_wait_p99_ns() >= 2_000_000, "{}", m.queue_wait_p99_ns());
+        assert!(m.latency_p50_ns() <= m.latency_p99_ns());
     }
 
     #[test]

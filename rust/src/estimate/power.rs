@@ -21,7 +21,8 @@
 //! (see DESIGN.md §Substitutions); per-row errors are in EXPERIMENTS.md.
 
 use super::device::Artix7_100T;
-use crate::sim::{analytic_steps, MemStyle, SimConfig};
+use crate::bnn::BnnModel;
+use crate::sim::{analytic_steps, analytic_steps_model, MemStyle, SimConfig};
 
 /// Fitted coefficients (watts domain).
 mod coef {
@@ -76,23 +77,20 @@ fn speedup(dims: &[usize], cfg: &SimConfig) -> f64 {
     base / analytic_steps(dims, cfg.parallelism, cfg.mem_style) as f64
 }
 
-/// Estimate power for a configuration of the paper's network.
-pub fn estimate(dims: &[usize], cfg: &SimConfig) -> PowerReport {
-    let s = speedup(dims, cfg);
+/// Shared tail of the power model: switching + memory → totals/thermal.
+fn report_from(speedup: f64, bram_blocks: usize, cfg: &SimConfig) -> PowerReport {
     let k_logic = match cfg.mem_style {
         MemStyle::Bram => coef::K_LOGIC_BRAM,
         MemStyle::Lut => coef::K_LOGIC_LUT,
     };
-    let logic_w = k_logic * s.powf(coef::ALPHA);
+    let logic_w = k_logic * speedup.powf(coef::ALPHA);
 
     let bram_w = match cfg.mem_style {
         MemStyle::Bram => {
-            let blocks = super::resources::estimate(dims, cfg.parallelism, cfg.mem_style)
-                .bram_blocks as f64;
             let duty = (cfg.parallelism as f64 / coef::P_FULL_DUTY)
                 .powf(coef::DUTY_EXP)
                 .min(1.0);
-            coef::E_PORT_J * blocks * coef::F_EFF_HZ * duty
+            coef::E_PORT_J * bram_blocks as f64 * coef::F_EFF_HZ * duty
         }
         MemStyle::Lut => 0.0,
     };
@@ -107,6 +105,35 @@ pub fn estimate(dims: &[usize], cfg: &SimConfig) -> PowerReport {
         junction_c: Artix7_100T::AMBIENT_C + Artix7_100T::THETA_JA_C_PER_W * total_w,
         bram_fraction: if dynamic_w > 0.0 { bram_w / dynamic_w } else { 0.0 },
     }
+}
+
+/// Estimate power for a configuration of the paper's network.
+pub fn estimate(dims: &[usize], cfg: &SimConfig) -> PowerReport {
+    let blocks = match cfg.mem_style {
+        MemStyle::Bram => {
+            super::resources::estimate(dims, cfg.parallelism, cfg.mem_style).bram_blocks
+        }
+        MemStyle::Lut => 0,
+    };
+    report_from(speedup(dims, cfg), blocks, cfg)
+}
+
+/// Model-aware power estimate for a full (conv→dense) model: speedup
+/// from the model-aware cycle formula ([`analytic_steps_model`] — the
+/// conv front dominates step counts on conv topologies) and BRAM port
+/// energy from the model-aware block allocation.  Reduces to
+/// [`estimate`] for dense-only models, so every Table-3 pin stays
+/// untouched.
+pub fn estimate_model(model: &BnnModel, cfg: &SimConfig) -> PowerReport {
+    let base = analytic_steps_model(model, 1, cfg.mem_style) as f64;
+    let s = base / analytic_steps_model(model, cfg.parallelism, cfg.mem_style) as f64;
+    let blocks = match cfg.mem_style {
+        MemStyle::Bram => {
+            super::resources::estimate_model(model, cfg.parallelism, cfg.mem_style).bram_blocks
+        }
+        MemStyle::Lut => 0,
+    };
+    report_from(s, blocks, cfg)
 }
 
 #[cfg(test)]
@@ -194,6 +221,34 @@ mod tests {
             assert!(r.total_w < 0.20, "P={p}: {}", r.total_w);
             assert!(r.junction_c < 26.0, "P={p}: {}", r.junction_c);
         }
+    }
+
+    #[test]
+    fn model_power_reduces_to_dims_power_without_conv() {
+        let model = crate::bnn::random_model(&DIMS, 23);
+        for (p, style, ..) in TABLE3 {
+            let cfg = SimConfig::new(p, style);
+            let a = estimate(&DIMS, &cfg);
+            let b = estimate_model(&model, &cfg);
+            assert!((a.total_w - b.total_w).abs() < 1e-12, "P={p} {style:?}");
+            assert!((a.junction_c - b.junction_c).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn conv_power_is_finite_and_ordered() {
+        let model =
+            crate::bnn::random_conv_model((1, 28, 28), &[(8, 3, 1, 1)], &[64, 10], 24);
+        let low = estimate_model(&model, &SimConfig::new(1, MemStyle::Bram));
+        let high = estimate_model(&model, &SimConfig::new(64, MemStyle::Bram));
+        assert!(low.total_w > 0.0 && low.total_w.is_finite());
+        assert!(
+            high.total_w > low.total_w,
+            "throughput-scaled power must grow with P: {} vs {}",
+            high.total_w,
+            low.total_w
+        );
+        assert!(high.junction_c > Artix7_100T::AMBIENT_C);
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //!    EXPERIMENTS.md reports model-vs-anchor deltas per row.
 
 use super::device::{pct, Artix7_100T};
+use crate::bnn::BnnModel;
 use crate::sim::bram::blocks_for;
 use crate::sim::lutrom::luts_for;
 use crate::sim::MemStyle;
@@ -141,6 +142,72 @@ pub fn estimate(dims: &[usize], parallelism: usize, style: MemStyle) -> Resource
     }
 }
 
+/// Per-model dimension vector of the dense stack (`[dense_n_in,
+/// n_out…]`) — what the dims-based estimators consume.
+fn dense_dims(model: &BnnModel) -> Vec<usize> {
+    let mut dims = vec![model.dense_n_in()];
+    dims.extend(model.layers.iter().map(|l| l.n_out));
+    dims
+}
+
+/// BRAM-36 demand for a full (conv→dense) model before capping: the
+/// dense demand plus the conv cores — each conv layer is a per-unit
+/// partitioned ROM of `⌈C_out/P⌉` rows × `k²·C_in` bits, exactly like a
+/// hidden dense layer with the patch width as its row width.  Reduces to
+/// [`bram_demand`] for dense-only models.
+pub fn bram_demand_model(model: &BnnModel, parallelism: usize) -> usize {
+    let mut blocks = bram_demand(&dense_dims(model), parallelism);
+    for cl in &model.conv {
+        let depth = cl.out_ch().div_ceil(parallelism);
+        blocks += parallelism * blocks_for(cl.patch_bits(), depth);
+    }
+    blocks
+}
+
+/// Structural estimate for a full (conv→dense) model: the dense-stack
+/// estimate plus the conv datapath adders — conv weight ROMs (BRAM
+/// blocks under the usable cap, distributed ROM on spill or LUT style),
+/// per-channel 11-bit threshold ROMs, and the window mux + stride/pad
+/// address generator that gathers each receptive field onto the
+/// broadcast line.  Reduces to [`estimate`] for dense-only models, so
+/// every Table-1 pin stays untouched.
+pub fn estimate_model(model: &BnnModel, parallelism: usize, style: MemStyle) -> ResourceReport {
+    let p = parallelism;
+    let mut r = estimate(&dense_dims(model), p, style);
+    for cl in &model.conv {
+        let (patch_bits, out_ch) = (cl.patch_bits(), cl.out_ch());
+        let depth = out_ch.div_ceil(p);
+        match style {
+            MemStyle::Bram => {
+                let demand = p * blocks_for(patch_bits, depth);
+                let free = Artix7_100T::BRAM36_USABLE.saturating_sub(r.bram_blocks);
+                let granted = demand.min(free);
+                r.bram_blocks += granted;
+                r.luts += 25 * granted; // address gen/enables per block
+                if granted < demand {
+                    // spilled partitions fall back to distributed ROM
+                    r.bram_overflow = true;
+                    let per_unit = blocks_for(patch_bits, depth).max(1);
+                    let spilled_units = (demand - granted).div_ceil(per_unit);
+                    r.luts += spilled_units * luts_for(patch_bits, depth);
+                }
+                r.flip_flops += 30 * granted; // per-block output registers
+            }
+            MemStyle::Lut => {
+                r.luts += p.min(out_ch) * luts_for(patch_bits, depth);
+            }
+        }
+        // folded-threshold ROM per conv channel (11-bit words)
+        r.luts += luts_for(11, out_ch);
+        // window mux: one 4:1 mux column per patch bit onto the broadcast
+        // line, plus the stride/pad address generator
+        r.luts += patch_bits.div_ceil(4) + 24;
+        // patch shift register + patch/position counters
+        r.flip_flops += patch_bits + 16;
+    }
+    r
+}
+
 /// The paper's published Vivado post-implementation values (Table 1),
 /// `(LUT %, FF %, BRAM %)` → absolute counts against the device envelope.
 pub fn vivado_anchor(parallelism: usize, style: MemStyle) -> Option<ResourceReport> {
@@ -236,6 +303,41 @@ mod tests {
         assert!((a.lut_pct() - 26.02).abs() < 0.01);
         assert!((a.ff_pct() - 8.41).abs() < 0.01);
         assert_eq!(a.bram_blocks, 132);
+    }
+
+    #[test]
+    fn model_estimate_reduces_to_dims_estimate_without_conv() {
+        let model = crate::bnn::random_model(&DIMS, 21);
+        for p in [1usize, 8, 64] {
+            for style in [MemStyle::Bram, MemStyle::Lut] {
+                assert_eq!(estimate_model(&model, p, style), estimate(&DIMS, p, style));
+            }
+        }
+        assert_eq!(bram_demand_model(&model, 4), bram_demand(&DIMS, 4));
+    }
+
+    #[test]
+    fn conv_topology_adds_measurable_resources() {
+        // mnist-style conv front: 8 channels of 3×3 over 28×28 pad 1
+        let model =
+            crate::bnn::random_conv_model((1, 28, 28), &[(8, 3, 1, 1)], &[64, 10], 22);
+        let dense_dims = [8 * 28 * 28, 64, 10];
+        for p in [1usize, 8, 64] {
+            for style in [MemStyle::Bram, MemStyle::Lut] {
+                let conv = estimate_model(&model, p, style);
+                let dense = estimate(&dense_dims, p, style);
+                assert!(conv.luts > dense.luts, "P={p} {style:?}");
+                assert!(conv.flip_flops > dense.flip_flops, "P={p} {style:?}");
+                assert!(conv.luts < Artix7_100T::LUTS, "P={p} {style:?} fits");
+            }
+            assert!(
+                bram_demand_model(&model, p) > bram_demand(&dense_dims, p),
+                "P={p}"
+            );
+        }
+        // BRAM style caps at the usable block budget
+        let r = estimate_model(&model, 64, MemStyle::Bram);
+        assert!(r.bram_blocks <= Artix7_100T::BRAM36_USABLE);
     }
 
     #[test]

@@ -45,6 +45,29 @@ pub fn estimate(parallelism: usize, style: MemStyle) -> TimingReport {
     }
 }
 
+/// Extra critical-path contribution of the conv front's window mux: the
+/// broadcast input bit goes through one receptive-field mux level
+/// (stride/pad address decode is registered, so only the final mux is on
+/// the compute path).
+pub const CONV_WINDOW_MUX_NS: f64 = 0.35;
+
+/// Model-aware structural estimate: the dense path plus one window-mux
+/// level when the model carries a conv front.  Reduces to [`estimate`]
+/// for dense-only models; every modeled conv configuration must still
+/// meet 80 MHz (worst case `7.3 + 3.84 + 0.35 = 11.49 ns < 12.5 ns`).
+pub fn estimate_model(
+    model: &crate::bnn::BnnModel,
+    parallelism: usize,
+    style: MemStyle,
+) -> TimingReport {
+    let mut t = estimate(parallelism, style);
+    if !model.conv.is_empty() {
+        t.wns_ns -= CONV_WINDOW_MUX_NS;
+        t.meets_80mhz = t.wns_ns > 0.0 && t.whs_ns > 0.0;
+    }
+    t
+}
+
 /// Published Table 2 values.
 pub fn vivado_anchor(parallelism: usize, style: MemStyle) -> Option<TimingReport> {
     let (wns, whs) = match (parallelism, style) {
@@ -110,6 +133,23 @@ mod tests {
                 if let Some(t) = vivado_anchor(p, style) {
                     assert!(t.wns_ns > 0.0 && t.whs_ns > 0.0);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_models_still_meet_timing() {
+        let conv = crate::bnn::random_conv_model((1, 28, 28), &[(8, 3, 1, 1)], &[64, 10], 9);
+        let dense = crate::bnn::random_model(&[784, 128, 64, 10], 9);
+        for p in [1usize, 16, 64, 128] {
+            for style in [MemStyle::Bram, MemStyle::Lut] {
+                let tc = estimate_model(&conv, p, style);
+                let td = estimate_model(&dense, p, style);
+                // dense-only reduces to the dims-based model exactly
+                assert_eq!(td.wns_ns, estimate(p, style).wns_ns);
+                // the window mux costs slack but never breaks 80 MHz
+                assert!((tc.wns_ns - (td.wns_ns - CONV_WINDOW_MUX_NS)).abs() < 1e-12);
+                assert!(tc.meets_80mhz, "P={p} {style:?}: WNS {}", tc.wns_ns);
             }
         }
     }

@@ -1,52 +1,292 @@
 //! `weights.json` loader — the trained/folded model payload emitted by
 //! `python/compile/export.py`, plus a loader for the paper-format `.mem`
 //! directory (both must produce identical models; tested in integration).
+//!
+//! Two format versions coexist:
+//!
+//! * **v1** (no `format_version`, no per-layer `type`): a dense-only
+//!   stack — every layer is `{n_in, n_out, w_packed, thresholds}`.
+//!   Pre-conv files keep loading byte-identically; an absent `type`
+//!   defaults to `dense`.
+//! * **v2** (`format_version: 2`): each layer carries a `type` tag from
+//!   the [`LayerKind`] vocabulary.  `dense` layers are unchanged; `conv`
+//!   layers add the spatial geometry
+//!   (`in_ch/in_h/in_w/out_ch/kernel/stride/pad`) around a packed core of
+//!   `out_ch` rows × `k²·in_ch` bits with mandatory thresholds.  Conv
+//!   layers must form a prefix (the model is a conv→dense stack).
+//!
+//! Malformed v2 files fail with a **typed** [`FormatError`] — unknown
+//! layer `type` or a missing per-kind field — citing both the layer index
+//! and the line in the source text where that layer's object starts, so
+//! a hand-edited weights file points straight at the offending entry.
 
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use super::memfile;
+use crate::bnn::conv::{BinaryConvLayer, LayerKind};
 use crate::bnn::{BinaryDenseLayer, BnnModel};
-use crate::util::json::Json;
+use crate::util::json::{obj, Json};
 
-/// Load a [`BnnModel`] from `artifacts/weights.json`.
+/// Typed model-format error: what went wrong, in which layer, and the
+/// 1-based line of that layer's object in the source text.  Carried
+/// through `anyhow` so callers can `downcast_ref::<FormatError>()` while
+/// CLI users still get the rendered message.
+#[derive(Debug, PartialEq, Eq)]
+pub enum FormatError {
+    /// A `type` tag outside the [`LayerKind`] vocabulary.
+    UnknownLayerType {
+        layer: usize,
+        line: usize,
+        found: String,
+    },
+    /// A field the layer's `type` requires is absent (or JSON `null`).
+    MissingField {
+        layer: usize,
+        line: usize,
+        kind: LayerKind,
+        field: &'static str,
+    },
+}
+
+impl std::fmt::Display for FormatError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FormatError::UnknownLayerType { layer, line, found } => write!(
+                f,
+                "layer {layer} (line {line}): unknown layer type {found:?} \
+                 (expected \"conv\" or \"dense\")"
+            ),
+            FormatError::MissingField {
+                layer,
+                line,
+                kind,
+                field,
+            } => write!(
+                f,
+                "layer {layer} (line {line}): {} layer is missing required field {field:?}",
+                kind.name()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FormatError {}
+
+/// 1-based line of the `li`-th object in the top-level `layers` array — a
+/// text-level scan (string-aware brace walk) so [`FormatError`] can cite
+/// the offending line without a position-tracking JSON parser.
+fn layer_line(text: &str, li: usize) -> usize {
+    let Some(start) = text.find("\"layers\"") else {
+        return 1;
+    };
+    let mut line = 1 + text.as_bytes()[..start].iter().filter(|&&b| b == b'\n').count();
+    let (mut in_str, mut esc) = (false, false);
+    let mut arr = 0usize; // [..] nesting from the layers array inwards
+    let mut obj_depth = 0usize; // {..} nesting inside a layer object
+    let mut idx = 0usize;
+    for &b in &text.as_bytes()[start..] {
+        if b == b'\n' {
+            line += 1;
+            continue;
+        }
+        if in_str {
+            match b {
+                _ if esc => esc = false,
+                b'\\' => esc = true,
+                b'"' => in_str = false,
+                _ => {}
+            }
+            continue;
+        }
+        match b {
+            b'"' => in_str = true,
+            b'[' => arr += 1,
+            b']' => {
+                if arr <= 1 {
+                    break; // end of the layers array
+                }
+                arr -= 1;
+            }
+            b'{' if arr == 1 && obj_depth == 0 => {
+                if idx == li {
+                    return line;
+                }
+                idx += 1;
+                obj_depth = 1;
+            }
+            b'{' if arr >= 1 => obj_depth += 1,
+            b'}' if arr >= 1 && obj_depth > 0 => obj_depth -= 1,
+            _ => {}
+        }
+    }
+    line
+}
+
+/// `lj.get(field)` with absence mapped to the typed
+/// [`FormatError::MissingField`] (line-cited).
+fn req<'a>(
+    lj: &'a Json,
+    text: &str,
+    li: usize,
+    kind: LayerKind,
+    field: &'static str,
+) -> Result<&'a Json> {
+    lj.opt(field).ok_or_else(|| {
+        FormatError::MissingField {
+            layer: li,
+            line: layer_line(text, li),
+            kind,
+            field,
+        }
+        .into()
+    })
+}
+
+fn parse_u32_rows(rows_json: &[Json]) -> Result<Vec<Vec<u32>>> {
+    rows_json
+        .iter()
+        .map(|rj| rj.as_arr()?.iter().map(|v| Ok(v.as_u64()? as u32)).collect())
+        .collect()
+}
+
+fn parse_thresholds(tj: &Json) -> Result<Vec<i32>> {
+    tj.as_arr()?.iter().map(|v| Ok(v.as_i64()? as i32)).collect()
+}
+
+/// Load a [`BnnModel`] from `artifacts/weights.json` (v1 or v2).
 pub fn load_model(path: &Path) -> Result<BnnModel> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading weights file {}", path.display()))?;
-    let root = Json::parse(&text).context("parsing weights.json")?;
+    load_model_from_str(&text)
+}
+
+/// [`load_model`] on an in-memory JSON document (wire/test entry point).
+pub fn load_model_from_str(text: &str) -> Result<BnnModel> {
+    let root = Json::parse(text).context("parsing weights.json")?;
     let layers_json = root.get("layers")?.as_arr()?;
     if layers_json.is_empty() {
         bail!("weights.json has no layers");
     }
-    let mut layers = Vec::with_capacity(layers_json.len());
+    let mut conv = Vec::new();
+    let mut layers = Vec::new();
     for (li, lj) in layers_json.iter().enumerate() {
-        let n_in = lj.get("n_in")?.as_usize()?;
-        let n_out = lj.get("n_out")?.as_usize()?;
-        let rows_json = lj.get("w_packed")?.as_arr()?;
-        if rows_json.len() != n_out {
-            bail!("layer {li}: {} rows != n_out {n_out}", rows_json.len());
-        }
-        let mut rows = Vec::with_capacity(n_out);
-        for rj in rows_json {
-            let row: Result<Vec<u32>> =
-                rj.as_arr()?.iter().map(|v| Ok(v.as_u64()? as u32)).collect();
-            rows.push(row?);
-        }
-        let thresholds = match lj.opt("thresholds") {
-            Some(tj) => Some(
-                tj.as_arr()?
-                    .iter()
-                    .map(|v| Ok(v.as_i64()? as i32))
-                    .collect::<Result<Vec<i32>>>()?,
-            ),
-            None => None,
+        let kind = match lj.opt("type") {
+            None => LayerKind::Dense, // v1 files carry no tag
+            Some(tag) => {
+                let s = tag.as_str().with_context(|| format!("layer {li}: 'type' tag"))?;
+                LayerKind::parse(s).ok_or_else(|| FormatError::UnknownLayerType {
+                    layer: li,
+                    line: layer_line(text, li),
+                    found: s.to_string(),
+                })?
+            }
         };
-        layers.push(BinaryDenseLayer::from_u32_rows(n_in, &rows, thresholds)?);
+        match kind {
+            LayerKind::Dense => {
+                let n_in = req(lj, text, li, kind, "n_in")?.as_usize()?;
+                let n_out = req(lj, text, li, kind, "n_out")?.as_usize()?;
+                let rows_json = req(lj, text, li, kind, "w_packed")?.as_arr()?;
+                if rows_json.len() != n_out {
+                    bail!("layer {li}: {} rows != n_out {n_out}", rows_json.len());
+                }
+                let rows = parse_u32_rows(rows_json)
+                    .with_context(|| format!("layer {li}: w_packed"))?;
+                let thresholds = lj.opt("thresholds").map(parse_thresholds).transpose()?;
+                layers.push(BinaryDenseLayer::from_u32_rows(n_in, &rows, thresholds)?);
+            }
+            LayerKind::Conv => {
+                if !layers.is_empty() {
+                    bail!("layer {li}: conv layers must form a prefix (dense seen earlier)");
+                }
+                let in_ch = req(lj, text, li, kind, "in_ch")?.as_usize()?;
+                let in_h = req(lj, text, li, kind, "in_h")?.as_usize()?;
+                let in_w = req(lj, text, li, kind, "in_w")?.as_usize()?;
+                let out_ch = req(lj, text, li, kind, "out_ch")?.as_usize()?;
+                let kernel = req(lj, text, li, kind, "kernel")?.as_usize()?;
+                let stride = req(lj, text, li, kind, "stride")?.as_usize()?;
+                let pad = req(lj, text, li, kind, "pad")?.as_usize()?;
+                let rows_json = req(lj, text, li, kind, "w_packed")?.as_arr()?;
+                if rows_json.len() != out_ch {
+                    bail!("layer {li}: {} rows != out_ch {out_ch}", rows_json.len());
+                }
+                let rows = parse_u32_rows(rows_json)
+                    .with_context(|| format!("layer {li}: w_packed"))?;
+                let thr = parse_thresholds(req(lj, text, li, kind, "thresholds")?)?;
+                let core =
+                    BinaryDenseLayer::from_u32_rows(kernel * kernel * in_ch, &rows, Some(thr))
+                        .with_context(|| format!("layer {li}: conv core"))?;
+                conv.push(
+                    BinaryConvLayer::new(in_ch, in_h, in_w, kernel, stride, pad, core)
+                        .with_context(|| format!("layer {li}: conv geometry"))?,
+                );
+            }
+        }
     }
-    let model = BnnModel { layers };
+    let model = BnnModel::with_conv(conv, layers);
     model.validate()?;
     Ok(model)
+}
+
+/// Serialize a model as a format-v2 document (`type`-tagged layers).
+/// Inverse of [`load_model_from_str`] — pinned by the round-trip tests
+/// below and exercised end-to-end by `tests/conv_conformance.rs`.
+pub fn model_to_json(model: &BnnModel) -> Json {
+    let mut layers = Vec::new();
+    for cl in &model.conv {
+        layers.push(obj(vec![
+            ("type", Json::Str(LayerKind::Conv.name().to_string())),
+            ("in_ch", Json::Num(cl.in_ch as f64)),
+            ("in_h", Json::Num(cl.in_h as f64)),
+            ("in_w", Json::Num(cl.in_w as f64)),
+            ("out_ch", Json::Num(cl.out_ch() as f64)),
+            ("kernel", Json::Num(cl.kernel as f64)),
+            ("stride", Json::Num(cl.stride as f64)),
+            ("pad", Json::Num(cl.pad as f64)),
+            ("w_packed", packed_rows_json(&cl.core)),
+            (
+                "thresholds",
+                thresholds_json(cl.core.thresholds.as_deref().unwrap_or(&[])),
+            ),
+        ]));
+    }
+    for dl in &model.layers {
+        let mut fields = vec![
+            ("type", Json::Str(LayerKind::Dense.name().to_string())),
+            ("n_in", Json::Num(dl.n_in as f64)),
+            ("n_out", Json::Num(dl.n_out as f64)),
+            ("w_packed", packed_rows_json(dl)),
+        ];
+        if let Some(thr) = &dl.thresholds {
+            fields.push(("thresholds", thresholds_json(thr)));
+        }
+        layers.push(obj(fields));
+    }
+    obj(vec![
+        ("format_version", Json::Num(2.0)),
+        ("layers", Json::Arr(layers)),
+    ])
+}
+
+/// Write a model as format v2 (see [`model_to_json`]).
+pub fn save_model(path: &Path, model: &BnnModel) -> Result<()> {
+    std::fs::write(path, model_to_json(model).to_string())
+        .with_context(|| format!("writing weights file {}", path.display()))
+}
+
+fn packed_rows_json(layer: &BinaryDenseLayer) -> Json {
+    let rows = (0..layer.n_out)
+        .map(|j| {
+            let words = crate::bnn::packing::u64_words_to_u32(layer.row(j), layer.n_in);
+            Json::Arr(words.iter().map(|&w| Json::Num(w as f64)).collect())
+        })
+        .collect();
+    Json::Arr(rows)
+}
+
+fn thresholds_json(thr: &[i32]) -> Json {
+    Json::Arr(thr.iter().map(|&t| Json::Num(t as f64)).collect())
 }
 
 /// Load the same model from the paper-format `.mem` directory
@@ -77,7 +317,7 @@ pub fn load_model_from_mem(dir: &Path, dims: &[usize]) -> Result<BnnModel> {
             thresholds,
         });
     }
-    let model = BnnModel { layers };
+    let model = BnnModel::dense(layers);
     model.validate()?;
     Ok(model)
 }
@@ -85,6 +325,7 @@ pub fn load_model_from_mem(dir: &Path, dims: &[usize]) -> Result<BnnModel> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bnn::conv::random_conv_model;
 
     fn tiny_weights_json() -> String {
         // 3-in → 2 hidden (thresholds) → 1 out
@@ -126,6 +367,117 @@ mod tests {
         )
         .unwrap();
         assert!(load_model(&p).is_err());
+    }
+
+    #[test]
+    fn v1_files_without_type_default_to_dense() {
+        // satellite pin: the pre-conv schema (no format_version, no
+        // per-layer type) must keep loading unchanged
+        let model = load_model_from_str(&tiny_weights_json()).unwrap();
+        assert!(model.conv.is_empty());
+        assert_eq!(model.layers.len(), 2);
+        // an explicit v2 tag on the same payload loads identically
+        let tagged = r#"{
+          "format_version": 2,
+          "layers": [
+            {"type": "dense", "n_in": 3, "n_out": 2, "w_packed": [[7],[0]],
+             "thresholds": [1, -1]},
+            {"type": "dense", "n_in": 2, "n_out": 1, "w_packed": [[3]]}
+          ]
+        }"#;
+        let m2 = load_model_from_str(tagged).unwrap();
+        for (a, b) in model.layers.iter().zip(m2.layers.iter()) {
+            assert_eq!(a.weights, b.weights);
+            assert_eq!(a.thresholds, b.thresholds);
+        }
+    }
+
+    #[test]
+    fn unknown_layer_type_is_a_typed_line_cited_error() {
+        let text = "{\n \"layers\": [\n  {\"type\": \"pool\", \"n_in\": 3}\n ]\n}";
+        let err = load_model_from_str(text).unwrap_err();
+        let fe = err
+            .downcast_ref::<FormatError>()
+            .expect("unknown type must surface as FormatError");
+        assert_eq!(
+            *fe,
+            FormatError::UnknownLayerType {
+                layer: 0,
+                line: 3,
+                found: "pool".to_string(),
+            }
+        );
+        assert!(err.to_string().contains("line 3"), "{err}");
+    }
+
+    #[test]
+    fn missing_conv_field_is_a_typed_line_cited_error() {
+        // a conv layer with no "kernel" — and sitting after another layer
+        // so the line scan must skip layer 0's nested arrays/braces
+        let text = concat!(
+            "{\n",
+            " \"format_version\": 2,\n",
+            " \"layers\": [\n",
+            "  {\"type\": \"conv\", \"in_ch\": 1, \"in_h\": 4, \"in_w\": 4,\n",
+            "   \"out_ch\": 2, \"kernel\": 3, \"stride\": 1, \"pad\": 0,\n",
+            "   \"w_packed\": [[0], [1]], \"thresholds\": [0, 0]},\n",
+            "  {\"type\": \"conv\", \"in_ch\": 2, \"in_h\": 2, \"in_w\": 2,\n",
+            "   \"out_ch\": 1, \"stride\": 1, \"pad\": 0,\n",
+            "   \"w_packed\": [[0]], \"thresholds\": [0]}\n",
+            " ]\n",
+            "}"
+        );
+        let err = load_model_from_str(text).unwrap_err();
+        let fe = err
+            .downcast_ref::<FormatError>()
+            .expect("missing field must surface as FormatError");
+        assert_eq!(
+            *fe,
+            FormatError::MissingField {
+                layer: 1,
+                line: 7,
+                kind: LayerKind::Conv,
+                field: "kernel",
+            }
+        );
+        // a dense layer missing w_packed is typed too
+        let text = "{\"layers\": [{\"type\": \"dense\", \"n_in\": 3, \"n_out\": 1}]}";
+        let err = load_model_from_str(text).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<FormatError>(),
+            Some(FormatError::MissingField {
+                layer: 0,
+                kind: LayerKind::Dense,
+                field: "w_packed",
+                ..
+            })
+        ));
+    }
+
+    #[test]
+    fn conv_model_round_trips_through_format_v2() {
+        let model = random_conv_model((1, 8, 8), &[(5, 3, 1, 1)], &[16, 10], 77);
+        let text = model_to_json(&model).to_string();
+        let back = load_model_from_str(&text).unwrap();
+        assert_eq!(back.conv.len(), 1);
+        assert_eq!(back.conv[0].core.weights, model.conv[0].core.weights);
+        assert_eq!(back.conv[0].core.thresholds, model.conv[0].core.thresholds);
+        assert_eq!(back.conv[0].kernel, 3);
+        for (a, b) in model.layers.iter().zip(back.layers.iter()) {
+            assert_eq!(a.weights, b.weights);
+            assert_eq!(a.thresholds, b.thresholds);
+        }
+        // and the reloaded model computes identical logits
+        let bits: Vec<u8> = (0..model.n_in()).map(|i| (i % 3 == 0) as u8).collect();
+        let x = crate::bnn::packing::pack_bits_u64(&bits);
+        assert_eq!(back.logits(&x), model.logits(&x));
+        // conv-after-dense is rejected (the model is a conv→dense stack)
+        let bad = r#"{"layers": [
+          {"type": "dense", "n_in": 4, "n_out": 1, "w_packed": [[0]]},
+          {"type": "conv", "in_ch": 1, "in_h": 2, "in_w": 2, "out_ch": 1,
+           "kernel": 1, "stride": 1, "pad": 0, "w_packed": [[1]], "thresholds": [0]}
+        ]}"#;
+        assert!(load_model_from_str(bad).unwrap_err().to_string().contains("prefix"));
     }
 
     #[test]

@@ -121,6 +121,39 @@ pub fn analytic_steps(dims: &[usize], parallelism: usize, mem_style: MemStyle) -
     s + 2 * g + layers + argmax + load + 1 /* done */
 }
 
+/// Closed-form step count of the conv front alone: per conv layer, one
+/// prologue plus the dense group/bit microloop re-run per output patch —
+/// `n_patches · (groups·k²·C_in + 2·groups)` with
+/// `groups = ⌈C_out/P⌉`.  0 for dense-only models; memory style does not
+/// enter (the image-load latency is counted once, in
+/// [`analytic_steps`]'s `load` term).
+pub fn conv_front_steps(model: &crate::bnn::BnnModel, parallelism: usize) -> u64 {
+    model
+        .conv
+        .iter()
+        .map(|cl| {
+            let groups = cl.out_ch().div_ceil(parallelism) as u64;
+            let per_patch = groups * cl.patch_bits() as u64 + 2 * groups;
+            1 + cl.n_patches() as u64 * per_patch
+        })
+        .sum()
+}
+
+/// Closed-form step count for a full (conv→dense) model — the
+/// model-aware counterpart of [`analytic_steps`], asserted against the
+/// cycle loop in `top::tests::conv_formula_matches_execution`.  Equals
+/// `analytic_steps(&dims, …)` exactly when the model is dense-only, so
+/// the Table-1 calibration is untouched.
+pub fn analytic_steps_model(
+    model: &crate::bnn::BnnModel,
+    parallelism: usize,
+    mem_style: MemStyle,
+) -> u64 {
+    let mut dims = vec![model.dense_n_in()];
+    dims.extend(model.layers.iter().map(|l| l.n_out));
+    conv_front_steps(model, parallelism) + analytic_steps(&dims, parallelism, mem_style)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,6 +194,34 @@ mod tests {
     #[should_panic(expected = "outside")]
     fn parallelism_range_checked() {
         SimConfig::new(0, MemStyle::Bram);
+    }
+
+    #[test]
+    fn model_steps_reduce_to_dense_formula_without_conv() {
+        let model = crate::bnn::random_model(&[784, 128, 64, 10], 3);
+        for p in [1usize, 16, 128] {
+            for style in [MemStyle::Bram, MemStyle::Lut] {
+                assert_eq!(
+                    analytic_steps_model(&model, p, style),
+                    analytic_steps(&[784, 128, 64, 10], p, style)
+                );
+            }
+        }
+        assert_eq!(conv_front_steps(&model, 16), 0);
+    }
+
+    #[test]
+    fn conv_front_steps_closed_form() {
+        // one conv layer: 8×8 pad 1 k3 s1 → 64 patches, 6 channels,
+        // 9 patch bits; at P=4 → 2 groups
+        let model = crate::bnn::random_conv_model((1, 8, 8), &[(6, 3, 1, 1)], &[24, 10], 5);
+        let groups = 2u64;
+        let expect = 1 + 64 * (groups * 9 + 2 * groups);
+        assert_eq!(conv_front_steps(&model, 4), expect);
+        assert_eq!(
+            analytic_steps_model(&model, 4, MemStyle::Lut),
+            expect + analytic_steps(&[6 * 8 * 8, 24, 10], 4, MemStyle::Lut)
+        );
     }
 
     #[test]

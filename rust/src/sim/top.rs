@@ -53,6 +53,25 @@ struct LayerMem {
     thresholds: Option<LutRom<i32>>,
 }
 
+/// Conv-front layer: the dense-core memories (`n_in = k²·C_in` patch
+/// bits, `n_out = C_out`, thresholds mandatory) plus the spatial geometry
+/// the window mux needs.  The datapath model re-runs the dense group/bit
+/// microloop once per output patch — hardware would feed the broadcast
+/// bit through a receptive-field mux instead of the activation register
+/// file, everything else is the §3.3 engine unchanged.
+struct ConvLayerMem {
+    in_ch: usize,
+    in_h: usize,
+    in_w: usize,
+    kernel: usize,
+    stride: usize,
+    pad: usize,
+    out_ch: usize,
+    out_h: usize,
+    out_w: usize,
+    mem: LayerMem,
+}
+
 /// Memory-activity counters feeding the power model (`estimate::power`).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Activity {
@@ -84,11 +103,17 @@ pub struct InferenceResult {
 pub struct Accelerator {
     pub cfg: SimConfig,
     dims: Vec<usize>,
+    conv: Vec<ConvLayerMem>,
     layers: Vec<LayerMem>,
     dp: Datapath,
     state: FsmState,
     breakdown: CycleBreakdown,
     cycles: u64,
+    /// Image width the testbench must feed (conv models take the raw
+    /// `C·H·W`-bit image, not the dense stack's input width).
+    expected_bits: usize,
+    /// Closed-form conv-front step count (0 for dense-only models).
+    conv_steps: u64,
     // architectural registers
     act_bits: Vec<u8>,
     next_bits: Vec<u8>,
@@ -103,33 +128,59 @@ impl Accelerator {
     /// the `generate`-loop parameterization of §3.5.
     pub fn new(model: &BnnModel, cfg: SimConfig) -> Result<Self> {
         model.validate()?;
-        let mut dims = vec![model.n_in()];
+        let build_mem = |n_in: usize, n_out: usize, rows: &[&[u64]], thr: Option<Vec<i32>>| {
+            let weights = match cfg.mem_style {
+                MemStyle::Bram => WeightMem::Bram(DualPortBram::new(n_in, rows)),
+                MemStyle::Lut => WeightMem::Lut(LutWeightRom::new(n_in, rows)),
+            };
+            LayerMem {
+                n_in,
+                n_out,
+                weights,
+                thresholds: thr.map(LutRom::new),
+            }
+        };
+        let conv = model
+            .conv
+            .iter()
+            .map(|cl| {
+                let l = &cl.core;
+                let rows: Vec<&[u64]> = (0..l.n_out).map(|j| l.row(j)).collect();
+                ConvLayerMem {
+                    in_ch: cl.in_ch,
+                    in_h: cl.in_h,
+                    in_w: cl.in_w,
+                    kernel: cl.kernel,
+                    stride: cl.stride,
+                    pad: cl.pad,
+                    out_ch: cl.out_ch(),
+                    out_h: cl.out_h(),
+                    out_w: cl.out_w(),
+                    mem: build_mem(l.n_in, l.n_out, &rows, l.thresholds.clone()),
+                }
+            })
+            .collect();
+        let mut dims = vec![model.dense_n_in()];
         dims.extend(model.layers.iter().map(|l| l.n_out));
         let layers = model
             .layers
             .iter()
             .map(|l| {
                 let rows: Vec<&[u64]> = (0..l.n_out).map(|j| l.row(j)).collect();
-                let weights = match cfg.mem_style {
-                    MemStyle::Bram => WeightMem::Bram(DualPortBram::new(l.n_in, &rows)),
-                    MemStyle::Lut => WeightMem::Lut(LutWeightRom::new(l.n_in, &rows)),
-                };
-                LayerMem {
-                    n_in: l.n_in,
-                    n_out: l.n_out,
-                    weights,
-                    thresholds: l.thresholds.clone().map(LutRom::new),
-                }
+                build_mem(l.n_in, l.n_out, &rows, l.thresholds.clone())
             })
             .collect();
         let max_width = dims.iter().copied().max().unwrap();
         Ok(Self {
             dp: Datapath::new(cfg.parallelism),
             dims: dims.clone(),
+            conv,
             layers,
             state: FsmState::Idle,
             breakdown: CycleBreakdown::default(),
             cycles: 0,
+            expected_bits: model.n_in(),
+            conv_steps: super::conv_front_steps(model, cfg.parallelism),
             act_bits: vec![0; max_width],
             next_bits: vec![0; max_width],
             scores: vec![0; *dims.last().unwrap()],
@@ -236,14 +287,81 @@ impl Accelerator {
         };
     }
 
-    /// Run one full inference on a packed 784-bit image.
+    /// Execute the conv front bit-serially through the shared datapath —
+    /// the dense group/bit microloop re-run once per output patch (the
+    /// window mux gathers each receptive field; padding bits read 0,
+    /// i.e. −1).  Cycle/activity accounting mirrors the dense FSM states
+    /// exactly: one prologue per conv layer, then per patch per group
+    /// one GroupLoad + `patch_bits` ComputeBit + one Writeback — the
+    /// closed form [`super::conv_front_steps`] is asserted in tests.
+    fn run_conv_front(&mut self, bits: &[u8]) -> Vec<u8> {
+        let mut cur = bits.to_vec();
+        for ci in 0..self.conv.len() {
+            self.cycles += 1;
+            self.breakdown.prologue += 1;
+            let c = &self.conv[ci];
+            let (in_ch, in_h, in_w) = (c.in_ch, c.in_h, c.in_w);
+            let (k, stride, pad) = (c.kernel, c.stride, c.pad);
+            let (out_ch, out_h, out_w) = (c.out_ch, c.out_h, c.out_w);
+            let mut next = vec![0u8; out_ch * out_h * out_w];
+            let mut patch = vec![0u8; k * k * in_ch];
+            for oy in 0..out_h {
+                for ox in 0..out_w {
+                    patch.fill(0);
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= in_h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= in_w as isize {
+                                continue;
+                            }
+                            let src = (iy as usize * in_w + ix as usize) * in_ch;
+                            let dst = (ky * k + kx) * in_ch;
+                            patch[dst..dst + in_ch].copy_from_slice(&cur[src..src + in_ch]);
+                        }
+                    }
+                    let pos = oy * out_w + ox;
+                    for g in 0..out_ch.div_ceil(self.cfg.parallelism) {
+                        let active = self.dp.load_group(g, out_ch);
+                        self.conv[ci].mem.weights.count_row_reads(active as u64);
+                        self.cycles += 1;
+                        self.breakdown.group_load += 1;
+                        let mem = &self.conv[ci].mem;
+                        for (bit, &x) in patch.iter().enumerate() {
+                            let weights = &mem.weights;
+                            self.dp.compute_bit(x, |j| weights.bit(j, bit));
+                        }
+                        self.cycles += patch.len() as u64;
+                        self.breakdown.compute += patch.len() as u64;
+                        let thr = mem.thresholds.as_ref().expect("conv thresholds");
+                        let next_out = &mut next;
+                        self.dp.writeback_hidden(
+                            mem.n_in,
+                            |j| thr.read(j),
+                            |j, b| next_out[pos * out_ch + j] = b,
+                        );
+                        self.cycles += 1;
+                        self.breakdown.writeback += 1;
+                    }
+                }
+            }
+            cur = next;
+        }
+        cur
+    }
+
+    /// Run one full inference on a packed image (`n_in()` bits — the raw
+    /// `C·H·W` image for conv models, 784 for the paper's MLP).
     pub fn run_image(&mut self, image: &crate::bnn::Packed) -> InferenceResult {
-        assert_eq!(image.n_bits, self.dims[0], "image width");
+        assert_eq!(image.n_bits, self.expected_bits, "image width");
         // reset architectural state (paper: result held until reset)
         self.cycles = 0;
         self.breakdown = CycleBreakdown::default();
         self.dp = Datapath::new(self.cfg.parallelism);
-        for l in &mut self.layers {
+        for l in self.conv.iter_mut().map(|c| &mut c.mem).chain(self.layers.iter_mut()) {
             match &mut l.weights {
                 WeightMem::Bram(m) => {
                     m.reads = 0;
@@ -259,10 +377,16 @@ impl Accelerator {
             }
         }
         let bits = image.to_bits();
-        self.act_bits[..bits.len()].copy_from_slice(&bits);
+        let dense_bits = if self.conv.is_empty() {
+            bits
+        } else {
+            self.run_conv_front(&bits)
+        };
+        self.act_bits[..dense_bits.len()].copy_from_slice(&dense_bits);
         self.state = FsmState::LoadImage { substep: 0 };
 
-        let budget = super::analytic_steps(&self.dims, self.cfg.parallelism, self.cfg.mem_style);
+        let budget = self.conv_steps
+            + super::analytic_steps(&self.dims, self.cfg.parallelism, self.cfg.mem_style);
         while self.state != FsmState::Done {
             self.tick();
             assert!(
@@ -278,7 +402,7 @@ impl Accelerator {
             comparisons: self.dp.comparisons,
             ..Default::default()
         };
-        for l in &self.layers {
+        for l in self.conv.iter().map(|c| &c.mem).chain(self.layers.iter()) {
             match &l.weights {
                 WeightMem::Bram(m) => {
                     activity.bram_row_reads += m.reads;
@@ -321,7 +445,12 @@ impl Accelerator {
         let first = self.run_image(image); // establishes deterministic state
         let mut trace = VcdTrace::new(self.cfg.step_ns);
         let bits = image.to_bits();
-        self.act_bits[..bits.len()].copy_from_slice(&bits);
+        let dense_bits = if self.conv.is_empty() {
+            bits
+        } else {
+            self.run_conv_front(&bits) // trace covers the dense FSM only
+        };
+        self.act_bits[..dense_bits.len()].copy_from_slice(&dense_bits);
         self.cycles = 0;
         self.breakdown = CycleBreakdown::default();
         self.state = FsmState::LoadImage { substep: 0 };
@@ -474,5 +603,72 @@ mod tests {
         assert_eq!(r1.digit, r2.digit);
         assert_eq!(r1.cycles, r2.cycles);
         assert_eq!(r1.activity, r2.activity);
+    }
+
+    fn random_packed(rng: &mut Xoshiro256, n_bits: usize) -> crate::bnn::Packed {
+        let bits: Vec<u8> = (0..n_bits).map(|_| rng.bool() as u8).collect();
+        crate::bnn::Packed {
+            words: pack_bits_u64(&bits),
+            n_bits,
+        }
+    }
+
+    #[test]
+    fn conv_sim_matches_software_model() {
+        use crate::bnn::conv::random_conv_model;
+        let specs = [
+            random_conv_model((1, 10, 10), &[(6, 3, 1, 1)], &[32, 10], 11),
+            random_conv_model((3, 9, 9), &[(5, 3, 1, 1), (7, 3, 2, 0)], &[33, 10], 12),
+        ];
+        let mut rng = Xoshiro256::new(13);
+        for model in &specs {
+            for &p in &[1usize, 16, 64] {
+                let mut acc = Accelerator::new(model, SimConfig::new(p, MemStyle::Bram)).unwrap();
+                for _ in 0..2 {
+                    let img = random_packed(&mut rng, model.n_in());
+                    let r = acc.run_image(&img);
+                    assert_eq!(r.scores, model.logits(&img.words), "P={p} scores");
+                    assert_eq!(r.digit as usize, model.predict(&img.words), "P={p} digit");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_formula_matches_execution() {
+        use crate::bnn::conv::random_conv_model;
+        let model = random_conv_model((1, 8, 8), &[(6, 3, 1, 1)], &[24, 10], 14);
+        let mut rng = Xoshiro256::new(15);
+        let img = random_packed(&mut rng, model.n_in());
+        for &p in &[1usize, 4, 64] {
+            for style in [MemStyle::Bram, MemStyle::Lut] {
+                let mut acc = Accelerator::new(&model, SimConfig::new(p, style)).unwrap();
+                let r = acc.run_image(&img);
+                let expect = super::super::analytic_steps_model(&model, p, style);
+                assert_eq!(r.cycles, expect, "P={p} {style:?}");
+                assert_eq!(r.breakdown.total(), r.cycles);
+            }
+        }
+    }
+
+    #[test]
+    fn conv_activity_accounting() {
+        use crate::bnn::conv::random_conv_model;
+        // 6 channels of 3×3×1 patches over 8×8 pad 1 → 64 patches
+        let model = random_conv_model((1, 8, 8), &[(6, 3, 1, 1)], &[24, 10], 16);
+        let mut rng = Xoshiro256::new(17);
+        let img = random_packed(&mut rng, model.n_in());
+        let mut acc = Accelerator::new(&model, SimConfig::new(64, MemStyle::Bram)).unwrap();
+        let r = acc.run_image(&img);
+        let (patches, oc, pb) = (64u64, 6u64, 9u64);
+        let dense_in = 6 * 8 * 8;
+        // conv: every channel row is re-read once per patch; dense: once
+        assert_eq!(r.activity.bram_row_reads, patches * oc + 24 + 10);
+        assert_eq!(
+            r.activity.xnor_ops,
+            patches * oc * pb + 24 * dense_in + 10 * 24
+        );
+        // conv thresholds read per (patch, channel); dense per hidden neuron
+        assert_eq!(r.activity.threshold_reads, patches * oc + 24);
     }
 }

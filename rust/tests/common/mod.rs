@@ -21,7 +21,7 @@
 
 use bnn_fpga::bnn::model::random_model;
 use bnn_fpga::bnn::packing::pack_bits_u64;
-use bnn_fpga::bnn::{BnnModel, Packed};
+use bnn_fpga::bnn::{random_conv_model, BnnModel, Packed};
 use bnn_fpga::util::json::Json;
 use bnn_fpga::util::prng::Xoshiro256;
 
@@ -192,6 +192,244 @@ pub fn load_golden_logits() -> Vec<Vec<Vec<i32>>> {
                 .map(|d| d.as_usize().unwrap())
                 .collect();
             assert_eq!(dims, spec.dims, "{}: dims drifted", spec.name);
+            assert_eq!(
+                case.get("model_seed").unwrap().as_u64().unwrap(),
+                spec.model_seed,
+                "{}: model_seed drifted",
+                spec.name
+            );
+            assert_eq!(
+                case.get("input_seed").unwrap().as_u64().unwrap(),
+                spec.input_seed,
+                "{}: input_seed drifted",
+                spec.name
+            );
+            assert_eq!(
+                case.get("n_inputs").unwrap().as_u64().unwrap() as usize,
+                spec.n_inputs,
+                "{}: n_inputs drifted",
+                spec.name
+            );
+            case.get("logits")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|row| {
+                    row.as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|z| z.as_i64().unwrap() as i32)
+                        .collect()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// One conv golden case: a fixed-seed mixed conv→dense model and input
+/// stream (fixture: `tests/golden/conv_golden_vectors.json`).
+#[derive(Clone, Copy, Debug)]
+pub struct ConvCaseSpec {
+    pub name: &'static str,
+    /// `(in_ch, in_h, in_w)`.
+    pub in_shape: (usize, usize, usize),
+    /// Per conv layer: `(out_ch, kernel, stride, pad)`.
+    pub convs: &'static [(usize, usize, usize, usize)],
+    pub dense: &'static [usize],
+    pub model_seed: u64,
+    pub input_seed: u64,
+    pub n_inputs: usize,
+}
+
+/// The conv golden-vector case specs — keep in sync with `CONV_CASES` in
+/// `python/tools/gen_golden_vectors.py`.  Geometries cover the MNIST
+/// shape, stride 2, a two-conv chain with `C_in > 1`, and a 1×1 conv
+/// whose 66 output channels straddle the 64-row panel boundary.
+pub const CONV_CASES: [ConvCaseSpec; 4] = [
+    ConvCaseSpec {
+        name: "mnist-conv3x3-8ch",
+        in_shape: (1, 28, 28),
+        convs: &[(8, 3, 1, 1)],
+        dense: &[64, 10],
+        model_seed: 3601,
+        input_seed: 9101,
+        n_inputs: 4,
+    },
+    ConvCaseSpec {
+        name: "conv5x5-stride2",
+        in_shape: (1, 28, 28),
+        convs: &[(6, 5, 2, 0)],
+        dense: &[32, 10],
+        model_seed: 3602,
+        input_seed: 9102,
+        n_inputs: 4,
+    },
+    ConvCaseSpec {
+        name: "conv-stack-3ch",
+        in_shape: (3, 9, 9),
+        convs: &[(5, 3, 1, 1), (7, 3, 2, 0)],
+        dense: &[33, 10],
+        model_seed: 3603,
+        input_seed: 9103,
+        n_inputs: 4,
+    },
+    ConvCaseSpec {
+        name: "conv1x1-panel-straddle",
+        in_shape: (2, 6, 6),
+        convs: &[(66, 1, 1, 0)],
+        dense: &[17, 5],
+        model_seed: 3604,
+        input_seed: 9104,
+        n_inputs: 4,
+    },
+];
+
+/// Absolute path of the committed conv fixture (CWD-independent).
+pub fn conv_golden_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/conv_golden_vectors.json")
+}
+
+impl ConvCaseSpec {
+    /// Rebuild the case's deterministic mixed conv→dense model.
+    pub fn model(&self) -> BnnModel {
+        random_conv_model(self.in_shape, self.convs, self.dense, self.model_seed)
+    }
+
+    /// Image-level input width `C·H·W`.
+    pub fn n_in(&self) -> usize {
+        self.in_shape.0 * self.in_shape.1 * self.in_shape.2
+    }
+
+    /// Rebuild the case's input stream (the fixture's draw order).
+    pub fn inputs(&self) -> Vec<Packed> {
+        let mut rng = Xoshiro256::new(self.input_seed);
+        random_images(&mut rng, self.n_in(), self.n_inputs)
+    }
+
+    /// Expected logits from the scalar semantics reference (the conv
+    /// front lowers through the packed im2col path; the fixture's
+    /// committed values went through the independent naive Python conv).
+    pub fn scalar_logits(&self) -> Vec<Vec<i32>> {
+        let model = self.model();
+        self.inputs()
+            .iter()
+            .map(|img| model.logits(&img.words))
+            .collect()
+    }
+}
+
+/// Serialize all conv cases (with per-case logits, index-aligned with
+/// [`CONV_CASES`]) into the canonical conv fixture document.
+pub fn conv_fixture_doc(logits_per_case: &[Vec<Vec<i32>>]) -> Json {
+    assert_eq!(logits_per_case.len(), CONV_CASES.len());
+    let cases: Vec<Json> = CONV_CASES
+        .iter()
+        .zip(logits_per_case)
+        .map(|(spec, logits)| {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert(
+                "convs".to_string(),
+                Json::Arr(
+                    spec.convs
+                        .iter()
+                        .map(|&(oc, k, s, p)| {
+                            Json::Arr(
+                                [oc, k, s, p].iter().map(|&v| Json::from(v as u64)).collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            );
+            m.insert(
+                "dense".to_string(),
+                Json::Arr(spec.dense.iter().map(|&d| Json::from(d as u64)).collect()),
+            );
+            let (c, h, w) = spec.in_shape;
+            m.insert(
+                "in_shape".to_string(),
+                Json::Arr([c, h, w].iter().map(|&v| Json::from(v as u64)).collect()),
+            );
+            m.insert("input_seed".to_string(), Json::from(spec.input_seed));
+            m.insert(
+                "logits".to_string(),
+                Json::Arr(
+                    logits
+                        .iter()
+                        .map(|row| {
+                            Json::Arr(row.iter().map(|&z| Json::from(z as f64)).collect())
+                        })
+                        .collect(),
+                ),
+            );
+            m.insert("model_seed".to_string(), Json::from(spec.model_seed));
+            m.insert("n_inputs".to_string(), Json::from(spec.n_inputs as u64));
+            m.insert("name".to_string(), Json::from(spec.name));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut doc = std::collections::BTreeMap::new();
+    doc.insert("cases".to_string(), Json::Arr(cases));
+    doc.insert(
+        "generator".to_string(),
+        Json::from("python/tools/gen_golden_vectors.py"),
+    );
+    doc.insert("version".to_string(), Json::from(1u64));
+    Json::Obj(doc)
+}
+
+/// The canonical conv fixture file contents for the given logits.
+pub fn conv_fixture_text(logits_per_case: &[Vec<Vec<i32>>]) -> String {
+    let mut s = conv_fixture_doc(logits_per_case).to_string();
+    s.push('\n');
+    s
+}
+
+/// Load the committed conv fixture and return the expected logits per
+/// case, index-aligned with [`CONV_CASES`] (validates names, geometries
+/// and seeds against the in-code specs so the two cannot drift apart).
+pub fn load_conv_golden_logits() -> Vec<Vec<Vec<i32>>> {
+    let path = conv_golden_path();
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "cannot read conv golden fixture {} ({e}); regenerate with \
+             `cargo test --release --test conv_conformance regenerate -- --ignored`",
+            path.display()
+        )
+    });
+    let doc = Json::parse(&text).expect("conv golden fixture parses");
+    assert_eq!(doc.get("version").unwrap().as_u64().unwrap(), 1);
+    let cases = doc.get("cases").unwrap().as_arr().unwrap();
+    assert_eq!(cases.len(), CONV_CASES.len(), "conv fixture case count");
+    cases
+        .iter()
+        .zip(&CONV_CASES)
+        .map(|(case, spec)| {
+            assert_eq!(case.get("name").unwrap().as_str().unwrap(), spec.name);
+            let nums = |key: &str| -> Vec<usize> {
+                case.get(key)
+                    .unwrap()
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|d| d.as_usize().unwrap())
+                    .collect()
+            };
+            let (c, h, w) = spec.in_shape;
+            assert_eq!(nums("in_shape"), vec![c, h, w], "{}: in_shape drifted", spec.name);
+            assert_eq!(nums("dense"), spec.dense, "{}: dense dims drifted", spec.name);
+            let convs: Vec<Vec<usize>> = case
+                .get("convs")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|l| l.as_arr().unwrap().iter().map(|v| v.as_usize().unwrap()).collect())
+                .collect();
+            let want_convs: Vec<Vec<usize>> =
+                spec.convs.iter().map(|&(oc, k, s, p)| vec![oc, k, s, p]).collect();
+            assert_eq!(convs, want_convs, "{}: conv geometry drifted", spec.name);
             assert_eq!(
                 case.get("model_seed").unwrap().as_u64().unwrap(),
                 spec.model_seed,

@@ -1,0 +1,302 @@
+//! Conv-conformance suite (ISSUE 9): the binary-convolution subsystem
+//! against committed golden vectors, an independent naive oracle, the
+//! cycle-accurate simulator, the serving stack, and the estimate models.
+//!
+//! The contract mirrors `kernel_conformance.rs` for mixed conv→dense
+//! models: **bit-identical logits** across every registered kernel tier,
+//! the fpga-sim backend, and the wire-v2 serving path — all pinned to
+//! `tests/golden/conv_golden_vectors.json`, whose committed values went
+//! through the Python generator's *naive* nested-loop conv (the packed
+//! im2col lowering under test never touched them).  The differential
+//! fuzz here re-derives that independence in Rust: a from-scratch ±1
+//! oracle with explicit bounds checks vs the im2col-to-packed-words
+//! lowering, over kernel {1,3,5} × stride {1,2} × pad {0,1} and channel
+//! counts off the 64-bit word grid.
+//!
+//! The CI kernel-conformance matrix runs `conv_layers_are_golden_conformant`
+//! by name in both `BNN_FORCE_SCALAR` legs, so the vectorized and portable
+//! conv paths are each provably exercised.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bnn_fpga::bnn::packing::{pack_bits_u64, unpack_bits_u64};
+use bnn_fpga::bnn::{BinaryConvLayer, BnnModel, Packed};
+use bnn_fpga::coordinator::wire::WireServer;
+use bnn_fpga::coordinator::{
+    BatcherConfig, Engine, InferBackend, InferOptions, Kernel, NativeBackend, SimBackend,
+    WireClient,
+};
+use bnn_fpga::estimate::{power, resources, timing};
+use bnn_fpga::sim::{analytic_steps_model, conv_front_steps, MemStyle, SimConfig};
+use bnn_fpga::util::prng::Xoshiro256;
+
+/// Conv golden gate #1: the committed logits are exactly what the scalar
+/// semantics reference (packed im2col lowering + dense scalar walk)
+/// computes from the pinned seeds.  The fixture side came from the naive
+/// Python conv, so agreement here is already a cross-implementation
+/// check, not a tautology.
+#[test]
+fn conv_golden_fixture_matches_scalar_reference() {
+    let golden = common::load_conv_golden_logits();
+    for (spec, want) in common::CONV_CASES.iter().zip(&golden) {
+        let got = spec.scalar_logits();
+        assert_eq!(
+            &got, want,
+            "{}: scalar reference drifted from the committed conv golden vectors",
+            spec.name
+        );
+    }
+}
+
+/// Conv golden gate #2 (CI-pinned by name): every registered kernel tier
+/// reproduces the committed conv logits exactly, through the same backend
+/// path serving uses — plus the fused tier at panel-straddling tile
+/// widths and the pipelined tier from lockstep to buffered rings.
+#[test]
+fn conv_layers_are_golden_conformant() {
+    let golden = common::load_conv_golden_logits();
+    for (spec, want) in common::CONV_CASES.iter().zip(&golden) {
+        let model = spec.model();
+        let inputs = spec.inputs();
+        // the full registry at a default-ish and a deliberately awkward
+        // (block, tile) shape, then the two prepared tiers at extra
+        // shapes of their own
+        let mut kernels: Vec<Kernel> = Vec::new();
+        for (block, tile) in [(16usize, 8usize), (3, 2)] {
+            kernels.extend(Kernel::registry_with(block, tile));
+        }
+        kernels.extend([1usize, 3, 8].map(|tile_imgs| Kernel::Fused { tile_imgs }));
+        kernels.extend([1usize, 4].map(|ring_cap| Kernel::Pipelined { ring_cap }));
+        for kernel in kernels {
+            let backend = NativeBackend::with_kernel(model.clone(), kernel);
+            assert_eq!(
+                &backend.infer_logits(&inputs).unwrap(),
+                want,
+                "{}: kernel {kernel:?} diverged from the conv golden vectors",
+                spec.name
+            );
+        }
+    }
+}
+
+/// Conv golden gate #3: the cycle-accurate FPGA simulator — which runs
+/// its own u8-level window gather, never the packed im2col path —
+/// reproduces the committed conv logits at both ends of the parallelism
+/// sweep and both memory styles.
+#[test]
+fn conv_fpga_sim_reproduces_golden_vectors() {
+    let golden = common::load_conv_golden_logits();
+    for (spec, want) in common::CONV_CASES.iter().zip(&golden) {
+        let model = spec.model();
+        for cfg in [
+            SimConfig::new(64, MemStyle::Bram),
+            SimConfig::new(16, MemStyle::Lut),
+        ] {
+            let sim = SimBackend::new(&model, cfg).unwrap();
+            let got = sim.infer_logits(&spec.inputs()).unwrap();
+            assert_eq!(
+                &got, want,
+                "{}: fpga-sim (P={}, {:?}) diverged from the conv golden vectors",
+                spec.name, cfg.parallelism, cfg.mem_style
+            );
+        }
+    }
+}
+
+/// The committed conv fixture is byte-for-byte the canonical
+/// serialization of the current reference — catches a stale fixture or a
+/// Python/Rust writer divergence even when the logits still match.
+#[test]
+fn conv_fixture_file_is_canonical() {
+    let logits: Vec<_> = common::CONV_CASES.iter().map(|s| s.scalar_logits()).collect();
+    let want = common::conv_fixture_text(&logits);
+    let got = std::fs::read_to_string(common::conv_golden_path()).expect("fixture readable");
+    assert_eq!(
+        got, want,
+        "conv_golden_vectors.json is stale or non-canonical; regenerate with \
+         `cargo test --release --test conv_conformance regenerate -- --ignored`"
+    );
+}
+
+/// The regeneration path: rewrite the conv fixture from the scalar
+/// reference.  Ignored so it only runs deliberately:
+/// `cargo test --release --test conv_conformance regenerate -- --ignored`
+#[test]
+#[ignore = "rewrites tests/golden/conv_golden_vectors.json from the scalar reference"]
+fn regenerate_conv_golden_vectors() {
+    let logits: Vec<_> = common::CONV_CASES.iter().map(|s| s.scalar_logits()).collect();
+    let text = common::conv_fixture_text(&logits);
+    let path = common::conv_golden_path();
+    std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+    std::fs::write(&path, &text).unwrap();
+    assert_eq!(common::load_conv_golden_logits(), logits);
+    eprintln!("regenerated {}", path.display());
+}
+
+/// From-scratch naive oracle: nested loops over ±1 values with explicit
+/// bounds checks (out-of-image pixels contribute −1, the packed layout's
+/// zero bit), sign activation at the layer threshold.  Shares *nothing*
+/// with the im2col lowering beyond the layer's weight storage.
+fn naive_conv_bits(layer: &BinaryConvLayer, x_bits: &[u8]) -> Vec<u8> {
+    let (ci, h, w) = (layer.in_ch, layer.in_h, layer.in_w);
+    let (k, s, p) = (layer.kernel, layer.stride as isize, layer.pad as isize);
+    let thr = layer.core.thresholds.as_ref().expect("conv thresholds");
+    let weight = |co: usize, bit: usize| -> i32 {
+        let row = layer.core.row(co);
+        if (row[bit / 64] >> (bit % 64)) & 1 == 1 {
+            1
+        } else {
+            -1
+        }
+    };
+    let mut out = Vec::with_capacity(layer.out_bits());
+    for oy in 0..layer.out_h() {
+        for ox in 0..layer.out_w() {
+            for co in 0..layer.out_ch() {
+                let mut z = 0i32;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let iy = oy as isize * s - p + ky as isize;
+                        let ix = ox as isize * s - p + kx as isize;
+                        for c in 0..ci {
+                            let xv = if iy >= 0
+                                && iy < h as isize
+                                && ix >= 0
+                                && ix < w as isize
+                                && x_bits[(iy as usize * w + ix as usize) * ci + c] == 1
+                            {
+                                1i32
+                            } else {
+                                -1
+                            };
+                            z += xv * weight(co, (ky * k + kx) * ci + c);
+                        }
+                    }
+                }
+                out.push(u8::from(z >= thr[co]));
+            }
+        }
+    }
+    out
+}
+
+/// Differential fuzz: the packed im2col lowering (whole-model `logits`
+/// plus a batched kernel tier) vs the naive oracle chained into a
+/// dense-only twin of the model, over kernel {1,3,5} × stride {1,2} ×
+/// pad {0,1} (pad < kernel — the library rejects the rest) × channel
+/// counts off the 64-bit word grid, with *random non-zero thresholds*
+/// patched in so the sign activation is fuzzed too.
+#[test]
+fn conv_im2col_vs_naive_differential_fuzz() {
+    let mut rng = Xoshiro256::new(0xD1FF);
+    for k in [1usize, 3, 5] {
+        for s in [1usize, 2] {
+            for p in [0usize, 1] {
+                if p >= k {
+                    continue;
+                }
+                for (ci, co) in [(1usize, 5usize), (3, 7), (2, 66)] {
+                    let h = k.max(5) + 1;
+                    let mut model = bnn_fpga::bnn::random_conv_model(
+                        (ci, h, h),
+                        &[(co, k, s, p)],
+                        &[17, 5],
+                        rng.next_u64(),
+                    );
+                    // random thresholds in (−patch_bits, patch_bits)
+                    let pb = model.conv[0].patch_bits() as i64;
+                    let thr: Vec<i32> =
+                        (0..co).map(|_| rng.range_i64(-pb, pb) as i32).collect();
+                    model.conv[0].core.thresholds = Some(thr);
+                    model.validate().unwrap();
+
+                    let images: Vec<Packed> = common::random_images(&mut rng, model.n_in(), 3);
+                    // naive pipeline: oracle conv bits → dense-only twin
+                    let dense_twin = BnnModel::dense(model.layers.clone());
+                    let want: Vec<Vec<i32>> = images
+                        .iter()
+                        .map(|img| {
+                            let bits = unpack_bits_u64(&img.words, model.n_in());
+                            let conv_out = naive_conv_bits(&model.conv[0], &bits);
+                            dense_twin.logits(&pack_bits_u64(&conv_out))
+                        })
+                        .collect();
+                    // packed im2col lowering: scalar walk per image…
+                    let got: Vec<Vec<i32>> =
+                        images.iter().map(|img| model.logits(&img.words)).collect();
+                    assert_eq!(got, want, "scalar: k={k} s={s} p={p} ci={ci} co={co}");
+                    // …and one batched prepared tier over the same images
+                    let backend = NativeBackend::with_kernel(
+                        model.clone(),
+                        Kernel::Fused { tile_imgs: 2 },
+                    );
+                    assert_eq!(
+                        backend.infer_logits(&images).unwrap(),
+                        want,
+                        "fused: k={k} s={s} p={p} ci={ci} co={co}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// End-to-end serve test: a conv model behind the batching engine and the
+/// wire-v2 server returns the same digits and logits the model computes
+/// locally — format v2 models are first-class citizens of the serving
+/// stack, not just the library walks.
+#[test]
+fn conv_model_serves_end_to_end_over_wire_v2() {
+    let spec = &common::CONV_CASES[0]; // 1×28×28 → the wire's native 784 bits
+    let model = spec.model();
+    let engine = Arc::new(
+        Engine::builder()
+            .native(&model)
+            .kernel(Kernel::default())
+            .workers(2)
+            .batcher(BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(100),
+            })
+            .build()
+            .unwrap(),
+    );
+    let server = WireServer::start("127.0.0.1:0", engine).unwrap();
+    let mut client = WireClient::connect(server.addr).unwrap();
+    let opts = InferOptions::default().with_logits(true);
+    for (i, img) in spec.inputs().iter().enumerate() {
+        let item = client.classify_v2(img, opts).unwrap();
+        assert_eq!(item.digit as usize, model.predict(&img.words), "image {i}");
+        assert_eq!(item.logits, model.logits(&img.words), "image {i}");
+    }
+    server.shutdown();
+}
+
+/// The estimate stack covers conv topologies end to end: LUT/FF/BRAM
+/// numbers from the resource model, slack from the timing model, watts
+/// from the power model, and cycle counts from the analytic formula —
+/// all finite, non-degenerate, and strictly above the dense-only
+/// baseline where the conv front adds real work.
+#[test]
+fn estimate_stack_reports_conv_topology_numbers() {
+    let model = common::CONV_CASES[0].model();
+    for style in [MemStyle::Bram, MemStyle::Lut] {
+        let r = resources::estimate_model(&model, 64, style);
+        assert!(r.luts > 0 && r.flip_flops > 0, "{style:?}: {r:?}");
+        if style == MemStyle::Bram {
+            assert!(r.bram_blocks > 0, "{r:?}");
+        }
+        let t = timing::estimate_model(&model, 64, style);
+        assert!(t.meets_80mhz, "{style:?}: WNS {}", t.wns_ns);
+        let cfg = SimConfig::new(64, style);
+        let w = power::estimate_model(&model, &cfg);
+        assert!(w.total_w > 0.0 && w.total_w.is_finite(), "{style:?}: {w:?}");
+        // cycles: the conv front adds steps on top of the dense walk
+        let steps = analytic_steps_model(&model, 64, style);
+        let front = conv_front_steps(&model, 64);
+        assert!(front > 0 && steps > front, "front {front}, total {steps}");
+    }
+}
