@@ -4,7 +4,7 @@
 
 ARTIFACTS ?= artifacts
 
-.PHONY: artifacts build test bench bench-json bench-serving bench-check doc clean
+.PHONY: artifacts build test bench bench-json bench-serving bench-check chaos doc clean
 
 artifacts:
 	cd python && python3 -m compile.train --out ../$(ARTIFACTS)
@@ -49,6 +49,14 @@ bench-check:
 	@test -f BENCH_serving.json || { echo "BENCH_serving.json missing at repo root; run 'make bench-serving' and commit the result"; exit 1; }
 	cargo test --release --test bench_trajectory -q
 	@echo "BENCH_hotpath.json covers every registry kernel tier; BENCH_serving.json trajectory is sane"
+
+# Fault-tolerance soak (DESIGN.md §Fault tolerance): the seeded chaos
+# acceptance test (panic/latency/error faults through the async server,
+# every request typed-resolved, ledger balanced, restarts observed), then
+# a self-contained CLI soak with fault injection on 5% of backend calls.
+chaos:
+	cargo test --release --test chaos_serve -q
+	cargo run --release -- loadgen --chaos-rate 5 --rate 4000 --duration-ms 2000 --connections 4
 
 doc:
 	cargo doc --no-deps

@@ -18,6 +18,7 @@
 mod common;
 
 use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -41,17 +42,19 @@ fn main() {
         .map(|n| n.get())
         .unwrap_or(1)
         .min(4);
-    let engine = Engine::builder()
-        .native(&model)
-        .kernel(Kernel::Fused { tile_imgs: DEFAULT_TILE_IMGS })
-        .workers(workers)
-        .batcher(BatcherConfig {
-            max_batch: 64,
-            max_wait: Duration::from_micros(100),
-        })
-        .build()
-        .expect("engine build");
-    let server = AsyncWireServer::start("127.0.0.1:0", Arc::new(engine)).expect("server start");
+    let engine = Arc::new(
+        Engine::builder()
+            .native(&model)
+            .kernel(Kernel::Fused { tile_imgs: DEFAULT_TILE_IMGS })
+            .workers(workers)
+            .batcher(BatcherConfig {
+                max_batch: 64,
+                max_wait: Duration::from_micros(100),
+            })
+            .build()
+            .expect("engine build"),
+    );
+    let server = AsyncWireServer::start("127.0.0.1:0", engine.clone()).expect("server start");
     println!(
         "async server on {} ({} backend), {workers} engine workers, fused kernel\n",
         server.addr, server.poll_backend
@@ -68,6 +71,7 @@ fn main() {
         duration: Duration::from_millis(300),
         v1_fraction: 0.5,
         seed: 1,
+        model: None,
     };
     run_open_loop(&images, &warm).expect("warmup run");
 
@@ -106,6 +110,7 @@ fn main() {
             duration,
             v1_fraction: 0.5,
             seed: 0xB14D + i as u64,
+            model: None,
         };
         let r = run_open_loop(&images, &cfg).expect("load run");
         t.row(vec![
@@ -134,6 +139,9 @@ fn main() {
                 ("p99_us", Json::from(r.p99_us)),
                 ("p999_us", Json::from(r.p999_us)),
                 ("max_us", Json::from(r.max_us)),
+                ("err_p50_us", Json::from(r.err_p50_us)),
+                ("err_p99_us", Json::from(r.err_p99_us)),
+                ("err_max_us", Json::from(r.err_max_us)),
             ]),
         );
     }
@@ -147,7 +155,26 @@ fn main() {
         "\nmax sustained: {max_sustained:.0} images/sec (achieved ≥ {:.0}% of offered)",
         SUSTAIN_FRACTION * 100.0
     );
-    println!("server served {} images OK", server.served.load(std::sync::atomic::Ordering::Relaxed));
+    println!("server served {} images OK", server.served.load(Ordering::Relaxed));
+
+    // The engine's own books: the trajectory carries the fault ledger so a
+    // regression that crashes workers or sheds deadlines mid-bench is
+    // visible in the committed artifact, not just the latency tails.
+    let m = engine.metrics();
+    let ledger = obj(vec![
+        ("submitted", Json::from(m.submitted.load(Ordering::Relaxed))),
+        ("completed", Json::from(m.completed.load(Ordering::Relaxed))),
+        ("rejected", Json::from(m.rejected.load(Ordering::Relaxed))),
+        ("cancelled", Json::from(m.cancelled.load(Ordering::Relaxed))),
+        (
+            "worker_restarts",
+            Json::from(m.worker_restarts.load(Ordering::Relaxed)),
+        ),
+        (
+            "deadline_expired",
+            Json::from(m.deadline_expired.load(Ordering::Relaxed)),
+        ),
+    ]);
 
     let doc = obj(vec![
         ("bench", Json::from("serving")),
@@ -159,6 +186,7 @@ fn main() {
         ("v1_fraction", Json::from(0.5)),
         ("rates", Json::Obj(rate_json)),
         ("max_sustained_ips", Json::from(max_sustained)),
+        ("ledger", ledger),
     ]);
     let out_path = std::env::var_os("BNN_BENCH_SERVING_JSON")
         .map(std::path::PathBuf::from)

@@ -55,9 +55,13 @@ SUBCOMMANDS
              idx3 file (--index picks the image)
   loadgen    --addr HOST:PORT [--rate R] [--connections C]
              [--duration-ms MS] [--mix-v1 PCT] [--seed S] [--model NAME]
+             [--chaos-rate PCT] [--chaos-seed S] [--workers W]
              open-loop load against a running serve instance; --model
              names a registry model in the v2 frames (implies v2-only
-             unless --mix-v1 is given)
+             unless --mix-v1 is given).  --chaos-rate/--chaos-seed run
+             the self-contained chaos soak instead: an in-process async
+             server over a fault-injecting engine (no --addr needed),
+             reporting restarts and typed-error latency separately
   trace      [--image N] [--parallelism P] [--out trace.vcd]  VCD waveform
 
 Set BNN_FPGA_ARTIFACTS to override the artifacts directory (default ./artifacts).
@@ -762,18 +766,27 @@ fn cmd_classify(args: &Args) -> Result<()> {
 
 /// Open-loop load against a running `serve` instance (see
 /// `coordinator/loadgen.rs` on why the loop is open): prints the achieved
-/// throughput and the scheduled-send latency percentiles.
+/// throughput and the scheduled-send latency percentiles (success-only,
+/// with a separate error-latency line).
+///
+/// `--chaos-rate`/`--chaos-seed` switch to the self-contained chaos soak:
+/// an in-process async server over a [`crate::coordinator::ChaosBackend`]
+/// -wrapped engine is stood up, the open loop is aimed at it, and the
+/// engine's fault ledger (restarts, rejected, deadline sheds) is printed
+/// at the end — no `--addr` needed.
 fn cmd_loadgen(args: &Args) -> Result<()> {
-    use crate::coordinator::{run_open_loop, LoadConfig};
+    use crate::coordinator::{
+        run_open_loop, AsyncWireServer, ChaosConfig, InferOptions, LoadConfig, ModelRegistry,
+        RetryPolicy, WireClient,
+    };
     use std::net::ToSocketAddrs;
-    let addr_s = args
-        .opt("addr")
-        .ok_or_else(|| anyhow::anyhow!("loadgen needs --addr HOST:PORT"))?;
-    let addr = addr_s
-        .to_socket_addrs()
-        .with_context(|| format!("resolving '{addr_s}'"))?
-        .next()
-        .ok_or_else(|| anyhow::anyhow!("'{addr_s}' resolved to no address"))?;
+
+    let chaos_rate = args.f64_or("chaos-rate", 0.0)?;
+    if !(0.0..=100.0).contains(&chaos_rate) {
+        bail!("--chaos-rate must be a percentage in 0..=100");
+    }
+    let chaos = chaos_rate > 0.0 || args.opt("chaos-seed").is_some();
+
     let model = args.opt("model").map(str::to_string);
     // v1 frames cannot carry a model name, so naming a model defaults the
     // mix to v2-only; an explicit --mix-v1 still wins (the v1 share just
@@ -783,6 +796,44 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     if !(0.0..=100.0).contains(&mix_v1) {
         bail!("--mix-v1 must be a percentage in 0..=100");
     }
+
+    // the image pool: trained artifacts when present, synthetic otherwise —
+    // load generation only needs well-formed 784-bit frames
+    let (bnn_model, ds, trained) = crate::load_model_or_synth(256);
+    if !trained {
+        println!("(artifacts missing — load uses synthetic images)");
+    }
+
+    let (soak, addr) = if chaos {
+        let seed = args.u64_or("chaos-seed", 0xC4A05)?;
+        let rate = if chaos_rate > 0.0 { chaos_rate } else { 5.0 };
+        let engine = Engine::builder()
+            .native(&bnn_model)
+            .workers(args.usize_or("workers", 2)?)
+            .chaos(ChaosConfig::new(seed, rate / 100.0))
+            .build()?;
+        let registry = Arc::new(ModelRegistry::new());
+        registry.register(model.as_deref().unwrap_or("default"), engine);
+        let server = AsyncWireServer::start_registry("127.0.0.1:0", registry.clone())?;
+        println!(
+            "chaos soak : in-process async server on {} ({} backend), seed {seed:#x}, \
+             fault rate {rate:.1}%",
+            server.addr, server.poll_backend
+        );
+        let a = server.addr;
+        (Some((server, registry)), a)
+    } else {
+        let addr_s = args
+            .opt("addr")
+            .ok_or_else(|| anyhow::anyhow!("loadgen needs --addr HOST:PORT (or --chaos-rate)"))?;
+        let addr = addr_s
+            .to_socket_addrs()
+            .with_context(|| format!("resolving '{addr_s}'"))?
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("'{addr_s}' resolved to no address"))?;
+        (None, addr)
+    };
+
     let cfg = LoadConfig {
         addr,
         connections: args.usize_or("connections", 16)?,
@@ -792,12 +843,6 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 0xB14D)?,
         model,
     };
-    // the image pool: trained artifacts when present, synthetic otherwise —
-    // load generation only needs well-formed 784-bit frames
-    let (_, ds, trained) = crate::load_model_or_synth(256);
-    if !trained {
-        println!("(artifacts missing — load uses synthetic images)");
-    }
     println!(
         "offering {:.0} images/sec for {} ms over {} connections ({:.0}% v1{}) at {addr}",
         cfg.rate,
@@ -811,9 +856,39 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     println!("completed  : {} ({} typed errors)", r.completed, r.errors);
     println!("achieved   : {:.0} images/sec (offered {:.0})", r.achieved_ips, r.offered_ips);
     println!(
-        "latency    : p50 {:.0} µs  p99 {:.0} µs  p999 {:.0} µs  max {:.0} µs",
+        "latency    : p50 {:.0} µs  p99 {:.0} µs  p999 {:.0} µs  max {:.0} µs (success only)",
         r.p50_us, r.p99_us, r.p999_us, r.max_us
     );
+    if r.errors > 0 {
+        println!(
+            "err-latency: p50 {:.0} µs  p99 {:.0} µs  max {:.0} µs ({} typed errors)",
+            r.err_p50_us, r.err_p99_us, r.err_max_us, r.errors
+        );
+    }
     println!("wall       : {:.1} ms", r.wall.as_secs_f64() * 1e3);
+    if let Some((server, registry)) = soak {
+        // a retrying probe before teardown: exercise the client backoff
+        // path against the faulting server, then fold the attempt count
+        // into the engine books so `retries=` in the summary line is live
+        let mut probe = WireClient::connect(server.addr)?.with_retry(RetryPolicy::default());
+        let probes = ds.images.len().min(32);
+        let mut served = 0usize;
+        for img in ds.images.iter().take(probes) {
+            if probe.classify_v2(img, InferOptions::default()).is_ok() {
+                served += 1;
+            }
+        }
+        let retries = probe.retries_attempted();
+        drop(probe);
+        server.shutdown();
+        if let Ok(engine) = registry.engine(cfg.model.as_deref().unwrap_or("default")) {
+            engine
+                .metrics()
+                .retries_attempted
+                .fetch_add(retries, std::sync::atomic::Ordering::Relaxed);
+        }
+        println!("probes     : {served}/{probes} served through the retrying client ({retries} retries)");
+        print!("engine     : {}", registry.metrics_report());
+    }
     Ok(())
 }

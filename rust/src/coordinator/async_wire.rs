@@ -46,10 +46,10 @@ use netpoll::{Events, Interest, Poller};
 use super::metrics::Metrics;
 use super::request::InferOptions;
 use super::wire::{
-    check_model_name_len, encode_error, encode_error_v2, encode_response, encode_response_v2,
-    parse_model_name, parse_v2_header, payload_bytes, submit_error_status, unpack_payload,
-    Dispatch, WireItem, WireServerConfig, WireStatus, FEAT_MODEL, IMAGE_BITS, MAGIC_REQ,
-    MAGIC_REQ_V2, PAYLOAD_BYTES,
+    arm_deadline, check_model_name_len, encode_error, encode_error_v2, encode_response,
+    encode_response_v2, parse_model_name, parse_v2_header, payload_bytes, submit_error_status,
+    unpack_payload, Dispatch, WireItem, WireServerConfig, WireStatus, FEAT_DEADLINE, FEAT_MODEL,
+    IMAGE_BITS, MAGIC_REQ, MAGIC_REQ_V2, PAYLOAD_BYTES,
 };
 use super::router::ModelRegistry;
 use super::InferService;
@@ -175,6 +175,22 @@ fn try_parse(buf: &[u8]) -> (usize, Parsed) {
             } else {
                 (17, None)
             };
+            // the FEAT_DEADLINE budget (4 LE bytes, µs remaining) follows
+            // the name section; it is armed against *this* clock as soon as
+            // the section is complete, so queueing before parse already
+            // counts against the budget
+            let mut opts = h.opts();
+            let payload_off = if h.features & FEAT_DEADLINE != 0 {
+                let end = payload_off + 4;
+                let Some(budget) = buf.get(payload_off..end) else {
+                    return (0, Parsed::NeedMore);
+                };
+                let budget = u32::from_le_bytes(budget.try_into().unwrap());
+                opts.deadline = Some(arm_deadline(budget, Instant::now()));
+                end
+            } else {
+                payload_off
+            };
             let pb = payload_bytes(h.n_bits);
             let total = payload_off + h.n_images * pb;
             if buf.len() < total {
@@ -192,7 +208,7 @@ fn try_parse(buf: &[u8]) -> (usize, Parsed) {
                     id: h.id,
                     features: h.features,
                     top_k: h.top_k,
-                    opts: h.opts(),
+                    opts,
                     model,
                     images,
                 },
@@ -436,10 +452,12 @@ fn poll_reply(reply: &mut PendingReply, resolved_now: &mut usize, metrics: &Metr
                     *slot = Slot::Done(r);
                 }
                 Ok(None) => return false,
-                Err(_) => {
-                    // backend dropped the ticket channel — a worker died
+                Err(e) => {
+                    // typed failure (worker crash, deadline shed) or a
+                    // dropped ticket channel — map to the wire status the
+                    // blocking server would answer with
                     *resolved_now += 1;
-                    *slot = Slot::Failed(WireStatus::Backend);
+                    *slot = Slot::Failed(submit_error_status(&e));
                 }
             }
         }
@@ -928,6 +946,64 @@ mod tests {
             let (c, p) = try_parse(&frame[..cut]);
             assert_eq!(c, 0, "cut {cut}");
             assert!(matches!(p, Parsed::NeedMore), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn try_parse_v2_deadline_section_arms_a_fresh_deadline() {
+        let img = {
+            let bits: Vec<u8> = (0..64).map(|i| (i % 5 == 0) as u8).collect();
+            Packed::from_bits(&bits)
+        };
+        let opts = InferOptions::default().with_budget(Duration::from_millis(250));
+        // composed with a model name: the budget section sits *after* the
+        // name and before the payloads
+        let frame = super::super::wire::encode_request_v2_for(
+            std::slice::from_ref(&img),
+            13,
+            opts,
+            Some("mnist-b"),
+        )
+        .unwrap();
+        // every strict prefix — including cuts inside the 4-byte budget —
+        // is NeedMore, never Bad, never a short consume
+        for cut in 0..frame.len() {
+            let (c, p) = try_parse(&frame[..cut]);
+            assert_eq!(c, 0, "cut {cut}");
+            assert!(matches!(p, Parsed::NeedMore), "cut {cut}");
+        }
+        match try_parse(&frame) {
+            (c, Parsed::V2 { id, opts, model, images, .. }) => {
+                assert_eq!(c, frame.len());
+                assert_eq!(id, 13);
+                assert_eq!(model.as_deref(), Some("mnist-b"));
+                assert_eq!(images[0].words, img.words);
+                let deadline = opts.deadline.expect("deadline not armed");
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                // re-armed against this clock from the relative budget:
+                // strictly less than sent (encode/parse took time), nonzero
+                // (the budget was roomy); 260 ms headroom absorbs the two
+                // separate Instant::now() calls
+                assert!(remaining > Duration::ZERO, "{remaining:?}");
+                assert!(remaining <= Duration::from_millis(260), "{remaining:?}");
+            }
+            _ => panic!("deadline-bearing v2 frame did not parse"),
+        }
+        // nameless deadline frame: section directly after the 16-byte head
+        let frame = super::super::wire::encode_request_v2(
+            std::slice::from_ref(&img),
+            14,
+            InferOptions::default().with_budget(Duration::from_millis(100)),
+        )
+        .unwrap();
+        match try_parse(&frame) {
+            (c, Parsed::V2 { id, opts, model, .. }) => {
+                assert_eq!(c, frame.len());
+                assert_eq!(id, 14);
+                assert!(model.is_none());
+                assert!(opts.deadline.is_some());
+            }
+            _ => panic!("nameless deadline frame did not parse"),
         }
     }
 

@@ -1,0 +1,316 @@
+//! Chaos-injection backend: deterministic fault injection for exercising
+//! the serving stack's failure paths (DESIGN.md §Fault tolerance).
+//!
+//! [`ChaosBackend`] wraps any [`InferBackend`] and, on a seeded
+//! pseudo-random subset of `infer_batch` calls, injects one of four fault
+//! kinds instead of (or around) the delegated call:
+//!
+//! | fault            | what the serving stack must survive                |
+//! |------------------|----------------------------------------------------|
+//! | [`FaultKind::Error`]      | `infer_batch` returns `Err` — the designed failure path |
+//! | [`FaultKind::Panic`]      | the worker thread panics mid-batch — supervision territory |
+//! | [`FaultKind::Latency`]    | the call stalls for the configured spike, then succeeds |
+//! | [`FaultKind::WrongShape`] | the logits arena comes back with the wrong row count |
+//!
+//! The fault plan is a **pure function of `(seed, call index)`** — two runs
+//! with the same seed inject the same faults at the same call indices
+//! regardless of thread interleaving, so chaos soaks are reproducible and
+//! a failure seed can be replayed.  The call index is a process-wide
+//! atomic: with N worker replicas sharing one `Arc<ChaosBackend>`, which
+//! *worker* eats a given fault varies run to run, but the fault *sequence*
+//! does not.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::backend::{InferBackend, InferScratch, LogitsBuf};
+use crate::bnn::packing::Packed;
+use crate::util::prng::SplitMix64;
+
+/// One injectable fault (see the module table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `infer_batch` bails with a typed chaos error.
+    Error,
+    /// The call panics (unwinds) — exercises worker supervision.
+    Panic,
+    /// The call sleeps for [`ChaosConfig::spike`], then delegates normally
+    /// — exercises deadline sheds and batching under latency spikes.
+    Latency,
+    /// Delegates, then mis-sizes the logits arena (one extra zero row) —
+    /// exercises the batch executor's shape guard.
+    WrongShape,
+}
+
+impl FaultKind {
+    /// Every kind, in the order the picker indexes them.
+    pub const ALL: [FaultKind; 4] = [
+        FaultKind::Error,
+        FaultKind::Panic,
+        FaultKind::Latency,
+        FaultKind::WrongShape,
+    ];
+
+    /// Short name (logs/reports).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Error => "error",
+            FaultKind::Panic => "panic",
+            FaultKind::Latency => "latency",
+            FaultKind::WrongShape => "wrong-shape",
+        }
+    }
+}
+
+/// Seeded fault plan: which calls fault, and how.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    /// Plan seed — same seed, same plan.
+    pub seed: u64,
+    /// Per-call fault probability in `[0, 1]`.
+    pub rate: f64,
+    /// Kinds eligible for injection; empty disables injection entirely.
+    pub kinds: Vec<FaultKind>,
+    /// Stall duration for [`FaultKind::Latency`] faults.
+    pub spike: Duration,
+}
+
+impl ChaosConfig {
+    /// All fault kinds enabled with a 2 ms latency spike.
+    pub fn new(seed: u64, rate: f64) -> Self {
+        Self {
+            seed,
+            rate,
+            kinds: FaultKind::ALL.to_vec(),
+            spike: Duration::from_millis(2),
+        }
+    }
+
+    /// Restrict the plan to `kinds` (builder-style).
+    pub fn with_kinds(mut self, kinds: &[FaultKind]) -> Self {
+        self.kinds = kinds.to_vec();
+        self
+    }
+
+    /// Override the latency-spike duration (builder-style).
+    pub fn with_spike(mut self, spike: Duration) -> Self {
+        self.spike = spike;
+        self
+    }
+
+    /// The fault (if any) this plan injects at call `call` — pure, so
+    /// tests and replay tooling can enumerate the plan without running it.
+    pub fn fault_for(&self, call: u64) -> Option<FaultKind> {
+        if self.kinds.is_empty() || self.rate <= 0.0 {
+            return None;
+        }
+        if self.rate < 1.0 {
+            // compare a uniform u64 hash against the rate threshold
+            let threshold = (self.rate * u64::MAX as f64) as u64;
+            if SplitMix64::new(self.seed ^ call).next_u64() >= threshold {
+                return None;
+            }
+        }
+        // second, independent hash picks the kind among the enabled ones
+        let pick = SplitMix64::new(self.seed.rotate_left(17) ^ call.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .next_u64();
+        Some(self.kinds[(pick % self.kinds.len() as u64) as usize])
+    }
+}
+
+/// An [`InferBackend`] decorator injecting the configured fault plan.
+/// Clean calls delegate untouched — logits are bit-identical to the
+/// wrapped backend's.
+pub struct ChaosBackend {
+    inner: Arc<dyn InferBackend>,
+    cfg: ChaosConfig,
+    calls: AtomicU64,
+    injected: AtomicU64,
+}
+
+impl ChaosBackend {
+    pub fn new(inner: Arc<dyn InferBackend>, cfg: ChaosConfig) -> Self {
+        Self {
+            inner,
+            cfg,
+            calls: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// `infer_batch` calls seen so far (clean + faulted).
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Faults injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// The plan this backend runs.
+    pub fn config(&self) -> &ChaosConfig {
+        &self.cfg
+    }
+}
+
+impl InferBackend for ChaosBackend {
+    fn name(&self) -> &'static str {
+        "chaos"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+
+    fn expected_bits(&self) -> Option<usize> {
+        self.inner.expected_bits()
+    }
+
+    fn infer_batch(
+        &self,
+        images: &[&Packed],
+        scratch: &mut InferScratch,
+        out: &mut LogitsBuf,
+    ) -> Result<()> {
+        let call = self.calls.fetch_add(1, Ordering::SeqCst);
+        let Some(fault) = self.cfg.fault_for(call) else {
+            return self.inner.infer_batch(images, scratch, out);
+        };
+        self.injected.fetch_add(1, Ordering::SeqCst);
+        match fault {
+            FaultKind::Error => anyhow::bail!("chaos: injected backend error (call {call})"),
+            FaultKind::Panic => panic!("chaos: injected worker panic (call {call})"),
+            FaultKind::Latency => {
+                std::thread::sleep(self.cfg.spike);
+                self.inner.infer_batch(images, scratch, out)
+            }
+            FaultKind::WrongShape => {
+                self.inner.infer_batch(images, scratch, out)?;
+                // one extra zero row: rows() no longer matches the batch,
+                // which the executor's shape guard must catch
+                out.reset(images.len() + 1, out.stride().max(1));
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::model::model_from_sign_rows;
+    use crate::bnn::packing::pack_bits_u64;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::util::prng::Xoshiro256;
+
+    fn tiny_model(seed: u64) -> crate::bnn::BnnModel {
+        let mut rng = Xoshiro256::new(seed);
+        let dims = [784usize, 32, 10];
+        let mut spec = Vec::new();
+        for (li, w) in dims.windows(2).enumerate() {
+            let rows: Vec<Vec<i8>> = (0..w[1])
+                .map(|_| (0..w[0]).map(|_| if rng.bool() { 1 } else { -1 }).collect())
+                .collect();
+            let thr = (li + 2 < dims.len()).then(|| vec![0i32; w[1]]);
+            spec.push((rows, thr));
+        }
+        model_from_sign_rows(spec).unwrap()
+    }
+
+    fn image(seed: u64) -> Packed {
+        let mut rng = Xoshiro256::new(seed);
+        let bits: Vec<u8> = (0..784).map(|_| rng.bool() as u8).collect();
+        Packed {
+            words: pack_bits_u64(&bits),
+            n_bits: 784,
+        }
+    }
+
+    #[test]
+    fn fault_plan_is_deterministic_and_rate_bounded() {
+        let cfg = ChaosConfig::new(0xC4A05, 0.05);
+        let plan: Vec<Option<FaultKind>> = (0..20_000).map(|c| cfg.fault_for(c)).collect();
+        let replay: Vec<Option<FaultKind>> = (0..20_000).map(|c| cfg.fault_for(c)).collect();
+        assert_eq!(plan, replay, "same seed must give the same plan");
+        let faults = plan.iter().flatten().count();
+        // 5% of 20k = 1000 expected; a uniform hash stays well inside ±50%
+        assert!((500..1500).contains(&faults), "fault count {faults}");
+        // every enabled kind shows up at this sample size
+        for kind in FaultKind::ALL {
+            assert!(
+                plan.iter().flatten().any(|f| *f == kind),
+                "kind {kind:?} never drawn"
+            );
+        }
+        // a different seed gives a different plan
+        let other = ChaosConfig::new(0xC4A06, 0.05);
+        assert_ne!(
+            plan,
+            (0..20_000).map(|c| other.fault_for(c)).collect::<Vec<_>>()
+        );
+        // degenerate rates
+        let never = ChaosConfig::new(1, 0.0);
+        assert!((0..1000).all(|c| never.fault_for(c).is_none()));
+        let always = ChaosConfig::new(1, 1.0);
+        assert!((0..1000).all(|c| always.fault_for(c).is_some()));
+        let disabled = ChaosConfig::new(1, 1.0).with_kinds(&[]);
+        assert!((0..1000).all(|c| disabled.fault_for(c).is_none()));
+    }
+
+    #[test]
+    fn clean_calls_delegate_bit_identically() {
+        let model = tiny_model(3);
+        let plain = NativeBackend::new(model.clone());
+        let chaos = ChaosBackend::new(Arc::new(NativeBackend::new(model)), ChaosConfig::new(9, 0.0));
+        let img = image(7);
+        let want = plain.infer_logits(std::slice::from_ref(&img)).unwrap();
+        let got = chaos.infer_logits(std::slice::from_ref(&img)).unwrap();
+        assert_eq!(want, got);
+        assert_eq!(chaos.calls(), 1);
+        assert_eq!(chaos.injected(), 0);
+    }
+
+    #[test]
+    fn each_fault_kind_injects_its_failure_mode() {
+        let model = tiny_model(4);
+        let img = image(8);
+        let imgs = [&img];
+        let mk = |kinds: &[FaultKind]| {
+            ChaosBackend::new(
+                Arc::new(NativeBackend::new(model.clone())),
+                ChaosConfig::new(5, 1.0)
+                    .with_kinds(kinds)
+                    .with_spike(Duration::from_micros(50)),
+            )
+        };
+        let mut scratch = InferScratch::default();
+        let mut out = LogitsBuf::new();
+
+        let e = mk(&[FaultKind::Error])
+            .infer_batch(&imgs, &mut scratch, &mut out)
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("chaos: injected"), "{e:#}");
+
+        let b = mk(&[FaultKind::Panic]);
+        let p = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut scratch = InferScratch::default();
+            let mut out = LogitsBuf::new();
+            let _ = b.infer_batch(&imgs, &mut scratch, &mut out);
+        }));
+        assert!(p.is_err(), "panic fault must unwind");
+
+        let b = mk(&[FaultKind::Latency]);
+        b.infer_batch(&imgs, &mut scratch, &mut out).unwrap();
+        assert_eq!(out.rows(), 1, "latency fault still answers correctly");
+
+        let b = mk(&[FaultKind::WrongShape]);
+        b.infer_batch(&imgs, &mut scratch, &mut out).unwrap();
+        assert_eq!(out.rows(), 2, "wrong-shape fault mis-sizes the arena");
+        assert_eq!(b.calls(), 1);
+        assert_eq!(b.injected(), 1);
+    }
+}

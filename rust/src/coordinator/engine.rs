@@ -40,10 +40,11 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::backend::{InferBackend, Kernel};
+use super::backend::{InferBackend, Kernel, NativeBackend, SimBackend};
 use super::batcher::BatcherConfig;
+use super::chaos::{ChaosBackend, ChaosConfig};
 use super::metrics::Metrics;
-use super::pool::WorkerPool;
+use super::pool::{RestartPolicy, WorkerPool};
 use super::request::{InferOptions, InferResponse, Ticket};
 use super::server::{Coordinator, DEFAULT_QUEUE_CAP};
 use crate::bnn::packing::Packed;
@@ -95,6 +96,8 @@ pub struct EngineBuilder {
     workers: Option<usize>,
     batcher: BatcherConfig,
     queue_cap: usize,
+    chaos: Option<ChaosConfig>,
+    restart: RestartPolicy,
 }
 
 impl EngineBuilder {
@@ -105,6 +108,8 @@ impl EngineBuilder {
             workers: None,
             batcher: BatcherConfig::default(),
             queue_cap: DEFAULT_QUEUE_CAP,
+            chaos: None,
+            restart: RestartPolicy::default(),
         }
     }
 
@@ -165,6 +170,20 @@ impl EngineBuilder {
         self
     }
 
+    /// Wrap every backend (replica) in a [`ChaosBackend`] running this
+    /// seeded fault plan — the chaos-soak hook (tests, `loadgen --chaos-*`).
+    pub fn chaos(mut self, cfg: ChaosConfig) -> Self {
+        self.chaos = Some(cfg);
+        self
+    }
+
+    /// Worker supervision policy: how many consecutive crashes a worker
+    /// may take (with what backoff) before its shard is declared dead.
+    pub fn restart_policy(mut self, policy: RestartPolicy) -> Self {
+        self.restart = policy;
+        self
+    }
+
     /// Validate and start the engine (spawns the worker threads).
     pub fn build(self) -> Result<Engine> {
         let spec = self.spec.ok_or_else(|| {
@@ -180,21 +199,58 @@ impl EngineBuilder {
             anyhow::ensure!(w >= 1, "workers must be ≥ 1");
         }
         let workers = self.workers.unwrap_or(1);
+        // the chaos hook decorates every backend the engine will run, so
+        // the fault plan applies uniformly across replicas/the shared core
+        let chaos = self.chaos.clone();
+        let wrap = |b: Arc<dyn InferBackend>| -> Arc<dyn InferBackend> {
+            match &chaos {
+                Some(cfg) => Arc::new(ChaosBackend::new(b, cfg.clone())),
+                None => b,
+            }
+        };
         let core = match spec {
-            BackendSpec::Native(model) => EngineCore::Sharded(WorkerPool::native(
-                &model,
-                workers,
-                self.kernel,
-                self.batcher,
-                self.queue_cap,
-            )?),
-            BackendSpec::FpgaSim(model, sim_cfg) => EngineCore::Sharded(WorkerPool::fpga_sim(
-                &model,
-                workers,
-                sim_cfg,
-                self.batcher,
-                self.queue_cap,
-            )?),
+            BackendSpec::Native(model) => {
+                let pool = if chaos.is_some() {
+                    let replicas: Vec<Arc<dyn InferBackend>> = (0..workers)
+                        .map(|_| {
+                            wrap(Arc::new(NativeBackend::with_kernel(
+                                model.clone(),
+                                self.kernel,
+                            )))
+                        })
+                        .collect();
+                    WorkerPool::start_supervised(replicas, self.batcher, self.queue_cap, self.restart)?
+                } else {
+                    WorkerPool::native_supervised(
+                        &model,
+                        workers,
+                        self.kernel,
+                        self.batcher,
+                        self.queue_cap,
+                        self.restart,
+                    )?
+                };
+                EngineCore::Sharded(pool)
+            }
+            BackendSpec::FpgaSim(model, sim_cfg) => {
+                let pool = if chaos.is_some() {
+                    let mut replicas: Vec<Arc<dyn InferBackend>> = Vec::new();
+                    for _ in 0..workers {
+                        replicas.push(wrap(Arc::new(SimBackend::new(&model, sim_cfg)?)));
+                    }
+                    WorkerPool::start_supervised(replicas, self.batcher, self.queue_cap, self.restart)?
+                } else {
+                    WorkerPool::fpga_sim_supervised(
+                        &model,
+                        workers,
+                        sim_cfg,
+                        self.batcher,
+                        self.queue_cap,
+                        self.restart,
+                    )?
+                };
+                EngineCore::Sharded(pool)
+            }
             BackendSpec::Replicas(replicas) => {
                 if let Some(w) = self.workers {
                     anyhow::ensure!(
@@ -204,13 +260,20 @@ impl EngineBuilder {
                         replicas.len()
                     );
                 }
-                EngineCore::Sharded(WorkerPool::start(replicas, self.batcher, self.queue_cap)?)
+                let replicas = replicas.into_iter().map(wrap).collect();
+                EngineCore::Sharded(WorkerPool::start_supervised(
+                    replicas,
+                    self.batcher,
+                    self.queue_cap,
+                    self.restart,
+                )?)
             }
-            BackendSpec::Shared(backend) => EngineCore::Single(Coordinator::start(
-                backend,
+            BackendSpec::Shared(backend) => EngineCore::Single(Coordinator::start_supervised(
+                wrap(backend),
                 self.batcher,
                 workers,
                 self.queue_cap,
+                self.restart,
             )?),
         };
         Ok(Engine { core })
@@ -645,6 +708,39 @@ mod tests {
             engine.infer(good.clone()).unwrap().digit as usize,
             model.predict(&good.words)
         );
+        engine.shutdown();
+    }
+
+    #[test]
+    fn chaos_and_restart_policy_flow_through_the_builder() {
+        use crate::coordinator::chaos::{ChaosConfig, FaultKind};
+        use crate::coordinator::pool::RestartPolicy;
+        let model = random_model(&[784, 32, 10], 90);
+        let engine = Engine::builder()
+            .native(&model)
+            .workers(1)
+            .chaos(ChaosConfig::new(3, 1.0).with_kinds(&[FaultKind::Panic]))
+            .restart_policy(RestartPolicy {
+                max_restarts: 2,
+                ..Default::default()
+            })
+            .build()
+            .unwrap();
+        assert_eq!(engine.backend_name(), "chaos", "replicas are wrapped");
+        // every call panics: 2 supervised restarts, then the third crash
+        // kills the shard; every ticket still resolves typed and the
+        // books balance on the all-rejected path
+        for img in imgs(8, 91) {
+            match engine.submit(img) {
+                Ok(t) => assert!(t.wait().is_err()),
+                Err(e) => assert!(format!("{e:#}").contains("worker crashed"), "{e:#}"),
+            }
+        }
+        let m = engine.metrics();
+        assert_eq!(m.worker_restarts.load(Ordering::Relaxed), 2);
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 8);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 0);
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 8);
         engine.shutdown();
     }
 

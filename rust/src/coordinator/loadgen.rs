@@ -79,11 +79,20 @@ pub struct LoadReport {
     pub errors: u64,
     /// `completed / wall` — what the server actually sustained.
     pub achieved_ips: f64,
-    /// Latency percentiles in µs, measured from *scheduled* send time.
+    /// **Success-only** latency percentiles in µs, measured from
+    /// *scheduled* send time.  Error responses are excluded so overload
+    /// shedding and chaos faults can't flatter (fast typed refusals) or
+    /// smear (latency-spiked crashes) the service numbers.
     pub p50_us: f64,
     pub p99_us: f64,
     pub p999_us: f64,
     pub max_us: f64,
+    /// Error-response latency percentiles in µs (same scheduled-send
+    /// clock) — how long callers waited to be *refused*.  Zero when no
+    /// errors occurred.
+    pub err_p50_us: f64,
+    pub err_p99_us: f64,
+    pub err_max_us: f64,
     /// Start of the arrival schedule to the last response read.
     pub wall: Duration,
 }
@@ -170,6 +179,7 @@ pub fn run_open_loop(images: &[Packed], cfg: &LoadConfig) -> Result<LoadReport> 
         completed: u64,
         errors: u64,
         latencies_ns: Vec<u64>,
+        err_latencies_ns: Vec<u64>,
         last_read_at: Option<Instant>,
     }
 
@@ -208,6 +218,7 @@ pub fn run_open_loop(images: &[Packed], cfg: &LoadConfig) -> Result<LoadReport> 
                 let mut completed = 0u64;
                 let mut errors = 0u64;
                 let mut latencies_ns = Vec::with_capacity(expected.len());
+                let mut err_latencies_ns = Vec::new();
                 let mut last_read_at = None;
                 for &(offset, v1) in &expected {
                     let status = if v1 {
@@ -234,12 +245,14 @@ pub fn run_open_loop(images: &[Packed], cfg: &LoadConfig) -> Result<LoadReport> 
                         }
                     };
                     last_read_at = Some(Instant::now());
+                    let lat = Instant::now().saturating_duration_since(start + offset);
+                    let lat_ns = lat.as_nanos().min(u64::MAX as u128) as u64;
                     if status == WireStatus::Ok {
                         completed += 1;
-                        let lat = Instant::now().saturating_duration_since(start + offset);
-                        latencies_ns.push(lat.as_nanos().min(u64::MAX as u128) as u64);
+                        latencies_ns.push(lat_ns);
                     } else {
                         errors += 1;
+                        err_latencies_ns.push(lat_ns);
                     }
                 }
                 let sent = match writer.join() {
@@ -251,6 +264,7 @@ pub fn run_open_loop(images: &[Packed], cfg: &LoadConfig) -> Result<LoadReport> 
                     completed,
                     errors,
                     latencies_ns,
+                    err_latencies_ns,
                     last_read_at,
                 })
             }));
@@ -268,6 +282,7 @@ pub fn run_open_loop(images: &[Packed], cfg: &LoadConfig) -> Result<LoadReport> 
     let mut completed = 0u64;
     let mut errors = 0u64;
     let mut latencies_us: Vec<f64> = Vec::new();
+    let mut err_latencies_us: Vec<f64> = Vec::new();
     let mut last_read_at: Option<Instant> = None;
     for outcome in outcomes {
         let o = outcome?;
@@ -275,6 +290,7 @@ pub fn run_open_loop(images: &[Packed], cfg: &LoadConfig) -> Result<LoadReport> 
         completed += o.completed;
         errors += o.errors;
         latencies_us.extend(o.latencies_ns.iter().map(|&ns| ns as f64 / 1000.0));
+        err_latencies_us.extend(o.err_latencies_ns.iter().map(|&ns| ns as f64 / 1000.0));
         last_read_at = match (last_read_at, o.last_read_at) {
             (Some(a), Some(b)) => Some(a.max(b)),
             (a, b) => a.or(b),
@@ -286,11 +302,12 @@ pub fn run_open_loop(images: &[Packed], cfg: &LoadConfig) -> Result<LoadReport> 
         .unwrap_or(cfg.duration)
         .max(Duration::from_millis(1));
     latencies_us.sort_by(f64::total_cmp);
-    let pct = |p: f64| -> f64 {
-        if latencies_us.is_empty() {
+    err_latencies_us.sort_by(f64::total_cmp);
+    let pct = |sorted: &[f64], p: f64| -> f64 {
+        if sorted.is_empty() {
             0.0
         } else {
-            percentile_sorted(&latencies_us, p)
+            percentile_sorted(sorted, p)
         }
     };
     Ok(LoadReport {
@@ -299,10 +316,13 @@ pub fn run_open_loop(images: &[Packed], cfg: &LoadConfig) -> Result<LoadReport> 
         completed,
         errors,
         achieved_ips: completed as f64 / wall.as_secs_f64(),
-        p50_us: pct(50.0),
-        p99_us: pct(99.0),
-        p999_us: pct(99.9),
+        p50_us: pct(&latencies_us, 50.0),
+        p99_us: pct(&latencies_us, 99.0),
+        p999_us: pct(&latencies_us, 99.9),
         max_us: latencies_us.last().copied().unwrap_or(0.0),
+        err_p50_us: pct(&err_latencies_us, 50.0),
+        err_p99_us: pct(&err_latencies_us, 99.0),
+        err_max_us: err_latencies_us.last().copied().unwrap_or(0.0),
         wall,
     })
 }

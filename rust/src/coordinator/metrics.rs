@@ -28,6 +28,20 @@ pub struct Metrics {
     pub conn_accepted: AtomicU64,
     pub conn_open: AtomicU64,
     pub conn_closed: AtomicU64,
+    /// Times a supervised worker was rebuilt after a panic (pool and
+    /// single-queue cores both count here; per-worker metrics carry each
+    /// worker's own restarts).  A crashed batch's requests count `rejected`
+    /// — this gauge tracks the *worker* lifecycle, not the request ledger.
+    pub worker_restarts: AtomicU64,
+    /// Requests shed because their [`super::request::InferOptions::deadline`]
+    /// passed before execution.  Each one also counts `rejected` (the shed
+    /// request resolved with a typed error), so the ledger still balances;
+    /// this gauge splits deadline sheds out of generic rejection.
+    pub deadline_expired: AtomicU64,
+    /// Client-side retry attempts (bounded backoff on Overloaded/Timeout)
+    /// booked by front ends that own a [`Metrics`]; serving cores never
+    /// touch it.
+    pub retries_attempted: AtomicU64,
     latency: Mutex<LatencyHistogram>,
     queue_wait: Mutex<LatencyHistogram>,
 }
@@ -111,13 +125,16 @@ impl Metrics {
     pub fn summary_line_with(&self, lat: &LatencyHistogram) -> String {
         format!(
             "submitted={} completed={} rejected={} cancelled={} batches={} mean_batch={:.2} \
-             p50={}µs p99={}µs max={}µs",
+             restarts={} deadline_expired={} retries={} p50={}µs p99={}µs max={}µs",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.cancelled.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
+            self.worker_restarts.load(Ordering::Relaxed),
+            self.deadline_expired.load(Ordering::Relaxed),
+            self.retries_attempted.load(Ordering::Relaxed),
             lat.percentile_ns(50.0) / 1000,
             lat.percentile_ns(99.0) / 1000,
             lat.max_ns() / 1000,
@@ -165,5 +182,17 @@ mod tests {
         assert_eq!(m.latency_snapshot().count(), 2);
         let line = m.summary_line();
         assert!(line.contains("completed=2"), "{line}");
+    }
+
+    #[test]
+    fn fault_counters_surface_in_the_summary() {
+        let m = Metrics::new();
+        m.worker_restarts.fetch_add(2, Ordering::Relaxed);
+        m.deadline_expired.fetch_add(5, Ordering::Relaxed);
+        m.retries_attempted.fetch_add(7, Ordering::Relaxed);
+        let line = m.summary_line();
+        assert!(line.contains("restarts=2"), "{line}");
+        assert!(line.contains("deadline_expired=5"), "{line}");
+        assert!(line.contains("retries=7"), "{line}");
     }
 }

@@ -41,13 +41,18 @@
 //!   connections multiplexed onto one event-loop thread (DESIGN.md
 //!   §Async serving);
 //! * [`loadgen`] — open-loop load generator (fixed arrival rate, latency
-//!   from scheduled send time) for serving benchmarks.
+//!   from scheduled send time) for serving benchmarks;
+//! * [`chaos`] — deterministic seeded fault injection ([`ChaosBackend`])
+//!   wrapping any backend with per-call error/panic/latency/wrong-shape
+//!   faults, the test rig for supervised restarts, deadline sheds and
+//!   client retries (DESIGN.md §Fault tolerance).
 //!
 //! Python never appears here: the hot path is pure Rust + compiled HLO.
 
 pub mod async_wire;
 pub mod backend;
 pub mod batcher;
+pub mod chaos;
 pub mod engine;
 pub mod loadgen;
 pub mod metrics;
@@ -61,14 +66,16 @@ pub use backend::{
     InferBackend, InferScratch, Kernel, LogitsBuf, NativeBackend, PjrtBackend, SimBackend,
 };
 pub use batcher::BatcherConfig;
+pub use chaos::{ChaosBackend, ChaosConfig, FaultKind};
 pub use engine::{BackendSpec, Engine, EngineBuilder};
 pub use metrics::Metrics;
-pub use request::{InferOptions, InferRequest, InferResponse, RequestId, Ticket};
+pub use pool::RestartPolicy;
+pub use request::{Failure, InferOptions, InferRequest, InferResponse, RequestId, Ticket};
 pub use router::{ModelRegistry, Router};
 pub use server::DEFAULT_QUEUE_CAP;
 pub use async_wire::AsyncWireServer;
 pub use loadgen::{run_open_loop, LoadConfig, LoadReport};
-pub use wire::{WireClient, WireServer, WireServerConfig, WireStatus};
+pub use wire::{RetryPolicy, WireClient, WireServer, WireServerConfig, WireStatus};
 
 use crate::bnn::packing::Packed;
 

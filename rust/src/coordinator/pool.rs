@@ -34,16 +34,17 @@
 //! ([`WorkerPool::latency_snapshot`], `per_worker_report`).
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::backend::{InferBackend, InferScratch, Kernel, LogitsBuf, NativeBackend};
 use super::batcher::{decide, BatcherConfig, DrainDecision};
 use super::metrics::Metrics;
-use super::request::{top_k_i32, InferOptions, InferRequest, InferResponse, Ticket};
+use super::request::{top_k_i32, Failure, InferOptions, InferRequest, InferResponse, Reply, Ticket};
 use crate::bnn::packing::Packed;
 use crate::bnn::{argmax_i32, BnnModel};
 use crate::sim::SimConfig;
@@ -52,15 +53,65 @@ use crate::sim::SimConfig;
 /// single-queue coordinator in `server.rs`).
 pub(crate) struct Pending {
     pub(crate) req: InferRequest,
-    pub(crate) reply: mpsc::Sender<InferResponse>,
+    pub(crate) reply: mpsc::Sender<Reply>,
+}
+
+/// Worker supervision: how often a panicking worker is rebuilt before its
+/// shard is declared dead, and how the restart delay grows.
+///
+/// The crash counter is *consecutive*: any successfully executed batch
+/// resets it, so an occasional fault (a chaos panic, a cosmic ray) never
+/// accumulates toward the death sentence — only a worker that can no
+/// longer make progress at all exhausts the budget.  A dead shard resolves
+/// its queued and future requests with the typed
+/// [`Failure::WorkerCrashed`] instead of hanging them.
+#[derive(Clone, Copy, Debug)]
+pub struct RestartPolicy {
+    /// Consecutive crashes tolerated before the worker stays down.
+    pub max_restarts: u32,
+    /// Delay before restart `n` is `base_backoff << (n-1)`, capped at
+    /// [`Self::max_backoff`].
+    pub base_backoff: Duration,
+    pub max_backoff: Duration,
+}
+
+impl Default for RestartPolicy {
+    fn default() -> Self {
+        RestartPolicy {
+            max_restarts: 1024,
+            base_backoff: Duration::from_micros(200),
+            max_backoff: Duration::from_millis(50),
+        }
+    }
+}
+
+impl RestartPolicy {
+    /// The sleep before consecutive restart number `n` (1-based).
+    pub fn backoff_for(&self, n: u32) -> Duration {
+        let base = self.base_backoff.as_nanos();
+        let d = (base << n.saturating_sub(1).min(64))
+            .min(self.max_backoff.as_nanos())
+            .min(u64::MAX as u128) as u64;
+        Duration::from_nanos(d)
+    }
 }
 
 /// Execute one drained batch on `backend`, record into `mine` (the owning
 /// worker's metrics — counters and histograms) and, when present, into the
 /// pool aggregate `agg` (lock-free counters only; see the module doc), then
-/// answer each reply channel.  On backend failure the replies are dropped
-/// (submitters observe a disconnected channel) and the batch counts as
-/// rejected.
+/// answer each reply channel.  Failure paths, all keeping
+/// `submitted == completed + rejected`:
+///
+/// - request deadline expired while queued → shed on dequeue with the
+///   typed [`Failure::DeadlineExceeded`] (`rejected` + `deadline_expired`)
+///   before it can burn backend time;
+/// - backend `Err` (width mismatch, …) or a mis-shaped logits arena →
+///   the batch counts `rejected`, replies are dropped (submitters observe
+///   a disconnected channel with the classic "dropped by the backend"
+///   diagnostic);
+/// - backend **panic** → every waiter gets the typed
+///   [`Failure::WorkerCrashed`], the batch counts `rejected`, and the
+///   panic resumes so the worker's supervisor can restart it.
 ///
 /// `scratch` and `logits` are the worker's long-lived arenas
 /// ([`InferScratch`], [`LogitsBuf`]): images are passed to the backend by
@@ -76,6 +127,22 @@ pub(crate) fn execute_batch(
     scratch: &mut InferScratch,
     logits: &mut LogitsBuf,
 ) {
+    let now = Instant::now();
+    let (batch, expired): (Vec<Pending>, Vec<Pending>) =
+        batch.into_iter().partition(|p| !p.req.opts.expired_at(now));
+    if !expired.is_empty() {
+        let n = expired.len() as u64;
+        for m in std::iter::once(mine).chain(agg) {
+            m.rejected.fetch_add(n, Ordering::Relaxed);
+            m.deadline_expired.fetch_add(n, Ordering::Relaxed);
+        }
+        for p in expired {
+            let _ = p.reply.send(Err(Failure::DeadlineExceeded));
+        }
+    }
+    if batch.is_empty() {
+        return;
+    }
     let images: Vec<&Packed> = batch.iter().map(|p| &p.req.image).collect();
     let batch_size = images.len();
     mine.record_batch(batch_size);
@@ -83,8 +150,34 @@ pub(crate) fn execute_batch(
         a.record_batch(batch_size);
     }
     let exec_start = Instant::now();
-    let result = backend.infer_batch(&images, scratch, logits);
+    let result = catch_unwind(AssertUnwindSafe(|| backend.infer_batch(&images, scratch, logits)));
     drop(images);
+    let result = match result {
+        Ok(r) => r,
+        Err(panic) => {
+            // the backend panicked mid-batch: resolve every waiter with
+            // the typed failure *before* resuming the panic, so tickets
+            // unblock even if supervision itself is torn down
+            for m in std::iter::once(mine).chain(agg) {
+                m.rejected.fetch_add(batch_size as u64, Ordering::Relaxed);
+            }
+            for p in batch {
+                let _ = p.reply.send(Err(Failure::WorkerCrashed));
+            }
+            std::panic::resume_unwind(panic);
+        }
+    };
+    // shape guard: a backend that "succeeds" but leaves the arena sized
+    // for a different batch (chaos wrong-shape fault, or a genuinely buggy
+    // backend) must not serve another request's logits row
+    let result = result.and_then(|()| {
+        anyhow::ensure!(
+            logits.rows() == batch_size,
+            "backend returned {} logit rows for a batch of {batch_size}",
+            logits.rows()
+        );
+        Ok(())
+    });
     match result {
         Ok(()) => {
             for (i, p) in batch.into_iter().enumerate() {
@@ -99,7 +192,7 @@ pub(crate) fn execute_batch(
                 // logits copy and the top-k selection are both opt-in.
                 let row = logits.row(i);
                 let opts = p.req.opts;
-                let _ = p.reply.send(InferResponse {
+                let _ = p.reply.send(Ok(InferResponse {
                     id: p.req.id,
                     // u16, never u8: a >255-class model's argmax must not
                     // wrap (class ids share the top-k u16 carrier)
@@ -113,7 +206,7 @@ pub(crate) fn execute_batch(
                     queue_wait_ns: wait_ns,
                     batch_size,
                     backend: backend.name(),
-                });
+                }));
             }
         }
         Err(e) => {
@@ -129,6 +222,11 @@ pub(crate) fn execute_batch(
 struct Shard {
     queue: Mutex<VecDeque<Pending>>,
     cv: Condvar,
+    /// Set (under the queue lock) when the shard's worker exhausted its
+    /// restart budget: queued requests were resolved with
+    /// [`Failure::WorkerCrashed`] and submits fail fast with the same
+    /// typed substring.  [`WorkerPool::pick_shard`] routes around it.
+    dead: AtomicBool,
 }
 
 struct PoolShared {
@@ -137,6 +235,7 @@ struct PoolShared {
     cfg: BatcherConfig,
     /// Backpressure bound per shard (submit fails beyond it).
     shard_cap: usize,
+    restart: RestartPolicy,
 }
 
 /// Multi-worker sharded inference engine: one queue shard + one backend
@@ -168,6 +267,16 @@ impl WorkerPool {
         cfg: BatcherConfig,
         queue_cap: usize,
     ) -> Result<WorkerPool> {
+        Self::start_supervised(replicas, cfg, queue_cap, RestartPolicy::default())
+    }
+
+    /// [`Self::start`] with an explicit worker [`RestartPolicy`].
+    pub(crate) fn start_supervised(
+        replicas: Vec<Arc<dyn InferBackend>>,
+        cfg: BatcherConfig,
+        queue_cap: usize,
+        restart: RestartPolicy,
+    ) -> Result<WorkerPool> {
         anyhow::ensure!(!replicas.is_empty(), "worker pool needs ≥ 1 replica");
         cfg.validate()?;
         anyhow::ensure!(queue_cap >= 1, "queue_cap must be ≥ 1");
@@ -188,11 +297,13 @@ impl WorkerPool {
                 .map(|_| Shard {
                     queue: Mutex::new(VecDeque::new()),
                     cv: Condvar::new(),
+                    dead: AtomicBool::new(false),
                 })
                 .collect(),
             shutdown: AtomicBool::new(false),
             cfg,
             shard_cap: queue_cap,
+            restart,
         });
         let metrics = Arc::new(Metrics::new());
         let worker_metrics: Vec<Arc<Metrics>> =
@@ -205,7 +316,7 @@ impl WorkerPool {
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("bnn-pool-{w}"))
-                    .spawn(move || shard_worker_loop(shared, w, replica, agg, mine))
+                    .spawn(move || supervise_shard_worker(shared, w, replica, agg, mine))
                     .expect("spawn pool worker"),
             );
         }
@@ -231,12 +342,24 @@ impl WorkerPool {
         cfg: BatcherConfig,
         queue_cap: usize,
     ) -> Result<WorkerPool> {
+        Self::native_supervised(model, workers, kernel, cfg, queue_cap, RestartPolicy::default())
+    }
+
+    /// [`Self::native`] with an explicit worker [`RestartPolicy`].
+    pub(crate) fn native_supervised(
+        model: &BnnModel,
+        workers: usize,
+        kernel: Kernel,
+        cfg: BatcherConfig,
+        queue_cap: usize,
+        restart: RestartPolicy,
+    ) -> Result<WorkerPool> {
         let replicas: Vec<Arc<dyn InferBackend>> = (0..workers.max(1))
             .map(|_| -> Arc<dyn InferBackend> {
                 Arc::new(NativeBackend::with_kernel(model.clone(), kernel))
             })
             .collect();
-        Self::start(replicas, cfg, queue_cap)
+        Self::start_supervised(replicas, cfg, queue_cap, restart)
     }
 
     /// Pool of `workers` independent cycle-accurate simulator replicas —
@@ -248,11 +371,23 @@ impl WorkerPool {
         cfg: BatcherConfig,
         queue_cap: usize,
     ) -> Result<WorkerPool> {
+        Self::fpga_sim_supervised(model, workers, sim_cfg, cfg, queue_cap, RestartPolicy::default())
+    }
+
+    /// [`Self::fpga_sim`] with an explicit worker [`RestartPolicy`].
+    pub(crate) fn fpga_sim_supervised(
+        model: &BnnModel,
+        workers: usize,
+        sim_cfg: SimConfig,
+        cfg: BatcherConfig,
+        queue_cap: usize,
+        restart: RestartPolicy,
+    ) -> Result<WorkerPool> {
         let mut replicas: Vec<Arc<dyn InferBackend>> = Vec::new();
         for _ in 0..workers.max(1) {
             replicas.push(Arc::new(super::backend::SimBackend::new(model, sim_cfg)?));
         }
-        Self::start(replicas, cfg, queue_cap)
+        Self::start_supervised(replicas, cfg, queue_cap, restart)
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -279,14 +414,24 @@ impl WorkerPool {
     }
 
     /// Round-robin refined by power-of-two-choices: compare the round-robin
-    /// shard with its neighbour, take the shallower queue.
+    /// shard with its neighbour, take the shallower queue.  Dead shards
+    /// (worker crashed for good) are routed around; only when every shard
+    /// is dead does the pick fall through, so the submit fails with the
+    /// typed worker-crashed refusal instead of a panic.
     fn pick_shard(&self) -> usize {
         let n = self.shared.shards.len();
         if n == 1 {
             return 0;
         }
+        let alive = |s: usize| !self.shared.shards[s].dead.load(Ordering::SeqCst);
         let i = self.rr.fetch_add(1, Ordering::Relaxed) % n;
         let j = (i + 1) % n;
+        match (alive(i), alive(j)) {
+            (true, false) => return i,
+            (false, true) => return j,
+            (false, false) => return (0..n).find(|&s| alive(s)).unwrap_or(i),
+            (true, true) => {}
+        }
         let di = self.shared.shards[i].queue.lock().unwrap().len();
         let dj = self.shared.shards[j].queue.lock().unwrap().len();
         if dj < di {
@@ -318,6 +463,18 @@ impl WorkerPool {
         let shard = &self.shared.shards[s];
         {
             let mut q = shard.queue.lock().unwrap();
+            // dead-shard check under the queue lock (the worker marks the
+            // shard dead and drains it under the same lock, so a submit
+            // can never slip a request into a queue nobody will drain)
+            if shard.dead.load(Ordering::SeqCst) {
+                for m in [self.metrics.as_ref(), self.worker_metrics[s].as_ref()] {
+                    m.submitted.fetch_add(1, Ordering::Relaxed);
+                    m.rejected.fetch_add(1, Ordering::Relaxed);
+                }
+                anyhow::bail!(
+                    "shard {s} is dead: its worker crashed and exhausted its restart budget"
+                );
+            }
             if q.len() >= self.shared.shard_cap {
                 // every arrival counts as submitted, so the books keep
                 // `submitted == completed + rejected` on every path
@@ -400,20 +557,88 @@ impl Drop for WorkerPool {
     }
 }
 
-fn shard_worker_loop(
+/// Supervisor wrapper around [`shard_worker_loop`]: catches worker panics
+/// (the loop resolves the in-flight batch with typed failures before the
+/// panic reaches here — see [`execute_batch`]), rebuilds the worker with
+/// fresh arenas under the pool's [`RestartPolicy`], and counts
+/// `worker_restarts` on both ledgers.  A worker that crashes
+/// `max_restarts + 1` times in a row stays down: its shard is marked dead
+/// and drained with [`Failure::WorkerCrashed`] so no ticket ever hangs.
+fn supervise_shard_worker(
     shared: Arc<PoolShared>,
     idx: usize,
     backend: Arc<dyn InferBackend>,
     agg: Arc<Metrics>,
     mine: Arc<Metrics>,
 ) {
+    // consecutive crash counter, reset by the loop on every batch that
+    // executes without panicking
+    let consecutive = AtomicU32::new(0);
+    loop {
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            shard_worker_loop(&shared, idx, backend.as_ref(), &agg, &mine, &consecutive)
+        }));
+        match run {
+            Ok(()) => return, // clean shutdown
+            Err(_) => {
+                let crashes = consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+                if crashes > shared.restart.max_restarts {
+                    declare_shard_dead(&shared, idx, &agg, &mine, crashes);
+                    return;
+                }
+                mine.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                agg.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(shared.restart.backoff_for(crashes));
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Mark shard `idx` dead and resolve everything queued on it with
+/// [`Failure::WorkerCrashed`] (counted `rejected`, so the ledger stays
+/// balanced).  Runs under the queue lock, which [`WorkerPool::submit_with`]
+/// also holds for its dead check — a submit either saw the flag (typed
+/// refusal) or enqueued before it and is drained here.
+fn declare_shard_dead(shared: &PoolShared, idx: usize, agg: &Metrics, mine: &Metrics, crashes: u32) {
+    let shard = &shared.shards[idx];
+    let mut q = shard.queue.lock().unwrap();
+    shard.dead.store(true, Ordering::SeqCst);
+    let n = q.len() as u64;
+    if n > 0 {
+        for m in [mine, agg] {
+            m.rejected.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+    for p in q.drain(..) {
+        let _ = p.reply.send(Err(Failure::WorkerCrashed));
+    }
+    eprintln!(
+        "[pool] worker {idx} crashed {crashes}× consecutively — shard {idx} is dead \
+         ({n} queued requests resolved with worker-crashed)"
+    );
+}
+
+fn shard_worker_loop(
+    shared: &PoolShared,
+    idx: usize,
+    backend: &dyn InferBackend,
+    agg: &Metrics,
+    mine: &Metrics,
+    consecutive: &AtomicU32,
+) {
     let shard = &shared.shards[idx];
     // Per-worker arenas: grow to the steady-state batch size once, then
     // every subsequent batch runs allocation-free through the backend.
+    // Rebuilt fresh on every (re)start, so a panic can never leak a
+    // half-written arena into the next batch.
     let mut scratch = InferScratch::default();
     let mut logits = LogitsBuf::new();
     loop {
-        // Decide under the shard lock, execute outside it.
+        // Decide under the shard lock, execute outside it (so a panicking
+        // backend can never poison the shard mutex).
         let batch: Vec<Pending> = {
             let mut q = shard.queue.lock().unwrap();
             loop {
@@ -441,14 +666,10 @@ fn shard_worker_loop(
                 }
             }
         };
-        execute_batch(
-            backend.as_ref(),
-            Some(agg.as_ref()),
-            mine.as_ref(),
-            batch,
-            &mut scratch,
-            &mut logits,
-        );
+        execute_batch(backend, Some(agg), mine, batch, &mut scratch, &mut logits);
+        // the batch executed without panicking — the worker is healthy, so
+        // its crash budget refills (see RestartPolicy)
+        consecutive.store(0, Ordering::Relaxed);
     }
 }
 
@@ -674,6 +895,159 @@ mod tests {
             "ledger must balance at mid-drain shutdown \
              (submitted == completed + rejected + abandoned)"
         );
+    }
+
+    /// Panics on call numbers in `panic_calls`, delegates to a native
+    /// replica otherwise — a hand-rolled fault plan for supervision tests
+    /// (the general tool is `coordinator::chaos::ChaosBackend`).
+    struct PanicOnCalls {
+        inner: NativeBackend,
+        calls: AtomicU64,
+        panic_below: u64,
+    }
+
+    impl InferBackend for PanicOnCalls {
+        fn name(&self) -> &'static str {
+            "panic-on-calls"
+        }
+        fn max_batch(&self) -> usize {
+            self.inner.max_batch()
+        }
+        fn expected_bits(&self) -> Option<usize> {
+            self.inner.expected_bits()
+        }
+        fn infer_batch(
+            &self,
+            images: &[&Packed],
+            scratch: &mut InferScratch,
+            out: &mut LogitsBuf,
+        ) -> Result<()> {
+            if self.calls.fetch_add(1, Ordering::SeqCst) < self.panic_below {
+                panic!("test: injected worker panic");
+            }
+            self.inner.infer_batch(images, scratch, out)
+        }
+    }
+
+    #[test]
+    fn crashed_worker_resolves_tickets_typed_and_restarts() {
+        let model = random_model(&[784, 128, 64, 10], 71);
+        let backend = Arc::new(PanicOnCalls {
+            inner: NativeBackend::with_kernel(model.clone(), Kernel::default()),
+            calls: AtomicU64::new(0),
+            panic_below: 1, // first batch crashes, everything after serves
+        });
+        let pool = WorkerPool::start_supervised(
+            vec![backend],
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(10),
+            },
+            DEFAULT_QUEUE_CAP,
+            RestartPolicy {
+                max_restarts: 8,
+                base_backoff: Duration::from_micros(10),
+                max_backoff: Duration::from_micros(100),
+            },
+        )
+        .unwrap();
+        // first request rides the crashing batch: typed failure, no hang
+        let img = imgs(1, 72).pop().unwrap();
+        let e = pool.submit(img.clone()).unwrap().wait().unwrap_err();
+        assert!(format!("{e}").contains("worker crashed"), "{e}");
+        // the supervisor rebuilt the worker: the next request serves
+        let r = pool.infer(img.clone()).unwrap();
+        assert_eq!(r.logits, model.logits(&img.words));
+        let m = &pool.metrics;
+        assert_eq!(m.worker_restarts.load(Ordering::Relaxed), 1);
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 2);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(m.cancelled.load(Ordering::Relaxed), 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn exhausted_restart_budget_kills_the_shard_typed() {
+        // a worker that can never make progress must not hang its clients:
+        // every request resolves with the typed worker-crashed failure,
+        // and once the restart budget runs out submits fail fast
+        let model = random_model(&[784, 32, 10], 73);
+        let backend = Arc::new(PanicOnCalls {
+            inner: NativeBackend::with_kernel(model, Kernel::default()),
+            calls: AtomicU64::new(0),
+            panic_below: u64::MAX, // always panics
+        });
+        let pool = WorkerPool::start_supervised(
+            vec![backend],
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(10),
+            },
+            DEFAULT_QUEUE_CAP,
+            RestartPolicy {
+                max_restarts: 2,
+                base_backoff: Duration::from_micros(10),
+                max_backoff: Duration::from_micros(100),
+            },
+        )
+        .unwrap();
+        let mut waited_typed = 0u64;
+        let mut failed_fast = 0u64;
+        for img in imgs(20, 74) {
+            match pool.submit(img) {
+                Ok(t) => {
+                    let e = t.wait().unwrap_err();
+                    assert!(format!("{e}").contains("worker crashed"), "{e}");
+                    waited_typed += 1;
+                }
+                Err(e) => {
+                    assert!(format!("{e}").contains("worker crashed"), "{e}");
+                    failed_fast += 1;
+                }
+            }
+        }
+        assert!(waited_typed >= 1, "some requests rode crashing batches");
+        assert!(failed_fast >= 1, "the dead shard must fail fast eventually");
+        let m = &pool.metrics;
+        assert_eq!(m.worker_restarts.load(Ordering::Relaxed), 2, "budget was 2");
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 20);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 0);
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 20, "ledger balances");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn expired_deadlines_are_shed_with_typed_failures() {
+        let model = random_model(&[784, 128, 64, 10], 75);
+        let pool = WorkerPool::native(
+            &model,
+            1,
+            Kernel::default(),
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(10),
+            },
+            DEFAULT_QUEUE_CAP,
+        )
+        .unwrap();
+        let img = imgs(1, 76).pop().unwrap();
+        // an already-expired deadline is shed on dequeue, typed
+        let expired = InferOptions::default()
+            .with_deadline(Instant::now() - Duration::from_millis(1));
+        let e = pool.submit_with(img.clone(), expired).unwrap().wait().unwrap_err();
+        assert!(format!("{e}").contains("deadline exceeded"), "{e}");
+        // a generous budget serves normally
+        let roomy = InferOptions::default().with_budget(Duration::from_secs(30));
+        let r = pool.submit_with(img.clone(), roomy).unwrap().wait().unwrap();
+        assert_eq!(r.logits, model.logits(&img.words));
+        let m = &pool.metrics;
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 2);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(m.deadline_expired.load(Ordering::Relaxed), 1);
+        assert_eq!(m.worker_restarts.load(Ordering::Relaxed), 0);
+        pool.shutdown();
     }
 
     #[test]

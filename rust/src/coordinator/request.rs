@@ -27,6 +27,37 @@ use crate::bnn::packing::Packed;
 /// Monotonically increasing request id (assigned by the serving engine).
 pub type RequestId = u64;
 
+/// Typed terminal failure a worker can deliver on a reply channel instead
+/// of a response.  Distinct from a *disconnected* channel (the sender was
+/// dropped — queued work abandoned at shutdown, or a worker that died
+/// without supervision): a `Failure` is an **answered** request, so the
+/// ticket resolves with a precise error instead of the generic
+/// "dropped by the backend".  The error messages carry fixed substrings
+/// ("worker crashed", "deadline exceeded") that
+/// `wire::submit_error_status` maps onto the wire taxonomy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Failure {
+    /// The worker executing this request's batch panicked; the supervisor
+    /// resolved the batch and restarted the worker (`Metrics::worker_restarts`).
+    WorkerCrashed,
+    /// The request's [`InferOptions::deadline`] passed before execution —
+    /// shed by the batcher or the worker's dequeue check, never executed.
+    DeadlineExceeded,
+}
+
+impl Failure {
+    /// Stable substring the wire layer keys its status mapping on.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Failure::WorkerCrashed => "worker crashed",
+            Failure::DeadlineExceeded => "deadline exceeded",
+        }
+    }
+}
+
+/// What flows down a reply channel: a response, or a typed failure.
+pub(crate) type Reply = std::result::Result<InferResponse, Failure>;
+
 /// Per-request serving options.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct InferOptions {
@@ -37,6 +68,12 @@ pub struct InferOptions {
     /// Also return the best `k` `(class, logit)` pairs, best first (ties
     /// toward the lower class index, matching [`crate::bnn::argmax_i32`]).
     pub top_k: Option<usize>,
+    /// Absolute point after which the request is worthless: the batcher
+    /// sheds it before launch and workers re-check on dequeue, answering
+    /// [`Failure::DeadlineExceeded`] instead of burning compute on a reply
+    /// nobody is waiting for.  Carried on the wire as a relative budget
+    /// (`FEAT_DEADLINE`, µs) and re-anchored to the server's clock.
+    pub deadline: Option<Instant>,
 }
 
 impl Default for InferOptions {
@@ -44,6 +81,7 @@ impl Default for InferOptions {
         Self {
             include_logits: true,
             top_k: None,
+            deadline: None,
         }
     }
 }
@@ -54,6 +92,7 @@ impl InferOptions {
         Self {
             include_logits: false,
             top_k: None,
+            deadline: None,
         }
     }
 
@@ -67,6 +106,22 @@ impl InferOptions {
     pub fn with_logits(mut self, include: bool) -> Self {
         self.include_logits = include;
         self
+    }
+
+    /// Set an absolute deadline.
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Set the deadline as a budget from now.
+    pub fn with_budget(self, budget: Duration) -> Self {
+        self.with_deadline(Instant::now() + budget)
+    }
+
+    /// Whether the deadline (if any) has passed at `now`.
+    pub fn expired_at(&self, now: Instant) -> bool {
+        matches!(self.deadline, Some(d) if now >= d)
     }
 }
 
@@ -145,7 +200,7 @@ pub struct InferResponse {
 /// `cancelled` gauge always tells the whole story.
 pub struct Ticket {
     id: RequestId,
-    rx: mpsc::Receiver<InferResponse>,
+    rx: mpsc::Receiver<Reply>,
     metrics: Arc<Metrics>,
     resolved: bool,
     /// Fired exactly once when the ticket leaves the system (resolved or
@@ -157,7 +212,7 @@ pub struct Ticket {
 impl Ticket {
     pub(crate) fn new(
         id: RequestId,
-        rx: mpsc::Receiver<InferResponse>,
+        rx: mpsc::Receiver<Reply>,
         metrics: Arc<Metrics>,
     ) -> Self {
         Self {
@@ -180,11 +235,19 @@ impl Ticket {
         self.id
     }
 
+    /// Map a delivered [`Reply`] onto the public result surface.
+    fn surface(id: RequestId, reply: Reply) -> Result<InferResponse> {
+        match reply {
+            Ok(r) => Ok(r),
+            Err(f) => bail!("request {id} failed: {}", f.as_str()),
+        }
+    }
+
     /// Block until the response arrives, consuming the ticket.
     pub fn wait(mut self) -> Result<InferResponse> {
         self.resolved = true;
         match self.rx.recv() {
-            Ok(r) => Ok(r),
+            Ok(reply) => Self::surface(self.id, reply),
             Err(_) => bail!(
                 "request {} was dropped by the backend (see the rejected counter)",
                 self.id
@@ -199,9 +262,9 @@ impl Ticket {
             bail!("ticket {} already resolved", self.id);
         }
         match self.rx.recv_timeout(timeout) {
-            Ok(r) => {
+            Ok(reply) => {
                 self.resolved = true;
-                Ok(Some(r))
+                Self::surface(self.id, reply).map(Some)
             }
             Err(RecvTimeoutError::Timeout) => Ok(None),
             Err(RecvTimeoutError::Disconnected) => {
@@ -220,9 +283,9 @@ impl Ticket {
             bail!("ticket {} already resolved", self.id);
         }
         match self.rx.try_recv() {
-            Ok(r) => {
+            Ok(reply) => {
                 self.resolved = true;
-                Ok(Some(r))
+                Self::surface(self.id, reply).map(Some)
             }
             Err(TryRecvError::Empty) => Ok(None),
             Err(TryRecvError::Disconnected) => {
@@ -303,9 +366,52 @@ mod tests {
         let m = Arc::new(Metrics::new());
         let (tx, rx) = mpsc::channel();
         let t = Ticket::new(1, rx, m.clone());
-        tx.send(resp(1)).unwrap();
+        tx.send(Ok(resp(1))).unwrap();
         assert_eq!(t.wait().unwrap().id, 1);
         assert_eq!(m.cancelled.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn typed_failures_surface_their_substring() {
+        // a delivered Failure resolves the ticket with the mapped message
+        // (the wire layer's status mapping keys on these substrings)
+        for (f, want) in [
+            (Failure::WorkerCrashed, "worker crashed"),
+            (Failure::DeadlineExceeded, "deadline exceeded"),
+        ] {
+            let m = Arc::new(Metrics::new());
+            let (tx, rx) = mpsc::channel();
+            let t = Ticket::new(9, rx, m.clone());
+            tx.send(Err(f)).unwrap();
+            let e = t.wait().unwrap_err();
+            assert!(format!("{e}").contains(want), "{e}");
+            // the failure answered the request, so it is not a cancel
+            assert_eq!(m.cancelled.load(Ordering::Relaxed), 0);
+        }
+        // try_poll surfaces the same typed error and resolves the ticket
+        let m = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::channel();
+        let mut t = Ticket::new(10, rx, m.clone());
+        tx.send(Err(Failure::WorkerCrashed)).unwrap();
+        let e = t.try_poll().unwrap_err();
+        assert!(format!("{e}").contains("worker crashed"), "{e}");
+        drop(t);
+        assert_eq!(m.cancelled.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn deadline_options_expire_exactly_at_the_instant() {
+        let now = Instant::now();
+        let opts = InferOptions::default();
+        assert!(!opts.expired_at(now), "no deadline never expires");
+        let opts = opts.with_deadline(now + Duration::from_micros(100));
+        assert!(!opts.expired_at(now));
+        assert!(opts.expired_at(now + Duration::from_micros(100)), ">= is expired");
+        assert!(opts.expired_at(now + Duration::from_secs(1)));
+        // with_budget anchors at call time; a generous budget is not expired
+        let opts = InferOptions::digits_only().with_budget(Duration::from_secs(60));
+        assert!(!opts.expired_at(Instant::now()));
+        assert!(opts.deadline.is_some());
     }
 
     #[test]
@@ -328,7 +434,7 @@ mod tests {
             .wait_timeout(Duration::from_millis(1))
             .unwrap()
             .is_none());
-        tx.send(resp(3)).unwrap();
+        tx.send(Ok(resp(3))).unwrap();
         let got = t.try_poll().unwrap().expect("response ready");
         assert_eq!(got.id, 3);
         // resolved: further polls error, and drop does not count cancelled
@@ -348,11 +454,11 @@ mod tests {
         let f = fired.clone();
         let t = Ticket::new(1, rx, m.clone())
             .with_observer(Box::new(move || { f.fetch_add(1, Ordering::SeqCst); }));
-        tx.send(resp(1)).unwrap();
+        tx.send(Ok(resp(1))).unwrap();
         t.wait().unwrap();
         assert_eq!(fired.load(Ordering::SeqCst), 1);
         // dropped unresolved
-        let (_tx2, rx2) = mpsc::channel::<InferResponse>();
+        let (_tx2, rx2) = mpsc::channel::<Reply>();
         let f = fired.clone();
         let t = Ticket::new(2, rx2, m.clone())
             .with_observer(Box::new(move || { f.fetch_add(1, Ordering::SeqCst); }));
@@ -363,7 +469,7 @@ mod tests {
         let f = fired.clone();
         let mut t = Ticket::new(3, rx3, m)
             .with_observer(Box::new(move || { f.fetch_add(1, Ordering::SeqCst); }));
-        tx3.send(resp(3)).unwrap();
+        tx3.send(Ok(resp(3))).unwrap();
         t.try_poll().unwrap().unwrap();
         drop(t);
         assert_eq!(fired.load(Ordering::SeqCst), 3);
@@ -374,7 +480,7 @@ mod tests {
         // backend dropped the reply (rejected batch): wait errors, and the
         // abandonment is the server's rejected counter, not a client cancel
         let m = Arc::new(Metrics::new());
-        let (tx, rx) = mpsc::channel::<InferResponse>();
+        let (tx, rx) = mpsc::channel::<Reply>();
         drop(tx);
         let t = Ticket::new(4, rx, m.clone());
         assert!(t.wait().is_err());

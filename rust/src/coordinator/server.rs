@@ -10,7 +10,8 @@
 //! [`super::router::Router`] composes several engines.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
@@ -20,8 +21,8 @@ use anyhow::Result;
 use super::backend::InferBackend;
 use super::batcher::{decide, BatcherConfig, DrainDecision};
 use super::metrics::Metrics;
-use super::pool::{execute_batch, Pending};
-use super::request::{InferOptions, InferRequest, InferResponse, Ticket};
+use super::pool::{execute_batch, Pending, RestartPolicy};
+use super::request::{Failure, InferOptions, InferRequest, InferResponse, Ticket};
 use crate::bnn::packing::Packed;
 
 /// Default backpressure bound: submits fail once this many requests are
@@ -35,6 +36,13 @@ struct Shared {
     shutdown: AtomicBool,
     cfg: BatcherConfig,
     queue_cap: usize,
+    restart: RestartPolicy,
+    /// Workers still draining.  When the last supervised worker exhausts
+    /// its restart budget, `dead` is raised (under the queue lock) and the
+    /// queue is drained with [`Failure::WorkerCrashed`] — a queue nobody
+    /// will ever drain must not hang its waiters.
+    live_workers: AtomicUsize,
+    dead: AtomicBool,
 }
 
 /// A coordinator: one backend + N worker threads + metrics.
@@ -55,6 +63,17 @@ impl Coordinator {
         workers: usize,
         queue_cap: usize,
     ) -> Result<Self> {
+        Self::start_supervised(backend, cfg, workers, queue_cap, RestartPolicy::default())
+    }
+
+    /// [`Self::start`] with an explicit worker [`RestartPolicy`].
+    pub(crate) fn start_supervised(
+        backend: Arc<dyn InferBackend>,
+        cfg: BatcherConfig,
+        workers: usize,
+        queue_cap: usize,
+        restart: RestartPolicy,
+    ) -> Result<Self> {
         cfg.validate()?;
         anyhow::ensure!(queue_cap >= 1, "queue_cap must be ≥ 1");
         let cfg = BatcherConfig {
@@ -67,6 +86,9 @@ impl Coordinator {
             shutdown: AtomicBool::new(false),
             cfg,
             queue_cap,
+            restart,
+            live_workers: AtomicUsize::new(workers.max(1)),
+            dead: AtomicBool::new(false),
         });
         let metrics = Arc::new(Metrics::new());
         let mut handles = Vec::new();
@@ -77,7 +99,7 @@ impl Coordinator {
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("bnn-worker-{w}"))
-                    .spawn(move || worker_loop(shared, backend, metrics))
+                    .spawn(move || supervise_worker(shared, backend, metrics))
                     .expect("spawn worker"),
             );
         }
@@ -119,6 +141,16 @@ impl Coordinator {
         let (tx, rx) = mpsc::channel();
         {
             let mut q = self.shared.queue.lock().unwrap();
+            // dead-core check under the queue lock (the last worker raises
+            // the flag and drains under the same lock, so no request can
+            // slip into a queue nobody will drain)
+            if self.shared.dead.load(Ordering::SeqCst) {
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!(
+                    "every worker crashed and exhausted its restart budget — engine is dead"
+                );
+            }
             if q.len() >= self.shared.queue_cap {
                 // every arrival counts as submitted, so the books keep
                 // `submitted == completed + rejected` on every path
@@ -178,9 +210,64 @@ impl Drop for Coordinator {
     }
 }
 
-fn worker_loop(shared: Arc<Shared>, backend: Arc<dyn InferBackend>, metrics: Arc<Metrics>) {
+/// Supervisor wrapper around [`worker_loop`], mirroring the pool's
+/// `supervise_shard_worker`: panics restart the worker (fresh arenas)
+/// under the [`RestartPolicy`], counting `worker_restarts`.  Because all
+/// workers drain one shared queue, a single dead worker only shrinks
+/// capacity; the queue itself is declared dead — and drained with
+/// [`Failure::WorkerCrashed`] — only when the *last* live worker exhausts
+/// its budget.
+fn supervise_worker(shared: Arc<Shared>, backend: Arc<dyn InferBackend>, metrics: Arc<Metrics>) {
+    let consecutive = AtomicU32::new(0);
+    loop {
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            worker_loop(&shared, backend.as_ref(), &metrics, &consecutive)
+        }));
+        match run {
+            Ok(()) => return, // clean shutdown
+            Err(_) => {
+                let crashes = consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+                if crashes > shared.restart.max_restarts {
+                    retire_worker(&shared, &metrics, crashes);
+                    return;
+                }
+                metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(shared.restart.backoff_for(crashes));
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Permanently retire one worker.  The last one to go marks the core dead
+/// and resolves the queue with typed failures (counted `rejected`).
+fn retire_worker(shared: &Shared, metrics: &Metrics, crashes: u32) {
+    let mut q = shared.queue.lock().unwrap();
+    let left = shared.live_workers.fetch_sub(1, Ordering::SeqCst) - 1;
+    eprintln!("[coordinator] worker crashed {crashes}× consecutively and stays down ({left} left)");
+    if left > 0 {
+        return;
+    }
+    shared.dead.store(true, Ordering::SeqCst);
+    let n = q.len() as u64;
+    metrics.rejected.fetch_add(n, Ordering::Relaxed);
+    for p in q.drain(..) {
+        let _ = p.reply.send(Err(Failure::WorkerCrashed));
+    }
+    eprintln!("[coordinator] no workers left — queue drained ({n} requests resolved worker-crashed)");
+}
+
+fn worker_loop(
+    shared: &Shared,
+    backend: &dyn InferBackend,
+    metrics: &Metrics,
+    consecutive: &AtomicU32,
+) {
     // Per-worker arenas (see `pool::execute_batch`): reused across batches
-    // so the steady-state path is allocation-free.
+    // so the steady-state path is allocation-free; rebuilt fresh on every
+    // supervised (re)start.
     let mut scratch = super::backend::InferScratch::default();
     let mut logits = super::backend::LogitsBuf::new();
     loop {
@@ -208,14 +295,8 @@ fn worker_loop(shared: Arc<Shared>, backend: Arc<dyn InferBackend>, metrics: Arc
             }
         };
 
-        execute_batch(
-            backend.as_ref(),
-            None,
-            metrics.as_ref(),
-            batch,
-            &mut scratch,
-            &mut logits,
-        );
+        execute_batch(backend, None, metrics, batch, &mut scratch, &mut logits);
+        consecutive.store(0, Ordering::Relaxed);
     }
 }
 
@@ -353,5 +434,68 @@ mod tests {
         let coord =
             Coordinator::start(backend, BatcherConfig::default(), 4, DEFAULT_QUEUE_CAP).unwrap();
         coord.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn all_workers_dead_resolves_everything_typed() {
+        // single-queue analogue of the pool's kill-worker test: a backend
+        // that can never execute must resolve every waiter with the typed
+        // worker-crashed failure and fail fast once both workers are gone
+        struct AlwaysPanic;
+        impl InferBackend for AlwaysPanic {
+            fn name(&self) -> &'static str {
+                "always-panic"
+            }
+            fn max_batch(&self) -> usize {
+                8
+            }
+            fn infer_batch(
+                &self,
+                _images: &[&Packed],
+                _scratch: &mut crate::coordinator::backend::InferScratch,
+                _out: &mut crate::coordinator::backend::LogitsBuf,
+            ) -> Result<()> {
+                panic!("test: injected worker panic");
+            }
+        }
+        let coord = Coordinator::start_supervised(
+            Arc::new(AlwaysPanic),
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(10),
+            },
+            2,
+            DEFAULT_QUEUE_CAP,
+            RestartPolicy {
+                max_restarts: 1,
+                base_backoff: Duration::from_micros(10),
+                max_backoff: Duration::from_micros(100),
+            },
+        )
+        .unwrap();
+        let mut waited_typed = 0u64;
+        let mut failed_fast = 0u64;
+        for img in imgs(24, 39) {
+            match coord.submit(img) {
+                Ok(t) => {
+                    let e = t.wait().unwrap_err();
+                    assert!(format!("{e}").contains("worker crashed"), "{e}");
+                    waited_typed += 1;
+                }
+                Err(e) => {
+                    assert!(format!("{e}").contains("worker crashed"), "{e}");
+                    failed_fast += 1;
+                }
+            }
+        }
+        assert!(waited_typed >= 1);
+        assert!(failed_fast >= 1, "dead engine must fail fast eventually");
+        let m = &coord.metrics;
+        // budget 1 restart × 2 workers
+        assert_eq!(m.worker_restarts.load(Ordering::Relaxed), 2);
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 24);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 0);
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 24, "ledger balances");
+        coord.shutdown();
     }
 }

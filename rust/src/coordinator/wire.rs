@@ -63,7 +63,14 @@ pub const FEAT_TOPK: u8 = 0x02;
 /// never carry a name section.  Absent ⇒ the server's default model, so
 /// pre-registry clients are untouched.
 pub const FEAT_MODEL: u8 = 0x04;
-pub const FEAT_MASK: u8 = FEAT_LOGITS | FEAT_TOPK | FEAT_MODEL;
+/// The request carries a deadline section (4 LE bytes: a *relative* budget
+/// in µs — relative so it survives unsynchronized clocks) after the model
+/// name (if any) and before the payloads.  The server arms
+/// [`InferOptions::deadline`] at parse time; a request still queued when
+/// the budget runs out answers [`WireStatus::DeadlineExceeded`].  Echoed in
+/// responses but response frames never carry the section.
+pub const FEAT_DEADLINE: u8 = 0x08;
+pub const FEAT_MASK: u8 = FEAT_LOGITS | FEAT_TOPK | FEAT_MODEL | FEAT_DEADLINE;
 
 /// Model names on the wire are 1..=64 bytes of UTF-8.
 pub const MAX_MODEL_NAME: usize = 64;
@@ -95,6 +102,12 @@ pub enum WireStatus {
     Timeout = 7,
     /// The request named a model the server's registry does not have.
     UnknownModel = 8,
+    /// The request's [`FEAT_DEADLINE`] budget expired before a worker ran
+    /// it — the engine shed it instead of serving a stale answer.
+    DeadlineExceeded = 9,
+    /// The worker executing the request panicked; the request is counted
+    /// `rejected` and the (supervised) worker restarts.  Safe to retry.
+    WorkerCrashed = 10,
     /// A status byte this build does not know (forward compatibility).
     Unknown = 255,
 }
@@ -111,6 +124,8 @@ impl WireStatus {
             6 => WireStatus::Overloaded,
             7 => WireStatus::Timeout,
             8 => WireStatus::UnknownModel,
+            9 => WireStatus::DeadlineExceeded,
+            10 => WireStatus::WorkerCrashed,
             _ => WireStatus::Unknown,
         }
     }
@@ -126,6 +141,8 @@ impl WireStatus {
             WireStatus::Overloaded => "overloaded",
             WireStatus::Timeout => "idle-timeout",
             WireStatus::UnknownModel => "unknown-model",
+            WireStatus::DeadlineExceeded => "deadline-exceeded",
+            WireStatus::WorkerCrashed => "worker-crashed",
             WireStatus::Unknown => "unknown-status",
         }
     }
@@ -136,7 +153,9 @@ impl WireStatus {
 /// pool's "shard N full (…)" and the registry's "quota exceeded (…)", all
 /// counted `rejected` in the metrics ledger — become
 /// [`WireStatus::Overloaded`]; a registry lookup miss ("unknown model …")
-/// becomes [`WireStatus::UnknownModel`]; everything else is a generic
+/// becomes [`WireStatus::UnknownModel`]; the typed [`super::request::Failure`]
+/// substrings become [`WireStatus::DeadlineExceeded`] /
+/// [`WireStatus::WorkerCrashed`]; everything else is a generic
 /// [`WireStatus::Backend`].  The vendored `anyhow` subset has no
 /// downcasting, but `{e:#}` renders the full context chain, so the match
 /// is a substring test.
@@ -144,6 +163,10 @@ pub(crate) fn submit_error_status(e: &anyhow::Error) -> WireStatus {
     let chain = format!("{e:#}");
     if chain.contains("unknown model") {
         WireStatus::UnknownModel
+    } else if chain.contains("deadline exceeded") {
+        WireStatus::DeadlineExceeded
+    } else if chain.contains("worker crashed") {
+        WireStatus::WorkerCrashed
     } else if chain.contains("queue full")
         || chain.contains(" full (")
         || chain.contains("quota exceeded")
@@ -351,10 +374,15 @@ pub struct WireResponseV2 {
 
 /// The v2 `(features, top_k)` header bytes for a set of options.  Typed
 /// error (never a silent wrap) when `top_k` exceeds the one-byte carrier.
+/// A set [`InferOptions::deadline`] raises [`FEAT_DEADLINE`] (the budget
+/// itself rides in the request's deadline section, not the header).
 pub fn encode_features(opts: &InferOptions) -> Result<(u8, u8)> {
     let mut features = 0u8;
     if opts.include_logits {
         features |= FEAT_LOGITS;
+    }
+    if opts.deadline.is_some() {
+        features |= FEAT_DEADLINE;
     }
     let k = match opts.top_k {
         Some(k) => {
@@ -367,11 +395,32 @@ pub fn encode_features(opts: &InferOptions) -> Result<(u8, u8)> {
     Ok((features, k))
 }
 
+/// Header-only options: [`FEAT_DEADLINE`]'s budget lives in its own
+/// section, so `deadline` stays `None` here and the readers arm it once
+/// the section is parsed.
 fn decode_features(features: u8, top_k: u8) -> InferOptions {
     InferOptions {
         include_logits: features & FEAT_LOGITS != 0,
         top_k: (features & FEAT_TOPK != 0).then_some(top_k as usize),
+        deadline: None,
     }
+}
+
+/// Arm a parsed [`FEAT_DEADLINE`] budget (µs, relative) against `now`:
+/// the absolute instant workers compare against on dequeue.
+pub(crate) fn arm_deadline(budget_us: u32, now: std::time::Instant) -> std::time::Instant {
+    now + std::time::Duration::from_micros(budget_us as u64)
+}
+
+/// The µs budget a request's deadline leaves at `now`, saturating both
+/// ways: an already-expired deadline encodes as 0 (the server sheds it on
+/// arrival — still a typed answer, never a hang) and a distant one clamps
+/// to the u32 carrier.
+pub(crate) fn budget_us(deadline: std::time::Instant, now: std::time::Instant) -> u32 {
+    deadline
+        .saturating_duration_since(now)
+        .as_micros()
+        .min(u32::MAX as u128) as u32
 }
 
 /// Encode a v2 request frame: `id` is echoed back, image `i` answers as
@@ -428,6 +477,10 @@ pub fn encode_request_v2_for(
     if let Some(name) = model {
         frame.push(name.len() as u8);
         frame.extend_from_slice(name.as_bytes());
+    }
+    if let Some(deadline) = opts.deadline {
+        let budget = budget_us(deadline, std::time::Instant::now());
+        frame.extend_from_slice(&budget.to_le_bytes());
     }
     for img in images {
         frame.extend_from_slice(&bits_to_payload(img));
@@ -559,6 +612,15 @@ pub fn read_request_v2_body(r: &mut impl Read) -> Result<WireRequestV2, WireErro
     } else {
         None
     };
+    let mut opts = h.opts();
+    if h.features & FEAT_DEADLINE != 0 {
+        let mut budget = [0u8; 4];
+        r.read_exact(&mut budget).map_err(truncated("deadline section"))?;
+        opts.deadline = Some(arm_deadline(
+            u32::from_le_bytes(budget),
+            std::time::Instant::now(),
+        ));
+    }
     let pb = payload_bytes(h.n_bits);
     let mut payload = vec![0u8; pb];
     let mut images = Vec::with_capacity(h.n_images);
@@ -576,7 +638,7 @@ pub fn read_request_v2_body(r: &mut impl Read) -> Result<WireRequestV2, WireErro
     }
     Ok(WireRequestV2 {
         id: h.id,
-        opts: h.opts(),
+        opts,
         model,
         images,
     })
@@ -1083,13 +1145,65 @@ fn handle_v2(
 // ---------------------------------------------------------------------------
 // client
 
+/// Bounded exponential backoff with deterministic jitter for client-side
+/// retries on [`WireStatus::Overloaded`] / [`WireStatus::Timeout`] — the
+/// two statuses that mean "the server is fine, just busy / you were idle",
+/// where resubmitting is safe and useful.  [`Self::delay_for`] is a pure
+/// function of `(seed, attempt)`, so tests pin the exact schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total tries including the first (so `1` disables retrying).
+    pub max_attempts: u32,
+    /// Backoff before retry `n` is `base << n`, capped at [`Self::cap`],
+    /// plus jitter in `[0, backoff/2]`.
+    pub base: std::time::Duration,
+    pub cap: std::time::Duration,
+    /// Jitter seed — splitmix-hashed with the attempt index, so two
+    /// clients with different seeds desynchronize their retry storms.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base: std::time::Duration::from_millis(1),
+            cap: std::time::Duration::from_millis(100),
+            seed: 0x5EED,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The sleep before retry number `attempt` (0-based: the delay between
+    /// the first failure and the second try is `delay_for(0)`).
+    pub fn delay_for(&self, attempt: u32) -> std::time::Duration {
+        let base_ns = self.base.as_nanos().min(u64::MAX as u128);
+        let backoff_ns = (base_ns << attempt.min(64))
+            .min(self.cap.as_nanos())
+            .min(u64::MAX as u128) as u64;
+        let jitter_ns = crate::util::prng::SplitMix64::new(self.seed ^ attempt as u64)
+            .next_u64()
+            % (backoff_ns / 2 + 1);
+        std::time::Duration::from_nanos(backoff_ns.saturating_add(jitter_ns))
+    }
+}
+
 /// Blocking client for tests/tools.  Speaks v1 ([`Self::classify`]) and v2
 /// ([`Self::classify_v2`], [`Self::classify_batch`],
 /// [`Self::classify_pipelined`]); v2 request ids are drawn from a
 /// per-connection counter and verified against the echoes.
+///
+/// With [`Self::with_retry`], `Overloaded`/`Timeout` answers on the
+/// round-trip paths reconnect and resubmit under the policy's backoff
+/// schedule instead of surfacing immediately ([`Self::retries_attempted`]
+/// counts the resubmits).
 pub struct WireClient {
     stream: TcpStream,
     next_id: u64,
+    addr: std::net::SocketAddr,
+    retry: Option<RetryPolicy>,
+    retries_attempted: u64,
 }
 
 impl WireClient {
@@ -1101,7 +1215,46 @@ impl WireClient {
     pub fn connect(addr: std::net::SocketAddr) -> Result<WireClient> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
-        Ok(WireClient { stream, next_id: 1 })
+        Ok(WireClient {
+            stream,
+            next_id: 1,
+            addr,
+            retry: None,
+            retries_attempted: 0,
+        })
+    }
+
+    /// Retry `Overloaded`/`Timeout` answers under `policy` instead of
+    /// surfacing them on the first hit.
+    pub fn with_retry(mut self, policy: RetryPolicy) -> Self {
+        self.retry = Some(policy);
+        self
+    }
+
+    /// Resubmits performed by the retry policy so far (0 without one).
+    pub fn retries_attempted(&self) -> u64 {
+        self.retries_attempted
+    }
+
+    /// Should `status` on try number `attempt` (0-based) be retried?
+    fn wants_retry(&self, status: WireStatus, attempt: u32) -> bool {
+        matches!(status, WireStatus::Overloaded | WireStatus::Timeout)
+            && self
+                .retry
+                .is_some_and(|p| attempt.saturating_add(1) < p.max_attempts)
+    }
+
+    /// Book one retry: sleep the policy's backoff for `attempt`, then
+    /// reconnect (an `Overloaded`/`Timeout` peer may have closed the
+    /// socket — a fresh connection re-enters the accept path cleanly).
+    fn book_retry(&mut self, attempt: u32) -> Result<()> {
+        let policy = self.retry.expect("wants_retry checked the policy");
+        self.retries_attempted += 1;
+        std::thread::sleep(policy.delay_for(attempt));
+        let stream = TcpStream::connect(self.addr)?;
+        stream.set_nodelay(true).ok();
+        self.stream = stream;
+        Ok(())
     }
 
     fn take_ids(&mut self, n: u64) -> u64 {
@@ -1112,10 +1265,19 @@ impl WireClient {
 
     /// v1 round trip (784-bit images only).
     pub fn classify(&mut self, image: &Packed) -> Result<WireResponse> {
-        self.stream.write_all(&encode_request(image)?)?;
-        let mut frame = [0u8; 7];
-        self.stream.read_exact(&mut frame)?;
-        decode_response(&frame)
+        let request = encode_request(image)?;
+        let mut attempt = 0u32;
+        loop {
+            self.stream.write_all(&request)?;
+            let mut frame = [0u8; 7];
+            self.stream.read_exact(&mut frame)?;
+            if frame[0] == MAGIC_ERR && self.wants_retry(WireStatus::from_u8(frame[1]), attempt) {
+                self.book_retry(attempt)?;
+                attempt += 1;
+                continue;
+            }
+            return decode_response(&frame);
+        }
     }
 
     /// v2 round trip for one image.
@@ -1154,24 +1316,35 @@ impl WireClient {
         images: &[Packed],
         opts: InferOptions,
     ) -> Result<Vec<WireItem>> {
-        let id = self.take_ids(images.len() as u64);
-        self.stream
-            .write_all(&encode_request_v2_for(images, id, opts, model)?)?;
-        let resp = read_response_v2(&mut self.stream)?;
-        anyhow::ensure!(
-            resp.status == WireStatus::Ok,
-            "server error: {} (frame id {})",
-            resp.status.name(),
-            resp.id
-        );
-        anyhow::ensure!(resp.id == id, "response id {} for request {id}", resp.id);
-        anyhow::ensure!(
-            resp.items.len() == images.len(),
-            "{} items for {} images",
-            resp.items.len(),
-            images.len()
-        );
-        Ok(resp.items)
+        let mut attempt = 0u32;
+        loop {
+            let id = self.take_ids(images.len() as u64);
+            // re-encoded per try: a deadline section carries the budget
+            // *remaining* at send time, so a retry spends its backoff out
+            // of the same end-to-end deadline instead of resetting it
+            self.stream
+                .write_all(&encode_request_v2_for(images, id, opts, model)?)?;
+            let resp = read_response_v2(&mut self.stream)?;
+            if self.wants_retry(resp.status, attempt) {
+                self.book_retry(attempt)?;
+                attempt += 1;
+                continue;
+            }
+            anyhow::ensure!(
+                resp.status == WireStatus::Ok,
+                "server error: {} (frame id {})",
+                resp.status.name(),
+                resp.id
+            );
+            anyhow::ensure!(resp.id == id, "response id {} for request {id}", resp.id);
+            anyhow::ensure!(
+                resp.items.len() == images.len(),
+                "{} items for {} images",
+                resp.items.len(),
+                images.len()
+            );
+            return Ok(resp.items);
+        }
     }
 
     /// Pipelined v2: keep up to [`Self::PIPELINE_WINDOW`] single-image
@@ -1359,6 +1532,168 @@ mod tests {
         );
         assert_eq!(s("unknown model 'nope' (have: [\"mnist\"])"), WireStatus::UnknownModel);
         assert_eq!(s("image width 65 does not match model width 784"), WireStatus::Backend);
+        assert_eq!(
+            s("request 12 failed: deadline exceeded before a worker picked it up"),
+            WireStatus::DeadlineExceeded
+        );
+        assert_eq!(
+            s("request 12 failed: worker crashed while executing the batch"),
+            WireStatus::WorkerCrashed
+        );
+    }
+
+    #[test]
+    fn new_statuses_roundtrip_the_byte_codec() {
+        for s in [WireStatus::DeadlineExceeded, WireStatus::WorkerCrashed] {
+            assert_eq!(WireStatus::from_u8(s as u8), s);
+        }
+        assert_eq!(WireStatus::DeadlineExceeded.name(), "deadline-exceeded");
+        assert_eq!(WireStatus::WorkerCrashed.name(), "worker-crashed");
+    }
+
+    #[test]
+    fn v2_deadline_section_roundtrips_a_relative_budget() {
+        let imgs = vec![image_of(40, 64), image_of(41, 64)];
+        let opts = InferOptions::default().with_budget(std::time::Duration::from_millis(250));
+        let frame = encode_request_v2(&imgs, 11, opts).unwrap();
+        assert_ne!(frame[1] & FEAT_DEADLINE, 0);
+        let mut cur = std::io::Cursor::new(&frame[1..]);
+        let before = std::time::Instant::now();
+        let req = read_request_v2_body(&mut cur).unwrap();
+        assert_eq!(cur.position() as usize, frame.len() - 1, "frame fully consumed");
+        assert_eq!(req.images.len(), 2);
+        // the decoded deadline re-arms against the *reader's* clock: it
+        // lands within ~(0, 250ms] of the read, whatever the encode took
+        // (small slack: encode and read each take their own `now`)
+        let d = req.opts.deadline.expect("deadline armed");
+        let remaining = d.saturating_duration_since(before);
+        assert!(remaining <= std::time::Duration::from_millis(260), "{remaining:?}");
+        assert!(remaining > std::time::Duration::ZERO, "budget did not survive");
+
+        // the section also composes with a model name (name first)
+        let named = encode_request_v2_for(&imgs, 12, opts, Some("mnist-a")).unwrap();
+        let req = read_request_v2_body(&mut std::io::Cursor::new(&named[1..])).unwrap();
+        assert_eq!(req.model.as_deref(), Some("mnist-a"));
+        assert!(req.opts.deadline.is_some());
+
+        // an already-expired deadline still encodes (budget 0) — the
+        // server sheds it with a typed status instead of the client
+        // failing to build a frame
+        let expired = InferOptions::default()
+            .with_deadline(std::time::Instant::now() - std::time::Duration::from_secs(1));
+        let frame = encode_request_v2(&imgs, 13, expired).unwrap();
+        let req = read_request_v2_body(&mut std::io::Cursor::new(&frame[1..])).unwrap();
+        assert!(req.opts.expired_at(std::time::Instant::now() + std::time::Duration::from_millis(1)));
+
+        // a truncated deadline section is a typed error, not a hang
+        let frame = encode_request_v2(&[image_of(42, 64)], 14, opts).unwrap();
+        let cut = 1 + 16 + 2; // magic + head + half the budget bytes
+        let e = read_request_v2_body(&mut std::io::Cursor::new(&frame[1..cut])).unwrap_err();
+        assert_eq!(e.status, WireStatus::BadLength, "{e}");
+    }
+
+    #[test]
+    fn retry_policy_schedule_is_deterministic_and_bounded() {
+        let p = RetryPolicy {
+            max_attempts: 5,
+            base: std::time::Duration::from_millis(1),
+            cap: std::time::Duration::from_millis(4),
+            seed: 7,
+        };
+        let schedule: Vec<_> = (0..4).map(|a| p.delay_for(a)).collect();
+        // pure in (seed, attempt): the exact schedule reproduces
+        assert_eq!(schedule, (0..4).map(|a| p.delay_for(a)).collect::<Vec<_>>());
+        for (a, d) in schedule.iter().enumerate() {
+            // backoff = min(base << a, cap), jitter ∈ [0, backoff/2]
+            let backoff = std::time::Duration::from_millis((1u64 << a).min(4));
+            assert!(*d >= backoff, "attempt {a}: {d:?} < {backoff:?}");
+            assert!(*d <= backoff + backoff / 2, "attempt {a}: {d:?}");
+        }
+        // a different seed jitters differently (overwhelmingly likely)
+        let q = RetryPolicy { seed: 8, ..p };
+        assert_ne!(
+            (0..4).map(|a| p.delay_for(a)).collect::<Vec<_>>(),
+            (0..4).map(|a| q.delay_for(a)).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn client_retries_overloaded_until_the_server_recovers() {
+        use std::sync::atomic::AtomicUsize;
+
+        // mock server: answers the first two v2 frames Overloaded (closing
+        // the connection each time, like a shed under pressure), then
+        // serves for real
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let t_hits = hits.clone();
+        let server = std::thread::spawn(move || {
+            for n in 0.. {
+                let (mut s, _) = match listener.accept() {
+                    Ok(x) => x,
+                    Err(_) => return,
+                };
+                let mut magic = [0u8; 1];
+                if s.read_exact(&mut magic).is_err() {
+                    return;
+                }
+                assert_eq!(magic[0], MAGIC_REQ_V2);
+                let req = read_request_v2_body(&mut s).unwrap();
+                t_hits.fetch_add(1, Ordering::SeqCst);
+                if n < 2 {
+                    let _ = s.write_all(&encode_error_v2(req.id, WireStatus::Overloaded));
+                    // connection drops here — the retry must reconnect
+                } else {
+                    let items = vec![WireItem {
+                        id: req.id,
+                        digit: 7,
+                        latency_us: 1,
+                        logits: vec![],
+                        top_k: vec![],
+                    }];
+                    let frame =
+                        encode_response_v2(req.id, WireStatus::Ok, 0, 0, &items).unwrap();
+                    let _ = s.write_all(&frame);
+                    return;
+                }
+            }
+        });
+
+        let policy = RetryPolicy {
+            max_attempts: 4,
+            base: std::time::Duration::from_micros(100),
+            cap: std::time::Duration::from_millis(2),
+            seed: 1,
+        };
+        let mut client = WireClient::connect(addr).unwrap().with_retry(policy);
+        let item = client
+            .classify_v2(&image_of(50, 64), InferOptions::digits_only())
+            .unwrap();
+        assert_eq!(item.digit, 7);
+        assert_eq!(client.retries_attempted(), 2, "two sheds, two retries");
+        assert_eq!(hits.load(Ordering::SeqCst), 3, "three tries total");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn client_without_a_policy_surfaces_overload_immediately() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut magic = [0u8; 1];
+            s.read_exact(&mut magic).unwrap();
+            let req = read_request_v2_body(&mut s).unwrap();
+            let _ = s.write_all(&encode_error_v2(req.id, WireStatus::Overloaded));
+        });
+        let mut client = WireClient::connect(addr).unwrap();
+        let e = client
+            .classify_v2(&image_of(51, 64), InferOptions::digits_only())
+            .unwrap_err();
+        assert!(format!("{e}").contains("overloaded"), "{e}");
+        assert_eq!(client.retries_attempted(), 0);
+        server.join().unwrap();
     }
 
     #[test]

@@ -148,7 +148,51 @@ fn committed_serving_bench_has_a_sane_latency_trajectory() {
              (p50 {p50}, p99 {p99}, p999 {p999}, max {max}); \
              run `make bench-serving` to regenerate"
         );
+
+        // error-latency stream (ISSUE 10): split from the success-only
+        // percentiles; zero when the rung saw no errors, ordered otherwise
+        let ep50 = field("err_p50_us");
+        let ep99 = field("err_p99_us");
+        let emax = field("err_max_us");
+        if errors == 0.0 {
+            assert_eq!(
+                (ep50, ep99, emax),
+                (0.0, 0.0, 0.0),
+                "rate '{rate}': error percentiles must be zero with no errors"
+            );
+        } else {
+            assert!(
+                ep50 <= ep99 && ep99 <= emax && emax > 0.0,
+                "rate '{rate}': error percentiles out of order \
+                 (err_p50 {ep50}, err_p99 {ep99}, err_max {emax})"
+            );
+        }
     }
+
+    // engine fault ledger (ISSUE 10): the committed artifact must carry
+    // the engine's own books, and they must balance — a bench run that
+    // crashed workers or shed deadlines shows it here
+    let ledger = doc.get("ledger").expect("'ledger' object");
+    let lfield = |name: &str| -> f64 {
+        ledger
+            .get(name)
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|e| panic!("ledger: {e}"))
+    };
+    let submitted = lfield("submitted");
+    let completed = lfield("completed");
+    let rejected = lfield("rejected");
+    let cancelled = lfield("cancelled");
+    assert!(submitted >= 1.0, "ledger: bench submitted no requests");
+    assert!(
+        (completed + rejected + cancelled - submitted).abs() < 0.5,
+        "ledger does not balance: submitted {submitted} ≠ completed \
+         {completed} + rejected {rejected} + cancelled {cancelled}"
+    );
+    assert!(
+        lfield("worker_restarts") >= 0.0 && lfield("deadline_expired") >= 0.0,
+        "ledger: fault counters must be present"
+    );
 
     let sustained = doc
         .get("max_sustained_ips")

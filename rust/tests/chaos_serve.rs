@@ -1,0 +1,198 @@
+//! Fault-tolerant serving acceptance (DESIGN.md §Fault tolerance): a
+//! seeded chaos soak — panic, latency-spike and error faults injected at
+//! >5% of backend calls — through the registry-backed async server under
+//! ≥10k open-loop requests.  Every request must resolve typed (no hangs),
+//! the engine ledger must balance across every crash and restart,
+//! `worker_restarts` must show supervision did real work, non-faulted
+//! responses must still carry the model's argmax, and the pipelined
+//! kernel's stage threads must all exit at teardown.  A second test pins
+//! wire deadline propagation end to end on both servers.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bnn_fpga::bnn::model::random_model;
+use bnn_fpga::bnn::{Packed, DEFAULT_RING_CAP};
+use bnn_fpga::coordinator::{
+    run_open_loop, AsyncWireServer, BatcherConfig, ChaosConfig, Engine, FaultKind, InferOptions,
+    Kernel, LoadConfig, ModelRegistry, RetryPolicy, WireClient, WireServer, WireStatus,
+};
+use bnn_fpga::util::prng::Xoshiro256;
+
+fn rand_image(rng: &mut Xoshiro256, n_bits: usize) -> Packed {
+    let bits: Vec<u8> = (0..n_bits).map(|_| rng.bool() as u8).collect();
+    Packed::from_bits(&bits)
+}
+
+#[test]
+fn chaos_soak_resolves_every_request_typed_and_balances() {
+    let model = random_model(&[784, 64, 10], 41);
+    // Panic + latency + error faults on ~6% of backend calls.  The
+    // pipelined kernel runs underneath so the stage-thread leak gauge at
+    // the end is meaningful even across worker crashes.
+    let chaos = ChaosConfig::new(0xC4A0_5EED, 0.06)
+        .with_kinds(&[FaultKind::Error, FaultKind::Panic, FaultKind::Latency])
+        .with_spike(Duration::from_millis(1));
+    let engine = Engine::builder()
+        .native(&model)
+        .kernel(Kernel::Pipelined {
+            ring_cap: DEFAULT_RING_CAP,
+        })
+        .workers(2)
+        .batcher(BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_micros(100),
+        })
+        .queue_cap(50_000)
+        .chaos(chaos)
+        .build()
+        .unwrap();
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("live", engine);
+    let server = AsyncWireServer::start_registry("127.0.0.1:0", registry.clone()).unwrap();
+
+    let mut rng = Xoshiro256::new(77);
+    let images: Vec<Packed> = (0..16).map(|_| rand_image(&mut rng, 784)).collect();
+    let cfg = LoadConfig {
+        addr: server.addr,
+        connections: 8,
+        rate: 6_000.0,
+        duration: Duration::from_secs(2),
+        v1_fraction: 0.5,
+        seed: 4242,
+        model: None,
+    };
+    let report = run_open_loop(&images, &cfg).expect("open-loop soak");
+
+    // ≥10k offered requests, and *all* of them answered — a hang anywhere
+    // (dead shard, unresolved ticket, wedged connection) would strand the
+    // readers and fail the run instead.
+    assert!(report.sent >= 10_000, "soak too small: {report:?}");
+    assert_eq!(
+        report.completed + report.errors,
+        report.sent,
+        "every request must resolve, OK or typed: {report:?}"
+    );
+    assert!(report.errors > 0, "a 6% fault plan must surface typed errors");
+    assert!(report.completed > 0, "most traffic must still serve");
+    // the refusals have their own latency stream, split from the
+    // success-only percentiles
+    assert!(report.err_max_us > 0.0, "error latency must be captured");
+
+    // Non-faulted responses still carry the model's argmax — chaos must
+    // corrupt nothing it didn't explicitly fault.  The retrying client
+    // also exercises reconnect-and-resend against a faulting server.
+    let mut client = WireClient::connect(server.addr)
+        .unwrap()
+        .with_retry(RetryPolicy::default());
+    let mut served = 0usize;
+    for img in &images {
+        match client.classify_v2(img, InferOptions::default()) {
+            Ok(item) => {
+                assert_eq!(
+                    usize::from(item.digit),
+                    model.predict(&img.words),
+                    "a non-faulted response must carry the true argmax"
+                );
+                served += 1;
+            }
+            // a chaos fault landed on this probe: typed, never hung
+            Err(_) => {}
+        }
+    }
+    assert!(served > 0, "probes can't all fault at a 6% rate");
+    drop(client);
+
+    // Ledger: displaced (crashed-and-restarted) and surviving workers
+    // together must balance the books, and supervision must have actually
+    // restarted someone under a 2% panic share of 10k+ calls.
+    let live = registry.engine("live").unwrap();
+    ModelRegistry::drain(&live, Duration::from_secs(10)).unwrap();
+    let m = live.metrics();
+    let (submitted, completed, rejected, cancelled) = (
+        m.submitted.load(Ordering::SeqCst),
+        m.completed.load(Ordering::SeqCst),
+        m.rejected.load(Ordering::SeqCst),
+        m.cancelled.load(Ordering::SeqCst),
+    );
+    assert_eq!(
+        submitted,
+        completed + rejected,
+        "ledger must balance across crashes: {}",
+        m.summary_line()
+    );
+    assert_eq!(cancelled, 0, "the wire path waits every ticket");
+    assert!(
+        m.worker_restarts.load(Ordering::SeqCst) > 0,
+        "panic faults must have forced supervised restarts: {}",
+        m.summary_line()
+    );
+    drop(live);
+
+    drop(registry);
+    server.shutdown();
+    // Crashed workers shared pipelined replicas; teardown must still
+    // reap every stage thread.
+    let t0 = Instant::now();
+    while bnn_fpga::bnn::pipeline::live_stage_threads() != 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "pipeline stage threads leaked across worker crashes"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn deadlines_propagate_over_the_wire_and_shed_typed() {
+    let model = random_model(&[784, 32, 10], 43);
+    let mut rng = Xoshiro256::new(91);
+    let img = rand_image(&mut rng, 784);
+    let digit = model.predict(&img.words);
+
+    let engine = Arc::new(
+        Engine::builder()
+            .native(&model)
+            .workers(1)
+            .build()
+            .unwrap(),
+    );
+
+    let blocking = WireServer::start("127.0.0.1:0", engine.clone()).unwrap();
+    let asynch = AsyncWireServer::start("127.0.0.1:0", engine.clone()).unwrap();
+    for addr in [blocking.addr, asynch.addr] {
+        let mut client = WireClient::connect(addr).unwrap();
+        // a roomy budget rides the FEAT_DEADLINE section and still serves
+        let item = client
+            .classify_v2(&img, InferOptions::default().with_budget(Duration::from_secs(30)))
+            .unwrap();
+        assert_eq!(usize::from(item.digit), digit);
+        // an already-expired deadline is shed server-side, typed — the
+        // request never executes against the backend
+        let err = client
+            .classify_v2(&img, InferOptions::default().with_deadline(Instant::now()))
+            .unwrap_err();
+        assert!(
+            format!("{err:#}").contains(WireStatus::DeadlineExceeded.name()),
+            "expired budgets must shed typed, got: {err:#}"
+        );
+        // the shed is per-request: the same connection keeps serving
+        let again = client.classify_v2(&img, InferOptions::default()).unwrap();
+        assert_eq!(usize::from(again.digit), digit);
+    }
+    let m = engine.metrics();
+    assert_eq!(
+        m.deadline_expired.load(Ordering::SeqCst),
+        2,
+        "each server shed exactly one expired request: {}",
+        m.summary_line()
+    );
+    assert_eq!(
+        m.submitted.load(Ordering::SeqCst),
+        m.completed.load(Ordering::SeqCst) + m.rejected.load(Ordering::SeqCst),
+        "sheds count rejected so the books still balance"
+    );
+    blocking.shutdown();
+    asynch.shutdown();
+}
